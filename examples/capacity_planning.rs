@@ -1,0 +1,75 @@
+//! END-TO-END DRIVER (DESIGN.md §3 "E2E driver"): the full three-layer
+//! stack on a real small workload.
+//!
+//! Uses the **PJRT cost backend** — per-layer times come from executing
+//! `artifacts/cost_model.hlo.txt` (JAX Layer-2 graph wrapping the Pallas
+//! Layer-1 roofline kernel) through the `xla` crate — proving the
+//! Python-AOT → Rust-PJRT → event-simulator pipeline composes.
+//!
+//! Scenario: a capacity planner sweeps the A100:H100 mix for a fixed
+//! 4-node GPT-6.7B training cluster and reads off iteration time, tail
+//! FCT and the benefit of non-uniform partitioning — the paper's
+//! headline use case ("an LLM training deployer can draw inferences
+//! from our simulator and plan an optimal deployment").
+//!
+//!     make artifacts && cargo run --release --example capacity_planning
+
+use hetsim::config::framework::ParallelismSpec;
+use hetsim::config::presets;
+use hetsim::simulator::{CostBackend, SimulationBuilder};
+use hetsim::util::table::{fmt_sig, Table};
+use hetsim::workload::aicb::WorkloadOptions;
+
+fn main() -> anyhow::Result<()> {
+    let nodes = 4u32;
+    let mut model = presets::model("gpt-6.7b")?;
+    // full-iteration batch scaled to the 4-node testbed (3 microbatches
+    // per DP replica) so non-uniform batch shares are visible end to end
+    model.global_batch = 192;
+    println!("=== capacity planning sweep: GPT-6.7B on {nodes} nodes (PJRT cost backend) ===\n");
+
+    let mut t = Table::new(
+        "A100:H100 mix sweep (one full iteration, global batch 192)",
+        &["ampere nodes", "hopper nodes", "partitioning", "iteration", "p99.9 FCT (us)", "flows"],
+    );
+
+    for ampere in 0..=nodes {
+        let hopper = nodes - ampere;
+        let cluster = match (ampere, hopper) {
+            (0, h) => presets::cluster("hopper", h)?,
+            (a, 0) => presets::cluster("ampere", a)?,
+            (a, h) => presets::cluster_hetero(a, h)?,
+        };
+        let world = cluster.total_gpus();
+        for hetero_part in [false, true] {
+            // uniform-only on homogeneous clusters (identical result)
+            if hetero_part && (ampere == 0 || hopper == 0) {
+                continue;
+            }
+            let report = SimulationBuilder::new(model.clone(), cluster.clone())
+                .parallelism(ParallelismSpec { tp: 4, pp: 1, dp: world / 4 })
+                .cost_backend(CostBackend::Pjrt)
+                .hetero_partitioning(hetero_part)
+                .workload_options(WorkloadOptions::default())
+                .build()?
+                .run_iteration()?;
+            let mut all = report.fct_all;
+            t.row(vec![
+                ampere.to_string(),
+                hopper.to_string(),
+                if hetero_part { "non-uniform" } else { "uniform" }.into(),
+                report.iteration_time.human(),
+                fmt_sig(all.percentile(99.9) * 1e6),
+                report.flows_completed.to_string(),
+            ]);
+        }
+    }
+    print!("{}", t.markdown());
+    let dir = hetsim::report::results_dir();
+    let path = t.write_csv(&dir, "capacity_planning")?;
+    println!("\ncsv: {}", path.display());
+    println!("\nReading the table: pure-Hopper is fastest; mixes degrade");
+    println!("super-linearly under uniform partitioning, and non-uniform");
+    println!("partitioning recovers part of the gap — the paper's core claim.");
+    Ok(())
+}

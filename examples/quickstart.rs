@@ -1,0 +1,46 @@
+//! Quickstart: simulate one training iteration of GPT-6.7B on a small
+//! homogeneous H100 cluster and print the report.
+//!
+//!     cargo run --release --example quickstart
+
+use hetsim::config::framework::ParallelismSpec;
+use hetsim::config::presets;
+use hetsim::simulator::SimulationBuilder;
+use hetsim::util::table::fmt_sig;
+use hetsim::workload::aicb::WorkloadOptions;
+
+fn main() -> anyhow::Result<()> {
+    // Table-6 model, 4 nodes x 8 H100s.
+    let model = presets::model("gpt-6.7b")?;
+    let cluster = presets::cluster("hopper", 4)?;
+
+    let report = SimulationBuilder::new(model, cluster)
+        // paper TP degree; DP fills the cluster
+        .parallelism(ParallelismSpec { tp: 4, pp: 1, dp: 8 })
+        // one microbatch keeps the quickstart quick; drop the cap for
+        // full-iteration numbers
+        .workload_options(WorkloadOptions { microbatch_limit: Some(1), ..Default::default() })
+        .build()?
+        .run_iteration()?;
+
+    println!("=== HetSim quickstart ===");
+    println!("model:            {}", report.model_name);
+    println!("cluster:          {}", report.cluster_name);
+    println!("iteration time:   {}", report.iteration_time);
+    println!("flows completed:  {}", report.flows_completed);
+    println!("events processed: {}", report.events_processed);
+    println!();
+    println!("FCT summary by communication kind:");
+    let mut kinds: Vec<_> = report.fct_summary.iter().collect();
+    kinds.sort_by_key(|(k, _)| **k);
+    for (kind, s) in kinds {
+        println!(
+            "  {kind:4}  flows={:<6} p50={:>10}us  p99.9={:>10}us  max={:>10}us",
+            s.count,
+            fmt_sig(s.p50 * 1e6),
+            fmt_sig(s.p999 * 1e6),
+            fmt_sig(s.max * 1e6)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,7 @@
+"""HetSim build-time Python package (Layers 1 and 2).
+
+This package exists only on the *compile path*: ``make artifacts`` runs
+:mod:`compile.aot` once to lower the JAX cost graphs (which call the
+Pallas kernels) to HLO text under ``artifacts/``; the Rust simulator
+loads those via PJRT and Python is never on the simulation path.
+"""

@@ -1,0 +1,104 @@
+"""AOT lowering: JAX cost graphs -> HLO text artifacts for the Rust side.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import collective, roofline
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_cost_model() -> str:
+    args = model.example_args_cost()
+    return to_hlo_text(jax.jit(model.cost_fn).lower(*args))
+
+
+def lower_coll_model() -> str:
+    args = model.example_args_coll()
+    return to_hlo_text(jax.jit(model.coll_fn).lower(*args))
+
+
+def self_check() -> None:
+    """Sanity-execute the jitted graphs before writing artifacts."""
+    rows = [
+        model.make_layer_row(kind=2, hidden=4096, ffn=16384, seq=2048, mbs=8),
+        model.make_layer_row(kind=1, hidden=4096, heads=32, seq=2048, mbs=8),
+    ]
+    layers = model.pad_rows(rows, model.ROWS, model.LAYER_FIELDS)
+    gpus = jnp.tile(model.gpu_row("H100"), (model.ROWS, 1))
+    t = jax.jit(model.cost_fn)(layers, gpus)
+    assert float(t[0]) > 0.0 and float(t[1]) > 0.0, "cost_fn returned zeros"
+    coll = jnp.zeros((model.COLL_ROWS, collective.COLL_FIELDS), jnp.float32)
+    coll = coll.at[0].set(jnp.asarray([0.0, 8, 1e9, 25e9, 1e-6, 0, 0, 0]))
+    tc = jax.jit(model.coll_fn)(coll)
+    assert float(tc[0]) > 0.0, "coll_fn returned zero"
+
+
+def manifest() -> dict:
+    """Shape/layout contract consumed by rust/src/compute/mod.rs."""
+    return {
+        "cost_model": {
+            "file": "cost_model.hlo.txt",
+            "rows": model.ROWS,
+            "layer_fields": model.LAYER_FIELDS,
+            "gpu_fields": roofline.GPU_FIELDS,
+        },
+        "coll_model": {
+            "file": "coll_model.hlo.txt",
+            "rows": model.COLL_ROWS,
+            "coll_fields": collective.COLL_FIELDS,
+        },
+        "dtype_bytes": model.DTYPE_BYTES,
+        "bwd_flops_factor": model.BWD_FLOPS_FACTOR,
+        "bwd_bytes_factor": model.BWD_BYTES_FACTOR,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-check", action="store_true")
+    ns = ap.parse_args()
+
+    if not ns.skip_check:
+        self_check()
+
+    os.makedirs(ns.out_dir, exist_ok=True)
+    for name, text in [
+        ("cost_model.hlo.txt", lower_cost_model()),
+        ("coll_model.hlo.txt", lower_coll_model()),
+    ]:
+        path = os.path.join(ns.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+    mpath = os.path.join(ns.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(), f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

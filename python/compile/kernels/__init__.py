@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for the HetSim cost model.
+
+Two kernels, both lowered with ``interpret=True`` (the CPU PJRT client
+cannot execute Mosaic custom-calls; see DESIGN.md §1):
+
+* :mod:`.roofline` — batched per-(layer, GPU) roofline time estimate.
+* :mod:`.collective` — batched alpha-beta collective-cost estimate.
+
+``ref.py`` holds the pure-``jnp`` oracles used by pytest.
+"""
+
+from . import collective, ref, roofline  # noqa: F401
+
+__all__ = ["roofline", "collective", "ref"]

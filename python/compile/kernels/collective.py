@@ -1,0 +1,84 @@
+"""Batched alpha-beta collective cost kernel (Pallas, Layer 1).
+
+Computes the analytic completion time of a collective operation over a
+device group, per NCCL-style algorithm structure. Used by the
+Sailor-like analytical baseline in Rust (the event-driven path derives
+transfer times from the flow-level network simulation instead).
+
+coll row (COLL_FIELDS=8):
+    algo, nranks, size_bytes, bottleneck_bw (B/s), per_hop_latency_s,
+    n_extra_hops, _pad, _pad
+
+algo codes (must match rust/src/baselines/analytical.rs):
+    0 = allreduce (ring)   t = 2(n-1)/n * S/bw + 2(n-1) * lat
+    1 = allgather          t =  (n-1)/n * S/bw +  (n-1) * lat
+    2 = reducescatter      t =  (n-1)/n * S/bw +  (n-1) * lat
+    3 = alltoall           t =  (n-1)/n * S/bw +  (n-1) * lat
+    4 = broadcast          t =  S/bw + ceil(log2 n) * lat
+    5 = p2p                t =  S/bw + lat
+
+``n_extra_hops * lat`` is added for routes that traverse extra fixed-
+delay hops (e.g. the two PCIe trips to reach the NIC, per paper §5).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+COLL_FIELDS = 8
+ROWS = 512
+DEFAULT_BLOCK = 64
+
+ALGO_ALLREDUCE = 0.0
+ALGO_ALLGATHER = 1.0
+ALGO_REDUCESCATTER = 2.0
+ALGO_ALLTOALL = 3.0
+ALGO_BROADCAST = 4.0
+ALGO_P2P = 5.0
+
+
+def _collective_block(coll_ref, out_ref):
+    algo = coll_ref[:, 0]
+    n = jnp.maximum(coll_ref[:, 1], 1.0)
+    size = coll_ref[:, 2]
+    bw = jnp.maximum(coll_ref[:, 3], 1.0)
+    lat = coll_ref[:, 4]
+    extra_hops = coll_ref[:, 5]
+
+    steps_ring = n - 1.0
+    frac = steps_ring / n  # (n-1)/n
+    log2n = jnp.ceil(jnp.log2(jnp.maximum(n, 1.0)))
+
+    t_allreduce = 2.0 * frac * size / bw + 2.0 * steps_ring * lat
+    t_onepass = frac * size / bw + steps_ring * lat
+    t_broadcast = size / bw + log2n * lat
+    t_p2p = size / bw + lat
+
+    t = jnp.where(
+        algo == ALGO_ALLREDUCE,
+        t_allreduce,
+        jnp.where(
+            algo == ALGO_BROADCAST,
+            t_broadcast,
+            jnp.where(algo == ALGO_P2P, t_p2p, t_onepass),
+        ),
+    )
+    out_ref[:] = t + extra_hops * lat
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def collective_times(coll, block=DEFAULT_BLOCK):
+    """coll: f32[rows, COLL_FIELDS] -> f32[rows] seconds."""
+    rows = coll.shape[0]
+    assert rows % block == 0, (rows, block)
+    assert coll.shape[1] == COLL_FIELDS
+    return pl.pallas_call(
+        _collective_block,
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        grid=(rows // block,),
+        in_specs=[pl.BlockSpec((block, COLL_FIELDS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(coll.astype(jnp.float32))

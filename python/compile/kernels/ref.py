@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+pytest asserts ``allclose(kernel, ref)`` — this is the core correctness
+signal for the build path. Keep these in lockstep with roofline.py /
+collective.py (and with the Rust mirror in rust/src/compute/cost.rs).
+"""
+
+import jax.numpy as jnp
+
+from .collective import ALGO_ALLREDUCE, ALGO_BROADCAST, ALGO_P2P
+from .roofline import KIND_ATTENTION, KIND_EMBEDDING, KIND_OTHER
+
+
+def roofline_times_ref(work, gpu):
+    """Oracle for roofline.roofline_times."""
+    work = jnp.asarray(work, jnp.float32)
+    gpu = jnp.asarray(gpu, jnp.float32)
+    flops, nbytes, kind = work[:, 0], work[:, 1], work[:, 2]
+    peak, bw = gpu[:, 0], gpu[:, 1]
+    eff_mlp, eff_attn = gpu[:, 2], gpu[:, 3]
+    eff_embed, eff_mem = gpu[:, 4], gpu[:, 5]
+    overhead = gpu[:, 6]
+
+    eff_f = jnp.where(
+        (kind == KIND_ATTENTION) | (kind == KIND_OTHER), eff_attn, eff_mlp
+    )
+    eff_m = jnp.where(kind == KIND_EMBEDDING, eff_embed, eff_mem)
+    t_compute = flops / (peak * eff_f)
+    t_memory = nbytes / (bw * eff_m)
+    return jnp.maximum(t_compute, t_memory) + overhead
+
+
+def collective_times_ref(coll):
+    """Oracle for collective.collective_times."""
+    coll = jnp.asarray(coll, jnp.float32)
+    algo = coll[:, 0]
+    n = jnp.maximum(coll[:, 1], 1.0)
+    size = coll[:, 2]
+    bw = jnp.maximum(coll[:, 3], 1.0)
+    lat = coll[:, 4]
+    extra_hops = coll[:, 5]
+
+    steps = n - 1.0
+    frac = steps / n
+    log2n = jnp.ceil(jnp.log2(jnp.maximum(n, 1.0)))
+
+    t_allreduce = 2.0 * frac * size / bw + 2.0 * steps * lat
+    t_onepass = frac * size / bw + steps * lat
+    t_broadcast = size / bw + log2n * lat
+    t_p2p = size / bw + lat
+
+    t = jnp.where(
+        algo == ALGO_ALLREDUCE,
+        t_allreduce,
+        jnp.where(
+            algo == ALGO_BROADCAST,
+            t_broadcast,
+            jnp.where(algo == ALGO_P2P, t_p2p, t_onepass),
+        ),
+    )
+    return t + extra_hops * lat

@@ -1,0 +1,95 @@
+"""Batched roofline cost kernel (Pallas, Layer 1).
+
+Given a table of work descriptors (``flops``, ``bytes``, ``kind``) and a
+row-aligned table of GPU descriptors, computes per-row execution time
+
+    t = max(flops / (peak_flops * eff_flops(kind)),
+            bytes / (mem_bw   * eff_mem(kind)))   + launch_overhead
+
+This is the compute hot-spot of the simulator's build path: one PJRT
+execution fills the whole (layer-kind x model x GPU-type x microbatch)
+cost table that the Rust event simulator consumes.
+
+Hardware adaptation (paper -> TPU idiom): the paper profiles CUDA kernels
+on A100/H100; we re-express the *cost model* as a blocked elementwise
+Pallas kernel. Rows are tiled ``(BLOCK, FIELDS)`` into VMEM via
+``BlockSpec``; the select/divide/max pipeline vectorizes on the VPU. The
+kernel is HBM-bandwidth bound, so BLOCK is chosen to keep the VMEM
+footprint small (BLOCK * 17 * 4 B = ~17 KiB at BLOCK=256) while
+amortizing the HBM->VMEM transfer.
+
+Field layouts (must match ``rust/src/compute/mod.rs``):
+
+work row  (WORK_FIELDS=4):  flops, bytes, kind, _pad
+gpu row   (GPU_FIELDS=8):   peak_flops, mem_bw, eff_mlp, eff_attn,
+                            eff_embed, eff_mem, overhead_s, _pad
+
+kind codes: 0=embedding 1=attention 2=mlp 3=moe 4=other
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+WORK_FIELDS = 4
+GPU_FIELDS = 8
+ROWS = 256
+DEFAULT_BLOCK = 64
+
+KIND_EMBEDDING = 0.0
+KIND_ATTENTION = 1.0
+KIND_MLP = 2.0
+KIND_MOE = 3.0
+KIND_OTHER = 4.0
+
+
+def _roofline_block(work_ref, gpu_ref, out_ref):
+    """Kernel body: one (BLOCK, FIELDS) tile -> (BLOCK,) times."""
+    flops = work_ref[:, 0]
+    nbytes = work_ref[:, 1]
+    kind = work_ref[:, 2]
+
+    peak = gpu_ref[:, 0]
+    bw = gpu_ref[:, 1]
+    eff_mlp = gpu_ref[:, 2]
+    eff_attn = gpu_ref[:, 3]
+    eff_embed = gpu_ref[:, 4]
+    eff_mem = gpu_ref[:, 5]
+    overhead = gpu_ref[:, 6]
+
+    is_embed = kind == KIND_EMBEDDING
+    is_attn = kind == KIND_ATTENTION
+    # mlp and moe GEMMs share the dense-GEMM efficiency; "other"
+    # (layernorm/residual) is vector work, modelled with eff_attn.
+    eff_f = jnp.where(is_attn | (kind == KIND_OTHER), eff_attn, eff_mlp)
+    eff_m = jnp.where(is_embed, eff_embed, eff_mem)
+
+    t_compute = flops / (peak * eff_f)
+    t_memory = nbytes / (bw * eff_m)
+    out_ref[:] = jnp.maximum(t_compute, t_memory) + overhead
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def roofline_times(work, gpu, block=DEFAULT_BLOCK):
+    """Evaluate the roofline kernel over a full descriptor table.
+
+    work: f32[rows, WORK_FIELDS], gpu: f32[rows, GPU_FIELDS] -> f32[rows].
+    ``rows`` must be a multiple of ``block``.
+    """
+    rows = work.shape[0]
+    assert rows % block == 0, (rows, block)
+    assert work.shape[1] == WORK_FIELDS and gpu.shape[1] == GPU_FIELDS
+    grid = (rows // block,)
+    return pl.pallas_call(
+        _roofline_block,
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, WORK_FIELDS), lambda i: (i, 0)),
+            pl.BlockSpec((block, GPU_FIELDS), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(work.astype(jnp.float32), gpu.astype(jnp.float32))

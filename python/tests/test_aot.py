@@ -1,0 +1,43 @@
+"""AOT lowering: artifacts are valid HLO text with the expected interface."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+from compile.kernels import collective, roofline
+
+
+class TestLowering:
+    def test_cost_model_hlo_text(self):
+        text = aot.lower_cost_model()
+        assert "HloModule" in text
+        assert f"f32[{model.ROWS},{model.LAYER_FIELDS}]" in text
+        assert f"f32[{model.ROWS},{roofline.GPU_FIELDS}]" in text
+
+    def test_coll_model_hlo_text(self):
+        text = aot.lower_coll_model()
+        assert "HloModule" in text
+        assert f"f32[{model.COLL_ROWS},{collective.COLL_FIELDS}]" in text
+
+    def test_self_check_passes(self):
+        aot.self_check()
+
+    def test_manifest_contract(self):
+        m = aot.manifest()
+        assert m["cost_model"]["rows"] == model.ROWS == 256
+        assert m["cost_model"]["layer_fields"] == model.LAYER_FIELDS == 10
+        assert m["cost_model"]["gpu_fields"] == roofline.GPU_FIELDS == 8
+        assert m["coll_model"]["rows"] == model.COLL_ROWS == 512
+        assert m["coll_model"]["coll_fields"] == collective.COLL_FIELDS == 8
+
+    def test_main_writes_artifacts(self, tmp_path, monkeypatch):
+        import sys
+
+        monkeypatch.setattr(
+            sys, "argv", ["aot", "--out-dir", str(tmp_path), "--skip-check"]
+        )
+        aot.main()
+        for f in ("cost_model.hlo.txt", "coll_model.hlo.txt", "manifest.json"):
+            assert os.path.exists(tmp_path / f), f
+        assert (tmp_path / "cost_model.hlo.txt").read_text().startswith("HloModule")

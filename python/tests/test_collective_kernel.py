@@ -1,0 +1,69 @@
+"""Pallas collective kernel vs pure-jnp oracle + semantic checks."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import collective, ref
+
+
+def _rand_coll(rng, rows):
+    c = np.zeros((rows, collective.COLL_FIELDS), np.float32)
+    c[:, 0] = rng.integers(0, 6, rows).astype(np.float32)  # algo
+    c[:, 1] = rng.integers(1, 1025, rows).astype(np.float32)  # nranks
+    c[:, 2] = rng.uniform(1.0, 1e10, rows)  # size
+    c[:, 3] = rng.uniform(1e9, 1e12, rows)  # bw
+    c[:, 4] = rng.uniform(0.0, 1e-5, rows)  # latency
+    c[:, 5] = rng.integers(0, 5, rows).astype(np.float32)  # extra hops
+    return c
+
+
+class TestCollectiveVsRef:
+    @pytest.mark.parametrize("block", [16, 64, 128, 256])
+    def test_matches_ref(self, block):
+        rng = np.random.default_rng(3)
+        c = _rand_coll(rng, 512)
+        got = collective.collective_times(jnp.asarray(c), block=block)
+        want = ref.collective_times_ref(c)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_value_sweep(self, seed):
+        rng = np.random.default_rng(seed)
+        c = _rand_coll(rng, 64)
+        got = collective.collective_times(jnp.asarray(c), block=32)
+        want = ref.collective_times_ref(c)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+class TestCollectiveSemantics:
+    def _one(self, algo, n, size, bw, lat=0.0, hops=0.0):
+        c = np.zeros((64, collective.COLL_FIELDS), np.float32)
+        c[0] = [algo, n, size, bw, lat, hops, 0, 0]
+        return float(collective.collective_times(jnp.asarray(c), block=32)[0])
+
+    def test_allreduce_is_twice_allgather_bytes(self):
+        ar = self._one(collective.ALGO_ALLREDUCE, 8, 1e9, 25e9)
+        ag = self._one(collective.ALGO_ALLGATHER, 8, 1e9, 25e9)
+        assert abs(ar - 2 * ag) / ar < 1e-5
+
+    def test_single_rank_transfers_nothing(self):
+        ar = self._one(collective.ALGO_ALLREDUCE, 1, 1e9, 25e9, lat=1e-6)
+        assert ar < 1e-9
+
+    def test_p2p_is_serialization_plus_latency(self):
+        t = self._one(collective.ALGO_P2P, 2, 1e9, 1e10, lat=5e-6)
+        assert abs(t - (0.1 + 5e-6)) / t < 1e-5
+
+    def test_extra_hops_add_latency(self):
+        base = self._one(collective.ALGO_P2P, 2, 1e9, 1e10, lat=5e-6)
+        hop = self._one(collective.ALGO_P2P, 2, 1e9, 1e10, lat=5e-6, hops=2)
+        # f32 arithmetic: allow a few ULPs around the 0.1 s base value
+        assert abs((hop - base) - 2 * 5e-6) < 5e-9
+
+    def test_time_scales_with_size(self):
+        t1 = self._one(collective.ALGO_ALLREDUCE, 8, 1e9, 25e9)
+        t2 = self._one(collective.ALGO_ALLREDUCE, 8, 2e9, 25e9)
+        assert abs(t2 - 2 * t1) / t2 < 1e-4

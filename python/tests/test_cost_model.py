@@ -1,0 +1,110 @@
+"""L2 cost-graph semantics + calibration against the paper's Fig-5 ratios."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import roofline
+
+
+def _times(rows, gpu_name):
+    layers = model.pad_rows(rows, model.ROWS, model.LAYER_FIELDS)
+    gpus = jnp.tile(model.gpu_row(gpu_name), (model.ROWS, 1))
+    return np.asarray(jax.jit(model.cost_fn)(layers, gpus))[: len(rows)]
+
+
+GPT67 = dict(hidden=4096, ffn=16384, heads=32, seq=2048, mbs=8)
+GPT13 = dict(hidden=5120, ffn=20480, heads=40, seq=2048, mbs=8)
+MIXTRAL = dict(hidden=4096, ffn=14336, heads=32, seq=2048, mbs=4)
+
+
+def _model_rows(hp, moe=False, tp=1, is_bwd=0):
+    rows = [
+        model.make_layer_row(0, hp["hidden"], seq=hp["seq"], mbs=hp["mbs"], tp=tp, is_bwd=is_bwd),
+        model.make_layer_row(
+            1, hp["hidden"], heads=hp["heads"], seq=hp["seq"], mbs=hp["mbs"], tp=tp, is_bwd=is_bwd
+        ),
+    ]
+    if moe:
+        rows.append(
+            model.make_layer_row(
+                3, hp["hidden"], ffn=hp["ffn"], seq=hp["seq"], mbs=hp["mbs"],
+                n_experts=8, topk=2, tp=tp, is_bwd=is_bwd,
+            )
+        )
+    else:
+        rows.append(
+            model.make_layer_row(
+                2, hp["hidden"], ffn=hp["ffn"], seq=hp["seq"], mbs=hp["mbs"], tp=tp, is_bwd=is_bwd
+            )
+        )
+    return rows
+
+
+class TestCalibration:
+    """The paper's measured Fig-5 degradation ratios (DESIGN.md §3)."""
+
+    @pytest.mark.parametrize("hp,moe", [(GPT67, False), (GPT13, False), (MIXTRAL, True)])
+    def test_mlp_degradation_3x_to_4x(self, hp, moe):
+        a = _times(_model_rows(hp, moe), "A100")
+        h = _times(_model_rows(hp, moe), "H100")
+        ratio = a[2] / h[2]
+        assert 3.0 <= ratio <= 4.0, ratio
+
+    @pytest.mark.parametrize("hp,moe", [(GPT67, False), (GPT13, False), (MIXTRAL, True)])
+    def test_attention_degradation_at_most_1_9x(self, hp, moe):
+        a = _times(_model_rows(hp, moe), "A100")
+        h = _times(_model_rows(hp, moe), "H100")
+        ratio = a[1] / h[1]
+        assert 1.5 <= ratio <= 1.95, ratio
+
+    def test_embedding_degradation_about_36x(self):
+        a = _times(_model_rows(GPT67), "A100")
+        h = _times(_model_rows(GPT67), "H100")
+        ratio = a[0] / h[0]
+        assert 30.0 <= ratio <= 40.0, ratio
+
+    def test_embedding_absolute_time_is_small(self):
+        # Paper: embedding is a poor optimization target — one pass/iter
+        # and small absolute time vs MLP.
+        h = _times(_model_rows(GPT67), "H100")
+        assert h[0] < h[2]
+
+
+class TestCostSemantics:
+    def test_tp_sharding_divides_time(self):
+        t1 = _times(_model_rows(GPT67, tp=1), "H100")
+        t8 = _times(_model_rows(GPT67, tp=8), "H100")
+        # compute-bound MLP: near-linear scaling (overhead-limited floor)
+        assert t8[2] < t1[2] / 4.0
+
+    def test_backward_costs_about_twice_forward(self):
+        f = _times(_model_rows(GPT67, is_bwd=0), "H100")
+        b = _times(_model_rows(GPT67, is_bwd=1), "H100")
+        for i in range(3):
+            assert 1.5 <= b[i] / f[i] <= 2.5
+
+    def test_moe_costs_more_than_dense_same_ffn(self):
+        dense = model.make_layer_row(2, 4096, ffn=14336, seq=2048, mbs=4)
+        moe = model.make_layer_row(3, 4096, ffn=14336, seq=2048, mbs=4, n_experts=8, topk=2)
+        t = _times([dense, moe], "H100")
+        assert t[1] > t[0]
+
+    def test_flops_bytes_nonnegative(self):
+        layers = model.pad_rows(_model_rows(GPT67), model.ROWS, model.LAYER_FIELDS)
+        flops, nbytes = model.layer_flops_bytes(layers)
+        assert float(jnp.min(flops)) >= 0.0
+        assert float(jnp.min(nbytes)) >= 0.0
+
+    def test_h100_strictly_faster_everywhere(self):
+        for moe, hp in [(False, GPT67), (False, GPT13), (True, MIXTRAL)]:
+            a = _times(_model_rows(hp, moe), "A100")
+            h = _times(_model_rows(hp, moe), "H100")
+            assert (h < a).all()
+
+    def test_bigger_model_costs_more(self):
+        t67 = _times(_model_rows(GPT67), "H100")
+        t13 = _times(_model_rows(GPT13), "H100")
+        assert t13[1] > t67[1] and t13[2] > t67[2]

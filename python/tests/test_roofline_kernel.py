@@ -1,0 +1,96 @@
+"""Pallas roofline kernel vs pure-jnp oracle (the L1 correctness signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, roofline
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand_tables(rng, rows):
+    work = np.zeros((rows, roofline.WORK_FIELDS), np.float32)
+    work[:, 0] = rng.uniform(0.0, 1e15, rows)  # flops
+    work[:, 1] = rng.uniform(1.0, 1e12, rows)  # bytes
+    work[:, 2] = rng.integers(0, 5, rows).astype(np.float32)  # kind
+    gpu = np.zeros((rows, roofline.GPU_FIELDS), np.float32)
+    gpu[:, 0] = rng.uniform(1e12, 2e15, rows)  # peak flops
+    gpu[:, 1] = rng.uniform(1e11, 4e12, rows)  # mem bw
+    gpu[:, 2:6] = rng.uniform(0.01, 1.0, (rows, 4))  # efficiencies
+    gpu[:, 6] = rng.uniform(0.0, 1e-5, rows)  # overhead
+    return work, gpu
+
+
+class TestRooflineVsRef:
+    @pytest.mark.parametrize("block", [16, 32, 64, 128, 256])
+    def test_matches_ref_across_block_sizes(self, block):
+        rng = np.random.default_rng(7)
+        work, gpu = _rand_tables(rng, 256)
+        got = roofline.roofline_times(jnp.asarray(work), jnp.asarray(gpu), block=block)
+        want = ref.roofline_times_ref(work, gpu)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    @pytest.mark.parametrize("rows", [64, 128, 256, 512])
+    def test_matches_ref_across_row_counts(self, rows):
+        rng = np.random.default_rng(rows)
+        work, gpu = _rand_tables(rng, rows)
+        got = roofline.roofline_times(jnp.asarray(work), jnp.asarray(gpu), block=64)
+        want = ref.roofline_times_ref(work, gpu)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_value_sweep(self, seed):
+        rng = np.random.default_rng(seed)
+        work, gpu = _rand_tables(rng, 64)
+        got = roofline.roofline_times(jnp.asarray(work), jnp.asarray(gpu), block=32)
+        want = ref.roofline_times_ref(work, gpu)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_zero_rows_yield_overhead_only(self):
+        work = np.zeros((64, roofline.WORK_FIELDS), np.float32)
+        gpu = np.zeros((64, roofline.GPU_FIELDS), np.float32)
+        gpu[:, 0] = 1e12
+        gpu[:, 1] = 1e11
+        gpu[:, 2:6] = 0.5
+        gpu[:, 6] = 3e-6
+        got = np.asarray(roofline.roofline_times(jnp.asarray(work), jnp.asarray(gpu), block=32))
+        np.testing.assert_allclose(got, 3e-6, rtol=1e-6)
+
+
+class TestRooflineSemantics:
+    def _one(self, flops, nbytes, kind, gpu_vals):
+        work = np.zeros((64, roofline.WORK_FIELDS), np.float32)
+        work[0] = [flops, nbytes, kind, 0]
+        gpu = np.tile(np.asarray(gpu_vals, np.float32), (64, 1))
+        return float(
+            roofline.roofline_times(jnp.asarray(work), jnp.asarray(gpu), block=32)[0]
+        )
+
+    GPU = (1e12, 1e11, 0.5, 0.5, 0.1, 0.8, 0.0, 0.0)
+
+    def test_compute_bound_region(self):
+        # flops term dominates: t = flops / (peak * eff_mlp)
+        t = self._one(1e12, 1.0, roofline.KIND_MLP, self.GPU)
+        assert abs(t - 1e12 / (1e12 * 0.5)) / t < 1e-5
+
+    def test_memory_bound_region(self):
+        t = self._one(1.0, 1e11, roofline.KIND_MLP, self.GPU)
+        assert abs(t - 1e11 / (1e11 * 0.8)) / t < 1e-5
+
+    def test_embedding_uses_embed_efficiency(self):
+        t = self._one(0.0, 1e10, roofline.KIND_EMBEDDING, self.GPU)
+        assert abs(t - 1e10 / (1e11 * 0.1)) / t < 1e-5
+
+    def test_attention_uses_attn_efficiency(self):
+        gpu = (1e12, 1e11, 0.9, 0.3, 0.1, 0.8, 0.0, 0.0)
+        t = self._one(1e12, 1.0, roofline.KIND_ATTENTION, gpu)
+        assert abs(t - 1e12 / (1e12 * 0.3)) / t < 1e-5
+
+    def test_monotone_in_flops(self):
+        t1 = self._one(1e12, 1e9, roofline.KIND_MLP, self.GPU)
+        t2 = self._one(2e12, 1e9, roofline.KIND_MLP, self.GPU)
+        assert t2 >= t1

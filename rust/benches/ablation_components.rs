@@ -1,0 +1,102 @@
+//! Ablation bench: component-level costs the paper's Table 3/4 imply —
+//! (a) resharding overhead (C2): Fig-3 non-uniform-TP plan vs uniform
+//!     TP on identical hardware;
+//! (b) collective algorithm choice (C3): flat ring vs hierarchical
+//!     (rail-aware) DP allreduce across nodes.
+//!
+//!     cargo bench --bench ablation_components
+
+use hetsim::config::framework::ParallelismSpec;
+use hetsim::config::presets;
+use hetsim::engine::Engine;
+use hetsim::network::flow::{FlowId, FlowSim};
+use hetsim::network::topology::Topology;
+use hetsim::simulator::SimulationBuilder;
+use hetsim::system::collective::{
+    CollectiveAlgo, CollectiveDef, CollectiveExec, CommKind, RingPolicy,
+};
+use hetsim::util::table::Table;
+use hetsim::workload::partition::{fig3_cluster, fig3_model, fig3_plan};
+
+#[derive(Debug, Clone, Copy)]
+struct Done(FlowId);
+
+fn run_collective(
+    cluster: &hetsim::config::cluster::ClusterSpec,
+    def: &CollectiveDef,
+) -> anyhow::Result<f64> {
+    let topo = Topology::build(cluster)?;
+    let mut fs = FlowSim::new(topo);
+    let mut eng: Engine<Done> = Engine::new();
+    let mut exec = CollectiveExec::plan(cluster, def, RingPolicy::HeteroAware);
+    if let Some(step) = exec.next_step().map(|s| s.to_vec()) {
+        fs.start_many(&mut eng, &step, &Done);
+    }
+    while let Some(ev) = eng.step() {
+        if fs.on_complete(&mut eng, ev.payload.0, ev.id, &Done).is_some() && exec.flow_done() {
+            if let Some(next) = exec.next_step().map(|s| s.to_vec()) {
+                fs.start_many(&mut eng, &next, &Done);
+            }
+        }
+    }
+    Ok(eng.now().as_secs())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Ablation: resharding (C2) and collective algorithm (C3) ===\n");
+
+    // (a) resharding overhead: Fig-3 plan vs uniform TP=4
+    let model = fig3_model()?;
+    let cluster = fig3_cluster()?;
+    let fig3 = SimulationBuilder::new(model.clone(), cluster.clone())
+        .framework(fig3_plan(&model, &cluster)?)
+        .build()?;
+    let reshard_colls =
+        fig3.workload.collectives.iter().filter(|c| c.kind == CommKind::Reshard).count();
+    let fig3_rep = fig3.run_iteration()?;
+    let uniform_rep = SimulationBuilder::new(model, cluster.clone())
+        .parallelism(ParallelismSpec { tp: 4, pp: 1, dp: 2 })
+        .build()?
+        .run_iteration()?;
+
+    let mut t = Table::new(
+        "(a) Resharding: Fig-3 variable-TP plan vs uniform TP (Llama-2 70B, 4xH100+4xA100)",
+        &["plan", "reshard collectives", "iteration"],
+    );
+    t.row(vec![
+        "fig3 variable TP (3/1 vs 4)".into(),
+        reshard_colls.to_string(),
+        fig3_rep.iteration_time.human(),
+    ]);
+    t.row(vec!["uniform TP=4".into(), "0".into(), uniform_rep.iteration_time.human()]);
+    print!("{}", t.markdown());
+
+    // (b) flat ring vs hierarchical allreduce across 4 nodes
+    let c = presets::cluster("hopper", 4)?;
+    let bytes = 256u64 << 20;
+    let mut t2 = Table::new(
+        "(b) DP allreduce algorithm, 32 ranks over 4 nodes, 256 MiB/rank",
+        &["algorithm", "time"],
+    );
+    for (label, algo) in [
+        ("flat ring", CollectiveAlgo::AllReduceRing),
+        ("hierarchical (rail-aware)", CollectiveAlgo::AllReduceHierarchical),
+    ] {
+        let def = CollectiveDef {
+            id: 0,
+            algo,
+            ranks: (0..32).collect(),
+            bytes_per_rank: bytes,
+            kind: CommKind::Dp,
+            label: label.into(),
+        };
+        let secs = run_collective(&c, &def)?;
+        t2.row(vec![label.into(), format!("{:.3} ms", secs * 1e3)]);
+    }
+    println!();
+    print!("{}", t2.markdown());
+    let dir = hetsim::report::results_dir();
+    t.write_csv(&dir, "ablation_resharding")?;
+    t2.write_csv(&dir, "ablation_collective_algo")?;
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Ablation bench (DESIGN.md §3): what each heterogeneity-aware design
+//! choice buys on a mixed A100+H100 cluster —
+//! (a) uniform vs non-uniform workload partitioning (C1), full
+//!     iteration, no microbatch cap (the cap would mask batch shares);
+//! (b) naive vs hetero-aware logical ring ordering (C3) on an
+//!     interleaved inter-node allreduce (contiguous layouts are already
+//!     node-major, so the effect shows on scattered rank sets — e.g.
+//!     after elastic rescheduling).
+//!
+//!     cargo bench --bench ablation_partition
+
+use hetsim::config::framework::ParallelismSpec;
+use hetsim::config::presets;
+use hetsim::engine::Engine;
+use hetsim::network::flow::{FlowId, FlowSim};
+use hetsim::network::topology::Topology;
+use hetsim::simulator::SimulationBuilder;
+use hetsim::system::collective::{
+    CollectiveAlgo, CollectiveDef, CollectiveExec, CommKind, RingPolicy,
+};
+use hetsim::util::table::Table;
+
+#[derive(Debug, Clone, Copy)]
+struct Done(FlowId);
+
+fn run_collective(
+    cluster: &hetsim::config::cluster::ClusterSpec,
+    def: &CollectiveDef,
+    policy: RingPolicy,
+) -> anyhow::Result<f64> {
+    let topo = Topology::build(cluster)?;
+    let mut fs = FlowSim::new(topo);
+    let mut eng: Engine<Done> = Engine::new();
+    let mut exec = CollectiveExec::plan(cluster, def, policy);
+    if let Some(step) = exec.next_step().map(|s| s.to_vec()) {
+        fs.start_many(&mut eng, &step, &Done);
+    }
+    while let Some(ev) = eng.step() {
+        if fs.on_complete(&mut eng, ev.payload.0, ev.id, &Done).is_some() && exec.flow_done() {
+            if let Some(next) = exec.next_step().map(|s| s.to_vec()) {
+                fs.start_many(&mut eng, &next, &Done);
+            }
+        }
+    }
+    Ok(eng.now().as_secs())
+}
+
+fn main() -> anyhow::Result<()> {
+    // ---- (a) partitioning policy, full iteration ----
+    println!("=== Ablation (a): C1 non-uniform partitioning (GPT-6.7B, 1+1 hetero nodes) ===\n");
+    let mut model = presets::model("gpt-6.7b")?;
+    model.global_batch = 64; // full batch simulated (8 microbatches of 8)
+    let cluster = presets::cluster_hetero(1, 1)?;
+    let par = ParallelismSpec { tp: 8, pp: 1, dp: 2 };
+
+    let mut t = Table::new(
+        "(a) Iteration time by partitioning policy (no microbatch cap)",
+        &["partitioning", "batch shares", "iteration", "vs uniform"],
+    );
+    let mut baseline = None;
+    for (label, hetero_part) in [("uniform", false), ("non-uniform (C1)", true)] {
+        let sim = SimulationBuilder::new(model.clone(), cluster.clone())
+            .parallelism(par)
+            .hetero_partitioning(hetero_part)
+            .build()?;
+        let shares: Vec<String> =
+            sim.framework.groups.iter().map(|g| g.batch_share.to_string()).collect();
+        let rep = sim.run_iteration()?;
+        let secs = rep.iteration_time.as_secs();
+        let base = *baseline.get_or_insert(secs);
+        t.row(vec![
+            label.into(),
+            shares.join("/"),
+            rep.iteration_time.human(),
+            format!("{:+.1}%", (secs / base - 1.0) * 100.0),
+        ]);
+    }
+    print!("{}", t.markdown());
+
+    // ---- (b) ring ordering policy ----
+    println!("\n=== Ablation (b): C3 ring graph generation (interleaved 32-rank allreduce) ===\n");
+    let c4 = presets::cluster_hetero(2, 2)?;
+    // interleaved rank set: strides across the 4 nodes
+    let ranks: Vec<u32> = (0..32).map(|i| (i % 4) * 8 + i / 4).collect();
+    let def = CollectiveDef {
+        id: 0,
+        algo: CollectiveAlgo::AllReduceRing,
+        ranks,
+        bytes_per_rank: 256 << 20,
+        kind: CommKind::Dp,
+        label: "ablate".into(),
+    };
+    let mut t2 = Table::new(
+        "(b) 256 MiB allreduce, 32 interleaved ranks over 2 A100 + 2 H100 nodes",
+        &["ring order", "time", "vs naive"],
+    );
+    let naive = run_collective(&c4, &def, RingPolicy::Naive)?;
+    let aware = run_collective(&c4, &def, RingPolicy::HeteroAware)?;
+    t2.row(vec!["naive".into(), format!("{:.3} ms", naive * 1e3), "+0.0%".into()]);
+    t2.row(vec![
+        "hetero-aware (C3)".into(),
+        format!("{:.3} ms", aware * 1e3),
+        format!("{:+.2}%", (aware / naive - 1.0) * 100.0),
+    ]);
+    print!("{}", t2.markdown());
+    println!(
+        "\nfinding: the rail-only fabric (one NIC per GPU per rail) absorbs bad ring\n\
+         orderings almost entirely under fluid max-min sharing — C3's gain here is\n\
+         latency-level only. C3 matters for correctness (vendor-agnostic graph\n\
+         generation) more than for bandwidth on this topology."
+    );
+
+    let dir = hetsim::report::results_dir();
+    t.write_csv(&dir, "ablation_partition")?;
+    t2.write_csv(&dir, "ablation_ring_order")?;
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! Bench: regenerate paper **Figure 5** — per-layer compute time for
+//! GPT-6.7B / GPT-13B / Mixtral-8x7B on H100 vs A100, through BOTH cost
+//! backends (native mirror and the PJRT-executed AOT artifact), timing
+//! each.
+//!
+//!     make artifacts && cargo bench --bench fig5
+
+use std::time::Instant;
+
+use hetsim::compute::table::CostTable;
+
+fn run(label: &str, mut table: CostTable) -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let rows = hetsim::report::fig5::compute(&mut table)?;
+    let dt = t0.elapsed();
+    let t = hetsim::report::fig5::render(&rows);
+    println!("--- backend: {label} ({:.1} ms) ---", dt.as_secs_f64() * 1e3);
+    print!("{}", t.markdown());
+    println!();
+    let dir = hetsim::report::results_dir();
+    t.write_csv(&dir, &format!("fig5_{label}"))?;
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Figure 5 — per-layer compute time across GPU generations ===");
+    println!("paper reference: MLP 3-4x, attention <=1.9x, embedding ~36.1x (A100/H100)\n");
+    run("native", CostTable::native())?;
+    match hetsim::runtime::PjrtCostModel::load() {
+        Ok(m) => run("pjrt", CostTable::new(Box::new(m)))?,
+        Err(e) => println!("[skipped pjrt backend: {e}]"),
+    }
+    Ok(())
+}

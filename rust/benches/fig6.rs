@@ -1,0 +1,34 @@
+//! Bench: regenerate paper **Figure 6** — FCT distribution (CCDF) of
+//! all collective flows in one iteration across Ampere, Hopper and
+//! Ampere+Hopper(50:50) interconnect configurations, for all three
+//! Table-6 models.
+//!
+//! Scaled knobs (printed, never silent): HETSIM_FIG6_NODES (default 4;
+//! paper 16-32) and one microbatch per group.
+//!
+//!     cargo bench --bench fig6
+
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let nodes: u32 = std::env::var("HETSIM_FIG6_NODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    println!("=== Figure 6 — FCT CCDF across interconnect configs ===");
+    println!("nodes={nodes} (paper: 16-32), microbatch_limit=1 — scaled for 1-core CI\n");
+
+    let t0 = Instant::now();
+    let cells =
+        hetsim::report::fig6::compute(nodes, Some(1), &["gpt-6.7b", "gpt-13b", "mixtral-8x7b"])?;
+    let dt = t0.elapsed();
+    let t = hetsim::report::fig6::render(&cells);
+    print!("{}", t.markdown());
+    println!("\npaper reference (hetero p99.9 vs Ampere): GPT-6.7B +9%, GPT-13B 25.3x, Mixtral +0.4%");
+    println!("simulation wall time: {:.2}s", dt.as_secs_f64());
+    let dir = hetsim::report::results_dir();
+    let path = t.write_csv(&dir, "fig6")?;
+    std::fs::write(dir.join("fig6_ccdf.csv"), hetsim::report::fig6::ccdf_csv(&cells))?;
+    println!("csv: {} + fig6_ccdf.csv", path.display());
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Perf bench (EXPERIMENTS.md §Perf): L3 hot-path throughput —
+//! event-queue ops/s, flow-simulator rebalance rate, and end-to-end
+//! simulated-events/s on a representative workload.
+//!
+//!     cargo bench --bench perf_engine
+
+use std::time::Instant;
+
+use hetsim::config::framework::ParallelismSpec;
+use hetsim::config::presets;
+use hetsim::engine::{Engine, EventQueue};
+use hetsim::network::flow::{FlowId, FlowSim, FlowSpec};
+use hetsim::network::topology::Topology;
+use hetsim::simulator::SimulationBuilder;
+use hetsim::util::rng::Rng;
+use hetsim::util::units::Time;
+use hetsim::workload::aicb::WorkloadOptions;
+
+#[derive(Debug, Clone, Copy)]
+struct Done(FlowId);
+
+fn bench_event_queue() {
+    let n: u64 = 2_000_000;
+    let mut rng = Rng::new(7);
+    let mut q: EventQueue<u64> = EventQueue::with_capacity(n as usize);
+    let t0 = Instant::now();
+    for i in 0..n {
+        q.push(Time(rng.range_u64(0, 1 << 40)), i);
+    }
+    while q.pop().is_some() {}
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "event queue:   {:>10.0} push+pop/s  ({n} events in {dt:.3}s)",
+        2.0 * n as f64 / dt
+    );
+}
+
+fn bench_flow_sim() {
+    let cluster = presets::cluster_hetero(2, 2).unwrap();
+    let topo = Topology::build(&cluster).unwrap();
+    let total = topo.total_gpus();
+    let mut fs = FlowSim::new(topo);
+    fs.keep_records = false;
+    let mut eng: Engine<Done> = Engine::new();
+    let mut rng = Rng::new(11);
+    let n = 20_000usize;
+    // waves of 64 concurrent flows
+    let t0 = Instant::now();
+    let mut started = 0usize;
+    let specs: Vec<FlowSpec> = (0..64)
+        .map(|i| FlowSpec {
+            src: rng.range_u64(0, total as u64) as u32,
+            dst: rng.range_u64(0, total as u64) as u32,
+            bytes: rng.range_u64(1 << 10, 1 << 20),
+            tag: i,
+        })
+        .collect();
+    fs.start_many(&mut eng, &specs, &Done);
+    started += specs.len();
+    while let Some(ev) = eng.step() {
+        if fs.on_complete(&mut eng, ev.payload.0, ev.id, &Done).is_some() && started < n {
+            let spec = FlowSpec {
+                src: rng.range_u64(0, total as u64) as u32,
+                dst: rng.range_u64(0, total as u64) as u32,
+                bytes: rng.range_u64(1 << 10, 1 << 20),
+                tag: started as u64,
+            };
+            fs.start(&mut eng, spec, &Done);
+            started += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "flow sim:      {:>10.0} flows/s     ({started} flows, {} rebalances in {dt:.3}s)",
+        started as f64 / dt,
+        fs.rebalance_count()
+    );
+}
+
+fn bench_end_to_end() {
+    let model = presets::model("gpt-6.7b").unwrap();
+    let cluster = presets::cluster_hetero(1, 1).unwrap();
+    let sim = SimulationBuilder::new(model, cluster)
+        .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+        .workload_options(WorkloadOptions { microbatch_limit: Some(2), ..Default::default() })
+        .build()
+        .unwrap();
+    let t0 = Instant::now();
+    let rep = sim.run_iteration().unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "end-to-end:    {:>10.0} events/s    ({} events, {} flows in {dt:.3}s)",
+        rep.events_processed as f64 / dt,
+        rep.events_processed,
+        rep.flows_completed
+    );
+}
+
+fn main() {
+    println!("=== L3 perf: hot-path throughput (1 core) ===");
+    bench_event_queue();
+    bench_flow_sim();
+    bench_end_to_end();
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate paper **Table 1** — exposed-communication
+//! characteristics of DP/TP/PP for Llama-2 70B on 2048 GPUs
+//! (TP=8 PP=8 DP=32). Also times the 2048-rank workload generation.
+//!
+//!     cargo bench --bench table1
+
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Table 1 (Llama-2 70B, 2048 GPUs, TP8/PP8/DP32) ===\n");
+    let t0 = Instant::now();
+    let rows = hetsim::report::table1::compute()?;
+    let gen = t0.elapsed();
+    let t = hetsim::report::table1::render(&rows);
+    print!("{}", t.markdown());
+    println!("\npaper reference: DP 2/iter @ 4.4GB; TP 350/iter @ small; PP 8/iter @ small");
+    println!("workload generation + analysis: {:.2}s (2048 ranks)", gen.as_secs_f64());
+    let dir = hetsim::report::results_dir();
+    let path = t.write_csv(&dir, "table1")?;
+    println!("csv: {}", path.display());
+    Ok(())
+}

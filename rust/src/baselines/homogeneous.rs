@@ -1,0 +1,47 @@
+//! SimAI-like homogeneous baseline: replace every node with a clone of
+//! one reference architecture. A homogeneous simulator run on `A100`
+//! or `H100` clones brackets the true heterogeneous behaviour; the gap
+//! is the error the paper's Table-2 "heterogeneous cluster simulation ✗"
+//! rows imply.
+
+use crate::config::cluster::ClusterSpec;
+
+/// Clone `reference` node architecture across the whole cluster.
+/// `reference` is an index into `cluster.nodes`.
+pub fn homogenize(cluster: &ClusterSpec, reference: usize) -> anyhow::Result<ClusterSpec> {
+    anyhow::ensure!(
+        reference < cluster.nodes.len(),
+        "reference node {reference} out of range ({} nodes)",
+        cluster.nodes.len()
+    );
+    let proto = cluster.nodes[reference].clone();
+    Ok(ClusterSpec {
+        name: format!("{}-homogenized-{}", cluster.name, proto.gpu.name),
+        nodes: vec![proto; cluster.nodes.len()],
+        switch_bw: cluster.switch_bw,
+        switch_delay: cluster.switch_delay,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn homogenized_cluster_is_uniform() {
+        let hetero = presets::cluster_hetero(2, 2).unwrap();
+        let homo_a = homogenize(&hetero, 0).unwrap();
+        assert!(homo_a.is_homogeneous());
+        assert_eq!(homo_a.gpu_types(), vec!["A100"]);
+        let homo_h = homogenize(&hetero, 2).unwrap();
+        assert_eq!(homo_h.gpu_types(), vec!["H100"]);
+        assert_eq!(homo_h.total_gpus(), hetero.total_gpus());
+    }
+
+    #[test]
+    fn out_of_range_reference_rejected() {
+        let c = presets::cluster("ampere", 2).unwrap();
+        assert!(homogenize(&c, 5).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Baseline comparators (system S12, the Table-2 competitors):
+//!
+//! * [`homogeneous`] — the SimAI assumption: pretend the cluster is
+//!   uniform (every node cloned from a reference architecture) and
+//!   simulate that. Comparing against the heterogeneity-aware run
+//!   quantifies the error a homogeneous simulator makes on a mixed
+//!   cluster.
+//! * [`analytical`] — the Sailor-style closed-form estimator: no event
+//!   simulation, just roofline compute sums + alpha-beta collective
+//!   costs (optionally via the PJRT `coll_model` artifact). Fast but
+//!   blind to contention, overlap and pipeline bubbles.
+
+pub mod analytical;
+pub mod homogeneous;
+
+pub use analytical::AnalyticalEstimate;
+pub use homogeneous::homogenize;

@@ -1,0 +1,223 @@
+//! Native mirror of the Layer-1/Layer-2 cost model.
+//!
+//! These formulas MUST stay in lockstep with `python/compile/model.py`
+//! (`layer_flops_bytes`) and `python/compile/kernels/roofline.py`
+//! (`_roofline_block`); `rust/tests/integration_runtime.rs` cross-checks
+//! this module against the PJRT-executed artifact row by row.
+
+use crate::config::cluster::GpuSpec;
+use crate::config::model::LayerKind;
+
+pub const LAYER_FIELDS: usize = 10;
+pub const GPU_FIELDS: usize = 8;
+
+/// Dtype and backward-pass constants (mirror model.py).
+pub const DTYPE_BYTES: f64 = 2.0;
+pub const BWD_FLOPS_FACTOR: f64 = 2.0;
+pub const BWD_BYTES_FACTOR: f64 = 2.0;
+
+/// One layer-descriptor row: the work one GPU performs for one
+/// microbatch of one layer (per TP shard).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerWork {
+    pub kind: LayerKind,
+    pub hidden: f64,
+    pub ffn: f64,
+    pub heads: f64,
+    pub seq: f64,
+    pub mbs: f64,
+    pub n_experts: f64,
+    pub top_k: f64,
+    pub tp: f64,
+    pub is_bwd: bool,
+}
+
+impl LayerWork {
+    /// Pack into the 10-field f32 row the AOT artifact expects.
+    pub fn descriptor_row(&self) -> [f32; LAYER_FIELDS] {
+        [
+            self.kind.code(),
+            self.hidden as f32,
+            self.ffn as f32,
+            self.heads as f32,
+            self.seq as f32,
+            self.mbs as f32,
+            self.n_experts as f32,
+            self.top_k as f32,
+            self.tp as f32,
+            if self.is_bwd { 1.0 } else { 0.0 },
+        ]
+    }
+
+    /// FLOPs and bytes for this work item (mirror of
+    /// `model.layer_flops_bytes`). Computed in f32 to match the
+    /// artifact's arithmetic exactly.
+    pub fn flops_bytes(&self) -> (f64, f64) {
+        let hidden = self.hidden;
+        let ffn = self.ffn;
+        let heads = self.heads;
+        let seq = self.seq;
+        let mbs = self.mbs;
+        let tokens = mbs * seq;
+        let d = DTYPE_BYTES;
+        let tp = self.tp.max(1.0);
+
+        let (flops, bytes) = match self.kind {
+            LayerKind::Embedding => {
+                (2.0 * tokens * hidden, tokens * (2.0 * hidden * d + 4.0))
+            }
+            LayerKind::Attention => (
+                mbs * (8.0 * seq * hidden * hidden + 4.0 * seq * seq * hidden),
+                mbs * (12.0 * seq * hidden * d + heads * seq * seq * d) + 4.0 * hidden * hidden * d,
+            ),
+            LayerKind::Mlp => (
+                4.0 * tokens * hidden * ffn,
+                tokens * (hidden + ffn) * 2.0 * d + 2.0 * hidden * ffn * d,
+            ),
+            LayerKind::Moe => {
+                let mlp_flops = 4.0 * tokens * hidden * ffn;
+                (
+                    2.0 * tokens * hidden * self.n_experts + self.top_k * mlp_flops,
+                    tokens * (hidden + self.top_k * ffn) * 2.0 * d
+                        + self.n_experts * 2.0 * hidden * ffn * d,
+                )
+            }
+            LayerKind::Other => (10.0 * tokens * hidden, 6.0 * tokens * hidden * d),
+        };
+        let (mut flops, mut bytes) = (flops / tp, bytes / tp);
+        if self.is_bwd {
+            flops *= BWD_FLOPS_FACTOR;
+            bytes *= BWD_BYTES_FACTOR;
+        }
+        (flops, bytes)
+    }
+}
+
+/// Pure-Rust roofline evaluator (mirror of `_roofline_block`).
+#[derive(Debug, Default, Clone)]
+pub struct NativeCostModel;
+
+impl NativeCostModel {
+    /// Execution-time estimate in seconds.
+    pub fn time_seconds(&self, work: &LayerWork, gpu: &GpuSpec) -> f64 {
+        let (flops, bytes) = work.flops_bytes();
+        let eff_f = match work.kind {
+            LayerKind::Attention | LayerKind::Other => gpu.eff_attn,
+            _ => gpu.eff_mlp,
+        };
+        let eff_m = match work.kind {
+            LayerKind::Embedding => gpu.eff_embed,
+            _ => gpu.eff_mem,
+        };
+        let t_compute = flops / (gpu.peak_flops * eff_f);
+        let t_memory = bytes / (gpu.mem_bw * eff_m);
+        t_compute.max(t_memory) + gpu.launch_overhead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn work(kind: LayerKind) -> LayerWork {
+        LayerWork {
+            kind,
+            hidden: 4096.0,
+            ffn: 16384.0,
+            heads: 32.0,
+            seq: 2048.0,
+            mbs: 8.0,
+            n_experts: 0.0,
+            top_k: 0.0,
+            tp: 1.0,
+            is_bwd: false,
+        }
+    }
+
+    #[test]
+    fn mlp_ratio_matches_paper_fig5() {
+        let m = NativeCostModel;
+        let a = presets::gpu("A100").unwrap();
+        let h = presets::gpu("H100").unwrap();
+        let w = work(LayerKind::Mlp);
+        let ratio = m.time_seconds(&w, &a) / m.time_seconds(&w, &h);
+        assert!((3.0..4.0).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn attention_ratio_matches_paper_fig5() {
+        let m = NativeCostModel;
+        let a = presets::gpu("A100").unwrap();
+        let h = presets::gpu("H100").unwrap();
+        let w = work(LayerKind::Attention);
+        let ratio = m.time_seconds(&w, &a) / m.time_seconds(&w, &h);
+        assert!((1.5..1.95).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn embedding_ratio_matches_paper_fig5() {
+        let m = NativeCostModel;
+        let a = presets::gpu("A100").unwrap();
+        let h = presets::gpu("H100").unwrap();
+        let w = work(LayerKind::Embedding);
+        let ratio = m.time_seconds(&w, &a) / m.time_seconds(&w, &h);
+        assert!((30.0..40.0).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn backward_doubles_flops() {
+        let mut w = work(LayerKind::Mlp);
+        let (f1, b1) = w.flops_bytes();
+        w.is_bwd = true;
+        let (f2, b2) = w.flops_bytes();
+        assert_eq!(f2, 2.0 * f1);
+        assert_eq!(b2, 2.0 * b1);
+    }
+
+    #[test]
+    fn tp_divides_work() {
+        let mut w = work(LayerKind::Attention);
+        let (f1, _) = w.flops_bytes();
+        w.tp = 8.0;
+        let (f8, _) = w.flops_bytes();
+        assert!((f1 / f8 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn moe_uses_topk_experts() {
+        let mut w = work(LayerKind::Moe);
+        w.ffn = 14336.0;
+        w.n_experts = 8.0;
+        w.top_k = 2.0;
+        let (f_moe, _) = w.flops_bytes();
+        let mut dense = w;
+        dense.kind = LayerKind::Mlp;
+        let (f_dense, _) = dense.flops_bytes();
+        // top-2 experts ~= 2x dense FLOPs (+ router)
+        assert!(f_moe > 2.0 * f_dense && f_moe < 2.2 * f_dense, "{f_moe} vs {f_dense}");
+    }
+
+    #[test]
+    fn descriptor_row_layout() {
+        let w = work(LayerKind::Attention);
+        let r = w.descriptor_row();
+        assert_eq!(r[0], 1.0); // attention code
+        assert_eq!(r[1], 4096.0);
+        assert_eq!(r[9], 0.0);
+    }
+
+    #[test]
+    fn launch_overhead_is_floor() {
+        let m = NativeCostModel;
+        let h = presets::gpu("H100").unwrap();
+        let mut w = work(LayerKind::Mlp);
+        w.hidden = 1.0;
+        w.ffn = 1.0;
+        w.seq = 1.0;
+        w.mbs = 1.0;
+        let t = m.time_seconds(&w, &h);
+        assert!(t >= h.launch_overhead);
+        assert!(t < h.launch_overhead * 1.01);
+    }
+}

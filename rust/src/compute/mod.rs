@@ -1,0 +1,24 @@
+//! Compute-cost layer (system S10, paper component **C4**: "simulate
+//! the compute performance based on the bottleneck device").
+//!
+//! The paper profiles per-layer times on real A100/H100 GPUs via AICB;
+//! we replace profiling with the calibrated roofline model described in
+//! DESIGN.md §4. Two interchangeable evaluators:
+//!
+//! * [`cost::NativeCostModel`] — pure-Rust mirror of the Layer-2 JAX
+//!   formulas (`python/compile/model.py`), used as the in-process
+//!   fallback and as the cross-check oracle.
+//! * [`crate::runtime::PjrtCostModel`] — executes the AOT-lowered
+//!   `artifacts/cost_model.hlo.txt` through PJRT: the production path
+//!   proving the three-layer architecture composes. The integration
+//!   test asserts both agree to f32 tolerance.
+//!
+//! [`table::CostTable`] batches all distinct (layer, GPU) descriptor
+//! pairs of a simulation, evaluates them in one shot and serves cached
+//! lookups to the event simulator.
+
+pub mod cost;
+pub mod table;
+
+pub use cost::{LayerWork, NativeCostModel, GPU_FIELDS, LAYER_FIELDS};
+pub use table::{CostEvaluator, CostTable};

@@ -1,0 +1,247 @@
+//! Batched cost-table evaluation and caching.
+//!
+//! The workload generator registers every distinct (LayerWork, GpuSpec)
+//! pair it needs; `CostTable::evaluate` runs them through a
+//! [`CostEvaluator`] in artifact-sized batches (256 rows) and caches the
+//! results for O(1) lookup from the event loop. This keeps PJRT strictly
+//! on the *setup* path — zero artifact executions per simulated event.
+
+use std::collections::HashMap;
+
+use super::cost::{LayerWork, NativeCostModel};
+use crate::config::cluster::GpuSpec;
+use crate::util::units::Time;
+
+/// Batch size of the AOT artifact (ROWS in python/compile/model.py).
+pub const BATCH_ROWS: usize = 256;
+
+/// Anything that can evaluate a batch of descriptor rows.
+pub trait CostEvaluator {
+    /// layers: `n x LAYER_FIELDS`, gpus: `n x GPU_FIELDS` (row-aligned),
+    /// `n <= BATCH_ROWS`. Returns `n` seconds values.
+    fn evaluate_batch(&mut self, layers: &[[f32; 10]], gpus: &[[f32; 8]]) -> anyhow::Result<Vec<f32>>;
+
+    /// Human label for reports ("native" / "pjrt").
+    fn name(&self) -> &'static str;
+}
+
+impl CostEvaluator for NativeCostModel {
+    fn evaluate_batch(&mut self, layers: &[[f32; 10]], gpus: &[[f32; 8]]) -> anyhow::Result<Vec<f32>> {
+        // Reconstruct specs from rows so the native path goes through
+        // the exact same interface as the artifact.
+        use crate::config::model::LayerKind;
+        let mut out = Vec::with_capacity(layers.len());
+        for (l, g) in layers.iter().zip(gpus) {
+            let kind = match l[0] as u32 {
+                0 => LayerKind::Embedding,
+                1 => LayerKind::Attention,
+                2 => LayerKind::Mlp,
+                3 => LayerKind::Moe,
+                _ => LayerKind::Other,
+            };
+            let work = LayerWork {
+                kind,
+                hidden: l[1] as f64,
+                ffn: l[2] as f64,
+                heads: l[3] as f64,
+                seq: l[4] as f64,
+                mbs: l[5] as f64,
+                n_experts: l[6] as f64,
+                top_k: l[7] as f64,
+                tp: l[8] as f64,
+                is_bwd: l[9] > 0.5,
+            };
+            let gpu = GpuSpec {
+                name: String::new(),
+                peak_flops: g[0] as f64,
+                mem_bw: g[1] as f64,
+                mem_capacity: 0,
+                eff_mlp: g[2] as f64,
+                eff_attn: g[3] as f64,
+                eff_embed: g[4] as f64,
+                eff_mem: g[5] as f64,
+                launch_overhead: g[6] as f64,
+            };
+            out.push(self.time_seconds(&work, &gpu) as f32);
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Key for the lookup cache: descriptor rows bit-cast to ints so they
+/// hash exactly.
+fn key(l: &[f32; 10], g: &[f32; 8]) -> ([u32; 10], [u32; 8]) {
+    let mut lk = [0u32; 10];
+    let mut gk = [0u32; 8];
+    for (i, v) in l.iter().enumerate() {
+        lk[i] = v.to_bits();
+    }
+    for (i, v) in g.iter().enumerate() {
+        gk[i] = v.to_bits();
+    }
+    (lk, gk)
+}
+
+/// Registered-then-evaluated cost cache.
+pub struct CostTable {
+    evaluator: Box<dyn CostEvaluator>,
+    pending: Vec<([f32; 10], [f32; 8])>,
+    cache: HashMap<([u32; 10], [u32; 8]), f32>,
+    /// Number of artifact executions performed (perf accounting).
+    pub batches_run: u64,
+}
+
+impl std::fmt::Debug for CostTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CostTable")
+            .field("evaluator", &self.evaluator.name())
+            .field("cached", &self.cache.len())
+            .field("pending", &self.pending.len())
+            .finish()
+    }
+}
+
+impl CostTable {
+    pub fn new(evaluator: Box<dyn CostEvaluator>) -> Self {
+        CostTable { evaluator, pending: Vec::new(), cache: HashMap::new(), batches_run: 0 }
+    }
+
+    pub fn native() -> Self {
+        Self::new(Box::new(NativeCostModel))
+    }
+
+    pub fn evaluator_name(&self) -> &'static str {
+        self.evaluator.name()
+    }
+
+    /// Register a pair for batched evaluation (dedup-aware).
+    pub fn register(&mut self, work: &LayerWork, gpu: &GpuSpec) {
+        let l = work.descriptor_row();
+        let g = gpu.descriptor_row();
+        if !self.cache.contains_key(&key(&l, &g)) {
+            self.pending.push((l, g));
+        }
+    }
+
+    /// Evaluate all registered pairs (in BATCH_ROWS chunks).
+    pub fn evaluate(&mut self) -> anyhow::Result<()> {
+        // dedup pending
+        self.pending.sort_by_key(|(l, g)| key(l, g));
+        self.pending.dedup_by_key(|(l, g)| key(l, g));
+        let pending = std::mem::take(&mut self.pending);
+        for chunk in pending.chunks(BATCH_ROWS) {
+            let layers: Vec<[f32; 10]> = chunk.iter().map(|(l, _)| *l).collect();
+            let gpus: Vec<[f32; 8]> = chunk.iter().map(|(_, g)| *g).collect();
+            let times = self.evaluator.evaluate_batch(&layers, &gpus)?;
+            anyhow::ensure!(times.len() == chunk.len(), "evaluator row-count mismatch");
+            self.batches_run += 1;
+            for ((l, g), t) in chunk.iter().zip(times) {
+                anyhow::ensure!(
+                    t.is_finite() && t >= 0.0,
+                    "evaluator produced invalid time {t} for row {l:?}"
+                );
+                self.cache.insert(key(l, g), t);
+            }
+        }
+        Ok(())
+    }
+
+    /// Cached lookup; errors if the pair was never registered+evaluated.
+    pub fn time(&self, work: &LayerWork, gpu: &GpuSpec) -> anyhow::Result<Time> {
+        let l = work.descriptor_row();
+        let g = gpu.descriptor_row();
+        match self.cache.get(&key(&l, &g)) {
+            Some(t) => Ok(Time::from_secs(*t as f64)),
+            None => anyhow::bail!(
+                "cost table miss for kind={:?} gpu={} — workload registration incomplete",
+                work.kind,
+                gpu.name
+            ),
+        }
+    }
+
+    pub fn cached_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::LayerKind;
+    use crate::config::presets;
+
+    fn work(kind: LayerKind, mbs: f64) -> LayerWork {
+        LayerWork {
+            kind,
+            hidden: 4096.0,
+            ffn: 16384.0,
+            heads: 32.0,
+            seq: 2048.0,
+            mbs,
+            n_experts: 0.0,
+            top_k: 0.0,
+            tp: 1.0,
+            is_bwd: false,
+        }
+    }
+
+    #[test]
+    fn register_evaluate_lookup() {
+        let mut t = CostTable::native();
+        let gpu = presets::gpu("H100").unwrap();
+        let w = work(LayerKind::Mlp, 8.0);
+        t.register(&w, &gpu);
+        t.evaluate().unwrap();
+        let time = t.time(&w, &gpu).unwrap();
+        assert!(time > Time::ZERO);
+    }
+
+    #[test]
+    fn miss_errors_clearly() {
+        let t = CostTable::native();
+        let gpu = presets::gpu("H100").unwrap();
+        let err = t.time(&work(LayerKind::Mlp, 8.0), &gpu).unwrap_err();
+        assert!(err.to_string().contains("cost table miss"));
+    }
+
+    #[test]
+    fn dedup_avoids_rework() {
+        let mut t = CostTable::native();
+        let gpu = presets::gpu("A100").unwrap();
+        for _ in 0..100 {
+            t.register(&work(LayerKind::Attention, 4.0), &gpu);
+        }
+        t.evaluate().unwrap();
+        assert_eq!(t.cached_len(), 1);
+        assert_eq!(t.batches_run, 1);
+    }
+
+    #[test]
+    fn chunking_handles_many_rows() {
+        let mut t = CostTable::native();
+        let gpu = presets::gpu("A100").unwrap();
+        for i in 0..600 {
+            t.register(&work(LayerKind::Mlp, 1.0 + i as f64), &gpu);
+        }
+        t.evaluate().unwrap();
+        assert_eq!(t.cached_len(), 600);
+        assert!(t.batches_run >= 3);
+    }
+
+    #[test]
+    fn matches_direct_native_model() {
+        let mut t = CostTable::native();
+        let gpu = presets::gpu("H100").unwrap();
+        let w = work(LayerKind::Attention, 8.0);
+        t.register(&w, &gpu);
+        t.evaluate().unwrap();
+        let direct = NativeCostModel.time_seconds(&w, &gpu);
+        let cached = t.time(&w, &gpu).unwrap().as_secs();
+        assert!((direct - cached).abs() / direct < 1e-5);
+    }
+}

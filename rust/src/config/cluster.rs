@@ -1,0 +1,219 @@
+//! Cluster and host topology description (paper abstraction **A2**,
+//! Table 5): GPU compute capability plus per-interconnect bandwidth and
+//! delay parameters for NVLink, PCIe and the NIC.
+
+use crate::util::units::{Bandwidth, Time};
+
+/// GPU compute descriptor. The `eff_*` factors calibrate the roofline
+/// cost model to the paper's measured Fig-5 ratios and MUST mirror
+/// `GPU_PRESETS` in `python/compile/model.py` (cross-checked by
+/// `rust/tests/integration_runtime.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Peak dense bf16 FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Memory capacity, bytes.
+    pub mem_capacity: u64,
+    pub eff_mlp: f64,
+    pub eff_attn: f64,
+    pub eff_embed: f64,
+    pub eff_mem: f64,
+    /// Kernel launch overhead, seconds.
+    pub launch_overhead: f64,
+}
+
+impl GpuSpec {
+    /// Pack into the 8-field GPU descriptor row the AOT cost model expects.
+    pub fn descriptor_row(&self) -> [f32; 8] {
+        [
+            self.peak_flops as f32,
+            self.mem_bw as f32,
+            self.eff_mlp as f32,
+            self.eff_attn as f32,
+            self.eff_embed as f32,
+            self.eff_mem as f32,
+            self.launch_overhead as f32,
+            0.0,
+        ]
+    }
+
+    /// Relative compute power (used by the non-uniform partitioner);
+    /// normalized to A100-class = 1.0 via peak FLOPs.
+    pub fn compute_power(&self) -> f64 {
+        self.peak_flops * self.eff_mlp
+    }
+}
+
+/// Interconnect descriptor for one node architecture (paper Table 5).
+/// Bandwidths are unidirectional; delays are per traversal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InterconnectSpec {
+    /// NVLink per-GPU bandwidth (through NVSwitch).
+    pub nvlink_bw: Bandwidth,
+    pub nvlink_delay: Time,
+    /// PCIe bandwidth GPU <-> PCIe switch.
+    pub pcie_bw: Bandwidth,
+    /// One PCIe trip latency (inter-node paths pay it twice: GPU->switch
+    /// and switch->NIC, per paper §5).
+    pub pcie_latency: Time,
+    pub nic_bw: Bandwidth,
+    pub nic_processing_delay: Time,
+    /// Human label, e.g. "ConnectX-6".
+    pub nic_name: String,
+}
+
+/// One physical server: `gpus_per_node` identical GPUs + one NIC per GPU
+/// (rail-optimized, paper Fig 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub gpu: GpuSpec,
+    pub interconnect: InterconnectSpec,
+    pub gpus_per_node: u32,
+}
+
+/// The training cluster: an ordered list of nodes (possibly mixed
+/// architectures) plus the rail switch fabric parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub nodes: Vec<NodeSpec>,
+    /// Rail/aggregation switch port bandwidth.
+    pub switch_bw: Bandwidth,
+    /// Switch forwarding delay.
+    pub switch_delay: Time,
+}
+
+impl ClusterSpec {
+    pub fn total_gpus(&self) -> u32 {
+        self.nodes.iter().map(|n| n.gpus_per_node).sum()
+    }
+
+    pub fn gpus_per_node(&self) -> u32 {
+        self.nodes.first().map(|n| n.gpus_per_node).unwrap_or(0)
+    }
+
+    /// Node index and local rank for a global rank (paper §2 rank rules).
+    pub fn locate(&self, global_rank: u32) -> Option<(u32, u32)> {
+        let mut base = 0;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if global_rank < base + n.gpus_per_node {
+                return Some((i as u32, global_rank - base));
+            }
+            base += n.gpus_per_node;
+        }
+        None
+    }
+
+    pub fn node(&self, idx: u32) -> &NodeSpec {
+        &self.nodes[idx as usize]
+    }
+
+    pub fn gpu_of_rank(&self, global_rank: u32) -> Option<&GpuSpec> {
+        self.locate(global_rank).map(|(n, _)| &self.nodes[n as usize].gpu)
+    }
+
+    /// True if all nodes share one GPU model (the SimAI assumption the
+    /// paper relaxes).
+    pub fn is_homogeneous(&self) -> bool {
+        self.nodes.windows(2).all(|w| w[0].gpu.name == w[1].gpu.name)
+    }
+
+    /// Distinct GPU model names, in first-appearance order.
+    pub fn gpu_types(&self) -> Vec<&str> {
+        let mut seen = Vec::new();
+        for n in &self.nodes {
+            if !seen.contains(&n.gpu.name.as_str()) {
+                seen.push(n.gpu.name.as_str());
+            }
+        }
+        seen
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.nodes.is_empty(), "cluster has no nodes");
+        let gpn = self.nodes[0].gpus_per_node;
+        anyhow::ensure!(gpn > 0, "gpus_per_node must be positive");
+        for (i, n) in self.nodes.iter().enumerate() {
+            anyhow::ensure!(
+                n.gpus_per_node == gpn,
+                "rail-only topology requires uniform gpus_per_node (node {i} has {}, node 0 has {gpn})",
+                n.gpus_per_node
+            );
+            anyhow::ensure!(n.gpu.peak_flops > 0.0, "node {i}: peak_flops must be positive");
+            anyhow::ensure!(n.gpu.mem_bw > 0.0, "node {i}: mem_bw must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn locate_ranks() {
+        let c = presets::cluster("ampere", 2).unwrap();
+        assert_eq!(c.locate(0), Some((0, 0)));
+        assert_eq!(c.locate(7), Some((0, 7)));
+        assert_eq!(c.locate(8), Some((1, 0)));
+        assert_eq!(c.locate(15), Some((1, 7)));
+        assert_eq!(c.locate(16), None);
+    }
+
+    #[test]
+    fn homogeneous_detection() {
+        assert!(presets::cluster("ampere", 2).unwrap().is_homogeneous());
+        assert!(presets::cluster("hopper", 2).unwrap().is_homogeneous());
+        assert!(!presets::cluster_hetero(2, 2).unwrap().is_homogeneous());
+    }
+
+    #[test]
+    fn hetero_has_both_types() {
+        let c = presets::cluster_hetero(2, 2).unwrap();
+        let types = c.gpu_types();
+        assert!(types.contains(&"A100") && types.contains(&"H100"));
+        assert_eq!(c.total_gpus(), 32);
+    }
+
+    #[test]
+    fn descriptor_row_mirrors_spec() {
+        let c = presets::cluster("hopper", 1).unwrap();
+        let row = c.nodes[0].gpu.descriptor_row();
+        assert_eq!(row[0], 989.0e12_f32);
+        assert_eq!(row[1], 3350.0e9_f32);
+    }
+
+    #[test]
+    fn compute_power_orders_generations() {
+        let a = presets::gpu("A100").unwrap();
+        let h = presets::gpu("H100").unwrap();
+        assert!(h.compute_power() > a.compute_power());
+    }
+
+    #[test]
+    fn validate_rejects_mixed_gpn() {
+        let mut c = presets::cluster_hetero(1, 1).unwrap();
+        c.nodes[1].gpus_per_node = 4;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn table5_interconnect_values() {
+        // Paper Table 5 spot checks.
+        let a = presets::cluster("ampere", 1).unwrap();
+        let ic = &a.nodes[0].interconnect;
+        assert!((ic.nvlink_bw.gbps() - 4800.0).abs() < 1e-6);
+        assert!((ic.nvlink_delay.as_ns() - 30.66).abs() < 0.01);
+        assert!((ic.pcie_latency.as_ns() - 287.5).abs() < 0.01);
+        assert!((ic.nic_processing_delay.as_ns() - 368.0).abs() < 0.01);
+        let h = presets::cluster("hopper", 1).unwrap();
+        let ic = &h.nodes[0].interconnect;
+        assert!((ic.nvlink_bw.gbps() - 7200.0).abs() < 1e-6);
+        assert!((ic.nvlink_delay.as_ns() - 20.44).abs() < 0.01);
+        assert!((ic.pcie_latency.as_ns() - 143.75).abs() < 0.01);
+    }
+}

@@ -1,0 +1,295 @@
+//! Framework parameters (paper abstraction **A1**): custom device
+//! groups, hybrid parallelism degrees and the parallelism→device-group
+//! mapping, including non-uniform batch shares, layer splits and
+//! variable TP degrees (paper Fig 3).
+
+use crate::config::cluster::ClusterSpec;
+use crate::config::model::ModelSpec;
+
+/// Paper-style device-group description:
+/// `DG = {(gpu_type_1, count_1), ..., (gpu_type_N, count_N)}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceGroupSpec {
+    pub members: Vec<(String, u32)>,
+}
+
+impl DeviceGroupSpec {
+    pub fn total(&self) -> u32 {
+        self.members.iter().map(|(_, c)| c).sum()
+    }
+
+    pub fn label(&self) -> String {
+        let parts: Vec<String> = self
+            .members
+            .iter()
+            .map(|(t, c)| {
+                let letter = t.chars().next().unwrap_or('?');
+                std::iter::repeat(letter).take(*c as usize).collect::<String>()
+            })
+            .collect();
+        format!("({})", parts.join(","))
+    }
+}
+
+/// Base (uniform) parallelism degrees.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelismSpec {
+    pub tp: u32,
+    pub pp: u32,
+    pub dp: u32,
+}
+
+impl ParallelismSpec {
+    pub fn world_size(&self) -> u32 {
+        self.tp * self.pp * self.dp
+    }
+}
+
+/// One pipeline stage: the TP group computing one model slice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagePlan {
+    /// Global ranks forming the TP group (len == tp degree).
+    pub ranks: Vec<u32>,
+    /// Transformer blocks assigned to this stage.
+    pub num_layers: u32,
+    /// Whether this stage also hosts the embedding layer.
+    pub has_embedding: bool,
+}
+
+impl StagePlan {
+    pub fn tp(&self) -> u32 {
+        self.ranks.len() as u32
+    }
+}
+
+/// One device group = one pipeline = one DP replica (paper §3:
+/// "a device group refers to a collection of GPU nodes that divide the
+/// model for a given batch size to form a pipeline").
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceGroupPlan {
+    pub id: u32,
+    pub stages: Vec<StagePlan>,
+    /// Samples of the global batch this replica trains per iteration
+    /// (non-uniform across groups in heterogeneous deployments).
+    pub batch_share: u64,
+    pub micro_batch: u64,
+}
+
+impl DeviceGroupPlan {
+    pub fn pp(&self) -> u32 {
+        self.stages.len() as u32
+    }
+
+    pub fn ranks(&self) -> Vec<u32> {
+        self.stages.iter().flat_map(|s| s.ranks.iter().copied()).collect()
+    }
+
+    pub fn num_microbatches(&self) -> u64 {
+        (self.batch_share / self.micro_batch.max(1)).max(1)
+    }
+}
+
+/// Split `total` into `parts` non-negative integers that sum to `total`
+/// and differ by at most one (earlier parts take the remainder).
+pub fn split_evenly(total: u64, parts: u64) -> Vec<u64> {
+    let parts = parts.max(1);
+    let base = total / parts;
+    let rem = total % parts;
+    (0..parts).map(|i| base + u64::from(i < rem)).collect()
+}
+
+/// Full framework specification: the parallelism→device mapping for the
+/// whole cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameworkSpec {
+    pub groups: Vec<DeviceGroupPlan>,
+    /// Degrees this spec was derived from (informational for reports).
+    pub base: ParallelismSpec,
+}
+
+impl FrameworkSpec {
+    /// Uniform mapping (the homogeneous SimAI behaviour): contiguous
+    /// rank blocks, equal layer splits, equal batch shares.
+    /// Rank layout follows Megatron order: TP fastest, then PP, then DP.
+    pub fn uniform(
+        model: &ModelSpec,
+        cluster: &ClusterSpec,
+        par: ParallelismSpec,
+    ) -> anyhow::Result<FrameworkSpec> {
+        anyhow::ensure!(
+            par.world_size() == cluster.total_gpus(),
+            "parallelism world size {} != cluster GPUs {}",
+            par.world_size(),
+            cluster.total_gpus()
+        );
+        anyhow::ensure!(
+            model.num_layers % par.pp == 0,
+            "uniform mapping needs layers {} divisible by pp {}",
+            model.num_layers,
+            par.pp
+        );
+        let layers_per_stage = model.num_layers / par.pp;
+        // Distribute the global batch as evenly as possible (the paper's
+        // own Table-6 configs, e.g. 976 over DP=32, do not divide).
+        let shares = split_evenly(model.global_batch, par.dp as u64);
+        let mut groups = Vec::new();
+        for d in 0..par.dp {
+            let mut stages = Vec::new();
+            for p in 0..par.pp {
+                let base = d * par.pp * par.tp + p * par.tp;
+                let ranks: Vec<u32> = (base..base + par.tp).collect();
+                stages.push(StagePlan {
+                    ranks,
+                    num_layers: layers_per_stage,
+                    has_embedding: p == 0,
+                });
+            }
+            groups.push(DeviceGroupPlan {
+                id: d,
+                stages,
+                batch_share: shares[d as usize],
+                micro_batch: model.micro_batch,
+            });
+        }
+        let spec = FrameworkSpec { groups, base: par };
+        spec.validate(model, cluster)?;
+        Ok(spec)
+    }
+
+    pub fn total_ranks(&self) -> usize {
+        self.groups.iter().map(|g| g.ranks().len()).sum()
+    }
+
+    pub fn dp(&self) -> u32 {
+        self.groups.len() as u32
+    }
+
+    /// Validation invariants (used by property tests too):
+    /// ranks unique and within the cluster; batch shares sum to the
+    /// global batch; every group covers all model layers; every group
+    /// has exactly one embedding stage.
+    pub fn validate(&self, model: &ModelSpec, cluster: &ClusterSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.groups.is_empty(), "no device groups");
+        let mut seen = std::collections::HashSet::new();
+        for g in &self.groups {
+            anyhow::ensure!(!g.stages.is_empty(), "group {} has no stages", g.id);
+            let mut layers = 0;
+            let mut embeds = 0;
+            for s in &g.stages {
+                anyhow::ensure!(!s.ranks.is_empty(), "empty TP group in group {}", g.id);
+                layers += s.num_layers;
+                embeds += s.has_embedding as u32;
+                for r in &s.ranks {
+                    anyhow::ensure!(seen.insert(*r), "rank {r} assigned twice");
+                    anyhow::ensure!(
+                        *r < cluster.total_gpus(),
+                        "rank {r} outside cluster of {} GPUs",
+                        cluster.total_gpus()
+                    );
+                }
+            }
+            anyhow::ensure!(
+                layers == model.num_layers,
+                "group {} covers {layers} layers, model has {}",
+                g.id,
+                model.num_layers
+            );
+            anyhow::ensure!(embeds == 1, "group {} has {embeds} embedding stages", g.id);
+            anyhow::ensure!(g.batch_share > 0, "group {} has zero batch share", g.id);
+        }
+        let total_batch: u64 = self.groups.iter().map(|g| g.batch_share).sum();
+        anyhow::ensure!(
+            total_batch == model.global_batch,
+            "batch shares sum to {total_batch}, global batch is {}",
+            model.global_batch
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn uniform_gpt67_layout() {
+        // Table 6: GPT-6.7B world=128, TP=4 PP=1 DP=32
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster("hopper", 16).unwrap();
+        let par = ParallelismSpec { tp: 4, pp: 1, dp: 32 };
+        let f = FrameworkSpec::uniform(&m, &c, par).unwrap();
+        assert_eq!(f.groups.len(), 32);
+        assert_eq!(f.total_ranks(), 128);
+        assert_eq!(f.groups[0].stages[0].ranks, vec![0, 1, 2, 3]);
+        assert_eq!(f.groups[1].stages[0].ranks, vec![4, 5, 6, 7]);
+        // 976 = 32*30 + 16: first 16 groups take 31, the rest 30
+        assert_eq!(f.groups[0].batch_share, 31);
+        assert_eq!(f.groups[31].batch_share, 30);
+        let total: u64 = f.groups.iter().map(|g| g.batch_share).sum();
+        assert_eq!(total, 976);
+    }
+
+    #[test]
+    fn split_evenly_conserves_and_balances() {
+        for (total, parts) in [(976u64, 32u64), (10, 3), (5, 8), (0, 4), (7, 1)] {
+            let s = split_evenly(total, parts);
+            assert_eq!(s.iter().sum::<u64>(), total);
+            let mx = *s.iter().max().unwrap();
+            let mn = *s.iter().min().unwrap();
+            assert!(mx - mn <= 1, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn uniform_pipeline_ranks_megatron_order() {
+        let mut m = presets::model("llama2-70b").unwrap();
+        m.global_batch = 64;
+        let c = presets::cluster("ampere", 8).unwrap(); // 64 GPUs
+        let par = ParallelismSpec { tp: 4, pp: 4, dp: 4 };
+        let f = FrameworkSpec::uniform(&m, &c, par).unwrap();
+        // group 0 stage 1 starts after stage 0's TP block
+        assert_eq!(f.groups[0].stages[1].ranks, vec![4, 5, 6, 7]);
+        // only stage 0 has the embedding
+        assert!(f.groups[0].stages[0].has_embedding);
+        assert!(!f.groups[0].stages[1].has_embedding);
+        assert_eq!(f.groups[0].pp(), 4);
+    }
+
+    #[test]
+    fn world_size_mismatch_rejected() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster("hopper", 2).unwrap(); // 16 GPUs
+        let par = ParallelismSpec { tp: 4, pp: 1, dp: 32 };
+        assert!(FrameworkSpec::uniform(&m, &c, par).is_err());
+    }
+
+    #[test]
+    fn validate_catches_duplicate_ranks() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster("hopper", 16).unwrap();
+        let par = ParallelismSpec { tp: 4, pp: 1, dp: 32 };
+        let mut f = FrameworkSpec::uniform(&m, &c, par).unwrap();
+        f.groups[1].stages[0].ranks = vec![0, 1, 2, 3];
+        assert!(f.validate(&m, &c).is_err());
+    }
+
+    #[test]
+    fn validate_catches_batch_mismatch() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster("hopper", 16).unwrap();
+        let par = ParallelismSpec { tp: 4, pp: 1, dp: 32 };
+        let mut f = FrameworkSpec::uniform(&m, &c, par).unwrap();
+        f.groups[0].batch_share += 1;
+        assert!(f.validate(&m, &c).is_err());
+    }
+
+    #[test]
+    fn device_group_label_matches_paper_notation() {
+        let dg = DeviceGroupSpec {
+            members: vec![("H100".into(), 2), ("A100".into(), 1)],
+        };
+        assert_eq!(dg.label(), "(HH,A)");
+        assert_eq!(dg.total(), 3);
+    }
+}

@@ -1,0 +1,198 @@
+//! JSON config loader: the file-based face of abstractions A1/A2.
+//!
+//! A scenario file bundles model + cluster + parallelism:
+//!
+//! ```json
+//! {
+//!   "model": "gpt-6.7b",                 // preset name, or inline object
+//!   "cluster": {"arch": "hetero", "ampere_nodes": 8, "hopper_nodes": 8},
+//!   "parallelism": {"tp": 4, "pp": 1, "dp": 32},
+//!   "seed": 42
+//! }
+//! ```
+//!
+//! Inline model objects accept the Table-6 field names; inline clusters
+//! accept per-node architecture lists for arbitrary mixes.
+
+use crate::config::cluster::ClusterSpec;
+use crate::config::framework::ParallelismSpec;
+use crate::config::model::{ModelSpec, MoeSpec};
+use crate::config::presets;
+use crate::util::json::Json;
+
+/// A fully-described simulation scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub model: ModelSpec,
+    pub cluster: ClusterSpec,
+    pub parallelism: ParallelismSpec,
+    pub seed: u64,
+}
+
+pub fn load_scenario_file(path: &std::path::Path) -> anyhow::Result<Scenario> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+    load_scenario(&text)
+}
+
+pub fn load_scenario(text: &str) -> anyhow::Result<Scenario> {
+    let v = Json::parse(text)?;
+    let model = parse_model(v.req("model")?)?;
+    let cluster = parse_cluster(v.req("cluster")?)?;
+    let parallelism = parse_parallelism(v.req("parallelism")?)?;
+    let seed = v.opt_u64("seed", 42);
+    model.validate()?;
+    cluster.validate()?;
+    Ok(Scenario { model, cluster, parallelism, seed })
+}
+
+pub fn parse_model(v: &Json) -> anyhow::Result<ModelSpec> {
+    if let Some(name) = v.as_str() {
+        return presets::model(name);
+    }
+    // inline object; start from defaults for optional training fields
+    let moe = match v.get("num_experts") {
+        Some(n) => Some(MoeSpec {
+            num_experts: n.as_u64().unwrap_or(0) as u32,
+            top_k: v.opt_u64("top_k", 2) as u32,
+        }),
+        None => None,
+    };
+    Ok(ModelSpec {
+        name: v.opt_str("name", "custom").to_string(),
+        num_layers: v.req_u64("num_layers")? as u32,
+        hidden_size: v.req_u64("hidden_size")?,
+        num_heads: v.req_u64("num_heads")? as u32,
+        ffn_hidden: v.req_u64("ffn_hidden")?,
+        seq_len: v.req_u64("seq_len")?,
+        max_pos_embeddings: v.opt_u64("max_pos_embeddings", v.req_u64("seq_len")?),
+        vocab_size: v.opt_u64("vocab_size", 50257),
+        moe,
+        gated_mlp: v.get("gated_mlp").and_then(|b| b.as_bool()).unwrap_or(false),
+        global_batch: v.req_u64("global_batch")?,
+        micro_batch: v.req_u64("micro_batch")?,
+        grad_dtype_bytes: v.opt_u64("grad_dtype_bytes", 4),
+        dtype_bytes: v.opt_u64("dtype_bytes", 2),
+    })
+}
+
+pub fn parse_cluster(v: &Json) -> anyhow::Result<ClusterSpec> {
+    if let Some(name) = v.as_str() {
+        // "ampere:16" shorthand
+        let (arch, n) = name.split_once(':').unwrap_or((name, "16"));
+        return presets::cluster(arch, n.parse()?);
+    }
+    let arch = v.req_str("arch")?;
+    match arch {
+        "hetero" => presets::cluster_hetero(
+            v.opt_u64("ampere_nodes", 8) as u32,
+            v.opt_u64("hopper_nodes", 8) as u32,
+        ),
+        "custom" => {
+            // explicit per-node architecture list
+            let list = v
+                .req("node_archs")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("node_archs must be an array"))?;
+            let mut nodes = Vec::new();
+            for a in list {
+                let arch =
+                    a.as_str().ok_or_else(|| anyhow::anyhow!("node_archs entries are strings"))?;
+                let c = presets::cluster(arch, 1)?;
+                nodes.push(c.nodes[0].clone());
+            }
+            let mut c = presets::cluster("ampere", 1)?;
+            c.name = v.opt_str("name", "custom").to_string();
+            c.nodes = nodes;
+            Ok(c)
+        }
+        _ => presets::cluster(arch, v.opt_u64("nodes", 16) as u32),
+    }
+}
+
+pub fn parse_parallelism(v: &Json) -> anyhow::Result<ParallelismSpec> {
+    Ok(ParallelismSpec {
+        tp: v.req_u64("tp")? as u32,
+        pp: v.req_u64("pp")? as u32,
+        dp: v.req_u64("dp")? as u32,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_scenario() {
+        let s = load_scenario(
+            r#"{"model": "gpt-6.7b",
+                "cluster": {"arch": "hopper", "nodes": 16},
+                "parallelism": {"tp": 4, "pp": 1, "dp": 32}}"#,
+        )
+        .unwrap();
+        assert_eq!(s.model.name, "GPT-6.7B");
+        assert_eq!(s.cluster.total_gpus(), 128);
+        assert_eq!(s.parallelism.world_size(), 128);
+        assert_eq!(s.seed, 42);
+    }
+
+    #[test]
+    fn hetero_cluster_scenario() {
+        let s = load_scenario(
+            r#"{"model": "gpt-13b",
+                "cluster": {"arch": "hetero", "ampere_nodes": 16, "hopper_nodes": 16},
+                "parallelism": {"tp": 8, "pp": 1, "dp": 32},
+                "seed": 7}"#,
+        )
+        .unwrap();
+        assert!(!s.cluster.is_homogeneous());
+        assert_eq!(s.seed, 7);
+    }
+
+    #[test]
+    fn inline_model() {
+        let s = load_scenario(
+            r#"{"model": {"name": "tiny", "num_layers": 4, "hidden_size": 512,
+                          "num_heads": 8, "ffn_hidden": 2048, "seq_len": 128,
+                          "global_batch": 32, "micro_batch": 2},
+                "cluster": "ampere:1",
+                "parallelism": {"tp": 2, "pp": 2, "dp": 2}}"#,
+        )
+        .unwrap();
+        assert_eq!(s.model.num_layers, 4);
+        assert_eq!(s.cluster.total_gpus(), 8);
+    }
+
+    #[test]
+    fn inline_moe_model() {
+        let m = parse_model(
+            &Json::parse(
+                r#"{"num_layers": 8, "hidden_size": 1024, "num_heads": 16,
+                    "ffn_hidden": 4096, "seq_len": 256, "global_batch": 64,
+                    "micro_batch": 4, "num_experts": 8, "top_k": 2}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(m.moe.unwrap().num_experts, 8);
+    }
+
+    #[test]
+    fn custom_node_list() {
+        let c = parse_cluster(
+            &Json::parse(r#"{"arch": "custom", "node_archs": ["ampere", "hopper", "ampere"]}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.nodes.len(), 3);
+        assert_eq!(c.gpu_types(), vec!["A100", "H100"]);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(load_scenario(r#"{"model": "gpt-6.7b"}"#).is_err());
+        assert!(load_scenario(r#"{"model": "nope", "cluster": "ampere:1",
+            "parallelism": {"tp":1,"pp":1,"dp":8}}"#)
+            .is_err());
+    }
+}

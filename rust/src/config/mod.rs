@@ -1,0 +1,21 @@
+//! Input description layer (paper abstractions **A1** and **A2**).
+//!
+//! The user feeds the simulator three descriptions (paper §4.2):
+//! 1. *Model parameters* ([`model::ModelSpec`], Table 6),
+//! 2. *Framework parameters* ([`framework::FrameworkSpec`]: device
+//!    groups, parallelism degrees, parallelism→group mapping),
+//! 3. *Heterogeneous host & cluster topology*
+//!    ([`cluster::ClusterSpec`], Table 5).
+//!
+//! [`presets`] carries the paper's exact Table 5/6 configurations;
+//! [`loader`] reads the same structures from JSON files.
+
+pub mod cluster;
+pub mod framework;
+pub mod loader;
+pub mod model;
+pub mod presets;
+
+pub use cluster::{ClusterSpec, GpuSpec, InterconnectSpec, NodeSpec};
+pub use framework::{DeviceGroupSpec, FrameworkSpec, ParallelismSpec};
+pub use model::{LayerKind, ModelSpec};

@@ -1,0 +1,198 @@
+//! Model description (paper Table 6): transformer / MoE hyperparameters
+//! plus training configuration.
+
+/// The layer taxonomy used across the workload and compute layers.
+/// Codes match the Python side (`python/compile/model.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    Embedding,
+    Attention,
+    Mlp,
+    Moe,
+    Other,
+}
+
+impl LayerKind {
+    pub fn code(self) -> f32 {
+        match self {
+            LayerKind::Embedding => 0.0,
+            LayerKind::Attention => 1.0,
+            LayerKind::Mlp => 2.0,
+            LayerKind::Moe => 3.0,
+            LayerKind::Other => 4.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LayerKind::Embedding => "embedding",
+            LayerKind::Attention => "attention",
+            LayerKind::Mlp => "mlp",
+            LayerKind::Moe => "moe",
+            LayerKind::Other => "other",
+        }
+    }
+}
+
+/// MoE configuration (Mixtral-style token-choice routing).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MoeSpec {
+    pub num_experts: u32,
+    pub top_k: u32,
+}
+
+/// Model + training hyperparameters (paper Table 6).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub num_layers: u32,
+    pub hidden_size: u64,
+    pub num_heads: u32,
+    pub ffn_hidden: u64,
+    pub seq_len: u64,
+    pub max_pos_embeddings: u64,
+    pub vocab_size: u64,
+    pub moe: Option<MoeSpec>,
+    /// Gated (SwiGLU-style, 3-matrix) MLP — true for Llama/Mixtral,
+    /// false for GPT's 2-matrix MLP. Affects parameter accounting.
+    pub gated_mlp: bool,
+    /// Training configuration.
+    pub global_batch: u64,
+    pub micro_batch: u64,
+    /// Gradient dtype bytes (paper's DP sizes imply fp32 grads).
+    pub grad_dtype_bytes: u64,
+    /// Parameter/activation dtype bytes (bf16).
+    pub dtype_bytes: u64,
+}
+
+impl ModelSpec {
+    /// Approximate parameter count (standard transformer accounting).
+    pub fn param_count(&self) -> u64 {
+        let h = self.hidden_size;
+        let ffn = self.ffn_hidden;
+        let attn = 4 * h * h; // QKVO
+        let mats = if self.gated_mlp { 3 } else { 2 };
+        let mlp = match self.moe {
+            Some(m) => (m.num_experts as u64) * mats * h * ffn + h * (m.num_experts as u64),
+            None => mats * h * ffn,
+        };
+        let per_layer = attn + mlp + 4 * h; // + layernorm/bias terms
+        let embed = self.vocab_size * h;
+        self.num_layers as u64 * per_layer + embed
+    }
+
+    /// Parameters resident on one GPU for a (tp, pp) sharding.
+    pub fn params_per_gpu(&self, tp: u32, pp: u32) -> u64 {
+        self.param_count() / (tp.max(1) as u64 * pp.max(1) as u64)
+    }
+
+    /// Gradient bytes exchanged by DP synchronization per GPU.
+    pub fn grad_bytes_per_gpu(&self, tp: u32, pp: u32) -> u64 {
+        self.params_per_gpu(tp, pp) * self.grad_dtype_bytes
+    }
+
+    /// Number of microbatches a DP replica processes per iteration.
+    pub fn microbatches_per_replica(&self, dp: u32) -> u64 {
+        (self.global_batch / (dp.max(1) as u64 * self.micro_batch)).max(1)
+    }
+
+    /// The per-transformer-block layer kinds (attention + mlp/moe + other).
+    pub fn block_kinds(&self) -> Vec<LayerKind> {
+        let mlp = if self.moe.is_some() { LayerKind::Moe } else { LayerKind::Mlp };
+        vec![LayerKind::Attention, mlp, LayerKind::Other]
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.num_layers > 0, "num_layers must be positive");
+        anyhow::ensure!(self.hidden_size > 0, "hidden_size must be positive");
+        anyhow::ensure!(
+            self.hidden_size % self.num_heads as u64 == 0,
+            "hidden_size {} not divisible by heads {}",
+            self.hidden_size,
+            self.num_heads
+        );
+        anyhow::ensure!(self.micro_batch > 0, "micro_batch must be positive");
+        anyhow::ensure!(
+            self.global_batch >= self.micro_batch,
+            "global_batch {} < micro_batch {}",
+            self.global_batch,
+            self.micro_batch
+        );
+        if let Some(m) = &self.moe {
+            anyhow::ensure!(m.top_k > 0 && m.top_k <= m.num_experts, "bad MoE top_k");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn gpt67_param_count_near_6_7b() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let p = m.param_count() as f64;
+        assert!((6.0e9..8.0e9).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn gpt13_param_count_near_13b() {
+        let m = presets::model("gpt-13b").unwrap();
+        let p = m.param_count() as f64;
+        assert!((12.0e9..15.0e9).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn mixtral_param_count_near_46b() {
+        // 8x7B ~= 46.7B total parameters
+        let m = presets::model("mixtral-8x7b").unwrap();
+        let p = m.param_count() as f64;
+        assert!((40.0e9..50.0e9).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn llama70_param_count_near_70b() {
+        let m = presets::model("llama2-70b").unwrap();
+        let p = m.param_count() as f64;
+        assert!((60.0e9..80.0e9).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn grad_bytes_shrink_with_sharding() {
+        let m = presets::model("llama2-70b").unwrap();
+        assert!(m.grad_bytes_per_gpu(8, 8) < m.grad_bytes_per_gpu(1, 1) / 32);
+    }
+
+    #[test]
+    fn table1_dp_size_about_4_4_gb() {
+        // Paper Table 1: Llama-2 70B, TP=8 PP=8 -> 4.4 GB fp32 grads/GPU
+        let m = presets::model("llama2-70b").unwrap();
+        let gb = m.grad_bytes_per_gpu(8, 8) as f64 / 1e9;
+        assert!((3.8..5.0).contains(&gb), "{gb}");
+    }
+
+    #[test]
+    fn microbatch_accounting() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        // Table 6: gb=976, dp=32, mbs=8 -> floor(976/256)=3 microbatches
+        assert_eq!(m.microbatches_per_replica(32), 3);
+    }
+
+    #[test]
+    fn validate_catches_bad_heads() {
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.num_heads = 33;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn moe_block_uses_moe_kind() {
+        let m = presets::model("mixtral-8x7b").unwrap();
+        assert!(m.block_kinds().contains(&LayerKind::Moe));
+        let d = presets::model("gpt-6.7b").unwrap();
+        assert!(d.block_kinds().contains(&LayerKind::Mlp));
+    }
+}

@@ -1,0 +1,49 @@
+//! Event identity and scheduling envelope.
+
+use crate::util::units::Time;
+
+/// Unique id of a scheduled event (its insertion sequence number).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct EventId(pub u64);
+
+/// A payload scheduled at a simulation time. Ordering: by time, then by
+/// insertion sequence (deterministic tie-break).
+#[derive(Debug, Clone)]
+pub struct Scheduled<T> {
+    pub time: Time,
+    pub id: EventId,
+    pub payload: T,
+}
+
+impl<T> PartialEq for Scheduled<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.id == other.id
+    }
+}
+impl<T> Eq for Scheduled<T> {}
+
+impl<T> PartialOrd for Scheduled<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Scheduled<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time.cmp(&other.time).then(self.id.cmp(&other.id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_by_time_then_seq() {
+        let a = Scheduled { time: Time(5), id: EventId(1), payload: () };
+        let b = Scheduled { time: Time(5), id: EventId(2), payload: () };
+        let c = Scheduled { time: Time(4), id: EventId(9), payload: () };
+        assert!(c < a);
+        assert!(a < b);
+    }
+}

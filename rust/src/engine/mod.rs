@@ -1,0 +1,18 @@
+//! Deterministic discrete-event simulation core (system S1).
+//!
+//! The engine is generic over the event payload so the system layer
+//! (compute/pipeline events) and the network layer (flow events) can
+//! share one implementation. Determinism contract: events at equal
+//! timestamps dispatch in insertion order (a monotone sequence number
+//! breaks ties), so a given configuration always produces an identical
+//! timeline.
+
+pub mod event;
+pub mod queue;
+pub mod sim;
+pub mod trace;
+
+pub use event::EventId;
+pub use queue::EventQueue;
+pub use sim::Engine;
+pub use trace::{TraceCategory, TraceRecord, TraceRecorder};

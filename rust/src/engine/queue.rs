@@ -1,0 +1,155 @@
+//! Deterministic priority event queue.
+//!
+//! A binary heap of [`Scheduled`] envelopes ordered by (time, seq).
+//! Supports O(log n) push/pop and lazy cancellation (cancelled ids are
+//! skipped on pop) — the flow simulator reschedules completion events
+//! whenever link shares change, so cancellation must be cheap.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
+
+use super::event::{EventId, Scheduled};
+use crate::util::units::Time;
+
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Reverse<Scheduled<T>>>,
+    cancelled: HashSet<EventId>,
+    next_seq: u64,
+    /// Statistics for the perf report.
+    pub pushed: u64,
+    pub popped: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            cancelled: HashSet::new(),
+            next_seq: 0,
+            pushed: 0,
+            popped: 0,
+        }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        let mut q = Self::new();
+        q.heap.reserve(n);
+        q
+    }
+
+    /// Schedule `payload` at absolute time `time`.
+    pub fn push(&mut self, time: Time, payload: T) -> EventId {
+        let id = EventId(self.next_seq);
+        self.next_seq += 1;
+        self.pushed += 1;
+        self.heap.push(Reverse(Scheduled { time, id, payload }));
+        id
+    }
+
+    /// Cancel a previously scheduled event (lazy: skipped on pop).
+    pub fn cancel(&mut self, id: EventId) {
+        self.cancelled.insert(id);
+    }
+
+    /// Pop the earliest non-cancelled event.
+    pub fn pop(&mut self) -> Option<Scheduled<T>> {
+        while let Some(Reverse(ev)) = self.heap.pop() {
+            if self.cancelled.remove(&ev.id) {
+                continue;
+            }
+            self.popped += 1;
+            return Some(ev);
+        }
+        None
+    }
+
+    /// Earliest pending (non-cancelled) event time without popping.
+    pub fn peek_time(&mut self) -> Option<Time> {
+        while let Some(Reverse(ev)) = self.heap.peek() {
+            if self.cancelled.contains(&ev.id) {
+                let Reverse(ev) = self.heap.pop().unwrap();
+                self.cancelled.remove(&ev.id);
+                continue;
+            }
+            return Some(ev.time);
+        }
+        None
+    }
+
+    pub fn is_empty(&mut self) -> bool {
+        self.peek_time().is_none()
+    }
+
+    /// Pending (possibly including not-yet-skipped cancelled) events.
+    pub fn len_approx(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(Time(30), "c");
+        q.push(Time(10), "a");
+        q.push(Time(20), "b");
+        assert_eq!(q.pop().unwrap().payload, "a");
+        assert_eq!(q.pop().unwrap().payload, "b");
+        assert_eq!(q.pop().unwrap().payload, "c");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn equal_times_pop_in_insertion_order() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(Time(7), i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop().unwrap().payload, i);
+        }
+    }
+
+    #[test]
+    fn cancellation_skips_events() {
+        let mut q = EventQueue::new();
+        let _a = q.push(Time(1), "a");
+        let b = q.push(Time(2), "b");
+        q.push(Time(3), "c");
+        q.cancel(b);
+        assert_eq!(q.pop().unwrap().payload, "a");
+        assert_eq!(q.pop().unwrap().payload, "c");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn peek_time_skips_cancelled_head() {
+        let mut q = EventQueue::new();
+        let a = q.push(Time(1), "a");
+        q.push(Time(5), "b");
+        q.cancel(a);
+        assert_eq!(q.peek_time(), Some(Time(5)));
+        assert_eq!(q.pop().unwrap().payload, "b");
+    }
+
+    #[test]
+    fn counters_track_throughput() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(Time(i), i);
+        }
+        while q.pop().is_some() {}
+        assert_eq!(q.pushed, 10);
+        assert_eq!(q.popped, 10);
+    }
+}

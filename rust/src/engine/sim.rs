@@ -1,0 +1,161 @@
+//! The event loop: advances the clock, dispatches payloads to a handler
+//! which may schedule further events.
+
+use super::event::Scheduled;
+use super::queue::EventQueue;
+use crate::util::units::Time;
+
+/// Engine = queue + clock + safety limits.
+#[derive(Debug)]
+pub struct Engine<T> {
+    pub queue: EventQueue<T>,
+    now: Time,
+    /// Abort knob against runaway event cascades (0 = unlimited).
+    pub max_events: u64,
+    processed: u64,
+}
+
+impl<T> Default for Engine<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Engine<T> {
+    pub fn new() -> Self {
+        Engine { queue: EventQueue::new(), now: Time::ZERO, max_events: 0, processed: 0 }
+    }
+
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `payload` after a delay from the current time.
+    pub fn schedule_in(&mut self, delay: Time, payload: T) -> super::event::EventId {
+        self.queue.push(self.now + delay, payload)
+    }
+
+    /// Schedule at an absolute time (must not be in the past).
+    pub fn schedule_at(&mut self, time: Time, payload: T) -> super::event::EventId {
+        debug_assert!(time >= self.now, "scheduling into the past: {time} < {}", self.now);
+        self.queue.push(time, payload)
+    }
+
+    /// Pop the next event and advance the clock — the manual-loop
+    /// alternative to [`Engine::run`] for callers whose handler needs
+    /// `&mut` access to state that also owns the engine reference.
+    pub fn step(&mut self) -> Option<Scheduled<T>> {
+        let ev = self.queue.pop()?;
+        debug_assert!(ev.time >= self.now, "time went backwards");
+        self.now = ev.time;
+        self.processed += 1;
+        Some(ev)
+    }
+
+    /// Run until the queue drains. The handler receives the engine so it
+    /// can schedule follow-up events and read the clock.
+    pub fn run(&mut self, mut handler: impl FnMut(&mut Engine<T>, Scheduled<T>)) -> anyhow::Result<Time> {
+        self.run_until(Time::MAX, &mut handler)
+    }
+
+    /// Run until the queue drains or the clock passes `deadline`.
+    /// Returns the final clock value.
+    pub fn run_until(
+        &mut self,
+        deadline: Time,
+        handler: &mut impl FnMut(&mut Engine<T>, Scheduled<T>),
+    ) -> anyhow::Result<Time> {
+        while let Some(t) = self.queue.peek_time() {
+            if t > deadline {
+                break;
+            }
+            let ev = self.queue.pop().unwrap();
+            debug_assert!(ev.time >= self.now, "time went backwards");
+            self.now = ev.time;
+            self.processed += 1;
+            if self.max_events > 0 && self.processed > self.max_events {
+                anyhow::bail!(
+                    "event budget exceeded ({} events) — runaway cascade? now={}",
+                    self.max_events,
+                    self.now
+                );
+            }
+            handler(self, ev);
+        }
+        Ok(self.now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_at(Time(10), 1);
+        e.schedule_at(Time(5), 2);
+        let mut seen = Vec::new();
+        e.run(|eng, ev| seen.push((eng.now().as_ps(), ev.payload))).unwrap();
+        assert_eq!(seen, vec![(5, 2), (10, 1)]);
+        assert_eq!(e.now(), Time(10));
+    }
+
+    #[test]
+    fn handler_can_schedule_follow_ups() {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_at(Time(1), 0);
+        let mut count = 0;
+        e.run(|eng, ev| {
+            count += 1;
+            if ev.payload < 5 {
+                eng.schedule_in(Time(2), ev.payload + 1);
+            }
+        })
+        .unwrap();
+        assert_eq!(count, 6);
+        assert_eq!(e.now(), Time(11));
+    }
+
+    #[test]
+    fn run_until_stops_at_deadline() {
+        let mut e: Engine<u32> = Engine::new();
+        for i in 0..10 {
+            e.schedule_at(Time(i * 10), i as u32);
+        }
+        let mut seen = 0;
+        e.run_until(Time(45), &mut |_, _| seen += 1).unwrap();
+        assert_eq!(seen, 5);
+        // remaining events still pending
+        assert!(!e.queue.is_empty());
+    }
+
+    #[test]
+    fn event_budget_guards_runaway() {
+        let mut e: Engine<u32> = Engine::new();
+        e.max_events = 100;
+        e.schedule_at(Time(1), 0);
+        let res = e.run(|eng, ev| {
+            eng.schedule_in(Time(1), ev.payload); // infinite cascade
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut e: Engine<u64> = Engine::new();
+            for i in 0..50 {
+                e.schedule_at(Time(i % 7), i);
+            }
+            let mut order = Vec::new();
+            e.run(|_, ev| order.push(ev.payload)).unwrap();
+            order
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,191 @@
+//! Execution timeline recording (the paper's "event logs over the
+//! distributed execution timeline", §4.2 System layer).
+//!
+//! Records are (rank, category, label, start, end) tuples; the recorder
+//! can summarize per-category busy time and export CSV for inspection.
+
+use crate::util::stats::Samples;
+use crate::util::units::Time;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TraceCategory {
+    Compute,
+    Communication,
+    Resharding,
+    PipelineBubble,
+    Other,
+}
+
+impl TraceCategory {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceCategory::Compute => "compute",
+            TraceCategory::Communication => "comm",
+            TraceCategory::Resharding => "reshard",
+            TraceCategory::PipelineBubble => "bubble",
+            TraceCategory::Other => "other",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    pub rank: u32,
+    pub category: TraceCategory,
+    pub label: String,
+    pub start: Time,
+    pub end: Time,
+}
+
+/// Accumulates timeline records. Can be disabled (all pushes dropped)
+/// for perf runs where only aggregate stats matter.
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    pub records: Vec<TraceRecord>,
+    pub enabled: bool,
+}
+
+impl TraceRecorder {
+    pub fn new(enabled: bool) -> Self {
+        TraceRecorder { records: Vec::new(), enabled }
+    }
+
+    pub fn record(
+        &mut self,
+        rank: u32,
+        category: TraceCategory,
+        label: impl Into<String>,
+        start: Time,
+        end: Time,
+    ) {
+        if self.enabled {
+            self.records.push(TraceRecord { rank, category, label: label.into(), start, end });
+        }
+    }
+
+    /// Total busy time per category across all ranks.
+    pub fn busy_by_category(&self, cat: TraceCategory) -> Time {
+        Time(self
+            .records
+            .iter()
+            .filter(|r| r.category == cat)
+            .map(|r| (r.end - r.start).as_ps())
+            .sum())
+    }
+
+    /// Duration samples for one category (e.g. per-flow FCTs).
+    pub fn durations(&self, cat: TraceCategory) -> Samples {
+        let mut s = Samples::new();
+        s.extend(
+            self.records
+                .iter()
+                .filter(|r| r.category == cat)
+                .map(|r| (r.end - r.start).as_secs()),
+        );
+        s
+    }
+
+    /// Makespan across all records.
+    pub fn makespan(&self) -> Time {
+        Time(self.records.iter().map(|r| r.end.as_ps()).max().unwrap_or(0))
+    }
+
+    /// Chrome-trace (chrome://tracing / Perfetto) JSON export: one
+    /// "complete" event per record, rank as tid.
+    pub fn chrome_trace(&self) -> String {
+        use crate::util::json::Json;
+        let events: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.label.clone())),
+                    ("cat", Json::Str(r.category.name().into())),
+                    ("ph", Json::Str("X".into())),
+                    ("ts", Json::Num(r.start.as_us())),
+                    ("dur", Json::Num((r.end - r.start).as_us())),
+                    ("pid", Json::Num(0.0)),
+                    ("tid", Json::Num(r.rank as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("traceEvents", Json::Arr(events))]).to_string()
+    }
+
+    pub fn csv(&self) -> String {
+        let mut s = String::from("rank,category,label,start_ns,end_ns\n");
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{},{},{:.3},{:.3}\n",
+                r.rank,
+                r.category.name(),
+                r.label,
+                r.start.as_ns(),
+                r.end.as_ns()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_drops_records() {
+        let mut t = TraceRecorder::new(false);
+        t.record(0, TraceCategory::Compute, "x", Time(0), Time(10));
+        assert!(t.records.is_empty());
+    }
+
+    #[test]
+    fn busy_time_sums_per_category() {
+        let mut t = TraceRecorder::new(true);
+        t.record(0, TraceCategory::Compute, "a", Time(0), Time(10));
+        t.record(1, TraceCategory::Compute, "b", Time(5), Time(25));
+        t.record(0, TraceCategory::Communication, "c", Time(10), Time(12));
+        assert_eq!(t.busy_by_category(TraceCategory::Compute), Time(30));
+        assert_eq!(t.busy_by_category(TraceCategory::Communication), Time(2));
+    }
+
+    #[test]
+    fn makespan_is_latest_end() {
+        let mut t = TraceRecorder::new(true);
+        t.record(0, TraceCategory::Compute, "a", Time(0), Time(10));
+        t.record(1, TraceCategory::Communication, "b", Time(3), Time(99));
+        assert_eq!(t.makespan(), Time(99));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut t = TraceRecorder::new(true);
+        t.record(2, TraceCategory::Resharding, "rs", Time::from_ns(1.0), Time::from_ns(2.0));
+        let csv = t.csv();
+        assert!(csv.starts_with("rank,category,label"));
+        assert!(csv.contains("2,reshard,rs,1.000,2.000"));
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_events() {
+        let mut t = TraceRecorder::new(true);
+        t.record(1, TraceCategory::Compute, "mlp-fwd", Time::from_us(1.0), Time::from_us(3.0));
+        t.record(2, TraceCategory::Communication, "tp-ar", Time::from_us(2.0), Time::from_us(5.0));
+        let json = crate::util::json::Json::parse(&t.chrome_trace()).unwrap();
+        let events = json.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(events[0].get("tid").unwrap().as_u64().unwrap(), 1);
+        assert!((events[1].get("dur").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn durations_collects_samples() {
+        let mut t = TraceRecorder::new(true);
+        t.record(0, TraceCategory::Communication, "f1", Time(0), Time::from_secs(1.0));
+        t.record(0, TraceCategory::Communication, "f2", Time(0), Time::from_secs(3.0));
+        let mut s = t.durations(TraceCategory::Communication);
+        assert_eq!(s.len(), 2);
+        assert!((s.max() - 3.0).abs() < 1e-9);
+    }
+}

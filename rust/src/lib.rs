@@ -1,0 +1,42 @@
+//! # HetSim — heterogeneity-aware LLM training simulator
+//!
+//! Reproduction of *"Simulating LLM training workloads for heterogeneous
+//! compute and network infrastructure"* (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas system. See `DESIGN.md` for the system inventory
+//! and the experiment index.
+//!
+//! Layer map:
+//! * [`engine`] — deterministic discrete-event simulation core (S1).
+//! * [`config`] — model / cluster / framework descriptions (S2, paper
+//!   abstractions A1 + A2, Tables 5–6).
+//! * [`workload`] — AICB-like workload generation and non-uniform
+//!   partitioning (S3, S4, component C1).
+//! * [`system`] — device groups, hybrid parallelism, resharding, the
+//!   heterogeneity-aware collective library and pipeline scheduler
+//!   (S5–S8, components C1–C3).
+//! * [`network`] — rail-only topology and flow-level network simulation
+//!   with per-interconnect delays (S9, component C4).
+//! * [`compute`] — per-layer compute-cost evaluation: PJRT-executed AOT
+//!   artifact with a native Rust mirror for cross-checking (S10, C4).
+//! * [`runtime`] — PJRT plumbing over the `xla` crate (S11).
+//! * [`simulator`] — the facade that ties the layers into one run.
+//! * [`baselines`] — SimAI-like homogeneous, Sailor-like analytical and
+//!   uniform-partitioning comparators (S12).
+//! * [`report`] — regenerates the paper's Table 1, Fig 5, Fig 6 (S13).
+//! * [`util`] — in-tree substrates for crates unavailable offline
+//!   (S14–S19: json, cli, rng, stats, units, tables, prop testing,
+//!   logging).
+
+pub mod baselines;
+pub mod compute;
+pub mod config;
+pub mod engine;
+pub mod network;
+pub mod report;
+pub mod runtime;
+pub mod simulator;
+pub mod system;
+pub mod util;
+pub mod workload;
+
+pub use simulator::{SimulationBuilder, SimulationReport};

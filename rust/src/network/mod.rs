@@ -1,0 +1,22 @@
+//! Heterogeneity-aware network layer (system S9, paper component
+//! **C4**).
+//!
+//! Replaces SimAI's ns-3 backend with a flow-level (fluid) network
+//! simulator over an explicit rail-only topology:
+//!
+//! * [`topology`] — builds the device/link graph from a
+//!   [`crate::config::ClusterSpec`]: GPUs, NVSwitch, PCIe channels,
+//!   NICs and rail switches, each link carrying the Table-5 bandwidth
+//!   and fixed per-hop delay (the paper's modified `QbbChannel`).
+//! * [`routing`] — rail-only path computation (paper Fig 2 cases a-c).
+//! * [`flow`] — max-min fair fluid flow simulation producing per-flow
+//!   completion times (FCTs, the paper's Fig-6 metric).
+//! * [`qbb`] — the jumbo-frame serialization-delay formula from §5.
+
+pub mod flow;
+pub mod qbb;
+pub mod routing;
+pub mod topology;
+
+pub use flow::{FlowId, FlowRecord, FlowSim};
+pub use topology::{LinkId, LinkKind, NodeRef, Topology};

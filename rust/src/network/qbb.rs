@@ -1,0 +1,61 @@
+//! The paper's per-hop serialization-delay model (§5):
+//!
+//! > we compute the PCIe and NVLink delays using the formula
+//! > `delay = jumbo_frame_size_bytes * 8 / unidirectional_bw`,
+//! > considering a jumbo frame size of 9200 bytes.
+//!
+//! This is the SimAI ns-3 `QbbChannel` modification reproduced as a
+//! plain function; Table 5's delay columns are exactly this formula
+//! evaluated at each interconnect's unidirectional bandwidth.
+
+use crate::util::units::{Bandwidth, Time};
+
+/// RoCE jumbo frame size used by the paper.
+pub const JUMBO_FRAME_BYTES: u64 = 9200;
+
+/// Serialization delay of one frame at `unidirectional_bw`.
+pub fn frame_delay(frame_bytes: u64, unidirectional_bw: Bandwidth) -> Time {
+    unidirectional_bw.transfer_time(frame_bytes)
+}
+
+/// The paper's Table-5 delays divide the quoted (bidirectional
+/// aggregate) NVLink bandwidth by two before applying the formula.
+pub fn nvlink_delay_from_aggregate(aggregate_bw: Bandwidth) -> Time {
+    frame_delay(JUMBO_FRAME_BYTES, aggregate_bw / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ampere_nvlink_delay_matches_table5() {
+        // 9200*8 / 2400 Gbps = 30.66 ns
+        let d = nvlink_delay_from_aggregate(Bandwidth::from_gbps(4800.0));
+        assert!((d.as_ns() - 30.66).abs() < 0.01, "{}", d.as_ns());
+    }
+
+    #[test]
+    fn hopper_nvlink_delay_matches_table5() {
+        // 9200*8 / 3600 Gbps = 20.44 ns
+        let d = nvlink_delay_from_aggregate(Bandwidth::from_gbps(7200.0));
+        assert!((d.as_ns() - 20.44).abs() < 0.01, "{}", d.as_ns());
+    }
+
+    #[test]
+    fn pcie_trip_delays_match_table5() {
+        // Gen4: 9200*8/256 Gbps = 287.5 ns (unidirectional 512/2)
+        let g4 = frame_delay(JUMBO_FRAME_BYTES, Bandwidth::from_gbps(512.0) / 2.0);
+        assert!((g4.as_ns() - 287.5).abs() < 0.01, "{}", g4.as_ns());
+        // Gen5: 9200*8/512 Gbps = 143.75 ns
+        let g5 = frame_delay(JUMBO_FRAME_BYTES, Bandwidth::from_gbps(1024.0) / 2.0);
+        assert!((g5.as_ns() - 143.75).abs() < 0.01, "{}", g5.as_ns());
+    }
+
+    #[test]
+    fn delay_scales_inverse_with_bandwidth() {
+        let fast = frame_delay(9200, Bandwidth::from_gbps(400.0));
+        let slow = frame_delay(9200, Bandwidth::from_gbps(200.0));
+        assert!((slow.as_ns() / fast.as_ns() - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,149 @@
+//! Rail-only route computation (paper Fig 2).
+//!
+//! Three cases:
+//! * (a) intra-node: GPU → NVSwitch → GPU.
+//! * (b) inter-node, same local rank `r`: GPU → NIC (PCIe, 2 trips) →
+//!   rail switch `r` → NIC → GPU.
+//! * (c) inter-node, different local rank: first an NVLink hop to the
+//!   source-node GPU that sits on the destination's rail, then case (b)
+//!   along that rail. (Rail-only design: no traffic crosses aggregation
+//!   switches, paper §2.)
+
+use super::topology::{LinkId, Topology};
+
+/// A route is the ordered list of directed links a flow traverses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Route {
+    pub links: Vec<LinkId>,
+}
+
+impl Route {
+    pub fn hops(&self) -> usize {
+        self.links.len()
+    }
+}
+
+/// Compute the rail-only route between two global ranks.
+/// Returns an empty route for self-communication (zero-copy).
+pub fn route(topo: &Topology, src_rank: u32, dst_rank: u32) -> Route {
+    if src_rank == dst_rank {
+        return Route { links: vec![] };
+    }
+    let (sn, sl) = topo.locate(src_rank);
+    let (dn, dl) = topo.locate(dst_rank);
+
+    if sn == dn {
+        // (a) intra-node via NVSwitch
+        return Route {
+            links: vec![topo.l_gpu_to_nvsw(sn, sl), topo.l_nvsw_to_gpu(sn, dl)],
+        };
+    }
+
+    let mut links = Vec::with_capacity(6);
+    let rail = dl; // flows ride the destination's rail
+    if sl != dl {
+        // (c) NVLink hop to the GPU on the destination rail first
+        links.push(topo.l_gpu_to_nvsw(sn, sl));
+        links.push(topo.l_nvsw_to_gpu(sn, rail));
+    }
+    // (b) up the rail
+    links.push(topo.l_gpu_to_nic(sn, rail));
+    links.push(topo.l_nic_up(sn, rail));
+    links.push(topo.l_nic_down(dn, rail));
+    links.push(topo.l_nic_to_gpu(dn, dl));
+    Route { links }
+}
+
+/// Sum of fixed per-hop delays along a route (the QbbChannel part of a
+/// flow's completion time).
+pub fn fixed_delay(topo: &Topology, r: &Route) -> crate::util::units::Time {
+    crate::util::units::Time(r.links.iter().map(|l| topo.link(*l).delay.as_ps()).sum())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::network::topology::{LinkKind, NodeRef};
+
+    fn topo(nodes: u32) -> Topology {
+        Topology::build(&presets::cluster("ampere", nodes).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn self_route_is_empty() {
+        let t = topo(1);
+        assert_eq!(route(&t, 3, 3).hops(), 0);
+    }
+
+    #[test]
+    fn intra_node_uses_nvlink_only() {
+        let t = topo(2);
+        let r = route(&t, 0, 7); // fig 2 case (a)
+        assert_eq!(r.hops(), 2);
+        for l in &r.links {
+            assert_eq!(t.link(*l).kind, LinkKind::NvLink);
+        }
+    }
+
+    #[test]
+    fn inter_node_same_rail_skips_nvlink() {
+        let t = topo(2);
+        let r = route(&t, 7, 15); // fig 2 case (b): local rank 7 both sides
+        assert_eq!(r.hops(), 4);
+        let kinds: Vec<LinkKind> = r.links.iter().map(|l| t.link(*l).kind).collect();
+        assert_eq!(kinds, vec![LinkKind::Pcie, LinkKind::NicUp, LinkKind::NicDown, LinkKind::Pcie]);
+    }
+
+    #[test]
+    fn inter_node_cross_rail_adds_nvlink_hop() {
+        let t = topo(2);
+        let r = route(&t, 7, 8); // fig 2 case (c): local 7 -> local 0
+        assert_eq!(r.hops(), 6);
+        let kinds: Vec<LinkKind> = r.links.iter().map(|l| t.link(*l).kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                LinkKind::NvLink,
+                LinkKind::NvLink,
+                LinkKind::Pcie,
+                LinkKind::NicUp,
+                LinkKind::NicDown,
+                LinkKind::Pcie
+            ]
+        );
+        // the rail used is the destination's local rank (0)
+        match t.link(r.links[4]).to {
+            NodeRef::Nic { node, local } => {
+                assert_eq!((node, local), (1, 0));
+            }
+            other => panic!("unexpected endpoint {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fixed_delay_counts_every_hop() {
+        let t = topo(2);
+        let r = route(&t, 7, 15);
+        // pcie(2x287.5) + nic(368) + switch(300)+nic(368) + pcie(2x287.5)
+        let expect = 2.0 * 287.5 + 368.0 + (300.0 + 368.0) + 2.0 * 287.5;
+        assert!((fixed_delay(&t, &r).as_ns() - expect).abs() < 0.01);
+    }
+
+    #[test]
+    fn routes_stay_on_destination_rail() {
+        let t = topo(4);
+        for dst_local in 0..8u32 {
+            let r = route(&t, 0, t.rank_of(3, dst_local));
+            // every NicUp link must sit on the destination rail
+            for l in &r.links {
+                if t.link(*l).kind == LinkKind::NicUp {
+                    match t.link(*l).from {
+                        NodeRef::Nic { local, .. } => assert_eq!(local, dst_local),
+                        _ => panic!(),
+                    }
+                }
+            }
+        }
+    }
+}

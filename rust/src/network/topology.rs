@@ -1,0 +1,224 @@
+//! Rail-only topology graph (paper Fig 2 + abstraction A2).
+//!
+//! Devices: per node — `gpus_per_node` GPUs, one NVSwitch, one NIC per
+//! GPU (rail-optimized); per cluster — one rail switch per local rank.
+//! Links are **directed** with a bandwidth (shared by flows) and a
+//! fixed per-hop delay (paid once per flow, the QbbChannel model):
+//!
+//! * GPU ↔ NVSwitch: NVLink bandwidth / delay.
+//! * GPU ↔ its NIC: PCIe bandwidth, delay = 2 PCIe trips (GPU→PCIe
+//!   switch→NIC, paper §5) — the dedicated PCI channel of the rail
+//!   design, so it is not shared between GPUs.
+//! * NIC ↔ rail switch `r`: NIC bandwidth; NIC processing delay on the
+//!   egress hop, switch + NIC processing delay on the ingress hop.
+
+use crate::config::cluster::ClusterSpec;
+use crate::util::units::{Bandwidth, Time};
+
+/// A device in the topology graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NodeRef {
+    Gpu { node: u32, local: u32 },
+    NvSwitch { node: u32 },
+    Nic { node: u32, local: u32 },
+    RailSwitch { local: u32 },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    NvLink,
+    Pcie,
+    NicUp,   // NIC -> rail switch
+    NicDown, // rail switch -> NIC
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LinkId(pub u32);
+
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub from: NodeRef,
+    pub to: NodeRef,
+    pub kind: LinkKind,
+    pub bw: Bandwidth,
+    pub delay: Time,
+}
+
+/// The built graph plus index structures for O(1) route assembly.
+#[derive(Debug)]
+pub struct Topology {
+    pub links: Vec<Link>,
+    pub num_nodes: u32,
+    pub gpus_per_node: u32,
+    // index: [node][local] -> link ids
+    gpu_to_nvsw: Vec<LinkId>,
+    nvsw_to_gpu: Vec<LinkId>,
+    gpu_to_nic: Vec<LinkId>,
+    nic_to_gpu: Vec<LinkId>,
+    nic_up: Vec<LinkId>,
+    nic_down: Vec<LinkId>,
+}
+
+impl Topology {
+    pub fn build(cluster: &ClusterSpec) -> anyhow::Result<Topology> {
+        cluster.validate()?;
+        let num_nodes = cluster.nodes.len() as u32;
+        let gpn = cluster.gpus_per_node();
+        let mut t = Topology {
+            links: Vec::new(),
+            num_nodes,
+            gpus_per_node: gpn,
+            gpu_to_nvsw: Vec::new(),
+            nvsw_to_gpu: Vec::new(),
+            gpu_to_nic: Vec::new(),
+            nic_to_gpu: Vec::new(),
+            nic_up: Vec::new(),
+            nic_down: Vec::new(),
+        };
+        for (n, spec) in cluster.nodes.iter().enumerate() {
+            let n = n as u32;
+            let ic = &spec.interconnect;
+            for g in 0..gpn {
+                let gpu = NodeRef::Gpu { node: n, local: g };
+                let nvsw = NodeRef::NvSwitch { node: n };
+                let nic = NodeRef::Nic { node: n, local: g };
+                let rail = NodeRef::RailSwitch { local: g };
+                // NVLink both directions (unidirectional share of the
+                // aggregate bandwidth each way).
+                let nv_bw = ic.nvlink_bw / 2.0;
+                let id = t.add(gpu, nvsw, LinkKind::NvLink, nv_bw, ic.nvlink_delay);
+                t.gpu_to_nvsw.push(id);
+                let id = t.add(nvsw, gpu, LinkKind::NvLink, nv_bw, ic.nvlink_delay);
+                t.nvsw_to_gpu.push(id);
+                // Dedicated PCIe channel to the NIC: 2 trips of latency.
+                let pcie_bw = ic.pcie_bw / 2.0;
+                let pcie_delay = Time(ic.pcie_latency.as_ps() * 2);
+                let id = t.add(gpu, nic, LinkKind::Pcie, pcie_bw, pcie_delay);
+                t.gpu_to_nic.push(id);
+                let id = t.add(nic, gpu, LinkKind::Pcie, pcie_bw, pcie_delay);
+                t.nic_to_gpu.push(id);
+                // NIC <-> rail switch.
+                let id = t.add(nic, rail, LinkKind::NicUp, ic.nic_bw, ic.nic_processing_delay);
+                t.nic_up.push(id);
+                let down_delay = cluster.switch_delay + ic.nic_processing_delay;
+                let id = t.add(rail, nic, LinkKind::NicDown, ic.nic_bw, down_delay);
+                t.nic_down.push(id);
+            }
+        }
+        Ok(t)
+    }
+
+    fn add(&mut self, from: NodeRef, to: NodeRef, kind: LinkKind, bw: Bandwidth, delay: Time) -> LinkId {
+        let id = LinkId(self.links.len() as u32);
+        self.links.push(Link { from, to, kind, bw, delay });
+        id
+    }
+
+    fn idx(&self, node: u32, local: u32) -> usize {
+        (node * self.gpus_per_node + local) as usize
+    }
+
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id.0 as usize]
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn total_gpus(&self) -> u32 {
+        self.num_nodes * self.gpus_per_node
+    }
+
+    /// Decompose a global rank.
+    pub fn locate(&self, rank: u32) -> (u32, u32) {
+        (rank / self.gpus_per_node, rank % self.gpus_per_node)
+    }
+
+    pub fn rank_of(&self, node: u32, local: u32) -> u32 {
+        node * self.gpus_per_node + local
+    }
+
+    // -- link lookups used by routing -------------------------------------
+    pub fn l_gpu_to_nvsw(&self, node: u32, local: u32) -> LinkId {
+        self.gpu_to_nvsw[self.idx(node, local)]
+    }
+    pub fn l_nvsw_to_gpu(&self, node: u32, local: u32) -> LinkId {
+        self.nvsw_to_gpu[self.idx(node, local)]
+    }
+    pub fn l_gpu_to_nic(&self, node: u32, local: u32) -> LinkId {
+        self.gpu_to_nic[self.idx(node, local)]
+    }
+    pub fn l_nic_to_gpu(&self, node: u32, local: u32) -> LinkId {
+        self.nic_to_gpu[self.idx(node, local)]
+    }
+    pub fn l_nic_up(&self, node: u32, local: u32) -> LinkId {
+        self.nic_up[self.idx(node, local)]
+    }
+    pub fn l_nic_down(&self, node: u32, local: u32) -> LinkId {
+        self.nic_down[self.idx(node, local)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn link_counts_scale_with_cluster() {
+        let c = presets::cluster("ampere", 2).unwrap();
+        let t = Topology::build(&c).unwrap();
+        // per GPU: 2 nvlink + 2 pcie + 2 nic = 6 directed links
+        assert_eq!(t.num_links(), 2 * 8 * 6);
+        assert_eq!(t.total_gpus(), 16);
+    }
+
+    #[test]
+    fn nvlink_bandwidth_is_unidirectional_half() {
+        let c = presets::cluster("ampere", 1).unwrap();
+        let t = Topology::build(&c).unwrap();
+        let l = t.link(t.l_gpu_to_nvsw(0, 0));
+        assert!((l.bw.gbps() - 2400.0).abs() < 1e-6);
+        assert_eq!(l.kind, LinkKind::NvLink);
+    }
+
+    #[test]
+    fn pcie_delay_is_two_trips() {
+        let c = presets::cluster("hopper", 1).unwrap();
+        let t = Topology::build(&c).unwrap();
+        let l = t.link(t.l_gpu_to_nic(0, 3));
+        assert!((l.delay.as_ns() - 2.0 * 143.75).abs() < 0.01);
+    }
+
+    #[test]
+    fn hetero_nodes_carry_their_own_interconnect() {
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let t = Topology::build(&c).unwrap();
+        let ampere_nv = t.link(t.l_gpu_to_nvsw(0, 0));
+        let hopper_nv = t.link(t.l_gpu_to_nvsw(1, 0));
+        assert!((ampere_nv.delay.as_ns() - 30.66).abs() < 0.01);
+        assert!((hopper_nv.delay.as_ns() - 20.44).abs() < 0.01);
+        assert!(hopper_nv.bw > ampere_nv.bw);
+    }
+
+    #[test]
+    fn rank_locate_roundtrip() {
+        let c = presets::cluster("ampere", 4).unwrap();
+        let t = Topology::build(&c).unwrap();
+        for rank in 0..t.total_gpus() {
+            let (n, l) = t.locate(rank);
+            assert_eq!(t.rank_of(n, l), rank);
+        }
+    }
+
+    #[test]
+    fn nic_down_includes_switch_delay() {
+        let c = presets::cluster("ampere", 1).unwrap();
+        let t = Topology::build(&c).unwrap();
+        let up = t.link(t.l_nic_up(0, 0));
+        let down = t.link(t.l_nic_down(0, 0));
+        assert!(down.delay > up.delay);
+        assert!((down.delay.as_ns() - (300.0 + 368.0)).abs() < 0.01);
+    }
+}

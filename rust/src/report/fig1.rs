@@ -1,0 +1,105 @@
+//! **Figure 1**: evolution of AI cluster hardware — the paper's intro
+//! motivation that FLOPS grows ~3.0x/year while interconnect bandwidth
+//! grows ~1.4x/year, making homogeneous fleet refreshes financially
+//! impractical. Regenerated from the generation presets.
+
+use crate::config::presets;
+use crate::util::table::{fmt_sig, Table};
+
+/// Release years used for the growth-rate fit.
+const GENERATIONS: &[(&str, &str, f64)] = &[
+    ("V100", "volta", 2017.0),
+    ("A100", "ampere", 2020.0),
+    ("H100", "hopper", 2022.0),
+    ("B200", "blackwell", 2024.0),
+];
+
+#[derive(Debug, Clone)]
+pub struct Fig1Row {
+    pub gpu: &'static str,
+    pub year: f64,
+    pub tflops: f64,
+    pub mem_bw_gbs: f64,
+    pub nvlink_gbps: f64,
+    pub nic_gbps: f64,
+}
+
+pub fn compute() -> anyhow::Result<Vec<Fig1Row>> {
+    let mut rows = Vec::new();
+    for (gpu, arch, year) in GENERATIONS {
+        let g = presets::gpu(gpu)?;
+        let ic = presets::interconnect(arch)?;
+        rows.push(Fig1Row {
+            gpu,
+            year: *year,
+            tflops: g.peak_flops / 1e12,
+            mem_bw_gbs: g.mem_bw / 1e9,
+            nvlink_gbps: ic.nvlink_bw.gbps(),
+            nic_gbps: ic.nic_bw.gbps(),
+        });
+    }
+    Ok(rows)
+}
+
+/// Compound annual growth rate between the first and last generation.
+pub fn cagr(first: (f64, f64), last: (f64, f64)) -> f64 {
+    let (y0, v0) = first;
+    let (y1, v1) = last;
+    (v1 / v0).powf(1.0 / (y1 - y0))
+}
+
+pub fn render(rows: &[Fig1Row]) -> Table {
+    let mut t = Table::new(
+        "Figure 1 — evolution of AI cluster hardware (per generation preset)",
+        &["GPU", "year", "peak TFLOPS", "HBM GB/s", "NVLink Gbps", "NIC Gbps"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.gpu.to_string(),
+            format!("{:.0}", r.year),
+            fmt_sig(r.tflops),
+            fmt_sig(r.mem_bw_gbs),
+            fmt_sig(r.nvlink_gbps),
+            fmt_sig(r.nic_gbps),
+        ]);
+    }
+    t
+}
+
+/// The paper's headline growth rates, computed from the presets.
+pub fn growth_summary(rows: &[Fig1Row]) -> String {
+    let f = rows.first().unwrap();
+    let l = rows.last().unwrap();
+    let flops = cagr((f.year, f.tflops), (l.year, l.tflops));
+    let net = cagr((f.year, f.nvlink_gbps), (l.year, l.nvlink_gbps));
+    format!(
+        "compute grows {flops:.2}x/year vs interconnect {net:.2}x/year (paper: 3.0x vs 1.4x)"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn growth_rates_match_paper_shape() {
+        let rows = compute().unwrap();
+        let f = rows.first().unwrap();
+        let l = rows.last().unwrap();
+        let flops = cagr((f.year, f.tflops), (l.year, l.tflops));
+        let net = cagr((f.year, f.nvlink_gbps), (l.year, l.nvlink_gbps));
+        // paper Fig 1: ~3.0x/yr compute vs ~1.4x/yr interconnect
+        assert!(flops > net, "compute must outgrow interconnect");
+        assert!((1.2..2.2).contains(&net), "net cagr {net}");
+        assert!((1.4..3.5).contains(&flops), "flops cagr {flops}");
+    }
+
+    #[test]
+    fn table_has_all_generations() {
+        let rows = compute().unwrap();
+        assert_eq!(rows.len(), 4);
+        let t = render(&rows);
+        assert!(t.markdown().contains("B200"));
+        assert!(growth_summary(&rows).contains("x/year"));
+    }
+}

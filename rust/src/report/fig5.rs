@@ -1,0 +1,139 @@
+//! **Figure 5**: per-layer compute time (Embedding / Attention /
+//! MLP-or-MoE) for GPT-6.7B, GPT-13B and Mixtral-8x7B across H100 and
+//! A100, one forward+backward pass at the paper's Table-6 deployment.
+//!
+//! Paper observations this must reproduce:
+//! * MLP degradation on A100: 3–4×,
+//! * attention degradation: up to 1.9×,
+//! * embedding degradation: ~36.1× (but tiny absolute time — a poor
+//!   optimization target, §5 Q1).
+
+use crate::compute::cost::LayerWork;
+use crate::compute::table::CostTable;
+use crate::config::model::LayerKind;
+use crate::config::presets;
+use crate::util::table::{fmt_sig, Table};
+
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub model: String,
+    pub layer: &'static str,
+    pub h100_ms: f64,
+    pub a100_ms: f64,
+    pub degradation: f64,
+}
+
+/// Compute the Fig-5 series through a cost table (native or PJRT).
+pub fn compute(table: &mut CostTable) -> anyhow::Result<Vec<Fig5Row>> {
+    let mut rows = Vec::new();
+    let gpus = [presets::gpu("H100")?, presets::gpu("A100")?];
+    for name in ["gpt-6.7b", "gpt-13b", "mixtral-8x7b"] {
+        let m = presets::model(name)?;
+        let dep = presets::deployment(name)?;
+        let (n_experts, top_k) = match m.moe {
+            Some(x) => (x.num_experts as f64, x.top_k as f64),
+            None => (0.0, 0.0),
+        };
+        let mlp_kind = if m.moe.is_some() { LayerKind::Moe } else { LayerKind::Mlp };
+        let kinds = [
+            (LayerKind::Embedding, "embedding"),
+            (LayerKind::Attention, "attention"),
+            (mlp_kind, if m.moe.is_some() { "moe" } else { "mlp" }),
+        ];
+        for (kind, label) in kinds {
+            let mut per_gpu = [0.0f64; 2];
+            for (gi, gpu) in gpus.iter().enumerate() {
+                let mut total = 0.0;
+                for is_bwd in [false, true] {
+                    let work = LayerWork {
+                        kind,
+                        hidden: m.hidden_size as f64,
+                        ffn: m.ffn_hidden as f64,
+                        heads: m.num_heads as f64,
+                        seq: m.seq_len as f64,
+                        mbs: m.micro_batch as f64,
+                        n_experts,
+                        top_k,
+                        tp: dep.tp as f64,
+                        is_bwd,
+                    };
+                    table.register(&work, gpu);
+                    table.evaluate()?;
+                    total += table.time(&work, gpu)?.as_secs();
+                }
+                per_gpu[gi] = total * 1e3; // ms
+            }
+            rows.push(Fig5Row {
+                model: m.name.clone(),
+                layer: label,
+                h100_ms: per_gpu[0],
+                a100_ms: per_gpu[1],
+                degradation: per_gpu[1] / per_gpu[0],
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn render(rows: &[Fig5Row]) -> Table {
+    let mut t = Table::new(
+        "Figure 5 — per-layer compute time, one fwd+bwd pass (paper deployment)",
+        &["model", "layer", "H100 (ms)", "A100 (ms)", "A100/H100"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.model.clone(),
+            r.layer.to_string(),
+            fmt_sig(r.h100_ms),
+            fmt_sig(r.a100_ms),
+            format!("{:.2}x", r.degradation),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shape_matches_paper() {
+        let mut table = CostTable::native();
+        let rows = compute(&mut table).unwrap();
+        assert_eq!(rows.len(), 9); // 3 models x 3 layers
+        for r in &rows {
+            match r.layer {
+                "mlp" | "moe" => {
+                    assert!((3.0..4.0).contains(&r.degradation), "{}: {}", r.model, r.degradation)
+                }
+                "attention" => {
+                    assert!((1.5..1.95).contains(&r.degradation), "{}: {}", r.model, r.degradation)
+                }
+                "embedding" => {
+                    assert!((30.0..40.0).contains(&r.degradation), "{}: {}", r.model, r.degradation)
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn embedding_absolute_time_small() {
+        let mut table = CostTable::native();
+        let rows = compute(&mut table).unwrap();
+        for m in ["GPT-6.7B", "GPT-13B"] {
+            let emb = rows.iter().find(|r| r.model == m && r.layer == "embedding").unwrap();
+            let mlp = rows.iter().find(|r| r.model == m && r.layer == "mlp").unwrap();
+            assert!(emb.h100_ms < mlp.h100_ms, "{m}");
+        }
+    }
+
+    #[test]
+    fn render_emits_all_rows() {
+        let mut table = CostTable::native();
+        let rows = compute(&mut table).unwrap();
+        let t = render(&rows);
+        assert_eq!(t.rows.len(), 9);
+        assert!(t.markdown().contains("Mixtral"));
+    }
+}

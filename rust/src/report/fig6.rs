@@ -1,0 +1,191 @@
+//! **Figure 6**: FCT distribution (CCDF) of all collective flows in one
+//! iteration, for Ampere, Hopper and Ampere+Hopper (50:50) clusters.
+//!
+//! As in the paper's prototype, this experiment exercises *interconnect*
+//! heterogeneity ("the Ampere and Hopper configuration refers to only
+//! the interconnect simulation"): identical workloads run over the three
+//! interconnect configurations, and the FCT tail shows the impact of
+//! mixing NVLink/PCIe generations.
+//!
+//! The cluster is scaled by `nodes` (paper: 16/32 nodes; default 4 keeps
+//! bench runtime sane on one core — the caps are printed, not silent).
+
+use std::collections::HashMap;
+
+use crate::config::framework::ParallelismSpec;
+use crate::config::presets;
+use crate::simulator::SimulationBuilder;
+use crate::util::stats::Samples;
+use crate::util::table::{fmt_sig, Table};
+use crate::workload::aicb::WorkloadOptions;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterKind {
+    Ampere,
+    Hopper,
+    Hetero5050,
+}
+
+impl ClusterKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ClusterKind::Ampere => "Ampere",
+            ClusterKind::Hopper => "Hopper",
+            ClusterKind::Hetero5050 => "Ampere+Hopper(50:50)",
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Fig6Cell {
+    pub model: String,
+    pub cluster: ClusterKind,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub max_us: f64,
+    pub flows: usize,
+    pub ccdf: Vec<(f64, f64)>,
+}
+
+/// One model / one cluster configuration FCT distribution.
+pub fn run_cell(
+    model_name: &str,
+    kind: ClusterKind,
+    nodes: u32,
+    microbatch_limit: Option<u64>,
+) -> anyhow::Result<Fig6Cell> {
+    anyhow::ensure!(nodes >= 2 && nodes % 2 == 0, "fig6 needs an even node count >= 2");
+    // Paper Fig 6 exercises *interconnect* heterogeneity only ("the
+    // Ampere and Hopper configuration refers to only the interconnect
+    // simulation"): compute is identical (A100) in all three cells so
+    // the FCT differences are attributable to NVLink/PCIe generations.
+    let cluster = match kind {
+        ClusterKind::Ampere => {
+            presets::cluster_hetero_interconnect("A100", "ampere", nodes, "ampere", 0)?
+        }
+        ClusterKind::Hopper => {
+            presets::cluster_hetero_interconnect("A100", "hopper", nodes, "hopper", 0)?
+        }
+        ClusterKind::Hetero5050 => {
+            presets::cluster_hetero_interconnect("A100", "ampere", nodes / 2, "hopper", nodes / 2)?
+        }
+    };
+    let model = presets::model(model_name)?;
+    let dep = presets::deployment(model_name)?;
+    // keep the paper's TP degree, fill the cluster with DP
+    let world = cluster.total_gpus();
+    anyhow::ensure!(world % dep.tp == 0, "world {world} not divisible by tp {}", dep.tp);
+    let par = ParallelismSpec { tp: dep.tp, pp: 1, dp: world / dep.tp };
+    let report = SimulationBuilder::new(model, cluster)
+        .parallelism(par)
+        .workload_options(WorkloadOptions { microbatch_limit, ..Default::default() })
+        .build()?
+        .run_iteration()?;
+    let mut all: Samples = report.fct_all;
+    Ok(Fig6Cell {
+        model: report.model_name,
+        cluster: kind,
+        p50_us: all.percentile(50.0) * 1e6,
+        p99_us: all.percentile(99.0) * 1e6,
+        p999_us: all.percentile(99.9) * 1e6,
+        max_us: all.max() * 1e6,
+        flows: all.len(),
+        ccdf: all.ccdf(200),
+    })
+}
+
+/// Full Fig-6 grid: 3 models x 3 cluster kinds.
+pub fn compute(
+    nodes: u32,
+    microbatch_limit: Option<u64>,
+    models: &[&str],
+) -> anyhow::Result<Vec<Fig6Cell>> {
+    let mut cells = Vec::new();
+    for m in models {
+        for kind in [ClusterKind::Ampere, ClusterKind::Hopper, ClusterKind::Hetero5050] {
+            cells.push(run_cell(m, kind, nodes, microbatch_limit)?);
+        }
+    }
+    Ok(cells)
+}
+
+pub fn render(cells: &[Fig6Cell]) -> Table {
+    let mut t = Table::new(
+        "Figure 6 — FCT distribution of collective flows (one iteration)",
+        &["model", "cluster", "flows", "p50 (us)", "p99 (us)", "p99.9 (us)", "max (us)", "tail vs Ampere"],
+    );
+    // index Ampere tails for the degradation column
+    let mut ampere_tail: HashMap<&str, f64> = HashMap::new();
+    for c in cells {
+        if c.cluster == ClusterKind::Ampere {
+            ampere_tail.insert(c.model.as_str(), c.p999_us);
+        }
+    }
+    for c in cells {
+        let vs = ampere_tail
+            .get(c.model.as_str())
+            .map(|a| format!("{:+.1}%", (c.p999_us / a - 1.0) * 100.0))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            c.model.clone(),
+            c.cluster.name().to_string(),
+            c.flows.to_string(),
+            fmt_sig(c.p50_us),
+            fmt_sig(c.p99_us),
+            fmt_sig(c.p999_us),
+            fmt_sig(c.max_us),
+            vs,
+        ]);
+    }
+    t
+}
+
+/// CCDF CSV (one curve per model/cluster) for plotting.
+pub fn ccdf_csv(cells: &[Fig6Cell]) -> String {
+    let mut s = String::from("model,cluster,fct_us,ccdf\n");
+    for c in cells {
+        for (v, p) in &c.ccdf {
+            s.push_str(&format!("{},{},{:.3},{:.6}\n", c.model, c.cluster.name(), v * 1e6, p));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_fig6_cell_runs() {
+        let cell = run_cell("gpt-6.7b", ClusterKind::Hopper, 2, Some(1)).unwrap();
+        assert!(cell.flows > 0);
+        assert!(cell.p50_us > 0.0);
+        assert!(cell.p999_us >= cell.p50_us);
+    }
+
+    #[test]
+    fn hetero_tail_at_least_hopper_tail() {
+        let hopper = run_cell("gpt-6.7b", ClusterKind::Hopper, 2, Some(1)).unwrap();
+        let hetero = run_cell("gpt-6.7b", ClusterKind::Hetero5050, 2, Some(1)).unwrap();
+        assert!(
+            hetero.p999_us >= hopper.p999_us,
+            "hetero {} < hopper {}",
+            hetero.p999_us,
+            hopper.p999_us
+        );
+    }
+
+    #[test]
+    fn odd_node_count_rejected() {
+        assert!(run_cell("gpt-6.7b", ClusterKind::Ampere, 3, Some(1)).is_err());
+    }
+
+    #[test]
+    fn ccdf_csv_well_formed() {
+        let cell = run_cell("gpt-6.7b", ClusterKind::Ampere, 2, Some(1)).unwrap();
+        let csv = ccdf_csv(&[cell]);
+        assert!(csv.starts_with("model,cluster,fct_us,ccdf\n"));
+        assert!(csv.lines().count() > 2);
+    }
+}

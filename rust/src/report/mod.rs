@@ -1,0 +1,22 @@
+//! Regeneration of the paper's evaluation artifacts (system S13):
+//! * [`fig5`] — per-layer compute time across GPU generations,
+//! * [`fig6`] — FCT distribution of collectives on homogeneous vs
+//!   heterogeneous clusters,
+//! * [`table1`] — exposed-communication characteristics of DP/TP/PP for
+//!   Llama-2 70B.
+//!
+//! Each module produces a [`crate::util::table::Table`] (markdown to
+//! stdout, CSV into `results/`) so EXPERIMENTS.md entries are
+//! copy-pasteable and diffs are reviewable.
+
+pub mod fig1;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+
+use std::path::PathBuf;
+
+/// Default results directory (next to the repo root).
+pub fn results_dir() -> PathBuf {
+    std::env::var("HETSIM_RESULTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("results"))
+}

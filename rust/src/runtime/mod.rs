@@ -1,0 +1,140 @@
+//! PJRT runtime (system S11): loads the AOT artifacts produced by
+//! `make artifacts` and executes them on the PJRT CPU client via the
+//! `xla` crate. This is the only place Rust touches XLA; Python is never
+//! on the simulation path.
+//!
+//! Interchange format is HLO **text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): jax ≥ 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+
+pub mod pjrt_cost;
+
+pub use pjrt_cost::{PjrtCollModel, PjrtCostModel};
+
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub source: PathBuf,
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable").field("source", &self.source).finish()
+    }
+}
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime").field("platform", &self.client.platform_name()).finish()
+    }
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client creation failed: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load HLO text from `path`, compile, return the executable.
+    pub fn load_hlo_text(&self, path: &Path) -> anyhow::Result<Executable> {
+        anyhow::ensure!(
+            path.exists(),
+            "artifact {} not found — run `make artifacts` first",
+            path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {} failed: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {} failed: {e}", path.display()))?;
+        Ok(Executable { exe, source: path.to_path_buf() })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 matrix inputs `(data, rows, cols)`. The artifact
+    /// returns a 1-tuple (lowered with `return_tuple=True`); we unwrap
+    /// it and return the flat f32 output.
+    pub fn run_f32(&self, inputs: &[(&[f32], usize, usize)]) -> anyhow::Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, rows, cols) in inputs {
+            anyhow::ensure!(data.len() == rows * cols, "input shape mismatch");
+            let lit = xla::Literal::vec1(data)
+                .reshape(&[*rows as i64, *cols as i64])
+                .map_err(|e| anyhow::anyhow!("reshape failed: {e}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute failed: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("readback failed: {e}"))?;
+        let tuple = out.to_tuple1().map_err(|e| anyhow::anyhow!("untuple failed: {e}"))?;
+        tuple.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec failed: {e}"))
+    }
+}
+
+/// Locate the artifacts directory: `$HETSIM_ARTIFACTS`, else walk up
+/// from the current directory looking for `artifacts/`.
+pub fn artifacts_dir() -> anyhow::Result<PathBuf> {
+    if let Ok(dir) = std::env::var("HETSIM_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        anyhow::ensure!(p.is_dir(), "HETSIM_ARTIFACTS={} is not a directory", p.display());
+        return Ok(p);
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("cost_model.hlo.txt").exists() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            anyhow::bail!(
+                "artifacts/ not found (run `make artifacts`, or set HETSIM_ARTIFACTS)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full PJRT round-trip tests live in rust/tests/integration_runtime.rs
+    // (they need `make artifacts`). Here: path resolution only.
+
+    #[test]
+    fn artifacts_dir_env_override_rejects_missing() {
+        // Use a scoped fake env var via direct call.
+        std::env::set_var("HETSIM_ARTIFACTS", "/definitely/not/here");
+        let r = artifacts_dir();
+        std::env::remove_var("HETSIM_ARTIFACTS");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn load_missing_artifact_errors() {
+        let rt = Runtime::cpu().unwrap();
+        let err = rt.load_hlo_text(Path::new("/no/such/file.hlo.txt")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,123 @@
+//! PJRT-backed cost evaluators: the production [`CostEvaluator`] that
+//! runs the AOT-compiled Layer-1/2 cost graphs.
+
+use std::path::Path;
+
+use super::{artifacts_dir, Executable, Runtime};
+use crate::compute::table::CostEvaluator;
+
+/// Artifact batch geometry — must match `python/compile/model.py`
+/// (asserted against artifacts/manifest.json on load).
+pub const COST_ROWS: usize = 256;
+pub const LAYER_FIELDS: usize = 10;
+pub const GPU_FIELDS: usize = 8;
+pub const COLL_ROWS: usize = 512;
+pub const COLL_FIELDS: usize = 8;
+
+/// Executes `artifacts/cost_model.hlo.txt`.
+pub struct PjrtCostModel {
+    exe: Executable,
+}
+
+impl std::fmt::Debug for PjrtCostModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtCostModel").field("source", &self.exe.source).finish()
+    }
+}
+
+fn check_manifest(dir: &Path) -> anyhow::Result<()> {
+    let mpath = dir.join("manifest.json");
+    if !mpath.exists() {
+        return Ok(()); // older artifact sets: geometry asserted at execute
+    }
+    let text = std::fs::read_to_string(&mpath)?;
+    let v = crate::util::json::Json::parse(&text)?;
+    let cm = v.req("cost_model")?;
+    anyhow::ensure!(cm.req_u64("rows")? as usize == COST_ROWS, "cost rows mismatch");
+    anyhow::ensure!(cm.req_u64("layer_fields")? as usize == LAYER_FIELDS, "layer fields mismatch");
+    anyhow::ensure!(cm.req_u64("gpu_fields")? as usize == GPU_FIELDS, "gpu fields mismatch");
+    let co = v.req("coll_model")?;
+    anyhow::ensure!(co.req_u64("rows")? as usize == COLL_ROWS, "coll rows mismatch");
+    anyhow::ensure!(co.req_u64("coll_fields")? as usize == COLL_FIELDS, "coll fields mismatch");
+    Ok(())
+}
+
+impl PjrtCostModel {
+    /// Load from the default artifacts directory.
+    pub fn load() -> anyhow::Result<Self> {
+        let dir = artifacts_dir()?;
+        Self::load_from(&dir)
+    }
+
+    pub fn load_from(dir: &Path) -> anyhow::Result<Self> {
+        check_manifest(dir)?;
+        let rt = Runtime::cpu()?;
+        let exe = rt.load_hlo_text(&dir.join("cost_model.hlo.txt"))?;
+        Ok(PjrtCostModel { exe })
+    }
+}
+
+impl CostEvaluator for PjrtCostModel {
+    fn evaluate_batch(&mut self, layers: &[[f32; 10]], gpus: &[[f32; 8]]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(layers.len() == gpus.len(), "row-aligned inputs required");
+        anyhow::ensure!(layers.len() <= COST_ROWS, "batch exceeds artifact rows");
+        // zero-pad to the artifact's static shape
+        let mut lbuf = vec![0f32; COST_ROWS * LAYER_FIELDS];
+        let mut gbuf = vec![0f32; COST_ROWS * GPU_FIELDS];
+        for (i, row) in layers.iter().enumerate() {
+            lbuf[i * LAYER_FIELDS..(i + 1) * LAYER_FIELDS].copy_from_slice(row);
+        }
+        for (i, row) in gpus.iter().enumerate() {
+            gbuf[i * GPU_FIELDS..(i + 1) * GPU_FIELDS].copy_from_slice(row);
+        }
+        let out = self.exe.run_f32(&[
+            (&lbuf, COST_ROWS, LAYER_FIELDS),
+            (&gbuf, COST_ROWS, GPU_FIELDS),
+        ])?;
+        anyhow::ensure!(out.len() == COST_ROWS, "unexpected output length {}", out.len());
+        Ok(out[..layers.len()].to_vec())
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Executes `artifacts/coll_model.hlo.txt` (the alpha-beta collective
+/// estimator used by the Sailor-like analytical baseline).
+pub struct PjrtCollModel {
+    exe: Executable,
+}
+
+impl std::fmt::Debug for PjrtCollModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtCollModel").field("source", &self.exe.source).finish()
+    }
+}
+
+impl PjrtCollModel {
+    pub fn load() -> anyhow::Result<Self> {
+        let dir = artifacts_dir()?;
+        Self::load_from(&dir)
+    }
+
+    pub fn load_from(dir: &Path) -> anyhow::Result<Self> {
+        check_manifest(dir)?;
+        let rt = Runtime::cpu()?;
+        let exe = rt.load_hlo_text(&dir.join("coll_model.hlo.txt"))?;
+        Ok(PjrtCollModel { exe })
+    }
+
+    /// rows: up to COLL_ROWS descriptors
+    /// `[algo, nranks, size_bytes, bw, latency_s, extra_hops, 0, 0]`.
+    pub fn evaluate(&self, rows: &[[f32; COLL_FIELDS]]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(rows.len() <= COLL_ROWS, "batch exceeds artifact rows");
+        let mut buf = vec![0f32; COLL_ROWS * COLL_FIELDS];
+        for (i, row) in rows.iter().enumerate() {
+            buf[i * COLL_FIELDS..(i + 1) * COLL_FIELDS].copy_from_slice(row);
+        }
+        let out = self.exe.run_f32(&[(&buf, COLL_ROWS, COLL_FIELDS)])?;
+        anyhow::ensure!(out.len() == COLL_ROWS, "unexpected output length {}", out.len());
+        Ok(out[..rows.len()].to_vec())
+    }
+}

@@ -1,0 +1,303 @@
+//! The HetSim facade: ties configuration, workload generation, cost
+//! evaluation, the system scheduler and the network simulator into one
+//! reproducible run (paper Fig 4's full pipeline).
+
+use std::collections::HashMap;
+
+use crate::compute::table::CostTable;
+use crate::config::cluster::ClusterSpec;
+use crate::config::framework::{FrameworkSpec, ParallelismSpec};
+use crate::config::model::ModelSpec;
+use crate::system::collective::RingPolicy;
+use crate::system::scheduler::{Scheduler, SchedulerReport};
+use crate::util::stats::{Samples, Summary};
+use crate::util::units::Time;
+use crate::workload::aicb::{self, WorkloadOptions};
+use crate::workload::op::Workload;
+
+/// How per-layer compute times are evaluated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostBackend {
+    /// Pure-Rust roofline mirror (no artifacts needed).
+    Native,
+    /// AOT artifact via PJRT (requires `make artifacts`).
+    Pjrt,
+}
+
+/// Builder for a simulation run.
+pub struct SimulationBuilder {
+    model: ModelSpec,
+    cluster: ClusterSpec,
+    framework: Option<FrameworkSpec>,
+    parallelism: Option<ParallelismSpec>,
+    options: WorkloadOptions,
+    cost_backend: CostBackend,
+    ring_policy: RingPolicy,
+    hetero_partitioning: bool,
+    record_trace: bool,
+}
+
+impl SimulationBuilder {
+    pub fn new(model: ModelSpec, cluster: ClusterSpec) -> Self {
+        SimulationBuilder {
+            model,
+            cluster,
+            framework: None,
+            parallelism: None,
+            options: WorkloadOptions::default(),
+            cost_backend: CostBackend::Native,
+            ring_policy: RingPolicy::HeteroAware,
+            hetero_partitioning: false,
+            record_trace: false,
+        }
+    }
+
+    /// Explicit parallelism degrees (defaults to the model's Table-6
+    /// deployment scaled to the cluster if unset).
+    pub fn parallelism(mut self, par: ParallelismSpec) -> Self {
+        self.parallelism = Some(par);
+        self
+    }
+
+    /// Fully custom framework spec (device groups, non-uniform splits).
+    pub fn framework(mut self, fw: FrameworkSpec) -> Self {
+        self.framework = Some(fw);
+        self
+    }
+
+    /// Use the heterogeneity-aware non-uniform partitioner (C1) instead
+    /// of the uniform mapping.
+    pub fn hetero_partitioning(mut self, on: bool) -> Self {
+        self.hetero_partitioning = on;
+        self
+    }
+
+    pub fn workload_options(mut self, opts: WorkloadOptions) -> Self {
+        self.options = opts;
+        self
+    }
+
+    pub fn cost_backend(mut self, b: CostBackend) -> Self {
+        self.cost_backend = b;
+        self
+    }
+
+    pub fn ring_policy(mut self, p: RingPolicy) -> Self {
+        self.ring_policy = p;
+        self
+    }
+
+    pub fn record_trace(mut self, on: bool) -> Self {
+        self.record_trace = on;
+        self
+    }
+
+    /// Resolve the framework spec, generate the workload, evaluate the
+    /// cost table.
+    pub fn build(self) -> anyhow::Result<Simulation> {
+        let par = match self.parallelism {
+            Some(p) => p,
+            None => infer_parallelism(&self.model, &self.cluster)?,
+        };
+        let fw = match self.framework {
+            Some(f) => f,
+            None if self.hetero_partitioning => {
+                crate::workload::partition::plan_hetero(&self.model, &self.cluster, par)?
+            }
+            None => FrameworkSpec::uniform(&self.model, &self.cluster, par)?,
+        };
+        let workload = aicb::generate(&self.model, &self.cluster, &fw, &self.options)?;
+        let mut cost = match self.cost_backend {
+            CostBackend::Native => CostTable::native(),
+            CostBackend::Pjrt => {
+                CostTable::new(Box::new(crate::runtime::PjrtCostModel::load()?))
+            }
+        };
+        aicb::register_costs(&workload, &self.cluster, &mut cost)?;
+        Ok(Simulation {
+            model: self.model,
+            cluster: self.cluster,
+            framework: fw,
+            workload,
+            cost,
+            ring_policy: self.ring_policy,
+            record_trace: self.record_trace,
+        })
+    }
+}
+
+/// Pick parallelism degrees for a cluster: the model's paper deployment
+/// if world sizes match, else TP=gpus_per_node, PP=1, DP=rest.
+pub fn infer_parallelism(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+) -> anyhow::Result<ParallelismSpec> {
+    let world = cluster.total_gpus();
+    let preset = match model.name.as_str() {
+        "GPT-6.7B" => Some(crate::config::presets::deployment("gpt-6.7b")?),
+        "GPT-13B" => Some(crate::config::presets::deployment("gpt-13b")?),
+        "Mixtral-8x7B" => Some(crate::config::presets::deployment("mixtral-8x7b")?),
+        "Llama-2-70B" => Some(crate::config::presets::deployment("llama2-70b")?),
+        _ => None,
+    };
+    if let Some(p) = preset {
+        if p.world_size() == world {
+            return Ok(p);
+        }
+    }
+    let tp = cluster.gpus_per_node().clamp(1, 8);
+    anyhow::ensure!(world % tp == 0, "cluster size {world} not divisible by tp {tp}");
+    Ok(ParallelismSpec { tp, pp: 1, dp: world / tp })
+}
+
+/// A fully-prepared simulation (workload + cost table), runnable for
+/// one or more iterations.
+pub struct Simulation {
+    pub model: ModelSpec,
+    pub cluster: ClusterSpec,
+    pub framework: FrameworkSpec,
+    pub workload: Workload,
+    pub cost: CostTable,
+    pub ring_policy: RingPolicy,
+    pub record_trace: bool,
+}
+
+impl Simulation {
+    /// Simulate one training iteration.
+    pub fn run_iteration(&self) -> anyhow::Result<SimulationReport> {
+        let mut sched = Scheduler::new(&self.workload, &self.cluster, &self.cost)?;
+        sched.ring_policy = self.ring_policy;
+        sched.record_trace = self.record_trace;
+        let rep = sched.run()?;
+        Ok(SimulationReport::from_scheduler(self, rep))
+    }
+}
+
+/// The run summary consumed by reports and benches.
+#[derive(Debug)]
+pub struct SimulationReport {
+    pub model_name: String,
+    pub cluster_name: String,
+    pub iteration_time: Time,
+    pub flows_completed: usize,
+    pub events_processed: u64,
+    /// FCT summaries per communication kind (Fig 6's raw material).
+    pub fct_summary: HashMap<&'static str, Summary>,
+    pub fct_by_kind: HashMap<&'static str, Samples>,
+    pub fct_all: Samples,
+    pub compute_busy: Time,
+    pub comm_busy: Time,
+}
+
+impl SimulationReport {
+    fn from_scheduler(sim: &Simulation, rep: SchedulerReport) -> SimulationReport {
+        let mut fct_by_kind = rep.fct_by_kind;
+        let fct_summary =
+            fct_by_kind.iter_mut().map(|(k, v)| (*k, Summary::of(v))).collect();
+        SimulationReport {
+            model_name: sim.model.name.clone(),
+            cluster_name: sim.cluster.name.clone(),
+            iteration_time: rep.iteration_time,
+            flows_completed: rep.flows_completed,
+            events_processed: rep.events_processed,
+            fct_summary,
+            fct_by_kind,
+            fct_all: rep.fct_all,
+            compute_busy: rep.compute_busy,
+            comm_busy: rep.comm_busy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn tiny(cluster: ClusterSpec) -> SimulationBuilder {
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.num_layers = 2;
+        m.global_batch = 16;
+        m.micro_batch = 8;
+        SimulationBuilder::new(m, cluster)
+    }
+
+    #[test]
+    fn quickstart_homogeneous_run() {
+        let rep = tiny(presets::cluster("hopper", 1).unwrap())
+            .parallelism(ParallelismSpec { tp: 4, pp: 1, dp: 2 })
+            .build()
+            .unwrap()
+            .run_iteration()
+            .unwrap();
+        assert!(rep.iteration_time > Time::ZERO);
+        assert!(rep.flows_completed > 0);
+        assert!(rep.fct_summary.contains_key("TP"));
+        assert!(rep.fct_summary.contains_key("DP"));
+    }
+
+    #[test]
+    fn hetero_slower_than_hopper_for_same_workload() {
+        let run = |cluster| {
+            tiny(cluster)
+                .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+                .build()
+                .unwrap()
+                .run_iteration()
+                .unwrap()
+                .iteration_time
+        };
+        let hopper = run(presets::cluster("hopper", 2).unwrap());
+        let hetero = run(presets::cluster_hetero(1, 1).unwrap());
+        assert!(hetero > hopper, "hetero {hetero} <= hopper {hopper}");
+    }
+
+    #[test]
+    fn hetero_partitioning_beats_uniform_on_hetero_cluster() {
+        let mk = |hetero_partitioning| {
+            tiny(presets::cluster_hetero(1, 1).unwrap())
+                .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+                .hetero_partitioning(hetero_partitioning)
+                .build()
+                .unwrap()
+                .run_iteration()
+                .unwrap()
+                .iteration_time
+        };
+        let uniform = mk(false);
+        let partitioned = mk(true);
+        assert!(
+            partitioned < uniform,
+            "non-uniform partitioning should win: {partitioned} vs {uniform}"
+        );
+    }
+
+    #[test]
+    fn determinism_same_config_same_timeline() {
+        let run = || {
+            tiny(presets::cluster_hetero(1, 1).unwrap())
+                .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+                .build()
+                .unwrap()
+                .run_iteration()
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.iteration_time, b.iteration_time);
+        assert_eq!(a.flows_completed, b.flows_completed);
+        assert_eq!(a.events_processed, b.events_processed);
+    }
+
+    #[test]
+    fn infer_parallelism_matches_paper_when_possible() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster("hopper", 16).unwrap(); // 128 GPUs
+        let p = infer_parallelism(&m, &c).unwrap();
+        assert_eq!((p.tp, p.pp, p.dp), (4, 1, 32));
+        // non-matching world size falls back
+        let c2 = presets::cluster("hopper", 2).unwrap();
+        let p2 = infer_parallelism(&m, &c2).unwrap();
+        assert_eq!(p2.world_size(), 16);
+    }
+}

@@ -1,0 +1,452 @@
+//! Heterogeneity-aware collective communication library (component
+//! **C3**). Imitates NCCL's algorithm structure the way SimAI does, but
+//! over *heterogeneous* device groups:
+//!
+//! * logical-ring **graph generation** orders ranks (node-major) so ring
+//!   edges stay intra-node where possible, and — the heterogeneity-aware
+//!   part — groups nodes of the same architecture together so a ring
+//!   crosses the slow↔fast boundary the minimum number of times;
+//! * ring allreduce / allgather / reduce-scatter, pairwise all-to-all,
+//!   binomial-tree broadcast, p2p;
+//! * hierarchical allreduce for rail topologies (intra-node
+//!   reduce-scatter → per-rail inter-node rings → intra-node allgather);
+//! * a step machine ([`CollectiveExec`]) that expands each algorithm
+//!   step into a batch of [`FlowSpec`]s for the fluid network simulator
+//!   (collectives are *blocking*: step k+1 starts only when every flow
+//!   of step k delivered — exactly the property the paper uses to read
+//!   bottleneck flows off the FCT distribution).
+
+use crate::config::cluster::ClusterSpec;
+use crate::network::flow::FlowSpec;
+
+/// Collective algorithms (codes mirror `python/compile/kernels/collective.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveAlgo {
+    AllReduceRing,
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+    Broadcast,
+    /// Hierarchical allreduce: intra-node RS, per-rail inter-node
+    /// allreduce, intra-node AG (NCCL-style for rail topologies).
+    AllReduceHierarchical,
+}
+
+impl CollectiveAlgo {
+    pub fn code(self) -> f32 {
+        match self {
+            CollectiveAlgo::AllReduceRing | CollectiveAlgo::AllReduceHierarchical => 0.0,
+            CollectiveAlgo::AllGather => 1.0,
+            CollectiveAlgo::ReduceScatter => 2.0,
+            CollectiveAlgo::AllToAll => 3.0,
+            CollectiveAlgo::Broadcast => 4.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CollectiveAlgo::AllReduceRing => "allreduce",
+            CollectiveAlgo::AllGather => "allgather",
+            CollectiveAlgo::ReduceScatter => "reducescatter",
+            CollectiveAlgo::AllToAll => "alltoall",
+            CollectiveAlgo::Broadcast => "broadcast",
+            CollectiveAlgo::AllReduceHierarchical => "allreduce-hier",
+        }
+    }
+}
+
+/// Which parallelism dimension a collective belongs to (Fig-6 labels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommKind {
+    Tp,
+    Dp,
+    Pp,
+    Ep,
+    Reshard,
+}
+
+impl CommKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            CommKind::Tp => "TP",
+            CommKind::Dp => "DP",
+            CommKind::Pp => "PP",
+            CommKind::Ep => "EP",
+            CommKind::Reshard => "RESHARD",
+        }
+    }
+}
+
+/// A collective operation over a device group.
+#[derive(Debug, Clone)]
+pub struct CollectiveDef {
+    pub id: u64,
+    pub algo: CollectiveAlgo,
+    /// Participating global ranks (logical order as given; ring order is
+    /// recomputed by graph generation).
+    pub ranks: Vec<u32>,
+    /// Payload bytes contributed per rank.
+    pub bytes_per_rank: u64,
+    pub kind: CommKind,
+    pub label: String,
+}
+
+/// Ring-order policy (the C3 "graph generation" knob; `Naive` is the
+/// ablation baseline that ignores topology and architecture).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RingPolicy {
+    /// Use the ranks in the order given.
+    Naive,
+    /// Node-major + architecture-major ordering (heterogeneity-aware).
+    HeteroAware,
+}
+
+/// Order ranks for a logical ring.
+pub fn ring_order(cluster: &ClusterSpec, ranks: &[u32], policy: RingPolicy) -> Vec<u32> {
+    match policy {
+        RingPolicy::Naive => ranks.to_vec(),
+        RingPolicy::HeteroAware => {
+            let mut v: Vec<u32> = ranks.to_vec();
+            // architecture-major, then node, then local rank: rings walk
+            // all nodes of one architecture before crossing to the next,
+            // minimizing slow<->fast boundary edges (2 per ring).
+            v.sort_by_key(|r| {
+                let (node, local) = cluster.locate(*r).unwrap_or((u32::MAX, u32::MAX));
+                let arch = cluster
+                    .gpu_of_rank(*r)
+                    .map(|g| g.name.clone())
+                    .unwrap_or_default();
+                (arch, node, local)
+            });
+            v
+        }
+    }
+}
+
+/// The expanded execution plan: a sequence of steps, each a batch of
+/// flows that must all complete before the next step starts.
+#[derive(Debug, Clone)]
+pub struct CollectiveExec {
+    pub def_id: u64,
+    pub steps: Vec<Vec<FlowSpec>>,
+    pub current: usize,
+    /// Flows outstanding in the current step.
+    pub outstanding: usize,
+}
+
+impl CollectiveExec {
+    /// Expand a collective into its step plan.
+    pub fn plan(cluster: &ClusterSpec, def: &CollectiveDef, policy: RingPolicy) -> CollectiveExec {
+        let order = ring_order(cluster, &def.ranks, policy);
+        let n = order.len();
+        let bytes = def.bytes_per_rank;
+        let tag = def.id;
+        let mut steps: Vec<Vec<FlowSpec>> = Vec::new();
+
+        if n <= 1 || bytes == 0 {
+            return CollectiveExec { def_id: def.id, steps, current: 0, outstanding: 0 };
+        }
+
+        let ring_steps = |steps: &mut Vec<Vec<FlowSpec>>, count: usize, chunk: u64| {
+            for _ in 0..count {
+                let mut batch = Vec::with_capacity(n);
+                for i in 0..n {
+                    let src = order[i];
+                    let dst = order[(i + 1) % n];
+                    batch.push(FlowSpec { src, dst, bytes: chunk, tag });
+                }
+                steps.push(batch);
+            }
+        };
+
+        match def.algo {
+            CollectiveAlgo::AllReduceRing => {
+                // reduce-scatter + allgather: 2(n-1) steps of size/n chunks
+                ring_steps(&mut steps, 2 * (n - 1), (bytes / n as u64).max(1));
+            }
+            CollectiveAlgo::AllGather | CollectiveAlgo::ReduceScatter => {
+                ring_steps(&mut steps, n - 1, (bytes / n as u64).max(1));
+            }
+            CollectiveAlgo::AllToAll => {
+                // pairwise exchange: step s, rank i sends to (i+s) mod n
+                let chunk = (bytes / n as u64).max(1);
+                for s in 1..n {
+                    let mut batch = Vec::with_capacity(n);
+                    for i in 0..n {
+                        batch.push(FlowSpec {
+                            src: order[i],
+                            dst: order[(i + s) % n],
+                            bytes: chunk,
+                            tag,
+                        });
+                    }
+                    steps.push(batch);
+                }
+            }
+            CollectiveAlgo::Broadcast => {
+                // binomial tree from order[0]
+                let mut have = 1usize;
+                while have < n {
+                    let senders = have.min(n - have);
+                    let mut batch = Vec::with_capacity(senders);
+                    for i in 0..senders {
+                        batch.push(FlowSpec {
+                            src: order[i],
+                            dst: order[have + i],
+                            bytes,
+                            tag,
+                        });
+                    }
+                    steps.push(batch);
+                    have += senders;
+                }
+            }
+            CollectiveAlgo::AllReduceHierarchical => {
+                plan_hierarchical(cluster, &order, bytes, tag, &mut steps);
+            }
+        }
+        CollectiveExec { def_id: def.id, steps, current: 0, outstanding: 0 }
+    }
+
+    /// Total bytes the plan moves (traffic-conservation invariant).
+    pub fn total_bytes(&self) -> u64 {
+        self.steps.iter().flatten().map(|f| f.bytes).sum()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.current >= self.steps.len()
+    }
+
+    /// Take the next step's flow batch (marks them outstanding).
+    pub fn next_step(&mut self) -> Option<&[FlowSpec]> {
+        if self.is_done() {
+            return None;
+        }
+        let step = &self.steps[self.current];
+        self.outstanding = step.len();
+        Some(step)
+    }
+
+    /// Report one completed flow; returns true when the step finished
+    /// (advance with `next_step`).
+    pub fn flow_done(&mut self) -> bool {
+        debug_assert!(self.outstanding > 0, "flow_done without outstanding flows");
+        self.outstanding -= 1;
+        if self.outstanding == 0 {
+            self.current += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Hierarchical allreduce for rail topologies.
+fn plan_hierarchical(
+    cluster: &ClusterSpec,
+    order: &[u32],
+    bytes: u64,
+    tag: u64,
+    steps: &mut Vec<Vec<FlowSpec>>,
+) {
+    use std::collections::BTreeMap;
+    // bucket ranks per node (preserving order)
+    let mut per_node: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+    for r in order {
+        let (n, _) = cluster.locate(*r).unwrap_or((u32::MAX, 0));
+        per_node.entry(n).or_default().push(*r);
+    }
+    let nodes: Vec<&Vec<u32>> = per_node.values().collect();
+    let local = nodes.iter().map(|v| v.len()).max().unwrap_or(1);
+
+    // Phase 1: intra-node reduce-scatter (rings inside each node, run
+    // concurrently: merged into shared step batches).
+    let intra_steps = local.saturating_sub(1);
+    let chunk1 = (bytes / local.max(1) as u64).max(1);
+    for s in 0..intra_steps {
+        let mut batch = Vec::new();
+        for node_ranks in &nodes {
+            let ln = node_ranks.len();
+            if ln > 1 && s < ln - 1 {
+                for i in 0..ln {
+                    batch.push(FlowSpec {
+                        src: node_ranks[i],
+                        dst: node_ranks[(i + 1) % ln],
+                        bytes: chunk1,
+                        tag,
+                    });
+                }
+            }
+        }
+        if !batch.is_empty() {
+            steps.push(batch);
+        }
+    }
+
+    // Phase 2: per-rail inter-node allreduce rings (slot i of each node).
+    let nn = nodes.len();
+    if nn > 1 {
+        let chunk2 = (bytes / (local.max(1) as u64 * nn as u64)).max(1);
+        for _ in 0..2 * (nn - 1) {
+            let mut batch = Vec::new();
+            for slot in 0..local {
+                for (ni, node_ranks) in nodes.iter().enumerate() {
+                    if slot < node_ranks.len() {
+                        let next = nodes[(ni + 1) % nn];
+                        if slot < next.len() {
+                            batch.push(FlowSpec {
+                                src: node_ranks[slot],
+                                dst: next[slot],
+                                bytes: chunk2,
+                                tag,
+                            });
+                        }
+                    }
+                }
+            }
+            if !batch.is_empty() {
+                steps.push(batch);
+            }
+        }
+    }
+
+    // Phase 3: intra-node allgather.
+    for s in 0..intra_steps {
+        let mut batch = Vec::new();
+        for node_ranks in &nodes {
+            let ln = node_ranks.len();
+            if ln > 1 && s < ln - 1 {
+                for i in 0..ln {
+                    batch.push(FlowSpec {
+                        src: node_ranks[i],
+                        dst: node_ranks[(i + 1) % ln],
+                        bytes: chunk1,
+                        tag,
+                    });
+                }
+            }
+        }
+        if !batch.is_empty() {
+            steps.push(batch);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn def(algo: CollectiveAlgo, ranks: Vec<u32>, bytes: u64) -> CollectiveDef {
+        CollectiveDef { id: 1, algo, ranks, bytes_per_rank: bytes, kind: CommKind::Tp, label: "t".into() }
+    }
+
+    #[test]
+    fn ring_allreduce_step_structure() {
+        let c = presets::cluster("ampere", 1).unwrap();
+        let e = CollectiveExec::plan(&c, &def(CollectiveAlgo::AllReduceRing, (0..8).collect(), 8000), RingPolicy::Naive);
+        assert_eq!(e.steps.len(), 14); // 2*(8-1)
+        assert!(e.steps.iter().all(|s| s.len() == 8));
+        assert!(e.steps[0].iter().all(|f| f.bytes == 1000));
+    }
+
+    #[test]
+    fn allreduce_moves_2x_data_of_allgather() {
+        let c = presets::cluster("ampere", 1).unwrap();
+        let ar = CollectiveExec::plan(&c, &def(CollectiveAlgo::AllReduceRing, (0..8).collect(), 8000), RingPolicy::Naive);
+        let ag = CollectiveExec::plan(&c, &def(CollectiveAlgo::AllGather, (0..8).collect(), 8000), RingPolicy::Naive);
+        assert_eq!(ar.total_bytes(), 2 * ag.total_bytes());
+    }
+
+    #[test]
+    fn single_rank_collective_is_noop() {
+        let c = presets::cluster("ampere", 1).unwrap();
+        let e = CollectiveExec::plan(&c, &def(CollectiveAlgo::AllReduceRing, vec![3], 1 << 20), RingPolicy::Naive);
+        assert!(e.is_done());
+        assert_eq!(e.total_bytes(), 0);
+    }
+
+    #[test]
+    fn broadcast_binomial_tree_counts() {
+        let c = presets::cluster("ampere", 1).unwrap();
+        let e = CollectiveExec::plan(&c, &def(CollectiveAlgo::Broadcast, (0..8).collect(), 100), RingPolicy::Naive);
+        assert_eq!(e.steps.len(), 3); // log2(8)
+        assert_eq!(e.steps[0].len(), 1);
+        assert_eq!(e.steps[1].len(), 2);
+        assert_eq!(e.steps[2].len(), 4);
+    }
+
+    #[test]
+    fn alltoall_pairwise_exchange() {
+        let c = presets::cluster("ampere", 1).unwrap();
+        let e = CollectiveExec::plan(&c, &def(CollectiveAlgo::AllToAll, (0..4).collect(), 4000), RingPolicy::Naive);
+        assert_eq!(e.steps.len(), 3);
+        // every step: 4 flows of size/4
+        for s in &e.steps {
+            assert_eq!(s.len(), 4);
+            assert!(s.iter().all(|f| f.bytes == 1000));
+        }
+    }
+
+    #[test]
+    fn step_machine_advances_on_flow_completion() {
+        let c = presets::cluster("ampere", 1).unwrap();
+        let mut e = CollectiveExec::plan(&c, &def(CollectiveAlgo::AllGather, (0..4).collect(), 4000), RingPolicy::Naive);
+        let mut total_flows = 0;
+        while let Some(step) = e.next_step() {
+            let n = step.len();
+            total_flows += n;
+            for i in 0..n {
+                let finished = e.flow_done();
+                assert_eq!(finished, i == n - 1);
+            }
+        }
+        assert!(e.is_done());
+        assert_eq!(total_flows, 3 * 4);
+    }
+
+    #[test]
+    fn hetero_aware_ring_minimizes_arch_crossings() {
+        let c = presets::cluster_hetero(2, 2).unwrap();
+        // interleaved rank order: worst case for a naive ring
+        let ranks: Vec<u32> = (0..32).map(|i| (i % 4) * 8 + i / 4).collect();
+        let order = ring_order(&c, &ranks, RingPolicy::HeteroAware);
+        // count architecture boundary crossings around the ring
+        let arch = |r: u32| c.gpu_of_rank(r).unwrap().name.clone();
+        let crossings = (0..order.len())
+            .filter(|&i| arch(order[i]) != arch(order[(i + 1) % order.len()]))
+            .count();
+        assert_eq!(crossings, 2, "{order:?}");
+        // naive order crosses much more often
+        let naive = ring_order(&c, &ranks, RingPolicy::Naive);
+        let naive_crossings = (0..naive.len())
+            .filter(|&i| arch(naive[i]) != arch(naive[(i + 1) % naive.len()]))
+            .count();
+        assert!(naive_crossings > 2);
+    }
+
+    #[test]
+    fn hierarchical_conserves_traffic_phases() {
+        let c = presets::cluster("ampere", 2).unwrap();
+        let ranks: Vec<u32> = (0..16).collect();
+        let e = CollectiveExec::plan(
+            &c,
+            &def(CollectiveAlgo::AllReduceHierarchical, ranks, 16000),
+            RingPolicy::HeteroAware,
+        );
+        // phases: 7 intra + 2 inter + 7 intra = 16 steps
+        assert_eq!(e.steps.len(), 7 + 2 + 7);
+        // inter-node steps only contain cross-node flows
+        let inter = &e.steps[7];
+        for f in inter {
+            assert_ne!(f.src / 8, f.dst / 8);
+        }
+    }
+
+    #[test]
+    fn zero_bytes_collective_is_noop() {
+        let c = presets::cluster("ampere", 1).unwrap();
+        let e = CollectiveExec::plan(&c, &def(CollectiveAlgo::AllReduceRing, (0..8).collect(), 0), RingPolicy::Naive);
+        assert!(e.is_done());
+    }
+}

@@ -1,0 +1,184 @@
+//! Runtime device-group views derived from a [`FrameworkSpec`]
+//! (component **C1**: custom homogeneous/heterogeneous device groups and
+//! their mapping to parallelism dimensions).
+
+use crate::config::cluster::ClusterSpec;
+use crate::config::framework::FrameworkSpec;
+
+/// One DP synchronization group: the ranks holding the *same* model
+/// shard across device groups (same stage, same TP slot) — or, when TP
+/// degrees differ, the per-group participants that must reshard first.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DpSyncGroup {
+    pub stage: u32,
+    /// (device-group id, ranks of that group participating, tp degree,
+    /// batch share) per participant.
+    pub participants: Vec<DpParticipant>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DpParticipant {
+    pub group: u32,
+    pub ranks: Vec<u32>,
+    pub tp: u32,
+    pub batch_share: u64,
+    pub micro_batch: u64,
+}
+
+/// A pipeline edge between consecutive stages of one device group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PpEdge {
+    pub group: u32,
+    pub from_stage: u32,
+    pub from_ranks: Vec<u32>,
+    pub to_ranks: Vec<u32>,
+}
+
+/// All derived group structure for a framework spec.
+#[derive(Debug, Clone)]
+pub struct DeviceGroups {
+    /// TP groups: (device-group id, stage index, ranks).
+    pub tp_groups: Vec<(u32, u32, Vec<u32>)>,
+    pub dp_sync: Vec<DpSyncGroup>,
+    pub pp_edges: Vec<PpEdge>,
+}
+
+impl DeviceGroups {
+    pub fn derive(fw: &FrameworkSpec) -> DeviceGroups {
+        let mut tp_groups = Vec::new();
+        let mut pp_edges = Vec::new();
+        let max_stages = fw.groups.iter().map(|g| g.stages.len()).max().unwrap_or(0);
+
+        for g in &fw.groups {
+            for (s, stage) in g.stages.iter().enumerate() {
+                tp_groups.push((g.id, s as u32, stage.ranks.clone()));
+                if s + 1 < g.stages.len() {
+                    pp_edges.push(PpEdge {
+                        group: g.id,
+                        from_stage: s as u32,
+                        from_ranks: stage.ranks.clone(),
+                        to_ranks: g.stages[s + 1].ranks.clone(),
+                    });
+                }
+            }
+        }
+
+        // DP sync groups: align stages by index across device groups.
+        // Groups with fewer stages simply do not participate at deeper
+        // stage indices (non-uniform PP).
+        let mut dp_sync = Vec::new();
+        for s in 0..max_stages {
+            let mut participants = Vec::new();
+            for g in &fw.groups {
+                if let Some(stage) = g.stages.get(s) {
+                    participants.push(DpParticipant {
+                        group: g.id,
+                        ranks: stage.ranks.clone(),
+                        tp: stage.tp(),
+                        batch_share: g.batch_share,
+                        micro_batch: g.micro_batch,
+                    });
+                }
+            }
+            if participants.len() > 1 {
+                dp_sync.push(DpSyncGroup { stage: s as u32, participants });
+            }
+        }
+        DeviceGroups { tp_groups, dp_sync, pp_edges }
+    }
+
+    /// Locality of a rank set: true if all ranks share one node.
+    pub fn is_intra_node(cluster: &ClusterSpec, ranks: &[u32]) -> bool {
+        let mut nodes = ranks.iter().map(|r| cluster.locate(*r).map(|(n, _)| n));
+        let first = match nodes.next() {
+            Some(Some(n)) => n,
+            _ => return false,
+        };
+        nodes.all(|n| n == Some(first))
+    }
+
+    /// GPU architectures present in a rank set (for C3 graph generation).
+    pub fn architectures<'c>(cluster: &'c ClusterSpec, ranks: &[u32]) -> Vec<&'c str> {
+        let mut archs: Vec<&str> = Vec::new();
+        for r in ranks {
+            if let Some(g) = cluster.gpu_of_rank(*r) {
+                if !archs.contains(&g.name.as_str()) {
+                    archs.push(g.name.as_str());
+                }
+            }
+        }
+        archs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::framework::{FrameworkSpec, ParallelismSpec};
+    use crate::config::presets;
+
+    fn uniform() -> (crate::config::model::ModelSpec, crate::config::cluster::ClusterSpec, FrameworkSpec) {
+        let mut m = presets::model("llama2-70b").unwrap();
+        m.global_batch = 64;
+        let c = presets::cluster("ampere", 8).unwrap(); // 64 GPUs
+        let f =
+            FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 4, pp: 4, dp: 4 }).unwrap();
+        (m, c, f)
+    }
+
+    #[test]
+    fn derives_tp_groups_per_stage() {
+        let (_, _, f) = uniform();
+        let dg = DeviceGroups::derive(&f);
+        assert_eq!(dg.tp_groups.len(), 16); // 4 dp x 4 pp
+        assert!(dg.tp_groups.iter().all(|(_, _, r)| r.len() == 4));
+    }
+
+    #[test]
+    fn derives_dp_sync_per_stage() {
+        let (_, _, f) = uniform();
+        let dg = DeviceGroups::derive(&f);
+        assert_eq!(dg.dp_sync.len(), 4); // one per stage
+        for s in &dg.dp_sync {
+            assert_eq!(s.participants.len(), 4); // dp=4
+            assert!(s.participants.iter().all(|p| p.tp == 4));
+        }
+    }
+
+    #[test]
+    fn derives_pp_edges() {
+        let (_, _, f) = uniform();
+        let dg = DeviceGroups::derive(&f);
+        assert_eq!(dg.pp_edges.len(), 4 * 3); // dp x (pp-1)
+        let e = &dg.pp_edges[0];
+        assert_eq!(e.from_stage, 0);
+        assert_ne!(e.from_ranks, e.to_ranks);
+    }
+
+    #[test]
+    fn locality_classification() {
+        let c = presets::cluster("ampere", 2).unwrap();
+        assert!(DeviceGroups::is_intra_node(&c, &[0, 3, 7]));
+        assert!(!DeviceGroups::is_intra_node(&c, &[0, 8]));
+        assert!(!DeviceGroups::is_intra_node(&c, &[99]));
+    }
+
+    #[test]
+    fn architectures_of_hetero_group() {
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let archs = DeviceGroups::architectures(&c, &[0, 8]);
+        assert_eq!(archs, vec!["A100", "H100"]);
+    }
+
+    #[test]
+    fn non_uniform_pp_depth_tolerated() {
+        let (m, c, mut f) = uniform();
+        let _ = (m, c);
+        // chop one group to 2 stages (layers conservation not checked here)
+        f.groups[0].stages.truncate(2);
+        let dg = DeviceGroups::derive(&f);
+        // stage 2 and 3 sync groups only have 3 participants
+        let deep: Vec<_> = dg.dp_sync.iter().filter(|s| s.stage >= 2).collect();
+        assert!(deep.iter().all(|s| s.participants.len() == 3));
+    }
+}

@@ -1,0 +1,25 @@
+//! System layer (paper §4.2): logical resource management and
+//! scheduling — components **C1** (non-uniform hybrid parallelism over
+//! custom device groups), **C2** (resharding) and **C3**
+//! (heterogeneity-aware collective communication).
+//!
+//! * [`device_group`] — runtime device-group views: TP groups, DP sync
+//!   groups, PP edges, locality classification.
+//! * [`collective`] — the CCL: ring / tree / hierarchical algorithms,
+//!   heterogeneity-aware logical ring ordering, and the step-machine
+//!   that expands a collective into batches of network flows.
+//! * [`resharding`] — shape-mismatch detection between communicating
+//!   device groups and the extra traffic a reshard injects.
+//! * [`scheduler`] — the per-rank program executor: runs compute ops,
+//!   blocks on collectives/receives, coordinates the compute and
+//!   network simulators over one training iteration.
+
+pub mod collective;
+pub mod device_group;
+pub mod resharding;
+pub mod scheduler;
+
+pub use collective::{CollectiveAlgo, CollectiveDef, CollectiveExec, CommKind};
+pub use device_group::DeviceGroups;
+pub use resharding::{needs_resharding, ReshardPlan};
+pub use scheduler::{Scheduler, SchedulerReport};

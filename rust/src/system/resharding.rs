@@ -1,0 +1,184 @@
+//! Resharding (component **C2**): shape matching before synchronization
+//! across non-uniform device groups.
+//!
+//! Paper §3: resharding is needed when (1) communicating DP groups
+//! process different microbatch sizes, or (2) their TP degrees differ.
+//! PP layer-count differences alone do NOT need resharding (sequential
+//! communication).
+//!
+//! The plan we emit models the standard reshard dance: each TP group
+//! all-gathers its shards to full-tensor form on its ranks, the group
+//! leaders run the synchronizing allreduce, and each group re-scatters
+//! to its own shard shape. The extra all-gather/scatter traffic and the
+//! leader-ring allreduce over the *full* tensor (rather than per-shard
+//! rings) is exactly the overhead Table 3 attributes to resharding-
+//! dependent strategies.
+
+use super::collective::{CollectiveAlgo, CollectiveDef, CommKind};
+use super::device_group::DpParticipant;
+
+/// Paper §3 conditions for resharding between two DP participants.
+pub fn needs_resharding(a: &DpParticipant, b: &DpParticipant) -> bool {
+    a.tp != b.tp || a.micro_batch != b.micro_batch
+}
+
+/// Does any pair in a DP sync group require resharding?
+pub fn group_needs_resharding(parts: &[DpParticipant]) -> bool {
+    parts.windows(2).any(|w| needs_resharding(&w[0], &w[1]))
+}
+
+/// The reshard + synchronization plan for one DP sync group.
+#[derive(Debug, Clone)]
+pub struct ReshardPlan {
+    /// Pre-sync collectives (intra-group all-gathers).
+    pub pre: Vec<CollectiveDef>,
+    /// The synchronizing allreduce (leaders, full tensor).
+    pub sync: CollectiveDef,
+    /// Post-sync collectives (intra-group broadcasts of the result).
+    pub post: Vec<CollectiveDef>,
+}
+
+impl ReshardPlan {
+    pub fn all_defs(&self) -> Vec<&CollectiveDef> {
+        self.pre.iter().chain(std::iter::once(&self.sync)).chain(self.post.iter()).collect()
+    }
+}
+
+/// Build the plan. `full_bytes` is the unsharded gradient tensor size of
+/// the stage; `next_id` allocates collective ids.
+pub fn plan(
+    participants: &[DpParticipant],
+    full_bytes: u64,
+    stage: u32,
+    next_id: &mut u64,
+) -> ReshardPlan {
+    let mut alloc = || {
+        let id = *next_id;
+        *next_id += 1;
+        id
+    };
+    let mut pre = Vec::new();
+    let mut post = Vec::new();
+    for p in participants {
+        if p.tp > 1 {
+            // each rank holds full_bytes / tp; all-gather to full tensor
+            pre.push(CollectiveDef {
+                id: alloc(),
+                algo: CollectiveAlgo::AllGather,
+                ranks: p.ranks.clone(),
+                bytes_per_rank: full_bytes,
+                kind: CommKind::Reshard,
+                label: format!("reshard-ag-s{stage}-g{}", p.group),
+            });
+            post.push(CollectiveDef {
+                id: alloc(),
+                algo: CollectiveAlgo::Broadcast,
+                ranks: p.ranks.clone(),
+                bytes_per_rank: full_bytes / p.tp as u64,
+                kind: CommKind::Reshard,
+                label: format!("reshard-bc-s{stage}-g{}", p.group),
+            });
+        }
+    }
+    let leaders: Vec<u32> = participants.iter().map(|p| p.ranks[0]).collect();
+    let sync = CollectiveDef {
+        id: alloc(),
+        algo: CollectiveAlgo::AllReduceRing,
+        ranks: leaders,
+        bytes_per_rank: full_bytes,
+        kind: CommKind::Dp,
+        label: format!("dp-sync-resharded-s{stage}"),
+    };
+    ReshardPlan { pre, sync, post }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part(group: u32, tp: u32, mbs: u64, base_rank: u32) -> DpParticipant {
+        DpParticipant {
+            group,
+            ranks: (base_rank..base_rank + tp).collect(),
+            tp,
+            batch_share: 16,
+            micro_batch: mbs,
+        }
+    }
+
+    #[test]
+    fn tp_mismatch_triggers_resharding() {
+        // paper §3 condition (2)
+        assert!(needs_resharding(&part(0, 3, 1, 0), &part(1, 1, 1, 3)));
+        assert!(!needs_resharding(&part(0, 4, 1, 0), &part(1, 4, 1, 4)));
+    }
+
+    #[test]
+    fn microbatch_mismatch_triggers_resharding() {
+        // paper §3 condition (1)
+        assert!(needs_resharding(&part(0, 2, 4, 0), &part(1, 2, 8, 2)));
+    }
+
+    #[test]
+    fn uniform_group_skips_resharding() {
+        let parts = vec![part(0, 4, 8, 0), part(1, 4, 8, 4), part(2, 4, 8, 8)];
+        assert!(!group_needs_resharding(&parts));
+    }
+
+    #[test]
+    fn plan_emits_pre_sync_post() {
+        let parts = vec![part(0, 3, 1, 0), part(1, 1, 1, 3)];
+        let mut id = 100;
+        let p = plan(&parts, 1 << 30, 0, &mut id);
+        // only the tp=3 group needs gather/scatter
+        assert_eq!(p.pre.len(), 1);
+        assert_eq!(p.post.len(), 1);
+        assert_eq!(p.sync.ranks, vec![0, 3]); // leaders
+        assert_eq!(p.sync.bytes_per_rank, 1 << 30);
+        assert_eq!(id, 103);
+    }
+
+    #[test]
+    fn plan_ids_unique_and_labeled() {
+        let parts = vec![part(0, 2, 1, 0), part(1, 4, 1, 2)];
+        let mut id = 0;
+        let p = plan(&parts, 4096, 7, &mut id);
+        let defs = p.all_defs();
+        let mut ids: Vec<u64> = defs.iter().map(|d| d.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), defs.len());
+        assert!(defs.iter().any(|d| d.label.contains("s7")));
+    }
+
+    #[test]
+    fn reshard_traffic_exceeds_uniform_sync() {
+        use crate::config::presets;
+        use crate::system::collective::{CollectiveExec, RingPolicy};
+        let c = presets::cluster("ampere", 1).unwrap();
+        let parts = vec![part(0, 3, 1, 0), part(1, 1, 1, 3)];
+        let mut id = 0;
+        let full = 3 << 20;
+        let p = plan(&parts, full, 0, &mut id);
+        let planned: u64 = p
+            .all_defs()
+            .iter()
+            .map(|d| CollectiveExec::plan(&c, d, RingPolicy::Naive).total_bytes())
+            .sum();
+        // a uniform per-shard sync would move ~2*(n-1)/n * full
+        let uniform = CollectiveExec::plan(
+            &c,
+            &CollectiveDef {
+                id: 99,
+                algo: CollectiveAlgo::AllReduceRing,
+                ranks: vec![0, 3],
+                bytes_per_rank: full,
+                kind: CommKind::Dp,
+                label: "u".into(),
+            },
+            RingPolicy::Naive,
+        )
+        .total_bytes();
+        assert!(planned > uniform, "reshard {planned} <= uniform {uniform}");
+    }
+}

@@ -1,0 +1,571 @@
+//! The event-driven training-iteration scheduler (paper §4.2 System
+//! layer: "coordinates the event stream between the compute and network
+//! simulators, and ensures accurate modeling of event dependencies,
+//! resharding delays, and bandwidth contention").
+//!
+//! Each rank executes its [`RankProgram`] in order. Compute ops run on
+//! the rank's GPU (duration from the cost table — the bottleneck-device
+//! rule of component C4 emerges naturally: a TP group's collective
+//! cannot start until its slowest member arrives). `Collective` and
+//! `Recv` ops block; `Send` is asynchronous. Collectives expand into
+//! step-synchronized flow batches on the fluid network simulator.
+
+use std::collections::HashMap;
+
+use crate::compute::table::CostTable;
+use crate::config::cluster::ClusterSpec;
+use crate::engine::trace::{TraceCategory, TraceRecorder};
+use crate::engine::Engine;
+use crate::network::flow::{FlowId, FlowSim, FlowSpec};
+use crate::network::topology::Topology;
+use crate::util::stats::Samples;
+use crate::util::units::Time;
+use crate::workload::op::{Op, Workload};
+
+use super::collective::{CollectiveExec, CommKind, RingPolicy};
+
+/// Tag space split: collective defs use their id; p2p messages are
+/// offset so the two never collide.
+pub const MSG_TAG_BASE: u64 = 1 << 62;
+
+/// Engine event payload.
+#[derive(Debug, Clone, Copy)]
+pub enum SimEvent {
+    ComputeDone { rank: u32 },
+    FlowDone(FlowId),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RankState {
+    Ready,
+    Computing,
+    BlockedCollective(u64),
+    BlockedRecv(u64),
+    Finished,
+}
+
+#[derive(Debug)]
+struct CollState {
+    arrived: usize,
+    expected: usize,
+    exec: Option<CollectiveExec>,
+    start: Time,
+    /// Per-rank arrival time at the collective: the moment the rank
+    /// *posted* its sends (SimAI semantics). Early posters' flows carry
+    /// the straggler wait in their recorded FCT.
+    arrivals: HashMap<u32, Time>,
+}
+
+#[derive(Debug, Default)]
+struct MsgState {
+    delivered: bool,
+    waiting: Option<u32>,
+}
+
+/// Result of one simulated iteration.
+#[derive(Debug)]
+pub struct SchedulerReport {
+    pub iteration_time: Time,
+    /// FCT samples (seconds) per communication kind — the Fig-6 data.
+    pub fct_by_kind: HashMap<&'static str, Samples>,
+    /// All FCTs pooled.
+    pub fct_all: Samples,
+    pub flows_completed: usize,
+    pub events_processed: u64,
+    pub compute_busy: Time,
+    pub comm_busy: Time,
+    pub trace: TraceRecorder,
+}
+
+/// The scheduler. Borrows the immutable inputs; owns the mutable
+/// simulation state for one run.
+pub struct Scheduler<'a> {
+    workload: &'a Workload,
+    cluster: &'a ClusterSpec,
+    cost: &'a CostTable,
+    pub ring_policy: RingPolicy,
+    pub record_trace: bool,
+
+    flows: FlowSim,
+    /// rank -> index into workload.programs (O(1) advance dispatch)
+    prog_idx: HashMap<u32, usize>,
+    pc: HashMap<u32, usize>,
+    state: HashMap<u32, RankState>,
+    colls: HashMap<u64, CollState>,
+    msgs: HashMap<u64, MsgState>,
+    tag_kind: HashMap<u64, CommKind>,
+    trace: TraceRecorder,
+}
+
+impl<'a> Scheduler<'a> {
+    pub fn new(
+        workload: &'a Workload,
+        cluster: &'a ClusterSpec,
+        cost: &'a CostTable,
+    ) -> anyhow::Result<Self> {
+        let topo = Topology::build(cluster)?;
+        let mut tag_kind = HashMap::new();
+        let mut colls = HashMap::new();
+        for def in &workload.collectives {
+            tag_kind.insert(def.id, def.kind);
+            colls.insert(
+                def.id,
+                CollState {
+                    arrived: 0,
+                    expected: def.ranks.len(),
+                    exec: None,
+                    start: Time::ZERO,
+                    arrivals: HashMap::new(),
+                },
+            );
+        }
+        Ok(Scheduler {
+            workload,
+            cluster,
+            cost,
+            ring_policy: RingPolicy::HeteroAware,
+            record_trace: false,
+            flows: FlowSim::new(topo),
+            prog_idx: workload
+                .programs
+                .iter()
+                .enumerate()
+                .map(|(i, p)| (p.rank, i))
+                .collect(),
+            pc: workload.programs.iter().map(|p| (p.rank, 0)).collect(),
+            state: workload.programs.iter().map(|p| (p.rank, RankState::Ready)).collect(),
+            colls,
+            msgs: HashMap::new(),
+            tag_kind,
+            trace: TraceRecorder::new(false),
+        })
+    }
+
+    /// Run one iteration to completion.
+    pub fn run(mut self) -> anyhow::Result<SchedulerReport> {
+        self.trace = TraceRecorder::new(self.record_trace);
+        let mut eng: Engine<SimEvent> = Engine::new();
+        eng.max_events = 500_000_000;
+
+        let ranks: Vec<u32> = self.workload.programs.iter().map(|p| p.rank).collect();
+        for r in &ranks {
+            self.advance(&mut eng, *r)?;
+        }
+        while let Some(ev) = eng.step() {
+            match ev.payload {
+                SimEvent::ComputeDone { rank } => {
+                    *self.pc.get_mut(&rank).unwrap() += 1;
+                    self.state.insert(rank, RankState::Ready);
+                    self.advance(&mut eng, rank)?;
+                }
+                SimEvent::FlowDone(fid) => {
+                    let rec = self.flows.on_complete(&mut eng, fid, ev.id, &SimEvent::FlowDone);
+                    if let Some(rec) = rec {
+                        self.on_flow_done(&mut eng, rec.tag)?;
+                    }
+                }
+            }
+        }
+
+        // deadlock / starvation check
+        let stuck: Vec<(u32, RankState)> = self
+            .state
+            .iter()
+            .filter(|(_, s)| **s != RankState::Finished)
+            .map(|(r, s)| (*r, *s))
+            .collect();
+        anyhow::ensure!(
+            stuck.is_empty(),
+            "iteration deadlocked: {} ranks unfinished, e.g. {:?}",
+            stuck.len(),
+            &stuck[..stuck.len().min(4)]
+        );
+
+        // assemble report
+        let mut fct_by_kind: HashMap<&'static str, Samples> = HashMap::new();
+        let mut fct_all = Samples::with_capacity(self.flows.records.len());
+        for rec in &self.flows.records {
+            let kind = self
+                .tag_kind
+                .get(&rec.tag)
+                .map(|k| k.name())
+                .unwrap_or(if rec.tag >= MSG_TAG_BASE { "PP" } else { "?" });
+            let secs = rec.fct().as_secs();
+            fct_by_kind.entry(kind).or_default().push(secs);
+            fct_all.push(secs);
+        }
+        let flows_completed = self.flows.records.len();
+        Ok(SchedulerReport {
+            iteration_time: eng.now(),
+            fct_by_kind,
+            fct_all,
+            flows_completed,
+            events_processed: eng.processed(),
+            compute_busy: self.trace.busy_by_category(TraceCategory::Compute),
+            comm_busy: self.trace.busy_by_category(TraceCategory::Communication),
+            trace: self.trace,
+        })
+    }
+
+    /// Execute ops for `rank` until it blocks or finishes.
+    fn advance(&mut self, eng: &mut Engine<SimEvent>, rank: u32) -> anyhow::Result<()> {
+        let prog = &self.workload.programs[*self
+            .prog_idx
+            .get(&rank)
+            .ok_or_else(|| anyhow::anyhow!("no program for rank {rank}"))?];
+        loop {
+            let pc = self.pc[&rank];
+            if pc >= prog.ops.len() {
+                self.state.insert(rank, RankState::Finished);
+                return Ok(());
+            }
+            match &prog.ops[pc] {
+                Op::Compute { work, label } => {
+                    let gpu = self
+                        .cluster
+                        .gpu_of_rank(rank)
+                        .ok_or_else(|| anyhow::anyhow!("rank {rank} outside cluster"))?;
+                    let dur = self.cost.time(work, gpu)?;
+                    let now = eng.now();
+                    self.trace.record(rank, TraceCategory::Compute, *label, now, now + dur);
+                    eng.schedule_in(dur, SimEvent::ComputeDone { rank });
+                    self.state.insert(rank, RankState::Computing);
+                    return Ok(());
+                }
+                Op::Collective { def_id } => {
+                    let def_id = *def_id;
+                    self.state.insert(rank, RankState::BlockedCollective(def_id));
+                    let ready = {
+                        let now = eng.now();
+                        let st = self
+                            .colls
+                            .get_mut(&def_id)
+                            .ok_or_else(|| anyhow::anyhow!("unknown collective {def_id}"))?;
+                        st.arrived += 1;
+                        st.arrivals.insert(rank, now);
+                        anyhow::ensure!(
+                            st.arrived <= st.expected,
+                            "collective {def_id} over-subscribed"
+                        );
+                        st.arrived == st.expected
+                    };
+                    if ready {
+                        self.launch_collective(eng, def_id)?;
+                    }
+                    return Ok(());
+                }
+                Op::Send { peer, bytes, msg } => {
+                    let tag = MSG_TAG_BASE + msg;
+                    self.msgs.entry(*msg).or_default();
+                    self.flows.start(
+                        eng,
+                        FlowSpec { src: rank, dst: *peer, bytes: *bytes, tag },
+                        &SimEvent::FlowDone,
+                    );
+                    *self.pc.get_mut(&rank).unwrap() += 1;
+                }
+                Op::Recv { msg } => {
+                    let st = self.msgs.entry(*msg).or_default();
+                    if st.delivered {
+                        *self.pc.get_mut(&rank).unwrap() += 1;
+                    } else {
+                        anyhow::ensure!(
+                            st.waiting.is_none(),
+                            "two ranks waiting on message {msg}"
+                        );
+                        st.waiting = Some(rank);
+                        self.state.insert(rank, RankState::BlockedRecv(*msg));
+                        return Ok(());
+                    }
+                }
+            }
+        }
+    }
+
+    fn launch_collective(&mut self, eng: &mut Engine<SimEvent>, def_id: u64) -> anyhow::Result<()> {
+        let def = self
+            .workload
+            .collective(def_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown collective {def_id}"))?;
+        let mut exec = CollectiveExec::plan(self.cluster, def, self.ring_policy);
+        let start = eng.now();
+        if exec.is_done() {
+            // degenerate (single rank / zero bytes): completes instantly
+            self.finish_collective(eng, def_id, start)?;
+            return Ok(());
+        }
+        let step: Vec<FlowSpec> = exec.next_step().unwrap().to_vec();
+        // First-step flows are posted at each sender's arrival time
+        // (SimAI/ns-3 semantics): early posters' FCT absorbs the
+        // straggler wait — the source of the paper's Fig-6 hetero tails.
+        let posted: Vec<Time> = {
+            let st = &self.colls[&def_id];
+            step.iter().map(|f| st.arrivals.get(&f.src).copied().unwrap_or(start)).collect()
+        };
+        self.flows.start_many_posted(eng, &step, Some(&posted), &SimEvent::FlowDone);
+        let st = self.colls.get_mut(&def_id).unwrap();
+        st.exec = Some(exec);
+        st.start = start;
+        Ok(())
+    }
+
+    fn on_flow_done(&mut self, eng: &mut Engine<SimEvent>, tag: u64) -> anyhow::Result<()> {
+        if tag >= MSG_TAG_BASE {
+            // p2p message delivered
+            let msg = tag - MSG_TAG_BASE;
+            let st = self.msgs.entry(msg).or_default();
+            st.delivered = true;
+            if let Some(rank) = st.waiting.take() {
+                *self.pc.get_mut(&rank).unwrap() += 1;
+                self.state.insert(rank, RankState::Ready);
+                self.advance(eng, rank)?;
+            }
+            return Ok(());
+        }
+        // collective flow
+        let (step_finished, next): (bool, Option<Vec<FlowSpec>>) = {
+            let st = self
+                .colls
+                .get_mut(&tag)
+                .ok_or_else(|| anyhow::anyhow!("flow for unknown collective {tag}"))?;
+            let exec = st.exec.as_mut().ok_or_else(|| anyhow::anyhow!("collective {tag} not launched"))?;
+            if exec.flow_done() {
+                let next = exec.next_step().map(|s| s.to_vec());
+                (true, next)
+            } else {
+                (false, None)
+            }
+        };
+        if step_finished {
+            match next {
+                Some(step) => {
+                    // All chunks of a collective are posted when the
+                    // sender arrives (NCCL enqueues the full send
+                    // schedule), so later steps' FCTs also measure from
+                    // arrival — ns-3 flow semantics.
+                    let posted: Vec<Time> = {
+                        let st = &self.colls[&tag];
+                        step.iter()
+                            .map(|f| st.arrivals.get(&f.src).copied().unwrap_or(st.start))
+                            .collect()
+                    };
+                    self.flows.start_many_posted(eng, &step, Some(&posted), &SimEvent::FlowDone);
+                }
+                None => {
+                    let start = self.colls[&tag].start;
+                    self.finish_collective(eng, tag, start)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn finish_collective(
+        &mut self,
+        eng: &mut Engine<SimEvent>,
+        def_id: u64,
+        start: Time,
+    ) -> anyhow::Result<()> {
+        let def = self.workload.collective(def_id).unwrap();
+        let now = eng.now();
+        if self.record_trace {
+            let r0 = def.ranks.first().copied().unwrap_or(0);
+            self.trace.record(r0, TraceCategory::Communication, def.label.clone(), start, now);
+        }
+        // unblock all participants
+        for r in def.ranks.clone() {
+            if self.state.get(&r) == Some(&RankState::BlockedCollective(def_id)) {
+                *self.pc.get_mut(&r).unwrap() += 1;
+                self.state.insert(r, RankState::Ready);
+                self.advance(eng, r)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::cost::LayerWork;
+    use crate::config::model::LayerKind;
+    use crate::config::presets;
+    use crate::system::collective::{CollectiveAlgo, CollectiveDef};
+    use crate::workload::op::RankProgram;
+
+    fn lw(mbs: f64) -> LayerWork {
+        LayerWork {
+            kind: LayerKind::Mlp,
+            hidden: 1024.0,
+            ffn: 4096.0,
+            heads: 8.0,
+            seq: 512.0,
+            mbs,
+            n_experts: 0.0,
+            top_k: 0.0,
+            tp: 1.0,
+            is_bwd: false,
+        }
+    }
+
+    fn cost_for(works: &[LayerWork], cluster: &ClusterSpec) -> CostTable {
+        let mut t = CostTable::native();
+        for w in works {
+            for n in &cluster.nodes {
+                t.register(w, &n.gpu);
+            }
+        }
+        t.evaluate().unwrap();
+        t
+    }
+
+    #[test]
+    fn pure_compute_program_runs() {
+        let c = presets::cluster("hopper", 1).unwrap();
+        let w = Workload {
+            programs: vec![RankProgram {
+                rank: 0,
+                ops: vec![
+                    Op::Compute { work: lw(1.0), label: "mlp" },
+                    Op::Compute { work: lw(1.0), label: "mlp" },
+                ],
+            }],
+            collectives: vec![],
+        };
+        let cost = cost_for(&[lw(1.0)], &c);
+        let rep = Scheduler::new(&w, &c, &cost).unwrap().run().unwrap();
+        let expect = 2.0 * crate::compute::cost::NativeCostModel
+            .time_seconds(&lw(1.0), &c.nodes[0].gpu);
+        assert!((rep.iteration_time.as_secs() - expect).abs() / expect < 1e-4);
+    }
+
+    #[test]
+    fn collective_blocks_until_all_arrive() {
+        // rank 1 computes first; the collective must not finish before
+        // rank 1 arrives, so iteration > compute time.
+        let c = presets::cluster("hopper", 1).unwrap();
+        let coll = CollectiveDef {
+            id: 0,
+            algo: CollectiveAlgo::AllReduceRing,
+            ranks: vec![0, 1],
+            bytes_per_rank: 1 << 20,
+            kind: CommKind::Tp,
+            label: "tp".into(),
+        };
+        let w = Workload {
+            programs: vec![
+                RankProgram { rank: 0, ops: vec![Op::Collective { def_id: 0 }] },
+                RankProgram {
+                    rank: 1,
+                    ops: vec![
+                        Op::Compute { work: lw(8.0), label: "mlp" },
+                        Op::Collective { def_id: 0 },
+                    ],
+                },
+            ],
+            collectives: vec![coll],
+        };
+        let cost = cost_for(&[lw(8.0)], &c);
+        let rep = Scheduler::new(&w, &c, &cost).unwrap().run().unwrap();
+        let compute =
+            crate::compute::cost::NativeCostModel.time_seconds(&lw(8.0), &c.nodes[0].gpu);
+        assert!(rep.iteration_time.as_secs() > compute);
+        assert!(rep.flows_completed > 0);
+        assert!(rep.fct_by_kind.contains_key("TP"));
+    }
+
+    #[test]
+    fn send_recv_pairs_deliver() {
+        let c = presets::cluster("hopper", 2).unwrap();
+        let w = Workload {
+            programs: vec![
+                RankProgram { rank: 0, ops: vec![Op::Send { peer: 8, bytes: 1 << 20, msg: 1 }] },
+                RankProgram {
+                    rank: 8,
+                    ops: vec![Op::Recv { msg: 1 }, Op::Compute { work: lw(1.0), label: "mlp" }],
+                },
+            ],
+            collectives: vec![],
+        };
+        let cost = cost_for(&[lw(1.0)], &c);
+        let rep = Scheduler::new(&w, &c, &cost).unwrap().run().unwrap();
+        assert_eq!(rep.flows_completed, 1);
+        assert!(rep.fct_by_kind.contains_key("PP"));
+        assert!(rep.iteration_time > Time::ZERO);
+    }
+
+    #[test]
+    fn recv_before_send_blocks_not_deadlocks() {
+        let c = presets::cluster("hopper", 1).unwrap();
+        // rank 1 recvs immediately; rank 0 computes, then sends
+        let w = Workload {
+            programs: vec![
+                RankProgram {
+                    rank: 0,
+                    ops: vec![
+                        Op::Compute { work: lw(4.0), label: "mlp" },
+                        Op::Send { peer: 1, bytes: 4096, msg: 9 },
+                    ],
+                },
+                RankProgram { rank: 1, ops: vec![Op::Recv { msg: 9 }] },
+            ],
+            collectives: vec![],
+        };
+        let cost = cost_for(&[lw(4.0)], &c);
+        let rep = Scheduler::new(&w, &c, &cost).unwrap().run().unwrap();
+        assert_eq!(rep.flows_completed, 1);
+    }
+
+    #[test]
+    fn true_deadlock_detected() {
+        let c = presets::cluster("hopper", 1).unwrap();
+        let w = Workload {
+            programs: vec![RankProgram { rank: 0, ops: vec![Op::Recv { msg: 42 }] }],
+            collectives: vec![],
+        };
+        let cost = CostTable::native();
+        let err = Scheduler::new(&w, &c, &cost).unwrap().run().unwrap_err();
+        assert!(err.to_string().contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn hetero_collective_bottlenecked_by_slow_member() {
+        // same collective on a homogeneous-hopper vs hetero cluster: the
+        // hetero one is slower because the A100 member computes longer
+        // before arriving (bottleneck-device rule, component C4).
+        let coll = |_ranks: Vec<u32>| CollectiveDef {
+            id: 0,
+            algo: CollectiveAlgo::AllReduceRing,
+            ranks: vec![0, 8],
+            bytes_per_rank: 1 << 22,
+            kind: CommKind::Dp,
+            label: "dp".into(),
+        };
+        let mk = |cluster: &ClusterSpec| {
+            let w = Workload {
+                programs: vec![
+                    RankProgram {
+                        rank: 0,
+                        ops: vec![
+                            Op::Compute { work: lw(8.0), label: "mlp" },
+                            Op::Collective { def_id: 0 },
+                        ],
+                    },
+                    RankProgram {
+                        rank: 8,
+                        ops: vec![
+                            Op::Compute { work: lw(8.0), label: "mlp" },
+                            Op::Collective { def_id: 0 },
+                        ],
+                    },
+                ],
+                collectives: vec![coll(vec![0, 8])],
+            };
+            let cost = cost_for(&[lw(8.0)], cluster);
+            Scheduler::new(&w, cluster, &cost).unwrap().run().unwrap().iteration_time
+        };
+        let homo = mk(&presets::cluster("hopper", 2).unwrap());
+        let hetero = mk(&presets::cluster_hetero(1, 1).unwrap());
+        assert!(hetero > homo, "hetero {hetero} <= homo {homo}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Command-line argument parser (substrate S15; `clap` is unavailable
+//! offline). Supports subcommands, `--flag`, `--key value`, `--key=value`
+//! and positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name). Arguments before the
+    /// first `--`-prefixed token: the first is the subcommand, the rest
+    /// are positional.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an unsigned integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'"))
+            }
+        }
+    }
+
+    /// Error out on options not in the allowed set (typo protection).
+    pub fn check_known(&self, known: &[&str]) -> anyhow::Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                anyhow::bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Declarative usage text builder.
+pub struct Usage {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<(&'static str, &'static str)>,
+}
+
+impl Usage {
+    pub fn render(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n",
+            self.program, self.about, self.program);
+        for (name, help) in &self.commands {
+            s.push_str(&format!("  {name:<22} {help}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["simulate", "config.json", "extra"]);
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.positional, vec!["config.json", "extra"]);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["run", "--model", "gpt-6.7b", "--nodes=16"]);
+        assert_eq!(a.opt("model"), Some("gpt-6.7b"));
+        assert_eq!(a.opt("nodes"), Some("16"));
+    }
+
+    #[test]
+    fn trailing_flag_is_flag() {
+        let a = parse(&["run", "--verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt("verbose"), None);
+    }
+
+    #[test]
+    fn flag_before_option() {
+        // --json is followed by another --opt, so it's a flag
+        let a = parse(&["x", "--json", "--out", "f.csv"]);
+        assert!(a.flag("json"));
+        assert_eq!(a.opt("out"), Some("f.csv"));
+    }
+
+    #[test]
+    fn numeric_accessors() {
+        let a = parse(&["x", "--nodes", "32", "--ratio", "0.5"]);
+        assert_eq!(a.opt_u64("nodes", 1).unwrap(), 32);
+        assert!((a.opt_f64("ratio", 0.0).unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(a.opt_u64("missing", 7).unwrap(), 7);
+        let bad = parse(&["x", "--nodes", "lots"]);
+        assert!(bad.opt_u64("nodes", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse(&["x", "--tpyo", "1"]);
+        assert!(a.check_known(&["model", "nodes"]).is_err());
+        let b = parse(&["x", "--model", "m"]);
+        assert!(b.check_known(&["model"]).is_ok());
+    }
+
+    #[test]
+    fn usage_renders_commands() {
+        let u = Usage {
+            program: "hetsim",
+            about: "simulator",
+            commands: vec![("fig5", "per-layer compute time")],
+        };
+        let text = u.render();
+        assert!(text.contains("fig5"));
+        assert!(text.contains("per-layer compute time"));
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree substrates for functionality normally pulled from crates.io
+//! (the offline registry only carries `xla`/`anyhow`/`thiserror`; see
+//! DESIGN.md §4 Substitutions, systems S14–S19).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

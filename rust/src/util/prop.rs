@@ -1,0 +1,154 @@
+//! Tiny property-based testing harness (substrate S17; `proptest` is
+//! unavailable offline). Runs a property over N generated cases with a
+//! deterministic per-case seed; on failure it retries with simpler
+//! generator sizes (linear shrink over the `size` hint) and reports the
+//! smallest failing seed/size.
+//!
+//! Used by `rust/tests/properties.rs` for the simulator invariants
+//! (event ordering, partition conservation, resharding shapes, max-min
+//! fairness, collective traffic conservation).
+
+use super::rng::Rng;
+
+/// Generation context handed to properties: a seeded RNG plus a size
+/// hint in [1, max_size] that scales generated structures.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    /// Vec of length [0, size] from a generator closure.
+    pub fn vec<T>(&mut self, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        let n = self.rng.range_usize(0, self.size + 1);
+        (0..n).map(|_| f(&mut self.rng)).collect()
+    }
+
+    /// Non-empty Vec of length [1, size.max(1)].
+    pub fn vec1<T>(&mut self, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        let n = self.rng.range_usize(1, self.size.max(1) + 1);
+        (0..n).map(|_| f(&mut self.rng)).collect()
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub max_size: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, max_size: 64, seed: 0x4845_5453_494d }
+    }
+}
+
+/// Result of a failed case, used in the panic message.
+#[derive(Debug)]
+pub struct Failure {
+    pub case: usize,
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+/// Run `prop` over `cfg.cases` generated cases. The property returns
+/// `Err(message)` (or panics) to signal failure; on failure we re-run at
+/// smaller sizes with the same seed to find a smaller counterexample.
+pub fn check(cfg: &Config, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        if let Err(msg) = run_one(&mut prop, seed, size) {
+            // shrink: retry the same seed with smaller sizes
+            let mut best = Failure { case, seed, size, message: msg };
+            let mut s = size / 2;
+            while s >= 1 {
+                match run_one(&mut prop, seed, s) {
+                    Err(msg) => {
+                        best = Failure { case, seed, size: s, message: msg };
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property failed (case {}, seed {:#x}, size {}): {}",
+                best.case, best.seed, best.size, best.message
+            );
+        }
+    }
+}
+
+fn run_one(
+    prop: &mut impl FnMut(&mut Gen) -> Result<(), String>,
+    seed: u64,
+    size: usize,
+) -> Result<(), String> {
+    let mut g = Gen { rng: Rng::new(seed), size };
+    prop(&mut g)
+}
+
+/// Run with default config.
+pub fn check_default(prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    check(&Config::default(), prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_default(|g| {
+            let v = g.vec(|r| r.range_u64(0, 100));
+            let sum: u64 = v.iter().sum();
+            if sum <= 100 * v.len() as u64 {
+                Ok(())
+            } else {
+                Err("sum bound violated".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_context() {
+        check_default(|g| {
+            let v = g.vec1(|r| r.range_u64(0, 10));
+            if v.len() < 5 {
+                Ok(())
+            } else {
+                Err(format!("len {} >= 5", v.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn shrink_finds_smaller_size() {
+        // capture the panic message and assert the reported size is small
+        let result = std::panic::catch_unwind(|| {
+            check(&Config { cases: 64, max_size: 64, seed: 5 }, |g| {
+                if g.size >= 3 {
+                    Err("size >= 3".into())
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // the shrink loop should have walked below the original size
+        assert!(msg.contains("size 3") || msg.contains("size 4"), "{msg}");
+    }
+
+    #[test]
+    fn sizes_scale_across_cases() {
+        let mut max_seen = 0;
+        check(&Config { cases: 50, max_size: 40, seed: 1 }, |g| {
+            max_seen = max_seen.max(g.size);
+            Ok(())
+        });
+        assert!(max_seen >= 30, "sizes should approach max_size, saw {max_seen}");
+    }
+}

@@ -1,0 +1,231 @@
+//! Summary statistics, percentiles and CCDF helpers (substrate S19) —
+//! used for the paper's FCT distributions (Fig 6) and bench reporting.
+
+/// Accumulates f64 samples and answers distribution queries.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    data: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Samples { data: Vec::with_capacity(n), sorted: false }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.data.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, xs: impl IntoIterator<Item = f64>) {
+        self.data.extend(xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.data.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f64>() / self.data.len() as f64
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.data.first().copied().unwrap_or(0.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.data.last().copied().unwrap_or(0.0)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Percentile by linear interpolation; `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let n = self.data.len();
+        if n == 1 {
+            return self.data[0];
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.data[lo] * (1.0 - frac) + self.data[hi] * frac
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.data.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var =
+            self.data.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (self.data.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    /// CCDF curve: for each sample value v (ascending), P(X > v).
+    /// Down-samples to at most `max_points` evenly spaced points.
+    pub fn ccdf(&mut self, max_points: usize) -> Vec<(f64, f64)> {
+        if self.data.is_empty() {
+            return vec![];
+        }
+        self.ensure_sorted();
+        let n = self.data.len();
+        let step = (n / max_points.max(1)).max(1);
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let v = self.data[i];
+            // fraction strictly greater than v
+            let gt = n - self.data.partition_point(|x| *x <= v);
+            out.push((v, gt as f64 / n as f64));
+            i += step;
+        }
+        // always include the max point
+        let last = self.data[n - 1];
+        if out.last().map(|(v, _)| *v != last).unwrap_or(true) {
+            out.push((last, 0.0));
+        }
+        out
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.data
+    }
+}
+
+/// Fixed summary of a sample set (one row of a results table).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &mut Samples) -> Summary {
+        Summary {
+            count: samples.len(),
+            mean: samples.mean(),
+            min: samples.min(),
+            p50: samples.percentile(50.0),
+            p90: samples.percentile(90.0),
+            p99: samples.percentile(99.0),
+            p999: samples.percentile(99.9),
+            max: samples.max(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples(xs: &[f64]) -> Samples {
+        let mut s = Samples::new();
+        s.extend(xs.iter().copied());
+        s
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let mut s = Samples::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert!(s.ccdf(10).is_empty());
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut s = samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert!((s.percentile(25.0) - 2.0).abs() < 1e-12);
+        assert!((s.percentile(10.0) - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let mut s = samples(&[5.0, 1.0, 9.0, 3.0, 3.0, 7.0, 2.0]);
+        let mut last = f64::NEG_INFINITY;
+        for p in 0..=100 {
+            let v = s.percentile(p as f64);
+            assert!(v >= last);
+            last = v;
+        }
+    }
+
+    #[test]
+    fn mean_and_stddev() {
+        let s = samples(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.stddev() - 2.138089935299395).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ccdf_monotone_decreasing() {
+        let mut s = samples(&[1.0, 1.0, 2.0, 3.0, 3.0, 3.0, 10.0]);
+        let curve = s.ccdf(100);
+        for w in curve.windows(2) {
+            assert!(w[1].0 >= w[0].0, "x ascending");
+            assert!(w[1].1 <= w[0].1, "p descending");
+        }
+        assert_eq!(curve.last().unwrap().1, 0.0);
+    }
+
+    #[test]
+    fn ccdf_values_correct() {
+        let mut s = samples(&[1.0, 2.0, 3.0, 4.0]);
+        let curve = s.ccdf(100);
+        // P(X > 1) = 3/4 at v=1
+        assert!((curve[0].1 - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_fields_ordered() {
+        let mut s = Samples::new();
+        s.extend((1..=1000).map(|i| i as f64));
+        let sum = Summary::of(&mut s);
+        assert_eq!(sum.count, 1000);
+        assert!(sum.min <= sum.p50 && sum.p50 <= sum.p90);
+        assert!(sum.p90 <= sum.p99 && sum.p99 <= sum.p999 && sum.p999 <= sum.max);
+        assert!((sum.p999 - 999.001).abs() < 0.01);
+    }
+}

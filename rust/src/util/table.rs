@@ -1,0 +1,167 @@
+//! Markdown / CSV table rendering (substrate S19) — every reproduced
+//! paper table and figure is emitted through this module so outputs are
+//! diffable and easy to paste into EXPERIMENTS.md.
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch in '{}'", self.title);
+        self.rows.push(cells);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// GitHub-flavoured markdown.
+    pub fn markdown(&self) -> String {
+        let w = self.widths();
+        let mut s = String::new();
+        if !self.title.is_empty() {
+            s.push_str(&format!("### {}\n\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            line.push('\n');
+            line
+        };
+        s.push_str(&fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for width in &w {
+            sep.push_str(&format!("{}|", "-".repeat(width + 2)));
+        }
+        sep.push('\n');
+        s.push_str(&sep);
+        for row in &self.rows {
+            s.push_str(&fmt_row(row));
+        }
+        s
+    }
+
+    /// RFC-4180-ish CSV (quotes cells containing commas/quotes).
+    pub fn csv(&self) -> String {
+        let esc = |c: &str| -> String {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut s = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Write CSV to `results/<name>.csv`, creating the directory.
+    pub fn write_csv(&self, dir: &std::path::Path, name: &str) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.csv())?;
+        Ok(path)
+    }
+}
+
+/// Format an f64 with engineering-friendly precision.
+pub fn fmt_sig(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1000.0 {
+        format!("{x:.0}")
+    } else if x.abs() >= 10.0 {
+        format!("{x:.1}")
+    } else if x.abs() >= 0.01 {
+        format!("{x:.3}")
+    } else {
+        format!("{x:.3e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Table {
+        let mut t = Table::new("Demo", &["model", "time"]);
+        t.row(vec!["gpt-6.7b".into(), "1.5ms".into()]);
+        t.row(vec!["mixtral".into(), "2.0ms".into()]);
+        t
+    }
+
+    #[test]
+    fn markdown_structure() {
+        let md = t().markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| model"));
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() == 4);
+    }
+
+    #[test]
+    fn markdown_alignment() {
+        let md = t().markdown();
+        let lines: Vec<&str> = md.lines().filter(|l| l.starts_with('|')).collect();
+        let lens: Vec<usize> = lines.iter().map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{lens:?}");
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x,y".into(), "he said \"hi\"".into()]);
+        let csv = t.csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn width_mismatch_panics() {
+        Table::new("t", &["a"]).row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn fmt_sig_ranges() {
+        assert_eq!(fmt_sig(0.0), "0");
+        assert_eq!(fmt_sig(12345.6), "12346");
+        assert_eq!(fmt_sig(42.42), "42.4");
+        assert_eq!(fmt_sig(1.23456), "1.235");
+        assert!(fmt_sig(0.0001234).contains('e'));
+    }
+
+    #[test]
+    fn write_csv_creates_file() {
+        let dir = std::env::temp_dir().join("hetsim_table_test");
+        let path = t().write_csv(&dir, "demo").unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.starts_with("model,time"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

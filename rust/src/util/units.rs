@@ -1,0 +1,259 @@
+//! Physical units for the simulator (substrate S19).
+//!
+//! The engine keeps time as integer **picoseconds** (`Time`) so event
+//! ordering never suffers floating-point drift; bandwidths are bytes/s
+//! (`Bandwidth`) and sizes are bytes (`ByteSize`). Human-facing parsing
+//! ("200Gbps", "4.4GB") and formatting live here too.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, Sub};
+
+/// Simulation time in integer picoseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Time(pub u64);
+
+pub const PS_PER_NS: u64 = 1_000;
+pub const PS_PER_US: u64 = 1_000_000;
+pub const PS_PER_MS: u64 = 1_000_000_000;
+pub const PS_PER_S: u64 = 1_000_000_000_000;
+
+impl Time {
+    pub const ZERO: Time = Time(0);
+    pub const MAX: Time = Time(u64::MAX);
+
+    pub fn from_ps(ps: u64) -> Time {
+        Time(ps)
+    }
+    pub fn from_ns(ns: f64) -> Time {
+        Time((ns * PS_PER_NS as f64).round() as u64)
+    }
+    pub fn from_us(us: f64) -> Time {
+        Time((us * PS_PER_US as f64).round() as u64)
+    }
+    pub fn from_ms(ms: f64) -> Time {
+        Time((ms * PS_PER_MS as f64).round() as u64)
+    }
+    pub fn from_secs(s: f64) -> Time {
+        Time((s * PS_PER_S as f64).round() as u64)
+    }
+
+    pub fn as_ps(self) -> u64 {
+        self.0
+    }
+    pub fn as_ns(self) -> f64 {
+        self.0 as f64 / PS_PER_NS as f64
+    }
+    pub fn as_us(self) -> f64 {
+        self.0 as f64 / PS_PER_US as f64
+    }
+    pub fn as_micros(self) -> f64 {
+        self.as_us()
+    }
+    pub fn as_ms(self) -> f64 {
+        self.0 as f64 / PS_PER_MS as f64
+    }
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 / PS_PER_S as f64
+    }
+
+    pub fn saturating_sub(self, rhs: Time) -> Time {
+        Time(self.0.saturating_sub(rhs.0))
+    }
+
+    /// Human-readable with adaptive unit.
+    pub fn human(self) -> String {
+        let ps = self.0;
+        if ps < PS_PER_NS {
+            format!("{ps}ps")
+        } else if ps < PS_PER_US {
+            format!("{:.2}ns", self.as_ns())
+        } else if ps < PS_PER_MS {
+            format!("{:.2}us", self.as_us())
+        } else if ps < PS_PER_S {
+            format!("{:.3}ms", self.as_ms())
+        } else {
+            format!("{:.4}s", self.as_secs())
+        }
+    }
+}
+
+impl Add for Time {
+    type Output = Time;
+    fn add(self, rhs: Time) -> Time {
+        Time(self.0 + rhs.0)
+    }
+}
+impl AddAssign for Time {
+    fn add_assign(&mut self, rhs: Time) {
+        self.0 += rhs.0;
+    }
+}
+impl Sub for Time {
+    type Output = Time;
+    fn sub(self, rhs: Time) -> Time {
+        Time(self.0 - rhs.0)
+    }
+}
+impl Mul<u64> for Time {
+    type Output = Time;
+    fn mul(self, rhs: u64) -> Time {
+        Time(self.0 * rhs)
+    }
+}
+impl fmt::Display for Time {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.human())
+    }
+}
+
+/// Bandwidth in bytes per second.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct Bandwidth(pub f64);
+
+impl Bandwidth {
+    pub fn from_gbps(gigabits_per_sec: f64) -> Bandwidth {
+        Bandwidth(gigabits_per_sec * 1e9 / 8.0)
+    }
+    pub fn from_gbytes(gigabytes_per_sec: f64) -> Bandwidth {
+        Bandwidth(gigabytes_per_sec * 1e9)
+    }
+    pub fn bytes_per_sec(self) -> f64 {
+        self.0
+    }
+    pub fn gbps(self) -> f64 {
+        self.0 * 8.0 / 1e9
+    }
+    /// Time to serialize `bytes` at this bandwidth.
+    pub fn transfer_time(self, bytes: u64) -> Time {
+        if self.0 <= 0.0 {
+            return Time::MAX;
+        }
+        Time::from_secs(bytes as f64 / self.0)
+    }
+}
+
+impl Div<f64> for Bandwidth {
+    type Output = Bandwidth;
+    fn div(self, rhs: f64) -> Bandwidth {
+        Bandwidth(self.0 / rhs)
+    }
+}
+impl fmt::Display for Bandwidth {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.1}Gbps", self.gbps())
+    }
+}
+
+/// Data size in bytes with human parsing/formatting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct ByteSize(pub u64);
+
+impl ByteSize {
+    pub fn kib(n: u64) -> ByteSize {
+        ByteSize(n * 1024)
+    }
+    pub fn mib(n: u64) -> ByteSize {
+        ByteSize(n * 1024 * 1024)
+    }
+    pub fn gib(n: u64) -> ByteSize {
+        ByteSize(n * 1024 * 1024 * 1024)
+    }
+    pub fn bytes(self) -> u64 {
+        self.0
+    }
+    pub fn human(self) -> String {
+        let b = self.0 as f64;
+        if b < 1024.0 {
+            format!("{}B", self.0)
+        } else if b < 1024.0 * 1024.0 {
+            format!("{:.1}KB", b / 1024.0)
+        } else if b < 1024.0 * 1024.0 * 1024.0 {
+            format!("{:.1}MB", b / (1024.0 * 1024.0))
+        } else {
+            format!("{:.2}GB", b / (1024.0 * 1024.0 * 1024.0))
+        }
+    }
+}
+
+impl fmt::Display for ByteSize {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.human())
+    }
+}
+
+/// Parse strings like "200Gbps", "600GB/s", "4800Mbps" into a Bandwidth.
+pub fn parse_bandwidth(s: &str) -> Option<Bandwidth> {
+    let s = s.trim();
+    let split = s.find(|c: char| c.is_alphabetic())?;
+    let (num, unit) = s.split_at(split);
+    let v: f64 = num.trim().parse().ok()?;
+    match unit.trim().to_ascii_lowercase().as_str() {
+        "gbps" | "gb/s(bits)" => Some(Bandwidth::from_gbps(v)),
+        "mbps" => Some(Bandwidth::from_gbps(v / 1000.0)),
+        "tbps" => Some(Bandwidth::from_gbps(v * 1000.0)),
+        "gb/s" | "gbs" => Some(Bandwidth::from_gbytes(v)),
+        "mb/s" => Some(Bandwidth::from_gbytes(v / 1000.0)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_conversions_roundtrip() {
+        assert_eq!(Time::from_ns(30.66).as_ps(), 30_660);
+        assert!((Time::from_us(1.5).as_ns() - 1500.0).abs() < 1e-9);
+        assert!((Time::from_secs(2.0).as_ms() - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_ordering_exact() {
+        assert!(Time::from_ns(1.0) < Time::from_ns(1.001));
+        assert_eq!(Time::from_ps(5) + Time::from_ps(7), Time::from_ps(12));
+    }
+
+    #[test]
+    fn time_human_formats() {
+        assert_eq!(Time::from_ps(500).human(), "500ps");
+        assert_eq!(Time::from_ns(368.0).human(), "368.00ns");
+        assert!(Time::from_secs(1.5).human().ends_with('s'));
+    }
+
+    #[test]
+    fn bandwidth_gbps() {
+        let nic = Bandwidth::from_gbps(200.0);
+        assert!((nic.bytes_per_sec() - 25e9).abs() < 1.0);
+        assert!((nic.gbps() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_time_formula() {
+        // paper §5: jumbo frame 9200 B at 4800 Gbps -> 9200*8/4800e9 s
+        let nvlink = Bandwidth::from_gbps(4800.0);
+        let t = nvlink.transfer_time(9200);
+        let expect_ns = 9200.0 * 8.0 / 4800.0; // = 15.33 ns
+        assert!((t.as_ns() - expect_ns).abs() < 0.01, "{}", t.as_ns());
+    }
+
+    #[test]
+    fn zero_bandwidth_is_infinite_time() {
+        assert_eq!(Bandwidth(0.0).transfer_time(1), Time::MAX);
+    }
+
+    #[test]
+    fn bytesize_human() {
+        assert_eq!(ByteSize(512).human(), "512B");
+        assert_eq!(ByteSize::kib(67).human(), "67.0KB");
+        assert_eq!(ByteSize::gib(4).human(), "4.00GB");
+    }
+
+    #[test]
+    fn parse_bandwidth_variants() {
+        assert!((parse_bandwidth("200Gbps").unwrap().gbps() - 200.0).abs() < 1e-9);
+        assert!((parse_bandwidth("600GB/s").unwrap().bytes_per_sec() - 600e9).abs() < 1.0);
+        assert!((parse_bandwidth("1000 Mbps").unwrap().gbps() - 1.0).abs() < 1e-9);
+        assert!(parse_bandwidth("fast").is_none());
+    }
+}

@@ -1,0 +1,538 @@
+//! AICB-like workload generator (component **C1**).
+//!
+//! Expands (model, cluster, framework spec) into per-rank programs for
+//! one training iteration under a GPipe-style schedule:
+//!
+//! * forward: per microbatch, per stage — embedding (stage 0),
+//!   attention / MLP (or MoE) blocks with Megatron-style TP allreduces
+//!   (2 per layer per direction), MoE dispatch/combine all-to-alls,
+//!   activation sends to the next stage;
+//! * backward: mirrored, with doubled FLOPs and reversed P2P direction;
+//! * gradient synchronization: per-stage DP allreduce — slot-wise rings
+//!   when the communicating groups agree on shapes, or a full
+//!   [`crate::system::resharding`] plan when they do not (component C2).
+//!
+//! The generator emits *device-group-specific* work: each group's layer
+//! count, TP degree and microbatch count come from its own plan entry,
+//! which is exactly the paper's "distinct workload traces tailored to
+//! the device group's role".
+
+use std::collections::HashMap;
+
+use crate::compute::cost::LayerWork;
+use crate::compute::table::CostTable;
+use crate::config::cluster::ClusterSpec;
+use crate::config::framework::FrameworkSpec;
+use crate::config::model::{LayerKind, ModelSpec};
+use crate::system::collective::{CollectiveAlgo, CollectiveDef, CommKind};
+use crate::system::device_group::DeviceGroups;
+use crate::system::resharding;
+
+use super::op::{Op, RankProgram, Workload};
+
+/// Scaling knobs for tractable simulation of large configs. Every cap
+/// is reported in the workload summary — no silent truncation.
+#[derive(Debug, Clone)]
+pub struct WorkloadOptions {
+    /// Cap microbatches simulated per device group (None = all).
+    pub microbatch_limit: Option<u64>,
+    /// Include per-layer Other (layernorm/residual) compute ops.
+    pub include_other: bool,
+    /// Emit MoE dispatch/combine all-to-alls for MoE models.
+    pub moe_alltoall: bool,
+    /// Emit the end-of-iteration DP gradient synchronization.
+    pub dp_sync: bool,
+}
+
+impl Default for WorkloadOptions {
+    fn default() -> Self {
+        WorkloadOptions {
+            microbatch_limit: None,
+            include_other: true,
+            moe_alltoall: true,
+            dp_sync: true,
+        }
+    }
+}
+
+/// Generate the workload for one training iteration.
+pub fn generate(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    fw: &FrameworkSpec,
+    opts: &WorkloadOptions,
+) -> anyhow::Result<Workload> {
+    fw.validate(model, cluster)?;
+    let groups = DeviceGroups::derive(fw);
+    let mut ops: HashMap<u32, Vec<Op>> = HashMap::new();
+    for g in &fw.groups {
+        for r in g.ranks() {
+            ops.insert(r, Vec::new());
+        }
+    }
+    let mut colls: Vec<CollectiveDef> = Vec::new();
+    let mut next_coll: u64 = 0;
+    let mut next_msg: u64 = 0;
+
+    let d = model.dtype_bytes;
+    let mlp_kind = if model.moe.is_some() { LayerKind::Moe } else { LayerKind::Mlp };
+    let (n_experts, top_k) = match model.moe {
+        Some(m) => (m.num_experts as f64, m.top_k as f64),
+        None => (0.0, 0.0),
+    };
+
+    let layer_work = |kind: LayerKind, mbs: u64, tp: u32, bwd: bool| LayerWork {
+        kind,
+        hidden: model.hidden_size as f64,
+        ffn: model.ffn_hidden as f64,
+        heads: model.num_heads as f64,
+        seq: model.seq_len as f64,
+        mbs: mbs as f64,
+        n_experts,
+        top_k,
+        tp: tp as f64,
+        is_bwd: bwd,
+    };
+
+    for g in &fw.groups {
+        let mbs = g.micro_batch.min(g.batch_share);
+        let mut m = g.num_microbatches();
+        if let Some(limit) = opts.microbatch_limit {
+            m = m.min(limit.max(1));
+        }
+        let act_bytes = mbs * model.seq_len * model.hidden_size * d;
+
+        for mb in 0..m {
+            // ---------------- forward ----------------
+            for (s, stage) in g.stages.iter().enumerate() {
+                let tp = stage.tp();
+                let ranks = &stage.ranks;
+                // receive activation from the previous stage
+                if s > 0 {
+                    emit_p2p(
+                        &mut ops,
+                        &mut next_msg,
+                        &g.stages[s - 1].ranks,
+                        ranks,
+                        act_bytes,
+                    );
+                }
+                if stage.has_embedding {
+                    for r in ranks {
+                        ops.get_mut(r).unwrap().push(Op::Compute {
+                            work: layer_work(LayerKind::Embedding, mbs, tp, false),
+                            label: "embedding-fwd",
+                        });
+                    }
+                }
+                for _layer in 0..stage.num_layers {
+                    // attention block
+                    for r in ranks {
+                        ops.get_mut(r).unwrap().push(Op::Compute {
+                            work: layer_work(LayerKind::Attention, mbs, tp, false),
+                            label: "attention-fwd",
+                        });
+                    }
+                    if tp > 1 {
+                        emit_collective(
+                            &mut ops,
+                            &mut colls,
+                            &mut next_coll,
+                            CollectiveAlgo::AllReduceRing,
+                            ranks.clone(),
+                            act_bytes,
+                            CommKind::Tp,
+                            format!("tp-ar-g{}s{s}mb{mb}-attn-f", g.id),
+                        );
+                    }
+                    // MoE dispatch
+                    if mlp_kind == LayerKind::Moe && opts.moe_alltoall && tp > 1 {
+                        emit_collective(
+                            &mut ops,
+                            &mut colls,
+                            &mut next_coll,
+                            CollectiveAlgo::AllToAll,
+                            ranks.clone(),
+                            act_bytes * model.moe.unwrap().top_k as u64,
+                            CommKind::Ep,
+                            format!("ep-a2a-g{}s{s}mb{mb}-disp-f", g.id),
+                        );
+                    }
+                    for r in ranks {
+                        ops.get_mut(r).unwrap().push(Op::Compute {
+                            work: layer_work(mlp_kind, mbs, tp, false),
+                            label: if mlp_kind == LayerKind::Moe { "moe-fwd" } else { "mlp-fwd" },
+                        });
+                    }
+                    // MoE combine
+                    if mlp_kind == LayerKind::Moe && opts.moe_alltoall && tp > 1 {
+                        emit_collective(
+                            &mut ops,
+                            &mut colls,
+                            &mut next_coll,
+                            CollectiveAlgo::AllToAll,
+                            ranks.clone(),
+                            act_bytes * model.moe.unwrap().top_k as u64,
+                            CommKind::Ep,
+                            format!("ep-a2a-g{}s{s}mb{mb}-comb-f", g.id),
+                        );
+                    }
+                    if tp > 1 {
+                        emit_collective(
+                            &mut ops,
+                            &mut colls,
+                            &mut next_coll,
+                            CollectiveAlgo::AllReduceRing,
+                            ranks.clone(),
+                            act_bytes,
+                            CommKind::Tp,
+                            format!("tp-ar-g{}s{s}mb{mb}-mlp-f", g.id),
+                        );
+                    }
+                    if opts.include_other {
+                        for r in ranks {
+                            ops.get_mut(r).unwrap().push(Op::Compute {
+                                work: layer_work(LayerKind::Other, mbs, tp, false),
+                                label: "other-fwd",
+                            });
+                        }
+                    }
+                }
+            }
+            // ---------------- backward (stages reversed) ----------------
+            for (s, stage) in g.stages.iter().enumerate().rev() {
+                let tp = stage.tp();
+                let ranks = &stage.ranks;
+                if s + 1 < g.stages.len() {
+                    // receive grad-activation from the next stage
+                    emit_p2p(
+                        &mut ops,
+                        &mut next_msg,
+                        &g.stages[s + 1].ranks,
+                        ranks,
+                        act_bytes,
+                    );
+                }
+                for _layer in 0..stage.num_layers {
+                    for r in ranks {
+                        ops.get_mut(r).unwrap().push(Op::Compute {
+                            work: layer_work(mlp_kind, mbs, tp, true),
+                            label: if mlp_kind == LayerKind::Moe { "moe-bwd" } else { "mlp-bwd" },
+                        });
+                    }
+                    if tp > 1 {
+                        emit_collective(
+                            &mut ops,
+                            &mut colls,
+                            &mut next_coll,
+                            CollectiveAlgo::AllReduceRing,
+                            ranks.clone(),
+                            act_bytes,
+                            CommKind::Tp,
+                            format!("tp-ar-g{}s{s}mb{mb}-mlp-b", g.id),
+                        );
+                    }
+                    for r in ranks {
+                        ops.get_mut(r).unwrap().push(Op::Compute {
+                            work: layer_work(LayerKind::Attention, mbs, tp, true),
+                            label: "attention-bwd",
+                        });
+                    }
+                    if tp > 1 {
+                        emit_collective(
+                            &mut ops,
+                            &mut colls,
+                            &mut next_coll,
+                            CollectiveAlgo::AllReduceRing,
+                            ranks.clone(),
+                            act_bytes,
+                            CommKind::Tp,
+                            format!("tp-ar-g{}s{s}mb{mb}-attn-b", g.id),
+                        );
+                    }
+                }
+                if stage.has_embedding {
+                    for r in ranks {
+                        ops.get_mut(r).unwrap().push(Op::Compute {
+                            work: layer_work(LayerKind::Embedding, mbs, tp, true),
+                            label: "embedding-bwd",
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // ---------------- DP gradient synchronization ----------------
+    if opts.dp_sync {
+        for sync in &groups.dp_sync {
+            let stage_idx = sync.stage as usize;
+            // gradient bytes of this stage (unsharded)
+            let sample = &fw.groups.iter().find(|g| g.stages.len() > stage_idx).unwrap().stages
+                [stage_idx];
+            let full_bytes = stage_grad_bytes(model, sample.num_layers, sample.has_embedding);
+            if resharding::group_needs_resharding(&sync.participants) {
+                let plan =
+                    resharding::plan(&sync.participants, full_bytes, sync.stage, &mut next_coll);
+                for def in plan.all_defs() {
+                    colls.push(def.clone());
+                    for r in &def.ranks {
+                        ops.get_mut(r).unwrap().push(Op::Collective { def_id: def.id });
+                    }
+                }
+            } else {
+                // slot-wise rings: ranks holding identical shards.
+                // Gradient sync is reduce-scatter + all-gather (the two
+                // DP collectives per iteration of paper Table 1).
+                let tp = sync.participants[0].tp;
+                for slot in 0..tp as usize {
+                    let ranks: Vec<u32> =
+                        sync.participants.iter().map(|p| p.ranks[slot]).collect();
+                    for (algo, tag) in [
+                        (CollectiveAlgo::ReduceScatter, "rs"),
+                        (CollectiveAlgo::AllGather, "ag"),
+                    ] {
+                        let id = next_coll;
+                        next_coll += 1;
+                        let def = CollectiveDef {
+                            id,
+                            algo,
+                            ranks: ranks.clone(),
+                            bytes_per_rank: full_bytes / tp as u64,
+                            kind: CommKind::Dp,
+                            label: format!("dp-{tag}-s{}slot{slot}", sync.stage),
+                        };
+                        colls.push(def);
+                        for r in &ranks {
+                            ops.get_mut(r).unwrap().push(Op::Collective { def_id: id });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let mut programs: Vec<RankProgram> = ops
+        .into_iter()
+        .map(|(rank, ops)| RankProgram { rank, ops })
+        .collect();
+    programs.sort_by_key(|p| p.rank);
+    let w = Workload { programs, collectives: colls };
+    w.validate()?;
+    Ok(w)
+}
+
+/// Per-stage gradient bytes (unsharded): stage layers + embedding.
+pub fn stage_grad_bytes(model: &ModelSpec, num_layers: u32, has_embedding: bool) -> u64 {
+    let h = model.hidden_size;
+    let ffn = model.ffn_hidden;
+    let mats = if model.gated_mlp { 3 } else { 2 };
+    let mlp = match model.moe {
+        Some(m) => m.num_experts as u64 * mats * h * ffn,
+        None => mats * h * ffn,
+    };
+    let per_layer = 4 * h * h + mlp + 4 * h;
+    let embed = if has_embedding { model.vocab_size * h } else { 0 };
+    (num_layers as u64 * per_layer + embed) * model.grad_dtype_bytes
+}
+
+/// P2P between stages: slot-wise (bytes/tp each) when TP degrees match,
+/// leader fan-out of the full activation otherwise.
+fn emit_p2p(
+    ops: &mut HashMap<u32, Vec<Op>>,
+    next_msg: &mut u64,
+    from: &[u32],
+    to: &[u32],
+    act_bytes: u64,
+) {
+    if from.len() == to.len() {
+        let per = (act_bytes / from.len() as u64).max(1);
+        for (s, r) in from.iter().zip(to.iter()) {
+            let msg = *next_msg;
+            *next_msg += 1;
+            ops.get_mut(s).unwrap().push(Op::Send { peer: *r, bytes: per, msg });
+            ops.get_mut(r).unwrap().push(Op::Recv { msg });
+        }
+    } else {
+        let leader = from[0];
+        for r in to {
+            let msg = *next_msg;
+            *next_msg += 1;
+            ops.get_mut(&leader).unwrap().push(Op::Send { peer: *r, bytes: act_bytes, msg });
+            ops.get_mut(r).unwrap().push(Op::Recv { msg });
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_collective(
+    ops: &mut HashMap<u32, Vec<Op>>,
+    colls: &mut Vec<CollectiveDef>,
+    next_coll: &mut u64,
+    algo: CollectiveAlgo,
+    ranks: Vec<u32>,
+    bytes_per_rank: u64,
+    kind: CommKind,
+    label: String,
+) {
+    let id = *next_coll;
+    *next_coll += 1;
+    for r in &ranks {
+        ops.get_mut(r).unwrap().push(Op::Collective { def_id: id });
+    }
+    colls.push(CollectiveDef { id, algo, ranks, bytes_per_rank, kind, label });
+}
+
+/// Register every (compute op, GPU) pair of a workload in a cost table.
+pub fn register_costs(
+    w: &Workload,
+    cluster: &ClusterSpec,
+    table: &mut CostTable,
+) -> anyhow::Result<()> {
+    for p in &w.programs {
+        let gpu = cluster
+            .gpu_of_rank(p.rank)
+            .ok_or_else(|| anyhow::anyhow!("rank {} outside cluster", p.rank))?;
+        for op in &p.ops {
+            if let Op::Compute { work, .. } = op {
+                table.register(work, gpu);
+            }
+        }
+    }
+    table.evaluate()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::framework::{FrameworkSpec, ParallelismSpec};
+    use crate::config::presets;
+
+    fn tiny_model() -> ModelSpec {
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.num_layers = 4;
+        m.global_batch = 16;
+        m.micro_batch = 4;
+        m
+    }
+
+    #[test]
+    fn generates_valid_workload_tp_dp() {
+        let m = tiny_model();
+        let c = presets::cluster("hopper", 1).unwrap();
+        let f = FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 4, pp: 1, dp: 2 }).unwrap();
+        let w = generate(&m, &c, &f, &WorkloadOptions::default()).unwrap();
+        assert_eq!(w.programs.len(), 8);
+        // TP allreduces present: 2 per layer per direction per mb per group
+        let tp_colls = w.collectives.iter().filter(|c| c.kind == CommKind::Tp).count();
+        // 2 groups * 2 mb * 4 layers * 4 = 64
+        assert_eq!(tp_colls, 64);
+        // DP sync: tp=4 slots x (reduce-scatter + all-gather)
+        let dp_colls = w.collectives.iter().filter(|c| c.kind == CommKind::Dp).count();
+        assert_eq!(dp_colls, 8);
+    }
+
+    #[test]
+    fn pipeline_emits_p2p() {
+        let m = tiny_model();
+        let c = presets::cluster("hopper", 1).unwrap();
+        let f = FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 2, pp: 2, dp: 2 }).unwrap();
+        let w = generate(&m, &c, &f, &WorkloadOptions::default()).unwrap();
+        let (_, _, p2p) = w.op_counts();
+        // fwd + bwd per mb per group, slot-wise: 2 groups * 2 mb * 2 dirs * 2 slots * 2 (send+recv)
+        assert_eq!(p2p, 32);
+    }
+
+    #[test]
+    fn tp1_emits_no_tp_collectives() {
+        let m = tiny_model();
+        let c = presets::cluster("ampere", 1).unwrap();
+        let f = FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 1, pp: 2, dp: 4 }).unwrap();
+        let w = generate(&m, &c, &f, &WorkloadOptions::default()).unwrap();
+        assert_eq!(w.collectives.iter().filter(|c| c.kind == CommKind::Tp).count(), 0);
+        assert!(w.collectives.iter().any(|c| c.kind == CommKind::Dp));
+    }
+
+    #[test]
+    fn moe_emits_alltoall() {
+        let mut m = presets::model("mixtral-8x7b").unwrap();
+        m.num_layers = 2;
+        m.global_batch = 8;
+        m.micro_batch = 4;
+        let c = presets::cluster("hopper", 1).unwrap();
+        let f = FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 2, pp: 1, dp: 4 }).unwrap();
+        let w = generate(&m, &c, &f, &WorkloadOptions::default()).unwrap();
+        let ep = w.collectives.iter().filter(|c| c.kind == CommKind::Ep).count();
+        // 4 groups * 1 mb * 2 layers * 2 a2a (fwd only) = 16
+        assert_eq!(ep, 16);
+    }
+
+    #[test]
+    fn microbatch_limit_caps_work() {
+        let m = tiny_model(); // 2 microbatches per group
+        let c = presets::cluster("hopper", 1).unwrap();
+        let f = FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 4, pp: 1, dp: 2 }).unwrap();
+        let full = generate(&m, &c, &f, &WorkloadOptions::default()).unwrap();
+        let capped = generate(
+            &m,
+            &c,
+            &f,
+            &WorkloadOptions { microbatch_limit: Some(1), ..Default::default() },
+        )
+        .unwrap();
+        assert!(capped.op_counts().0 < full.op_counts().0);
+    }
+
+    #[test]
+    fn dp_sync_bytes_match_param_accounting() {
+        let m = presets::model("llama2-70b").unwrap();
+        // full model, one stage: grads = params * 4 bytes
+        let b = stage_grad_bytes(&m, m.num_layers, true);
+        let expect = m.param_count() * 4;
+        let rel = (b as f64 - expect as f64).abs() / expect as f64;
+        assert!(rel < 0.01, "{b} vs {expect}");
+    }
+
+    #[test]
+    fn table1_tp_frequency_about_350() {
+        // Llama-2 70B, TP=8 PP=8: TP collectives per rank per iteration
+        let m = presets::model("llama2-70b").unwrap();
+        let c = presets::cluster("hopper", 256).unwrap(); // 2048 GPUs
+        let f = FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 8, pp: 8, dp: 32 }).unwrap();
+        let w = generate(&m, &c, &f, &WorkloadOptions::default()).unwrap();
+        // count TP collectives rank 0 participates in
+        let p0 = &w.programs[0];
+        let tp_ids: std::collections::HashSet<u64> = w
+            .collectives
+            .iter()
+            .filter(|c| c.kind == CommKind::Tp)
+            .map(|c| c.id)
+            .collect();
+        let freq = p0
+            .ops
+            .iter()
+            .filter(|op| matches!(op, Op::Collective { def_id } if tp_ids.contains(def_id)))
+            .count();
+        // paper Table 1: ~350 per iteration
+        assert!((300..=400).contains(&freq), "TP freq {freq}");
+    }
+
+    #[test]
+    fn register_costs_covers_all_ops() {
+        let m = tiny_model();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let f = FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 4, pp: 2, dp: 2 }).unwrap();
+        let w = generate(&m, &c, &f, &WorkloadOptions::default()).unwrap();
+        let mut t = CostTable::native();
+        register_costs(&w, &c, &mut t).unwrap();
+        // every compute op resolvable
+        for p in &w.programs {
+            let gpu = c.gpu_of_rank(p.rank).unwrap();
+            for op in &p.ops {
+                if let Op::Compute { work, .. } = op {
+                    t.time(work, gpu).unwrap();
+                }
+            }
+        }
+    }
+}

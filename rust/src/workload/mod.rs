@@ -1,0 +1,23 @@
+//! Workload layer (system S3/S4, paper component **C1**).
+//!
+//! * [`op`] — the compute/communication op taxonomy and per-rank
+//!   programs (the simulator's "workload file" contents).
+//! * [`aicb`] — the AICB-like workload generator: expands a model +
+//!   framework spec into per-rank programs with device-group-specific
+//!   work ("generate distinct workload traces tailored to the device
+//!   group's role in the parallelism strategy").
+//! * [`partition`] — non-uniform workload partitioning: layers ∝ stage
+//!   compute power, batch shares ∝ group power, variable TP degrees
+//!   (paper Fig 3).
+//! * [`parser`] — workload-trace file format (write + parse; the
+//!   "custom parser that registers the compute and communication
+//!   events based on the device group's workload file").
+
+pub mod aicb;
+pub mod op;
+pub mod parser;
+pub mod partition;
+
+pub use aicb::{generate, WorkloadOptions};
+pub use op::{Op, RankProgram, Workload};
+pub use partition::plan_hetero;

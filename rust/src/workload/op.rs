@@ -1,0 +1,214 @@
+//! Op taxonomy: what a rank does during one training iteration.
+
+use crate::compute::cost::LayerWork;
+use crate::system::collective::CollectiveDef;
+
+/// One operation in a rank's program. Ranks execute their program in
+/// order; `Collective` and `Recv` are blocking, `Send` is asynchronous
+/// (NCCL-style non-blocking isend).
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Local kernel execution; duration resolved via the cost table.
+    Compute { work: LayerWork, label: &'static str },
+    /// Participate in collective `def_id` (blocks until it completes).
+    Collective { def_id: u64 },
+    /// Point-to-point activation/gradient transfer to `peer`.
+    Send { peer: u32, bytes: u64, msg: u64 },
+    /// Block until message `msg` arrives.
+    Recv { msg: u64 },
+}
+
+/// A rank's full program for one iteration.
+#[derive(Debug, Clone, Default)]
+pub struct RankProgram {
+    pub rank: u32,
+    pub ops: Vec<Op>,
+}
+
+/// The complete workload: programs for every rank + the collective
+/// definitions they reference.
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    pub programs: Vec<RankProgram>,
+    pub collectives: Vec<CollectiveDef>,
+}
+
+impl Workload {
+    pub fn collective(&self, id: u64) -> Option<&CollectiveDef> {
+        self.collectives.iter().find(|c| c.id == id)
+    }
+
+    /// Count ops by coarse category: (compute, collective, p2p).
+    pub fn op_counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for p in &self.programs {
+            for op in &p.ops {
+                match op {
+                    Op::Compute { .. } => c.0 += 1,
+                    Op::Collective { .. } => c.1 += 1,
+                    Op::Send { .. } | Op::Recv { .. } => c.2 += 1,
+                }
+            }
+        }
+        c
+    }
+
+    /// Validation invariants: every referenced collective exists; every
+    /// rank in a collective's group has exactly one matching op per
+    /// occurrence; sends and recvs pair up by message id.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use std::collections::HashMap;
+        let defs: HashMap<u64, &CollectiveDef> =
+            self.collectives.iter().map(|c| (c.id, c)).collect();
+        // collective participation count per (def, rank)
+        let mut part: HashMap<(u64, u32), usize> = HashMap::new();
+        let mut sends: HashMap<u64, (u32, u32)> = HashMap::new(); // msg -> (src, dst)
+        let mut recvs: HashMap<u64, u32> = HashMap::new();
+        for p in &self.programs {
+            for op in &p.ops {
+                match op {
+                    Op::Collective { def_id } => {
+                        anyhow::ensure!(
+                            defs.contains_key(def_id),
+                            "rank {} references unknown collective {def_id}",
+                            p.rank
+                        );
+                        *part.entry((*def_id, p.rank)).or_insert(0) += 1;
+                    }
+                    Op::Send { peer, msg, .. } => {
+                        anyhow::ensure!(
+                            sends.insert(*msg, (p.rank, *peer)).is_none(),
+                            "duplicate send for message {msg}"
+                        );
+                    }
+                    Op::Recv { msg } => {
+                        anyhow::ensure!(
+                            recvs.insert(*msg, p.rank).is_none(),
+                            "duplicate recv for message {msg}"
+                        );
+                    }
+                    Op::Compute { .. } => {}
+                }
+            }
+        }
+        for (id, def) in &defs {
+            let counts: Vec<usize> =
+                def.ranks.iter().map(|r| part.get(&(*id, *r)).copied().unwrap_or(0)).collect();
+            anyhow::ensure!(
+                counts.iter().all(|c| *c == 1),
+                "collective {id} ({}) participation mismatch: {counts:?} over ranks {:?}",
+                def.label,
+                def.ranks
+            );
+        }
+        for (msg, (src, dst)) in &sends {
+            match recvs.get(msg) {
+                Some(r) if r == dst => {}
+                Some(r) => anyhow::bail!("message {msg} sent {src}->{dst} but received by {r}"),
+                None => anyhow::bail!("message {msg} sent {src}->{dst} but never received"),
+            }
+        }
+        for msg in recvs.keys() {
+            anyhow::ensure!(sends.contains_key(msg), "recv of message {msg} without a send");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::LayerKind;
+    use crate::system::collective::{CollectiveAlgo, CommKind};
+
+    fn lw() -> LayerWork {
+        LayerWork {
+            kind: LayerKind::Mlp,
+            hidden: 64.0,
+            ffn: 256.0,
+            heads: 4.0,
+            seq: 32.0,
+            mbs: 1.0,
+            n_experts: 0.0,
+            top_k: 0.0,
+            tp: 1.0,
+            is_bwd: false,
+        }
+    }
+
+    fn coll(id: u64, ranks: Vec<u32>) -> CollectiveDef {
+        CollectiveDef {
+            id,
+            algo: CollectiveAlgo::AllReduceRing,
+            ranks,
+            bytes_per_rank: 1024,
+            kind: CommKind::Tp,
+            label: "t".into(),
+        }
+    }
+
+    #[test]
+    fn valid_workload_passes() {
+        let w = Workload {
+            programs: vec![
+                RankProgram {
+                    rank: 0,
+                    ops: vec![
+                        Op::Compute { work: lw(), label: "mlp" },
+                        Op::Collective { def_id: 1 },
+                        Op::Send { peer: 1, bytes: 10, msg: 7 },
+                    ],
+                },
+                RankProgram {
+                    rank: 1,
+                    ops: vec![Op::Collective { def_id: 1 }, Op::Recv { msg: 7 }],
+                },
+            ],
+            collectives: vec![coll(1, vec![0, 1])],
+        };
+        w.validate().unwrap();
+        assert_eq!(w.op_counts(), (1, 2, 2));
+    }
+
+    #[test]
+    fn missing_participant_rejected() {
+        let w = Workload {
+            programs: vec![RankProgram { rank: 0, ops: vec![Op::Collective { def_id: 1 }] }],
+            collectives: vec![coll(1, vec![0, 1])],
+        };
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_collective_rejected() {
+        let w = Workload {
+            programs: vec![RankProgram { rank: 0, ops: vec![Op::Collective { def_id: 9 }] }],
+            collectives: vec![],
+        };
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn unmatched_send_rejected() {
+        let w = Workload {
+            programs: vec![RankProgram {
+                rank: 0,
+                ops: vec![Op::Send { peer: 1, bytes: 1, msg: 5 }],
+            }],
+            collectives: vec![],
+        };
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn mismatched_recv_rank_rejected() {
+        let w = Workload {
+            programs: vec![
+                RankProgram { rank: 0, ops: vec![Op::Send { peer: 1, bytes: 1, msg: 5 }] },
+                RankProgram { rank: 2, ops: vec![Op::Recv { msg: 5 }] },
+            ],
+            collectives: vec![],
+        };
+        assert!(w.validate().is_err());
+    }
+}

@@ -1,0 +1,240 @@
+//! Non-uniform workload partitioning (component **C1**, paper §3):
+//! assign more layers to faster pipeline stages, more batch to faster
+//! device groups, and variable TP degrees to heterogeneous device
+//! groups (Fig 3).
+
+use crate::config::cluster::ClusterSpec;
+use crate::config::framework::{
+    DeviceGroupPlan, FrameworkSpec, ParallelismSpec, StagePlan,
+};
+use crate::config::model::ModelSpec;
+
+/// Split `total` into parts proportional to `weights`, each at least
+/// `minimum`, conserving the sum exactly (largest-remainder method).
+pub fn split_proportional(total: u64, weights: &[f64], minimum: u64) -> Vec<u64> {
+    let n = weights.len();
+    assert!(n > 0, "no weights");
+    assert!(total >= minimum * n as u64, "total {total} cannot give {n} parts >= {minimum}");
+    let wsum: f64 = weights.iter().sum();
+    if wsum <= 0.0 {
+        // degenerate: equal split
+        return crate::config::framework::split_evenly(total, n as u64);
+    }
+    let spendable = total - minimum * n as u64;
+    let ideal: Vec<f64> = weights.iter().map(|w| spendable as f64 * w / wsum).collect();
+    let mut parts: Vec<u64> = ideal.iter().map(|x| x.floor() as u64).collect();
+    let assigned: u64 = parts.iter().sum();
+    let mut rem: Vec<(usize, f64)> =
+        ideal.iter().enumerate().map(|(i, x)| (i, x - x.floor())).collect();
+    rem.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    for k in 0..(spendable - assigned) as usize {
+        parts[rem[k % n].0] += 1;
+    }
+    for p in &mut parts {
+        *p += minimum;
+    }
+    parts
+}
+
+/// Heterogeneity-aware plan: same rank layout as the uniform mapping
+/// (TP fastest, then PP, then DP), but with
+/// * layers per stage ∝ the stage's aggregate compute power, and
+/// * batch share per device group ∝ the group's aggregate power.
+///
+/// The bottleneck-device rule (component C4) applies inside a stage:
+/// a heterogeneous TP group advances at its slowest member, so stage
+/// power = tp × min(member power).
+pub fn plan_hetero(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    par: ParallelismSpec,
+) -> anyhow::Result<FrameworkSpec> {
+    let uniform = FrameworkSpec::uniform(model, cluster, par)?;
+    let mut groups = Vec::with_capacity(uniform.groups.len());
+    let mut group_powers = Vec::with_capacity(uniform.groups.len());
+
+    for g in &uniform.groups {
+        // per-stage power: bottleneck member x member count
+        let stage_powers: Vec<f64> = g
+            .stages
+            .iter()
+            .map(|s| {
+                let min_power = s
+                    .ranks
+                    .iter()
+                    .filter_map(|r| cluster.gpu_of_rank(*r))
+                    .map(|gpu| gpu.compute_power())
+                    .fold(f64::INFINITY, f64::min);
+                min_power * s.ranks.len() as f64
+            })
+            .collect();
+        let layers = split_proportional(model.num_layers as u64, &stage_powers, 1);
+        let mut stages: Vec<StagePlan> = Vec::with_capacity(g.stages.len());
+        for (s, plan) in g.stages.iter().enumerate() {
+            stages.push(StagePlan {
+                ranks: plan.ranks.clone(),
+                num_layers: layers[s] as u32,
+                has_embedding: plan.has_embedding,
+            });
+        }
+        group_powers.push(stage_powers.iter().sum::<f64>());
+        groups.push(DeviceGroupPlan {
+            id: g.id,
+            stages,
+            batch_share: 0, // filled below
+            micro_batch: g.micro_batch,
+        });
+    }
+
+    let shares = split_proportional(model.global_batch, &group_powers, 1);
+    for (g, share) in groups.iter_mut().zip(shares) {
+        g.batch_share = share;
+    }
+    let spec = FrameworkSpec { groups, base: par };
+    spec.validate(model, cluster)?;
+    Ok(spec)
+}
+
+/// The paper's Fig-3-style scenario: Llama-2 70B on one 4×H100 node +
+/// one 4×A100 node, two device groups with variable TP degree,
+/// non-uniform layer split and non-uniform batch shares — the
+/// configuration that exercises resharding (TP 3 vs TP 4).
+pub fn fig3_cluster() -> anyhow::Result<ClusterSpec> {
+    use crate::config::presets;
+    let mut hopper = presets::cluster("hopper", 1)?;
+    let mut ampere = presets::cluster("ampere", 1)?;
+    hopper.nodes[0].gpus_per_node = 4;
+    ampere.nodes[0].gpus_per_node = 4;
+    Ok(ClusterSpec {
+        name: "fig3-4h100-4a100".into(),
+        nodes: vec![hopper.nodes.remove(0), ampere.nodes.remove(0)],
+        switch_bw: hopper.switch_bw,
+        switch_delay: hopper.switch_delay,
+    })
+}
+
+pub fn fig3_model() -> anyhow::Result<ModelSpec> {
+    use crate::config::presets;
+    let mut m = presets::model("llama2-70b")?;
+    m.global_batch = 24; // paper Fig 3
+    m.micro_batch = 1;
+    Ok(m)
+}
+
+/// The Fig-3 framework plan:
+/// * DG0 (H100 node): stage0 = 3 GPUs TP=3 with 75 layers, stage1 =
+///   1 GPU TP=1 with 5 layers; batch share 16.
+/// * DG1 (A100 node): single stage, 4 GPUs TP=4, all 80 layers;
+///   batch share 8.
+/// DP sync between TP=3/TP=1 and TP=4 participants requires resharding.
+pub fn fig3_plan(model: &ModelSpec, cluster: &ClusterSpec) -> anyhow::Result<FrameworkSpec> {
+    anyhow::ensure!(cluster.total_gpus() == 8, "fig3 cluster has 8 GPUs");
+    let spec = FrameworkSpec {
+        groups: vec![
+            DeviceGroupPlan {
+                id: 0,
+                stages: vec![
+                    StagePlan { ranks: vec![0, 1, 2], num_layers: 75, has_embedding: true },
+                    StagePlan { ranks: vec![3], num_layers: 5, has_embedding: false },
+                ],
+                batch_share: 16,
+                micro_batch: model.micro_batch,
+            },
+            DeviceGroupPlan {
+                id: 1,
+                stages: vec![StagePlan {
+                    ranks: vec![4, 5, 6, 7],
+                    num_layers: 80,
+                    has_embedding: true,
+                }],
+                batch_share: 8,
+                micro_batch: model.micro_batch,
+            },
+        ],
+        base: ParallelismSpec { tp: 4, pp: 1, dp: 2 },
+    };
+    spec.validate(model, cluster)?;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::system::device_group::DeviceGroups;
+    use crate::system::resharding;
+
+    #[test]
+    fn split_proportional_conserves() {
+        let parts = split_proportional(80, &[3.0, 1.0], 1);
+        assert_eq!(parts.iter().sum::<u64>(), 80);
+        assert!(parts[0] > parts[1]);
+        // ~3:1 split
+        assert!((55..=62).contains(&parts[0]), "{parts:?}");
+    }
+
+    #[test]
+    fn split_proportional_respects_minimum() {
+        let parts = split_proportional(10, &[1000.0, 1.0, 1.0], 1);
+        assert_eq!(parts.iter().sum::<u64>(), 10);
+        assert!(parts.iter().all(|p| *p >= 1), "{parts:?}");
+    }
+
+    #[test]
+    fn split_proportional_zero_weights_falls_back() {
+        let parts = split_proportional(9, &[0.0, 0.0, 0.0], 1);
+        assert_eq!(parts.iter().sum::<u64>(), 9);
+    }
+
+    #[test]
+    fn hetero_plan_gives_fast_groups_more_batch() {
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.global_batch = 128;
+        m.micro_batch = 4;
+        let c = presets::cluster_hetero(2, 2).unwrap(); // 32 GPUs
+        let f = plan_hetero(&m, &c, ParallelismSpec { tp: 8, pp: 1, dp: 4 }).unwrap();
+        // groups 0,1 are on A100 nodes; 2,3 on H100 (contiguous layout)
+        assert!(f.groups[2].batch_share > f.groups[0].batch_share);
+        let total: u64 = f.groups.iter().map(|g| g.batch_share).sum();
+        assert_eq!(total, 128);
+    }
+
+    #[test]
+    fn hetero_plan_gives_fast_stages_more_layers() {
+        let mut m = presets::model("llama2-70b").unwrap();
+        m.global_batch = 32;
+        m.micro_batch = 1;
+        // one pipeline spanning an A100 node then an H100 node
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let f = plan_hetero(&m, &c, ParallelismSpec { tp: 8, pp: 2, dp: 1 }).unwrap();
+        let g = &f.groups[0];
+        // stage 0 on the A100 node gets fewer layers than stage 1 (H100)
+        assert!(g.stages[0].num_layers < g.stages[1].num_layers, "{:?}",
+            g.stages.iter().map(|s| s.num_layers).collect::<Vec<_>>());
+        assert_eq!(g.stages.iter().map(|s| s.num_layers).sum::<u32>(), 80);
+    }
+
+    #[test]
+    fn uniform_cluster_hetero_plan_reduces_to_uniform() {
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.global_batch = 64;
+        m.micro_batch = 4;
+        let c = presets::cluster("hopper", 2).unwrap();
+        let f = plan_hetero(&m, &c, ParallelismSpec { tp: 4, pp: 1, dp: 4 }).unwrap();
+        let shares: Vec<u64> = f.groups.iter().map(|g| g.batch_share).collect();
+        assert_eq!(shares, vec![16, 16, 16, 16]);
+    }
+
+    #[test]
+    fn fig3_plan_requires_resharding() {
+        let m = fig3_model().unwrap();
+        let c = fig3_cluster().unwrap();
+        let f = fig3_plan(&m, &c).unwrap();
+        let dg = DeviceGroups::derive(&f);
+        assert_eq!(dg.dp_sync.len(), 1);
+        assert!(resharding::group_needs_resharding(&dg.dp_sync[0].participants));
+        // the paper's non-uniform properties
+        assert_ne!(f.groups[0].batch_share, f.groups[1].batch_share);
+        assert_ne!(f.groups[0].stages[0].tp(), f.groups[1].stages[0].tp());
+    }
+}

@@ -1,0 +1,148 @@
+//! Failure-injection tests: corrupted workloads, malformed configs and
+//! hostile inputs must produce clear errors, never wrong results or
+//! hangs.
+
+use hetsim::compute::table::CostTable;
+use hetsim::config::framework::{FrameworkSpec, ParallelismSpec};
+use hetsim::config::presets;
+use hetsim::system::scheduler::Scheduler;
+use hetsim::workload::aicb::{generate, register_costs, WorkloadOptions};
+use hetsim::workload::op::{Op, Workload};
+
+fn small_setup() -> (hetsim::config::cluster::ClusterSpec, Workload, CostTable) {
+    let mut m = presets::model("gpt-6.7b").unwrap();
+    m.num_layers = 2;
+    m.global_batch = 8;
+    m.micro_batch = 4;
+    let c = presets::cluster("hopper", 1).unwrap();
+    let f = FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 4, pp: 1, dp: 2 }).unwrap();
+    let w = generate(&m, &c, &f, &WorkloadOptions::default()).unwrap();
+    let mut t = CostTable::native();
+    register_costs(&w, &c, &mut t).unwrap();
+    (c, w, t)
+}
+
+#[test]
+fn dangling_recv_is_a_deadlock_error_not_a_hang() {
+    let (c, mut w, t) = small_setup();
+    // inject a recv that will never be satisfied
+    w.programs[0].ops.push(Op::Recv { msg: 999_999 });
+    let err = Scheduler::new(&w, &c, &t).unwrap().run().unwrap_err();
+    assert!(err.to_string().contains("deadlock"), "{err}");
+}
+
+#[test]
+fn missing_collective_participant_deadlocks_cleanly() {
+    let (c, mut w, t) = small_setup();
+    // drop one rank's participation in the first TP collective
+    let def_id = w.collectives[0].id;
+    let victim = w.collectives[0].ranks[0];
+    let prog = w.programs.iter_mut().find(|p| p.rank == victim).unwrap();
+    let pos = prog
+        .ops
+        .iter()
+        .position(|op| matches!(op, Op::Collective { def_id: d } if *d == def_id))
+        .unwrap();
+    prog.ops.remove(pos);
+    // validation catches it up front
+    assert!(w.validate().is_err());
+    // and even if validation were skipped, the run terminates with a
+    // deadlock diagnosis rather than hanging
+    let err = Scheduler::new(&w, &c, &t).unwrap().run().unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("deadlock") || msg.contains("collective"), "{msg}");
+}
+
+#[test]
+fn unregistered_cost_pair_reports_table_miss() {
+    let (c, w, _) = small_setup();
+    let empty = CostTable::native(); // never evaluated
+    let err = Scheduler::new(&w, &c, &empty).unwrap().run().unwrap_err();
+    assert!(err.to_string().contains("cost table miss"), "{err}");
+}
+
+#[test]
+fn rank_outside_cluster_rejected() {
+    let (c, mut w, t) = small_setup();
+    w.programs[0].rank = 500; // beyond the 8-GPU cluster
+    let err = Scheduler::new(&w, &c, &t).unwrap().run().unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("outside cluster") || msg.contains("no program"), "{msg}");
+}
+
+#[test]
+fn corrupt_trace_files_rejected_with_context() {
+    for (text, needle) in [
+        ("", "header"),
+        ("{\"type\":\"header\",\"version\":9}", "version"),
+        ("{\"type\":\"header\",\"version\":1}\n{\"type\":\"op\",\"rank\":0,\"op\":\"fly\"}", "line 2"),
+        ("{\"type\":\"header\",\"version\":1}\n{\"type\":\"mystery\"}", "line 2"),
+    ] {
+        let err = hetsim::workload::parser::parse(text).unwrap_err();
+        assert!(err.to_string().contains(needle), "{text:?} -> {err}");
+    }
+}
+
+#[test]
+fn malformed_scenario_files_rejected() {
+    for text in [
+        "not json at all",
+        "{\"model\": \"gpt-6.7b\"}",                        // missing keys
+        "{\"model\": 42, \"cluster\": \"ampere:1\", \"parallelism\": {\"tp\":1,\"pp\":1,\"dp\":8}}",
+        "{\"model\": \"gpt-6.7b\", \"cluster\": \"warp:2\", \"parallelism\": {\"tp\":1,\"pp\":1,\"dp\":8}}",
+    ] {
+        assert!(hetsim::config::loader::load_scenario(text).is_err(), "{text}");
+    }
+}
+
+#[test]
+fn zero_byte_and_single_rank_collectives_complete() {
+    // degenerate collectives must not wedge the scheduler
+    use hetsim::system::collective::{CollectiveAlgo, CollectiveDef, CommKind};
+    use hetsim::workload::op::RankProgram;
+    let c = presets::cluster("hopper", 1).unwrap();
+    let w = Workload {
+        programs: vec![
+            RankProgram { rank: 0, ops: vec![Op::Collective { def_id: 0 }, Op::Collective { def_id: 1 }] },
+            RankProgram { rank: 1, ops: vec![Op::Collective { def_id: 1 }] },
+        ],
+        collectives: vec![
+            CollectiveDef {
+                id: 0,
+                algo: CollectiveAlgo::AllReduceRing,
+                ranks: vec![0],
+                bytes_per_rank: 1 << 20,
+                kind: CommKind::Tp,
+                label: "single".into(),
+            },
+            CollectiveDef {
+                id: 1,
+                algo: CollectiveAlgo::AllGather,
+                ranks: vec![0, 1],
+                bytes_per_rank: 0,
+                kind: CommKind::Tp,
+                label: "empty".into(),
+            },
+        ],
+    };
+    let t = CostTable::native();
+    let rep = Scheduler::new(&w, &c, &t).unwrap().run().unwrap();
+    assert_eq!(rep.flows_completed, 0); // both degenerate
+}
+
+#[test]
+fn event_budget_stops_runaway_configs() {
+    // a pathological but valid workload must hit the engine's event
+    // budget rather than spin forever — exercised via the public API by
+    // shrinking the budget through an enormous flow count would be slow;
+    // instead assert the guard exists at the engine level.
+    use hetsim::engine::Engine;
+    use hetsim::util::units::Time;
+    let mut e: Engine<u8> = Engine::new();
+    e.max_events = 10;
+    e.schedule_at(Time(0), 0);
+    let res = e.run(|eng, _| {
+        eng.schedule_in(Time(1), 0);
+    });
+    assert!(res.unwrap_err().to_string().contains("budget"));
+}

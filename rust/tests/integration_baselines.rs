@@ -1,0 +1,100 @@
+//! Baseline integration: the homogeneous (SimAI-like) runs bracket the
+//! heterogeneous truth; the analytical (Sailor-like) estimate is in the
+//! right regime; the PJRT coll_model agrees with the native mirror
+//! inside the analytical baseline.
+
+use hetsim::baselines::{analytical, homogenize};
+use hetsim::config::framework::ParallelismSpec;
+use hetsim::config::presets;
+use hetsim::simulator::SimulationBuilder;
+use hetsim::workload::aicb::WorkloadOptions;
+
+fn opts() -> WorkloadOptions {
+    WorkloadOptions { microbatch_limit: Some(1), ..Default::default() }
+}
+
+fn small_model() -> hetsim::config::model::ModelSpec {
+    let mut m = presets::model("gpt-6.7b").unwrap();
+    m.num_layers = 8;
+    m
+}
+
+#[test]
+fn homogeneous_baselines_bracket_hetero_iteration_time() {
+    let model = small_model();
+    let hetero_cluster = presets::cluster_hetero(1, 1).unwrap();
+    let par = ParallelismSpec { tp: 8, pp: 1, dp: 2 };
+    let run = |cluster| {
+        SimulationBuilder::new(model.clone(), cluster)
+            .parallelism(par)
+            .workload_options(opts())
+            .build()
+            .unwrap()
+            .run_iteration()
+            .unwrap()
+            .iteration_time
+    };
+    let hetero = run(hetero_cluster.clone());
+    let homo_slow = run(homogenize(&hetero_cluster, 0).unwrap()); // A100 clone
+    let homo_fast = run(homogenize(&hetero_cluster, 1).unwrap()); // H100 clone
+    assert!(homo_fast <= hetero, "fast {homo_fast} > hetero {hetero}");
+    assert!(hetero <= homo_slow, "hetero {hetero} > slow {homo_slow}");
+    // the homogeneous-simulator error the paper motivates: using the
+    // fast clone underestimates heterogeneous reality
+    assert!(homo_fast < hetero);
+}
+
+#[test]
+fn analytical_estimate_in_event_sim_regime() {
+    let model = small_model();
+    let cluster = presets::cluster("hopper", 1).unwrap();
+    let sim = SimulationBuilder::new(model, cluster.clone())
+        .parallelism(ParallelismSpec { tp: 4, pp: 1, dp: 2 })
+        .workload_options(opts())
+        .build()
+        .unwrap();
+    let event = sim.run_iteration().unwrap().iteration_time;
+    let est = analytical::estimate(&sim.workload, &cluster, &sim.cost, None).unwrap();
+    let ratio = event.as_secs() / est.total.as_secs();
+    assert!((0.2..5.0).contains(&ratio), "event/analytical = {ratio}");
+}
+
+#[test]
+fn analytical_pjrt_backend_matches_native() {
+    let model = small_model();
+    let cluster = presets::cluster_hetero(1, 1).unwrap();
+    let sim = SimulationBuilder::new(model, cluster.clone())
+        .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+        .workload_options(opts())
+        .build()
+        .unwrap();
+    let native = analytical::estimate(&sim.workload, &cluster, &sim.cost, None).unwrap();
+    let pjrt = hetsim::runtime::PjrtCollModel::load().expect("run `make artifacts`");
+    let with_pjrt =
+        analytical::estimate(&sim.workload, &cluster, &sim.cost, Some(&pjrt)).unwrap();
+    let rel = (native.total.as_secs() - with_pjrt.total.as_secs()).abs()
+        / native.total.as_secs();
+    assert!(rel < 1e-3, "native {} vs pjrt {}", native.total, with_pjrt.total);
+}
+
+#[test]
+fn analytical_underestimates_under_contention() {
+    // analytical ignores NIC contention between concurrent DP rings, so
+    // with many rings sharing rails the event sim should be slower.
+    let mut model = presets::model("gpt-6.7b").unwrap();
+    model.num_layers = 2;
+    let cluster = presets::cluster("ampere", 2).unwrap();
+    let sim = SimulationBuilder::new(model, cluster.clone())
+        .parallelism(ParallelismSpec { tp: 2, pp: 1, dp: 8 })
+        .workload_options(opts())
+        .build()
+        .unwrap();
+    let event = sim.run_iteration().unwrap().iteration_time;
+    let est = analytical::estimate(&sim.workload, &cluster, &sim.cost, None).unwrap();
+    assert!(
+        event.as_secs() > 0.8 * est.total.as_secs(),
+        "event {} far below analytical {}",
+        event,
+        est.total
+    );
+}

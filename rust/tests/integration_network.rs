@@ -1,0 +1,203 @@
+//! Network-layer integration: contention, heterogeneous interconnects
+//! and collective execution over the fluid flow simulator.
+
+use hetsim::config::presets;
+use hetsim::engine::Engine;
+use hetsim::network::flow::{FlowId, FlowSim, FlowSpec};
+use hetsim::network::topology::Topology;
+use hetsim::system::collective::{
+    CollectiveAlgo, CollectiveDef, CollectiveExec, CommKind, RingPolicy,
+};
+
+#[derive(Debug, Clone, Copy)]
+struct Done(FlowId);
+
+fn drive(fs: &mut FlowSim, eng: &mut Engine<Done>) -> Vec<f64> {
+    let mut fcts = Vec::new();
+    while let Some(ev) = eng.step() {
+        if let Some(rec) = fs.on_complete(eng, ev.payload.0, ev.id, &Done) {
+            fcts.push(rec.fct().as_secs());
+        }
+    }
+    fcts
+}
+
+/// Run a collective to completion over a flow sim, returning (total
+/// time, per-flow FCTs).
+fn run_collective(
+    cluster: &hetsim::config::cluster::ClusterSpec,
+    def: &CollectiveDef,
+    policy: RingPolicy,
+) -> (f64, Vec<f64>) {
+    let topo = Topology::build(cluster).unwrap();
+    let mut fs = FlowSim::new(topo);
+    let mut eng: Engine<Done> = Engine::new();
+    let mut exec = CollectiveExec::plan(cluster, def, policy);
+    let mut fcts = Vec::new();
+    let step: Vec<FlowSpec> = exec.next_step().unwrap().to_vec();
+    fs.start_many(&mut eng, &step, &Done);
+    while let Some(ev) = eng.step() {
+        if let Some(rec) = fs.on_complete(&mut eng, ev.payload.0, ev.id, &Done) {
+            fcts.push(rec.fct().as_secs());
+            if exec.flow_done() {
+                if let Some(next) = exec.next_step().map(|s| s.to_vec()) {
+                    fs.start_many(&mut eng, &next, &Done);
+                }
+            }
+        }
+    }
+    (eng.now().as_secs(), fcts)
+}
+
+#[test]
+fn intra_node_allreduce_close_to_alpha_beta_model() {
+    // ring allreduce 8 ranks over NVLink: t ~= 2(n-1)/n * S / bw
+    let c = presets::cluster("ampere", 1).unwrap();
+    let bytes = 256u64 << 20; // 256 MiB
+    let def = CollectiveDef {
+        id: 0,
+        algo: CollectiveAlgo::AllReduceRing,
+        ranks: (0..8).collect(),
+        bytes_per_rank: bytes,
+        kind: CommKind::Tp,
+        label: "t".into(),
+    };
+    let (total, fcts) = run_collective(&c, &def, RingPolicy::HeteroAware);
+    assert_eq!(fcts.len(), 14 * 8);
+    let bw = 300e9; // NVLink unidirectional bytes/s
+    let expect = 2.0 * (7.0 / 8.0) * (bytes as f64 / bw);
+    let rel = (total - expect).abs() / expect;
+    assert!(rel < 0.05, "total {total} vs alpha-beta {expect} (rel {rel})");
+}
+
+#[test]
+fn inter_node_allreduce_bottlenecked_by_nic() {
+    let c = presets::cluster("hopper", 4).unwrap();
+    let bytes = 128u64 << 20;
+    // ring over local rank 0 of each node -> NIC-bound
+    let def = CollectiveDef {
+        id: 0,
+        algo: CollectiveAlgo::AllReduceRing,
+        ranks: vec![0, 8, 16, 24],
+        bytes_per_rank: bytes,
+        kind: CommKind::Dp,
+        label: "d".into(),
+    };
+    let (total, _) = run_collective(&c, &def, RingPolicy::HeteroAware);
+    let nic = 25e9;
+    let expect = 2.0 * (3.0 / 4.0) * (bytes as f64 / nic);
+    let rel = (total - expect).abs() / expect;
+    assert!(rel < 0.05, "total {total} vs {expect} (rel {rel})");
+}
+
+#[test]
+fn hetero_ring_no_slower_than_slowest_homogeneous_intra_node() {
+    let bytes = 64u64 << 20;
+    let mk = |cluster: &hetsim::config::cluster::ClusterSpec, ranks: Vec<u32>| {
+        let def = CollectiveDef {
+            id: 0,
+            algo: CollectiveAlgo::AllReduceRing,
+            ranks,
+            bytes_per_rank: bytes,
+            kind: CommKind::Tp,
+            label: "t".into(),
+        };
+        run_collective(cluster, &def, RingPolicy::HeteroAware).0
+    };
+    let ampere = mk(&presets::cluster("ampere", 1).unwrap(), (0..8).collect());
+    let hopper = mk(&presets::cluster("hopper", 1).unwrap(), (0..8).collect());
+    // hetero cluster, intra-node ring on the ampere node = ampere time
+    let hetero = mk(&presets::cluster_hetero(1, 1).unwrap(), (0..8).collect());
+    assert!(hopper < ampere);
+    let rel = (hetero - ampere).abs() / ampere;
+    assert!(rel < 0.02, "hetero {hetero} vs ampere {ampere}");
+}
+
+#[test]
+fn hetero_aware_ring_beats_naive_on_mixed_ring() {
+    // ring spanning both architectures with fully interleaved rank
+    // order: node-major reordering turns most ring edges intra-node
+    // (NVLink) and removes NIC contention between same-rail flows
+    let c = presets::cluster_hetero(2, 2).unwrap();
+    let ranks: Vec<u32> = (0..32).map(|i| (i % 4) * 8 + i / 4).collect();
+    let def = CollectiveDef {
+        id: 0,
+        algo: CollectiveAlgo::AllReduceRing,
+        ranks,
+        bytes_per_rank: 256 << 20,
+        kind: CommKind::Dp,
+        label: "d".into(),
+    };
+    let (naive, _) = run_collective(&c, &def, RingPolicy::Naive);
+    let (aware, _) = run_collective(&c, &def, RingPolicy::HeteroAware);
+    // Finding (EXPERIMENTS.md): on rail-only topologies the fluid model
+    // shows the rail design absorbs bad orderings almost entirely —
+    // hetero-aware ordering must simply never be worse.
+    assert!(aware <= naive * 1.001, "aware {aware} worse than naive {naive}");
+}
+
+#[test]
+fn contention_slows_sharing_flows() {
+    let c = presets::cluster("ampere", 2).unwrap();
+    let topo = Topology::build(&c).unwrap();
+    let mut fs = FlowSim::new(topo);
+    let mut eng: Engine<Done> = Engine::new();
+    // 4 flows over the same rail vs 1 flow: per-flow FCT ~4x
+    let bytes = 25_000_000_00u64; // 0.1 s alone
+    let specs: Vec<FlowSpec> =
+        (0..4).map(|i| FlowSpec { src: 7, dst: 15, bytes, tag: i }).collect();
+    fs.start_many(&mut eng, &specs, &Done);
+    let fcts = drive(&mut fs, &mut eng);
+    for f in &fcts {
+        assert!((f - 0.4).abs() < 0.01, "fct {f}");
+    }
+}
+
+#[test]
+fn hierarchical_beats_flat_ring_across_nodes() {
+    // 2 nodes x 8 GPUs, allreduce over all 16: hierarchical (NVLink
+    // intra + per-rail inter) should beat a flat ring that crosses the
+    // NIC 16 times.
+    let c = presets::cluster("hopper", 2).unwrap();
+    let bytes = 64u64 << 20;
+    let flat = CollectiveDef {
+        id: 0,
+        algo: CollectiveAlgo::AllReduceRing,
+        ranks: (0..16).collect(),
+        bytes_per_rank: bytes,
+        kind: CommKind::Dp,
+        label: "flat".into(),
+    };
+    let hier = CollectiveDef {
+        id: 1,
+        algo: CollectiveAlgo::AllReduceHierarchical,
+        ranks: (0..16).collect(),
+        bytes_per_rank: bytes,
+        kind: CommKind::Dp,
+        label: "hier".into(),
+    };
+    let (t_flat, _) = run_collective(&c, &flat, RingPolicy::HeteroAware);
+    let (t_hier, _) = run_collective(&c, &hier, RingPolicy::HeteroAware);
+    assert!(t_hier < t_flat, "hier {t_hier} >= flat {t_flat}");
+}
+
+#[test]
+fn fct_records_tagged_for_distribution_analysis() {
+    let c = presets::cluster("ampere", 2).unwrap();
+    let def = CollectiveDef {
+        id: 42,
+        algo: CollectiveAlgo::AllGather,
+        ranks: vec![0, 8],
+        bytes_per_rank: 1 << 20,
+        kind: CommKind::Dp,
+        label: "d".into(),
+    };
+    let topo = Topology::build(&c).unwrap();
+    let mut fs = FlowSim::new(topo);
+    let mut eng: Engine<Done> = Engine::new();
+    let mut exec = CollectiveExec::plan(&c, &def, RingPolicy::HeteroAware);
+    let step: Vec<FlowSpec> = exec.next_step().unwrap().to_vec();
+    fs.start_many(&mut eng, &step, &Done);
+    drive(&mut fs, &mut eng);
+    assert!(fs.records.iter().all(|r| r.tag == 42));
+}

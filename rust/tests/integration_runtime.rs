@@ -1,0 +1,120 @@
+//! PJRT round-trip integration: the AOT artifacts (JAX Layer-2 graph +
+//! Pallas Layer-1 kernels, lowered to HLO text) must load, execute, and
+//! agree with the native Rust mirror row-for-row.
+//!
+//! Requires `make artifacts` (the Makefile orders this before tests).
+
+use hetsim::compute::cost::{LayerWork, NativeCostModel};
+use hetsim::compute::table::{CostEvaluator, CostTable};
+use hetsim::config::model::LayerKind;
+use hetsim::config::presets;
+use hetsim::runtime::{artifacts_dir, PjrtCollModel, PjrtCostModel, Runtime};
+
+fn work(kind: LayerKind, mbs: f64, tp: f64, is_bwd: bool) -> LayerWork {
+    LayerWork {
+        kind,
+        hidden: 4096.0,
+        ffn: 16384.0,
+        heads: 32.0,
+        seq: 2048.0,
+        mbs,
+        n_experts: if kind == LayerKind::Moe { 8.0 } else { 0.0 },
+        top_k: if kind == LayerKind::Moe { 2.0 } else { 0.0 },
+        tp,
+        is_bwd,
+    }
+}
+
+#[test]
+fn pjrt_client_boots() {
+    let rt = Runtime::cpu().unwrap();
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+}
+
+#[test]
+fn artifacts_exist() {
+    let dir = artifacts_dir().expect("run `make artifacts` before cargo test");
+    assert!(dir.join("cost_model.hlo.txt").exists());
+    assert!(dir.join("coll_model.hlo.txt").exists());
+    assert!(dir.join("manifest.json").exists());
+}
+
+#[test]
+fn cost_artifact_matches_native_mirror() {
+    // every layer kind x gpu x fwd/bwd x a few tp/mbs combinations
+    let mut pjrt = PjrtCostModel::load().expect("run `make artifacts`");
+    let native = NativeCostModel;
+    let gpus = [presets::gpu("A100").unwrap(), presets::gpu("H100").unwrap()];
+    let mut layers = Vec::new();
+    let mut gpu_rows = Vec::new();
+    let mut expected = Vec::new();
+    for gpu in &gpus {
+        for kind in [
+            LayerKind::Embedding,
+            LayerKind::Attention,
+            LayerKind::Mlp,
+            LayerKind::Moe,
+            LayerKind::Other,
+        ] {
+            for (mbs, tp, bwd) in [(1.0, 1.0, false), (8.0, 4.0, false), (8.0, 8.0, true)] {
+                let w = work(kind, mbs, tp, bwd);
+                layers.push(w.descriptor_row());
+                gpu_rows.push(gpu.descriptor_row());
+                expected.push(native.time_seconds(&w, gpu));
+            }
+        }
+    }
+    let got = pjrt.evaluate_batch(&layers, &gpu_rows).unwrap();
+    assert_eq!(got.len(), expected.len());
+    for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+        let rel = ((*g as f64) - e).abs() / e.max(1e-12);
+        assert!(rel < 1e-3, "row {i}: pjrt={g} native={e} rel={rel} ({:?})", layers[i]);
+    }
+}
+
+#[test]
+fn cost_table_with_pjrt_backend() {
+    let pjrt = PjrtCostModel::load().expect("run `make artifacts`");
+    let mut table = CostTable::new(Box::new(pjrt));
+    let gpu = presets::gpu("H100").unwrap();
+    let w = work(LayerKind::Mlp, 8.0, 1.0, false);
+    table.register(&w, &gpu);
+    table.evaluate().unwrap();
+    let t_pjrt = table.time(&w, &gpu).unwrap().as_secs();
+    let t_native = NativeCostModel.time_seconds(&w, &gpu);
+    assert!((t_pjrt - t_native).abs() / t_native < 1e-3);
+}
+
+#[test]
+fn coll_artifact_matches_native_mirror() {
+    let model = PjrtCollModel::load().expect("run `make artifacts`");
+    let rows: Vec<[f32; 8]> = vec![
+        [0.0, 8.0, 1e9, 25e9, 1e-6, 0.0, 0.0, 0.0],
+        [1.0, 16.0, 5e8, 300e9, 2e-7, 2.0, 0.0, 0.0],
+        [3.0, 4.0, 1e7, 25e9, 1e-6, 0.0, 0.0, 0.0],
+        [4.0, 32.0, 1e9, 25e9, 1e-6, 1.0, 0.0, 0.0],
+        [5.0, 2.0, 1e9, 1e10, 5e-6, 0.0, 0.0, 0.0],
+    ];
+    let got = model.evaluate(&rows).unwrap();
+    for (row, g) in rows.iter().zip(&got) {
+        let e = hetsim::baselines::analytical::coll_time_native(row);
+        let rel = ((*g as f64) - e).abs() / e.max(1e-12);
+        assert!(rel < 1e-3, "row {row:?}: pjrt={g} native={e}");
+    }
+}
+
+#[test]
+fn fig5_identical_under_both_backends() {
+    let mut native = CostTable::native();
+    let rows_native = hetsim::report::fig5::compute(&mut native).unwrap();
+    let pjrt = PjrtCostModel::load().expect("run `make artifacts`");
+    let mut pjrt_table = CostTable::new(Box::new(pjrt));
+    let rows_pjrt = hetsim::report::fig5::compute(&mut pjrt_table).unwrap();
+    for (a, b) in rows_native.iter().zip(&rows_pjrt) {
+        assert_eq!(a.layer, b.layer);
+        let rel = (a.h100_ms - b.h100_ms).abs() / a.h100_ms;
+        assert!(rel < 1e-3, "{} {}: {} vs {}", a.model, a.layer, a.h100_ms, b.h100_ms);
+        let rel_deg = (a.degradation - b.degradation).abs() / a.degradation;
+        assert!(rel_deg < 1e-3);
+    }
+}

@@ -1,0 +1,188 @@
+//! Full-pipeline integration: config -> workload -> cost -> scheduler
+//! -> network, across cluster kinds and models.
+
+use hetsim::config::framework::ParallelismSpec;
+use hetsim::config::presets;
+use hetsim::simulator::SimulationBuilder;
+use hetsim::util::units::Time;
+use hetsim::workload::aicb::WorkloadOptions;
+
+fn small_opts() -> WorkloadOptions {
+    WorkloadOptions { microbatch_limit: Some(1), ..Default::default() }
+}
+
+#[test]
+fn gpt67_one_microbatch_on_two_nodes() {
+    let model = presets::model("gpt-6.7b").unwrap();
+    let rep = SimulationBuilder::new(model, presets::cluster("hopper", 2).unwrap())
+        .parallelism(ParallelismSpec { tp: 4, pp: 1, dp: 4 })
+        .workload_options(small_opts())
+        .build()
+        .unwrap()
+        .run_iteration()
+        .unwrap();
+    assert!(rep.iteration_time > Time::ZERO);
+    // 32 layers x 4 TP-allreduce x 4 groups collectives happened
+    assert!(rep.fct_summary["TP"].count > 1000);
+    assert!(rep.fct_summary["DP"].count > 0);
+}
+
+#[test]
+fn pipeline_parallel_runs_and_is_slower_than_nothing() {
+    let mut model = presets::model("llama2-70b").unwrap();
+    model.global_batch = 8;
+    model.micro_batch = 1;
+    let rep = SimulationBuilder::new(model, presets::cluster("hopper", 2).unwrap())
+        .parallelism(ParallelismSpec { tp: 4, pp: 2, dp: 2 })
+        .workload_options(small_opts())
+        .build()
+        .unwrap()
+        .run_iteration()
+        .unwrap();
+    assert!(rep.fct_summary.contains_key("PP"));
+    assert!(rep.iteration_time > Time::ZERO);
+}
+
+#[test]
+fn moe_model_produces_ep_traffic() {
+    let mut model = presets::model("mixtral-8x7b").unwrap();
+    model.num_layers = 8;
+    let rep = SimulationBuilder::new(model, presets::cluster("hopper", 1).unwrap())
+        .parallelism(ParallelismSpec { tp: 2, pp: 1, dp: 4 })
+        .workload_options(small_opts())
+        .build()
+        .unwrap()
+        .run_iteration()
+        .unwrap();
+    assert!(rep.fct_summary["EP"].count > 0);
+}
+
+#[test]
+fn ampere_slower_than_hopper_same_workload() {
+    let run = |arch: &str| {
+        let mut model = presets::model("gpt-6.7b").unwrap();
+        model.num_layers = 8;
+        SimulationBuilder::new(model, presets::cluster(arch, 1).unwrap())
+            .parallelism(ParallelismSpec { tp: 4, pp: 1, dp: 2 })
+            .workload_options(small_opts())
+            .build()
+            .unwrap()
+            .run_iteration()
+            .unwrap()
+            .iteration_time
+    };
+    let hopper = run("hopper");
+    let ampere = run("ampere");
+    // compute-dominated: expect roughly the fig-5 MLP factor
+    let ratio = ampere.as_secs() / hopper.as_secs();
+    assert!(ratio > 1.5, "ampere/hopper ratio {ratio}");
+}
+
+#[test]
+fn hetero_between_the_two_homogeneous_clusters() {
+    let mk = |cluster| {
+        let mut model = presets::model("gpt-6.7b").unwrap();
+        model.num_layers = 8;
+        SimulationBuilder::new(model, cluster)
+            .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+            .workload_options(small_opts())
+            .build()
+            .unwrap()
+            .run_iteration()
+            .unwrap()
+            .iteration_time
+    };
+    let hopper = mk(presets::cluster("hopper", 2).unwrap());
+    let ampere = mk(presets::cluster("ampere", 2).unwrap());
+    let hetero = mk(presets::cluster_hetero(1, 1).unwrap());
+    assert!(hetero >= hopper, "hetero {hetero} < hopper {hopper}");
+    assert!(hetero <= ampere, "hetero {hetero} > ampere {ampere}");
+}
+
+#[test]
+fn scenario_file_roundtrip() {
+    let dir = std::env::temp_dir().join("hetsim_it_scenario");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("scenario.json");
+    std::fs::write(
+        &path,
+        r#"{"model": {"name": "tiny", "num_layers": 4, "hidden_size": 1024,
+                      "num_heads": 16, "ffn_hidden": 4096, "seq_len": 512,
+                      "global_batch": 16, "micro_batch": 4},
+            "cluster": {"arch": "hetero", "ampere_nodes": 1, "hopper_nodes": 1},
+            "parallelism": {"tp": 4, "pp": 1, "dp": 4}}"#,
+    )
+    .unwrap();
+    let s = hetsim::config::loader::load_scenario_file(&path).unwrap();
+    let rep = SimulationBuilder::new(s.model, s.cluster)
+        .parallelism(s.parallelism)
+        .build()
+        .unwrap()
+        .run_iteration()
+        .unwrap();
+    assert!(rep.iteration_time > Time::ZERO);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn workload_trace_file_drives_identical_simulation() {
+    // generate -> serialize -> parse -> simulate == direct simulate
+    let mut model = presets::model("gpt-6.7b").unwrap();
+    model.num_layers = 4;
+    model.global_batch = 8;
+    model.micro_batch = 4;
+    let cluster = presets::cluster("hopper", 1).unwrap();
+    let fw = hetsim::config::framework::FrameworkSpec::uniform(
+        &model,
+        &cluster,
+        ParallelismSpec { tp: 4, pp: 1, dp: 2 },
+    )
+    .unwrap();
+    let w = hetsim::workload::aicb::generate(
+        &model,
+        &cluster,
+        &fw,
+        &WorkloadOptions::default(),
+    )
+    .unwrap();
+    let text = hetsim::workload::parser::write(&w);
+    let w2 = hetsim::workload::parser::parse(&text).unwrap();
+
+    let mut cost = hetsim::compute::table::CostTable::native();
+    hetsim::workload::aicb::register_costs(&w, &cluster, &mut cost).unwrap();
+    let r1 = hetsim::system::scheduler::Scheduler::new(&w, &cluster, &cost)
+        .unwrap()
+        .run()
+        .unwrap();
+    let r2 = hetsim::system::scheduler::Scheduler::new(&w2, &cluster, &cost)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(r1.iteration_time, r2.iteration_time);
+    assert_eq!(r1.flows_completed, r2.flows_completed);
+}
+
+#[test]
+fn longer_training_scales_linearly_ish() {
+    let run = |mb_limit| {
+        let mut model = presets::model("gpt-6.7b").unwrap();
+        model.num_layers = 4;
+        model.global_batch = 64;
+        model.micro_batch = 8;
+        SimulationBuilder::new(model, presets::cluster("hopper", 1).unwrap())
+            .parallelism(ParallelismSpec { tp: 4, pp: 1, dp: 2 })
+            .workload_options(WorkloadOptions {
+                microbatch_limit: Some(mb_limit),
+                ..Default::default()
+            })
+            .build()
+            .unwrap()
+            .run_iteration()
+            .unwrap()
+            .iteration_time
+    };
+    let one = run(1);
+    let four = run(4);
+    let ratio = four.as_secs() / one.as_secs();
+    assert!((2.0..6.0).contains(&ratio), "4 microbatches / 1 = {ratio}");
+}

@@ -1,0 +1,126 @@
+//! System-layer integration: the Fig-3 resharding scenario end-to-end,
+//! non-uniform partitioning, and report generation.
+
+use hetsim::config::framework::ParallelismSpec;
+use hetsim::config::presets;
+use hetsim::simulator::SimulationBuilder;
+use hetsim::system::collective::CommKind;
+use hetsim::workload::aicb::WorkloadOptions;
+use hetsim::workload::partition::{fig3_cluster, fig3_model, fig3_plan, plan_hetero};
+
+#[test]
+fn fig3_scenario_end_to_end_with_resharding() {
+    let model = fig3_model().unwrap();
+    let cluster = fig3_cluster().unwrap();
+    let plan = fig3_plan(&model, &cluster).unwrap();
+    let sim = SimulationBuilder::new(model, cluster).framework(plan).build().unwrap();
+    // resharding collectives were injected
+    let reshard =
+        sim.workload.collectives.iter().filter(|c| c.kind == CommKind::Reshard).count();
+    assert!(reshard > 0, "fig3 must trigger resharding");
+    let rep = sim.run_iteration().unwrap();
+    assert!(rep.fct_summary.contains_key("RESHARD"));
+    assert!(rep.iteration_time.as_secs() > 0.0);
+}
+
+#[test]
+fn uniform_tp_same_cluster_avoids_resharding() {
+    let model = fig3_model().unwrap();
+    let cluster = fig3_cluster().unwrap();
+    let sim = SimulationBuilder::new(model, cluster)
+        .parallelism(ParallelismSpec { tp: 4, pp: 1, dp: 2 })
+        .build()
+        .unwrap();
+    let reshard =
+        sim.workload.collectives.iter().filter(|c| c.kind == CommKind::Reshard).count();
+    assert_eq!(reshard, 0, "uniform TP must not reshard");
+}
+
+#[test]
+fn hetero_partitioner_full_pipeline() {
+    let mut model = presets::model("gpt-6.7b").unwrap();
+    model.num_layers = 8;
+    model.global_batch = 64;
+    model.micro_batch = 4;
+    let cluster = presets::cluster_hetero(1, 1).unwrap();
+    let fw = plan_hetero(&model, &cluster, ParallelismSpec { tp: 8, pp: 1, dp: 2 }).unwrap();
+    // group on the hopper node gets more batch
+    assert!(fw.groups[1].batch_share > fw.groups[0].batch_share);
+    let rep = SimulationBuilder::new(model, cluster)
+        .framework(fw)
+        .workload_options(WorkloadOptions { microbatch_limit: Some(2), ..Default::default() })
+        .build()
+        .unwrap()
+        .run_iteration()
+        .unwrap();
+    assert!(rep.flows_completed > 0);
+}
+
+#[test]
+fn pipeline_layer_imbalance_shifts_work() {
+    // hetero pipeline across an ampere and a hopper node: the planner
+    // gives the hopper stage more layers, and the resulting iteration
+    // beats the uniform split.
+    let mut model = presets::model("llama2-70b").unwrap();
+    model.global_batch = 4;
+    model.micro_batch = 1;
+    let cluster = presets::cluster_hetero(1, 1).unwrap();
+    let uniform = SimulationBuilder::new(model.clone(), cluster.clone())
+        .parallelism(ParallelismSpec { tp: 8, pp: 2, dp: 1 })
+        .workload_options(WorkloadOptions { microbatch_limit: Some(2), ..Default::default() })
+        .build()
+        .unwrap()
+        .run_iteration()
+        .unwrap();
+    let fw = plan_hetero(&model, &cluster, ParallelismSpec { tp: 8, pp: 2, dp: 1 }).unwrap();
+    let planned = SimulationBuilder::new(model, cluster)
+        .framework(fw)
+        .workload_options(WorkloadOptions { microbatch_limit: Some(2), ..Default::default() })
+        .build()
+        .unwrap()
+        .run_iteration()
+        .unwrap();
+    assert!(
+        planned.iteration_time < uniform.iteration_time,
+        "planned {} >= uniform {}",
+        planned.iteration_time,
+        uniform.iteration_time
+    );
+}
+
+#[test]
+fn fig5_report_generates() {
+    let mut table = hetsim::compute::table::CostTable::native();
+    let rows = hetsim::report::fig5::compute(&mut table).unwrap();
+    let t = hetsim::report::fig5::render(&rows);
+    assert!(t.markdown().contains("A100/H100"));
+}
+
+#[test]
+fn fig6_cell_hetero_tail_amplification() {
+    use hetsim::report::fig6::{run_cell, ClusterKind};
+    let ampere = run_cell("gpt-6.7b", ClusterKind::Ampere, 2, Some(1)).unwrap();
+    let hetero = run_cell("gpt-6.7b", ClusterKind::Hetero5050, 2, Some(1)).unwrap();
+    // paper Q2: hetero tail >= slow-homogeneous tail is NOT guaranteed,
+    // but hetero must not beat the fast-homogeneous tail
+    let hopper = run_cell("gpt-6.7b", ClusterKind::Hopper, 2, Some(1)).unwrap();
+    assert!(hetero.p999_us >= hopper.p999_us);
+    assert!(ampere.p999_us > 0.0);
+}
+
+#[test]
+fn trace_recording_captures_compute_and_comm() {
+    let mut model = presets::model("gpt-6.7b").unwrap();
+    model.num_layers = 2;
+    model.global_batch = 8;
+    model.micro_batch = 8;
+    let rep = SimulationBuilder::new(model, presets::cluster("hopper", 1).unwrap())
+        .parallelism(ParallelismSpec { tp: 4, pp: 1, dp: 2 })
+        .record_trace(true)
+        .build()
+        .unwrap()
+        .run_iteration()
+        .unwrap();
+    assert!(rep.compute_busy.as_secs() > 0.0);
+    assert!(rep.comm_busy.as_secs() > 0.0);
+}

