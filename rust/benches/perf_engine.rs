@@ -1,6 +1,8 @@
 //! Perf bench (EXPERIMENTS.md §Perf): L3 hot-path throughput —
-//! event-queue ops/s, flow-simulator rebalance rate, and end-to-end
-//! simulated-events/s on a representative workload.
+//! event-queue ops/s, flow-simulator rebalance rate, end-to-end
+//! simulated-events/s, and a head-to-head of the seed's HashMap-keyed
+//! scheduler (inlined below as `seed_sched`) against the dense
+//! `Vec`-indexed scheduler that replaced it.
 //!
 //!     cargo bench --bench perf_engine
 
@@ -96,9 +98,343 @@ fn bench_end_to_end() {
     );
 }
 
+/// Seed HashMap-state vs dense Vec-state scheduler on one prepared
+/// scenario. Both must process the same event stream; the dense
+/// scheduler additionally amortizes workload lowering across runs.
+fn bench_scheduler_state() {
+    let model = presets::model("gpt-6.7b").unwrap();
+    let cluster = presets::cluster_hetero(1, 1).unwrap();
+    let sim = SimulationBuilder::new(model, cluster)
+        .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+        .workload_options(WorkloadOptions { microbatch_limit: Some(2), ..Default::default() })
+        .build()
+        .unwrap();
+    let runs = 5usize;
+
+    let t0 = Instant::now();
+    let mut legacy = seed_sched::run(&sim.workload, &sim.cluster, &sim.cost).unwrap();
+    for _ in 1..runs {
+        legacy = seed_sched::run(&sim.workload, &sim.cluster, &sim.cost).unwrap();
+    }
+    let dt_legacy = t0.elapsed().as_secs_f64() / runs as f64;
+
+    let t0 = Instant::now();
+    let mut dense = sim.run_iteration().unwrap();
+    for _ in 1..runs {
+        dense = sim.run_iteration().unwrap();
+    }
+    let dt_dense = t0.elapsed().as_secs_f64() / runs as f64;
+
+    println!(
+        "sched (seed):  {:>10.0} events/s    ({} events, {} flows in {dt_legacy:.3}s)",
+        legacy.events as f64 / dt_legacy,
+        legacy.events,
+        legacy.flows
+    );
+    println!(
+        "sched (dense): {:>10.0} events/s    ({} events in {dt_dense:.3}s)  speedup {:.2}x",
+        dense.events_processed as f64 / dt_dense,
+        dense.events_processed,
+        dt_legacy / dt_dense
+    );
+    if legacy.events != dense.events_processed
+        || (legacy.iteration_secs - dense.iteration_time.as_secs()).abs() > 1e-9
+    {
+        println!(
+            "WARNING: timelines diverged (seed {} ev / {:.6}s vs dense {} ev / {:.6}s)",
+            legacy.events,
+            legacy.iteration_secs,
+            dense.events_processed,
+            dense.iteration_time.as_secs()
+        );
+    }
+}
+
 fn main() {
     println!("=== L3 perf: hot-path throughput (1 core) ===");
     bench_event_queue();
     bench_flow_sim();
     bench_end_to_end();
+    bench_scheduler_state();
+}
+
+/// The seed scheduler, kept verbatim-in-spirit as the bench baseline:
+/// every per-rank / per-collective / per-message lookup goes through a
+/// `HashMap`, programs are re-walked and collectives re-planned on
+/// every run. Retired from the library by the dense-state refactor.
+mod seed_sched {
+    use std::collections::HashMap;
+
+    use hetsim::compute::table::CostTable;
+    use hetsim::config::cluster::ClusterSpec;
+    use hetsim::engine::Engine;
+    use hetsim::network::flow::{FlowId, FlowSim, FlowSpec};
+    use hetsim::network::topology::Topology;
+    use hetsim::system::collective::{CollectiveExec, RingPolicy};
+    use hetsim::util::units::Time;
+    use hetsim::workload::op::{Op, Workload};
+
+    const MSG_TAG_BASE: u64 = 1 << 62;
+
+    #[derive(Debug, Clone, Copy)]
+    enum SimEvent {
+        ComputeDone { rank: u32 },
+        FlowDone(FlowId),
+    }
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    enum RankState {
+        Ready,
+        Computing,
+        BlockedCollective(u64),
+        BlockedRecv(u64),
+        Finished,
+    }
+
+    #[derive(Debug)]
+    struct CollState {
+        arrived: usize,
+        expected: usize,
+        exec: Option<CollectiveExec>,
+        start: Time,
+        arrivals: HashMap<u32, Time>,
+    }
+
+    #[derive(Debug, Default)]
+    struct MsgState {
+        delivered: bool,
+        waiting: Option<u32>,
+    }
+
+    pub struct LegacyReport {
+        pub iteration_secs: f64,
+        pub events: u64,
+        pub flows: usize,
+    }
+
+    struct Sched<'a> {
+        workload: &'a Workload,
+        cluster: &'a ClusterSpec,
+        cost: &'a CostTable,
+        flows: FlowSim,
+        prog_idx: HashMap<u32, usize>,
+        pc: HashMap<u32, usize>,
+        state: HashMap<u32, RankState>,
+        colls: HashMap<u64, CollState>,
+        msgs: HashMap<u64, MsgState>,
+    }
+
+    pub fn run(
+        workload: &Workload,
+        cluster: &ClusterSpec,
+        cost: &CostTable,
+    ) -> anyhow::Result<LegacyReport> {
+        let topo = Topology::build(cluster)?;
+        let mut colls = HashMap::new();
+        for def in &workload.collectives {
+            colls.insert(
+                def.id,
+                CollState {
+                    arrived: 0,
+                    expected: def.ranks.len(),
+                    exec: None,
+                    start: Time::ZERO,
+                    arrivals: HashMap::new(),
+                },
+            );
+        }
+        let mut s = Sched {
+            workload,
+            cluster,
+            cost,
+            flows: FlowSim::new(topo),
+            prog_idx: workload.programs.iter().enumerate().map(|(i, p)| (p.rank, i)).collect(),
+            pc: workload.programs.iter().map(|p| (p.rank, 0)).collect(),
+            state: workload.programs.iter().map(|p| (p.rank, RankState::Ready)).collect(),
+            colls,
+            msgs: HashMap::new(),
+        };
+        let mut eng: Engine<SimEvent> = Engine::new();
+        eng.max_events = 500_000_000;
+        let ranks: Vec<u32> = s.workload.programs.iter().map(|p| p.rank).collect();
+        for r in &ranks {
+            s.advance(&mut eng, *r)?;
+        }
+        while let Some(ev) = eng.step() {
+            match ev.payload {
+                SimEvent::ComputeDone { rank } => {
+                    *s.pc.get_mut(&rank).unwrap() += 1;
+                    s.state.insert(rank, RankState::Ready);
+                    s.advance(&mut eng, rank)?;
+                }
+                SimEvent::FlowDone(fid) => {
+                    let rec = s.flows.on_complete(&mut eng, fid, ev.id, &SimEvent::FlowDone);
+                    if let Some(rec) = rec {
+                        s.on_flow_done(&mut eng, rec.tag)?;
+                    }
+                }
+            }
+        }
+        let stuck = s.state.values().filter(|st| **st != RankState::Finished).count();
+        anyhow::ensure!(stuck == 0, "legacy run deadlocked: {stuck} ranks unfinished");
+        Ok(LegacyReport {
+            iteration_secs: eng.now().as_secs(),
+            events: eng.processed(),
+            flows: s.flows.records.len(),
+        })
+    }
+
+    impl<'a> Sched<'a> {
+        fn advance(&mut self, eng: &mut Engine<SimEvent>, rank: u32) -> anyhow::Result<()> {
+            let prog = &self.workload.programs[*self
+                .prog_idx
+                .get(&rank)
+                .ok_or_else(|| anyhow::anyhow!("no program for rank {rank}"))?];
+            loop {
+                let pc = self.pc[&rank];
+                if pc >= prog.ops.len() {
+                    self.state.insert(rank, RankState::Finished);
+                    return Ok(());
+                }
+                match &prog.ops[pc] {
+                    Op::Compute { work, .. } => {
+                        let gpu = self
+                            .cluster
+                            .gpu_of_rank(rank)
+                            .ok_or_else(|| anyhow::anyhow!("rank {rank} outside cluster"))?;
+                        let dur = self.cost.time(work, gpu)?;
+                        eng.schedule_in(dur, SimEvent::ComputeDone { rank });
+                        self.state.insert(rank, RankState::Computing);
+                        return Ok(());
+                    }
+                    Op::Collective { def_id } => {
+                        let def_id = *def_id;
+                        self.state.insert(rank, RankState::BlockedCollective(def_id));
+                        let ready = {
+                            let now = eng.now();
+                            let st = self
+                                .colls
+                                .get_mut(&def_id)
+                                .ok_or_else(|| anyhow::anyhow!("unknown collective {def_id}"))?;
+                            st.arrived += 1;
+                            st.arrivals.insert(rank, now);
+                            st.arrived == st.expected
+                        };
+                        if ready {
+                            self.launch_collective(eng, def_id)?;
+                        }
+                        return Ok(());
+                    }
+                    Op::Send { peer, bytes, msg } => {
+                        let tag = MSG_TAG_BASE + msg;
+                        self.msgs.entry(*msg).or_default();
+                        self.flows.start(
+                            eng,
+                            FlowSpec { src: rank, dst: *peer, bytes: *bytes, tag },
+                            &SimEvent::FlowDone,
+                        );
+                        *self.pc.get_mut(&rank).unwrap() += 1;
+                    }
+                    Op::Recv { msg } => {
+                        let st = self.msgs.entry(*msg).or_default();
+                        if st.delivered {
+                            *self.pc.get_mut(&rank).unwrap() += 1;
+                        } else {
+                            st.waiting = Some(rank);
+                            self.state.insert(rank, RankState::BlockedRecv(*msg));
+                            return Ok(());
+                        }
+                    }
+                }
+            }
+        }
+
+        fn launch_collective(
+            &mut self,
+            eng: &mut Engine<SimEvent>,
+            def_id: u64,
+        ) -> anyhow::Result<()> {
+            let def = self
+                .workload
+                .collective(def_id)
+                .ok_or_else(|| anyhow::anyhow!("unknown collective {def_id}"))?;
+            let mut exec = CollectiveExec::plan(self.cluster, def, RingPolicy::HeteroAware);
+            let start = eng.now();
+            if exec.is_done() {
+                self.finish_collective(eng, def_id)?;
+                return Ok(());
+            }
+            let step: Vec<FlowSpec> = exec.next_step().unwrap().to_vec();
+            let posted: Vec<Time> = {
+                let st = &self.colls[&def_id];
+                step.iter().map(|f| st.arrivals.get(&f.src).copied().unwrap_or(start)).collect()
+            };
+            self.flows.start_many_posted(eng, &step, Some(&posted), &SimEvent::FlowDone);
+            let st = self.colls.get_mut(&def_id).unwrap();
+            st.exec = Some(exec);
+            st.start = start;
+            Ok(())
+        }
+
+        fn on_flow_done(&mut self, eng: &mut Engine<SimEvent>, tag: u64) -> anyhow::Result<()> {
+            if tag >= MSG_TAG_BASE {
+                let msg = tag - MSG_TAG_BASE;
+                let st = self.msgs.entry(msg).or_default();
+                st.delivered = true;
+                if let Some(rank) = st.waiting.take() {
+                    *self.pc.get_mut(&rank).unwrap() += 1;
+                    self.state.insert(rank, RankState::Ready);
+                    self.advance(eng, rank)?;
+                }
+                return Ok(());
+            }
+            let (step_finished, next): (bool, Option<Vec<FlowSpec>>) = {
+                let st = self
+                    .colls
+                    .get_mut(&tag)
+                    .ok_or_else(|| anyhow::anyhow!("flow for unknown collective {tag}"))?;
+                let exec = st
+                    .exec
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("collective {tag} not launched"))?;
+                if exec.flow_done() {
+                    let next = exec.next_step().map(|s| s.to_vec());
+                    (true, next)
+                } else {
+                    (false, None)
+                }
+            };
+            if step_finished {
+                match next {
+                    Some(step) => {
+                        let posted: Vec<Time> = {
+                            let st = &self.colls[&tag];
+                            step.iter()
+                                .map(|f| st.arrivals.get(&f.src).copied().unwrap_or(st.start))
+                                .collect()
+                        };
+                        self.flows.start_many_posted(eng, &step, Some(&posted), &SimEvent::FlowDone);
+                    }
+                    None => self.finish_collective(eng, tag)?,
+                }
+            }
+            Ok(())
+        }
+
+        fn finish_collective(
+            &mut self,
+            eng: &mut Engine<SimEvent>,
+            def_id: u64,
+        ) -> anyhow::Result<()> {
+            let def = self.workload.collective(def_id).unwrap();
+            for r in def.ranks.clone() {
+                if self.state.get(&r) == Some(&RankState::BlockedCollective(def_id)) {
+                    *self.pc.get_mut(&r).unwrap() += 1;
+                    self.state.insert(r, RankState::Ready);
+                    self.advance(eng, r)?;
+                }
+            }
+            Ok(())
+        }
+    }
 }

@@ -1,0 +1,34 @@
+//! Plan search: rank every feasible TP×PP×DP deployment of GPT-6.7B on
+//! a mixed A100+H100 cluster and compare the winner against the uniform
+//! default plan — the paper's headline "plan an optimal deployment" use
+//! case, driven by the parallel planner layer.
+//!
+//!     cargo run --release --example plan_search
+
+use hetsim::config::presets;
+use hetsim::planner::{self, PlanOptions};
+
+fn main() -> anyhow::Result<()> {
+    let model = presets::model("gpt-6.7b")?;
+    let cluster = presets::cluster_hetero(1, 1)?;
+    println!(
+        "=== plan search: {} on {} ({} GPUs) ===\n",
+        model.name,
+        cluster.name,
+        cluster.total_gpus()
+    );
+
+    let opts = PlanOptions { microbatch_limit: Some(2), threads: 0 };
+    let report = planner::search(&model, &cluster, &opts)?;
+    print!("{}", report.render(10));
+
+    let best = report.best();
+    let speedup =
+        report.baseline.iteration_time.as_secs() / best.iteration_time.as_secs();
+    println!(
+        "\nbest plan {} is {speedup:.2}x the uniform default — the planner \
+         recovers the heterogeneity-aware configuration automatically.",
+        best.candidate.key()
+    );
+    Ok(())
+}

@@ -95,7 +95,7 @@ pub fn collective_seconds(
     match pjrt {
         Some(model) => {
             let mut out = Vec::with_capacity(rows.len());
-            for chunk in rows.chunks(crate::runtime::pjrt_cost::COLL_ROWS) {
+            for chunk in rows.chunks(crate::runtime::COLL_ROWS) {
                 out.extend(model.evaluate(chunk)?.into_iter().map(|t| t as f64));
             }
             Ok(out)

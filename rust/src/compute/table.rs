@@ -16,7 +16,11 @@ use crate::util::units::Time;
 pub const BATCH_ROWS: usize = 256;
 
 /// Anything that can evaluate a batch of descriptor rows.
-pub trait CostEvaluator {
+///
+/// `Send + Sync` is a supertrait so a [`CostTable`] (and therefore a
+/// prepared [`crate::simulator::Simulation`]) can be shared across
+/// worker threads.
+pub trait CostEvaluator: Send + Sync {
     /// layers: `n x LAYER_FIELDS`, gpus: `n x GPU_FIELDS` (row-aligned),
     /// `n <= BATCH_ROWS`. Returns `n` seconds values.
     fn evaluate_batch(&mut self, layers: &[[f32; 10]], gpus: &[[f32; 8]]) -> anyhow::Result<Vec<f32>>;

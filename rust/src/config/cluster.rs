@@ -4,6 +4,27 @@
 
 use crate::util::units::{Bandwidth, Time};
 
+/// Compact dense rank index: a global rank in cluster order, used as a
+/// direct `Vec` index by the scheduler / workload / network hot paths
+/// instead of `HashMap<u32, _>` keys. `RankIdx::NONE` is the vacant
+/// sentinel for ranks without a program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankIdx(pub u32);
+
+impl RankIdx {
+    pub const NONE: RankIdx = RankIdx(u32::MAX);
+
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+
+    #[inline]
+    pub fn is_none(self) -> bool {
+        self.0 == u32::MAX
+    }
+}
+
 /// GPU compute descriptor. The `eff_*` factors calibrate the roofline
 /// cost model to the paper's measured Fig-5 ratios and MUST mirror
 /// `GPU_PRESETS` in `python/compile/model.py` (cross-checked by
@@ -113,6 +134,16 @@ impl ClusterSpec {
 
     pub fn gpu_of_rank(&self, global_rank: u32) -> Option<&GpuSpec> {
         self.locate(global_rank).map(|(n, _)| &self.nodes[n as usize].gpu)
+    }
+
+    /// Dense per-rank node-index table: `table[rank.idx()]` replaces the
+    /// O(nodes) scan of [`ClusterSpec::locate`] on hot paths.
+    pub fn rank_nodes(&self) -> Vec<u32> {
+        let mut v = Vec::with_capacity(self.total_gpus() as usize);
+        for (i, n) in self.nodes.iter().enumerate() {
+            v.extend(std::iter::repeat(i as u32).take(n.gpus_per_node as usize));
+        }
+        v
     }
 
     /// True if all nodes share one GPU model (the SimAI assumption the

@@ -78,6 +78,13 @@ pub fn parse_model(v: &Json) -> anyhow::Result<ModelSpec> {
 
 pub fn parse_cluster(v: &Json) -> anyhow::Result<ClusterSpec> {
     if let Some(name) = v.as_str() {
+        // "hetero:A,H" shorthand: A ampere nodes + H hopper nodes
+        if let Some(rest) = name.strip_prefix("hetero:") {
+            let (a, h) = rest.split_once(',').ok_or_else(|| {
+                anyhow::anyhow!("hetero shorthand is 'hetero:<ampere>,<hopper>', got '{name}'")
+            })?;
+            return presets::cluster_hetero(a.trim().parse()?, h.trim().parse()?);
+        }
         // "ampere:16" shorthand
         let (arch, n) = name.split_once(':').unwrap_or((name, "16"));
         return presets::cluster(arch, n.parse()?);
@@ -175,6 +182,16 @@ mod tests {
         )
         .unwrap();
         assert_eq!(m.moe.unwrap().num_experts, 8);
+    }
+
+    #[test]
+    fn hetero_shorthand_cluster() {
+        let c = parse_cluster(&Json::Str("hetero:1,1".into())).unwrap();
+        assert!(!c.is_homogeneous());
+        assert_eq!(c.total_gpus(), 16);
+        let c = parse_cluster(&Json::Str("hetero:2, 3".into())).unwrap();
+        assert_eq!(c.nodes.len(), 5);
+        assert!(parse_cluster(&Json::Str("hetero:2".into())).is_err());
     }
 
     #[test]

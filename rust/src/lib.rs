@@ -19,7 +19,11 @@
 //! * [`compute`] — per-layer compute-cost evaluation: PJRT-executed AOT
 //!   artifact with a native Rust mirror for cross-checking (S10, C4).
 //! * [`runtime`] — PJRT plumbing over the `xla` crate (S11).
-//! * [`simulator`] — the facade that ties the layers into one run.
+//! * [`simulator`] — the facade that ties the layers into one
+//!   reusable, thread-shareable prepared simulation.
+//! * [`planner`] — parallelism-plan exploration over prepared
+//!   simulations: enumerate, prune, evaluate concurrently and rank
+//!   TP×PP×DP deployments (`hetsim plan`, S20).
 //! * [`baselines`] — SimAI-like homogeneous, Sailor-like analytical and
 //!   uniform-partitioning comparators (S12).
 //! * [`report`] — regenerates the paper's Table 1, Fig 5, Fig 6 (S13).
@@ -32,6 +36,7 @@ pub mod compute;
 pub mod config;
 pub mod engine;
 pub mod network;
+pub mod planner;
 pub mod report;
 pub mod runtime;
 pub mod simulator;

@@ -20,7 +20,8 @@ fn usage() -> Usage {
         program: "hetsim",
         about: "heterogeneity-aware LLM training simulator (CS.DC 2025 reproduction)",
         commands: vec![
-            ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N]"),
+            ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N] [--iterations N --threads N]"),
+            ("plan", "rank TPxPPxDP plans for a model on a cluster [--model NAME --cluster SPEC --threads N --mb-limit N (0=all) --top K]"),
             ("fig1", "hardware-evolution trend across generation presets"),
             ("fig5", "per-layer compute time across GPU generations [--backend native|pjrt]"),
             ("fig6", "FCT CCDF across interconnect configs [--nodes N --models a,b --mb-limit N]"),
@@ -46,6 +47,7 @@ fn main() {
 fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("simulate") => cmd_simulate(args),
+        Some("plan") => cmd_plan(args),
         Some("fig1") => cmd_fig1(args),
         Some("fig5") => cmd_fig5(args),
         Some("fig6") => cmd_fig6(args),
@@ -73,7 +75,7 @@ fn cost_backend(args: &Args) -> Result<CostBackend> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "model", "cluster", "tp", "pp", "dp", "backend", "mb-limit", "hetero-partition",
-        "naive-ring",
+        "naive-ring", "iterations", "threads",
     ])?;
     let (model, cluster, par) = if let Some(path) = args.opt("config") {
         let s = loader::load_scenario_file(std::path::Path::new(path))?;
@@ -106,7 +108,32 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if let Some(p) = par {
         b = b.parallelism(p);
     }
-    let report = b.build()?.run_iteration()?;
+    let sim = b.build()?;
+    let iterations = args.opt_u64("iterations", 1)? as usize;
+    let report = if iterations > 1 {
+        // the prepared simulation is shared immutably by the workers;
+        // repeated runs double as a determinism self-check and a
+        // simulator-throughput measurement
+        let threads = args.opt_u64("threads", 0)? as usize;
+        let t0 = std::time::Instant::now();
+        let mut reports = sim.run_iterations_concurrent(iterations, threads)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let first = reports.remove(0);
+        let identical = reports.iter().all(|r| {
+            r.iteration_time == first.iteration_time
+                && r.events_processed == first.events_processed
+                && r.flows_completed == first.flows_completed
+        });
+        println!(
+            "({iterations} concurrent iterations in {wall:.2}s wall-clock; \
+             determinism check: {})",
+            if identical { "all identical" } else { "DIVERGED" }
+        );
+        anyhow::ensure!(identical, "concurrent iterations diverged — determinism bug");
+        first
+    } else {
+        sim.run_iteration()?
+    };
 
     println!("model:            {}", report.model_name);
     println!("cluster:          {}", report.cluster_name);
@@ -124,6 +151,38 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             fmt_sig(s.max * 1e6),
         );
     }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    args.check_known(&["model", "cluster", "threads", "mb-limit", "top"])?;
+    let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
+    let cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
+        args.opt_or("cluster", "hetero:1,1").to_string(),
+    ))?;
+    let mb_limit = args.opt_u64("mb-limit", 2)?;
+    let opts = hetsim::planner::PlanOptions {
+        // 0 = simulate every microbatch (full-fidelity ranking)
+        microbatch_limit: if mb_limit == 0 { None } else { Some(mb_limit) },
+        threads: args.opt_u64("threads", 0)? as usize,
+    };
+    let top = args.opt_u64("top", 10)? as usize;
+    println!(
+        "# plan search: {} on {} ({} GPUs)\n",
+        model.name,
+        cluster.name,
+        cluster.total_gpus()
+    );
+    let report = hetsim::planner::search(&model, &cluster, &opts)?;
+    print!("{}", report.render(top));
+    let best = report.best();
+    let speedup =
+        report.baseline.iteration_time.as_secs() / best.iteration_time.as_secs();
+    println!(
+        "\nbest plan: {} — {} per iteration ({speedup:.2}x vs the uniform default)",
+        best.candidate.key(),
+        best.iteration_time
+    );
     Ok(())
 }
 

@@ -13,6 +13,7 @@
 //! model).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use super::routing::{self, Route};
 use super::topology::Topology;
@@ -62,11 +63,14 @@ struct ActiveFlow {
     event: Option<EventId>,
 }
 
-/// The fluid network simulator. Owns the topology; integrates with any
-/// engine event type via a `FlowId -> E` constructor.
+/// The fluid network simulator. Holds the (shareable) topology;
+/// integrates with any engine event type via a `FlowId -> E`
+/// constructor. The topology sits behind an `Arc` so one built graph
+/// can back many concurrent simulations (pass an owned `Topology` or a
+/// cloned `Arc` — both convert).
 #[derive(Debug)]
 pub struct FlowSim {
-    pub topo: Topology,
+    pub topo: Arc<Topology>,
     active: HashMap<FlowId, ActiveFlow>,
     next_id: u64,
     pub records: Vec<FlowRecord>,
@@ -84,7 +88,8 @@ pub struct FlowSim {
 }
 
 impl FlowSim {
-    pub fn new(topo: Topology) -> Self {
+    pub fn new(topo: impl Into<Arc<Topology>>) -> Self {
+        let topo = topo.into();
         let nlinks = topo.num_links();
         FlowSim {
             topo,

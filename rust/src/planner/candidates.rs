@@ -1,0 +1,212 @@
+//! Candidate enumeration and pruning for the parallelism-plan search.
+
+use crate::config::cluster::ClusterSpec;
+use crate::config::framework::ParallelismSpec;
+use crate::config::model::ModelSpec;
+use crate::system::collective::RingPolicy;
+
+/// How the model/batch is split across device groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partitioning {
+    /// Equal layer splits and batch shares (the SimAI assumption).
+    Uniform,
+    /// Non-uniform splits proportional to device-group compute power
+    /// (component C1, [`crate::workload::partition::plan_hetero`]).
+    HeteroAware,
+}
+
+impl Partitioning {
+    pub fn name(self) -> &'static str {
+        match self {
+            Partitioning::Uniform => "uniform",
+            Partitioning::HeteroAware => "hetero",
+        }
+    }
+}
+
+/// One candidate deployment plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanCandidate {
+    pub par: ParallelismSpec,
+    pub partitioning: Partitioning,
+    pub ring: RingPolicy,
+}
+
+impl PlanCandidate {
+    /// Stable human-readable identity; doubles as the deterministic
+    /// ranking tie-break.
+    pub fn key(&self) -> String {
+        format!(
+            "tp{}-pp{}-dp{}-{}-{}",
+            self.par.tp,
+            self.par.pp,
+            self.par.dp,
+            self.partitioning.name(),
+            match self.ring {
+                RingPolicy::HeteroAware => "ring:aware",
+                RingPolicy::Naive => "ring:naive",
+            },
+        )
+    }
+}
+
+/// Why a factorization was excluded from the search (typed so reports
+/// never truncate silently).
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum PruneReason {
+    #[error("TP degree {tp} exceeds gpus per node {gpn} (cross-node TP)")]
+    CrossNodeTp { tp: u32, gpn: u32 },
+    #[error("PP degree {pp} does not divide the {layers} model layers")]
+    IndivisibleLayers { pp: u32, layers: u32 },
+    #[error("DP degree {dp} exceeds the global batch {batch}")]
+    BatchTooSmall { dp: u32, batch: u64 },
+    #[error("~{need_gb:.1} GB/GPU exceeds the smallest device memory ({have_gb:.1} GB)")]
+    MemoryExceeded { need_gb: f64, have_gb: f64 },
+}
+
+/// A factorization that was excluded, and why.
+#[derive(Debug, Clone)]
+pub struct PrunedCandidate {
+    pub par: ParallelismSpec,
+    pub reason: PruneReason,
+}
+
+/// Coarse per-GPU memory estimate for a (tp, pp) sharding: bf16 weights
+/// + fp32 gradients + fp32 Adam moments (8 bytes/param).
+pub fn memory_bytes_per_gpu(model: &ModelSpec, tp: u32, pp: u32) -> u64 {
+    let per_param = model.dtype_bytes + model.grad_dtype_bytes + 8;
+    model.params_per_gpu(tp, pp) * per_param
+}
+
+/// Enumerate every valid TP×PP×DP factorization of the cluster's world
+/// size, crossed with partitioning strategies and ring policies.
+/// Returns `(feasible candidates, pruned factorizations)`. On
+/// homogeneous clusters the heterogeneity-aware partitioning reduces to
+/// the uniform mapping and is skipped to avoid duplicate work.
+pub fn enumerate(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+) -> (Vec<PlanCandidate>, Vec<PrunedCandidate>) {
+    let world = cluster.total_gpus();
+    // smallest node bounds intra-node TP (defensive: validated clusters
+    // have uniform gpus_per_node, but don't trust only the first node)
+    let gpn = cluster.nodes.iter().map(|n| n.gpus_per_node).min().unwrap_or(0);
+    let min_mem = cluster.nodes.iter().map(|n| n.gpu.mem_capacity).min().unwrap_or(0);
+    let hetero = !cluster.is_homogeneous();
+    let mut keep = Vec::new();
+    let mut pruned = Vec::new();
+    for tp in 1..=world {
+        if world % tp != 0 {
+            continue;
+        }
+        for pp in 1..=(world / tp) {
+            if (world / tp) % pp != 0 {
+                continue;
+            }
+            let dp = world / tp / pp;
+            let par = ParallelismSpec { tp, pp, dp };
+            let reason = if tp > gpn {
+                Some(PruneReason::CrossNodeTp { tp, gpn })
+            } else if model.num_layers % pp != 0 {
+                Some(PruneReason::IndivisibleLayers { pp, layers: model.num_layers })
+            } else if u64::from(dp) > model.global_batch {
+                Some(PruneReason::BatchTooSmall { dp, batch: model.global_batch })
+            } else {
+                let need = memory_bytes_per_gpu(model, tp, pp);
+                if need > min_mem {
+                    Some(PruneReason::MemoryExceeded {
+                        need_gb: need as f64 / 1e9,
+                        have_gb: min_mem as f64 / 1e9,
+                    })
+                } else {
+                    None
+                }
+            };
+            if let Some(reason) = reason {
+                pruned.push(PrunedCandidate { par, reason });
+                continue;
+            }
+            let partitionings: &[Partitioning] = if hetero {
+                &[Partitioning::Uniform, Partitioning::HeteroAware]
+            } else {
+                &[Partitioning::Uniform]
+            };
+            for &partitioning in partitionings {
+                for ring in [RingPolicy::HeteroAware, RingPolicy::Naive] {
+                    keep.push(PlanCandidate { par, partitioning, ring });
+                }
+            }
+        }
+    }
+    (keep, pruned)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn hetero_preset_yields_enough_candidates() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let (keep, pruned) = enumerate(&m, &c);
+        // acceptance floor for `hetsim plan` on this pair
+        assert!(keep.len() >= 8, "only {} candidates", keep.len());
+        assert!(!pruned.is_empty());
+        // every feasible factorization divides the world
+        for cand in &keep {
+            assert_eq!(cand.par.world_size(), c.total_gpus());
+        }
+        // the uniform default plan is in the candidate set
+        let def = crate::simulator::infer_parallelism(&m, &c).unwrap();
+        assert!(keep.iter().any(|cand| {
+            cand.par == def
+                && cand.partitioning == Partitioning::Uniform
+                && cand.ring == RingPolicy::HeteroAware
+        }));
+    }
+
+    #[test]
+    fn cross_node_tp_pruned() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster_hetero(1, 1).unwrap(); // 16 GPUs, 8/node
+        let (keep, pruned) = enumerate(&m, &c);
+        assert!(keep.iter().all(|cand| cand.par.tp <= 8));
+        assert!(pruned
+            .iter()
+            .any(|p| matches!(p.reason, PruneReason::CrossNodeTp { tp: 16, .. })));
+    }
+
+    #[test]
+    fn memory_floor_prunes_unsharded_large_model() {
+        let m = presets::model("gpt-6.7b").unwrap(); // ~6.7B params
+        let c = presets::cluster_hetero(1, 1).unwrap(); // A100 40GB floor
+        let (keep, pruned) = enumerate(&m, &c);
+        // tp*pp == 1 needs ~94 GB/GPU: must be pruned
+        assert!(keep.iter().all(|cand| cand.par.tp * cand.par.pp > 1));
+        assert!(pruned
+            .iter()
+            .any(|p| matches!(p.reason, PruneReason::MemoryExceeded { .. })));
+    }
+
+    #[test]
+    fn homogeneous_cluster_skips_hetero_partitioning() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster("hopper", 2).unwrap();
+        let (keep, _) = enumerate(&m, &c);
+        assert!(keep.iter().all(|cand| cand.partitioning == Partitioning::Uniform));
+    }
+
+    #[test]
+    fn candidate_keys_are_unique() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let (keep, _) = enumerate(&m, &c);
+        let mut keys: Vec<String> = keep.iter().map(PlanCandidate::key).collect();
+        let n = keys.len();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), n);
+    }
+}

@@ -1,0 +1,24 @@
+//! Parallelism-plan exploration (system S20, the `hetsim plan`
+//! subcommand): answers *"what is the best way to run model M on this
+//! heterogeneous cluster?"* — the paper's headline use case ("an LLM
+//! training deployer can draw inferences from our simulator and plan an
+//! optimal deployment"), in the spirit of Helix's placement search and
+//! HeteroSim's heterogeneity-aware computation planner.
+//!
+//! * [`candidates`] — enumerate every valid TP×PP×DP factorization of
+//!   the cluster, crossed with uniform vs heterogeneity-aware
+//!   partitioning and both ring policies, with explicit pruning
+//!   (cross-node TP, indivisible layers, device-memory, batch floor);
+//!   nothing is dropped silently — pruned candidates carry a typed
+//!   [`candidates::PruneReason`].
+//! * [`search`] — evaluate all candidates concurrently (each worker
+//!   builds and runs its own full simulation; the inputs are shared
+//!   immutably across threads) and rank them deterministically by
+//!   predicted iteration time with a stable key tie-break, so the
+//!   ranking is byte-identical across runs and worker counts.
+
+pub mod candidates;
+pub mod search;
+
+pub use candidates::{enumerate, Partitioning, PlanCandidate, PruneReason, PrunedCandidate};
+pub use search::{search, EvaluatedPlan, PlanOptions, PlanSearchReport};

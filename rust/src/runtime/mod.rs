@@ -3,23 +3,48 @@
 //! `xla` crate. This is the only place Rust touches XLA; Python is never
 //! on the simulation path.
 //!
-//! Interchange format is HLO **text** (see `python/compile/aot.py` and
-//! /opt/xla-example/README.md): jax ≥ 0.5 serialized protos carry 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids and round-trips cleanly.
+//! The whole XLA surface is gated behind the **`pjrt` cargo feature**
+//! (the `xla` crate and its native XLA runtime are not part of the
+//! default build — add the dependency and enable the feature to use
+//! it). Without the feature, [`PjrtCostModel`] / [`PjrtCollModel`] are
+//! stubs with the same API that fail at load time with a clear message,
+//! so every caller and the `--backend pjrt` CLI path still compile.
+//!
+//! Interchange format is HLO **text** (see `python/compile/aot.py`):
+//! jax ≥ 0.5 serialized protos carry 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly.
 
+#[cfg(feature = "pjrt")]
 pub mod pjrt_cost;
 
+#[cfg(feature = "pjrt")]
 pub use pjrt_cost::{PjrtCollModel, PjrtCostModel};
 
-use std::path::{Path, PathBuf};
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{PjrtCollModel, PjrtCostModel};
+
+use std::path::PathBuf;
+
+/// Artifact batch geometry — must match `python/compile/model.py`
+/// (asserted against artifacts/manifest.json on load).
+pub const COST_ROWS: usize = 256;
+pub const LAYER_FIELDS: usize = 10;
+pub const GPU_FIELDS: usize = 8;
+pub const COLL_ROWS: usize = 512;
+pub const COLL_FIELDS: usize = 8;
 
 /// A compiled artifact ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     pub source: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl std::fmt::Debug for Executable {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Executable").field("source", &self.source).finish()
@@ -27,16 +52,19 @@ impl std::fmt::Debug for Executable {
 }
 
 /// Thin wrapper over the PJRT CPU client.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl std::fmt::Debug for Runtime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Runtime").field("platform", &self.client.platform_name()).finish()
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     pub fn cpu() -> anyhow::Result<Runtime> {
         let client = xla::PjRtClient::cpu()
@@ -49,7 +77,7 @@ impl Runtime {
     }
 
     /// Load HLO text from `path`, compile, return the executable.
-    pub fn load_hlo_text(&self, path: &Path) -> anyhow::Result<Executable> {
+    pub fn load_hlo_text(&self, path: &std::path::Path) -> anyhow::Result<Executable> {
         anyhow::ensure!(
             path.exists(),
             "artifact {} not found — run `make artifacts` first",
@@ -68,6 +96,7 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with f32 matrix inputs `(data, rows, cols)`. The artifact
     /// returns a 1-tuple (lowered with `return_tuple=True`); we unwrap
@@ -120,7 +149,8 @@ mod tests {
     use super::*;
 
     // Full PJRT round-trip tests live in rust/tests/integration_runtime.rs
-    // (they need `make artifacts`). Here: path resolution only.
+    // (they need `make artifacts` and `--features pjrt`). Here: path
+    // resolution and stub behaviour only.
 
     #[test]
     fn artifacts_dir_env_override_rejects_missing() {
@@ -131,10 +161,20 @@ mod tests {
         assert!(r.is_err());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn load_missing_artifact_errors() {
         let rt = Runtime::cpu().unwrap();
-        let err = rt.load_hlo_text(Path::new("/no/such/file.hlo.txt")).unwrap_err();
+        let err = rt.load_hlo_text(std::path::Path::new("/no/such/file.hlo.txt")).unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_cost_model_errors_with_guidance() {
+        let err = PjrtCostModel::load().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        let err = PjrtCollModel::load().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

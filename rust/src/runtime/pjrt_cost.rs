@@ -6,13 +6,9 @@ use std::path::Path;
 use super::{artifacts_dir, Executable, Runtime};
 use crate::compute::table::CostEvaluator;
 
-/// Artifact batch geometry — must match `python/compile/model.py`
-/// (asserted against artifacts/manifest.json on load).
-pub const COST_ROWS: usize = 256;
-pub const LAYER_FIELDS: usize = 10;
-pub const GPU_FIELDS: usize = 8;
-pub const COLL_ROWS: usize = 512;
-pub const COLL_FIELDS: usize = 8;
+// Artifact batch geometry lives in `super` so it is available without
+// the `pjrt` feature; re-exported here for back-compat paths.
+pub use super::{COLL_FIELDS, COLL_ROWS, COST_ROWS, GPU_FIELDS, LAYER_FIELDS};
 
 /// Executes `artifacts/cost_model.hlo.txt`.
 pub struct PjrtCostModel {

@@ -1,0 +1,62 @@
+//! Stubs for the PJRT runtime when the `pjrt` cargo feature is off:
+//! identical API surface, clear error at load time instead of an `xla`
+//! crate (and XLA C++ runtime) dependency.
+
+use std::path::Path;
+
+use super::COLL_FIELDS;
+use crate::compute::table::CostEvaluator;
+
+fn unavailable<T>() -> anyhow::Result<T> {
+    anyhow::bail!(
+        "the PJRT cost backend requires building hetsim with `--features pjrt` \
+         (which needs the `xla` crate and `make artifacts`); \
+         use the native backend instead"
+    )
+}
+
+/// Stub of the artifact-backed per-layer cost model.
+#[derive(Debug)]
+pub struct PjrtCostModel;
+
+impl PjrtCostModel {
+    pub fn load() -> anyhow::Result<Self> {
+        unavailable()
+    }
+
+    pub fn load_from(_dir: &Path) -> anyhow::Result<Self> {
+        unavailable()
+    }
+}
+
+impl CostEvaluator for PjrtCostModel {
+    fn evaluate_batch(
+        &mut self,
+        _layers: &[[f32; 10]],
+        _gpus: &[[f32; 8]],
+    ) -> anyhow::Result<Vec<f32>> {
+        unavailable()
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}
+
+/// Stub of the artifact-backed alpha-beta collective estimator.
+#[derive(Debug)]
+pub struct PjrtCollModel;
+
+impl PjrtCollModel {
+    pub fn load() -> anyhow::Result<Self> {
+        unavailable()
+    }
+
+    pub fn load_from(_dir: &Path) -> anyhow::Result<Self> {
+        unavailable()
+    }
+
+    pub fn evaluate(&self, _rows: &[[f32; COLL_FIELDS]]) -> anyhow::Result<Vec<f32>> {
+        unavailable()
+    }
+}

@@ -3,12 +3,15 @@
 //! reproducible run (paper Fig 4's full pipeline).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::compute::table::CostTable;
 use crate::config::cluster::ClusterSpec;
 use crate::config::framework::{FrameworkSpec, ParallelismSpec};
 use crate::config::model::ModelSpec;
+use crate::network::topology::Topology;
 use crate::system::collective::RingPolicy;
+use crate::system::compiled::CompiledWorkload;
 use crate::system::scheduler::{Scheduler, SchedulerReport};
 use crate::util::stats::{Samples, Summary};
 use crate::util::units::Time;
@@ -114,12 +117,17 @@ impl SimulationBuilder {
             }
         };
         aicb::register_costs(&workload, &self.cluster, &mut cost)?;
+        let topology = Arc::new(Topology::build(&self.cluster)?);
+        let compiled =
+            CompiledWorkload::compile(&workload, &self.cluster, &cost, self.ring_policy)?;
         Ok(Simulation {
             model: self.model,
             cluster: self.cluster,
             framework: fw,
             workload,
             cost,
+            compiled,
+            topology,
             ring_policy: self.ring_policy,
             record_trace: self.record_trace,
         })
@@ -150,26 +158,57 @@ pub fn infer_parallelism(
     Ok(ParallelismSpec { tp, pp: 1, dp: world / tp })
 }
 
-/// A fully-prepared simulation (workload + cost table), runnable for
-/// one or more iterations.
+/// A fully-prepared simulation: workload, evaluated cost table, built
+/// network topology and the dense compiled core, runnable for one or
+/// more iterations.
+///
+/// `Simulation` is `Send + Sync` — every run borrows the prepared state
+/// immutably, so one build can back many concurrent runs (see
+/// [`Simulation::run_iterations_concurrent`] and the planner's sweep).
 pub struct Simulation {
     pub model: ModelSpec,
     pub cluster: ClusterSpec,
     pub framework: FrameworkSpec,
     pub workload: Workload,
     pub cost: CostTable,
-    pub ring_policy: RingPolicy,
+    /// Dense simulation core (durations resolved, collectives planned).
+    pub compiled: CompiledWorkload,
+    /// Built network graph, shared by all runs of this simulation.
+    pub topology: Arc<Topology>,
+    /// Fixed at build time (baked into `compiled`); private so it can't
+    /// be mutated into silent disagreement with the compiled plan.
+    ring_policy: RingPolicy,
     pub record_trace: bool,
 }
 
 impl Simulation {
-    /// Simulate one training iteration.
+    /// Simulate one training iteration. Reuses the compiled core and
+    /// topology — no per-run workload lowering or graph building.
     pub fn run_iteration(&self) -> anyhow::Result<SimulationReport> {
-        let mut sched = Scheduler::new(&self.workload, &self.cluster, &self.cost)?;
-        sched.ring_policy = self.ring_policy;
+        let mut sched = Scheduler::prepared(&self.compiled, &self.cluster, self.topology.clone());
         sched.record_trace = self.record_trace;
         let rep = sched.run()?;
         Ok(SimulationReport::from_scheduler(self, rep))
+    }
+
+    /// Run `iterations` independent iterations concurrently on
+    /// `threads` workers (0 = one per available core). Results come
+    /// back in iteration order and are bit-identical to sequential runs
+    /// — each run only borrows the shared prepared state.
+    pub fn run_iterations_concurrent(
+        &self,
+        iterations: usize,
+        threads: usize,
+    ) -> anyhow::Result<Vec<SimulationReport>> {
+        crate::util::par::parallel_map(iterations, threads, |_| self.run_iteration())
+            .into_iter()
+            .collect()
+    }
+
+    /// The ring policy this simulation was compiled with. Fixed at
+    /// build time — use [`SimulationBuilder::ring_policy`] to change it.
+    pub fn ring_policy(&self) -> RingPolicy {
+        self.ring_policy
     }
 }
 
@@ -287,6 +326,28 @@ mod tests {
         assert_eq!(a.iteration_time, b.iteration_time);
         assert_eq!(a.flows_completed, b.flows_completed);
         assert_eq!(a.events_processed, b.events_processed);
+    }
+
+    #[test]
+    fn simulation_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Simulation>();
+    }
+
+    #[test]
+    fn concurrent_iterations_are_deterministic() {
+        let sim = tiny(presets::cluster_hetero(1, 1).unwrap())
+            .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+            .build()
+            .unwrap();
+        let sequential = sim.run_iteration().unwrap();
+        let reports = sim.run_iterations_concurrent(4, 4).unwrap();
+        assert_eq!(reports.len(), 4);
+        for rep in &reports {
+            assert_eq!(rep.iteration_time, sequential.iteration_time);
+            assert_eq!(rep.flows_completed, sequential.flows_completed);
+            assert_eq!(rep.events_processed, sequential.events_processed);
+        }
     }
 
     #[test]

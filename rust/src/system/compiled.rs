@@ -1,0 +1,373 @@
+//! Compiled (dense) workload representation — the reusable simulation
+//! core behind the scheduler refactor.
+//!
+//! [`CompiledWorkload::compile`] lowers a [`Workload`] once, on the cold
+//! path, into flat `Vec`-indexed tables so the event loop never touches
+//! a `HashMap`:
+//!
+//! * per-rank op streams with **pre-resolved compute durations** (the
+//!   cost table is consulted exactly once per distinct op, at compile
+//!   time, never per event);
+//! * collective definitions remapped to **dense ids** (`cid`), which
+//!   double as the network flow tag, plus pre-planned per-collective
+//!   flow-step templates (ring-order graph generation runs once, not on
+//!   every launch);
+//! * p2p message tags remapped to dense indices with **uniqueness
+//!   validation** — a reused tag is rejected here instead of silently
+//!   completing a later `Recv` against a stale delivery.
+//!
+//! A `CompiledWorkload` is immutable plain data (`Send + Sync`), so one
+//! compiled scenario can back many concurrent scheduler runs.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::compute::table::CostTable;
+use crate::config::cluster::{ClusterSpec, RankIdx};
+use crate::network::flow::FlowSpec;
+use crate::system::collective::{CollectiveDef, CollectiveExec, CommKind, RingPolicy};
+use crate::util::units::Time;
+use crate::workload::op::{Op, Workload};
+
+/// One lowered operation. Compute durations are resolved; collective and
+/// message references are dense indices into the compiled tables.
+#[derive(Debug, Clone, Copy)]
+pub enum DenseOp {
+    /// Local kernel execution with its pre-resolved duration.
+    Compute { dur: Time, label: &'static str },
+    /// Participate in compiled collective `cid` (blocking).
+    Collective { cid: u32 },
+    /// Asynchronous p2p send to global rank `peer`.
+    Send { peer: RankIdx, bytes: u64, msg: u32 },
+    /// Block until dense message `msg` is delivered (one-shot).
+    Recv { msg: u32 },
+}
+
+/// The dense, immutable simulation core for one scenario.
+#[derive(Debug)]
+pub struct CompiledWorkload {
+    /// Cluster world size; every dense rank table has this length.
+    pub world: u32,
+    /// Lowered op stream per global rank (empty for vacant ranks).
+    pub ops: Vec<Vec<DenseOp>>,
+    /// Whether a rank has a program (vacant ranks are skipped by the
+    /// scheduler's seeding and deadlock scan).
+    pub has_program: Vec<bool>,
+    /// Collective definitions in dense order; `defs[cid].id == cid`, and
+    /// `cid` is also the tag carried by the collective's network flows.
+    pub defs: Vec<CollectiveDef>,
+    /// Communication kind per dense collective (FCT report labels).
+    pub kinds: Vec<CommKind>,
+    /// Pre-planned flow-step templates per dense collective: the ring /
+    /// tree / pairwise expansion under `ring_policy`, computed once.
+    pub steps: Vec<Vec<Vec<FlowSpec>>>,
+    /// Participant count per dense collective.
+    pub expected: Vec<u32>,
+    /// Number of distinct p2p messages (dense message-table length).
+    pub num_msgs: u32,
+    /// Original user-authored p2p tag per dense message id (diagnostics
+    /// report these, not the remapped indices).
+    pub msg_tags: Vec<u64>,
+    /// The ring policy the step templates were planned with.
+    pub ring_policy: RingPolicy,
+}
+
+impl CompiledWorkload {
+    /// Lower `workload` for `cluster`, resolving every compute duration
+    /// through `cost` and planning every collective under `ring_policy`.
+    ///
+    /// Errors on: ranks or peers outside the cluster, unknown or
+    /// duplicate collective ids, cost-table misses, and reused p2p
+    /// message tags (each tag must name exactly one send and at most one
+    /// recv per iteration — delivery is one-shot).
+    pub fn compile(
+        workload: &Workload,
+        cluster: &ClusterSpec,
+        cost: &CostTable,
+        ring_policy: RingPolicy,
+    ) -> anyhow::Result<CompiledWorkload> {
+        let world = cluster.total_gpus();
+
+        // dense collective table (original ids remapped to 0..n)
+        let mut cid_of: HashMap<u64, u32> = HashMap::with_capacity(workload.collectives.len());
+        let mut defs: Vec<CollectiveDef> = Vec::with_capacity(workload.collectives.len());
+        let mut kinds: Vec<CommKind> = Vec::with_capacity(workload.collectives.len());
+        for (i, def) in workload.collectives.iter().enumerate() {
+            anyhow::ensure!(
+                cid_of.insert(def.id, i as u32).is_none(),
+                "duplicate collective id {}",
+                def.id
+            );
+            for r in &def.ranks {
+                anyhow::ensure!(
+                    *r < world,
+                    "collective {} rank {r} outside cluster of {world} GPUs",
+                    def.id
+                );
+            }
+            let mut d = def.clone();
+            d.id = i as u64; // dense id doubles as the flow tag
+            kinds.push(d.kind);
+            defs.push(d);
+        }
+
+        // per-rank dense op streams
+        let node_of = cluster.rank_nodes();
+        let mut ops: Vec<Vec<DenseOp>> = vec![Vec::new(); world as usize];
+        let mut has_program = vec![false; world as usize];
+        let mut msg_of: HashMap<u64, u32> = HashMap::new();
+        let mut send_seen: HashSet<u64> = HashSet::new();
+        let mut recv_seen: HashSet<u64> = HashSet::new();
+        for p in &workload.programs {
+            anyhow::ensure!(
+                p.rank < world,
+                "rank {} outside cluster of {world} GPUs",
+                p.rank
+            );
+            let slot = p.rank as usize;
+            anyhow::ensure!(!has_program[slot], "two programs for rank {}", p.rank);
+            has_program[slot] = true;
+            let gpu = &cluster.nodes[node_of[slot] as usize].gpu;
+            let mut stream = Vec::with_capacity(p.ops.len());
+            for op in &p.ops {
+                match op {
+                    Op::Compute { work, label } => {
+                        stream.push(DenseOp::Compute { dur: cost.time(work, gpu)?, label: *label });
+                    }
+                    Op::Collective { def_id } => {
+                        let cid = *cid_of.get(def_id).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "rank {} references unknown collective {def_id}",
+                                p.rank
+                            )
+                        })?;
+                        stream.push(DenseOp::Collective { cid });
+                    }
+                    Op::Send { peer, bytes, msg } => {
+                        anyhow::ensure!(
+                            *peer < world,
+                            "send peer {peer} outside cluster of {world} GPUs"
+                        );
+                        anyhow::ensure!(
+                            send_seen.insert(*msg),
+                            "p2p message tag {msg} reused by a second Send — \
+                             tags must be unique within an iteration"
+                        );
+                        let next = msg_of.len() as u32;
+                        let m = *msg_of.entry(*msg).or_insert(next);
+                        stream.push(DenseOp::Send { peer: RankIdx(*peer), bytes: *bytes, msg: m });
+                    }
+                    Op::Recv { msg } => {
+                        anyhow::ensure!(
+                            recv_seen.insert(*msg),
+                            "p2p message tag {msg} reused by a second Recv — \
+                             tags must be unique within an iteration"
+                        );
+                        let next = msg_of.len() as u32;
+                        let m = *msg_of.entry(*msg).or_insert(next);
+                        stream.push(DenseOp::Recv { msg: m });
+                    }
+                }
+            }
+            ops[slot] = stream;
+        }
+
+        // pre-plan every collective's flow steps (graph generation is a
+        // pure function of cluster + def + policy, so this is hoisted
+        // out of the event loop entirely)
+        let mut steps = Vec::with_capacity(defs.len());
+        let mut expected = Vec::with_capacity(defs.len());
+        for d in &defs {
+            expected.push(d.ranks.len() as u32);
+            steps.push(CollectiveExec::plan(cluster, d, ring_policy).steps);
+        }
+
+        let mut msg_tags = vec![0u64; msg_of.len()];
+        for (tag, idx) in &msg_of {
+            msg_tags[*idx as usize] = *tag;
+        }
+
+        Ok(CompiledWorkload {
+            world,
+            ops,
+            has_program,
+            defs,
+            kinds,
+            steps,
+            expected,
+            num_msgs: msg_of.len() as u32,
+            msg_tags,
+            ring_policy,
+        })
+    }
+
+    /// Total lowered ops across all ranks.
+    pub fn op_count(&self) -> usize {
+        self.ops.iter().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::cost::LayerWork;
+    use crate::config::model::LayerKind;
+    use crate::config::presets;
+    use crate::system::collective::CollectiveAlgo;
+    use crate::workload::op::RankProgram;
+
+    fn lw() -> LayerWork {
+        LayerWork {
+            kind: LayerKind::Mlp,
+            hidden: 512.0,
+            ffn: 2048.0,
+            heads: 8.0,
+            seq: 128.0,
+            mbs: 1.0,
+            n_experts: 0.0,
+            top_k: 0.0,
+            tp: 1.0,
+            is_bwd: false,
+        }
+    }
+
+    fn cost_for(c: &ClusterSpec) -> CostTable {
+        let mut t = CostTable::native();
+        let w = lw();
+        for n in &c.nodes {
+            t.register(&w, &n.gpu);
+        }
+        t.evaluate().unwrap();
+        t
+    }
+
+    fn coll(id: u64, ranks: Vec<u32>) -> CollectiveDef {
+        CollectiveDef {
+            id,
+            algo: CollectiveAlgo::AllReduceRing,
+            ranks,
+            bytes_per_rank: 1 << 16,
+            kind: CommKind::Tp,
+            label: "t".into(),
+        }
+    }
+
+    #[test]
+    fn collectives_remapped_to_dense_ids() {
+        let c = presets::cluster("hopper", 1).unwrap();
+        let w = Workload {
+            programs: vec![
+                RankProgram { rank: 0, ops: vec![Op::Collective { def_id: 77 }] },
+                RankProgram { rank: 1, ops: vec![Op::Collective { def_id: 77 }] },
+            ],
+            collectives: vec![coll(77, vec![0, 1])],
+        };
+        let cw =
+            CompiledWorkload::compile(&w, &c, &CostTable::native(), RingPolicy::HeteroAware)
+                .unwrap();
+        assert_eq!(cw.defs.len(), 1);
+        assert_eq!(cw.defs[0].id, 0); // dense id, not 77
+        assert_eq!(cw.expected, vec![2]);
+        // flow tags in the step template carry the dense id
+        assert!(cw.steps[0].iter().flatten().all(|f| f.tag == 0));
+        assert!(matches!(cw.ops[0][0], DenseOp::Collective { cid: 0 }));
+    }
+
+    #[test]
+    fn compute_durations_preresolved() {
+        let c = presets::cluster("hopper", 1).unwrap();
+        let t = cost_for(&c);
+        let w = Workload {
+            programs: vec![RankProgram {
+                rank: 0,
+                ops: vec![Op::Compute { work: lw(), label: "mlp" }],
+            }],
+            collectives: vec![],
+        };
+        let cw = CompiledWorkload::compile(&w, &c, &t, RingPolicy::HeteroAware).unwrap();
+        match cw.ops[0][0] {
+            DenseOp::Compute { dur, .. } => {
+                let expect = t.time(&lw(), &c.nodes[0].gpu).unwrap();
+                assert_eq!(dur, expect);
+            }
+            ref other => panic!("unexpected op {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reused_send_tag_rejected() {
+        let c = presets::cluster("hopper", 1).unwrap();
+        let w = Workload {
+            programs: vec![
+                RankProgram {
+                    rank: 0,
+                    ops: vec![
+                        Op::Send { peer: 1, bytes: 8, msg: 5 },
+                        Op::Send { peer: 1, bytes: 8, msg: 5 },
+                    ],
+                },
+                RankProgram { rank: 1, ops: vec![Op::Recv { msg: 5 }] },
+            ],
+            collectives: vec![],
+        };
+        let err = CompiledWorkload::compile(&w, &c, &CostTable::native(), RingPolicy::Naive)
+            .unwrap_err();
+        assert!(err.to_string().contains("reused"), "{err}");
+    }
+
+    #[test]
+    fn reused_recv_tag_rejected() {
+        let c = presets::cluster("hopper", 1).unwrap();
+        let w = Workload {
+            programs: vec![
+                RankProgram { rank: 0, ops: vec![Op::Send { peer: 1, bytes: 8, msg: 5 }] },
+                RankProgram { rank: 1, ops: vec![Op::Recv { msg: 5 }, Op::Recv { msg: 5 }] },
+            ],
+            collectives: vec![],
+        };
+        let err = CompiledWorkload::compile(&w, &c, &CostTable::native(), RingPolicy::Naive)
+            .unwrap_err();
+        assert!(err.to_string().contains("reused"), "{err}");
+    }
+
+    #[test]
+    fn rank_outside_cluster_rejected() {
+        let c = presets::cluster("hopper", 1).unwrap();
+        let w = Workload {
+            programs: vec![RankProgram { rank: 500, ops: vec![] }],
+            collectives: vec![],
+        };
+        let err = CompiledWorkload::compile(&w, &c, &CostTable::native(), RingPolicy::Naive)
+            .unwrap_err();
+        assert!(err.to_string().contains("outside cluster"), "{err}");
+    }
+
+    #[test]
+    fn msg_ids_densely_numbered() {
+        let c = presets::cluster("hopper", 1).unwrap();
+        let w = Workload {
+            programs: vec![
+                RankProgram {
+                    rank: 0,
+                    ops: vec![
+                        Op::Send { peer: 1, bytes: 8, msg: 1_000_000 },
+                        Op::Send { peer: 1, bytes: 8, msg: 42 },
+                    ],
+                },
+                RankProgram {
+                    rank: 1,
+                    ops: vec![Op::Recv { msg: 1_000_000 }, Op::Recv { msg: 42 }],
+                },
+            ],
+            collectives: vec![],
+        };
+        let cw = CompiledWorkload::compile(&w, &c, &CostTable::native(), RingPolicy::Naive)
+            .unwrap();
+        assert_eq!(cw.num_msgs, 2);
+        match (cw.ops[0][0], cw.ops[0][1]) {
+            (DenseOp::Send { msg: a, .. }, DenseOp::Send { msg: b, .. }) => {
+                assert_eq!((a, b), (0, 1));
+            }
+            other => panic!("unexpected ops {other:?}"),
+        }
+    }
+}

@@ -10,16 +10,21 @@
 //!   that expands a collective into batches of network flows.
 //! * [`resharding`] — shape-mismatch detection between communicating
 //!   device groups and the extra traffic a reshard injects.
+//! * [`compiled`] — the dense, immutable simulation core: a workload
+//!   lowered once (durations resolved, collectives pre-planned, ids
+//!   remapped to `Vec` indices) so runs share it without re-deriving.
 //! * [`scheduler`] — the per-rank program executor: runs compute ops,
 //!   blocks on collectives/receives, coordinates the compute and
 //!   network simulators over one training iteration.
 
 pub mod collective;
+pub mod compiled;
 pub mod device_group;
 pub mod resharding;
 pub mod scheduler;
 
 pub use collective::{CollectiveAlgo, CollectiveDef, CollectiveExec, CommKind};
+pub use compiled::{CompiledWorkload, DenseOp};
 pub use device_group::DeviceGroups;
 pub use resharding::{needs_resharding, ReshardPlan};
 pub use scheduler::{Scheduler, SchedulerReport};

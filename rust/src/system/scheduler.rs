@@ -3,29 +3,39 @@
 //! simulators, and ensures accurate modeling of event dependencies,
 //! resharding delays, and bandwidth contention").
 //!
-//! Each rank executes its [`RankProgram`] in order. Compute ops run on
-//! the rank's GPU (duration from the cost table — the bottleneck-device
-//! rule of component C4 emerges naturally: a TP group's collective
-//! cannot start until its slowest member arrives). `Collective` and
-//! `Recv` ops block; `Send` is asynchronous. Collectives expand into
-//! step-synchronized flow batches on the fluid network simulator.
+//! Each rank executes its program in order. Compute ops run on the
+//! rank's GPU (duration pre-resolved by [`CompiledWorkload`] — the
+//! bottleneck-device rule of component C4 emerges naturally: a TP
+//! group's collective cannot start until its slowest member arrives).
+//! `Collective` and `Recv` ops block; `Send` is asynchronous.
+//! Collectives expand into step-synchronized flow batches on the fluid
+//! network simulator.
+//!
+//! **Dense-state hot path**: all per-rank (`pc`, `state`, arrival),
+//! per-collective and per-message state lives in `Vec`s indexed by the
+//! compact ids assigned at compile time ([`crate::system::compiled`]);
+//! the event loop performs no hash lookups and no per-launch collective
+//! planning. `benches/perf_engine.rs` compares this against the seed's
+//! `HashMap`-keyed scheduler.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::compute::table::CostTable;
-use crate::config::cluster::ClusterSpec;
+use crate::config::cluster::{ClusterSpec, RankIdx};
 use crate::engine::trace::{TraceCategory, TraceRecorder};
 use crate::engine::Engine;
 use crate::network::flow::{FlowId, FlowSim, FlowSpec};
 use crate::network::topology::Topology;
 use crate::util::stats::Samples;
 use crate::util::units::Time;
-use crate::workload::op::{Op, Workload};
+use crate::workload::op::Workload;
 
-use super::collective::{CollectiveExec, CommKind, RingPolicy};
+use super::collective::RingPolicy;
+use super::compiled::{CompiledWorkload, DenseOp};
 
-/// Tag space split: collective defs use their id; p2p messages are
-/// offset so the two never collide.
+/// Tag space split: collective flows use their dense id; p2p messages
+/// are offset so the two never collide.
 pub const MSG_TAG_BASE: u64 = 1 << 62;
 
 /// Engine event payload.
@@ -39,27 +49,32 @@ pub enum SimEvent {
 enum RankState {
     Ready,
     Computing,
-    BlockedCollective(u64),
-    BlockedRecv(u64),
+    BlockedCollective(u32),
+    BlockedRecv(u32),
     Finished,
 }
 
-#[derive(Debug)]
-struct CollState {
-    arrived: usize,
-    expected: usize,
-    exec: Option<CollectiveExec>,
+/// Per-collective run state (dense, indexed by `cid`).
+#[derive(Debug, Clone, Copy, Default)]
+struct CollRun {
+    arrived: u32,
+    step: u32,
+    outstanding: u32,
     start: Time,
-    /// Per-rank arrival time at the collective: the moment the rank
-    /// *posted* its sends (SimAI semantics). Early posters' flows carry
-    /// the straggler wait in their recorded FCT.
-    arrivals: HashMap<u32, Time>,
 }
 
-#[derive(Debug, Default)]
-struct MsgState {
+/// Per-message delivery slot (dense, indexed by the compiled msg id).
+/// Delivery is one-shot: a `Recv` consumes the flag.
+#[derive(Debug, Clone, Copy)]
+struct MsgSlot {
     delivered: bool,
-    waiting: Option<u32>,
+    waiting: RankIdx,
+}
+
+impl Default for MsgSlot {
+    fn default() -> Self {
+        MsgSlot { delivered: false, waiting: RankIdx::NONE }
+    }
 }
 
 /// Result of one simulated iteration.
@@ -77,24 +92,24 @@ pub struct SchedulerReport {
     pub trace: TraceRecorder,
 }
 
+enum Source<'a> {
+    /// Raw inputs; compiled lazily inside [`Scheduler::run`] so input
+    /// errors (cost-table misses, bad ranks) surface at run time, after
+    /// construction knobs like `ring_policy` are set.
+    Raw { workload: &'a Workload, cost: &'a CostTable },
+    /// A pre-compiled core borrowed from a [`crate::simulator::Simulation`]:
+    /// zero per-run compilation, safe to share across threads.
+    Prepared(&'a CompiledWorkload),
+}
+
 /// The scheduler. Borrows the immutable inputs; owns the mutable
 /// simulation state for one run.
 pub struct Scheduler<'a> {
-    workload: &'a Workload,
+    source: Source<'a>,
     cluster: &'a ClusterSpec,
-    cost: &'a CostTable,
-    pub ring_policy: RingPolicy,
+    topology: Arc<Topology>,
+    ring_policy: RingPolicy,
     pub record_trace: bool,
-
-    flows: FlowSim,
-    /// rank -> index into workload.programs (O(1) advance dispatch)
-    prog_idx: HashMap<u32, usize>,
-    pc: HashMap<u32, usize>,
-    state: HashMap<u32, RankState>,
-    colls: HashMap<u64, CollState>,
-    msgs: HashMap<u64, MsgState>,
-    tag_kind: HashMap<u64, CommKind>,
-    trace: TraceRecorder,
 }
 
 impl<'a> Scheduler<'a> {
@@ -103,59 +118,117 @@ impl<'a> Scheduler<'a> {
         cluster: &'a ClusterSpec,
         cost: &'a CostTable,
     ) -> anyhow::Result<Self> {
-        let topo = Topology::build(cluster)?;
-        let mut tag_kind = HashMap::new();
-        let mut colls = HashMap::new();
-        for def in &workload.collectives {
-            tag_kind.insert(def.id, def.kind);
-            colls.insert(
-                def.id,
-                CollState {
-                    arrived: 0,
-                    expected: def.ranks.len(),
-                    exec: None,
-                    start: Time::ZERO,
-                    arrivals: HashMap::new(),
-                },
-            );
-        }
+        let topology = Arc::new(Topology::build(cluster)?);
         Ok(Scheduler {
-            workload,
+            source: Source::Raw { workload, cost },
             cluster,
-            cost,
+            topology,
             ring_policy: RingPolicy::HeteroAware,
             record_trace: false,
-            flows: FlowSim::new(topo),
-            prog_idx: workload
-                .programs
-                .iter()
-                .enumerate()
-                .map(|(i, p)| (p.rank, i))
-                .collect(),
-            pc: workload.programs.iter().map(|p| (p.rank, 0)).collect(),
-            state: workload.programs.iter().map(|p| (p.rank, RankState::Ready)).collect(),
-            colls,
-            msgs: HashMap::new(),
-            tag_kind,
-            trace: TraceRecorder::new(false),
         })
     }
 
+    /// Select the collective ring policy. Only meaningful for lazily
+    /// compiled schedulers ([`Scheduler::new`]); a prepared workload's
+    /// policy was fixed at compile time, and [`Scheduler::run`] errors
+    /// on a mismatch instead of silently ignoring the request.
+    pub fn with_ring_policy(mut self, policy: RingPolicy) -> Self {
+        self.ring_policy = policy;
+        self
+    }
+
+    /// Borrow a pre-compiled workload and shared topology. The ring
+    /// policy is the one the workload was compiled with.
+    pub fn prepared(
+        compiled: &'a CompiledWorkload,
+        cluster: &'a ClusterSpec,
+        topology: Arc<Topology>,
+    ) -> Self {
+        let ring_policy = compiled.ring_policy;
+        Scheduler {
+            source: Source::Prepared(compiled),
+            cluster,
+            topology,
+            ring_policy,
+            record_trace: false,
+        }
+    }
+
     /// Run one iteration to completion.
-    pub fn run(mut self) -> anyhow::Result<SchedulerReport> {
-        self.trace = TraceRecorder::new(self.record_trace);
+    pub fn run(self) -> anyhow::Result<SchedulerReport> {
+        let owned;
+        let cw: &CompiledWorkload = match self.source {
+            Source::Raw { workload, cost } => {
+                owned = CompiledWorkload::compile(workload, self.cluster, cost, self.ring_policy)?;
+                &owned
+            }
+            Source::Prepared(c) => {
+                anyhow::ensure!(
+                    self.ring_policy == c.ring_policy,
+                    "prepared workload was compiled with {:?} rings; \
+                     rebuild the simulation to run with {:?}",
+                    c.ring_policy,
+                    self.ring_policy
+                );
+                c
+            }
+        };
+        let flows = FlowSim::new(self.topology.clone());
+        Exec::new(cw, flows, self.record_trace).run()
+    }
+}
+
+/// Mutable state of one run over a borrowed compiled core.
+struct Exec<'w> {
+    cw: &'w CompiledWorkload,
+    record_trace: bool,
+    flows: FlowSim,
+    /// Program counter per global rank.
+    pc: Vec<u32>,
+    state: Vec<RankState>,
+    colls: Vec<CollRun>,
+    /// Time each rank posted its current collective. A rank blocks on at
+    /// most one collective at a time, so one slot per rank suffices;
+    /// early posters' flows carry the straggler wait in their recorded
+    /// FCT (SimAI semantics — the source of the paper's Fig-6 tails).
+    arrival: Vec<Time>,
+    msgs: Vec<MsgSlot>,
+    trace: TraceRecorder,
+}
+
+impl<'w> Exec<'w> {
+    fn new(cw: &'w CompiledWorkload, flows: FlowSim, record_trace: bool) -> Self {
+        let world = cw.world as usize;
+        Exec {
+            cw,
+            record_trace,
+            flows,
+            pc: vec![0; world],
+            // vacant ranks start Finished so the deadlock scan skips them
+            state: vec![RankState::Finished; world],
+            colls: vec![CollRun::default(); cw.defs.len()],
+            arrival: vec![Time::ZERO; world],
+            msgs: vec![MsgSlot::default(); cw.num_msgs as usize],
+            trace: TraceRecorder::new(record_trace),
+        }
+    }
+
+    fn run(mut self) -> anyhow::Result<SchedulerReport> {
+        let cw = self.cw;
         let mut eng: Engine<SimEvent> = Engine::new();
         eng.max_events = 500_000_000;
 
-        let ranks: Vec<u32> = self.workload.programs.iter().map(|p| p.rank).collect();
-        for r in &ranks {
-            self.advance(&mut eng, *r)?;
+        for r in 0..cw.world {
+            if cw.has_program[r as usize] {
+                self.state[r as usize] = RankState::Ready;
+                self.advance(&mut eng, r)?;
+            }
         }
         while let Some(ev) = eng.step() {
             match ev.payload {
                 SimEvent::ComputeDone { rank } => {
-                    *self.pc.get_mut(&rank).unwrap() += 1;
-                    self.state.insert(rank, RankState::Ready);
+                    self.pc[rank as usize] += 1;
+                    self.state[rank as usize] = RankState::Ready;
                     self.advance(&mut eng, rank)?;
                 }
                 SimEvent::FlowDone(fid) => {
@@ -168,11 +241,11 @@ impl<'a> Scheduler<'a> {
         }
 
         // deadlock / starvation check
-        let stuck: Vec<(u32, RankState)> = self
-            .state
-            .iter()
-            .filter(|(_, s)| **s != RankState::Finished)
-            .map(|(r, s)| (*r, *s))
+        let stuck: Vec<(u32, RankState)> = (0..cw.world)
+            .filter(|&r| {
+                cw.has_program[r as usize] && self.state[r as usize] != RankState::Finished
+            })
+            .map(|r| (r, self.state[r as usize]))
             .collect();
         anyhow::ensure!(
             stuck.is_empty(),
@@ -185,11 +258,11 @@ impl<'a> Scheduler<'a> {
         let mut fct_by_kind: HashMap<&'static str, Samples> = HashMap::new();
         let mut fct_all = Samples::with_capacity(self.flows.records.len());
         for rec in &self.flows.records {
-            let kind = self
-                .tag_kind
-                .get(&rec.tag)
-                .map(|k| k.name())
-                .unwrap_or(if rec.tag >= MSG_TAG_BASE { "PP" } else { "?" });
+            let kind = if rec.tag >= MSG_TAG_BASE {
+                "PP"
+            } else {
+                cw.kinds[rec.tag as usize].name()
+            };
             let secs = rec.fct().as_secs();
             fct_by_kind.entry(kind).or_default().push(secs);
             fct_all.push(secs);
@@ -209,72 +282,61 @@ impl<'a> Scheduler<'a> {
 
     /// Execute ops for `rank` until it blocks or finishes.
     fn advance(&mut self, eng: &mut Engine<SimEvent>, rank: u32) -> anyhow::Result<()> {
-        let prog = &self.workload.programs[*self
-            .prog_idx
-            .get(&rank)
-            .ok_or_else(|| anyhow::anyhow!("no program for rank {rank}"))?];
+        let cw = self.cw;
+        let r = rank as usize;
+        let ops = &cw.ops[r];
         loop {
-            let pc = self.pc[&rank];
-            if pc >= prog.ops.len() {
-                self.state.insert(rank, RankState::Finished);
+            let pc = self.pc[r] as usize;
+            if pc >= ops.len() {
+                self.state[r] = RankState::Finished;
                 return Ok(());
             }
-            match &prog.ops[pc] {
-                Op::Compute { work, label } => {
-                    let gpu = self
-                        .cluster
-                        .gpu_of_rank(rank)
-                        .ok_or_else(|| anyhow::anyhow!("rank {rank} outside cluster"))?;
-                    let dur = self.cost.time(work, gpu)?;
+            match ops[pc] {
+                DenseOp::Compute { dur, label } => {
                     let now = eng.now();
-                    self.trace.record(rank, TraceCategory::Compute, *label, now, now + dur);
+                    self.trace.record(rank, TraceCategory::Compute, label, now, now + dur);
                     eng.schedule_in(dur, SimEvent::ComputeDone { rank });
-                    self.state.insert(rank, RankState::Computing);
+                    self.state[r] = RankState::Computing;
                     return Ok(());
                 }
-                Op::Collective { def_id } => {
-                    let def_id = *def_id;
-                    self.state.insert(rank, RankState::BlockedCollective(def_id));
-                    let ready = {
-                        let now = eng.now();
-                        let st = self
-                            .colls
-                            .get_mut(&def_id)
-                            .ok_or_else(|| anyhow::anyhow!("unknown collective {def_id}"))?;
-                        st.arrived += 1;
-                        st.arrivals.insert(rank, now);
-                        anyhow::ensure!(
-                            st.arrived <= st.expected,
-                            "collective {def_id} over-subscribed"
-                        );
-                        st.arrived == st.expected
-                    };
-                    if ready {
-                        self.launch_collective(eng, def_id)?;
+                DenseOp::Collective { cid } => {
+                    self.state[r] = RankState::BlockedCollective(cid);
+                    self.arrival[r] = eng.now();
+                    let expected = cw.expected[cid as usize];
+                    let c = &mut self.colls[cid as usize];
+                    c.arrived += 1;
+                    anyhow::ensure!(
+                        c.arrived <= expected,
+                        "collective '{}' over-subscribed",
+                        cw.defs[cid as usize].label
+                    );
+                    if c.arrived == expected {
+                        self.launch(eng, cid)?;
                     }
                     return Ok(());
                 }
-                Op::Send { peer, bytes, msg } => {
-                    let tag = MSG_TAG_BASE + msg;
-                    self.msgs.entry(*msg).or_default();
+                DenseOp::Send { peer, bytes, msg } => {
+                    let tag = MSG_TAG_BASE + msg as u64;
                     self.flows.start(
                         eng,
-                        FlowSpec { src: rank, dst: *peer, bytes: *bytes, tag },
+                        FlowSpec { src: rank, dst: peer.0, bytes, tag },
                         &SimEvent::FlowDone,
                     );
-                    *self.pc.get_mut(&rank).unwrap() += 1;
+                    self.pc[r] += 1;
                 }
-                Op::Recv { msg } => {
-                    let st = self.msgs.entry(*msg).or_default();
-                    if st.delivered {
-                        *self.pc.get_mut(&rank).unwrap() += 1;
+                DenseOp::Recv { msg } => {
+                    let slot = &mut self.msgs[msg as usize];
+                    if slot.delivered {
+                        slot.delivered = false; // one-shot consumption
+                        self.pc[r] += 1;
                     } else {
                         anyhow::ensure!(
-                            st.waiting.is_none(),
-                            "two ranks waiting on message {msg}"
+                            slot.waiting.is_none(),
+                            "two ranks waiting on p2p message tag {}",
+                            cw.msg_tags[msg as usize]
                         );
-                        st.waiting = Some(rank);
-                        self.state.insert(rank, RankState::BlockedRecv(*msg));
+                        slot.waiting = RankIdx(rank);
+                        self.state[r] = RankState::BlockedRecv(msg);
                         return Ok(());
                     }
                 }
@@ -282,101 +344,87 @@ impl<'a> Scheduler<'a> {
         }
     }
 
-    fn launch_collective(&mut self, eng: &mut Engine<SimEvent>, def_id: u64) -> anyhow::Result<()> {
-        let def = self
-            .workload
-            .collective(def_id)
-            .ok_or_else(|| anyhow::anyhow!("unknown collective {def_id}"))?;
-        let mut exec = CollectiveExec::plan(self.cluster, def, self.ring_policy);
+    /// All participants arrived: post the first pre-planned flow step.
+    fn launch(&mut self, eng: &mut Engine<SimEvent>, cid: u32) -> anyhow::Result<()> {
+        let cw = self.cw;
+        let steps = &cw.steps[cid as usize];
         let start = eng.now();
-        if exec.is_done() {
+        if steps.is_empty() {
             // degenerate (single rank / zero bytes): completes instantly
-            self.finish_collective(eng, def_id, start)?;
-            return Ok(());
+            return self.finish(eng, cid, start);
         }
-        let step: Vec<FlowSpec> = exec.next_step().unwrap().to_vec();
-        // First-step flows are posted at each sender's arrival time
-        // (SimAI/ns-3 semantics): early posters' FCT absorbs the
-        // straggler wait — the source of the paper's Fig-6 hetero tails.
-        let posted: Vec<Time> = {
-            let st = &self.colls[&def_id];
-            step.iter().map(|f| st.arrivals.get(&f.src).copied().unwrap_or(start)).collect()
-        };
-        self.flows.start_many_posted(eng, &step, Some(&posted), &SimEvent::FlowDone);
-        let st = self.colls.get_mut(&def_id).unwrap();
-        st.exec = Some(exec);
-        st.start = start;
+        let step = &steps[0];
+        {
+            let c = &mut self.colls[cid as usize];
+            c.step = 0;
+            c.outstanding = step.len() as u32;
+            c.start = start;
+        }
+        // Flows are posted at each sender's arrival time (SimAI/ns-3
+        // semantics): early posters' FCT absorbs the straggler wait.
+        let posted: Vec<Time> =
+            step.iter().map(|f| self.arrival[f.src as usize]).collect();
+        self.flows.start_many_posted(eng, step, Some(&posted), &SimEvent::FlowDone);
         Ok(())
     }
 
     fn on_flow_done(&mut self, eng: &mut Engine<SimEvent>, tag: u64) -> anyhow::Result<()> {
+        let cw = self.cw;
         if tag >= MSG_TAG_BASE {
-            // p2p message delivered
-            let msg = tag - MSG_TAG_BASE;
-            let st = self.msgs.entry(msg).or_default();
-            st.delivered = true;
-            if let Some(rank) = st.waiting.take() {
-                *self.pc.get_mut(&rank).unwrap() += 1;
-                self.state.insert(rank, RankState::Ready);
-                self.advance(eng, rank)?;
+            // p2p message delivered (one-shot)
+            let msg = (tag - MSG_TAG_BASE) as usize;
+            let waiting = self.msgs[msg].waiting;
+            if waiting.is_none() {
+                self.msgs[msg].delivered = true;
+            } else {
+                self.msgs[msg].waiting = RankIdx::NONE;
+                self.pc[waiting.idx()] += 1;
+                self.state[waiting.idx()] = RankState::Ready;
+                self.advance(eng, waiting.0)?;
             }
             return Ok(());
         }
         // collective flow
-        let (step_finished, next): (bool, Option<Vec<FlowSpec>>) = {
-            let st = self
-                .colls
-                .get_mut(&tag)
-                .ok_or_else(|| anyhow::anyhow!("flow for unknown collective {tag}"))?;
-            let exec = st.exec.as_mut().ok_or_else(|| anyhow::anyhow!("collective {tag} not launched"))?;
-            if exec.flow_done() {
-                let next = exec.next_step().map(|s| s.to_vec());
-                (true, next)
-            } else {
-                (false, None)
+        let cid = tag as usize;
+        {
+            let c = &mut self.colls[cid];
+            debug_assert!(c.outstanding > 0, "flow for idle collective {cid}");
+            c.outstanding -= 1;
+            if c.outstanding > 0 {
+                return Ok(());
             }
-        };
-        if step_finished {
-            match next {
-                Some(step) => {
-                    // All chunks of a collective are posted when the
-                    // sender arrives (NCCL enqueues the full send
-                    // schedule), so later steps' FCTs also measure from
-                    // arrival — ns-3 flow semantics.
-                    let posted: Vec<Time> = {
-                        let st = &self.colls[&tag];
-                        step.iter()
-                            .map(|f| st.arrivals.get(&f.src).copied().unwrap_or(st.start))
-                            .collect()
-                    };
-                    self.flows.start_many_posted(eng, &step, Some(&posted), &SimEvent::FlowDone);
-                }
-                None => {
-                    let start = self.colls[&tag].start;
-                    self.finish_collective(eng, tag, start)?;
-                }
-            }
+            c.step += 1;
         }
-        Ok(())
+        let next = self.colls[cid].step as usize;
+        if next < cw.steps[cid].len() {
+            // All chunks of a collective are posted when the sender
+            // arrives (NCCL enqueues the full send schedule), so later
+            // steps' FCTs also measure from arrival — ns-3 semantics.
+            let step = &cw.steps[cid][next];
+            self.colls[cid].outstanding = step.len() as u32;
+            let posted: Vec<Time> =
+                step.iter().map(|f| self.arrival[f.src as usize]).collect();
+            self.flows.start_many_posted(eng, step, Some(&posted), &SimEvent::FlowDone);
+            Ok(())
+        } else {
+            let start = self.colls[cid].start;
+            self.finish(eng, cid as u32, start)
+        }
     }
 
-    fn finish_collective(
-        &mut self,
-        eng: &mut Engine<SimEvent>,
-        def_id: u64,
-        start: Time,
-    ) -> anyhow::Result<()> {
-        let def = self.workload.collective(def_id).unwrap();
-        let now = eng.now();
+    fn finish(&mut self, eng: &mut Engine<SimEvent>, cid: u32, start: Time) -> anyhow::Result<()> {
+        let cw = self.cw;
+        let def = &cw.defs[cid as usize];
         if self.record_trace {
+            let now = eng.now();
             let r0 = def.ranks.first().copied().unwrap_or(0);
             self.trace.record(r0, TraceCategory::Communication, def.label.clone(), start, now);
         }
         // unblock all participants
-        for r in def.ranks.clone() {
-            if self.state.get(&r) == Some(&RankState::BlockedCollective(def_id)) {
-                *self.pc.get_mut(&r).unwrap() += 1;
-                self.state.insert(r, RankState::Ready);
+        for &r in &def.ranks {
+            if self.state[r as usize] == RankState::BlockedCollective(cid) {
+                self.pc[r as usize] += 1;
+                self.state[r as usize] = RankState::Ready;
                 self.advance(eng, r)?;
             }
         }
@@ -390,8 +438,8 @@ mod tests {
     use crate::compute::cost::LayerWork;
     use crate::config::model::LayerKind;
     use crate::config::presets;
-    use crate::system::collective::{CollectiveAlgo, CollectiveDef};
-    use crate::workload::op::RankProgram;
+    use crate::system::collective::{CollectiveAlgo, CollectiveDef, CommKind};
+    use crate::workload::op::{Op, RankProgram};
 
     fn lw(mbs: f64) -> LayerWork {
         LayerWork {
@@ -526,6 +574,75 @@ mod tests {
         let cost = CostTable::native();
         let err = Scheduler::new(&w, &c, &cost).unwrap().run().unwrap_err();
         assert!(err.to_string().contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn reused_message_tag_rejected_at_run() {
+        // regression: the seed scheduler never consumed `delivered`, so
+        // a reused tag let a second Recv complete instantly against the
+        // stale delivery. Tags are now validated unique at compile time
+        // and delivery is one-shot.
+        let c = presets::cluster("hopper", 1).unwrap();
+        let w = Workload {
+            programs: vec![
+                RankProgram {
+                    rank: 0,
+                    ops: vec![
+                        Op::Send { peer: 1, bytes: 4096, msg: 7 },
+                        Op::Send { peer: 1, bytes: 4096, msg: 7 },
+                    ],
+                },
+                RankProgram { rank: 1, ops: vec![Op::Recv { msg: 7 }, Op::Recv { msg: 7 }] },
+            ],
+            collectives: vec![],
+        };
+        let cost = CostTable::native();
+        let err = Scheduler::new(&w, &c, &cost).unwrap().run().unwrap_err();
+        assert!(err.to_string().contains("reused"), "{err}");
+        // the workload validator rejects it up front as well
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn prepared_run_matches_lazy_run() {
+        use std::sync::Arc;
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let coll = CollectiveDef {
+            id: 9,
+            algo: CollectiveAlgo::AllReduceRing,
+            ranks: vec![0, 8],
+            bytes_per_rank: 1 << 22,
+            kind: CommKind::Dp,
+            label: "dp".into(),
+        };
+        let w = Workload {
+            programs: vec![
+                RankProgram {
+                    rank: 0,
+                    ops: vec![
+                        Op::Compute { work: lw(8.0), label: "mlp" },
+                        Op::Collective { def_id: 9 },
+                    ],
+                },
+                RankProgram {
+                    rank: 8,
+                    ops: vec![
+                        Op::Compute { work: lw(8.0), label: "mlp" },
+                        Op::Collective { def_id: 9 },
+                    ],
+                },
+            ],
+            collectives: vec![coll],
+        };
+        let cost = cost_for(&[lw(8.0)], &c);
+        let lazy = Scheduler::new(&w, &c, &cost).unwrap().run().unwrap();
+        let compiled =
+            CompiledWorkload::compile(&w, &c, &cost, RingPolicy::HeteroAware).unwrap();
+        let topo = Arc::new(Topology::build(&c).unwrap());
+        let prepared = Scheduler::prepared(&compiled, &c, topo).run().unwrap();
+        assert_eq!(lazy.iteration_time, prepared.iteration_time);
+        assert_eq!(lazy.flows_completed, prepared.flows_completed);
+        assert_eq!(lazy.events_processed, prepared.events_processed);
     }
 
     #[test]

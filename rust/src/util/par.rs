@@ -1,0 +1,73 @@
+//! Scoped worker-pool parallel map (substrate S21).
+//!
+//! One shared pattern for every "evaluate N independent items on T
+//! worker threads" need (concurrent simulation iterations, the
+//! planner sweep): workers pull indices off an atomic counter inside
+//! `std::thread::scope`, results land in index order. Determinism
+//! contract: `f` must be a pure function of its index — then the
+//! returned `Vec` is identical for any `threads` value.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Evaluate `f(0..n)` on a pool of `threads` workers (0 = one per
+/// available core) and return the results in index order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+    .min(n)
+    .max(1);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("every claimed slot is written"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_index_order() {
+        let out = parallel_map(100, 4, |i| i * 3);
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input_is_empty_output() {
+        let out: Vec<u32> = parallel_map(0, 4, |_| unreachable!());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let one = parallel_map(37, 1, |i| i as u64 * i as u64);
+        for threads in [2, 8, 0] {
+            assert_eq!(one, parallel_map(37, threads, |i| i as u64 * i as u64));
+        }
+    }
+}

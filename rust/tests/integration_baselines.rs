@@ -59,6 +59,7 @@ fn analytical_estimate_in_event_sim_regime() {
     assert!((0.2..5.0).contains(&ratio), "event/analytical = {ratio}");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn analytical_pjrt_backend_matches_native() {
     let model = small_model();

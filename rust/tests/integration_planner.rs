@@ -1,0 +1,55 @@
+//! Planner integration: the ranked plan list must be deterministic —
+//! identical across repeated runs and across worker-thread counts —
+//! and the winner must never lose to the uniform default plan that is
+//! part of its own candidate set.
+
+use hetsim::config::presets;
+use hetsim::planner::{search, PlanOptions};
+
+fn tiny_model() -> hetsim::config::model::ModelSpec {
+    let mut m = presets::model("gpt-6.7b").unwrap();
+    m.num_layers = 4;
+    m.global_batch = 16;
+    m.micro_batch = 8;
+    m
+}
+
+fn ranking_fingerprint(threads: usize) -> String {
+    let m = tiny_model();
+    let c = presets::cluster_hetero(1, 1).unwrap();
+    let opts = PlanOptions { microbatch_limit: Some(1), threads };
+    let rep = search(&m, &c, &opts).unwrap();
+    // full rendered output: keys, times, breakdowns, prune notes
+    rep.render(0)
+}
+
+#[test]
+fn ranking_identical_across_runs() {
+    assert_eq!(ranking_fingerprint(2), ranking_fingerprint(2));
+}
+
+#[test]
+fn ranking_identical_across_thread_counts() {
+    let one = ranking_fingerprint(1);
+    for threads in [2, 4] {
+        assert_eq!(one, ranking_fingerprint(threads), "threads={threads}");
+    }
+}
+
+#[test]
+fn winner_beats_or_ties_uniform_default_on_hetero_cluster() {
+    let m = tiny_model();
+    let c = presets::cluster_hetero(1, 1).unwrap();
+    let opts = PlanOptions { microbatch_limit: Some(1), threads: 4 };
+    let rep = search(&m, &c, &opts).unwrap();
+    assert!(rep.ranked.len() >= 8, "only {} plans ranked", rep.ranked.len());
+    assert!(
+        rep.best().iteration_time <= rep.baseline.iteration_time,
+        "best {} > default {}",
+        rep.best().iteration_time,
+        rep.baseline.iteration_time
+    );
+    // compute/comm breakdown is populated
+    assert!(rep.best().compute_busy.as_secs() > 0.0);
+    assert!(rep.best().comm_busy.as_secs() > 0.0);
+}

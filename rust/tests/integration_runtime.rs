@@ -2,7 +2,11 @@
 //! Pallas Layer-1 kernels, lowered to HLO text) must load, execute, and
 //! agree with the native Rust mirror row-for-row.
 //!
-//! Requires `make artifacts` (the Makefile orders this before tests).
+//! Requires `make artifacts`, adding the `xla` crate to
+//! rust/Cargo.toml, and building with `--features pjrt` (the default
+//! build deliberately omits the dependency and ships stub PJRT
+//! models; see `runtime` and DESIGN.md §4).
+#![cfg(feature = "pjrt")]
 
 use hetsim::compute::cost::{LayerWork, NativeCostModel};
 use hetsim::compute::table::{CostEvaluator, CostTable};
