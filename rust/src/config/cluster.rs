@@ -12,13 +12,16 @@ use crate::util::units::{Bandwidth, Time};
 pub struct RankIdx(pub u32);
 
 impl RankIdx {
+    /// Vacant sentinel (no rank).
     pub const NONE: RankIdx = RankIdx(u32::MAX);
 
+    /// The rank as a `Vec` index.
     #[inline]
     pub fn idx(self) -> usize {
         self.0 as usize
     }
 
+    /// True for the vacant sentinel.
     #[inline]
     pub fn is_none(self) -> bool {
         self.0 == u32::MAX
@@ -31,6 +34,7 @@ impl RankIdx {
 /// `rust/tests/integration_runtime.rs`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct GpuSpec {
+    /// GPU model name, e.g. `H100`.
     pub name: String,
     /// Peak dense bf16 FLOP/s.
     pub peak_flops: f64,
@@ -38,9 +42,13 @@ pub struct GpuSpec {
     pub mem_bw: f64,
     /// Memory capacity, bytes.
     pub mem_capacity: u64,
+    /// Roofline efficiency for MLP-shaped GEMMs.
     pub eff_mlp: f64,
+    /// Roofline efficiency for attention-shaped GEMMs.
     pub eff_attn: f64,
+    /// Roofline efficiency for embedding lookups.
     pub eff_embed: f64,
+    /// Achievable fraction of peak memory bandwidth.
     pub eff_mem: f64,
     /// Kernel launch overhead, seconds.
     pub launch_overhead: f64,
@@ -74,13 +82,16 @@ impl GpuSpec {
 pub struct InterconnectSpec {
     /// NVLink per-GPU bandwidth (through NVSwitch).
     pub nvlink_bw: Bandwidth,
+    /// NVLink per-traversal delay.
     pub nvlink_delay: Time,
     /// PCIe bandwidth GPU <-> PCIe switch.
     pub pcie_bw: Bandwidth,
     /// One PCIe trip latency (inter-node paths pay it twice: GPU->switch
     /// and switch->NIC, per paper §5).
     pub pcie_latency: Time,
+    /// NIC line rate.
     pub nic_bw: Bandwidth,
+    /// NIC packet-processing delay per traversal.
     pub nic_processing_delay: Time,
     /// Human label, e.g. "ConnectX-6".
     pub nic_name: String,
@@ -90,8 +101,11 @@ pub struct InterconnectSpec {
 /// (rail-optimized, paper Fig 2).
 #[derive(Debug, Clone, PartialEq)]
 pub struct NodeSpec {
+    /// The GPU model every slot of this node carries.
     pub gpu: GpuSpec,
+    /// Intra-node and NIC interconnect parameters.
     pub interconnect: InterconnectSpec,
+    /// GPU slots (and rail NICs) on this node.
     pub gpus_per_node: u32,
 }
 
@@ -99,7 +113,9 @@ pub struct NodeSpec {
 /// architectures) plus the rail switch fabric parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterSpec {
+    /// Display name, e.g. `hetero-1a1h`.
     pub name: String,
+    /// Nodes in global-rank order (possibly mixed architectures).
     pub nodes: Vec<NodeSpec>,
     /// Rail/aggregation switch port bandwidth.
     pub switch_bw: Bandwidth,
@@ -108,10 +124,12 @@ pub struct ClusterSpec {
 }
 
 impl ClusterSpec {
+    /// World size: total GPUs across all nodes.
     pub fn total_gpus(&self) -> u32 {
         self.nodes.iter().map(|n| n.gpus_per_node).sum()
     }
 
+    /// GPUs per node (uniform by validation; 0 for an empty cluster).
     pub fn gpus_per_node(&self) -> u32 {
         self.nodes.first().map(|n| n.gpus_per_node).unwrap_or(0)
     }
@@ -128,10 +146,12 @@ impl ClusterSpec {
         None
     }
 
+    /// The node at `idx` (panics when out of range).
     pub fn node(&self, idx: u32) -> &NodeSpec {
         &self.nodes[idx as usize]
     }
 
+    /// The GPU spec hosting a global rank, if the rank exists.
     pub fn gpu_of_rank(&self, global_rank: u32) -> Option<&GpuSpec> {
         self.locate(global_rank).map(|(n, _)| &self.nodes[n as usize].gpu)
     }
@@ -163,6 +183,8 @@ impl ClusterSpec {
         seen
     }
 
+    /// Validate structural invariants (non-empty, uniform
+    /// `gpus_per_node` for the rail-only topology, positive rates).
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(!self.nodes.is_empty(), "cluster has no nodes");
         let gpn = self.nodes[0].gpus_per_node;

@@ -5,19 +5,23 @@
 
 use crate::config::cluster::ClusterSpec;
 use crate::config::model::ModelSpec;
+use crate::workload::schedule::ScheduleKind;
 
 /// Paper-style device-group description:
 /// `DG = {(gpu_type_1, count_1), ..., (gpu_type_N, count_N)}`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceGroupSpec {
+    /// `(gpu type, count)` pairs forming the group.
     pub members: Vec<(String, u32)>,
 }
 
 impl DeviceGroupSpec {
+    /// Total GPU count across all member types.
     pub fn total(&self) -> u32 {
         self.members.iter().map(|(_, c)| c).sum()
     }
 
+    /// Paper notation, e.g. `(HH,A)` for 2×H100 + 1×A100.
     pub fn label(&self) -> String {
         let parts: Vec<String> = self
             .members
@@ -34,12 +38,16 @@ impl DeviceGroupSpec {
 /// Base (uniform) parallelism degrees.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ParallelismSpec {
+    /// Tensor-parallel degree (ranks per pipeline stage).
     pub tp: u32,
+    /// Pipeline-parallel degree (stages per device group).
     pub pp: u32,
+    /// Data-parallel degree (device groups / model replicas).
     pub dp: u32,
 }
 
 impl ParallelismSpec {
+    /// Total ranks this parallelism occupies: `tp × pp × dp`.
     pub fn world_size(&self) -> u32 {
         self.tp * self.pp * self.dp
     }
@@ -57,6 +65,7 @@ pub struct StagePlan {
 }
 
 impl StagePlan {
+    /// This stage's TP degree (its rank count).
     pub fn tp(&self) -> u32 {
         self.ranks.len() as u32
     }
@@ -67,23 +76,29 @@ impl StagePlan {
 /// model for a given batch size to form a pipeline").
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceGroupPlan {
+    /// Group id (equals the DP replica index in uniform mappings).
     pub id: u32,
+    /// Pipeline stages in order; each stage is one TP group.
     pub stages: Vec<StagePlan>,
     /// Samples of the global batch this replica trains per iteration
     /// (non-uniform across groups in heterogeneous deployments).
     pub batch_share: u64,
+    /// Microbatch size this group runs.
     pub micro_batch: u64,
 }
 
 impl DeviceGroupPlan {
+    /// Pipeline depth of this group.
     pub fn pp(&self) -> u32 {
         self.stages.len() as u32
     }
 
+    /// All global ranks in the group, stage-major.
     pub fn ranks(&self) -> Vec<u32> {
         self.stages.iter().flat_map(|s| s.ranks.iter().copied()).collect()
     }
 
+    /// Microbatches this group runs per iteration (≥ 1).
     pub fn num_microbatches(&self) -> u64 {
         (self.batch_share / self.micro_batch.max(1)).max(1)
     }
@@ -99,12 +114,16 @@ pub fn split_evenly(total: u64, parts: u64) -> Vec<u64> {
 }
 
 /// Full framework specification: the parallelism→device mapping for the
-/// whole cluster.
+/// whole cluster plus the pipeline schedule every group runs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FrameworkSpec {
+    /// One plan per device group (= DP replica).
     pub groups: Vec<DeviceGroupPlan>,
     /// Degrees this spec was derived from (informational for reports).
     pub base: ParallelismSpec,
+    /// Pipeline schedule ordering each group's microbatches
+    /// ([`ScheduleKind::GPipe`] reproduces the seed behavior exactly).
+    pub schedule: ScheduleKind,
 }
 
 impl FrameworkSpec {
@@ -151,15 +170,23 @@ impl FrameworkSpec {
                 micro_batch: model.micro_batch,
             });
         }
-        let spec = FrameworkSpec { groups, base: par };
+        let spec = FrameworkSpec { groups, base: par, schedule: ScheduleKind::GPipe };
         spec.validate(model, cluster)?;
         Ok(spec)
     }
 
+    /// Replace the pipeline schedule (builder-style).
+    pub fn with_schedule(mut self, schedule: ScheduleKind) -> FrameworkSpec {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Total ranks mapped across all groups.
     pub fn total_ranks(&self) -> usize {
         self.groups.iter().map(|g| g.ranks().len()).sum()
     }
 
+    /// Data-parallel degree (number of device groups).
     pub fn dp(&self) -> u32 {
         self.groups.len() as u32
     }
@@ -170,6 +197,7 @@ impl FrameworkSpec {
     /// has exactly one embedding stage.
     pub fn validate(&self, model: &ModelSpec, cluster: &ClusterSpec) -> anyhow::Result<()> {
         anyhow::ensure!(!self.groups.is_empty(), "no device groups");
+        self.schedule.validate()?;
         let mut seen = std::collections::HashSet::new();
         for g in &self.groups {
             anyhow::ensure!(!g.stages.is_empty(), "group {} has no stages", g.id);

@@ -1,51 +1,133 @@
-//! JSON config loader: the file-based face of abstractions A1/A2.
+//! JSON config loader: the file-based face of abstractions A1/A2
+//! (`hetsim simulate --config FILE`).
 //!
-//! A scenario file bundles model + cluster + parallelism:
+//! # Scenario format
+//!
+//! A scenario file is one JSON object with four sections (plus two
+//! optional scalars). Unknown keys are ignored.
 //!
 //! ```json
 //! {
-//!   "model": "gpt-6.7b",                 // preset name, or inline object
+//!   "model": "gpt-6.7b",
 //!   "cluster": {"arch": "hetero", "ampere_nodes": 8, "hopper_nodes": 8},
 //!   "parallelism": {"tp": 4, "pp": 1, "dp": 32},
+//!   "schedule": "1f1b",
 //!   "seed": 42
 //! }
 //! ```
 //!
-//! Inline model objects accept the Table-6 field names; inline clusters
-//! accept per-node architecture lists for arbitrary mixes.
+//! ## `model` — required
+//!
+//! Either a preset name (`"gpt-6.7b"`, `"gpt-13b"`, `"mixtral-8x7b"`,
+//! `"llama2-70b"` — the paper's Table 6, see
+//! [`crate::config::presets::model`]) or an inline object:
+//!
+//! | key | required | default | meaning |
+//! |-----|----------|---------|---------|
+//! | `name` | no | `"custom"` | display name |
+//! | `num_layers` | yes | — | transformer blocks |
+//! | `hidden_size` | yes | — | model dimension |
+//! | `num_heads` | yes | — | attention heads (must divide `hidden_size`) |
+//! | `ffn_hidden` | yes | — | MLP inner dimension |
+//! | `seq_len` | yes | — | training sequence length |
+//! | `max_pos_embeddings` | no | `seq_len` | positional table size |
+//! | `vocab_size` | no | `50257` | embedding rows |
+//! | `num_experts` | no | — | MoE expert count (presence enables MoE) |
+//! | `top_k` | no | `2` | MoE routed experts per token |
+//! | `gated_mlp` | no | `false` | SwiGLU-style 3-matrix MLP |
+//! | `global_batch` | yes | — | samples per iteration |
+//! | `micro_batch` | yes | — | microbatch size |
+//! | `grad_dtype_bytes` | no | `4` | gradient dtype width |
+//! | `dtype_bytes` | no | `2` | parameter/activation dtype width |
+//!
+//! ## `cluster` — required
+//!
+//! One of:
+//! * shorthand string — `"ampere:16"` / `"hopper:4"` / `"volta:2"` /
+//!   `"blackwell:2"` (N nodes of 8 GPUs; bare `"hopper"` means 16
+//!   nodes) or `"hetero:A,H"` (A ampere + H hopper nodes);
+//! * `{"arch": "hetero", "ampere_nodes": 8, "hopper_nodes": 8}` —
+//!   both node counts default to 8;
+//! * `{"arch": "custom", "node_archs": ["ampere", "hopper", ...],
+//!   "name": "mymix"}` — one entry per node for arbitrary mixes;
+//! * `{"arch": "<preset>", "nodes": 16}` — homogeneous preset cluster.
+//!
+//! ## `parallelism` — required
+//!
+//! `{"tp": T, "pp": P, "dp": D}`, all three required;
+//! `T × P × D` must equal the cluster's GPU count at build time.
+//!
+//! ## `schedule` — optional, default `"gpipe"`
+//!
+//! Pipeline schedule for every device group: `"gpipe"`, `"1f1b"` or
+//! `"interleaved:V"` (V ≥ 2 virtual-pipeline chunks per stage). See
+//! [`crate::workload::schedule`].
+//!
+//! ## `seed` — optional, default `42`
+//!
+//! Reserved for stochastic extensions; the simulator itself is
+//! deterministic.
+//!
+//! A complete, loadable example ships at
+//! `rust/examples/scenario_hetero_1f1b.json`; the doctest below parses
+//! it on every `cargo test`, so the example and this documentation
+//! cannot rot apart:
+//!
+//! ```
+//! let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_hetero_1f1b.json");
+//! let text = std::fs::read_to_string(path).unwrap();
+//! let s = hetsim::config::loader::load_scenario(&text).unwrap();
+//! assert_eq!(s.model.name, "GPT-6.7B");
+//! assert_eq!(s.cluster.total_gpus(), 16);
+//! assert_eq!((s.parallelism.tp, s.parallelism.pp, s.parallelism.dp), (4, 2, 2));
+//! assert_eq!(s.schedule, hetsim::workload::schedule::ScheduleKind::OneFOneB);
+//! ```
 
 use crate::config::cluster::ClusterSpec;
 use crate::config::framework::ParallelismSpec;
 use crate::config::model::{ModelSpec, MoeSpec};
 use crate::config::presets;
 use crate::util::json::Json;
+use crate::workload::schedule::ScheduleKind;
 
 /// A fully-described simulation scenario.
 #[derive(Debug, Clone)]
 pub struct Scenario {
+    /// Model hyperparameters (Table 6 fields).
     pub model: ModelSpec,
+    /// Cluster / host-topology description (Table 5 fields).
     pub cluster: ClusterSpec,
+    /// Parallelism degrees to deploy.
     pub parallelism: ParallelismSpec,
+    /// Pipeline schedule for every device group.
+    pub schedule: ScheduleKind,
+    /// Reserved for stochastic extensions (the simulator itself is
+    /// deterministic).
     pub seed: u64,
 }
 
+/// Read and parse a scenario file (see the module docs for the format).
 pub fn load_scenario_file(path: &std::path::Path) -> anyhow::Result<Scenario> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
     load_scenario(&text)
 }
 
+/// Parse a scenario from JSON text (see the module docs for the format).
 pub fn load_scenario(text: &str) -> anyhow::Result<Scenario> {
     let v = Json::parse(text)?;
     let model = parse_model(v.req("model")?)?;
     let cluster = parse_cluster(v.req("cluster")?)?;
     let parallelism = parse_parallelism(v.req("parallelism")?)?;
+    let schedule: ScheduleKind = v.opt_str("schedule", "gpipe").parse()?;
     let seed = v.opt_u64("seed", 42);
     model.validate()?;
     cluster.validate()?;
-    Ok(Scenario { model, cluster, parallelism, seed })
+    Ok(Scenario { model, cluster, parallelism, schedule, seed })
 }
 
+/// Parse the `model` section: a preset name or an inline Table-6
+/// object.
 pub fn parse_model(v: &Json) -> anyhow::Result<ModelSpec> {
     if let Some(name) = v.as_str() {
         return presets::model(name);
@@ -76,6 +158,8 @@ pub fn parse_model(v: &Json) -> anyhow::Result<ModelSpec> {
     })
 }
 
+/// Parse the `cluster` section: a shorthand string or an inline object
+/// (see the module docs for the accepted shapes).
 pub fn parse_cluster(v: &Json) -> anyhow::Result<ClusterSpec> {
     if let Some(name) = v.as_str() {
         // "hetero:A,H" shorthand: A ampere nodes + H hopper nodes
@@ -117,6 +201,7 @@ pub fn parse_cluster(v: &Json) -> anyhow::Result<ClusterSpec> {
     }
 }
 
+/// Parse the `parallelism` section (`tp`, `pp`, `dp`, all required).
 pub fn parse_parallelism(v: &Json) -> anyhow::Result<ParallelismSpec> {
     Ok(ParallelismSpec {
         tp: v.req_u64("tp")? as u32,
@@ -203,6 +288,30 @@ mod tests {
         .unwrap();
         assert_eq!(c.nodes.len(), 3);
         assert_eq!(c.gpu_types(), vec!["A100", "H100"]);
+    }
+
+    #[test]
+    fn schedule_key_parsed_with_gpipe_default() {
+        let base = r#"{"model": "gpt-6.7b", "cluster": "hetero:1,1",
+            "parallelism": {"tp": 4, "pp": 2, "dp": 2}%SCHED%}"#;
+        let s = load_scenario(&base.replace("%SCHED%", "")).unwrap();
+        assert_eq!(s.schedule, ScheduleKind::GPipe);
+        let s =
+            load_scenario(&base.replace("%SCHED%", r#", "schedule": "1f1b""#)).unwrap();
+        assert_eq!(s.schedule, ScheduleKind::OneFOneB);
+        let s = load_scenario(&base.replace("%SCHED%", r#", "schedule": "interleaved:4""#))
+            .unwrap();
+        assert_eq!(s.schedule, ScheduleKind::Interleaved1F1B { vpp: 4 });
+        assert!(load_scenario(&base.replace("%SCHED%", r#", "schedule": "zigzag""#)).is_err());
+    }
+
+    #[test]
+    fn example_config_loads() {
+        // the file the module docs point at must stay loadable
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_hetero_1f1b.json");
+        let s = load_scenario_file(std::path::Path::new(path)).unwrap();
+        assert_eq!(s.parallelism.world_size(), s.cluster.total_gpus());
+        assert_eq!(s.schedule, ScheduleKind::OneFOneB);
     }
 
     #[test]

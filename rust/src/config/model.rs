@@ -5,14 +5,20 @@
 /// Codes match the Python side (`python/compile/model.py`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LayerKind {
+    /// Token/position embedding lookup (and the tied output projection).
     Embedding,
+    /// Self-attention block.
     Attention,
+    /// Dense MLP block.
     Mlp,
+    /// Mixture-of-experts MLP block.
     Moe,
+    /// Everything else per block (layernorm, residual, dropout).
     Other,
 }
 
 impl LayerKind {
+    /// Numeric code used in the AOT cost-model feature rows.
     pub fn code(self) -> f32 {
         match self {
             LayerKind::Embedding => 0.0,
@@ -23,6 +29,7 @@ impl LayerKind {
         }
     }
 
+    /// Lower-case display name.
     pub fn name(self) -> &'static str {
         match self {
             LayerKind::Embedding => "embedding",
@@ -37,27 +44,39 @@ impl LayerKind {
 /// MoE configuration (Mixtral-style token-choice routing).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MoeSpec {
+    /// Experts per MoE layer.
     pub num_experts: u32,
+    /// Experts each token is routed to.
     pub top_k: u32,
 }
 
 /// Model + training hyperparameters (paper Table 6).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {
+    /// Display name, e.g. `GPT-6.7B`.
     pub name: String,
+    /// Transformer block count.
     pub num_layers: u32,
+    /// Model (embedding) dimension.
     pub hidden_size: u64,
+    /// Attention heads (must divide `hidden_size`).
     pub num_heads: u32,
+    /// MLP inner dimension.
     pub ffn_hidden: u64,
+    /// Training sequence length.
     pub seq_len: u64,
+    /// Positional-embedding table size.
     pub max_pos_embeddings: u64,
+    /// Vocabulary size (embedding rows).
     pub vocab_size: u64,
+    /// MoE routing parameters (`None` = dense model).
     pub moe: Option<MoeSpec>,
     /// Gated (SwiGLU-style, 3-matrix) MLP — true for Llama/Mixtral,
     /// false for GPT's 2-matrix MLP. Affects parameter accounting.
     pub gated_mlp: bool,
-    /// Training configuration.
+    /// Samples per training iteration across all DP replicas.
     pub global_batch: u64,
+    /// Samples per microbatch.
     pub micro_batch: u64,
     /// Gradient dtype bytes (paper's DP sizes imply fp32 grads).
     pub grad_dtype_bytes: u64,

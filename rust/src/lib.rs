@@ -2,46 +2,98 @@
 //!
 //! Reproduction of *"Simulating LLM training workloads for heterogeneous
 //! compute and network infrastructure"* (CS.DC 2025) as a three-layer
-//! Rust + JAX + Pallas system. See `DESIGN.md` for the system inventory
-//! and the experiment index.
+//! Rust + JAX + Pallas system. See `DESIGN.md` for the full system
+//! inventory (S1–S21) and the experiment index, and the top-level
+//! `README.md` for the CLI walkthrough.
 //!
-//! Layer map:
-//! * [`engine`] — deterministic discrete-event simulation core (S1).
-//! * [`config`] — model / cluster / framework descriptions (S2, paper
-//!   abstractions A1 + A2, Tables 5–6).
-//! * [`workload`] — AICB-like workload generation and non-uniform
-//!   partitioning (S3, S4, component C1).
-//! * [`system`] — device groups, hybrid parallelism, resharding, the
-//!   heterogeneity-aware collective library and pipeline scheduler
-//!   (S5–S8, components C1–C3).
-//! * [`network`] — rail-only topology and flow-level network simulation
-//!   with per-interconnect delays (S9, component C4).
-//! * [`compute`] — per-layer compute-cost evaluation: PJRT-executed AOT
-//!   artifact with a native Rust mirror for cross-checking (S10, C4).
-//! * [`runtime`] — PJRT plumbing over the `xla` crate (S11).
-//! * [`simulator`] — the facade that ties the layers into one
-//!   reusable, thread-shareable prepared simulation.
-//! * [`planner`] — parallelism-plan exploration over prepared
-//!   simulations: enumerate, prune, evaluate concurrently and rank
-//!   TP×PP×DP deployments (`hetsim plan`, S20).
-//! * [`baselines`] — SimAI-like homogeneous, Sailor-like analytical and
-//!   uniform-partitioning comparators (S12).
-//! * [`report`] — regenerates the paper's Table 1, Fig 5, Fig 6 (S13).
-//! * [`util`] — in-tree substrates for crates unavailable offline
-//!   (S14–S19: json, cli, rng, stats, units, tables, prop testing,
-//!   logging).
+//! ## Architecture
+//!
+//! A simulation flows through the layers in this order:
+//!
+//! 1. **Describe** — [`config`]: model hyperparameters
+//!    ([`config::model::ModelSpec`], paper Table 6), cluster & host
+//!    topology ([`config::cluster::ClusterSpec`], Table 5) and the
+//!    framework mapping ([`config::framework::FrameworkSpec`]: device
+//!    groups, parallelism degrees, pipeline schedule). Presets carry
+//!    the paper's exact configurations; [`config::loader`] reads the
+//!    same structures from JSON scenario files.
+//! 2. **Generate** — [`workload`]: the AICB-like generator expands the
+//!    descriptions into per-rank op programs under a pipeline schedule
+//!    ([`workload::schedule`]: GPipe / 1F1B / interleaved 1F1B), with
+//!    non-uniform partitioning ([`workload::partition`], component C1)
+//!    for heterogeneous clusters.
+//! 3. **Lower** — [`system`]: device groups, resharding (C2), the
+//!    heterogeneity-aware collective library (C3) and
+//!    [`system::compiled::CompiledWorkload`] — the dense, immutable
+//!    simulation core (durations pre-resolved, collectives pre-planned,
+//!    p2p tags validated unique).
+//! 4. **Simulate** — [`engine`] (deterministic discrete-event core),
+//!    [`network`] (rail-only topology, fluid flow simulation with
+//!    per-interconnect delays, C4) and [`compute`] (roofline cost
+//!    model; [`runtime`] swaps in the PJRT-executed AOT artifact).
+//! 5. **Consume** — [`simulator`] ties it into one reusable
+//!    `Send + Sync` [`simulator::Simulation`]; [`planner`] sweeps
+//!    TP×PP×DP×schedule deployments concurrently (`hetsim plan`);
+//!    [`baselines`] and [`report`] reproduce the paper's comparisons
+//!    and artifacts; [`util`] holds in-tree substrates for crates
+//!    unavailable offline.
+//!
+//! ## Quickstart
+//!
+//! One simulated training iteration of GPT-6.7B on a mixed A100+H100
+//! cluster, under a 1F1B pipeline schedule:
+//!
+//! ```no_run
+//! use hetsim::config::framework::ParallelismSpec;
+//! use hetsim::config::presets;
+//! use hetsim::workload::schedule::ScheduleKind;
+//! use hetsim::SimulationBuilder;
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     let model = presets::model("gpt-6.7b")?;
+//!     let cluster = presets::cluster_hetero(1, 1)?; // 8×A100 + 8×H100
+//!     let sim = SimulationBuilder::new(model, cluster)
+//!         .parallelism(ParallelismSpec { tp: 4, pp: 2, dp: 2 })
+//!         .schedule(ScheduleKind::OneFOneB)
+//!         .build()?;
+//!     let report = sim.run_iteration()?;
+//!     println!("iteration time: {}", report.iteration_time);
+//!     for (kind, s) in &report.fct_summary {
+//!         println!("{kind}: {} flows, p50 {:.1}us", s.count, s.p50 * 1e6);
+//!     }
+//!     Ok(())
+//! }
+//! ```
+//!
+//! The same scenario from the command line:
+//!
+//! ```text
+//! hetsim simulate --model gpt-6.7b --cluster hetero:1,1 \
+//!     --tp 4 --pp 2 --dp 2 --schedule 1f1b
+//! hetsim plan --model gpt-6.7b --cluster hetero:1,1   # rank all plans
+//! ```
+//!
+//! ## Documentation coverage
+//!
+//! The public API of the description, workload, planner and facade
+//! layers is fully documented and kept that way by `missing_docs`
+//! warnings (promoted to errors by the `cargo doc` CI job).
 
 pub mod baselines;
 pub mod compute;
+#[warn(missing_docs)]
 pub mod config;
 pub mod engine;
 pub mod network;
+#[warn(missing_docs)]
 pub mod planner;
 pub mod report;
 pub mod runtime;
+#[warn(missing_docs)]
 pub mod simulator;
 pub mod system;
 pub mod util;
+#[warn(missing_docs)]
 pub mod workload;
 
 pub use simulator::{SimulationBuilder, SimulationReport};

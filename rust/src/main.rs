@@ -20,8 +20,8 @@ fn usage() -> Usage {
         program: "hetsim",
         about: "heterogeneity-aware LLM training simulator (CS.DC 2025 reproduction)",
         commands: vec![
-            ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N] [--iterations N --threads N]"),
-            ("plan", "rank TPxPPxDP plans for a model on a cluster [--model NAME --cluster SPEC --threads N --mb-limit N (0=all) --top K]"),
+            ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N] [--schedule gpipe|1f1b|interleaved:V] [--iterations N --threads N]"),
+            ("plan", "rank TPxPPxDPxschedule plans for a model on a cluster [--model NAME --cluster SPEC --threads N --mb-limit N (0=all) --top K]"),
             ("fig1", "hardware-evolution trend across generation presets"),
             ("fig5", "per-layer compute time across GPU generations [--backend native|pjrt]"),
             ("fig6", "FCT CCDF across interconnect configs [--nodes N --models a,b --mb-limit N]"),
@@ -74,12 +74,12 @@ fn cost_backend(args: &Args) -> Result<CostBackend> {
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     args.check_known(&[
-        "config", "model", "cluster", "tp", "pp", "dp", "backend", "mb-limit", "hetero-partition",
-        "naive-ring", "iterations", "threads",
+        "config", "model", "cluster", "tp", "pp", "dp", "schedule", "backend", "mb-limit",
+        "hetero-partition", "naive-ring", "iterations", "threads",
     ])?;
-    let (model, cluster, par) = if let Some(path) = args.opt("config") {
+    let (model, cluster, par, schedule) = if let Some(path) = args.opt("config") {
         let s = loader::load_scenario_file(std::path::Path::new(path))?;
-        (s.model, s.cluster, Some(s.parallelism))
+        (s.model, s.cluster, Some(s.parallelism), Some(s.schedule))
     } else {
         let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
         let cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
@@ -93,7 +93,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                 dp: args.opt_u64("dp", 1)? as u32,
             }),
         };
-        (model, cluster, par)
+        (model, cluster, par, None)
     };
     let mut b = SimulationBuilder::new(model, cluster)
         .cost_backend(cost_backend(args)?)
@@ -107,6 +107,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
     if let Some(p) = par {
         b = b.parallelism(p);
+    }
+    // --schedule overrides a config file's "schedule" key
+    if let Some(s) = args.opt("schedule") {
+        b = b.schedule(s.parse()?);
+    } else if let Some(s) = schedule {
+        b = b.schedule(s);
     }
     let sim = b.build()?;
     let iterations = args.opt_u64("iterations", 1)? as usize;

@@ -1,9 +1,19 @@
 //! Candidate enumeration and pruning for the parallelism-plan search.
+//!
+//! Every feasible TP×PP×DP factorization is crossed with partitioning
+//! strategies, ring policies and pipeline schedules. Pruning is typed
+//! and two-level: whole factorizations fall to structural reasons
+//! (cross-node TP, indivisible layers, batch floor, weights+optimizer
+//! memory), individual `(factorization, schedule)` pairs fall when the
+//! schedule's peak-activation estimate pushes the smallest device over
+//! its memory capacity — the schedule × heterogeneity interaction the
+//! paper's homogeneous baselines cannot express.
 
 use crate::config::cluster::ClusterSpec;
 use crate::config::framework::ParallelismSpec;
 use crate::config::model::ModelSpec;
 use crate::system::collective::RingPolicy;
+use crate::workload::schedule::ScheduleKind;
 
 /// How the model/batch is split across device groups.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -16,6 +26,7 @@ pub enum Partitioning {
 }
 
 impl Partitioning {
+    /// Stable name used in candidate keys.
     pub fn name(self) -> &'static str {
         match self {
             Partitioning::Uniform => "uniform",
@@ -27,9 +38,14 @@ impl Partitioning {
 /// One candidate deployment plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PlanCandidate {
+    /// Parallelism degrees.
     pub par: ParallelismSpec,
+    /// How layers/batch are split across device groups.
     pub partitioning: Partitioning,
+    /// Collective ring-ordering policy.
     pub ring: RingPolicy,
+    /// Pipeline schedule ordering each group's microbatches.
+    pub schedule: ScheduleKind,
 }
 
 impl PlanCandidate {
@@ -37,7 +53,7 @@ impl PlanCandidate {
     /// ranking tie-break.
     pub fn key(&self) -> String {
         format!(
-            "tp{}-pp{}-dp{}-{}-{}",
+            "tp{}-pp{}-dp{}-{}-{}-{}",
             self.par.tp,
             self.par.pp,
             self.par.dp,
@@ -46,28 +62,73 @@ impl PlanCandidate {
                 RingPolicy::HeteroAware => "ring:aware",
                 RingPolicy::Naive => "ring:naive",
             },
+            self.schedule.name(),
         )
     }
 }
 
-/// Why a factorization was excluded from the search (typed so reports
-/// never truncate silently).
+/// Why a factorization (or one of its schedules) was excluded from the
+/// search (typed so reports never truncate silently).
 #[derive(Debug, Clone, thiserror::Error)]
 pub enum PruneReason {
+    /// TP groups may not span node boundaries (NVLink domain).
     #[error("TP degree {tp} exceeds gpus per node {gpn} (cross-node TP)")]
-    CrossNodeTp { tp: u32, gpn: u32 },
+    CrossNodeTp {
+        /// Rejected TP degree.
+        tp: u32,
+        /// GPUs per node of the smallest node.
+        gpn: u32,
+    },
+    /// The uniform mapping needs `layers % pp == 0`.
     #[error("PP degree {pp} does not divide the {layers} model layers")]
-    IndivisibleLayers { pp: u32, layers: u32 },
+    IndivisibleLayers {
+        /// Rejected PP degree.
+        pp: u32,
+        /// Model layer count.
+        layers: u32,
+    },
+    /// Each DP replica needs at least one sample per iteration.
     #[error("DP degree {dp} exceeds the global batch {batch}")]
-    BatchTooSmall { dp: u32, batch: u64 },
+    BatchTooSmall {
+        /// Rejected DP degree.
+        dp: u32,
+        /// Global batch size.
+        batch: u64,
+    },
+    /// Weights + gradients + optimizer state exceed the smallest device.
     #[error("~{need_gb:.1} GB/GPU exceeds the smallest device memory ({have_gb:.1} GB)")]
-    MemoryExceeded { need_gb: f64, have_gb: f64 },
+    MemoryExceeded {
+        /// Estimated bytes per GPU, in GB.
+        need_gb: f64,
+        /// Smallest device capacity, in GB.
+        have_gb: f64,
+    },
+    /// Weights + the schedule's peak activation residency exceed the
+    /// smallest device (schedule-level prune: other schedules of the
+    /// same factorization may survive; the schedule is carried by
+    /// [`PrunedCandidate::schedule`]).
+    #[error(
+        "~{need_gb:.1} GB/GPU incl. schedule activations exceeds the smallest \
+         device memory ({have_gb:.1} GB)"
+    )]
+    ActivationMemoryExceeded {
+        /// Estimated bytes per GPU (weights + activations), in GB.
+        need_gb: f64,
+        /// Smallest device capacity, in GB.
+        have_gb: f64,
+    },
 }
 
-/// A factorization that was excluded, and why.
+/// A factorization (or factorization × schedule) that was excluded, and
+/// why.
 #[derive(Debug, Clone)]
 pub struct PrunedCandidate {
+    /// The excluded parallelism degrees.
     pub par: ParallelismSpec,
+    /// The specific schedule excluded, when the prune is
+    /// schedule-level (`None` = the whole factorization fell).
+    pub schedule: Option<ScheduleKind>,
+    /// Typed exclusion reason.
     pub reason: PruneReason,
 }
 
@@ -78,14 +139,37 @@ pub fn memory_bytes_per_gpu(model: &ModelSpec, tp: u32, pp: u32) -> u64 {
     model.params_per_gpu(tp, pp) * per_param
 }
 
+/// Pipeline schedules worth exploring for a factorization: GPipe
+/// always; 1F1B and interleaved (vpp = 2) once there is a real pipeline
+/// (and, for interleaved, at least 2 layers per stage to chunk).
+pub fn schedules_for(model: &ModelSpec, pp: u32) -> Vec<ScheduleKind> {
+    let mut s = vec![ScheduleKind::GPipe];
+    if pp > 1 {
+        s.push(ScheduleKind::OneFOneB);
+        if model.num_layers / pp >= 2 {
+            s.push(ScheduleKind::Interleaved1F1B { vpp: 2 });
+        }
+    }
+    s
+}
+
 /// Enumerate every valid TP×PP×DP factorization of the cluster's world
-/// size, crossed with partitioning strategies and ring policies.
-/// Returns `(feasible candidates, pruned factorizations)`. On
-/// homogeneous clusters the heterogeneity-aware partitioning reduces to
-/// the uniform mapping and is skipped to avoid duplicate work.
+/// size, crossed with partitioning strategies, ring policies and
+/// pipeline schedules. Returns `(feasible candidates, pruned
+/// factorizations)`. On homogeneous clusters the heterogeneity-aware
+/// partitioning reduces to the uniform mapping and is skipped to avoid
+/// duplicate work; on `pp == 1` factorizations the schedules collapse
+/// to GPipe for the same reason.
+///
+/// `microbatch_limit` mirrors the evaluation's
+/// [`crate::workload::aicb::WorkloadOptions::microbatch_limit`]: the
+/// schedule peak-activation estimate is computed for the microbatch
+/// count that will actually be simulated (`None` = the full batch, the
+/// honest deployment-feasibility check).
 pub fn enumerate(
     model: &ModelSpec,
     cluster: &ClusterSpec,
+    microbatch_limit: Option<u64>,
 ) -> (Vec<PlanCandidate>, Vec<PrunedCandidate>) {
     let world = cluster.total_gpus();
     // smallest node bounds intra-node TP (defensive: validated clusters
@@ -105,35 +189,52 @@ pub fn enumerate(
             }
             let dp = world / tp / pp;
             let par = ParallelismSpec { tp, pp, dp };
+            let weights = memory_bytes_per_gpu(model, tp, pp);
             let reason = if tp > gpn {
                 Some(PruneReason::CrossNodeTp { tp, gpn })
             } else if model.num_layers % pp != 0 {
                 Some(PruneReason::IndivisibleLayers { pp, layers: model.num_layers })
             } else if u64::from(dp) > model.global_batch {
                 Some(PruneReason::BatchTooSmall { dp, batch: model.global_batch })
+            } else if weights > min_mem {
+                Some(PruneReason::MemoryExceeded {
+                    need_gb: weights as f64 / 1e9,
+                    have_gb: min_mem as f64 / 1e9,
+                })
             } else {
-                let need = memory_bytes_per_gpu(model, tp, pp);
-                if need > min_mem {
-                    Some(PruneReason::MemoryExceeded {
-                        need_gb: need as f64 / 1e9,
-                        have_gb: min_mem as f64 / 1e9,
-                    })
-                } else {
-                    None
-                }
+                None
             };
             if let Some(reason) = reason {
-                pruned.push(PrunedCandidate { par, reason });
+                pruned.push(PrunedCandidate { par, schedule: None, reason });
                 continue;
             }
+            // microbatches one device group will actually simulate
+            // (uniform-split approximation for the estimate)
+            let m_full = (model.global_batch / (u64::from(dp) * model.micro_batch)).max(1);
+            let m_eff = microbatch_limit.map_or(m_full, |l| m_full.min(l.max(1)));
             let partitionings: &[Partitioning] = if hetero {
                 &[Partitioning::Uniform, Partitioning::HeteroAware]
             } else {
                 &[Partitioning::Uniform]
             };
-            for &partitioning in partitionings {
-                for ring in [RingPolicy::HeteroAware, RingPolicy::Naive] {
-                    keep.push(PlanCandidate { par, partitioning, ring });
+            for schedule in schedules_for(model, pp) {
+                // schedule-level memory prune: weights + peak activations
+                let need = weights + schedule.peak_activation_bytes(model, tp, pp, m_eff);
+                if need > min_mem {
+                    pruned.push(PrunedCandidate {
+                        par,
+                        schedule: Some(schedule),
+                        reason: PruneReason::ActivationMemoryExceeded {
+                            need_gb: need as f64 / 1e9,
+                            have_gb: min_mem as f64 / 1e9,
+                        },
+                    });
+                    continue;
+                }
+                for &partitioning in partitionings {
+                    for ring in [RingPolicy::HeteroAware, RingPolicy::Naive] {
+                        keep.push(PlanCandidate { par, partitioning, ring, schedule });
+                    }
                 }
             }
         }
@@ -150,7 +251,7 @@ mod tests {
     fn hetero_preset_yields_enough_candidates() {
         let m = presets::model("gpt-6.7b").unwrap();
         let c = presets::cluster_hetero(1, 1).unwrap();
-        let (keep, pruned) = enumerate(&m, &c);
+        let (keep, pruned) = enumerate(&m, &c, Some(2));
         // acceptance floor for `hetsim plan` on this pair
         assert!(keep.len() >= 8, "only {} candidates", keep.len());
         assert!(!pruned.is_empty());
@@ -164,14 +265,56 @@ mod tests {
             cand.par == def
                 && cand.partitioning == Partitioning::Uniform
                 && cand.ring == RingPolicy::HeteroAware
+                && cand.schedule == ScheduleKind::GPipe
         }));
+    }
+
+    #[test]
+    fn all_three_schedule_kinds_enumerated() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let (keep, _) = enumerate(&m, &c, Some(2));
+        assert!(keep.iter().any(|cand| cand.schedule == ScheduleKind::GPipe));
+        assert!(keep.iter().any(|cand| cand.schedule == ScheduleKind::OneFOneB));
+        assert!(keep
+            .iter()
+            .any(|cand| matches!(cand.schedule, ScheduleKind::Interleaved1F1B { .. })));
+        // non-GPipe schedules only appear with a real pipeline
+        assert!(keep
+            .iter()
+            .all(|cand| cand.schedule == ScheduleKind::GPipe || cand.par.pp > 1));
+    }
+
+    #[test]
+    fn full_batch_gpipe_activations_pruned_with_reason() {
+        // without a microbatch cap, GPipe's m-deep activation residency
+        // overruns the 40 GB A100 floor on deep-pipeline candidates; the
+        // prune must be schedule-level (1F1B survives for the same par)
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let (keep, pruned) = enumerate(&m, &c, None);
+        let act_pruned: Vec<_> = pruned
+            .iter()
+            .filter(|p| matches!(p.reason, PruneReason::ActivationMemoryExceeded { .. }))
+            .collect();
+        assert!(!act_pruned.is_empty(), "expected activation-memory prunes");
+        for p in &act_pruned {
+            let sched = p.schedule.expect("activation prune is schedule-level");
+            // some other schedule of the same factorization survives
+            assert!(
+                keep.iter().any(|k| k.par == p.par && k.schedule != sched),
+                "whole factorization tp{}-pp{} lost",
+                p.par.tp,
+                p.par.pp
+            );
+        }
     }
 
     #[test]
     fn cross_node_tp_pruned() {
         let m = presets::model("gpt-6.7b").unwrap();
         let c = presets::cluster_hetero(1, 1).unwrap(); // 16 GPUs, 8/node
-        let (keep, pruned) = enumerate(&m, &c);
+        let (keep, pruned) = enumerate(&m, &c, Some(2));
         assert!(keep.iter().all(|cand| cand.par.tp <= 8));
         assert!(pruned
             .iter()
@@ -182,7 +325,7 @@ mod tests {
     fn memory_floor_prunes_unsharded_large_model() {
         let m = presets::model("gpt-6.7b").unwrap(); // ~6.7B params
         let c = presets::cluster_hetero(1, 1).unwrap(); // A100 40GB floor
-        let (keep, pruned) = enumerate(&m, &c);
+        let (keep, pruned) = enumerate(&m, &c, Some(2));
         // tp*pp == 1 needs ~94 GB/GPU: must be pruned
         assert!(keep.iter().all(|cand| cand.par.tp * cand.par.pp > 1));
         assert!(pruned
@@ -194,7 +337,7 @@ mod tests {
     fn homogeneous_cluster_skips_hetero_partitioning() {
         let m = presets::model("gpt-6.7b").unwrap();
         let c = presets::cluster("hopper", 2).unwrap();
-        let (keep, _) = enumerate(&m, &c);
+        let (keep, _) = enumerate(&m, &c, Some(2));
         assert!(keep.iter().all(|cand| cand.partitioning == Partitioning::Uniform));
     }
 
@@ -202,7 +345,7 @@ mod tests {
     fn candidate_keys_are_unique() {
         let m = presets::model("gpt-6.7b").unwrap();
         let c = presets::cluster_hetero(1, 1).unwrap();
-        let (keep, _) = enumerate(&m, &c);
+        let (keep, _) = enumerate(&m, &c, Some(2));
         let mut keys: Vec<String> = keep.iter().map(PlanCandidate::key).collect();
         let n = keys.len();
         keys.sort();

@@ -7,10 +7,13 @@
 //!
 //! * [`candidates`] — enumerate every valid TP×PP×DP factorization of
 //!   the cluster, crossed with uniform vs heterogeneity-aware
-//!   partitioning and both ring policies, with explicit pruning
-//!   (cross-node TP, indivisible layers, device-memory, batch floor);
-//!   nothing is dropped silently — pruned candidates carry a typed
-//!   [`candidates::PruneReason`].
+//!   partitioning, both ring policies and the pipeline-schedule set
+//!   (GPipe / 1F1B / interleaved,
+//!   [`crate::workload::schedule::ScheduleKind`]), with explicit
+//!   pruning (cross-node TP, indivisible layers, device-memory
+//!   including each schedule's peak-activation residency, batch
+//!   floor); nothing is dropped silently — pruned candidates carry a
+//!   typed [`candidates::PruneReason`].
 //! * [`search`] — evaluate all candidates concurrently (each worker
 //!   builds and runs its own full simulation; the inputs are shared
 //!   immutably across threads) and rank them deterministically by
@@ -20,5 +23,7 @@
 pub mod candidates;
 pub mod search;
 
-pub use candidates::{enumerate, Partitioning, PlanCandidate, PruneReason, PrunedCandidate};
+pub use candidates::{
+    enumerate, schedules_for, Partitioning, PlanCandidate, PruneReason, PrunedCandidate,
+};
 pub use search::{search, EvaluatedPlan, PlanOptions, PlanSearchReport};

@@ -16,6 +16,7 @@ use crate::util::par::parallel_map;
 use crate::util::table::Table;
 use crate::util::units::Time;
 use crate::workload::aicb::WorkloadOptions;
+use crate::workload::schedule::ScheduleKind;
 
 use super::candidates::{enumerate, Partitioning, PlanCandidate, PrunedCandidate};
 
@@ -39,14 +40,18 @@ impl Default for PlanOptions {
 /// One scored candidate.
 #[derive(Debug, Clone)]
 pub struct EvaluatedPlan {
+    /// The candidate that was simulated.
     pub candidate: PlanCandidate,
+    /// Predicted iteration time (the ranking criterion).
     pub iteration_time: Time,
     /// Summed per-rank compute busy time (the compute side of the
     /// compute/comm breakdown).
     pub compute_busy: Time,
     /// Summed collective busy time.
     pub comm_busy: Time,
+    /// Network flows completed in the simulated iteration.
     pub flows_completed: usize,
+    /// Discrete events the simulation processed.
     pub events_processed: u64,
 }
 
@@ -56,6 +61,8 @@ pub struct PlanSearchReport {
     /// Candidates ranked by predicted iteration time (stable key
     /// tie-break) — byte-identical across runs and worker counts.
     pub ranked: Vec<EvaluatedPlan>,
+    /// Factorizations / schedules excluded before evaluation, with
+    /// typed reasons.
     pub pruned: Vec<PrunedCandidate>,
     /// Candidates that failed to build or run, with the error text
     /// (kept visible rather than silently dropped).
@@ -66,6 +73,7 @@ pub struct PlanSearchReport {
 }
 
 impl PlanSearchReport {
+    /// The top-ranked plan.
     pub fn best(&self) -> &EvaluatedPlan {
         &self.ranked[0]
     }
@@ -102,8 +110,9 @@ impl PlanSearchReport {
             self.failed.len(),
         ));
         for p in &self.pruned {
+            let sched = p.schedule.map(|k| format!("-{}", k.name())).unwrap_or_default();
             s.push_str(&format!(
-                "  pruned tp{}-pp{}-dp{}: {}\n",
+                "  pruned tp{}-pp{}-dp{}{sched}: {}\n",
                 p.par.tp, p.par.pp, p.par.dp, p.reason
             ));
         }
@@ -125,6 +134,7 @@ fn evaluate(
         .parallelism(cand.par)
         .ring_policy(cand.ring)
         .hetero_partitioning(cand.partitioning == Partitioning::HeteroAware)
+        .schedule(cand.schedule)
         .record_trace(true)
         .workload_options(WorkloadOptions {
             microbatch_limit: opts.microbatch_limit,
@@ -148,7 +158,7 @@ pub fn search(
     cluster: &ClusterSpec,
     opts: &PlanOptions,
 ) -> anyhow::Result<PlanSearchReport> {
-    let (candidates, pruned) = enumerate(model, cluster);
+    let (candidates, pruned) = enumerate(model, cluster, opts.microbatch_limit);
     anyhow::ensure!(
         !candidates.is_empty(),
         "no feasible TPxPPxDP factorization for {} on {} ({} factorizations pruned)",
@@ -188,6 +198,7 @@ pub fn search(
         par: infer_parallelism(model, cluster)?,
         partitioning: Partitioning::Uniform,
         ring: RingPolicy::HeteroAware,
+        schedule: ScheduleKind::GPipe,
     };
     let baseline = match ranked.iter().find(|ev| ev.candidate == default_cand) {
         Some(ev) => ev.clone(),

@@ -17,6 +17,7 @@ use crate::util::stats::{Samples, Summary};
 use crate::util::units::Time;
 use crate::workload::aicb::{self, WorkloadOptions};
 use crate::workload::op::Workload;
+use crate::workload::schedule::ScheduleKind;
 
 /// How per-layer compute times are evaluated.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,10 +38,14 @@ pub struct SimulationBuilder {
     cost_backend: CostBackend,
     ring_policy: RingPolicy,
     hetero_partitioning: bool,
+    schedule: Option<ScheduleKind>,
     record_trace: bool,
 }
 
 impl SimulationBuilder {
+    /// Start a builder for `model` on `cluster` with the defaults:
+    /// inferred parallelism, uniform mapping, GPipe schedule, native
+    /// cost backend, hetero-aware rings, no trace.
     pub fn new(model: ModelSpec, cluster: ClusterSpec) -> Self {
         SimulationBuilder {
             model,
@@ -51,6 +56,7 @@ impl SimulationBuilder {
             cost_backend: CostBackend::Native,
             ring_policy: RingPolicy::HeteroAware,
             hetero_partitioning: false,
+            schedule: None,
             record_trace: false,
         }
     }
@@ -75,21 +81,35 @@ impl SimulationBuilder {
         self
     }
 
+    /// Pipeline schedule for every device group (`gpipe` when unset).
+    /// Overrides whatever the resolved framework spec carries, so it
+    /// composes with [`SimulationBuilder::framework`] and the
+    /// heterogeneity-aware partitioner.
+    pub fn schedule(mut self, s: ScheduleKind) -> Self {
+        self.schedule = Some(s);
+        self
+    }
+
+    /// Workload-generation knobs (microbatch caps, optional op classes).
     pub fn workload_options(mut self, opts: WorkloadOptions) -> Self {
         self.options = opts;
         self
     }
 
+    /// Select how per-layer compute times are evaluated.
     pub fn cost_backend(mut self, b: CostBackend) -> Self {
         self.cost_backend = b;
         self
     }
 
+    /// Select the collective ring-ordering policy.
     pub fn ring_policy(mut self, p: RingPolicy) -> Self {
         self.ring_policy = p;
         self
     }
 
+    /// Record a per-rank busy-interval trace (needed for the
+    /// compute/comm breakdown in reports).
     pub fn record_trace(mut self, on: bool) -> Self {
         self.record_trace = on;
         self
@@ -102,13 +122,17 @@ impl SimulationBuilder {
             Some(p) => p,
             None => infer_parallelism(&self.model, &self.cluster)?,
         };
-        let fw = match self.framework {
+        let mut fw = match self.framework {
             Some(f) => f,
             None if self.hetero_partitioning => {
                 crate::workload::partition::plan_hetero(&self.model, &self.cluster, par)?
             }
             None => FrameworkSpec::uniform(&self.model, &self.cluster, par)?,
         };
+        if let Some(s) = self.schedule {
+            s.validate()?;
+            fw.schedule = s;
+        }
         let workload = aicb::generate(&self.model, &self.cluster, &fw, &self.options)?;
         let mut cost = match self.cost_backend {
             CostBackend::Native => CostTable::native(),
@@ -166,10 +190,15 @@ pub fn infer_parallelism(
 /// immutably, so one build can back many concurrent runs (see
 /// [`Simulation::run_iterations_concurrent`] and the planner's sweep).
 pub struct Simulation {
+    /// Model description the workload was generated from.
     pub model: ModelSpec,
+    /// Cluster and host-topology description.
     pub cluster: ClusterSpec,
+    /// Resolved device-group mapping, including the pipeline schedule.
     pub framework: FrameworkSpec,
+    /// Generated per-rank programs plus collective definitions.
     pub workload: Workload,
+    /// Evaluated compute-cost table (one entry per distinct op × GPU).
     pub cost: CostTable,
     /// Dense simulation core (durations resolved, collectives planned).
     pub compiled: CompiledWorkload,
@@ -178,6 +207,7 @@ pub struct Simulation {
     /// Fixed at build time (baked into `compiled`); private so it can't
     /// be mutated into silent disagreement with the compiled plan.
     ring_policy: RingPolicy,
+    /// Whether runs record the per-rank busy-interval trace.
     pub record_trace: bool,
 }
 
@@ -215,16 +245,25 @@ impl Simulation {
 /// The run summary consumed by reports and benches.
 #[derive(Debug)]
 pub struct SimulationReport {
+    /// Name of the simulated model.
     pub model_name: String,
+    /// Name of the simulated cluster.
     pub cluster_name: String,
+    /// Simulated wall-clock time of the training iteration.
     pub iteration_time: Time,
+    /// Network flows completed during the iteration.
     pub flows_completed: usize,
+    /// Discrete events the engine processed.
     pub events_processed: u64,
     /// FCT summaries per communication kind (Fig 6's raw material).
     pub fct_summary: HashMap<&'static str, Summary>,
+    /// Raw FCT samples per communication kind.
     pub fct_by_kind: HashMap<&'static str, Samples>,
+    /// All FCT samples pooled across kinds.
     pub fct_all: Samples,
+    /// Summed per-rank compute busy time (trace-derived).
     pub compute_busy: Time,
+    /// Summed collective busy time (trace-derived).
     pub comm_busy: Time,
 }
 
@@ -347,6 +386,52 @@ mod tests {
             assert_eq!(rep.iteration_time, sequential.iteration_time);
             assert_eq!(rep.flows_completed, sequential.flows_completed);
             assert_eq!(rep.events_processed, sequential.events_processed);
+        }
+    }
+
+    #[test]
+    fn schedules_run_to_completion_and_1f1b_shrinks_bubbles() {
+        // pipeline-heavy scenario: tp=1, pp=4, 8 microbatches. GPipe
+        // (seed behavior) runs microbatches strictly sequentially, so
+        // any pipelining schedule must finish no later.
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.num_layers = 4;
+        m.global_batch = 16;
+        m.micro_batch = 2;
+        let run = |s: ScheduleKind| {
+            SimulationBuilder::new(m.clone(), presets::cluster("hopper", 1).unwrap())
+                .parallelism(ParallelismSpec { tp: 1, pp: 4, dp: 2 })
+                .schedule(s)
+                .build()
+                .unwrap()
+                .run_iteration()
+                .unwrap()
+                .iteration_time
+        };
+        let gpipe = run(ScheduleKind::GPipe);
+        let onef = run(ScheduleKind::OneFOneB);
+        let inter = run(ScheduleKind::Interleaved1F1B { vpp: 2 });
+        assert!(gpipe > Time::ZERO && onef > Time::ZERO && inter > Time::ZERO);
+        assert!(onef < gpipe, "1f1b {onef} not faster than gpipe {gpipe}");
+        assert!(inter < gpipe, "interleaved {inter} not faster than gpipe {gpipe}");
+    }
+
+    #[test]
+    fn schedules_deterministic_on_hetero_cluster() {
+        for s in [ScheduleKind::OneFOneB, ScheduleKind::Interleaved1F1B { vpp: 2 }] {
+            let run = || {
+                tiny(presets::cluster_hetero(1, 1).unwrap())
+                    .parallelism(ParallelismSpec { tp: 4, pp: 2, dp: 2 })
+                    .schedule(s)
+                    .build()
+                    .unwrap()
+                    .run_iteration()
+                    .unwrap()
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a.iteration_time, b.iteration_time, "{s}");
+            assert_eq!(a.events_processed, b.events_processed, "{s}");
         }
     }
 

@@ -14,7 +14,12 @@
 //!   every launch);
 //! * p2p message tags remapped to dense indices with **uniqueness
 //!   validation** — a reused tag is rejected here instead of silently
-//!   completing a later `Recv` against a stale delivery.
+//!   completing a later `Recv` against a stale delivery. This is what
+//!   lets interleaved pipeline schedules
+//!   ([`crate::workload::schedule`]) emit one transfer per *virtual*
+//!   stage boundary: every chunk crossing carries its own tag, and a
+//!   generator bug that collided tags across virtual stages would fail
+//!   compilation rather than corrupt the timeline.
 //!
 //! A `CompiledWorkload` is immutable plain data (`Send + Sync`), so one
 //! compiled scenario can back many concurrent scheduler runs.

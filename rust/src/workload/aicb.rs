@@ -1,16 +1,30 @@
 //! AICB-like workload generator (component **C1**).
 //!
 //! Expands (model, cluster, framework spec) into per-rank programs for
-//! one training iteration under a GPipe-style schedule:
+//! one training iteration under the framework's pipeline schedule
+//! ([`crate::workload::schedule`]):
 //!
-//! * forward: per microbatch, per stage — embedding (stage 0),
+//! * the schedule's emission order decides which `(stage, chunk,
+//!   microbatch, direction)` cell each rank works on next (GPipe-style
+//!   by default — bit-identical to the seed generator — or 1F1B /
+//!   interleaved 1F1B);
+//! * forward cell: embedding (first chunk of the embedding stage),
 //!   attention / MLP (or MoE) blocks with Megatron-style TP allreduces
 //!   (2 per layer per direction), MoE dispatch/combine all-to-alls,
-//!   activation sends to the next stage;
-//! * backward: mirrored, with doubled FLOPs and reversed P2P direction;
+//!   activation recv from / send to the adjacent virtual stage;
+//! * backward cell: mirrored, with doubled FLOPs and reversed P2P
+//!   direction;
 //! * gradient synchronization: per-stage DP allreduce — slot-wise rings
 //!   when the communicating groups agree on shapes, or a full
 //!   [`crate::system::resharding`] plan when they do not (component C2).
+//!
+//! Emission is two-pass per device group: a first walk over the
+//! schedule's cells allocates every p2p message tag (unique per
+//! transfer, including per-virtual-stage transfers of interleaved
+//! schedules — [`crate::system::compiled`] rejects reuse), a second
+//! walk appends the ops to each rank's stream. Per-rank op order equals
+//! the rank's execution order under the schedule; the event simulation
+//! derives the actual overlap from the data dependencies.
 //!
 //! The generator emits *device-group-specific* work: each group's layer
 //! count, TP degree and microbatch count come from its own plan entry,
@@ -22,7 +36,7 @@ use std::collections::HashMap;
 use crate::compute::cost::LayerWork;
 use crate::compute::table::CostTable;
 use crate::config::cluster::ClusterSpec;
-use crate::config::framework::FrameworkSpec;
+use crate::config::framework::{split_evenly, FrameworkSpec};
 use crate::config::model::{LayerKind, ModelSpec};
 use crate::system::collective::{CollectiveAlgo, CollectiveDef, CommKind};
 use crate::system::device_group::DeviceGroups;
@@ -94,6 +108,9 @@ pub fn generate(
         is_bwd: bwd,
     };
 
+    let sched = fw.schedule.schedule();
+    let vpp = sched.vpp();
+
     for g in &fw.groups {
         let mbs = g.micro_batch.min(g.batch_share);
         let mut m = g.num_microbatches();
@@ -101,23 +118,69 @@ pub fn generate(
             m = m.min(limit.max(1));
         }
         let act_bytes = mbs * model.seq_len * model.hidden_size * d;
+        let pp = g.pp();
+        let vstages = pp * vpp;
+        let cells = sched.emission_order(pp, m);
+        // layer count per (stage, chunk); earlier chunks take the
+        // remainder when a stage's layers don't divide vpp
+        let chunk_layers: Vec<Vec<u64>> = g
+            .stages
+            .iter()
+            .map(|s| split_evenly(s.num_layers as u64, vpp as u64))
+            .collect();
 
-        for mb in 0..m {
-            // ---------------- forward ----------------
-            for (s, stage) in g.stages.iter().enumerate() {
-                let tp = stage.tp();
-                let ranks = &stage.ranks;
-                // receive activation from the previous stage
-                if s > 0 {
-                    emit_p2p(
-                        &mut ops,
-                        &mut next_msg,
-                        &g.stages[s - 1].ranks,
-                        ranks,
-                        act_bytes,
-                    );
+        // ---- pass 1: allocate every p2p message tag at its receiving
+        // cell, walking the emission order (for GPipe this reproduces
+        // the seed generator's tag sequence exactly). Keyed by the
+        // receiving cell's (microbatch, direction, virtual stage).
+        let mut tags: HashMap<(u64, bool, u32), Vec<u64>> = HashMap::new();
+        for cell in &cells {
+            let v = cell.virtual_stage(pp);
+            let has_incoming = if cell.bwd {
+                v + 1 < vstages // last virtual stage turns around locally
+            } else {
+                v > 0 // first virtual stage has no producer
+            };
+            if !has_incoming {
+                continue;
+            }
+            let to = &g.stages[cell.stage as usize].ranks;
+            // one tag per destination rank: slot-wise transfers have one
+            // slot per destination, leader fan-out one message per
+            // destination — either way `push_recvs` zips over `to`
+            let t: Vec<u64> = (0..to.len())
+                .map(|_| {
+                    let x = next_msg;
+                    next_msg += 1;
+                    x
+                })
+                .collect();
+            tags.insert((cell.mb, cell.bwd, v), t);
+        }
+
+        // ---- pass 2: emit ops, appending each cell's work to its
+        // stage's rank streams in the schedule's execution order
+        for cell in &cells {
+            let stage = &g.stages[cell.stage as usize];
+            let tp = stage.tp();
+            let ranks = &stage.ranks;
+            let v = cell.virtual_stage(pp);
+            let nlayers = chunk_layers[cell.stage as usize][cell.chunk as usize];
+            let is_embed_cell = stage.has_embedding && cell.chunk == 0;
+            let (s, mb) = (cell.stage, cell.mb);
+            // label segment; identical to the seed format when vpp == 1
+            let seg = if vpp > 1 {
+                format!("s{s}c{}mb{mb}", cell.chunk)
+            } else {
+                format!("s{s}mb{mb}")
+            };
+
+            if !cell.bwd {
+                // ---------------- forward cell ----------------
+                if v > 0 {
+                    push_recvs(&mut ops, ranks, &tags[&(mb, false, v)]);
                 }
-                if stage.has_embedding {
+                if is_embed_cell {
                     for r in ranks {
                         ops.get_mut(r).unwrap().push(Op::Compute {
                             work: layer_work(LayerKind::Embedding, mbs, tp, false),
@@ -125,7 +188,7 @@ pub fn generate(
                         });
                     }
                 }
-                for _layer in 0..stage.num_layers {
+                for _layer in 0..nlayers {
                     // attention block
                     for r in ranks {
                         ops.get_mut(r).unwrap().push(Op::Compute {
@@ -142,7 +205,7 @@ pub fn generate(
                             ranks.clone(),
                             act_bytes,
                             CommKind::Tp,
-                            format!("tp-ar-g{}s{s}mb{mb}-attn-f", g.id),
+                            format!("tp-ar-g{}{seg}-attn-f", g.id),
                         );
                     }
                     // MoE dispatch
@@ -155,7 +218,7 @@ pub fn generate(
                             ranks.clone(),
                             act_bytes * model.moe.unwrap().top_k as u64,
                             CommKind::Ep,
-                            format!("ep-a2a-g{}s{s}mb{mb}-disp-f", g.id),
+                            format!("ep-a2a-g{}{seg}-disp-f", g.id),
                         );
                     }
                     for r in ranks {
@@ -174,7 +237,7 @@ pub fn generate(
                             ranks.clone(),
                             act_bytes * model.moe.unwrap().top_k as u64,
                             CommKind::Ep,
-                            format!("ep-a2a-g{}s{s}mb{mb}-comb-f", g.id),
+                            format!("ep-a2a-g{}{seg}-comb-f", g.id),
                         );
                     }
                     if tp > 1 {
@@ -186,7 +249,7 @@ pub fn generate(
                             ranks.clone(),
                             act_bytes,
                             CommKind::Tp,
-                            format!("tp-ar-g{}s{s}mb{mb}-mlp-f", g.id),
+                            format!("tp-ar-g{}{seg}-mlp-f", g.id),
                         );
                     }
                     if opts.include_other {
@@ -198,22 +261,17 @@ pub fn generate(
                         }
                     }
                 }
-            }
-            // ---------------- backward (stages reversed) ----------------
-            for (s, stage) in g.stages.iter().enumerate().rev() {
-                let tp = stage.tp();
-                let ranks = &stage.ranks;
-                if s + 1 < g.stages.len() {
-                    // receive grad-activation from the next stage
-                    emit_p2p(
-                        &mut ops,
-                        &mut next_msg,
-                        &g.stages[s + 1].ranks,
-                        ranks,
-                        act_bytes,
-                    );
+                // pass the activation to the next virtual stage
+                if v + 1 < vstages {
+                    let to = &g.stages[((v + 1) % pp) as usize].ranks;
+                    push_sends(&mut ops, ranks, to, act_bytes, &tags[&(mb, false, v + 1)]);
                 }
-                for _layer in 0..stage.num_layers {
+            } else {
+                // ---------------- backward cell ----------------
+                if v + 1 < vstages {
+                    push_recvs(&mut ops, ranks, &tags[&(mb, true, v)]);
+                }
+                for _layer in 0..nlayers {
                     for r in ranks {
                         ops.get_mut(r).unwrap().push(Op::Compute {
                             work: layer_work(mlp_kind, mbs, tp, true),
@@ -229,7 +287,7 @@ pub fn generate(
                             ranks.clone(),
                             act_bytes,
                             CommKind::Tp,
-                            format!("tp-ar-g{}s{s}mb{mb}-mlp-b", g.id),
+                            format!("tp-ar-g{}{seg}-mlp-b", g.id),
                         );
                     }
                     for r in ranks {
@@ -247,17 +305,22 @@ pub fn generate(
                             ranks.clone(),
                             act_bytes,
                             CommKind::Tp,
-                            format!("tp-ar-g{}s{s}mb{mb}-attn-b", g.id),
+                            format!("tp-ar-g{}{seg}-attn-b", g.id),
                         );
                     }
                 }
-                if stage.has_embedding {
+                if is_embed_cell {
                     for r in ranks {
                         ops.get_mut(r).unwrap().push(Op::Compute {
                             work: layer_work(LayerKind::Embedding, mbs, tp, true),
                             label: "embedding-bwd",
                         });
                     }
+                }
+                // pass the grad-activation to the previous virtual stage
+                if v > 0 {
+                    let to = &g.stages[((v - 1) % pp) as usize].ranks;
+                    push_sends(&mut ops, ranks, to, act_bytes, &tags[&(mb, true, v - 1)]);
                 }
             }
         }
@@ -336,30 +399,37 @@ pub fn stage_grad_bytes(model: &ModelSpec, num_layers: u32, has_embedding: bool)
     (num_layers as u64 * per_layer + embed) * model.grad_dtype_bytes
 }
 
-/// P2P between stages: slot-wise (bytes/tp each) when TP degrees match,
-/// leader fan-out of the full activation otherwise.
-fn emit_p2p(
+/// Blocking receives on the destination ranks of a stage-boundary
+/// transfer, one per pre-allocated tag (slot-wise and leader fan-out
+/// both receive one message per destination rank).
+fn push_recvs(ops: &mut HashMap<u32, Vec<Op>>, to: &[u32], tags: &[u64]) {
+    for (r, msg) in to.iter().zip(tags) {
+        ops.get_mut(r).unwrap().push(Op::Recv { msg: *msg });
+    }
+}
+
+/// Asynchronous sends for a stage-boundary transfer: slot-wise
+/// (`bytes / slots` each) when the TP degrees match, leader fan-out of
+/// the full activation otherwise. `tags` were allocated at the
+/// receiving cell in schedule-emission order.
+fn push_sends(
     ops: &mut HashMap<u32, Vec<Op>>,
-    next_msg: &mut u64,
     from: &[u32],
     to: &[u32],
     act_bytes: u64,
+    tags: &[u64],
 ) {
     if from.len() == to.len() {
         let per = (act_bytes / from.len() as u64).max(1);
-        for (s, r) in from.iter().zip(to.iter()) {
-            let msg = *next_msg;
-            *next_msg += 1;
-            ops.get_mut(s).unwrap().push(Op::Send { peer: *r, bytes: per, msg });
-            ops.get_mut(r).unwrap().push(Op::Recv { msg });
+        for ((s, r), msg) in from.iter().zip(to.iter()).zip(tags) {
+            ops.get_mut(s).unwrap().push(Op::Send { peer: *r, bytes: per, msg: *msg });
         }
     } else {
         let leader = from[0];
-        for r in to {
-            let msg = *next_msg;
-            *next_msg += 1;
-            ops.get_mut(&leader).unwrap().push(Op::Send { peer: *r, bytes: act_bytes, msg });
-            ops.get_mut(r).unwrap().push(Op::Recv { msg });
+        for (r, msg) in to.iter().zip(tags) {
+            ops.get_mut(&leader)
+                .unwrap()
+                .push(Op::Send { peer: *r, bytes: act_bytes, msg: *msg });
         }
     }
 }
@@ -407,6 +477,7 @@ mod tests {
     use super::*;
     use crate::config::framework::{FrameworkSpec, ParallelismSpec};
     use crate::config::presets;
+    use crate::workload::schedule::ScheduleKind;
 
     fn tiny_model() -> ModelSpec {
         let mut m = presets::model("gpt-6.7b").unwrap();
@@ -515,6 +586,51 @@ mod tests {
             .count();
         // paper Table 1: ~350 per iteration
         assert!((300..=400).contains(&freq), "TP freq {freq}");
+    }
+
+    #[test]
+    fn one_f_one_b_reorders_but_preserves_op_multiset() {
+        // 1F1B reorders each rank's cells; the work itself (computes,
+        // collectives, stage-boundary transfers) is unchanged.
+        let m = tiny_model();
+        let c = presets::cluster("hopper", 1).unwrap();
+        let f = FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 2, pp: 2, dp: 2 }).unwrap();
+        let gpipe = generate(&m, &c, &f, &WorkloadOptions::default()).unwrap();
+        let onef = generate(
+            &m,
+            &c,
+            &f.clone().with_schedule(ScheduleKind::OneFOneB),
+            &WorkloadOptions::default(),
+        )
+        .unwrap();
+        // generate() runs Workload::validate, so pairing/participation
+        // invariants already held; the multiset must match GPipe's
+        assert_eq!(gpipe.op_counts(), onef.op_counts());
+        assert_eq!(gpipe.collectives.len(), onef.collectives.len());
+        assert_eq!(gpipe.programs.len(), onef.programs.len());
+    }
+
+    #[test]
+    fn interleaved_adds_virtual_stage_p2p() {
+        // vpp=2 doubles the virtual pipeline depth: pp*vpp-1 = 3
+        // boundaries per microbatch per direction instead of pp-1 = 1.
+        let m = tiny_model();
+        let c = presets::cluster("hopper", 1).unwrap();
+        let f = FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 2, pp: 2, dp: 2 }).unwrap();
+        let gpipe = generate(&m, &c, &f, &WorkloadOptions::default()).unwrap();
+        let inter = generate(
+            &m,
+            &c,
+            &f.clone().with_schedule(ScheduleKind::Interleaved1F1B { vpp: 2 }),
+            &WorkloadOptions::default(),
+        )
+        .unwrap();
+        let (compute_g, coll_g, p2p_g) = gpipe.op_counts();
+        let (compute_i, coll_i, p2p_i) = inter.op_counts();
+        // same compute and collectives, 3x the stage-boundary traffic
+        assert_eq!(compute_g, compute_i);
+        assert_eq!(coll_g, coll_i);
+        assert_eq!(p2p_i, 3 * p2p_g);
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //!   framework spec into per-rank programs with device-group-specific
 //!   work ("generate distinct workload traces tailored to the device
 //!   group's role in the parallelism strategy").
+//! * [`schedule`] — the pipeline-schedule subsystem: GPipe (seed
+//!   behavior), 1F1B and interleaved 1F1B orderings behind the
+//!   [`schedule::PipelineSchedule`] trait, with peak-activation
+//!   estimates for the planner's memory pruning.
 //! * [`partition`] — non-uniform workload partitioning: layers ∝ stage
 //!   compute power, batch shares ∝ group power, variable TP degrees
 //!   (paper Fig 3).
@@ -17,7 +21,9 @@ pub mod aicb;
 pub mod op;
 pub mod parser;
 pub mod partition;
+pub mod schedule;
 
 pub use aicb::{generate, WorkloadOptions};
 pub use op::{Op, RankProgram, Workload};
 pub use partition::plan_hetero;
+pub use schedule::{PipelineSchedule, ScheduleKind};

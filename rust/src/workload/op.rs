@@ -21,7 +21,9 @@ pub enum Op {
 /// A rank's full program for one iteration.
 #[derive(Debug, Clone, Default)]
 pub struct RankProgram {
+    /// Global rank executing this program.
     pub rank: u32,
+    /// Ops in execution order.
     pub ops: Vec<Op>,
 }
 
@@ -29,11 +31,14 @@ pub struct RankProgram {
 /// definitions they reference.
 #[derive(Debug, Clone, Default)]
 pub struct Workload {
+    /// Per-rank programs, sorted by rank.
     pub programs: Vec<RankProgram>,
+    /// Collective definitions referenced by `Op::Collective` ops.
     pub collectives: Vec<CollectiveDef>,
 }
 
 impl Workload {
+    /// Look up a collective definition by id.
     pub fn collective(&self, id: u64) -> Option<&CollectiveDef> {
         self.collectives.iter().find(|c| c.id == id)
     }

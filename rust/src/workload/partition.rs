@@ -90,7 +90,7 @@ pub fn plan_hetero(
     for (g, share) in groups.iter_mut().zip(shares) {
         g.batch_share = share;
     }
-    let spec = FrameworkSpec { groups, base: par };
+    let spec = FrameworkSpec { groups, base: par, schedule: uniform.schedule };
     spec.validate(model, cluster)?;
     Ok(spec)
 }
@@ -113,6 +113,7 @@ pub fn fig3_cluster() -> anyhow::Result<ClusterSpec> {
     })
 }
 
+/// The Fig-3 model: Llama-2 70B with the figure's batch configuration.
 pub fn fig3_model() -> anyhow::Result<ModelSpec> {
     use crate::config::presets;
     let mut m = presets::model("llama2-70b")?;
@@ -152,6 +153,7 @@ pub fn fig3_plan(model: &ModelSpec, cluster: &ClusterSpec) -> anyhow::Result<Fra
             },
         ],
         base: ParallelismSpec { tp: 4, pp: 1, dp: 2 },
+        schedule: crate::workload::schedule::ScheduleKind::GPipe,
     };
     spec.validate(model, cluster)?;
     Ok(spec)

@@ -4,7 +4,8 @@
 //! part of its own candidate set.
 
 use hetsim::config::presets;
-use hetsim::planner::{search, PlanOptions};
+use hetsim::planner::{enumerate, search, PlanOptions};
+use hetsim::workload::schedule::ScheduleKind;
 
 fn tiny_model() -> hetsim::config::model::ModelSpec {
     let mut m = presets::model("gpt-6.7b").unwrap();
@@ -33,6 +34,49 @@ fn ranking_identical_across_thread_counts() {
     let one = ranking_fingerprint(1);
     for threads in [2, 4] {
         assert_eq!(one, ranking_fingerprint(threads), "threads={threads}");
+    }
+}
+
+#[test]
+fn plan_crosses_all_schedule_kinds_on_hetero_preset() {
+    // acceptance: `hetsim plan --model gpt-6.7b --cluster hetero:1,1`
+    // (default --mb-limit 2) must enumerate GPipe, 1F1B and interleaved
+    // candidates
+    let m = presets::model("gpt-6.7b").unwrap();
+    let c = presets::cluster_hetero(1, 1).unwrap();
+    let (keep, _) = enumerate(&m, &c, Some(2));
+    for want in [
+        ScheduleKind::GPipe,
+        ScheduleKind::OneFOneB,
+        ScheduleKind::Interleaved1F1B { vpp: 2 },
+    ] {
+        assert!(
+            keep.iter().any(|cand| cand.schedule == want),
+            "no {want} candidate among {}",
+            keep.len()
+        );
+    }
+}
+
+#[test]
+fn ranked_output_contains_every_schedule_kind() {
+    // the tiny search model exposes pp in {1, 2, 4}: pp=2 carries all
+    // three schedules, and every evaluated schedule must rank (none may
+    // silently land in `failed`)
+    let m = tiny_model();
+    let c = presets::cluster_hetero(1, 1).unwrap();
+    let opts = PlanOptions { microbatch_limit: Some(1), threads: 2 };
+    let rep = search(&m, &c, &opts).unwrap();
+    assert!(rep.failed.is_empty(), "{:?}", rep.failed);
+    for want in [
+        ScheduleKind::GPipe,
+        ScheduleKind::OneFOneB,
+        ScheduleKind::Interleaved1F1B { vpp: 2 },
+    ] {
+        assert!(
+            rep.ranked.iter().any(|ev| ev.candidate.schedule == want),
+            "no ranked {want} plan"
+        );
     }
 }
 

@@ -1,0 +1,462 @@
+//! Schedule-subsystem integration: the refactored, schedule-driven
+//! workload generator with `--schedule gpipe` must reproduce the
+//! pre-refactor (seed) generator **bit-for-bit** — identical serialized
+//! workloads (op streams, collective ids, labels, p2p tags) and
+//! identical simulated timelines — and the non-GPipe schedules must
+//! produce valid, deterministic, faster-or-equal pipelines.
+//!
+//! `seed_generate` below is the seed generator inlined verbatim (same
+//! pattern as the seed scheduler kept in `benches/perf_engine.rs`), so
+//! the equivalence is checked against the real historical behavior, not
+//! against a re-derivation.
+
+use hetsim::compute::table::CostTable;
+use hetsim::config::framework::{FrameworkSpec, ParallelismSpec};
+use hetsim::config::model::ModelSpec;
+use hetsim::config::presets;
+use hetsim::system::scheduler::Scheduler;
+use hetsim::workload::aicb::{self, WorkloadOptions};
+use hetsim::workload::parser;
+use hetsim::workload::schedule::ScheduleKind;
+use hetsim::workload::Workload;
+
+/// The seed (pre-refactor) AICB generator, inlined verbatim from the
+/// PR-1 tree: per microbatch, forward over all stages then backward
+/// over all stages, with tags and collective ids allocated in walk
+/// order.
+mod seed_gen {
+    use std::collections::HashMap;
+
+    use hetsim::compute::cost::LayerWork;
+    use hetsim::config::cluster::ClusterSpec;
+    use hetsim::config::framework::FrameworkSpec;
+    use hetsim::config::model::{LayerKind, ModelSpec};
+    use hetsim::system::collective::{CollectiveAlgo, CollectiveDef, CommKind};
+    use hetsim::system::device_group::DeviceGroups;
+    use hetsim::system::resharding;
+    use hetsim::workload::aicb::{stage_grad_bytes, WorkloadOptions};
+    use hetsim::workload::op::{Op, RankProgram, Workload};
+
+    pub fn seed_generate(
+        model: &ModelSpec,
+        cluster: &ClusterSpec,
+        fw: &FrameworkSpec,
+        opts: &WorkloadOptions,
+    ) -> anyhow::Result<Workload> {
+        fw.validate(model, cluster)?;
+        let groups = DeviceGroups::derive(fw);
+        let mut ops: HashMap<u32, Vec<Op>> = HashMap::new();
+        for g in &fw.groups {
+            for r in g.ranks() {
+                ops.insert(r, Vec::new());
+            }
+        }
+        let mut colls: Vec<CollectiveDef> = Vec::new();
+        let mut next_coll: u64 = 0;
+        let mut next_msg: u64 = 0;
+
+        let d = model.dtype_bytes;
+        let mlp_kind = if model.moe.is_some() { LayerKind::Moe } else { LayerKind::Mlp };
+        let (n_experts, top_k) = match model.moe {
+            Some(m) => (m.num_experts as f64, m.top_k as f64),
+            None => (0.0, 0.0),
+        };
+
+        let layer_work = |kind: LayerKind, mbs: u64, tp: u32, bwd: bool| LayerWork {
+            kind,
+            hidden: model.hidden_size as f64,
+            ffn: model.ffn_hidden as f64,
+            heads: model.num_heads as f64,
+            seq: model.seq_len as f64,
+            mbs: mbs as f64,
+            n_experts,
+            top_k,
+            tp: tp as f64,
+            is_bwd: bwd,
+        };
+
+        for g in &fw.groups {
+            let mbs = g.micro_batch.min(g.batch_share);
+            let mut m = g.num_microbatches();
+            if let Some(limit) = opts.microbatch_limit {
+                m = m.min(limit.max(1));
+            }
+            let act_bytes = mbs * model.seq_len * model.hidden_size * d;
+
+            for mb in 0..m {
+                // ---------------- forward ----------------
+                for (s, stage) in g.stages.iter().enumerate() {
+                    let tp = stage.tp();
+                    let ranks = &stage.ranks;
+                    if s > 0 {
+                        emit_p2p(
+                            &mut ops,
+                            &mut next_msg,
+                            &g.stages[s - 1].ranks,
+                            ranks,
+                            act_bytes,
+                        );
+                    }
+                    if stage.has_embedding {
+                        for r in ranks {
+                            ops.get_mut(r).unwrap().push(Op::Compute {
+                                work: layer_work(LayerKind::Embedding, mbs, tp, false),
+                                label: "embedding-fwd",
+                            });
+                        }
+                    }
+                    for _layer in 0..stage.num_layers {
+                        for r in ranks {
+                            ops.get_mut(r).unwrap().push(Op::Compute {
+                                work: layer_work(LayerKind::Attention, mbs, tp, false),
+                                label: "attention-fwd",
+                            });
+                        }
+                        if tp > 1 {
+                            emit_collective(
+                                &mut ops,
+                                &mut colls,
+                                &mut next_coll,
+                                CollectiveAlgo::AllReduceRing,
+                                ranks.clone(),
+                                act_bytes,
+                                CommKind::Tp,
+                                format!("tp-ar-g{}s{s}mb{mb}-attn-f", g.id),
+                            );
+                        }
+                        if mlp_kind == LayerKind::Moe && opts.moe_alltoall && tp > 1 {
+                            emit_collective(
+                                &mut ops,
+                                &mut colls,
+                                &mut next_coll,
+                                CollectiveAlgo::AllToAll,
+                                ranks.clone(),
+                                act_bytes * model.moe.unwrap().top_k as u64,
+                                CommKind::Ep,
+                                format!("ep-a2a-g{}s{s}mb{mb}-disp-f", g.id),
+                            );
+                        }
+                        for r in ranks {
+                            ops.get_mut(r).unwrap().push(Op::Compute {
+                                work: layer_work(mlp_kind, mbs, tp, false),
+                                label: if mlp_kind == LayerKind::Moe {
+                                    "moe-fwd"
+                                } else {
+                                    "mlp-fwd"
+                                },
+                            });
+                        }
+                        if mlp_kind == LayerKind::Moe && opts.moe_alltoall && tp > 1 {
+                            emit_collective(
+                                &mut ops,
+                                &mut colls,
+                                &mut next_coll,
+                                CollectiveAlgo::AllToAll,
+                                ranks.clone(),
+                                act_bytes * model.moe.unwrap().top_k as u64,
+                                CommKind::Ep,
+                                format!("ep-a2a-g{}s{s}mb{mb}-comb-f", g.id),
+                            );
+                        }
+                        if tp > 1 {
+                            emit_collective(
+                                &mut ops,
+                                &mut colls,
+                                &mut next_coll,
+                                CollectiveAlgo::AllReduceRing,
+                                ranks.clone(),
+                                act_bytes,
+                                CommKind::Tp,
+                                format!("tp-ar-g{}s{s}mb{mb}-mlp-f", g.id),
+                            );
+                        }
+                        if opts.include_other {
+                            for r in ranks {
+                                ops.get_mut(r).unwrap().push(Op::Compute {
+                                    work: layer_work(LayerKind::Other, mbs, tp, false),
+                                    label: "other-fwd",
+                                });
+                            }
+                        }
+                    }
+                }
+                // ---------------- backward (stages reversed) ----------------
+                for (s, stage) in g.stages.iter().enumerate().rev() {
+                    let tp = stage.tp();
+                    let ranks = &stage.ranks;
+                    if s + 1 < g.stages.len() {
+                        emit_p2p(
+                            &mut ops,
+                            &mut next_msg,
+                            &g.stages[s + 1].ranks,
+                            ranks,
+                            act_bytes,
+                        );
+                    }
+                    for _layer in 0..stage.num_layers {
+                        for r in ranks {
+                            ops.get_mut(r).unwrap().push(Op::Compute {
+                                work: layer_work(mlp_kind, mbs, tp, true),
+                                label: if mlp_kind == LayerKind::Moe {
+                                    "moe-bwd"
+                                } else {
+                                    "mlp-bwd"
+                                },
+                            });
+                        }
+                        if tp > 1 {
+                            emit_collective(
+                                &mut ops,
+                                &mut colls,
+                                &mut next_coll,
+                                CollectiveAlgo::AllReduceRing,
+                                ranks.clone(),
+                                act_bytes,
+                                CommKind::Tp,
+                                format!("tp-ar-g{}s{s}mb{mb}-mlp-b", g.id),
+                            );
+                        }
+                        for r in ranks {
+                            ops.get_mut(r).unwrap().push(Op::Compute {
+                                work: layer_work(LayerKind::Attention, mbs, tp, true),
+                                label: "attention-bwd",
+                            });
+                        }
+                        if tp > 1 {
+                            emit_collective(
+                                &mut ops,
+                                &mut colls,
+                                &mut next_coll,
+                                CollectiveAlgo::AllReduceRing,
+                                ranks.clone(),
+                                act_bytes,
+                                CommKind::Tp,
+                                format!("tp-ar-g{}s{s}mb{mb}-attn-b", g.id),
+                            );
+                        }
+                    }
+                    if stage.has_embedding {
+                        for r in ranks {
+                            ops.get_mut(r).unwrap().push(Op::Compute {
+                                work: layer_work(LayerKind::Embedding, mbs, tp, true),
+                                label: "embedding-bwd",
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        if opts.dp_sync {
+            for sync in &groups.dp_sync {
+                let stage_idx = sync.stage as usize;
+                let sample = &fw
+                    .groups
+                    .iter()
+                    .find(|g| g.stages.len() > stage_idx)
+                    .unwrap()
+                    .stages[stage_idx];
+                let full_bytes = stage_grad_bytes(model, sample.num_layers, sample.has_embedding);
+                if resharding::group_needs_resharding(&sync.participants) {
+                    let plan = resharding::plan(
+                        &sync.participants,
+                        full_bytes,
+                        sync.stage,
+                        &mut next_coll,
+                    );
+                    for def in plan.all_defs() {
+                        colls.push(def.clone());
+                        for r in &def.ranks {
+                            ops.get_mut(r).unwrap().push(Op::Collective { def_id: def.id });
+                        }
+                    }
+                } else {
+                    let tp = sync.participants[0].tp;
+                    for slot in 0..tp as usize {
+                        let ranks: Vec<u32> =
+                            sync.participants.iter().map(|p| p.ranks[slot]).collect();
+                        for (algo, tag) in [
+                            (CollectiveAlgo::ReduceScatter, "rs"),
+                            (CollectiveAlgo::AllGather, "ag"),
+                        ] {
+                            let id = next_coll;
+                            next_coll += 1;
+                            let def = CollectiveDef {
+                                id,
+                                algo,
+                                ranks: ranks.clone(),
+                                bytes_per_rank: full_bytes / tp as u64,
+                                kind: CommKind::Dp,
+                                label: format!("dp-{tag}-s{}slot{slot}", sync.stage),
+                            };
+                            colls.push(def);
+                            for r in &ranks {
+                                ops.get_mut(r).unwrap().push(Op::Collective { def_id: id });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut programs: Vec<RankProgram> = ops
+            .into_iter()
+            .map(|(rank, ops)| RankProgram { rank, ops })
+            .collect();
+        programs.sort_by_key(|p| p.rank);
+        let w = Workload { programs, collectives: colls };
+        w.validate()?;
+        Ok(w)
+    }
+
+    fn emit_p2p(
+        ops: &mut HashMap<u32, Vec<Op>>,
+        next_msg: &mut u64,
+        from: &[u32],
+        to: &[u32],
+        act_bytes: u64,
+    ) {
+        if from.len() == to.len() {
+            let per = (act_bytes / from.len() as u64).max(1);
+            for (s, r) in from.iter().zip(to.iter()) {
+                let msg = *next_msg;
+                *next_msg += 1;
+                ops.get_mut(s).unwrap().push(Op::Send { peer: *r, bytes: per, msg });
+                ops.get_mut(r).unwrap().push(Op::Recv { msg });
+            }
+        } else {
+            let leader = from[0];
+            for r in to {
+                let msg = *next_msg;
+                *next_msg += 1;
+                ops.get_mut(&leader)
+                    .unwrap()
+                    .push(Op::Send { peer: *r, bytes: act_bytes, msg });
+                ops.get_mut(r).unwrap().push(Op::Recv { msg });
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn emit_collective(
+        ops: &mut HashMap<u32, Vec<Op>>,
+        colls: &mut Vec<CollectiveDef>,
+        next_coll: &mut u64,
+        algo: CollectiveAlgo,
+        ranks: Vec<u32>,
+        bytes_per_rank: u64,
+        kind: CommKind,
+        label: String,
+    ) {
+        let id = *next_coll;
+        *next_coll += 1;
+        for r in &ranks {
+            ops.get_mut(r).unwrap().push(Op::Collective { def_id: id });
+        }
+        colls.push(CollectiveDef { id, algo, ranks, bytes_per_rank, kind, label });
+    }
+}
+
+fn tiny_model() -> ModelSpec {
+    let mut m = presets::model("gpt-6.7b").unwrap();
+    m.num_layers = 4;
+    m.global_batch = 16;
+    m.micro_batch = 4;
+    m
+}
+
+/// Run a workload through the (lazily compiling) scheduler and return
+/// the report.
+fn simulate(
+    w: &Workload,
+    cluster: &hetsim::config::cluster::ClusterSpec,
+) -> hetsim::system::scheduler::SchedulerReport {
+    let mut cost = CostTable::native();
+    aicb::register_costs(w, cluster, &mut cost).unwrap();
+    Scheduler::new(w, cluster, &cost).unwrap().run().unwrap()
+}
+
+/// New generator under `--schedule gpipe` vs the inlined seed
+/// generator: serialized traces must be byte-identical and the
+/// simulated timelines bit-for-bit equal.
+fn assert_gpipe_matches_seed(
+    model: &ModelSpec,
+    cluster: &hetsim::config::cluster::ClusterSpec,
+    fw: &FrameworkSpec,
+    opts: &WorkloadOptions,
+) {
+    assert_eq!(fw.schedule, ScheduleKind::GPipe, "test wants the default schedule");
+    let seed = seed_gen::seed_generate(model, cluster, fw, opts).unwrap();
+    let new = aicb::generate(model, cluster, fw, opts).unwrap();
+    assert_eq!(
+        parser::write(&seed),
+        parser::write(&new),
+        "serialized workloads differ"
+    );
+    let seed_rep = simulate(&seed, cluster);
+    let new_rep = simulate(&new, cluster);
+    assert_eq!(seed_rep.iteration_time, new_rep.iteration_time);
+    assert_eq!(seed_rep.flows_completed, new_rep.flows_completed);
+    assert_eq!(seed_rep.events_processed, new_rep.events_processed);
+}
+
+#[test]
+fn gpipe_bit_identical_homogeneous_pipeline() {
+    let m = tiny_model();
+    let c = presets::cluster("hopper", 1).unwrap();
+    let fw = FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 2, pp: 2, dp: 2 }).unwrap();
+    assert_gpipe_matches_seed(&m, &c, &fw, &WorkloadOptions::default());
+}
+
+#[test]
+fn gpipe_bit_identical_hetero_nonuniform_partition() {
+    let m = tiny_model();
+    let c = presets::cluster_hetero(1, 1).unwrap();
+    let fw =
+        hetsim::workload::plan_hetero(&m, &c, ParallelismSpec { tp: 4, pp: 2, dp: 2 }).unwrap();
+    assert_gpipe_matches_seed(&m, &c, &fw, &WorkloadOptions::default());
+}
+
+#[test]
+fn gpipe_bit_identical_moe_alltoall() {
+    let mut m = presets::model("mixtral-8x7b").unwrap();
+    m.num_layers = 2;
+    m.global_batch = 8;
+    m.micro_batch = 4;
+    let c = presets::cluster("hopper", 1).unwrap();
+    let fw = FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 2, pp: 1, dp: 4 }).unwrap();
+    assert_gpipe_matches_seed(&m, &c, &fw, &WorkloadOptions::default());
+}
+
+#[test]
+fn gpipe_bit_identical_fig3_resharding_plan() {
+    // variable TP degrees (3 vs 1 vs 4), leader fan-out p2p, resharded
+    // DP sync — the hardest emission path
+    let m = hetsim::workload::partition::fig3_model().unwrap();
+    let c = hetsim::workload::partition::fig3_cluster().unwrap();
+    let fw = hetsim::workload::partition::fig3_plan(&m, &c).unwrap();
+    // cap microbatches for CI speed; bit-identity holds under any options
+    let opts = WorkloadOptions { microbatch_limit: Some(2), ..Default::default() };
+    assert_gpipe_matches_seed(&m, &c, &fw, &opts);
+}
+
+#[test]
+fn non_gpipe_schedules_validate_and_run_on_hetero() {
+    // both pipelining schedules must produce valid workloads (generate
+    // runs Workload::validate) that simulate to completion without
+    // deadlock on a heterogeneous pipeline with non-uniform layers
+    let m = tiny_model();
+    let c = presets::cluster_hetero(1, 1).unwrap();
+    for kind in [ScheduleKind::OneFOneB, ScheduleKind::Interleaved1F1B { vpp: 2 }] {
+        let fw = hetsim::workload::plan_hetero(&m, &c, ParallelismSpec { tp: 4, pp: 2, dp: 2 })
+            .unwrap()
+            .with_schedule(kind);
+        let w = aicb::generate(&m, &c, &fw, &WorkloadOptions::default()).unwrap();
+        let rep = simulate(&w, &c);
+        assert!(rep.iteration_time > hetsim::util::units::Time::ZERO, "{kind}");
+        // run twice: deterministic
+        let rep2 = simulate(&w, &c);
+        assert_eq!(rep.iteration_time, rep2.iteration_time, "{kind}");
+        assert_eq!(rep.events_processed, rep2.events_processed, "{kind}");
+    }
+}
