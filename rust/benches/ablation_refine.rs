@@ -1,0 +1,115 @@
+//! Refinement ablation (DESIGN.md §22): what each planning stage buys
+//! on heterogeneous clusters —
+//!
+//! * **uniform** — the homogeneous-assumption default plan
+//!   (equal layers, equal batch shares);
+//! * **hetero-heuristic** — the closed-form proportional partitioner
+//!   (`plan_hetero`, component C1);
+//! * **searched** — the best plan from the full candidate sweep
+//!   (grid factorizations + variable per-group TP layouts);
+//! * **refined** — the searched winner polished by simulator-in-the-
+//!   loop coordinate descent (`hetsim plan --refine`).
+//!
+//! Run on the paper's Fig-3 cluster (1×4×H100 + 1×4×A100, Llama-2 70B,
+//! full batch — batch-share moves are invisible under a microbatch cap)
+//! and the `hetero:1,1` cluster (8×A100 + 8×H100, GPT-6.7B, capped at 2
+//! microbatches: layer-split refinement only). The Fig-3 rows also
+//! print the hand-written `fig3_plan` reference the refiner must match
+//! or beat.
+//!
+//!     cargo bench --bench ablation_refine
+
+use hetsim::config::cluster::ClusterSpec;
+use hetsim::config::model::ModelSpec;
+use hetsim::config::presets;
+use hetsim::planner::{search, PlanOptions};
+use hetsim::simulator::SimulationBuilder;
+use hetsim::util::table::Table;
+use hetsim::util::units::Time;
+use hetsim::workload::aicb::WorkloadOptions;
+use hetsim::workload::partition::{fig3_cluster, fig3_model, fig3_plan};
+
+fn simulate_spec(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    fw: hetsim::config::framework::FrameworkSpec,
+    mb_limit: Option<u64>,
+) -> anyhow::Result<Time> {
+    let sim = SimulationBuilder::new(model.clone(), cluster.clone())
+        .parallelism(fw.base)
+        .framework(fw)
+        .workload_options(WorkloadOptions { microbatch_limit: mb_limit, ..Default::default() })
+        .build()?;
+    Ok(sim.run_iteration()?.iteration_time)
+}
+
+fn ablate(
+    t: &mut Table,
+    label: &str,
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    mb_limit: Option<u64>,
+    reference: Option<Time>,
+) -> anyhow::Result<()> {
+    let opts = PlanOptions { microbatch_limit: mb_limit, threads: 0, refine_steps: 64 };
+    let report = search(model, cluster, &opts)?;
+    let refined = report.refined.as_ref().expect("refine_steps > 0");
+    let base = report.baseline.iteration_time.as_secs();
+    let mut row = |stage: &str, time: Time, plan: String| {
+        t.row(vec![
+            label.into(),
+            stage.into(),
+            time.human(),
+            format!("{:.2}x", base / time.as_secs()),
+            plan,
+        ]);
+    };
+    row("uniform default", report.baseline.iteration_time, report.baseline.candidate.key());
+    // best closed-form hetero-heuristic candidate in the ranked set
+    if let Some(h) = report
+        .ranked
+        .iter()
+        .filter(|ev| {
+            ev.candidate.partitioning == hetsim::planner::Partitioning::HeteroAware
+                && ev.candidate.layout == hetsim::planner::TpLayout::Uniform
+        })
+        .min_by_key(|ev| ev.iteration_time)
+    {
+        row("hetero-heuristic", h.iteration_time, h.candidate.key());
+    }
+    row("searched", report.best().iteration_time, report.best().candidate.key());
+    row("refined", refined.refined_time, refined.spec.summary());
+    if let Some(r) = reference {
+        row("fig3_plan (hand-written)", r, "paper Fig 3".into());
+    }
+    println!(
+        "{label}: {} moves accepted, {} evaluations",
+        refined.moves.len(),
+        refined.evaluations
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Ablation: uniform → hetero-heuristic → searched → refined ===\n");
+    let mut t = Table::new(
+        "Iteration time by planning stage",
+        &["scenario", "stage", "iteration", "vs uniform", "plan"],
+    );
+
+    // (a) the paper's Fig-3 scenario, full batch, with the hand-written
+    // reference
+    let m = fig3_model()?;
+    let c = fig3_cluster()?;
+    let reference = simulate_spec(&m, &c, fig3_plan(&m, &c)?, None)?;
+    ablate(&mut t, "fig3 (Llama-2 70B)", &m, &c, None, Some(reference))?;
+
+    // (b) the hetero 1+1 preset (`hetsim plan --cluster hetero:1,1`),
+    // capped at 2 microbatches like the CLI default
+    let m = presets::model("gpt-6.7b")?;
+    let c = presets::cluster_hetero(1, 1)?;
+    ablate(&mut t, "hetero:1,1 (GPT-6.7B)", &m, &c, Some(2), None)?;
+
+    print!("\n{}", t.markdown());
+    Ok(())
+}

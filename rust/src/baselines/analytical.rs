@@ -78,6 +78,7 @@ pub struct AnalyticalEstimate {
     pub compute: Time,
     /// Summed collective time along the heaviest rank.
     pub communication: Time,
+    /// `compute + communication` (no overlap modeled).
     pub total: Time,
 }
 

@@ -8,27 +8,41 @@
 use crate::config::cluster::GpuSpec;
 use crate::config::model::LayerKind;
 
+/// Fields per layer-descriptor row of the AOT artifact.
 pub const LAYER_FIELDS: usize = 10;
+/// Fields per GPU-descriptor row of the AOT artifact.
 pub const GPU_FIELDS: usize = 8;
 
-/// Dtype and backward-pass constants (mirror model.py).
+/// Dtype bytes constant (mirrors model.py).
 pub const DTYPE_BYTES: f64 = 2.0;
+/// Backward-pass FLOPs multiplier vs forward (mirrors model.py).
 pub const BWD_FLOPS_FACTOR: f64 = 2.0;
+/// Backward-pass HBM-bytes multiplier vs forward (mirrors model.py).
 pub const BWD_BYTES_FACTOR: f64 = 2.0;
 
 /// One layer-descriptor row: the work one GPU performs for one
 /// microbatch of one layer (per TP shard).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LayerWork {
+    /// Layer class (selects the FLOPs/bytes formula).
     pub kind: LayerKind,
+    /// Model (embedding) dimension.
     pub hidden: f64,
+    /// MLP inner dimension.
     pub ffn: f64,
+    /// Attention head count.
     pub heads: f64,
+    /// Sequence length.
     pub seq: f64,
+    /// Microbatch size.
     pub mbs: f64,
+    /// MoE expert count (0 for dense layers).
     pub n_experts: f64,
+    /// MoE routed experts per token (0 for dense layers).
     pub top_k: f64,
+    /// TP degree the layer is sharded across.
     pub tp: f64,
+    /// Backward (true) or forward (false) pass.
     pub is_bwd: bool,
 }
 

@@ -110,14 +110,17 @@ impl std::fmt::Debug for CostTable {
 }
 
 impl CostTable {
+    /// A table over any evaluator (native or PJRT).
     pub fn new(evaluator: Box<dyn CostEvaluator>) -> Self {
         CostTable { evaluator, pending: Vec::new(), cache: HashMap::new(), batches_run: 0 }
     }
 
+    /// A table over the pure-Rust roofline mirror.
     pub fn native() -> Self {
         Self::new(Box::new(NativeCostModel))
     }
 
+    /// The backing evaluator's report label ("native" / "pjrt").
     pub fn evaluator_name(&self) -> &'static str {
         self.evaluator.name()
     }
@@ -168,6 +171,7 @@ impl CostTable {
         }
     }
 
+    /// Distinct (layer, GPU) pairs currently cached.
     pub fn cached_len(&self) -> usize {
         self.cache.len()
     }

@@ -181,6 +181,26 @@ impl FrameworkSpec {
         self
     }
 
+    /// One-line human-readable shape of the mapping, e.g. the paper's
+    /// Fig-3 plan renders as
+    /// `DG0[TP=3x75L -> TP=1x5L] b16 | DG1[TP=4x80L] b8`.
+    /// Used by planner reports and the refinement trajectory.
+    pub fn summary(&self) -> String {
+        let groups: Vec<String> = self
+            .groups
+            .iter()
+            .map(|g| {
+                let stages: Vec<String> = g
+                    .stages
+                    .iter()
+                    .map(|s| format!("TP={}x{}L", s.tp(), s.num_layers))
+                    .collect();
+                format!("DG{}[{}] b{}", g.id, stages.join(" -> "), g.batch_share)
+            })
+            .collect();
+        groups.join(" | ")
+    }
+
     /// Total ranks mapped across all groups.
     pub fn total_ranks(&self) -> usize {
         self.groups.iter().map(|g| g.ranks().len()).sum()

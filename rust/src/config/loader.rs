@@ -45,7 +45,8 @@
 //! One of:
 //! * shorthand string — `"ampere:16"` / `"hopper:4"` / `"volta:2"` /
 //!   `"blackwell:2"` (N nodes of 8 GPUs; bare `"hopper"` means 16
-//!   nodes) or `"hetero:A,H"` (A ampere + H hopper nodes);
+//!   nodes), `"hetero:A,H"` (A ampere + H hopper nodes), or `"fig3"`
+//!   (the paper's Fig-3 cluster: one 4×H100 node + one 4×A100 node);
 //! * `{"arch": "hetero", "ampere_nodes": 8, "hopper_nodes": 8}` —
 //!   both node counts default to 8;
 //! * `{"arch": "custom", "node_archs": ["ampere", "hopper", ...],
@@ -54,8 +55,22 @@
 //!
 //! ## `parallelism` — required
 //!
-//! `{"tp": T, "pp": P, "dp": D}`, all three required;
-//! `T × P × D` must equal the cluster's GPU count at build time.
+//! Either the classic grid — `{"tp": T, "pp": P, "dp": D}`, all three
+//! required, `T × P × D` equal to the cluster's GPU count at build
+//! time — or **explicit per-group TP degrees** (the paper's Fig-3
+//! shape, [`crate::workload::partition::plan_variable_tp`]):
+//!
+//! ```json
+//! {"groups": [{"tp": [3, 1]}, {"tp": [4]}]}
+//! ```
+//!
+//! One `groups` entry per cluster node, in rank order; each entry's
+//! `tp` array lists the TP degree of every pipeline stage on that node
+//! and must sum to the node's GPU count. TP degrees need not match
+//! across groups — mismatches trigger gradient resharding (paper §3).
+//! Layers and batch are split proportionally to compute power (the
+//! heterogeneity-aware partitioner); the derived `tp`/`pp`/`dp` of a
+//! per-group scenario are the informational maxima.
 //!
 //! ## `schedule` — optional, default `"gpipe"`
 //!
@@ -68,10 +83,11 @@
 //! Reserved for stochastic extensions; the simulator itself is
 //! deterministic.
 //!
-//! A complete, loadable example ships at
-//! `rust/examples/scenario_hetero_1f1b.json`; the doctest below parses
-//! it on every `cargo test`, so the example and this documentation
-//! cannot rot apart:
+//! Complete, loadable examples ship at
+//! `rust/examples/scenario_hetero_1f1b.json` (grid parallelism) and
+//! `rust/examples/scenario_variable_tp.json` (per-group TP, the Fig-3
+//! deployment); the doctests below parse them on every `cargo test`,
+//! so the examples and this documentation cannot rot apart:
 //!
 //! ```
 //! let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_hetero_1f1b.json");
@@ -81,6 +97,21 @@
 //! assert_eq!(s.cluster.total_gpus(), 16);
 //! assert_eq!((s.parallelism.tp, s.parallelism.pp, s.parallelism.dp), (4, 2, 2));
 //! assert_eq!(s.schedule, hetsim::workload::schedule::ScheduleKind::OneFOneB);
+//! assert!(s.per_group_tp.is_none());
+//! ```
+//!
+//! ```
+//! let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_variable_tp.json");
+//! let text = std::fs::read_to_string(path).unwrap();
+//! let s = hetsim::config::loader::load_scenario(&text).unwrap();
+//! assert_eq!(s.cluster.total_gpus(), 8); // fig3: 4×H100 + 4×A100
+//! assert_eq!(s.per_group_tp, Some(vec![vec![3, 1], vec![4]]));
+//! // derived informational maxima: max TP, max pipeline depth, groups
+//! assert_eq!((s.parallelism.tp, s.parallelism.pp, s.parallelism.dp), (4, 2, 2));
+//! // the spec it builds is the paper's Fig-3 rank layout
+//! let fw = hetsim::workload::partition::plan_variable_tp(
+//!     &s.model, &s.cluster, s.per_group_tp.as_deref().unwrap(), true).unwrap();
+//! assert_eq!(fw.groups[0].stages[0].ranks, vec![0, 1, 2]);
 //! ```
 
 use crate::config::cluster::ClusterSpec;
@@ -97,8 +128,13 @@ pub struct Scenario {
     pub model: ModelSpec,
     /// Cluster / host-topology description (Table 5 fields).
     pub cluster: ClusterSpec,
-    /// Parallelism degrees to deploy.
+    /// Parallelism degrees to deploy. For per-group TP scenarios these
+    /// are the derived informational maxima; `per_group_tp` is
+    /// authoritative.
     pub parallelism: ParallelismSpec,
+    /// Explicit per-group TP degrees (one split per cluster node, the
+    /// `parallelism.groups[].tp` form), when the scenario uses them.
+    pub per_group_tp: Option<Vec<Vec<u32>>>,
     /// Pipeline schedule for every device group.
     pub schedule: ScheduleKind,
     /// Reserved for stochastic extensions (the simulator itself is
@@ -118,12 +154,21 @@ pub fn load_scenario(text: &str) -> anyhow::Result<Scenario> {
     let v = Json::parse(text)?;
     let model = parse_model(v.req("model")?)?;
     let cluster = parse_cluster(v.req("cluster")?)?;
-    let parallelism = parse_parallelism(v.req("parallelism")?)?;
+    let pv = v.req("parallelism")?;
+    let per_group_tp = parse_per_group_tp(pv)?;
+    let parallelism = match &per_group_tp {
+        Some(splits) => ParallelismSpec {
+            tp: splits.iter().flatten().copied().max().unwrap_or(1),
+            pp: splits.iter().map(Vec::len).max().unwrap_or(1) as u32,
+            dp: splits.len() as u32,
+        },
+        None => parse_parallelism(pv)?,
+    };
     let schedule: ScheduleKind = v.opt_str("schedule", "gpipe").parse()?;
     let seed = v.opt_u64("seed", 42);
     model.validate()?;
     cluster.validate()?;
-    Ok(Scenario { model, cluster, parallelism, schedule, seed })
+    Ok(Scenario { model, cluster, parallelism, per_group_tp, schedule, seed })
 }
 
 /// Parse the `model` section: a preset name or an inline Table-6
@@ -162,6 +207,10 @@ pub fn parse_model(v: &Json) -> anyhow::Result<ModelSpec> {
 /// (see the module docs for the accepted shapes).
 pub fn parse_cluster(v: &Json) -> anyhow::Result<ClusterSpec> {
     if let Some(name) = v.as_str() {
+        // the paper's Fig-3 cluster: one 4×H100 node + one 4×A100 node
+        if name == "fig3" {
+            return crate::workload::partition::fig3_cluster();
+        }
         // "hetero:A,H" shorthand: A ampere nodes + H hopper nodes
         if let Some(rest) = name.strip_prefix("hetero:") {
             let (a, h) = rest.split_once(',').ok_or_else(|| {
@@ -208,6 +257,41 @@ pub fn parse_parallelism(v: &Json) -> anyhow::Result<ParallelismSpec> {
         pp: v.req_u64("pp")? as u32,
         dp: v.req_u64("dp")? as u32,
     })
+}
+
+/// Parse the per-group TP form of the `parallelism` section
+/// (`{"groups": [{"tp": [3, 1]}, ...]}`); `Ok(None)` when the section
+/// uses the classic grid form instead.
+pub fn parse_per_group_tp(v: &Json) -> anyhow::Result<Option<Vec<Vec<u32>>>> {
+    let Some(groups) = v.get("groups") else {
+        return Ok(None);
+    };
+    let list = groups
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("parallelism.groups must be an array"))?;
+    anyhow::ensure!(!list.is_empty(), "parallelism.groups is empty");
+    let mut splits = Vec::with_capacity(list.len());
+    for (i, g) in list.iter().enumerate() {
+        let tps = g
+            .req("tp")
+            .map_err(|_| anyhow::anyhow!("parallelism.groups[{i}] needs a \"tp\" array"))?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("parallelism.groups[{i}].tp must be an array"))?;
+        anyhow::ensure!(!tps.is_empty(), "parallelism.groups[{i}].tp is empty");
+        let mut split = Vec::with_capacity(tps.len());
+        for t in tps {
+            let tp = t.as_u64().ok_or_else(|| {
+                anyhow::anyhow!("parallelism.groups[{i}].tp entries must be unsigned ints")
+            })?;
+            anyhow::ensure!(
+                (1..=u64::from(u32::MAX)).contains(&tp),
+                "parallelism.groups[{i}]: TP degree {tp} out of range (>= 1, fits u32)"
+            );
+            split.push(tp as u32);
+        }
+        splits.push(split);
+    }
+    Ok(Some(splits))
 }
 
 #[cfg(test)]
@@ -312,6 +396,54 @@ mod tests {
         let s = load_scenario_file(std::path::Path::new(path)).unwrap();
         assert_eq!(s.parallelism.world_size(), s.cluster.total_gpus());
         assert_eq!(s.schedule, ScheduleKind::OneFOneB);
+    }
+
+    #[test]
+    fn variable_tp_example_config_builds_the_fig3_spec() {
+        // the per-group-TP reference example must stay loadable AND
+        // buildable into a valid framework spec
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_variable_tp.json");
+        let s = load_scenario_file(std::path::Path::new(path)).unwrap();
+        let splits = s.per_group_tp.clone().unwrap();
+        assert_eq!(splits, vec![vec![3, 1], vec![4]]);
+        let fw = crate::workload::partition::plan_variable_tp(
+            &s.model, &s.cluster, &splits, true,
+        )
+        .unwrap();
+        fw.validate(&s.model, &s.cluster).unwrap();
+    }
+
+    #[test]
+    fn per_group_tp_scenarios_parse_and_derive_maxima() {
+        let s = load_scenario(
+            r#"{"model": "fig3", "cluster": "fig3",
+                "parallelism": {"groups": [{"tp": [3, 1]}, {"tp": [4]}]}}"#,
+        )
+        .unwrap();
+        assert_eq!(s.per_group_tp, Some(vec![vec![3, 1], vec![4]]));
+        assert_eq!((s.parallelism.tp, s.parallelism.pp, s.parallelism.dp), (4, 2, 2));
+        // malformed group lists are rejected with clear errors
+        for bad in [
+            r#"{"groups": []}"#,
+            r#"{"groups": [{"tp": []}]}"#,
+            r#"{"groups": [{"tp": [0, 4]}]}"#,
+            r#"{"groups": [{"pp": 2}]}"#,
+            // does not fit u32: must error, not silently truncate
+            r#"{"groups": [{"tp": [4294967297, 1]}, {"tp": [4]}]}"#,
+        ] {
+            let text = format!(
+                r#"{{"model": "fig3", "cluster": "fig3", "parallelism": {bad}}}"#
+            );
+            assert!(load_scenario(&text).is_err(), "{bad} accepted");
+        }
+    }
+
+    #[test]
+    fn fig3_cluster_shorthand() {
+        let c = parse_cluster(&Json::Str("fig3".into())).unwrap();
+        assert_eq!(c.total_gpus(), 8);
+        assert!(!c.is_homogeneous());
+        assert_eq!(c.gpus_per_node(), 4);
     }
 
     #[test]

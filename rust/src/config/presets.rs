@@ -244,8 +244,18 @@ pub fn model(name: &str) -> anyhow::Result<ModelSpec> {
             grad_dtype_bytes: 4,
             dtype_bytes: 2,
         }),
+        // Fig-3 batch configuration of Llama-2 70B (global batch 24,
+        // microbatch 1) — the model half of the paper's Fig-3 scenario
+        // (`hetsim plan --model fig3 --cluster fig3`).
+        "fig3" => {
+            let mut m = model("llama2-70b")?;
+            m.global_batch = 24;
+            m.micro_batch = 1;
+            Ok(m)
+        }
         _ => anyhow::bail!(
-            "unknown model preset '{name}' (known: gpt-6.7b, gpt-13b, mixtral-8x7b, llama2-70b)"
+            "unknown model preset '{name}' (known: gpt-6.7b, gpt-13b, mixtral-8x7b, \
+             llama2-70b, fig3)"
         ),
     }
 }

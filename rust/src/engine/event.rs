@@ -10,8 +10,11 @@ pub struct EventId(pub u64);
 /// insertion sequence (deterministic tie-break).
 #[derive(Debug, Clone)]
 pub struct Scheduled<T> {
+    /// Absolute simulation time the event fires at.
     pub time: Time,
+    /// Insertion sequence number (the deterministic tie-break).
     pub id: EventId,
+    /// The caller-defined event payload.
     pub payload: T,
 }
 

@@ -11,13 +11,15 @@ use std::collections::{BinaryHeap, HashSet};
 use super::event::{EventId, Scheduled};
 use crate::util::units::Time;
 
+/// The deterministic (time, seq)-ordered event heap.
 #[derive(Debug)]
 pub struct EventQueue<T> {
     heap: BinaryHeap<Reverse<Scheduled<T>>>,
     cancelled: HashSet<EventId>,
     next_seq: u64,
-    /// Statistics for the perf report.
+    /// Events pushed so far (statistic for the perf report).
     pub pushed: u64,
+    /// Events popped so far (statistic for the perf report).
     pub popped: u64,
 }
 
@@ -28,6 +30,7 @@ impl<T> Default for EventQueue<T> {
 }
 
 impl<T> EventQueue<T> {
+    /// An empty queue.
     pub fn new() -> Self {
         EventQueue {
             heap: BinaryHeap::new(),
@@ -38,6 +41,7 @@ impl<T> EventQueue<T> {
         }
     }
 
+    /// An empty queue with pre-reserved heap capacity.
     pub fn with_capacity(n: usize) -> Self {
         let mut q = Self::new();
         q.heap.reserve(n);
@@ -83,6 +87,7 @@ impl<T> EventQueue<T> {
         None
     }
 
+    /// True when no non-cancelled event remains.
     pub fn is_empty(&mut self) -> bool {
         self.peek_time().is_none()
     }

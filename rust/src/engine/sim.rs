@@ -8,6 +8,7 @@ use crate::util::units::Time;
 /// Engine = queue + clock + safety limits.
 #[derive(Debug)]
 pub struct Engine<T> {
+    /// The underlying event queue (exposed for perf statistics).
     pub queue: EventQueue<T>,
     now: Time,
     /// Abort knob against runaway event cascades (0 = unlimited).
@@ -22,14 +23,17 @@ impl<T> Default for Engine<T> {
 }
 
 impl<T> Engine<T> {
+    /// A fresh engine with an empty queue at time zero.
     pub fn new() -> Self {
         Engine { queue: EventQueue::new(), now: Time::ZERO, max_events: 0, processed: 0 }
     }
 
+    /// The current simulation time.
     pub fn now(&self) -> Time {
         self.now
     }
 
+    /// Events dispatched so far.
     pub fn processed(&self) -> u64 {
         self.processed
     }

@@ -7,16 +7,23 @@
 use crate::util::stats::Samples;
 use crate::util::units::Time;
 
+/// Coarse activity classes of the execution timeline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TraceCategory {
+    /// A compute op running on a GPU.
     Compute,
+    /// A collective (blocked or transferring).
     Communication,
+    /// Resharding traffic (component C2).
     Resharding,
+    /// Pipeline idle time.
     PipelineBubble,
+    /// Anything else.
     Other,
 }
 
 impl TraceCategory {
+    /// Lower-case display name.
     pub fn name(self) -> &'static str {
         match self {
             TraceCategory::Compute => "compute",
@@ -28,12 +35,18 @@ impl TraceCategory {
     }
 }
 
+/// One busy interval of one rank.
 #[derive(Debug, Clone)]
 pub struct TraceRecord {
+    /// The global rank the interval belongs to.
     pub rank: u32,
+    /// Activity class.
     pub category: TraceCategory,
+    /// Human-readable op/collective label.
     pub label: String,
+    /// Interval start (simulation time).
     pub start: Time,
+    /// Interval end (simulation time).
     pub end: Time,
 }
 
@@ -41,15 +54,19 @@ pub struct TraceRecord {
 /// for perf runs where only aggregate stats matter.
 #[derive(Debug, Default)]
 pub struct TraceRecorder {
+    /// All recorded intervals, in push order.
     pub records: Vec<TraceRecord>,
+    /// When false, `record` calls are dropped.
     pub enabled: bool,
 }
 
 impl TraceRecorder {
+    /// A recorder, enabled or disabled.
     pub fn new(enabled: bool) -> Self {
         TraceRecorder { records: Vec::new(), enabled }
     }
 
+    /// Push one busy interval (no-op when disabled).
     pub fn record(
         &mut self,
         rank: u32,
@@ -112,6 +129,7 @@ impl TraceRecorder {
         Json::obj(vec![("traceEvents", Json::Arr(events))]).to_string()
     }
 
+    /// CSV export (`rank,category,label,start_ns,end_ns`).
     pub fn csv(&self) -> String {
         let mut s = String::from("rank,category,label,start_ns,end_ns\n");
         for r in &self.records {

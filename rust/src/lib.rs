@@ -33,10 +33,12 @@
 //!    model; [`runtime`] swaps in the PJRT-executed AOT artifact).
 //! 5. **Consume** — [`simulator`] ties it into one reusable
 //!    `Send + Sync` [`simulator::Simulation`]; [`planner`] sweeps
-//!    TP×PP×DP×schedule deployments concurrently (`hetsim plan`);
-//!    [`baselines`] and [`report`] reproduce the paper's comparisons
-//!    and artifacts; [`util`] holds in-tree substrates for crates
-//!    unavailable offline.
+//!    TP×PP×DP×schedule deployments plus variable per-group TP layouts
+//!    concurrently (`hetsim plan`) and polishes the winners by
+//!    simulator-in-the-loop coordinate descent ([`planner::refine`],
+//!    `hetsim plan --refine`); [`baselines`] and [`report`] reproduce
+//!    the paper's comparisons and artifacts; [`util`] holds in-tree
+//!    substrates for crates unavailable offline.
 //!
 //! ## Quickstart
 //!
@@ -75,23 +77,31 @@
 //!
 //! ## Documentation coverage
 //!
-//! The public API of the description, workload, planner and facade
-//! layers is fully documented and kept that way by `missing_docs`
-//! warnings (promoted to errors by the `cargo doc` CI job).
+//! Every public item of every module except [`runtime`] (whose surface
+//! is gated on the optional `pjrt` feature) is documented and kept
+//! that way by `missing_docs` warnings (promoted to errors by the
+//! `cargo doc` CI job).
 
+#[warn(missing_docs)]
 pub mod baselines;
+#[warn(missing_docs)]
 pub mod compute;
 #[warn(missing_docs)]
 pub mod config;
+#[warn(missing_docs)]
 pub mod engine;
+#[warn(missing_docs)]
 pub mod network;
 #[warn(missing_docs)]
 pub mod planner;
+#[warn(missing_docs)]
 pub mod report;
 pub mod runtime;
 #[warn(missing_docs)]
 pub mod simulator;
+#[warn(missing_docs)]
 pub mod system;
+#[warn(missing_docs)]
 pub mod util;
 #[warn(missing_docs)]
 pub mod workload;

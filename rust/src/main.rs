@@ -21,7 +21,7 @@ fn usage() -> Usage {
         about: "heterogeneity-aware LLM training simulator (CS.DC 2025 reproduction)",
         commands: vec![
             ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N] [--schedule gpipe|1f1b|interleaved:V] [--iterations N --threads N]"),
-            ("plan", "rank TPxPPxDPxschedule plans for a model on a cluster [--model NAME --cluster SPEC --threads N --mb-limit N (0=all) --top K]"),
+            ("plan", "rank TPxPPxDPxschedule plans (+ variable per-group TP layouts on hetero clusters) [--model NAME --cluster SPEC --threads N --mb-limit N (0=all) --top K --refine[=STEPS]]"),
             ("fig1", "hardware-evolution trend across generation presets"),
             ("fig5", "per-layer compute time across GPU generations [--backend native|pjrt]"),
             ("fig6", "FCT CCDF across interconnect configs [--nodes N --models a,b --mb-limit N]"),
@@ -77,23 +77,33 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         "config", "model", "cluster", "tp", "pp", "dp", "schedule", "backend", "mb-limit",
         "hetero-partition", "naive-ring", "iterations", "threads",
     ])?;
-    let (model, cluster, par, schedule) = if let Some(path) = args.opt("config") {
-        let s = loader::load_scenario_file(std::path::Path::new(path))?;
-        (s.model, s.cluster, Some(s.parallelism), Some(s.schedule))
-    } else {
-        let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
-        let cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
-            args.opt_or("cluster", "hopper:4").to_string(),
-        ))?;
-        let par = match (args.opt("tp"), args.opt("pp"), args.opt("dp")) {
-            (None, None, None) => None,
-            _ => Some(ParallelismSpec {
-                tp: args.opt_u64("tp", 1)? as u32,
-                pp: args.opt_u64("pp", 1)? as u32,
-                dp: args.opt_u64("dp", 1)? as u32,
-            }),
+    let (model, cluster, par, schedule, per_group_tp) =
+        if let Some(path) = args.opt("config") {
+            let s = loader::load_scenario_file(std::path::Path::new(path))?;
+            (s.model, s.cluster, Some(s.parallelism), Some(s.schedule), s.per_group_tp)
+        } else {
+            let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
+            let cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
+                args.opt_or("cluster", "hopper:4").to_string(),
+            ))?;
+            let par = match (args.opt("tp"), args.opt("pp"), args.opt("dp")) {
+                (None, None, None) => None,
+                _ => Some(ParallelismSpec {
+                    tp: args.opt_u64("tp", 1)? as u32,
+                    pp: args.opt_u64("pp", 1)? as u32,
+                    dp: args.opt_u64("dp", 1)? as u32,
+                }),
+            };
+            (model, cluster, par, None, None)
         };
-        (model, cluster, par, None)
+    // per-group TP scenarios carry their own device-group mapping,
+    // built by the heterogeneity-aware partitioner (layers/batch
+    // proportional to compute power)
+    let framework = match &per_group_tp {
+        Some(splits) => {
+            Some(hetsim::workload::partition::plan_variable_tp(&model, &cluster, splits, true)?)
+        }
+        None => None,
     };
     let mut b = SimulationBuilder::new(model, cluster)
         .cost_backend(cost_backend(args)?)
@@ -102,6 +112,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             microbatch_limit: args.opt("mb-limit").map(|v| v.parse()).transpose()?,
             ..Default::default()
         });
+    if let Some(fw) = framework {
+        b = b.framework(fw);
+    }
     if args.flag("naive-ring") {
         b = b.ring_policy(RingPolicy::Naive);
     }
@@ -161,16 +174,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
-    args.check_known(&["model", "cluster", "threads", "mb-limit", "top"])?;
+    args.check_known(&["model", "cluster", "threads", "mb-limit", "top", "refine"])?;
     let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
     let cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
         args.opt_or("cluster", "hetero:1,1").to_string(),
     ))?;
     let mb_limit = args.opt_u64("mb-limit", 2)?;
+    // --refine (bare flag: default budget) or --refine=STEPS / --refine STEPS
+    let refine_steps =
+        if args.flag("refine") { 64 } else { args.opt_u64("refine", 0)? };
     let opts = hetsim::planner::PlanOptions {
         // 0 = simulate every microbatch (full-fidelity ranking)
         microbatch_limit: if mb_limit == 0 { None } else { Some(mb_limit) },
         threads: args.opt_u64("threads", 0)? as usize,
+        refine_steps,
     };
     let top = args.opt_u64("top", 10)? as usize;
     println!(
@@ -189,6 +206,14 @@ fn cmd_plan(args: &Args) -> Result<()> {
         best.candidate.key(),
         best.iteration_time
     );
+    if let Some(r) = &report.refined {
+        let rspeed = report.baseline.iteration_time.as_secs() / r.refined_time.as_secs();
+        println!(
+            "refined:   {} — {} per iteration ({rspeed:.2}x vs the uniform default)",
+            r.spec.summary(),
+            r.refined_time
+        );
+    }
     Ok(())
 }
 

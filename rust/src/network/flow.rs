@@ -20,14 +20,18 @@ use super::topology::Topology;
 use crate::engine::{Engine, EventId};
 use crate::util::units::Time;
 
+/// Monotone identifier of one flow within a [`FlowSim`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct FlowId(pub u64);
 
 /// What the caller wants moved.
 #[derive(Debug, Clone, Copy)]
 pub struct FlowSpec {
+    /// Source global GPU rank.
     pub src: u32,
+    /// Destination global GPU rank.
     pub dst: u32,
+    /// Payload size in bytes.
     pub bytes: u64,
     /// Caller-defined grouping tag (e.g. collective id).
     pub tag: u64,
@@ -36,16 +40,24 @@ pub struct FlowSpec {
 /// Completed-flow record: the Fig-6 sample unit.
 #[derive(Debug, Clone)]
 pub struct FlowRecord {
+    /// The completed flow's id.
     pub id: FlowId,
+    /// Source global GPU rank.
     pub src: u32,
+    /// Destination global GPU rank.
     pub dst: u32,
+    /// Payload size in bytes.
     pub bytes: u64,
+    /// Simulated time the flow started.
     pub start: Time,
+    /// Simulated time the flow completed.
     pub end: Time,
+    /// The spec's caller-defined grouping tag.
     pub tag: u64,
 }
 
 impl FlowRecord {
+    /// Flow completion time (`end - start`), the Fig-6 metric.
     pub fn fct(&self) -> Time {
         self.end - self.start
     }
@@ -70,9 +82,11 @@ struct ActiveFlow {
 /// cloned `Arc` — both convert).
 #[derive(Debug)]
 pub struct FlowSim {
+    /// The shared network graph flows are routed over.
     pub topo: Arc<Topology>,
     active: HashMap<FlowId, ActiveFlow>,
     next_id: u64,
+    /// Records of every completed flow (when `keep_records`).
     pub records: Vec<FlowRecord>,
     /// Set false to skip record-keeping (perf runs).
     pub keep_records: bool,
@@ -88,6 +102,7 @@ pub struct FlowSim {
 }
 
 impl FlowSim {
+    /// Create a simulator over a built topology (owned or shared).
     pub fn new(topo: impl Into<Arc<Topology>>) -> Self {
         let topo = topo.into();
         let nlinks = topo.num_links();
@@ -105,10 +120,12 @@ impl FlowSim {
         }
     }
 
+    /// Flows currently in flight.
     pub fn active_count(&self) -> usize {
         self.active.len()
     }
 
+    /// Max-min rate recomputations so far (a perf counter).
     pub fn rebalance_count(&self) -> u64 {
         self.rebalances
     }

@@ -14,10 +14,12 @@ use super::topology::{LinkId, Topology};
 /// A route is the ordered list of directed links a flow traverses.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Route {
+    /// The links, in traversal order (empty = self-communication).
     pub links: Vec<LinkId>,
 }
 
 impl Route {
+    /// Number of link traversals.
     pub fn hops(&self) -> usize {
         self.links.len()
     }

@@ -18,37 +18,72 @@ use crate::util::units::{Bandwidth, Time};
 /// A device in the topology graph.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum NodeRef {
-    Gpu { node: u32, local: u32 },
-    NvSwitch { node: u32 },
-    Nic { node: u32, local: u32 },
-    RailSwitch { local: u32 },
+    /// A GPU slot.
+    Gpu {
+        /// Hosting node index.
+        node: u32,
+        /// Local rank within the node.
+        local: u32,
+    },
+    /// The node's NVSwitch.
+    NvSwitch {
+        /// Hosting node index.
+        node: u32,
+    },
+    /// One rail NIC (one per GPU slot).
+    Nic {
+        /// Hosting node index.
+        node: u32,
+        /// Local rank the NIC is railed to.
+        local: u32,
+    },
+    /// The cluster-level rail switch for one local rank.
+    RailSwitch {
+        /// The local rank (rail index) this switch serves.
+        local: u32,
+    },
 }
 
+/// Physical link class (selects the Table-5 bandwidth/delay pair).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LinkKind {
+    /// GPU ↔ NVSwitch.
     NvLink,
+    /// GPU ↔ its rail NIC (dedicated PCIe channel).
     Pcie,
-    NicUp,   // NIC -> rail switch
-    NicDown, // rail switch -> NIC
+    /// NIC → rail switch (egress).
+    NicUp,
+    /// Rail switch → NIC (ingress).
+    NicDown,
 }
 
+/// Dense link index into [`Topology::links`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct LinkId(pub u32);
 
+/// One directed link of the graph.
 #[derive(Debug, Clone)]
 pub struct Link {
+    /// Tail device.
     pub from: NodeRef,
+    /// Head device.
     pub to: NodeRef,
+    /// Physical link class.
     pub kind: LinkKind,
+    /// Bandwidth shared (max-min fairly) by the flows crossing it.
     pub bw: Bandwidth,
+    /// Fixed per-hop delay, paid once per flow (QbbChannel model).
     pub delay: Time,
 }
 
 /// The built graph plus index structures for O(1) route assembly.
 #[derive(Debug)]
 pub struct Topology {
+    /// All directed links, indexed by [`LinkId`].
     pub links: Vec<Link>,
+    /// Node count of the cluster.
     pub num_nodes: u32,
+    /// GPU slots (and rail NICs) per node.
     pub gpus_per_node: u32,
     // index: [node][local] -> link ids
     gpu_to_nvsw: Vec<LinkId>,
@@ -60,6 +95,7 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// Build the rail-only graph for a (validated) cluster spec.
     pub fn build(cluster: &ClusterSpec) -> anyhow::Result<Topology> {
         cluster.validate()?;
         let num_nodes = cluster.nodes.len() as u32;
@@ -118,14 +154,17 @@ impl Topology {
         (node * self.gpus_per_node + local) as usize
     }
 
+    /// The link behind an id.
     pub fn link(&self, id: LinkId) -> &Link {
         &self.links[id.0 as usize]
     }
 
+    /// Total directed link count.
     pub fn num_links(&self) -> usize {
         self.links.len()
     }
 
+    /// World size of the underlying cluster.
     pub fn total_gpus(&self) -> u32 {
         self.num_nodes * self.gpus_per_node
     }
@@ -135,26 +174,34 @@ impl Topology {
         (rank / self.gpus_per_node, rank % self.gpus_per_node)
     }
 
+    /// Compose a global rank from (node, local).
     pub fn rank_of(&self, node: u32, local: u32) -> u32 {
         node * self.gpus_per_node + local
     }
 
     // -- link lookups used by routing -------------------------------------
+
+    /// GPU → NVSwitch link of a slot.
     pub fn l_gpu_to_nvsw(&self, node: u32, local: u32) -> LinkId {
         self.gpu_to_nvsw[self.idx(node, local)]
     }
+    /// NVSwitch → GPU link of a slot.
     pub fn l_nvsw_to_gpu(&self, node: u32, local: u32) -> LinkId {
         self.nvsw_to_gpu[self.idx(node, local)]
     }
+    /// GPU → rail-NIC link of a slot.
     pub fn l_gpu_to_nic(&self, node: u32, local: u32) -> LinkId {
         self.gpu_to_nic[self.idx(node, local)]
     }
+    /// Rail-NIC → GPU link of a slot.
     pub fn l_nic_to_gpu(&self, node: u32, local: u32) -> LinkId {
         self.nic_to_gpu[self.idx(node, local)]
     }
+    /// NIC → rail-switch (egress) link of a slot.
     pub fn l_nic_up(&self, node: u32, local: u32) -> LinkId {
         self.nic_up[self.idx(node, local)]
     }
+    /// Rail-switch → NIC (ingress) link of a slot.
     pub fn l_nic_down(&self, node: u32, local: u32) -> LinkId {
         self.nic_down[self.idx(node, local)]
     }

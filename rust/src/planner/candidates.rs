@@ -1,19 +1,29 @@
 //! Candidate enumeration and pruning for the parallelism-plan search.
 //!
 //! Every feasible TP×PP×DP factorization is crossed with partitioning
-//! strategies, ring policies and pipeline schedules. Pruning is typed
-//! and two-level: whole factorizations fall to structural reasons
-//! (cross-node TP, indivisible layers, batch floor, weights+optimizer
-//! memory), individual `(factorization, schedule)` pairs fall when the
+//! strategies, ring policies and pipeline schedules; on heterogeneous
+//! clusters the space is additionally extended with **variable
+//! per-group TP layouts** ([`TpLayout::PerNode`]): each node becomes
+//! one device group whose GPUs are split into an intra-node pipeline of
+//! TP groups that need not match across groups — the paper's Fig-3
+//! shape (TP=3 → TP=1 on the H100 node vs TP=4 on the A100 node),
+//! which forces resharding at DP-sync time and is unreachable from any
+//! global TP×PP×DP factorization.
+//!
+//! Pruning is typed and two-level: whole factorizations/layouts fall to
+//! structural reasons (cross-node TP, indivisible layers, batch floor,
+//! weights+optimizer memory, infeasible proportional splits),
+//! individual `(factorization, schedule)` pairs fall when the
 //! schedule's peak-activation estimate pushes the smallest device over
 //! its memory capacity — the schedule × heterogeneity interaction the
 //! paper's homogeneous baselines cannot express.
 
 use crate::config::cluster::ClusterSpec;
-use crate::config::framework::ParallelismSpec;
+use crate::config::framework::{FrameworkSpec, ParallelismSpec};
 use crate::config::model::ModelSpec;
 use crate::system::collective::RingPolicy;
-use crate::workload::schedule::ScheduleKind;
+use crate::workload::partition::{plan_hetero, plan_variable_tp, SplitError};
+use crate::workload::schedule::{ScheduleKind, ACT_BYTES_PER_LAYER_FACTOR};
 
 /// How the model/batch is split across device groups.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,11 +45,60 @@ impl Partitioning {
     }
 }
 
+/// How ranks are laid out into TP groups.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TpLayout {
+    /// The classic global TP×PP×DP grid (TP fastest, then PP, then DP).
+    Uniform,
+    /// Variable per-group TP: one device group per node, whose pipeline
+    /// stages are the node's GPUs split into the given TP degrees
+    /// (`[3, 1]` = a TP=3 stage feeding a TP=1 stage, paper Fig 3).
+    /// One entry per cluster node, in rank order.
+    PerNode(Vec<Vec<u32>>),
+}
+
+impl TpLayout {
+    /// Stable token used in candidate keys: `grid` for the uniform
+    /// layout, `var(...)` with run-length-compressed per-node splits
+    /// otherwise (`var(3+1,4)`, `var(2x7+1)`).
+    pub fn token(&self) -> String {
+        match self {
+            TpLayout::Uniform => "grid".into(),
+            TpLayout::PerNode(splits) => {
+                let mut out: Vec<String> = Vec::new();
+                let mut i = 0;
+                while i < splits.len() {
+                    let mut j = i;
+                    while j < splits.len() && splits[j] == splits[i] {
+                        j += 1;
+                    }
+                    let split = splits[i]
+                        .iter()
+                        .map(u32::to_string)
+                        .collect::<Vec<_>>()
+                        .join("+");
+                    if j - i > 1 {
+                        out.push(format!("{}x{}", j - i, split));
+                    } else {
+                        out.push(split);
+                    }
+                    i = j;
+                }
+                format!("var({})", out.join(","))
+            }
+        }
+    }
+}
+
 /// One candidate deployment plan.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PlanCandidate {
-    /// Parallelism degrees.
+    /// Parallelism degrees. For [`TpLayout::PerNode`] layouts these are
+    /// informational maxima (max stage TP, max pipeline depth, group
+    /// count) — the layout itself is authoritative.
     pub par: ParallelismSpec,
+    /// How ranks form TP groups (grid or variable per-node splits).
+    pub layout: TpLayout,
     /// How layers/batch are split across device groups.
     pub partitioning: Partitioning,
     /// Collective ring-ordering policy.
@@ -48,15 +107,23 @@ pub struct PlanCandidate {
     pub schedule: ScheduleKind,
 }
 
+/// The layout head segment shared by [`PlanCandidate::key`] and
+/// [`PrunedCandidate::key_head`], so ranked and pruned report lines can
+/// never drift apart.
+fn layout_head(par: &ParallelismSpec, layout: &TpLayout) -> String {
+    match layout {
+        TpLayout::Uniform => format!("tp{}-pp{}-dp{}", par.tp, par.pp, par.dp),
+        TpLayout::PerNode(_) => layout.token(),
+    }
+}
+
 impl PlanCandidate {
     /// Stable human-readable identity; doubles as the deterministic
     /// ranking tie-break.
     pub fn key(&self) -> String {
         format!(
-            "tp{}-pp{}-dp{}-{}-{}-{}",
-            self.par.tp,
-            self.par.pp,
-            self.par.dp,
+            "{}-{}-{}-{}",
+            layout_head(&self.par, &self.layout),
             self.partitioning.name(),
             match self.ring {
                 RingPolicy::HeteroAware => "ring:aware",
@@ -64,6 +131,29 @@ impl PlanCandidate {
             },
             self.schedule.name(),
         )
+    }
+
+    /// Materialize the candidate into the concrete device-group mapping
+    /// it describes — the spec the evaluator simulates and the refiner
+    /// ([`crate::planner::refine`]) starts from.
+    pub fn framework(
+        &self,
+        model: &ModelSpec,
+        cluster: &ClusterSpec,
+    ) -> anyhow::Result<FrameworkSpec> {
+        let fw = match &self.layout {
+            TpLayout::Uniform => match self.partitioning {
+                Partitioning::Uniform => FrameworkSpec::uniform(model, cluster, self.par)?,
+                Partitioning::HeteroAware => plan_hetero(model, cluster, self.par)?,
+            },
+            TpLayout::PerNode(splits) => plan_variable_tp(
+                model,
+                cluster,
+                splits,
+                self.partitioning == Partitioning::HeteroAware,
+            )?,
+        };
+        Ok(fw.with_schedule(self.schedule))
     }
 }
 
@@ -117,19 +207,37 @@ pub enum PruneReason {
         /// Smallest device capacity, in GB.
         have_gb: f64,
     },
+    /// A layer or batch proportional split is infeasible for the
+    /// layout's stage/group counts (more stages than layers, more
+    /// groups than batch samples). Carries the typed
+    /// [`SplitError`] instead of letting `plan_hetero` /
+    /// `plan_variable_tp` abort the whole search at evaluation time.
+    #[error(transparent)]
+    Unsplittable(#[from] SplitError),
 }
 
-/// A factorization (or factorization × schedule) that was excluded, and
-/// why.
+/// A factorization/layout (or one of its schedules) that was excluded,
+/// and why.
 #[derive(Debug, Clone)]
 pub struct PrunedCandidate {
-    /// The excluded parallelism degrees.
+    /// The excluded parallelism degrees (informational maxima for
+    /// variable layouts).
     pub par: ParallelismSpec,
+    /// The excluded rank layout.
+    pub layout: TpLayout,
     /// The specific schedule excluded, when the prune is
     /// schedule-level (`None` = the whole factorization fell).
     pub schedule: Option<ScheduleKind>,
     /// Typed exclusion reason.
     pub reason: PruneReason,
+}
+
+impl PrunedCandidate {
+    /// Stable display identity of the excluded layout (the same head
+    /// segment [`PlanCandidate::key`] uses).
+    pub fn key_head(&self) -> String {
+        layout_head(&self.par, &self.layout)
+    }
 }
 
 /// Coarse per-GPU memory estimate for a (tp, pp) sharding: bf16 weights
@@ -153,13 +261,35 @@ pub fn schedules_for(model: &ModelSpec, pp: u32) -> Vec<ScheduleKind> {
     s
 }
 
+/// Intra-node pipeline splits of `gpn` GPUs worth exploring: the whole
+/// node as one TP group (`[gpn]`) plus every two-stage split
+/// `[gpn - k, k]` for `k ≤ gpn/2` — the space containing the paper's
+/// Fig-3 `[3, 1]` split. Deeper intra-node pipelines trade more bubbles
+/// for no extra resharding freedom, so they are not enumerated; the
+/// refiner can still rebalance layers within the two stages.
+pub fn node_splits(gpn: u32) -> Vec<Vec<u32>> {
+    let mut out = vec![vec![gpn]];
+    for small in 1..=gpn / 2 {
+        out.push(vec![gpn - small, small]);
+    }
+    out
+}
+
 /// Enumerate every valid TP×PP×DP factorization of the cluster's world
 /// size, crossed with partitioning strategies, ring policies and
-/// pipeline schedules. Returns `(feasible candidates, pruned
-/// factorizations)`. On homogeneous clusters the heterogeneity-aware
-/// partitioning reduces to the uniform mapping and is skipped to avoid
-/// duplicate work; on `pp == 1` factorizations the schedules collapse
-/// to GPipe for the same reason.
+/// pipeline schedules. On heterogeneous clusters, additionally
+/// enumerate variable per-group TP layouts ([`TpLayout::PerNode`]):
+/// every assignment of one [`node_splits`] entry per GPU architecture
+/// (all nodes of one architecture share a split), skipping the
+/// assignment that collapses to the uniform `tp = gpn, pp = 1` grid.
+/// Variable layouts run GPipe only (their per-group pipeline depths may
+/// differ, and the Fig-3 reference uses GPipe).
+///
+/// Returns `(feasible candidates, pruned factorizations)`. On
+/// homogeneous clusters the heterogeneity-aware partitioning reduces to
+/// the uniform mapping and is skipped to avoid duplicate work; on
+/// `pp == 1` factorizations the schedules collapse to GPipe for the
+/// same reason.
 ///
 /// `microbatch_limit` mirrors the evaluation's
 /// [`crate::workload::aicb::WorkloadOptions::microbatch_limit`]: the
@@ -170,6 +300,24 @@ pub fn enumerate(
     model: &ModelSpec,
     cluster: &ClusterSpec,
     microbatch_limit: Option<u64>,
+) -> (Vec<PlanCandidate>, Vec<PrunedCandidate>) {
+    enumerate_with_memory(model, cluster, microbatch_limit, true)
+}
+
+/// [`enumerate`] with the device-memory prunes made optional.
+///
+/// `check_memory = false` skips the weights+optimizer and
+/// peak-activation prunes (structural prunes still apply). The search
+/// falls back to this when *no* candidate fits the memory model — the
+/// paper's own Fig-3 scenario is such a case (Llama-2 70B with full
+/// Adam state cannot fit 8 GPUs, yet the figure deploys it as an
+/// illustration), and a ranking with a visible "memory model relaxed"
+/// note beats refusing to plan.
+pub fn enumerate_with_memory(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    microbatch_limit: Option<u64>,
+    check_memory: bool,
 ) -> (Vec<PlanCandidate>, Vec<PrunedCandidate>) {
     let world = cluster.total_gpus();
     // smallest node bounds intra-node TP (defensive: validated clusters
@@ -196,7 +344,7 @@ pub fn enumerate(
                 Some(PruneReason::IndivisibleLayers { pp, layers: model.num_layers })
             } else if u64::from(dp) > model.global_batch {
                 Some(PruneReason::BatchTooSmall { dp, batch: model.global_batch })
-            } else if weights > min_mem {
+            } else if check_memory && weights > min_mem {
                 Some(PruneReason::MemoryExceeded {
                     need_gb: weights as f64 / 1e9,
                     have_gb: min_mem as f64 / 1e9,
@@ -205,7 +353,12 @@ pub fn enumerate(
                 None
             };
             if let Some(reason) = reason {
-                pruned.push(PrunedCandidate { par, schedule: None, reason });
+                pruned.push(PrunedCandidate {
+                    par,
+                    layout: TpLayout::Uniform,
+                    schedule: None,
+                    reason,
+                });
                 continue;
             }
             // microbatches one device group will actually simulate
@@ -220,9 +373,10 @@ pub fn enumerate(
             for schedule in schedules_for(model, pp) {
                 // schedule-level memory prune: weights + peak activations
                 let need = weights + schedule.peak_activation_bytes(model, tp, pp, m_eff);
-                if need > min_mem {
+                if check_memory && need > min_mem {
                     pruned.push(PrunedCandidate {
                         par,
+                        layout: TpLayout::Uniform,
                         schedule: Some(schedule),
                         reason: PruneReason::ActivationMemoryExceeded {
                             need_gb: need as f64 / 1e9,
@@ -233,13 +387,177 @@ pub fn enumerate(
                 }
                 for &partitioning in partitionings {
                     for ring in [RingPolicy::HeteroAware, RingPolicy::Naive] {
-                        keep.push(PlanCandidate { par, partitioning, ring, schedule });
+                        keep.push(PlanCandidate {
+                            par,
+                            layout: TpLayout::Uniform,
+                            partitioning,
+                            ring,
+                            schedule,
+                        });
                     }
                 }
             }
         }
     }
+    if hetero {
+        enumerate_variable(model, cluster, microbatch_limit, check_memory, &mut keep, &mut pruned);
+    }
     (keep, pruned)
+}
+
+/// The variable-layout arm of [`enumerate`]: one device group per node,
+/// per-architecture intra-node TP splits, feasibility-checked with the
+/// same typed prunes as the grid arm.
+fn enumerate_variable(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    microbatch_limit: Option<u64>,
+    check_memory: bool,
+    keep: &mut Vec<PlanCandidate>,
+    pruned: &mut Vec<PrunedCandidate>,
+) {
+    let gpn = cluster.gpus_per_node();
+    if gpn == 0 {
+        return;
+    }
+    let archs = cluster.gpu_types();
+    let options = node_splits(gpn);
+    // cartesian product: one split choice per architecture, in stable
+    // (first-appearance arch, split-index) order
+    let mut combos: Vec<Vec<usize>> = vec![Vec::new()];
+    for _ in 0..archs.len() {
+        combos = combos
+            .into_iter()
+            .flat_map(|c| {
+                (0..options.len()).map(move |i| {
+                    let mut next = c.clone();
+                    next.push(i);
+                    next
+                })
+            })
+            .collect();
+    }
+    let per_param = model.dtype_bytes + model.grad_dtype_bytes + 8;
+    for combo in combos {
+        // every arch on one TP group == the uniform tp=gpn, pp=1 grid
+        if combo.iter().all(|i| *i == 0) {
+            continue;
+        }
+        let splits: Vec<Vec<u32>> = cluster
+            .nodes
+            .iter()
+            .map(|n| {
+                let a = archs.iter().position(|t| *t == n.gpu.name).unwrap_or(0);
+                options[combo[a]].clone()
+            })
+            .collect();
+        let layout = TpLayout::PerNode(splits.clone());
+        let max_tp = splits.iter().flatten().copied().max().unwrap_or(1);
+        let max_pp = splits.iter().map(Vec::len).max().unwrap_or(1) as u32;
+        let par = ParallelismSpec { tp: max_tp, pp: max_pp, dp: splits.len() as u32 };
+
+        // Feasibility is checked per partitioning on the spec
+        // `plan_variable_tp` actually materializes — the uniform and
+        // proportional splits put very different loads on each stage,
+        // and sharing the builder makes the prune structurally unable
+        // to disagree with what evaluation will simulate.
+        for partitioning in [Partitioning::Uniform, Partitioning::HeteroAware] {
+            let spec = match plan_variable_tp(
+                model,
+                cluster,
+                &splits,
+                partitioning == Partitioning::HeteroAware,
+            ) {
+                Ok(spec) => spec,
+                Err(e) => {
+                    // enumerator-built splits are structurally valid, so
+                    // the only expected failures are the typed split
+                    // errors (layers < stages, batch < groups)
+                    if let Some(se) = e.downcast_ref::<SplitError>() {
+                        pruned.push(PrunedCandidate {
+                            par,
+                            layout: layout.clone(),
+                            schedule: None,
+                            reason: PruneReason::Unsplittable(*se),
+                        });
+                    } else {
+                        debug_assert!(false, "unexpected plan_variable_tp error: {e:#}");
+                    }
+                    continue;
+                }
+            };
+
+            // per-GPU memory on every materialized stage: weight share
+            // plus GPipe activation residency for the microbatches that
+            // will actually be simulated
+            let mut mem_reason = None;
+            if check_memory {
+                'mem: for g in &spec.groups {
+                    let node = &cluster.nodes[g.id as usize];
+                    let m_full = (g.batch_share / g.micro_batch.max(1)).max(1);
+                    let m_eff = microbatch_limit.map_or(m_full, |l| m_full.min(l.max(1)));
+                    for stage in &g.stages {
+                        let tp = u64::from(stage.tp().max(1));
+                        let layers = u64::from(stage.num_layers);
+                        let weights = model.param_count() * per_param * layers
+                            / (u64::from(model.num_layers) * tp);
+                        let act = m_eff
+                            * g.micro_batch
+                            * model.seq_len
+                            * model.hidden_size
+                            * ACT_BYTES_PER_LAYER_FACTOR
+                            * layers
+                            / tp;
+                        let have = node.gpu.mem_capacity;
+                        // distinguish the two overruns like the grid
+                        // arm: weights+optimizer alone (no microbatch
+                        // knob can help) vs weights + schedule
+                        // activations (GPipe, the layout's only
+                        // schedule)
+                        if weights > have {
+                            mem_reason = Some((
+                                None,
+                                PruneReason::MemoryExceeded {
+                                    need_gb: weights as f64 / 1e9,
+                                    have_gb: have as f64 / 1e9,
+                                },
+                            ));
+                            break 'mem;
+                        }
+                        if weights + act > have {
+                            mem_reason = Some((
+                                Some(ScheduleKind::GPipe),
+                                PruneReason::ActivationMemoryExceeded {
+                                    need_gb: (weights + act) as f64 / 1e9,
+                                    have_gb: have as f64 / 1e9,
+                                },
+                            ));
+                            break 'mem;
+                        }
+                    }
+                }
+            }
+            if let Some((schedule, reason)) = mem_reason {
+                pruned.push(PrunedCandidate {
+                    par,
+                    layout: layout.clone(),
+                    schedule,
+                    reason,
+                });
+                continue;
+            }
+
+            for ring in [RingPolicy::HeteroAware, RingPolicy::Naive] {
+                keep.push(PlanCandidate {
+                    par,
+                    layout: layout.clone(),
+                    partitioning,
+                    ring,
+                    schedule: ScheduleKind::GPipe,
+                });
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -255,18 +573,103 @@ mod tests {
         // acceptance floor for `hetsim plan` on this pair
         assert!(keep.len() >= 8, "only {} candidates", keep.len());
         assert!(!pruned.is_empty());
-        // every feasible factorization divides the world
+        // every feasible grid factorization divides the world
         for cand in &keep {
-            assert_eq!(cand.par.world_size(), c.total_gpus());
+            if cand.layout == TpLayout::Uniform {
+                assert_eq!(cand.par.world_size(), c.total_gpus());
+            }
         }
         // the uniform default plan is in the candidate set
         let def = crate::simulator::infer_parallelism(&m, &c).unwrap();
         assert!(keep.iter().any(|cand| {
             cand.par == def
+                && cand.layout == TpLayout::Uniform
                 && cand.partitioning == Partitioning::Uniform
                 && cand.ring == RingPolicy::HeteroAware
                 && cand.schedule == ScheduleKind::GPipe
         }));
+    }
+
+    #[test]
+    fn variable_layouts_enumerated_on_hetero_cluster() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let (keep, _) = enumerate(&m, &c, Some(2));
+        let var: Vec<_> =
+            keep.iter().filter(|cand| matches!(cand.layout, TpLayout::PerNode(_))).collect();
+        assert!(!var.is_empty(), "no variable-TP candidates");
+        // variable layouts run GPipe only, in both partitionings
+        assert!(var.iter().all(|cand| cand.schedule == ScheduleKind::GPipe));
+        assert!(var.iter().any(|cand| cand.partitioning == Partitioning::HeteroAware));
+        assert!(var.iter().any(|cand| cand.partitioning == Partitioning::Uniform));
+        // the per-arch assignment where both archs keep one TP group is
+        // skipped (it duplicates the tp=8, pp=1 grid)
+        assert!(var.iter().all(|cand| match &cand.layout {
+            TpLayout::PerNode(splits) => splits.iter().any(|s| s.len() > 1),
+            TpLayout::Uniform => unreachable!(),
+        }));
+    }
+
+    #[test]
+    fn fig3_layout_is_in_the_candidate_space() {
+        // Llama-2 70B with full Adam state cannot fit 8 GPUs, so the
+        // strict enumeration prunes *everything* on the Fig-3 cluster —
+        // with typed reasons, never silently...
+        let m = crate::workload::partition::fig3_model().unwrap();
+        let c = crate::workload::partition::fig3_cluster().unwrap();
+        let (keep, pruned) = enumerate(&m, &c, Some(2));
+        assert!(keep.is_empty(), "fig3 is memory-infeasible under full Adam state");
+        assert!(pruned.iter().all(|p| matches!(
+            p.reason,
+            PruneReason::MemoryExceeded { .. }
+                | PruneReason::ActivationMemoryExceeded { .. }
+                | PruneReason::CrossNodeTp { .. }
+        )));
+        // ...and the memory-relaxed fallback (what `search` uses) must
+        // contain the paper's Fig-3 layout ([3,1] on the H100 node, [4]
+        // on the A100 node)
+        let (keep, _) = enumerate_with_memory(&m, &c, Some(2), false);
+        let want = TpLayout::PerNode(vec![vec![3, 1], vec![4]]);
+        assert!(
+            keep.iter().any(|cand| cand.layout == want
+                && cand.partitioning == Partitioning::HeteroAware
+                && cand.schedule == ScheduleKind::GPipe),
+            "fig3 layout missing from {} candidates",
+            keep.len()
+        );
+    }
+
+    #[test]
+    fn variable_layouts_homogeneous_cluster_skipped() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster("hopper", 2).unwrap();
+        let (keep, _) = enumerate(&m, &c, Some(2));
+        assert!(keep.iter().all(|cand| cand.layout == TpLayout::Uniform));
+    }
+
+    #[test]
+    fn shallow_model_variable_layouts_pruned_with_typed_split_error() {
+        // 1 layer cannot cover a 2-stage intra-node pipeline: the
+        // two-stage layouts must fall with PruneReason::Unsplittable,
+        // not abort the search
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.num_layers = 1;
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let (keep, pruned) = enumerate(&m, &c, Some(2));
+        assert!(keep.iter().all(|cand| cand.layout == TpLayout::Uniform));
+        assert!(pruned
+            .iter()
+            .any(|p| matches!(p.reason, PruneReason::Unsplittable(_))));
+    }
+
+    #[test]
+    fn layout_tokens_compress_runs() {
+        assert_eq!(TpLayout::Uniform.token(), "grid");
+        assert_eq!(TpLayout::PerNode(vec![vec![3, 1], vec![4]]).token(), "var(3+1,4)");
+        assert_eq!(
+            TpLayout::PerNode(vec![vec![7, 1], vec![7, 1], vec![8]]).token(),
+            "var(2x7+1,8)"
+        );
     }
 
     #[test]
@@ -295,7 +698,10 @@ mod tests {
         let (keep, pruned) = enumerate(&m, &c, None);
         let act_pruned: Vec<_> = pruned
             .iter()
-            .filter(|p| matches!(p.reason, PruneReason::ActivationMemoryExceeded { .. }))
+            .filter(|p| {
+                p.layout == TpLayout::Uniform
+                    && matches!(p.reason, PruneReason::ActivationMemoryExceeded { .. })
+            })
             .collect();
         assert!(!act_pruned.is_empty(), "expected activation-memory prunes");
         for p in &act_pruned {

@@ -19,11 +19,28 @@
 //!   immutably across threads) and rank them deterministically by
 //!   predicted iteration time with a stable key tie-break, so the
 //!   ranking is byte-identical across runs and worker counts.
+//! * [`refine`] — simulator-in-the-loop coordinate descent
+//!   (`hetsim plan --refine`): polish the top-ranked plans by moving
+//!   layers off bottleneck stages and batch share off bottleneck
+//!   groups, accepting only strictly-improving moves scored by full
+//!   simulated iterations. The first subsystem where the simulator
+//!   optimizes its own inputs.
+//!
+//! On heterogeneous clusters the candidate space includes **variable
+//! per-group TP layouts** ([`candidates::TpLayout::PerNode`]): per-node
+//! pipelines whose TP degrees need not match (the paper's Fig-3
+//! TP=3/TP=1 vs TP=4 shape), validated against resharding feasibility
+//! and memory, and refined like any other start.
 
 pub mod candidates;
+pub mod refine;
 pub mod search;
 
 pub use candidates::{
-    enumerate, schedules_for, Partitioning, PlanCandidate, PruneReason, PrunedCandidate,
+    enumerate, node_splits, schedules_for, Partitioning, PlanCandidate, PruneReason,
+    PrunedCandidate, TpLayout,
 };
-pub use search::{search, EvaluatedPlan, PlanOptions, PlanSearchReport};
+pub use refine::{
+    apply_move, candidate_moves, refine, AppliedMove, Move, RefineOptions, RefinedPlan,
+};
+pub use search::{search, EvaluatedPlan, PlanOptions, PlanSearchReport, REFINE_STARTS};

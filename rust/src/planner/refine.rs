@@ -1,0 +1,439 @@
+//! Simulator-in-the-loop plan refinement: coordinate descent over
+//! layer assignments and batch shares, scored by full simulated
+//! iterations.
+//!
+//! The closed-form heuristics ([`crate::workload::partition::plan_hetero`],
+//! `plan_variable_tp`) split layers and batch proportionally to peak
+//! compute power — they cannot see pipeline bubbles, collective
+//! contention or resharding cost. The refiner can, because its
+//! objective *is* the simulator: starting from a materialized plan it
+//! repeatedly
+//!
+//! 1. enumerates every candidate move ([`candidate_moves`]) in a fixed
+//!    order — shifting 1/2/4/8 layers between adjacent pipeline stages
+//!    of each group, and shifting 1/2/4 microbatch-quanta of batch
+//!    share between adjacent groups (either direction);
+//! 2. simulates every resulting plan concurrently (the same scoped
+//!    worker-pool substrate that backs
+//!    [`crate::simulator::Simulation::run_iterations_concurrent`] and
+//!    the planner sweep);
+//! 3. accepts the move with the strictly smallest simulated iteration
+//!    time (ties broken by the fixed enumeration order) and repeats
+//!    until no move improves or the step budget is exhausted.
+//!
+//! **Determinism.** Each simulation is deterministic; moves are
+//! enumerated in a fixed order; results come back in enumeration order
+//! regardless of worker count ([`crate::util::par::parallel_map`]'s
+//! contract); acceptance requires a *strict* improvement in integer
+//! picoseconds with a first-index tie-break. Hence the refinement
+//! trajectory — and the rendered report — is byte-identical across
+//! runs and thread counts, and the strictly-decreasing objective
+//! guarantees termination. `tests/integration_planner.rs` enforces
+//! this across 1/4/8 workers.
+//!
+//! This is the first place the simulator optimizes its own inputs —
+//! the capability the paper positions as the point of building a
+//! heterogeneity-aware simulator ("an LLM training deployer can draw
+//! inferences from our simulator and plan an optimal deployment").
+
+use crate::config::cluster::ClusterSpec;
+use crate::config::framework::FrameworkSpec;
+use crate::config::model::ModelSpec;
+use crate::simulator::SimulationBuilder;
+use crate::system::collective::RingPolicy;
+use crate::util::par::parallel_map;
+use crate::util::units::Time;
+use crate::workload::aicb::WorkloadOptions;
+
+/// One coordinate-descent move over a [`FrameworkSpec`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Move {
+    /// Move `layers` transformer blocks from `from_stage` to the
+    /// adjacent `to_stage` of device group `group` (conserves the
+    /// group's layer total; every stage keeps ≥ 1 layer).
+    Layers {
+        /// Device-group id the stages belong to.
+        group: u32,
+        /// Donor stage index.
+        from_stage: u32,
+        /// Recipient stage index (`from_stage ± 1`).
+        to_stage: u32,
+        /// Blocks to move.
+        layers: u32,
+    },
+    /// Move `samples` of batch share from `from_group` to `to_group`
+    /// (conserves the global batch; every group keeps ≥ 1 sample).
+    Batch {
+        /// Donor device-group id.
+        from_group: u32,
+        /// Recipient device-group id.
+        to_group: u32,
+        /// Samples to move (multiples of the donor's microbatch size).
+        samples: u64,
+    },
+}
+
+impl Move {
+    /// Compact human-readable form used in the refinement trajectory
+    /// (`layers g0 s0->s1 x2`, `batch g1->g0 x8`).
+    pub fn describe(&self) -> String {
+        match self {
+            Move::Layers { group, from_stage, to_stage, layers } => {
+                format!("layers g{group} s{from_stage}->s{to_stage} x{layers}")
+            }
+            Move::Batch { from_group, to_group, samples } => {
+                format!("batch g{from_group}->g{to_group} x{samples}")
+            }
+        }
+    }
+}
+
+/// Enumerate every candidate move of `spec` in a fixed deterministic
+/// order: layer shifts first (by group, then adjacent stage pair, then
+/// direction, then step size 1/2/4/8), batch shifts second (by adjacent
+/// group pair, then direction, then quantum 1×/2×/4× the donor's
+/// microbatch size). Batch moves between *adjacent* groups span every
+/// redistribution (any transfer decomposes into adjacent hops) while
+/// keeping the move count linear in the group count — the all-pairs
+/// alternative is quadratic and swamps high-DP plans. Only moves whose
+/// donor keeps its floor (1 layer / 1 sample) are emitted; validation
+/// against the model/cluster happens at apply time.
+pub fn candidate_moves(spec: &FrameworkSpec) -> Vec<Move> {
+    const LAYER_STEPS: [u32; 4] = [1, 2, 4, 8];
+    const BATCH_MULTIPLIERS: [u64; 3] = [1, 2, 4];
+    let mut moves = Vec::new();
+    for g in &spec.groups {
+        for s in 0..g.stages.len().saturating_sub(1) {
+            let (a, b) = (s as u32, s as u32 + 1);
+            for (from, to) in [(a, b), (b, a)] {
+                let avail = g.stages[from as usize].num_layers;
+                for step in LAYER_STEPS {
+                    if avail > step {
+                        moves.push(Move::Layers {
+                            group: g.id,
+                            from_stage: from,
+                            to_stage: to,
+                            layers: step,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    for pair in spec.groups.windows(2) {
+        for (from, to) in [(&pair[0], &pair[1]), (&pair[1], &pair[0])] {
+            for mult in BATCH_MULTIPLIERS {
+                let samples = from.micro_batch.max(1) * mult;
+                if from.batch_share > samples {
+                    moves.push(Move::Batch {
+                        from_group: from.id,
+                        to_group: to.id,
+                        samples,
+                    });
+                }
+            }
+        }
+    }
+    moves
+}
+
+/// Apply a move to a spec, returning the modified copy, or `None` when
+/// the move is out of range for this spec (unknown group/stage, donor
+/// at its floor) — [`candidate_moves`] never emits those for the spec
+/// it was called on, but `apply_move` stays total for property tests.
+pub fn apply_move(spec: &FrameworkSpec, mv: &Move) -> Option<FrameworkSpec> {
+    let mut out = spec.clone();
+    match *mv {
+        Move::Layers { group, from_stage, to_stage, layers } => {
+            let g = out.groups.iter_mut().find(|g| g.id == group)?;
+            let n = g.stages.len() as u32;
+            if from_stage >= n || to_stage >= n || from_stage == to_stage {
+                return None;
+            }
+            if g.stages[from_stage as usize].num_layers <= layers {
+                return None;
+            }
+            g.stages[from_stage as usize].num_layers -= layers;
+            g.stages[to_stage as usize].num_layers += layers;
+        }
+        Move::Batch { from_group, to_group, samples } => {
+            if from_group == to_group {
+                return None;
+            }
+            let from = out.groups.iter().position(|g| g.id == from_group)?;
+            let to = out.groups.iter().position(|g| g.id == to_group)?;
+            if out.groups[from].batch_share <= samples {
+                return None;
+            }
+            out.groups[from].batch_share -= samples;
+            out.groups[to].batch_share += samples;
+        }
+    }
+    Some(out)
+}
+
+/// Refinement knobs.
+#[derive(Debug, Clone)]
+pub struct RefineOptions {
+    /// Accepted-move budget (each accepted move costs one round of
+    /// concurrent candidate evaluations).
+    pub max_steps: u64,
+    /// Worker threads for move evaluation (0 = one per available core).
+    pub threads: usize,
+    /// Microbatch cap per device group during evaluation, mirroring
+    /// [`crate::planner::PlanOptions::microbatch_limit`]. **A cap hides
+    /// batch-share moves**: it truncates every group to the same
+    /// simulated microbatch count, so only `None` (full batch) lets
+    /// the refiner see batch redistribution — use the cap for fast
+    /// layer-split-only polish, `--mb-limit 0` for the full Fig-3
+    /// rediscovery.
+    pub microbatch_limit: Option<u64>,
+}
+
+impl Default for RefineOptions {
+    fn default() -> Self {
+        RefineOptions { max_steps: 64, threads: 0, microbatch_limit: Some(2) }
+    }
+}
+
+/// One accepted move and the simulated iteration time after it.
+#[derive(Debug, Clone)]
+pub struct AppliedMove {
+    /// The accepted move.
+    pub mv: Move,
+    /// Simulated iteration time of the plan after applying it.
+    pub time: Time,
+}
+
+/// The refinement result: the polished spec plus its full trajectory.
+#[derive(Debug, Clone)]
+pub struct RefinedPlan {
+    /// The refined framework spec (the starting spec if no move
+    /// improved it).
+    pub spec: FrameworkSpec,
+    /// Simulated iteration time of the starting spec.
+    pub initial_time: Time,
+    /// Simulated iteration time of the refined spec (≤ `initial_time`
+    /// by construction — moves are only accepted on strict
+    /// improvement).
+    pub refined_time: Time,
+    /// Accepted moves, in order.
+    pub moves: Vec<AppliedMove>,
+    /// Total candidate simulations run (the refinement's cost).
+    pub evaluations: u64,
+}
+
+impl RefinedPlan {
+    /// `initial_time / refined_time` (≥ 1.0).
+    pub fn improvement(&self) -> f64 {
+        self.initial_time.as_secs() / self.refined_time.as_secs().max(f64::MIN_POSITIVE)
+    }
+
+    /// Render the deterministic refinement trajectory: start time,
+    /// every accepted move, the final plan shape.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "refinement: {} moves accepted over {} evaluations\n  start    = {}\n",
+            self.moves.len(),
+            self.evaluations,
+            self.initial_time.human(),
+        );
+        for (i, m) in self.moves.iter().enumerate() {
+            s.push_str(&format!(
+                "  move {:>3}: {} = {}\n",
+                i + 1,
+                m.mv.describe(),
+                m.time.human()
+            ));
+        }
+        s.push_str(&format!(
+            "  refined  = {} ({:.2}x vs start)\n  plan: {}\n",
+            self.refined_time.human(),
+            self.improvement(),
+            self.spec.summary(),
+        ));
+        s
+    }
+}
+
+/// Simulate one spec under the refiner's evaluation conditions and
+/// return its iteration time.
+fn simulate(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    spec: &FrameworkSpec,
+    ring: RingPolicy,
+    opts: &RefineOptions,
+) -> anyhow::Result<Time> {
+    let sim = SimulationBuilder::new(model.clone(), cluster.clone())
+        .parallelism(spec.base)
+        .framework(spec.clone())
+        .ring_policy(ring)
+        .workload_options(WorkloadOptions {
+            microbatch_limit: opts.microbatch_limit,
+            ..Default::default()
+        })
+        .build()?;
+    Ok(sim.run_iteration()?.iteration_time)
+}
+
+/// Coordinate-descent refinement of `start` (see the module docs for
+/// the algorithm and determinism argument). Moves that fail validation
+/// or simulation are treated as non-improving and skipped — both
+/// outcomes are themselves deterministic.
+///
+/// `start_time` seeds the starting iteration time when the caller
+/// already simulated `start` under the same (ring, microbatch-limit)
+/// conditions — the search's ranked candidates have — saving one full
+/// simulation per refinement start; pass `None` to measure it here.
+pub fn refine(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    start: &FrameworkSpec,
+    ring: RingPolicy,
+    start_time: Option<Time>,
+    opts: &RefineOptions,
+) -> anyhow::Result<RefinedPlan> {
+    let mut spec = start.clone();
+    let mut evaluations: u64 = 0;
+    let mut best_time = match start_time {
+        Some(t) => t,
+        None => {
+            evaluations += 1;
+            simulate(model, cluster, &spec, ring, opts)?
+        }
+    };
+    let initial_time = best_time;
+    let mut moves: Vec<AppliedMove> = Vec::new();
+    while (moves.len() as u64) < opts.max_steps {
+        let mut candidates: Vec<(Move, FrameworkSpec)> = candidate_moves(&spec)
+            .into_iter()
+            .filter_map(|mv| apply_move(&spec, &mv).map(|s| (mv, s)))
+            .filter(|(_, s)| s.validate(model, cluster).is_ok())
+            .collect();
+        if candidates.is_empty() {
+            break;
+        }
+        let times: Vec<Option<Time>> = parallel_map(candidates.len(), opts.threads, |i| {
+            simulate(model, cluster, &candidates[i].1, ring, opts).ok()
+        });
+        evaluations += candidates.len() as u64;
+        // best strictly-improving move; ties break to the smallest
+        // enumeration index (strict `<` below keeps the first)
+        let mut best: Option<(usize, Time)> = None;
+        for (i, t) in times.iter().enumerate() {
+            if let Some(t) = t {
+                let improves_best = match best {
+                    None => true,
+                    Some((_, bt)) => *t < bt,
+                };
+                if *t < best_time && improves_best {
+                    best = Some((i, *t));
+                }
+            }
+        }
+        let Some((idx, time)) = best else { break };
+        let (mv, next) = candidates.swap_remove(idx);
+        spec = next;
+        best_time = time;
+        moves.push(AppliedMove { mv, time });
+    }
+    Ok(RefinedPlan { spec, initial_time, refined_time: best_time, moves, evaluations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::framework::ParallelismSpec;
+    use crate::config::presets;
+    use crate::workload::partition::{fig3_cluster, fig3_model, plan_variable_tp};
+
+    fn fig3_start() -> (ModelSpec, ClusterSpec, FrameworkSpec) {
+        let m = fig3_model().unwrap();
+        let c = fig3_cluster().unwrap();
+        let f = plan_variable_tp(&m, &c, &[vec![3, 1], vec![4]], true).unwrap();
+        (m, c, f)
+    }
+
+    #[test]
+    fn moves_enumerate_in_fixed_order_and_conserve() {
+        let (m, c, f) = fig3_start();
+        let moves = candidate_moves(&f);
+        assert!(!moves.is_empty());
+        // same spec → same move list
+        assert_eq!(moves, candidate_moves(&f));
+        let layers: u32 = f.groups[0].stages.iter().map(|s| s.num_layers).sum();
+        let batch: u64 = f.groups.iter().map(|g| g.batch_share).sum();
+        for mv in &moves {
+            let next = apply_move(&f, mv).expect("emitted moves apply");
+            next.validate(&m, &c).unwrap_or_else(|e| panic!("{}: {e}", mv.describe()));
+            assert_eq!(
+                next.groups[0].stages.iter().map(|s| s.num_layers).sum::<u32>(),
+                layers,
+                "{}",
+                mv.describe()
+            );
+            assert_eq!(
+                next.groups.iter().map(|g| g.batch_share).sum::<u64>(),
+                batch,
+                "{}",
+                mv.describe()
+            );
+        }
+    }
+
+    #[test]
+    fn apply_move_rejects_floor_violations() {
+        let (_, _, f) = fig3_start();
+        // group 1 has a single stage: no layer moves exist for it
+        assert!(apply_move(
+            &f,
+            &Move::Layers { group: 1, from_stage: 0, to_stage: 1, layers: 1 }
+        )
+        .is_none());
+        // draining a group below 1 sample is rejected
+        let share = f.groups[1].batch_share;
+        assert!(apply_move(
+            &f,
+            &Move::Batch { from_group: 1, to_group: 0, samples: share }
+        )
+        .is_none());
+        assert!(
+            apply_move(&f, &Move::Batch { from_group: 0, to_group: 0, samples: 1 }).is_none()
+        );
+    }
+
+    #[test]
+    fn refine_never_regresses_and_is_deterministic() {
+        let (m, c, f) = fig3_start();
+        let opts =
+            RefineOptions { max_steps: 4, threads: 2, microbatch_limit: Some(1) };
+        let a = refine(&m, &c, &f, RingPolicy::HeteroAware, None, &opts).unwrap();
+        assert!(a.refined_time <= a.initial_time);
+        // every accepted move strictly improves on the previous time
+        let mut last = a.initial_time;
+        for m in &a.moves {
+            assert!(m.time < last, "{} did not improve", m.mv.describe());
+            last = m.time;
+        }
+        let b = refine(&m, &c, &f, RingPolicy::HeteroAware, None, &opts).unwrap();
+        assert_eq!(a.render(), b.render());
+    }
+
+    #[test]
+    fn refine_on_balanced_homogeneous_plan_terminates() {
+        // a uniform plan on a homogeneous cluster is already balanced;
+        // the refiner must stop quickly rather than wander
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.num_layers = 4;
+        m.global_batch = 16;
+        m.micro_batch = 8;
+        let c = presets::cluster("hopper", 1).unwrap();
+        let f =
+            FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 4, pp: 1, dp: 2 }).unwrap();
+        let opts =
+            RefineOptions { max_steps: 8, threads: 2, microbatch_limit: Some(1) };
+        let r = refine(&m, &c, &f, RingPolicy::HeteroAware, None, &opts).unwrap();
+        assert!(r.refined_time <= r.initial_time);
+    }
+}

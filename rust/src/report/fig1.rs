@@ -14,16 +14,24 @@ const GENERATIONS: &[(&str, &str, f64)] = &[
     ("B200", "blackwell", 2024.0),
 ];
 
+/// One hardware generation's headline numbers.
 #[derive(Debug, Clone)]
 pub struct Fig1Row {
+    /// GPU model name.
     pub gpu: &'static str,
+    /// Launch year used for the growth-rate fit.
     pub year: f64,
+    /// Peak dense bf16 TFLOPS.
     pub tflops: f64,
+    /// HBM bandwidth, GB/s.
     pub mem_bw_gbs: f64,
+    /// Aggregate NVLink bandwidth, Gbps.
     pub nvlink_gbps: f64,
+    /// NIC line rate, Gbps.
     pub nic_gbps: f64,
 }
 
+/// Collect the per-generation rows from the presets.
 pub fn compute() -> anyhow::Result<Vec<Fig1Row>> {
     let mut rows = Vec::new();
     for (gpu, arch, year) in GENERATIONS {
@@ -48,6 +56,7 @@ pub fn cagr(first: (f64, f64), last: (f64, f64)) -> f64 {
     (v1 / v0).powf(1.0 / (y1 - y0))
 }
 
+/// Render the rows as the Fig-1 table.
 pub fn render(rows: &[Fig1Row]) -> Table {
     let mut t = Table::new(
         "Figure 1 — evolution of AI cluster hardware (per generation preset)",

@@ -14,12 +14,18 @@ use crate::config::model::LayerKind;
 use crate::config::presets;
 use crate::util::table::{fmt_sig, Table};
 
+/// Per-layer compute time of one model on H100 vs A100.
 #[derive(Debug, Clone)]
 pub struct Fig5Row {
+    /// Model display name.
     pub model: String,
+    /// Layer kind label.
     pub layer: &'static str,
+    /// One fwd+bwd pass on H100, milliseconds.
     pub h100_ms: f64,
+    /// One fwd+bwd pass on A100, milliseconds.
     pub a100_ms: f64,
+    /// A100 / H100 slowdown ratio.
     pub degradation: f64,
 }
 
@@ -75,6 +81,7 @@ pub fn compute(table: &mut CostTable) -> anyhow::Result<Vec<Fig5Row>> {
     Ok(rows)
 }
 
+/// Render the rows as the Fig-5 table.
 pub fn render(rows: &[Fig5Row]) -> Table {
     let mut t = Table::new(
         "Figure 5 — per-layer compute time, one fwd+bwd pass (paper deployment)",

@@ -19,14 +19,19 @@ use crate::util::stats::Samples;
 use crate::util::table::{fmt_sig, Table};
 use crate::workload::aicb::WorkloadOptions;
 
+/// The three Fig-6 cluster configurations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ClusterKind {
+    /// All-Ampere interconnect.
     Ampere,
+    /// All-Hopper interconnect.
     Hopper,
+    /// Half Ampere, half Hopper interconnect.
     Hetero5050,
 }
 
 impl ClusterKind {
+    /// Display name used in the rendered table.
     pub fn name(self) -> &'static str {
         match self {
             ClusterKind::Ampere => "Ampere",
@@ -36,15 +41,24 @@ impl ClusterKind {
     }
 }
 
+/// FCT distribution of one (model, cluster) configuration.
 #[derive(Debug)]
 pub struct Fig6Cell {
+    /// Model display name.
     pub model: String,
+    /// Cluster configuration.
     pub cluster: ClusterKind,
+    /// Median FCT, microseconds.
     pub p50_us: f64,
+    /// 99th-percentile FCT, microseconds.
     pub p99_us: f64,
+    /// 99.9th-percentile FCT, microseconds.
     pub p999_us: f64,
+    /// Maximum FCT, microseconds.
     pub max_us: f64,
+    /// Flow-sample count.
     pub flows: usize,
+    /// (FCT microseconds, survival probability) CCDF points.
     pub ccdf: Vec<(f64, f64)>,
 }
 
@@ -110,6 +124,7 @@ pub fn compute(
     Ok(cells)
 }
 
+/// Render the cells as the Fig-6 summary table.
 pub fn render(cells: &[Fig6Cell]) -> Table {
     let mut t = Table::new(
         "Figure 6 — FCT distribution of collective flows (one iteration)",

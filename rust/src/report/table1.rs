@@ -17,12 +17,18 @@ use crate::util::units::ByteSize;
 use crate::workload::aicb::{generate, WorkloadOptions};
 use crate::workload::op::{Op, Workload};
 
+/// Exposed-communication characteristics of one parallelism dimension.
 #[derive(Debug, Clone)]
 pub struct Table1Row {
+    /// Parallelism dimension label (DP / TP / PP).
     pub kind: &'static str,
+    /// Whether its communication is exposed in the forward pass.
     pub exposed_fwd: bool,
+    /// Whether its communication is exposed in the backward pass.
     pub exposed_bwd: bool,
+    /// Collectives the observed rank joins per iteration.
     pub freq_per_iter: usize,
+    /// Mean payload bytes per collective.
     pub avg_bytes: u64,
 }
 
@@ -83,6 +89,7 @@ pub fn compute() -> anyhow::Result<Vec<Table1Row>> {
     analyze(&w, 0)
 }
 
+/// Render the rows in the paper's Table-1 layout.
 pub fn render(rows: &[Table1Row]) -> Table {
     let mut t = Table::new(
         "Table 1 — exposed communication of LLM parallelism (Llama-2 70B, 2048 GPUs, TP8/PP8/DP32)",

@@ -22,10 +22,15 @@ use crate::network::flow::FlowSpec;
 /// Collective algorithms (codes mirror `python/compile/kernels/collective.py`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CollectiveAlgo {
+    /// Ring allreduce (reduce-scatter + allgather phases).
     AllReduceRing,
+    /// Ring allgather.
     AllGather,
+    /// Ring reduce-scatter.
     ReduceScatter,
+    /// Pairwise-exchange all-to-all.
     AllToAll,
+    /// Binomial-tree broadcast from the first rank.
     Broadcast,
     /// Hierarchical allreduce: intra-node RS, per-rail inter-node
     /// allreduce, intra-node AG (NCCL-style for rail topologies).
@@ -33,6 +38,7 @@ pub enum CollectiveAlgo {
 }
 
 impl CollectiveAlgo {
+    /// Numeric code used in the AOT cost-model feature rows.
     pub fn code(self) -> f32 {
         match self {
             CollectiveAlgo::AllReduceRing | CollectiveAlgo::AllReduceHierarchical => 0.0,
@@ -43,6 +49,7 @@ impl CollectiveAlgo {
         }
     }
 
+    /// Lower-case display name.
     pub fn name(self) -> &'static str {
         match self {
             CollectiveAlgo::AllReduceRing => "allreduce",
@@ -58,14 +65,20 @@ impl CollectiveAlgo {
 /// Which parallelism dimension a collective belongs to (Fig-6 labels).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CommKind {
+    /// Tensor-parallel activation allreduces.
     Tp,
+    /// Data-parallel gradient synchronization.
     Dp,
+    /// Pipeline stage-boundary transfers.
     Pp,
+    /// Expert-parallel (MoE) all-to-alls.
     Ep,
+    /// Resharding traffic (component C2).
     Reshard,
 }
 
 impl CommKind {
+    /// Upper-case label used in FCT report keys.
     pub fn name(self) -> &'static str {
         match self {
             CommKind::Tp => "TP",
@@ -80,14 +93,18 @@ impl CommKind {
 /// A collective operation over a device group.
 #[derive(Debug, Clone)]
 pub struct CollectiveDef {
+    /// Workload-unique collective id (doubles as the flow tag).
     pub id: u64,
+    /// Algorithm to expand into flow steps.
     pub algo: CollectiveAlgo,
     /// Participating global ranks (logical order as given; ring order is
     /// recomputed by graph generation).
     pub ranks: Vec<u32>,
     /// Payload bytes contributed per rank.
     pub bytes_per_rank: u64,
+    /// Parallelism dimension this collective belongs to.
     pub kind: CommKind,
+    /// Human-readable label (`tp-ar-g0s1mb2-attn-f` style).
     pub label: String,
 }
 
@@ -127,8 +144,11 @@ pub fn ring_order(cluster: &ClusterSpec, ranks: &[u32], policy: RingPolicy) -> V
 /// flows that must all complete before the next step starts.
 #[derive(Debug, Clone)]
 pub struct CollectiveExec {
+    /// Id of the [`CollectiveDef`] this plan expands.
     pub def_id: u64,
+    /// The flow batches, one per blocking step.
     pub steps: Vec<Vec<FlowSpec>>,
+    /// Index of the step currently executing.
     pub current: usize,
     /// Flows outstanding in the current step.
     pub outstanding: usize,
@@ -213,6 +233,7 @@ impl CollectiveExec {
         self.steps.iter().flatten().map(|f| f.bytes).sum()
     }
 
+    /// True once every step has executed.
     pub fn is_done(&self) -> bool {
         self.current >= self.steps.len()
     }

@@ -10,27 +10,38 @@ use crate::config::framework::FrameworkSpec;
 /// degrees differ, the per-group participants that must reshard first.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DpSyncGroup {
+    /// Pipeline-stage index the group synchronizes.
     pub stage: u32,
     /// (device-group id, ranks of that group participating, tp degree,
     /// batch share) per participant.
     pub participants: Vec<DpParticipant>,
 }
 
+/// One device group's contribution to a DP sync group.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DpParticipant {
+    /// Device-group id.
     pub group: u32,
+    /// The group's ranks at this stage (its TP group).
     pub ranks: Vec<u32>,
+    /// TP degree of that stage.
     pub tp: u32,
+    /// Samples of the global batch the group trains per iteration.
     pub batch_share: u64,
+    /// Microbatch size the group runs.
     pub micro_batch: u64,
 }
 
 /// A pipeline edge between consecutive stages of one device group.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PpEdge {
+    /// Device-group id.
     pub group: u32,
+    /// Producing stage index (`from_stage + 1` consumes).
     pub from_stage: u32,
+    /// Ranks of the producing stage.
     pub from_ranks: Vec<u32>,
+    /// Ranks of the consuming stage.
     pub to_ranks: Vec<u32>,
 }
 
@@ -39,11 +50,14 @@ pub struct PpEdge {
 pub struct DeviceGroups {
     /// TP groups: (device-group id, stage index, ranks).
     pub tp_groups: Vec<(u32, u32, Vec<u32>)>,
+    /// DP sync groups, one per stage index with > 1 participant.
     pub dp_sync: Vec<DpSyncGroup>,
+    /// Stage-boundary edges of every group's pipeline.
     pub pp_edges: Vec<PpEdge>,
 }
 
 impl DeviceGroups {
+    /// Derive the runtime views from a validated framework spec.
     pub fn derive(fw: &FrameworkSpec) -> DeviceGroups {
         let mut tp_groups = Vec::new();
         let mut pp_edges = Vec::new();

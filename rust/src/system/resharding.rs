@@ -39,6 +39,8 @@ pub struct ReshardPlan {
 }
 
 impl ReshardPlan {
+    /// All collectives of the plan in execution order (pre → sync →
+    /// post).
     pub fn all_defs(&self) -> Vec<&CollectiveDef> {
         self.pre.iter().chain(std::iter::once(&self.sync)).chain(self.post.iter()).collect()
     }

@@ -41,7 +41,12 @@ pub const MSG_TAG_BASE: u64 = 1 << 62;
 /// Engine event payload.
 #[derive(Debug, Clone, Copy)]
 pub enum SimEvent {
-    ComputeDone { rank: u32 },
+    /// A rank finished its current compute op.
+    ComputeDone {
+        /// The finishing global rank.
+        rank: u32,
+    },
+    /// A network flow delivered its last byte.
     FlowDone(FlowId),
 }
 
@@ -80,15 +85,21 @@ impl Default for MsgSlot {
 /// Result of one simulated iteration.
 #[derive(Debug)]
 pub struct SchedulerReport {
+    /// Simulated wall-clock time of the iteration.
     pub iteration_time: Time,
     /// FCT samples (seconds) per communication kind — the Fig-6 data.
     pub fct_by_kind: HashMap<&'static str, Samples>,
     /// All FCTs pooled.
     pub fct_all: Samples,
+    /// Network flows completed during the iteration.
     pub flows_completed: usize,
+    /// Discrete events the engine processed.
     pub events_processed: u64,
+    /// Summed per-rank compute busy time (trace-derived).
     pub compute_busy: Time,
+    /// Summed collective busy time (trace-derived).
     pub comm_busy: Time,
+    /// Per-rank busy-interval trace (empty unless `record_trace`).
     pub trace: TraceRecorder,
 }
 
@@ -109,10 +120,13 @@ pub struct Scheduler<'a> {
     cluster: &'a ClusterSpec,
     topology: Arc<Topology>,
     ring_policy: RingPolicy,
+    /// Record the per-rank busy-interval trace during the run.
     pub record_trace: bool,
 }
 
 impl<'a> Scheduler<'a> {
+    /// Build a lazily-compiling scheduler over raw workload inputs
+    /// (compilation happens inside [`Scheduler::run`]).
     pub fn new(
         workload: &'a Workload,
         cluster: &'a ClusterSpec,

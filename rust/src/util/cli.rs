@@ -7,9 +7,13 @@ use std::collections::BTreeMap;
 /// Parsed arguments for one (sub)command invocation.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// First bare token (e.g. `simulate`).
     pub subcommand: Option<String>,
+    /// Bare tokens after the subcommand.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -39,22 +43,27 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (skipping the program name).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// True when `--name` was given as a bare flag.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name`, if given.
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(String::as_str)
     }
 
+    /// The value of `--name`, or a default.
     pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.opt(name).unwrap_or(default)
     }
 
+    /// `--name` parsed as an unsigned integer, or a default.
     pub fn opt_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
         match self.opt(name) {
             None => Ok(default),
@@ -64,6 +73,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as a float, or a default.
     pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.opt(name) {
             None => Ok(default),
@@ -86,12 +96,16 @@ impl Args {
 
 /// Declarative usage text builder.
 pub struct Usage {
+    /// Binary name.
     pub program: &'static str,
+    /// One-line description.
     pub about: &'static str,
+    /// `(command, help)` pairs.
     pub commands: Vec<(&'static str, &'static str)>,
 }
 
 impl Usage {
+    /// Render the usage text.
     pub fn render(&self) -> String {
         let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n",
             self.program, self.about, self.program);

@@ -11,26 +11,36 @@ use std::fmt;
 /// A JSON value. Objects preserve insertion order via a Vec of pairs.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (always an `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, as insertion-ordered key/value pairs.
     Obj(Vec<(String, Json)>),
 }
 
 /// Parse/access error.
 #[derive(Debug, thiserror::Error)]
 pub enum JsonError {
+    /// Malformed input, with the byte offset of the problem.
     #[error("json parse error at byte {0}: {1}")]
     Parse(usize, String),
+    /// A required object key was absent.
     #[error("missing key: {0}")]
     MissingKey(String),
+    /// A key held a value of the wrong type.
     #[error("type mismatch at {0}: expected {1}")]
     Type(String, &'static str),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -42,33 +52,39 @@ impl Json {
         Ok(v)
     }
 
+    /// The number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The number as a non-negative integer, if it is one exactly.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64)
     }
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// Object field lookup (None for non-objects/missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -80,21 +96,27 @@ impl Json {
     pub fn req(&self, key: &str) -> Result<&Json, JsonError> {
         self.get(key).ok_or_else(|| JsonError::MissingKey(key.into()))
     }
+    /// Required number field.
     pub fn req_f64(&self, key: &str) -> Result<f64, JsonError> {
         self.req(key)?.as_f64().ok_or(JsonError::Type(key.into(), "number"))
     }
+    /// Required unsigned-integer field.
     pub fn req_u64(&self, key: &str) -> Result<u64, JsonError> {
         self.req(key)?.as_u64().ok_or(JsonError::Type(key.into(), "unsigned int"))
     }
+    /// Required string field.
     pub fn req_str(&self, key: &str) -> Result<&str, JsonError> {
         self.req(key)?.as_str().ok_or(JsonError::Type(key.into(), "string"))
     }
+    /// Optional number field with a default.
     pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(Json::as_f64).unwrap_or(default)
     }
+    /// Optional unsigned-integer field with a default.
     pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(Json::as_u64).unwrap_or(default)
     }
+    /// Optional string field with a default.
     pub fn opt_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).and_then(Json::as_str).unwrap_or(default)
     }

@@ -4,12 +4,18 @@
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 
+/// Log severity, most severe first.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Suspicious-but-survivable conditions (the default threshold).
     Warn = 1,
+    /// Progress messages.
     Info = 2,
+    /// Developer diagnostics.
     Debug = 3,
+    /// Per-event firehose.
     Trace = 4,
 }
 
@@ -23,6 +29,7 @@ impl Level {
             _ => Level::Warn,
         }
     }
+    /// Upper-case display name.
     pub fn name(self) -> &'static str {
         match self {
             Level::Error => "ERROR",
@@ -57,16 +64,20 @@ pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Whether messages at `level` currently pass the threshold.
 pub fn enabled(level: Level) -> bool {
     level <= current_level()
 }
 
+/// Emit one message to stderr if `level` passes the threshold (the
+/// `log_*!` macros call this).
 pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if enabled(level) {
         eprintln!("[{:5}] {}: {}", level.name(), module, msg);
     }
 }
 
+/// Log at [`Level::Info`] with `format!`-style arguments.
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => {
@@ -74,6 +85,7 @@ macro_rules! log_info {
     };
 }
 
+/// Log at [`Level::Warn`] with `format!`-style arguments.
 #[macro_export]
 macro_rules! log_warn {
     ($($arg:tt)*) => {
@@ -81,6 +93,7 @@ macro_rules! log_warn {
     };
 }
 
+/// Log at [`Level::Debug`] with `format!`-style arguments.
 #[macro_export]
 macro_rules! log_debug {
     ($($arg:tt)*) => {

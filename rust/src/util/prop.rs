@@ -13,7 +13,9 @@ use super::rng::Rng;
 /// Generation context handed to properties: a seeded RNG plus a size
 /// hint in [1, max_size] that scales generated structures.
 pub struct Gen {
+    /// The case's deterministic RNG.
     pub rng: Rng,
+    /// Size hint scaling generated structures.
     pub size: usize,
 }
 
@@ -33,8 +35,11 @@ impl Gen {
 
 /// Configuration for a property run.
 pub struct Config {
+    /// Generated cases per property.
     pub cases: usize,
+    /// Largest size hint (cases ramp linearly up to it).
     pub max_size: usize,
+    /// Base seed; each case derives its own from it.
     pub seed: u64,
 }
 
@@ -47,9 +52,13 @@ impl Default for Config {
 /// Result of a failed case, used in the panic message.
 #[derive(Debug)]
 pub struct Failure {
+    /// Failing case index.
     pub case: usize,
+    /// The case's derived seed (for reproduction).
     pub seed: u64,
+    /// Smallest failing size hint found by shrinking.
     pub size: usize,
+    /// The property's failure message.
     pub message: String,
 }
 

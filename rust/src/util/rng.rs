@@ -20,6 +20,7 @@ fn splitmix64(x: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed a generator (SplitMix64-expanded).
     pub fn new(seed: u64) -> Self {
         let mut s = seed;
         let state = splitmix64(&mut s);
@@ -35,6 +36,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next uniform 32-bit value.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -43,6 +45,7 @@ impl Rng {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next uniform 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }
@@ -71,6 +74,7 @@ impl Rng {
         lo + (m >> 64) as u64
     }
 
+    /// Uniform integer in [lo, hi) — hi must exceed lo.
     pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
         self.range_u64(lo as u64, hi as u64) as usize
     }

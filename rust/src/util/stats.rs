@@ -9,28 +9,34 @@ pub struct Samples {
 }
 
 impl Samples {
+    /// An empty sample set.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// An empty sample set with pre-reserved capacity.
     pub fn with_capacity(n: usize) -> Self {
         Samples { data: Vec::with_capacity(n), sorted: false }
     }
 
+    /// Add one sample.
     pub fn push(&mut self, x: f64) {
         self.data.push(x);
         self.sorted = false;
     }
 
+    /// Add many samples.
     pub fn extend(&mut self, xs: impl IntoIterator<Item = f64>) {
         self.data.extend(xs);
         self.sorted = false;
     }
 
+    /// Sample count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when no samples were pushed.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -42,6 +48,7 @@ impl Samples {
         }
     }
 
+    /// Arithmetic mean (0 for an empty set).
     pub fn mean(&self) -> f64 {
         if self.data.is_empty() {
             return 0.0;
@@ -49,16 +56,19 @@ impl Samples {
         self.data.iter().sum::<f64>() / self.data.len() as f64
     }
 
+    /// Smallest sample (0 for an empty set).
     pub fn min(&mut self) -> f64 {
         self.ensure_sorted();
         self.data.first().copied().unwrap_or(0.0)
     }
 
+    /// Largest sample (0 for an empty set).
     pub fn max(&mut self) -> f64 {
         self.ensure_sorted();
         self.data.last().copied().unwrap_or(0.0)
     }
 
+    /// Sum of all samples.
     pub fn sum(&self) -> f64 {
         self.data.iter().sum()
     }
@@ -80,10 +90,12 @@ impl Samples {
         self.data[lo] * (1.0 - frac) + self.data[hi] * frac
     }
 
+    /// The 50th percentile.
     pub fn median(&mut self) -> f64 {
         self.percentile(50.0)
     }
 
+    /// Sample standard deviation (0 with fewer than 2 samples).
     pub fn stddev(&self) -> f64 {
         if self.data.len() < 2 {
             return 0.0;
@@ -120,6 +132,7 @@ impl Samples {
         out
     }
 
+    /// The raw samples (sorted iff a sorted query ran last).
     pub fn values(&self) -> &[f64] {
         &self.data
     }
@@ -128,17 +141,26 @@ impl Samples {
 /// Fixed summary of a sample set (one row of a results table).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub count: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Median.
     pub p50: f64,
+    /// 90th percentile.
     pub p90: f64,
+    /// 99th percentile.
     pub p99: f64,
+    /// 99.9th percentile.
     pub p999: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
 impl Summary {
+    /// Summarize a sample set.
     pub fn of(samples: &mut Samples) -> Summary {
         Summary {
             count: samples.len(),

@@ -5,12 +5,16 @@
 /// A simple column-aligned table.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Caption printed above the table.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows (each as wide as `headers`).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with a caption and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -19,6 +23,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch in '{}'", self.title);
         self.rows.push(cells);

@@ -12,50 +12,68 @@ use std::ops::{Add, AddAssign, Div, Mul, Sub};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub struct Time(pub u64);
 
+/// Picoseconds per nanosecond.
 pub const PS_PER_NS: u64 = 1_000;
+/// Picoseconds per microsecond.
 pub const PS_PER_US: u64 = 1_000_000;
+/// Picoseconds per millisecond.
 pub const PS_PER_MS: u64 = 1_000_000_000;
+/// Picoseconds per second.
 pub const PS_PER_S: u64 = 1_000_000_000_000;
 
 impl Time {
+    /// Time zero.
     pub const ZERO: Time = Time(0);
+    /// The largest representable time.
     pub const MAX: Time = Time(u64::MAX);
 
+    /// From integer picoseconds (exact).
     pub fn from_ps(ps: u64) -> Time {
         Time(ps)
     }
+    /// From nanoseconds (rounded to the nearest picosecond).
     pub fn from_ns(ns: f64) -> Time {
         Time((ns * PS_PER_NS as f64).round() as u64)
     }
+    /// From microseconds (rounded to the nearest picosecond).
     pub fn from_us(us: f64) -> Time {
         Time((us * PS_PER_US as f64).round() as u64)
     }
+    /// From milliseconds (rounded to the nearest picosecond).
     pub fn from_ms(ms: f64) -> Time {
         Time((ms * PS_PER_MS as f64).round() as u64)
     }
+    /// From seconds (rounded to the nearest picosecond).
     pub fn from_secs(s: f64) -> Time {
         Time((s * PS_PER_S as f64).round() as u64)
     }
 
+    /// As integer picoseconds (exact).
     pub fn as_ps(self) -> u64 {
         self.0
     }
+    /// As nanoseconds.
     pub fn as_ns(self) -> f64 {
         self.0 as f64 / PS_PER_NS as f64
     }
+    /// As microseconds.
     pub fn as_us(self) -> f64 {
         self.0 as f64 / PS_PER_US as f64
     }
+    /// Alias of [`Time::as_us`].
     pub fn as_micros(self) -> f64 {
         self.as_us()
     }
+    /// As milliseconds.
     pub fn as_ms(self) -> f64 {
         self.0 as f64 / PS_PER_MS as f64
     }
+    /// As seconds.
     pub fn as_secs(self) -> f64 {
         self.0 as f64 / PS_PER_S as f64
     }
 
+    /// Subtraction clamped at zero.
     pub fn saturating_sub(self, rhs: Time) -> Time {
         Time(self.0.saturating_sub(rhs.0))
     }
@@ -111,15 +129,19 @@ impl fmt::Display for Time {
 pub struct Bandwidth(pub f64);
 
 impl Bandwidth {
+    /// From gigabits per second.
     pub fn from_gbps(gigabits_per_sec: f64) -> Bandwidth {
         Bandwidth(gigabits_per_sec * 1e9 / 8.0)
     }
+    /// From gigabytes per second.
     pub fn from_gbytes(gigabytes_per_sec: f64) -> Bandwidth {
         Bandwidth(gigabytes_per_sec * 1e9)
     }
+    /// As bytes per second.
     pub fn bytes_per_sec(self) -> f64 {
         self.0
     }
+    /// As gigabits per second.
     pub fn gbps(self) -> f64 {
         self.0 * 8.0 / 1e9
     }
@@ -149,18 +171,23 @@ impl fmt::Display for Bandwidth {
 pub struct ByteSize(pub u64);
 
 impl ByteSize {
+    /// `n` kibibytes.
     pub fn kib(n: u64) -> ByteSize {
         ByteSize(n * 1024)
     }
+    /// `n` mebibytes.
     pub fn mib(n: u64) -> ByteSize {
         ByteSize(n * 1024 * 1024)
     }
+    /// `n` gibibytes.
     pub fn gib(n: u64) -> ByteSize {
         ByteSize(n * 1024 * 1024 * 1024)
     }
+    /// As raw bytes.
     pub fn bytes(self) -> u64 {
         self.0
     }
+    /// Human-readable with adaptive unit.
     pub fn human(self) -> String {
         let b = self.0 as f64;
         if b < 1024.0 {

@@ -2,23 +2,63 @@
 //! assign more layers to faster pipeline stages, more batch to faster
 //! device groups, and variable TP degrees to heterogeneous device
 //! groups (Fig 3).
+//!
+//! Three entry points build non-uniform [`FrameworkSpec`]s:
+//! [`plan_hetero`] (proportional splits on the uniform rank grid),
+//! [`plan_variable_tp`] (explicit per-node TP splits, the Fig-3 shape
+//! the planner enumerates and [`crate::planner::refine`] polishes), and
+//! the hand-written [`fig3_plan`] reference.
 
 use crate::config::cluster::ClusterSpec;
 use crate::config::framework::{
-    DeviceGroupPlan, FrameworkSpec, ParallelismSpec, StagePlan,
+    split_evenly, DeviceGroupPlan, FrameworkSpec, ParallelismSpec, StagePlan,
 };
 use crate::config::model::ModelSpec;
 
+/// Why a proportional split cannot be produced. Returned (not panicked)
+/// so the planner can *prune* infeasible candidates — a deep pipeline
+/// on a shallow model, or more device groups than batch samples — with
+/// a typed reason instead of aborting the whole search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum SplitError {
+    /// An empty weight vector was passed (zero parts requested).
+    #[error("cannot split {total}: no parts requested")]
+    NoParts {
+        /// The total that was to be split.
+        total: u64,
+    },
+    /// `total < minimum * parts`: the floor cannot be honoured.
+    #[error("total {total} cannot give {parts} parts of at least {minimum}")]
+    TotalTooSmall {
+        /// The total that was to be split.
+        total: u64,
+        /// Requested part count.
+        parts: u64,
+        /// Per-part floor that made the split infeasible.
+        minimum: u64,
+    },
+}
+
 /// Split `total` into parts proportional to `weights`, each at least
 /// `minimum`, conserving the sum exactly (largest-remainder method).
-pub fn split_proportional(total: u64, weights: &[f64], minimum: u64) -> Vec<u64> {
+/// Fails with a typed [`SplitError`] when the floor cannot be honoured,
+/// so callers can prune rather than abort.
+pub fn split_proportional(
+    total: u64,
+    weights: &[f64],
+    minimum: u64,
+) -> Result<Vec<u64>, SplitError> {
     let n = weights.len();
-    assert!(n > 0, "no weights");
-    assert!(total >= minimum * n as u64, "total {total} cannot give {n} parts >= {minimum}");
+    if n == 0 {
+        return Err(SplitError::NoParts { total });
+    }
+    if total < minimum * n as u64 {
+        return Err(SplitError::TotalTooSmall { total, parts: n as u64, minimum });
+    }
     let wsum: f64 = weights.iter().sum();
     if wsum <= 0.0 {
         // degenerate: equal split
-        return crate::config::framework::split_evenly(total, n as u64);
+        return Ok(crate::config::framework::split_evenly(total, n as u64));
     }
     let spendable = total - minimum * n as u64;
     let ideal: Vec<f64> = weights.iter().map(|w| spendable as f64 * w / wsum).collect();
@@ -33,7 +73,7 @@ pub fn split_proportional(total: u64, weights: &[f64], minimum: u64) -> Vec<u64>
     for p in &mut parts {
         *p += minimum;
     }
-    parts
+    Ok(parts)
 }
 
 /// Heterogeneity-aware plan: same rank layout as the uniform mapping
@@ -54,21 +94,9 @@ pub fn plan_hetero(
     let mut group_powers = Vec::with_capacity(uniform.groups.len());
 
     for g in &uniform.groups {
-        // per-stage power: bottleneck member x member count
-        let stage_powers: Vec<f64> = g
-            .stages
-            .iter()
-            .map(|s| {
-                let min_power = s
-                    .ranks
-                    .iter()
-                    .filter_map(|r| cluster.gpu_of_rank(*r))
-                    .map(|gpu| gpu.compute_power())
-                    .fold(f64::INFINITY, f64::min);
-                min_power * s.ranks.len() as f64
-            })
-            .collect();
-        let layers = split_proportional(model.num_layers as u64, &stage_powers, 1);
+        let stage_powers: Vec<f64> =
+            g.stages.iter().map(|s| stage_power(cluster, &s.ranks)).collect();
+        let layers = split_proportional(model.num_layers as u64, &stage_powers, 1)?;
         let mut stages: Vec<StagePlan> = Vec::with_capacity(g.stages.len());
         for (s, plan) in g.stages.iter().enumerate() {
             stages.push(StagePlan {
@@ -86,11 +114,142 @@ pub fn plan_hetero(
         });
     }
 
-    let shares = split_proportional(model.global_batch, &group_powers, 1);
+    let shares = split_proportional(model.global_batch, &group_powers, 1)?;
     for (g, share) in groups.iter_mut().zip(shares) {
         g.batch_share = share;
     }
     let spec = FrameworkSpec { groups, base: par, schedule: uniform.schedule };
+    spec.validate(model, cluster)?;
+    Ok(spec)
+}
+
+/// Aggregate compute power of one TP group: the bottleneck-device rule
+/// (component C4) says a heterogeneous TP group advances at its slowest
+/// member, so power = member count × min(member power).
+pub fn stage_power(cluster: &ClusterSpec, ranks: &[u32]) -> f64 {
+    let min_power = ranks
+        .iter()
+        .filter_map(|r| cluster.gpu_of_rank(*r))
+        .map(|gpu| gpu.compute_power())
+        .fold(f64::INFINITY, f64::min);
+    if min_power.is_finite() {
+        min_power * ranks.len() as f64
+    } else {
+        0.0
+    }
+}
+
+/// Build a [`FrameworkSpec`] from **explicit per-node TP splits** — the
+/// paper's Fig-3 shape generalized: each node is one device group whose
+/// pipeline stages are the node's GPUs split into the given TP degrees
+/// (`splits[node] = [3, 1]` puts a TP=3 stage and a TP=1 stage on that
+/// node). TP degrees need not match across groups; mismatches are what
+/// triggers resharding (component C2) at DP-sync time.
+///
+/// With `hetero = true`, layers per stage and batch share per group are
+/// proportional to compute power (the [`plan_hetero`] rule); with
+/// `hetero = false` they are split evenly — the uniform-partitioning
+/// ablation on the same layout.
+///
+/// Fails with a typed [`SplitError`]-carrying error when the model has
+/// fewer layers than a group has stages or fewer batch samples than
+/// there are groups; the planner prunes such layouts instead of
+/// aborting.
+pub fn plan_variable_tp(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    splits: &[Vec<u32>],
+    hetero: bool,
+) -> anyhow::Result<FrameworkSpec> {
+    anyhow::ensure!(
+        splits.len() == cluster.nodes.len(),
+        "per-node TP splits cover {} nodes, cluster has {}",
+        splits.len(),
+        cluster.nodes.len()
+    );
+    let mut groups = Vec::with_capacity(splits.len());
+    let mut group_powers = Vec::with_capacity(splits.len());
+    let mut base_rank: u32 = 0;
+    let mut max_tp = 1;
+    let mut max_pp = 1;
+    for (node_idx, (split, node)) in splits.iter().zip(&cluster.nodes).enumerate() {
+        anyhow::ensure!(!split.is_empty(), "node {node_idx}: empty TP split");
+        anyhow::ensure!(
+            split.iter().all(|t| *t >= 1),
+            "node {node_idx}: TP degrees must be >= 1 ({split:?})"
+        );
+        let used: u32 = split.iter().sum();
+        anyhow::ensure!(
+            used == node.gpus_per_node,
+            "node {node_idx}: TP split {split:?} uses {used} GPUs, node has {}",
+            node.gpus_per_node
+        );
+        // contiguous ranks, stage-major within the node
+        let mut stage_ranks = Vec::with_capacity(split.len());
+        let mut r = base_rank;
+        for tp in split {
+            stage_ranks.push((r..r + tp).collect::<Vec<u32>>());
+            r += tp;
+        }
+        base_rank += node.gpus_per_node;
+        let stage_powers: Vec<f64> =
+            stage_ranks.iter().map(|ranks| stage_power(cluster, ranks)).collect();
+        let layers = if hetero {
+            split_proportional(model.num_layers as u64, &stage_powers, 1)?
+        } else {
+            let even = split_evenly(model.num_layers as u64, split.len() as u64);
+            if even.iter().any(|l| *l == 0) {
+                // typed like the proportional path, so the planner can
+                // prune uniform-partitioning layouts the same way
+                return Err(SplitError::TotalTooSmall {
+                    total: u64::from(model.num_layers),
+                    parts: split.len() as u64,
+                    minimum: 1,
+                }
+                .into());
+            }
+            even
+        };
+        max_tp = max_tp.max(*split.iter().max().unwrap());
+        max_pp = max_pp.max(split.len() as u32);
+        group_powers.push(stage_powers.iter().sum::<f64>());
+        groups.push(DeviceGroupPlan {
+            id: node_idx as u32,
+            stages: stage_ranks
+                .into_iter()
+                .enumerate()
+                .map(|(s, ranks)| StagePlan {
+                    ranks,
+                    num_layers: layers[s] as u32,
+                    has_embedding: s == 0,
+                })
+                .collect(),
+            batch_share: 0, // filled below
+            micro_batch: model.micro_batch,
+        });
+    }
+    let shares = if hetero {
+        split_proportional(model.global_batch, &group_powers, 1)?
+    } else {
+        let even = split_evenly(model.global_batch, groups.len() as u64);
+        if even.iter().any(|s| *s == 0) {
+            return Err(SplitError::TotalTooSmall {
+                total: model.global_batch,
+                parts: groups.len() as u64,
+                minimum: 1,
+            }
+            .into());
+        }
+        even
+    };
+    for (g, share) in groups.iter_mut().zip(shares) {
+        g.batch_share = share;
+    }
+    let spec = FrameworkSpec {
+        groups,
+        base: ParallelismSpec { tp: max_tp, pp: max_pp, dp: splits.len() as u32 },
+        schedule: crate::workload::schedule::ScheduleKind::GPipe,
+    };
     spec.validate(model, cluster)?;
     Ok(spec)
 }
@@ -113,13 +272,11 @@ pub fn fig3_cluster() -> anyhow::Result<ClusterSpec> {
     })
 }
 
-/// The Fig-3 model: Llama-2 70B with the figure's batch configuration.
+/// The Fig-3 model: Llama-2 70B with the figure's batch configuration
+/// (delegates to the `"fig3"` preset so the CLI and this helper cannot
+/// drift apart).
 pub fn fig3_model() -> anyhow::Result<ModelSpec> {
-    use crate::config::presets;
-    let mut m = presets::model("llama2-70b")?;
-    m.global_batch = 24; // paper Fig 3
-    m.micro_batch = 1;
-    Ok(m)
+    crate::config::presets::model("fig3")
 }
 
 /// The Fig-3 framework plan:
@@ -168,7 +325,7 @@ mod tests {
 
     #[test]
     fn split_proportional_conserves() {
-        let parts = split_proportional(80, &[3.0, 1.0], 1);
+        let parts = split_proportional(80, &[3.0, 1.0], 1).unwrap();
         assert_eq!(parts.iter().sum::<u64>(), 80);
         assert!(parts[0] > parts[1]);
         // ~3:1 split
@@ -177,15 +334,70 @@ mod tests {
 
     #[test]
     fn split_proportional_respects_minimum() {
-        let parts = split_proportional(10, &[1000.0, 1.0, 1.0], 1);
+        let parts = split_proportional(10, &[1000.0, 1.0, 1.0], 1).unwrap();
         assert_eq!(parts.iter().sum::<u64>(), 10);
         assert!(parts.iter().all(|p| *p >= 1), "{parts:?}");
     }
 
     #[test]
     fn split_proportional_zero_weights_falls_back() {
-        let parts = split_proportional(9, &[0.0, 0.0, 0.0], 1);
+        let parts = split_proportional(9, &[0.0, 0.0, 0.0], 1).unwrap();
         assert_eq!(parts.iter().sum::<u64>(), 9);
+    }
+
+    #[test]
+    fn split_proportional_infeasible_is_typed_not_a_panic() {
+        // the former assert!-panic path: 3 parts with floor 2 from 5
+        assert_eq!(
+            split_proportional(5, &[1.0, 1.0, 1.0], 2),
+            Err(SplitError::TotalTooSmall { total: 5, parts: 3, minimum: 2 })
+        );
+        assert_eq!(split_proportional(7, &[], 1), Err(SplitError::NoParts { total: 7 }));
+    }
+
+    #[test]
+    fn variable_tp_plan_reproduces_fig3_shape() {
+        let m = fig3_model().unwrap();
+        let c = fig3_cluster().unwrap();
+        let f = plan_variable_tp(&m, &c, &[vec![3, 1], vec![4]], true).unwrap();
+        assert_eq!(f.groups.len(), 2);
+        assert_eq!(f.groups[0].stages[0].ranks, vec![0, 1, 2]);
+        assert_eq!(f.groups[0].stages[1].ranks, vec![3]);
+        assert_eq!(f.groups[1].stages[0].ranks, vec![4, 5, 6, 7]);
+        // layer and batch conservation under the proportional split
+        assert_eq!(f.groups[0].stages.iter().map(|s| s.num_layers).sum::<u32>(), 80);
+        assert_eq!(f.groups[1].stages[0].num_layers, 80);
+        assert_eq!(f.groups.iter().map(|g| g.batch_share).sum::<u64>(), 24);
+        // the H100 group gets the larger share
+        assert!(f.groups[0].batch_share > f.groups[1].batch_share);
+        // TP mismatch across DP participants → resharding required
+        let dg = DeviceGroups::derive(&f);
+        assert!(resharding::group_needs_resharding(&dg.dp_sync[0].participants));
+    }
+
+    #[test]
+    fn variable_tp_plan_uniform_splits_evenly() {
+        let m = fig3_model().unwrap();
+        let c = fig3_cluster().unwrap();
+        let f = plan_variable_tp(&m, &c, &[vec![2, 2], vec![2, 2]], false).unwrap();
+        assert_eq!(f.groups[0].stages[0].num_layers, 40);
+        assert_eq!(f.groups[0].stages[1].num_layers, 40);
+        assert_eq!(f.groups[0].batch_share, 12);
+        assert_eq!(f.groups[1].batch_share, 12);
+    }
+
+    #[test]
+    fn variable_tp_plan_rejects_bad_splits() {
+        let m = fig3_model().unwrap();
+        let c = fig3_cluster().unwrap();
+        // wrong GPU count on node 0
+        assert!(plan_variable_tp(&m, &c, &[vec![3, 2], vec![4]], true).is_err());
+        // wrong number of nodes
+        assert!(plan_variable_tp(&m, &c, &[vec![4]], true).is_err());
+        // more stages than layers
+        let mut shallow = m.clone();
+        shallow.num_layers = 1;
+        assert!(plan_variable_tp(&shallow, &c, &[vec![1, 1, 1, 1], vec![4]], true).is_err());
     }
 
     #[test]

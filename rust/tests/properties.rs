@@ -7,7 +7,8 @@
 //! * routing validity on random topologies,
 //! * max-min fairness feasibility (no link over-subscription),
 //! * workload validation under random generator configs,
-//! * resharding trigger conditions.
+//! * resharding trigger conditions,
+//! * layer/batch conservation under random refinement-move sequences.
 
 use hetsim::config::framework::{FrameworkSpec, ParallelismSpec};
 use hetsim::config::presets;
@@ -70,7 +71,8 @@ fn prop_split_proportional_conserves_and_honors_minimum() {
         let minimum = g.rng.range_u64(0, 4);
         let total = minimum * parts as u64 + g.rng.range_u64(0, 1000);
         let weights: Vec<f64> = (0..parts).map(|_| g.rng.range_f64(0.0, 10.0)).collect();
-        let split = split_proportional(total, &weights, minimum);
+        let split = split_proportional(total, &weights, minimum)
+            .map_err(|e| format!("feasible split rejected: {e}"))?;
         if split.iter().sum::<u64>() != total {
             return Err(format!("sum {} != {total}", split.iter().sum::<u64>()));
         }
@@ -282,6 +284,69 @@ fn prop_generated_workloads_always_validate() {
         // parser round-trip preserves validity
         let text = hetsim::workload::parser::write(&w);
         hetsim::workload::parser::parse(&text).map_err(|e| format!("parse failed: {e}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_refinement_moves_conserve_layers_and_batch() {
+    use hetsim::planner::{apply_move, candidate_moves};
+    use hetsim::workload::partition::plan_variable_tp;
+    check(&cfg(64), |g| {
+        // random per-node TP split of the hetero 1+1 cluster (8 GPUs per
+        // node, 1- or 2-stage intra-node pipelines)
+        let cluster = presets::cluster_hetero(1, 1).unwrap();
+        let mut model = presets::model("gpt-6.7b").unwrap();
+        model.num_layers = g.rng.range_u64(4, 33) as u32;
+        model.micro_batch = g.rng.range_u64(1, 5);
+        model.global_batch = model.micro_batch * g.rng.range_u64(4, 65);
+        let mut splits = Vec::new();
+        for _ in 0..2 {
+            let small = g.rng.range_u64(0, 5) as u32; // 0 = single stage
+            splits.push(if small == 0 { vec![8] } else { vec![8 - small, small] });
+        }
+        let spec = match plan_variable_tp(&model, &cluster, &splits, true) {
+            Ok(s) => s,
+            Err(_) => return Ok(()), // infeasible random draw (typed split error)
+        };
+        let layers_per_group: Vec<u32> = spec
+            .groups
+            .iter()
+            .map(|gr| gr.stages.iter().map(|s| s.num_layers).sum())
+            .collect();
+        let batch: u64 = spec.groups.iter().map(|gr| gr.batch_share).sum();
+
+        // walk a random sequence of refinement moves
+        let mut cur = spec;
+        for _ in 0..g.rng.range_usize(1, 12) {
+            let moves = candidate_moves(&cur);
+            if moves.is_empty() {
+                break;
+            }
+            let mv = g.rng.choose(&moves).clone();
+            let next = apply_move(&cur, &mv)
+                .ok_or_else(|| format!("emitted move failed to apply: {mv:?}"))?;
+            next.validate(&model, &cluster)
+                .map_err(|e| format!("move {mv:?} broke validation: {e}"))?;
+            cur = next;
+        }
+        // conservation: per-group layer totals and the global batch
+        for (gr, want) in cur.groups.iter().zip(&layers_per_group) {
+            let got: u32 = gr.stages.iter().map(|s| s.num_layers).sum();
+            if got != *want {
+                return Err(format!("group {} layers {got} != {want}", gr.id));
+            }
+            if gr.stages.iter().any(|s| s.num_layers == 0) {
+                return Err(format!("group {} has an empty stage", gr.id));
+            }
+            if gr.batch_share == 0 {
+                return Err(format!("group {} drained below 1 sample", gr.id));
+            }
+        }
+        let got: u64 = cur.groups.iter().map(|gr| gr.batch_share).sum();
+        if got != batch {
+            return Err(format!("batch {got} != {batch}"));
+        }
         Ok(())
     });
 }
