@@ -37,6 +37,35 @@ fn bench_event_queue() {
     );
 }
 
+/// Reschedule churn: the flow simulator's cancel+re-push pattern. The
+/// slab must absorb it with O(1) cancels and a footprint bounded by
+/// the live window (the seed's HashSet grew with every cancel of an
+/// already-fired id).
+fn bench_queue_reschedule() {
+    let window = 1024usize;
+    let rounds: u64 = 1_000_000;
+    let mut rng = Rng::new(13);
+    let mut q: EventQueue<u64> = EventQueue::with_capacity(window);
+    let mut ids: Vec<_> =
+        (0..window as u64).map(|i| q.push(Time(rng.range_u64(0, 1 << 30)), i)).collect();
+    let t0 = Instant::now();
+    for i in 0..rounds {
+        let k = rng.range_u64(0, window as u64) as usize;
+        q.cancel(ids[k]);
+        ids[k] = q.push(Time(rng.range_u64(0, 1 << 30)), i);
+        // drain stale envelopes periodically so the heap stays bounded
+        if q.len_approx() > 4 * window {
+            while q.len_approx() > window && q.pop().is_some() {}
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "queue resched: {:>10.0} cancel+push/s ({rounds} rounds, slab {} slots in {dt:.3}s)",
+        rounds as f64 / dt,
+        q.slab_len()
+    );
+}
+
 fn bench_flow_sim() {
     let cluster = presets::cluster_hetero(2, 2).unwrap();
     let topo = Topology::build(&cluster).unwrap();
@@ -153,6 +182,7 @@ fn bench_scheduler_state() {
 fn main() {
     println!("=== L3 perf: hot-path throughput (1 core) ===");
     bench_event_queue();
+    bench_queue_reschedule();
     bench_flow_sim();
     bench_end_to_end();
     bench_scheduler_state();

@@ -175,6 +175,31 @@ impl CostTable {
     pub fn cached_len(&self) -> usize {
         self.cache.len()
     }
+
+    /// Snapshot the evaluated cache into a fresh **native-backed**
+    /// table. Used by [`crate::simulator::EvalContext`] to hand each
+    /// candidate build a warm cache without holding a lock across
+    /// registration: entries are pure functions of their descriptor
+    /// rows, so a shared snapshot can never disagree with a fresh
+    /// evaluation. (Context sharing is native-only; the PJRT evaluator
+    /// is not cloneable.)
+    pub fn share(&self) -> CostTable {
+        CostTable {
+            evaluator: Box::new(NativeCostModel),
+            pending: Vec::new(),
+            cache: self.cache.clone(),
+            batches_run: 0,
+        }
+    }
+
+    /// Merge `other`'s evaluated entries into this table's cache
+    /// (existing entries win; values are identical by purity). The
+    /// write-back half of the [`CostTable::share`] pattern.
+    pub fn absorb(&mut self, other: &CostTable) {
+        for (k, v) in &other.cache {
+            self.cache.entry(*k).or_insert(*v);
+        }
+    }
 }
 
 #[cfg(test)]

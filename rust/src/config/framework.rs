@@ -206,6 +206,36 @@ impl FrameworkSpec {
         self.groups.iter().map(|g| g.ranks().len()).sum()
     }
 
+    /// Canonical identity string of the full mapping: schedule, base
+    /// degrees, and every group's batch share, microbatch size and
+    /// per-stage (layers, embedding, ranks). Two specs produce the same
+    /// fingerprint iff they generate the same workload — the planner's
+    /// [`crate::simulator::EvalContext`] keys its compiled-workload and
+    /// score caches on it, which is what makes re-scoring a revisited
+    /// refinement state free.
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::with_capacity(64 + 16 * self.total_ranks());
+        let _ = write!(
+            s,
+            "{}|tp{}pp{}dp{}",
+            self.schedule.name(),
+            self.base.tp,
+            self.base.pp,
+            self.base.dp
+        );
+        for g in &self.groups {
+            let _ = write!(s, "|g{}b{}m{}", g.id, g.batch_share, g.micro_batch);
+            for st in &g.stages {
+                let _ = write!(s, ";{}L{}", st.num_layers, if st.has_embedding { "e" } else { "" });
+                for r in &st.ranks {
+                    let _ = write!(s, ",{r}");
+                }
+            }
+        }
+        s
+    }
+
     /// Data-parallel degree (number of device groups).
     pub fn dp(&self) -> u32 {
         self.groups.len() as u32
@@ -330,6 +360,26 @@ mod tests {
         let mut f = FrameworkSpec::uniform(&m, &c, par).unwrap();
         f.groups[0].batch_share += 1;
         assert!(f.validate(&m, &c).is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_mappings() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster("hopper", 16).unwrap();
+        let par = ParallelismSpec { tp: 4, pp: 1, dp: 32 };
+        let a = FrameworkSpec::uniform(&m, &c, par).unwrap();
+        assert_eq!(a.fingerprint(), a.fingerprint());
+        let mut b = a.clone();
+        b.groups[0].batch_share -= 1;
+        b.groups[1].batch_share += 1;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let s = a
+            .clone()
+            .with_schedule(crate::workload::schedule::ScheduleKind::OneFOneB);
+        assert_ne!(a.fingerprint(), s.fingerprint());
+        let mut layers = a.clone();
+        layers.groups[0].stages[0].num_layers += 1;
+        assert_ne!(a.fingerprint(), layers.fingerprint());
     }
 
     #[test]

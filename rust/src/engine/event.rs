@@ -2,9 +2,21 @@
 
 use crate::util::units::Time;
 
-/// Unique id of a scheduled event (its insertion sequence number).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub struct EventId(pub u64);
+/// Identity of a scheduled event: a slab slot in the owning
+/// [`crate::engine::EventQueue`] plus a generation stamp distinguishing
+/// successive occupants of that slot. Cancellation and staleness checks
+/// are O(1) slab probes — no hash set — and ids of fired or cancelled
+/// events occupy no memory (the seed kept cancelled ids in a `HashSet`
+/// for the life of the run).
+///
+/// `EventId` deliberately does **not** implement `Ord`: slot numbers are
+/// recycled, so ids carry no temporal order. Deterministic (time, seq)
+/// ordering lives in [`Scheduled::seq`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventId {
+    pub(crate) slot: u32,
+    pub(crate) gen: u32,
+}
 
 /// A payload scheduled at a simulation time. Ordering: by time, then by
 /// insertion sequence (deterministic tie-break).
@@ -12,7 +24,10 @@ pub struct EventId(pub u64);
 pub struct Scheduled<T> {
     /// Absolute simulation time the event fires at.
     pub time: Time,
-    /// Insertion sequence number (the deterministic tie-break).
+    /// Insertion sequence number (the deterministic tie-break; strictly
+    /// monotone per queue, never recycled).
+    pub seq: u64,
+    /// Slab identity of the event (for cancellation / staleness checks).
     pub id: EventId,
     /// The caller-defined event payload.
     pub payload: T,
@@ -20,7 +35,7 @@ pub struct Scheduled<T> {
 
 impl<T> PartialEq for Scheduled<T> {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.id == other.id
+        self.time == other.time && self.seq == other.seq
     }
 }
 impl<T> Eq for Scheduled<T> {}
@@ -33,7 +48,7 @@ impl<T> PartialOrd for Scheduled<T> {
 
 impl<T> Ord for Scheduled<T> {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.time.cmp(&other.time).then(self.id.cmp(&other.id))
+        self.time.cmp(&other.time).then(self.seq.cmp(&other.seq))
     }
 }
 
@@ -41,11 +56,15 @@ impl<T> Ord for Scheduled<T> {
 mod tests {
     use super::*;
 
+    fn sched(time: Time, seq: u64) -> Scheduled<()> {
+        Scheduled { time, seq, id: EventId { slot: 0, gen: 0 }, payload: () }
+    }
+
     #[test]
     fn ordering_by_time_then_seq() {
-        let a = Scheduled { time: Time(5), id: EventId(1), payload: () };
-        let b = Scheduled { time: Time(5), id: EventId(2), payload: () };
-        let c = Scheduled { time: Time(4), id: EventId(9), payload: () };
+        let a = sched(Time(5), 1);
+        let b = sched(Time(5), 2);
+        let c = sched(Time(4), 9);
         assert!(c < a);
         assert!(a < b);
     }

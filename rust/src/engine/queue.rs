@@ -1,12 +1,20 @@
 //! Deterministic priority event queue.
 //!
-//! A binary heap of [`Scheduled`] envelopes ordered by (time, seq).
-//! Supports O(log n) push/pop and lazy cancellation (cancelled ids are
-//! skipped on pop) — the flow simulator reschedules completion events
-//! whenever link shares change, so cancellation must be cheap.
+//! A binary heap of [`Scheduled`] envelopes ordered by (time, seq) with
+//! **generation-stamped slab cancellation**: each pending event occupies
+//! one slot of a dense `Vec<u32>` of generation counters, and its
+//! [`EventId`] is the `(slot, generation)` pair. Cancelling bumps the
+//! slot's generation (O(1), no allocation); a popped envelope whose
+//! generation no longer matches is stale and is skipped, returning its
+//! slot to the free list. The flow simulator reschedules completion
+//! events whenever link shares change, so cancellation must be cheap —
+//! and, unlike the seed's lazy `HashSet<EventId>`, the slab's memory is
+//! bounded by the *peak concurrent* envelope count, not by the total
+//! number of cancellations in the run (cancelling an id that already
+//! fired is a no-op rather than a permanent set entry).
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashSet};
+use std::collections::BinaryHeap;
 
 use super::event::{EventId, Scheduled};
 use crate::util::units::Time;
@@ -15,7 +23,13 @@ use crate::util::units::Time;
 #[derive(Debug)]
 pub struct EventQueue<T> {
     heap: BinaryHeap<Reverse<Scheduled<T>>>,
-    cancelled: HashSet<EventId>,
+    /// Current generation per slab slot; an envelope is live iff its
+    /// id's generation matches. One `u32` per peak-concurrent envelope.
+    gens: Vec<u32>,
+    /// Recycled slot indices.
+    free: Vec<u32>,
+    /// Live (scheduled, not cancelled, not yet popped) events.
+    live: usize,
     next_seq: u64,
     /// Events pushed so far (statistic for the perf report).
     pub pushed: u64,
@@ -34,40 +48,69 @@ impl<T> EventQueue<T> {
     pub fn new() -> Self {
         EventQueue {
             heap: BinaryHeap::new(),
-            cancelled: HashSet::new(),
+            gens: Vec::new(),
+            free: Vec::new(),
+            live: 0,
             next_seq: 0,
             pushed: 0,
             popped: 0,
         }
     }
 
-    /// An empty queue with pre-reserved heap capacity.
+    /// An empty queue with pre-reserved heap and slab capacity (sized
+    /// from compiled op/flow counts by the scheduler so steady-state
+    /// pushes never reallocate).
     pub fn with_capacity(n: usize) -> Self {
         let mut q = Self::new();
         q.heap.reserve(n);
+        q.gens.reserve(n);
+        q.free.reserve(n);
         q
     }
 
     /// Schedule `payload` at absolute time `time`.
     pub fn push(&mut self, time: Time, payload: T) -> EventId {
-        let id = EventId(self.next_seq);
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.gens.push(0);
+                (self.gens.len() - 1) as u32
+            }
+        };
+        let id = EventId { slot, gen: self.gens[slot as usize] };
+        let seq = self.next_seq;
         self.next_seq += 1;
         self.pushed += 1;
-        self.heap.push(Reverse(Scheduled { time, id, payload }));
+        self.live += 1;
+        self.heap.push(Reverse(Scheduled { time, seq, id, payload }));
         id
     }
 
-    /// Cancel a previously scheduled event (lazy: skipped on pop).
+    /// Cancel a previously scheduled event. O(1): bumps the slot's
+    /// generation so the pending envelope becomes stale (its slot is
+    /// recycled when it surfaces on the heap). Cancelling an event that
+    /// already fired — or cancelling twice — is a no-op.
     pub fn cancel(&mut self, id: EventId) {
-        self.cancelled.insert(id);
+        let g = &mut self.gens[id.slot as usize];
+        if *g == id.gen {
+            *g = g.wrapping_add(1);
+            self.live -= 1;
+        }
     }
 
     /// Pop the earliest non-cancelled event.
     pub fn pop(&mut self) -> Option<Scheduled<T>> {
         while let Some(Reverse(ev)) = self.heap.pop() {
-            if self.cancelled.remove(&ev.id) {
+            let slot = ev.id.slot as usize;
+            if self.gens[slot] != ev.id.gen {
+                // cancelled: the stale envelope has left the heap, so
+                // the slot can be reused
+                self.free.push(ev.id.slot);
                 continue;
             }
+            self.gens[slot] = self.gens[slot].wrapping_add(1); // consume
+            self.free.push(ev.id.slot);
+            self.live -= 1;
             self.popped += 1;
             return Some(ev);
         }
@@ -77,9 +120,9 @@ impl<T> EventQueue<T> {
     /// Earliest pending (non-cancelled) event time without popping.
     pub fn peek_time(&mut self) -> Option<Time> {
         while let Some(Reverse(ev)) = self.heap.peek() {
-            if self.cancelled.contains(&ev.id) {
+            if self.gens[ev.id.slot as usize] != ev.id.gen {
                 let Reverse(ev) = self.heap.pop().unwrap();
-                self.cancelled.remove(&ev.id);
+                self.free.push(ev.id.slot);
                 continue;
             }
             return Some(ev.time);
@@ -88,13 +131,26 @@ impl<T> EventQueue<T> {
     }
 
     /// True when no non-cancelled event remains.
-    pub fn is_empty(&mut self) -> bool {
-        self.peek_time().is_none()
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Live (scheduled, non-cancelled) events.
+    pub fn pending(&self) -> usize {
+        self.live
     }
 
     /// Pending (possibly including not-yet-skipped cancelled) events.
     pub fn len_approx(&self) -> usize {
         self.heap.len()
+    }
+
+    /// Slab slots ever allocated — the queue's cancellation-tracking
+    /// footprint, bounded by the peak concurrent envelope count (the
+    /// regression tests pin this; the seed's cancelled set grew with
+    /// every cancel of an already-fired id).
+    pub fn slab_len(&self) -> usize {
+        self.gens.len()
     }
 }
 
@@ -156,5 +212,86 @@ mod tests {
         while q.pop().is_some() {}
         assert_eq!(q.pushed, 10);
         assert_eq!(q.popped, 10);
+    }
+
+    #[test]
+    fn pending_tracks_live_events() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        let a = q.push(Time(1), 1);
+        let _b = q.push(Time(2), 2);
+        assert_eq!(q.pending(), 2);
+        q.cancel(a);
+        assert_eq!(q.pending(), 1);
+        assert!(!q.is_empty());
+        q.pop();
+        assert_eq!(q.pending(), 0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn cancel_after_fire_does_not_leak() {
+        // regression (seed bug): cancelling an id that already fired
+        // left it in the cancelled set forever. The slab must neither
+        // grow nor corrupt the slot's next occupant.
+        let mut q = EventQueue::new();
+        let mut fired = Vec::new();
+        for round in 0..1000u64 {
+            let id = q.push(Time(round), round);
+            assert_eq!(q.pop().unwrap().payload, round);
+            fired.push(id);
+            // cancel every id that ever fired, repeatedly
+            for &old in &fired {
+                q.cancel(old);
+            }
+        }
+        assert_eq!(q.slab_len(), 1, "slab grew with fired-id cancels");
+        assert_eq!(q.pending(), 0);
+        // the slot is still usable
+        q.push(Time(5000), 42);
+        assert_eq!(q.pop().unwrap().payload, 42);
+    }
+
+    #[test]
+    fn slab_bounded_by_peak_concurrency() {
+        let mut q = EventQueue::new();
+        for wave in 0..50u64 {
+            let ids: Vec<_> = (0..64).map(|i| q.push(Time(wave * 100 + i), i)).collect();
+            // cancel half, pop the rest
+            for id in ids.iter().step_by(2) {
+                q.cancel(*id);
+            }
+            while q.pop().is_some() {}
+        }
+        assert!(q.slab_len() <= 64, "slab {} > peak concurrency 64", q.slab_len());
+        assert_eq!(q.pushed, 50 * 64);
+    }
+
+    #[test]
+    fn reused_slot_does_not_resurrect_cancelled_event() {
+        let mut q = EventQueue::new();
+        let a = q.push(Time(10), "a");
+        q.cancel(a);
+        // a's slot is still occupied by the stale envelope; new pushes
+        // take fresh slots until it drains, then recycle it
+        q.push(Time(1), "b");
+        assert_eq!(q.pop().unwrap().payload, "b");
+        assert!(q.pop().is_none(), "cancelled event resurfaced");
+        q.push(Time(2), "c");
+        assert_eq!(q.pop().unwrap().payload, "c");
+        // stale-a and b slots both recycled
+        assert!(q.slab_len() <= 2);
+    }
+
+    #[test]
+    fn double_cancel_is_noop() {
+        let mut q = EventQueue::new();
+        let a = q.push(Time(1), 1);
+        q.push(Time(2), 2);
+        q.cancel(a);
+        q.cancel(a);
+        assert_eq!(q.pending(), 1);
+        assert_eq!(q.pop().unwrap().payload, 2);
+        assert!(q.pop().is_none());
     }
 }

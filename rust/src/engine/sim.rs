@@ -28,6 +28,14 @@ impl<T> Engine<T> {
         Engine { queue: EventQueue::new(), now: Time::ZERO, max_events: 0, processed: 0 }
     }
 
+    /// A fresh engine whose queue pre-reserves capacity for `n`
+    /// concurrent events (see [`EventQueue::with_capacity`]) — the
+    /// scheduler sizes this from compiled op/flow counts so the hot
+    /// loop never grows the heap.
+    pub fn with_capacity(n: usize) -> Self {
+        Engine { queue: EventQueue::with_capacity(n), now: Time::ZERO, max_events: 0, processed: 0 }
+    }
+
     /// The current simulation time.
     pub fn now(&self) -> Time {
         self.now

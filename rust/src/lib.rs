@@ -106,4 +106,4 @@ pub mod util;
 #[warn(missing_docs)]
 pub mod workload;
 
-pub use simulator::{SimulationBuilder, SimulationReport};
+pub use simulator::{EvalContext, EvalScore, SimulationBuilder, SimulationReport};

@@ -22,6 +22,7 @@ fn usage() -> Usage {
         commands: vec![
             ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N] [--schedule gpipe|1f1b|interleaved:V] [--iterations N --threads N]"),
             ("plan", "rank TPxPPxDPxschedule plans (+ variable per-group TP layouts on hetero clusters) [--model NAME --cluster SPEC --threads N --mb-limit N (0=all) --top K --refine[=STEPS]]"),
+            ("bench", "planner/engine throughput ladders -> BENCH_plan.json [--quick --threads N --out FILE --baseline FILE --factor F]"),
             ("fig1", "hardware-evolution trend across generation presets"),
             ("fig5", "per-layer compute time across GPU generations [--backend native|pjrt]"),
             ("fig6", "FCT CCDF across interconnect configs [--nodes N --models a,b --mb-limit N]"),
@@ -48,6 +49,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("simulate") => cmd_simulate(args),
         Some("plan") => cmd_plan(args),
+        Some("bench") => cmd_bench(args),
         Some("fig1") => cmd_fig1(args),
         Some("fig5") => cmd_fig5(args),
         Some("fig6") => cmd_fig6(args),
@@ -181,8 +183,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     ))?;
     let mb_limit = args.opt_u64("mb-limit", 2)?;
     // --refine (bare flag: default budget) or --refine=STEPS / --refine STEPS
-    let refine_steps =
-        if args.flag("refine") { 64 } else { args.opt_u64("refine", 0)? };
+    let refine_steps = args.opt_u64_flag("refine", 64)?.unwrap_or(0);
     let opts = hetsim::planner::PlanOptions {
         // 0 = simulate every microbatch (full-fidelity ranking)
         microbatch_limit: if mb_limit == 0 { None } else { Some(mb_limit) },
@@ -213,6 +214,51 @@ fn cmd_plan(args: &Args) -> Result<()> {
             r.spec.summary(),
             r.refined_time
         );
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    args.check_known(&["quick", "threads", "out", "baseline", "factor"])?;
+    let quick = args.flag("quick");
+    let threads = args.opt_u64("threads", 0)? as usize;
+    let factor = args.opt_f64("factor", 1.5)?;
+    println!(
+        "# hetsim bench ({} suite, {} threads)\n",
+        if quick { "quick" } else { "full" },
+        if threads == 0 { "all".to_string() } else { threads.to_string() }
+    );
+    let cases = hetsim::report::bench::run(quick, threads)?;
+    print!("{}", hetsim::report::bench::render(&cases).markdown());
+
+    let doc = hetsim::report::bench::to_json(&cases, quick);
+    let out = match args.opt("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => hetsim::report::results_dir().join("BENCH_plan.json"),
+    };
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&out, format!("{doc}\n"))?;
+    println!("\njson: {}", out.display());
+
+    if let Some(path) = args.opt("baseline") {
+        let base = hetsim::util::json::Json::parse(&std::fs::read_to_string(path)?)?;
+        let regressions =
+            hetsim::report::bench::check_against_baseline(&cases, &base, factor);
+        if regressions.is_empty() {
+            println!("baseline check vs {path}: ok (allowed factor {factor}x)");
+        } else {
+            for r in &regressions {
+                eprintln!("REGRESSION: {r}");
+            }
+            anyhow::bail!(
+                "{} bench regression(s) vs baseline {path}",
+                regressions.len()
+            );
+        }
     }
     Ok(())
 }

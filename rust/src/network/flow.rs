@@ -11,12 +11,36 @@
 //! time-varying fair rate) + (sum of fixed per-hop delays: the
 //! store-and-forward tail of the last frame through the QbbChannel
 //! model).
+//!
+//! ## Hot-path architecture (§Perf, DESIGN.md §23)
+//!
+//! The rebalance path performs **no allocation and no hash lookups**:
+//!
+//! * flows live in a slot slab (`Vec<Option<ActiveFlow>>` + free list);
+//!   public [`FlowId`]s stay monotone for record/tag stability, and an
+//!   ascending `(id, slot)` index replaces the seed's `HashMap`;
+//! * per-link member lists are maintained **incrementally** on flow
+//!   start/completion (ascending by id — identical order to the seed's
+//!   per-rebalance rebuild), so rebalances never re-walk all routes;
+//! * each rebalance is **scoped** to the connected component (under the
+//!   shares-a-link relation) of the arriving/departing flows. Max-min
+//!   progressive filling decomposes exactly across components — a
+//!   component's fix order and float accumulation order are unchanged
+//!   by the other components' presence — so scoped rates are
+//!   bit-identical to the full recompute, and out-of-scope flows keep
+//!   their (identical) rates and pending events. Progress bookkeeping
+//!   (`remaining -= rate·dt`) still advances *every* active flow each
+//!   rebalance so the floating-point chunking matches the unscoped
+//!   computation bit for bit.
+//!
+//! Self-communication flows (empty routes, infinite rate) belong to no
+//! link component; they join every scope so their reschedule cadence
+//! matches the unscoped algorithm exactly.
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
 use super::routing::{self, Route};
-use super::topology::Topology;
+use super::topology::{LinkId, Topology};
 use crate::engine::{Engine, EventId};
 use crate::util::units::Time;
 
@@ -84,21 +108,37 @@ struct ActiveFlow {
 pub struct FlowSim {
     /// The shared network graph flows are routed over.
     pub topo: Arc<Topology>,
-    active: HashMap<FlowId, ActiveFlow>,
+    /// Flow slab; a slot is `Some` while its flow is in flight.
+    slots: Vec<Option<ActiveFlow>>,
+    free_slots: Vec<u32>,
     next_id: u64,
     /// Records of every completed flow (when `keep_records`).
     pub records: Vec<FlowRecord>,
     /// Set false to skip record-keeping (perf runs).
     pub keep_records: bool,
     rebalances: u64,
-    // --- reusable max-min scratch (perf: avoids per-rebalance allocs) ---
-    scratch_residual: Vec<f64>,
-    scratch_members: Vec<Vec<FlowId>>,
-    scratch_touched: Vec<u32>,
-    /// Active flow ids in ascending order (ids are monotone, so starts
-    /// push to the back; completions binary-search-remove). Avoids the
-    /// per-rebalance collect+sort.
-    ordered: Vec<FlowId>,
+    /// Active `(id, slot)` pairs in ascending id order (ids are
+    /// monotone, so starts push to the back; completions
+    /// binary-search-remove). The deterministic iteration order of
+    /// every rebalance.
+    ordered: Vec<(u64, u32)>,
+    /// Per-link active member lists, ascending by id — maintained
+    /// incrementally on start/completion instead of rebuilt per
+    /// rebalance.
+    link_members: Vec<Vec<(u64, u32)>>,
+    /// Active flows with empty routes (self-communication): part of
+    /// every rebalance scope (see module docs).
+    unrouted: Vec<(u64, u32)>,
+    // --- reusable scratch (no per-rebalance allocation) ---
+    scratch_residual: Vec<f64>, // per link
+    link_in_scope: Vec<bool>,   // per link
+    scope_links: Vec<u32>,
+    flow_in_scope: Vec<bool>, // per slot
+    scope_flows: Vec<(u64, u32)>,
+    scratch_rate: Vec<f64>,   // per slot
+    scratch_fixed: Vec<bool>, // per slot
+    seed_links: Vec<u32>,
+    bfs_stack: Vec<u32>,
 }
 
 impl FlowSim {
@@ -108,21 +148,45 @@ impl FlowSim {
         let nlinks = topo.num_links();
         FlowSim {
             topo,
-            active: HashMap::new(),
+            slots: Vec::new(),
+            free_slots: Vec::new(),
             next_id: 0,
             records: Vec::new(),
             keep_records: true,
             rebalances: 0,
-            scratch_residual: vec![0.0; nlinks],
-            scratch_members: vec![Vec::new(); nlinks],
-            scratch_touched: Vec::new(),
             ordered: Vec::new(),
+            link_members: vec![Vec::new(); nlinks],
+            unrouted: Vec::new(),
+            scratch_residual: vec![0.0; nlinks],
+            link_in_scope: vec![false; nlinks],
+            scope_links: Vec::new(),
+            flow_in_scope: Vec::new(),
+            scope_flows: Vec::new(),
+            scratch_rate: Vec::new(),
+            scratch_fixed: Vec::new(),
+            seed_links: Vec::new(),
+            bfs_stack: Vec::new(),
+        }
+    }
+
+    /// Pre-reserve capacity for `concurrent` simultaneously-active flows
+    /// and `total` completion records (the scheduler sizes these from
+    /// compiled flow counts so the hot loop never grows the slab).
+    pub fn reserve(&mut self, concurrent: usize, total: usize) {
+        self.slots.reserve(concurrent);
+        self.ordered.reserve(concurrent);
+        self.flow_in_scope.reserve(concurrent);
+        self.scratch_rate.reserve(concurrent);
+        self.scratch_fixed.reserve(concurrent);
+        self.scope_flows.reserve(concurrent);
+        if self.keep_records {
+            self.records.reserve(total);
         }
     }
 
     /// Flows currently in flight.
     pub fn active_count(&self) -> usize {
-        self.active.len()
+        self.ordered.len()
     }
 
     /// Max-min rate recomputations so far (a perf counter).
@@ -130,24 +194,46 @@ impl FlowSim {
         self.rebalances
     }
 
-    /// Start one flow; schedules its (tentative) completion event.
+    /// Slab slots allocated so far (== peak concurrent flows).
+    pub fn slab_len(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn alloc_slot(&mut self) -> usize {
+        match self.free_slots.pop() {
+            Some(s) => s as usize,
+            None => {
+                self.slots.push(None);
+                self.flow_in_scope.push(false);
+                self.scratch_rate.push(0.0);
+                self.scratch_fixed.push(false);
+                self.slots.len() - 1
+            }
+        }
+    }
+
+    /// Start one flow; schedules its (tentative) completion event and
+    /// returns its id.
     pub fn start<E>(
         &mut self,
         eng: &mut Engine<E>,
         spec: FlowSpec,
         mk: &impl Fn(FlowId) -> E,
     ) -> FlowId {
-        self.start_many(eng, std::slice::from_ref(&spec), mk)[0]
+        let id = FlowId(self.next_id);
+        self.start_many_posted(eng, std::slice::from_ref(&spec), None, mk);
+        id
     }
 
     /// Start a batch of flows with a single rate rebalance (used by the
-    /// collective executor: one ring step = one batch).
+    /// collective executor: one ring step = one batch). Ids are
+    /// assigned in slice order from the monotone counter.
     pub fn start_many<E>(
         &mut self,
         eng: &mut Engine<E>,
         specs: &[FlowSpec],
         mk: &impl Fn(FlowId) -> E,
-    ) -> Vec<FlowId> {
+    ) {
         self.start_many_posted(eng, specs, None, mk)
     }
 
@@ -163,41 +249,45 @@ impl FlowSim {
         specs: &[FlowSpec],
         posted: Option<&[Time]>,
         mk: &impl Fn(FlowId) -> E,
-    ) -> Vec<FlowId> {
+    ) {
         let now = eng.now();
         if let Some(p) = posted {
             debug_assert_eq!(p.len(), specs.len());
         }
-        let mut ids = Vec::with_capacity(specs.len());
+        self.seed_links.clear();
         for (i, spec) in specs.iter().enumerate() {
             let start = posted.map(|p| p[i].min(now)).unwrap_or(now);
-            let id = FlowId(self.next_id);
+            let id = self.next_id;
             self.next_id += 1;
             let route = routing::route(&self.topo, spec.src, spec.dst);
             let fixed = routing::fixed_delay(&self.topo, &route);
-            self.active.insert(
-                id,
-                ActiveFlow {
-                    spec: *spec,
-                    route,
-                    remaining: spec.bytes as f64,
-                    rate: 0.0,
-                    last_update: now,
-                    fixed,
-                    start,
-                    event: None,
-                },
-            );
-            ids.push(id);
-            self.ordered.push(id); // ids are monotone -> stays sorted
+            let slot = self.alloc_slot();
+            for l in &route.links {
+                // monotone ids keep the member list ascending
+                self.link_members[l.0 as usize].push((id, slot as u32));
+                self.seed_links.push(l.0);
+            }
+            if route.links.is_empty() {
+                self.unrouted.push((id, slot as u32));
+            }
+            self.slots[slot] = Some(ActiveFlow {
+                spec: *spec,
+                route,
+                remaining: spec.bytes as f64,
+                rate: 0.0,
+                last_update: now,
+                fixed,
+                start,
+                event: None,
+            });
+            self.ordered.push((id, slot as u32)); // stays sorted
         }
         self.rebalance(eng, mk);
-        ids
     }
 
     /// Handle a completion event. Returns `None` for stale events (the
     /// flow was rescheduled); otherwise removes the flow, records its
-    /// FCT and rebalances the rest.
+    /// FCT and rebalances the flows that shared links with it.
     pub fn on_complete<E>(
         &mut self,
         eng: &mut Engine<E>,
@@ -205,14 +295,29 @@ impl FlowSim {
         event: EventId,
         mk: &impl Fn(FlowId) -> E,
     ) -> Option<FlowRecord> {
-        let is_current = self.active.get(&id).map(|f| f.event == Some(event)).unwrap_or(false);
+        let pos = self.ordered.binary_search_by_key(&id.0, |&(i, _)| i).ok()?;
+        let slot = self.ordered[pos].1 as usize;
+        let is_current =
+            self.slots[slot].as_ref().map(|f| f.event == Some(event)).unwrap_or(false);
         if !is_current {
             return None; // superseded by a reschedule
         }
-        let f = self.active.remove(&id).unwrap();
-        if let Ok(pos) = self.ordered.binary_search(&id) {
-            self.ordered.remove(pos);
+        let f = self.slots[slot].take().unwrap();
+        self.ordered.remove(pos);
+        self.seed_links.clear();
+        for l in &f.route.links {
+            let members = &mut self.link_members[l.0 as usize];
+            if let Ok(p) = members.binary_search_by_key(&id.0, |&(i, _)| i) {
+                members.remove(p);
+            }
+            self.seed_links.push(l.0);
         }
+        if f.route.links.is_empty() {
+            if let Ok(p) = self.unrouted.binary_search_by_key(&id.0, |&(i, _)| i) {
+                self.unrouted.remove(p);
+            }
+        }
+        self.free_slots.push(slot as u32);
         let rec = FlowRecord {
             id,
             src: f.spec.src,
@@ -229,26 +334,36 @@ impl FlowSim {
         Some(rec)
     }
 
-    /// Advance progress to `now`, recompute max-min rates, reschedule
-    /// completion events whose estimates changed.
+    /// Advance progress to `now`, recompute max-min rates over the
+    /// affected component, reschedule completion events whose estimates
+    /// changed. `seed_links` holds the links of the flows that arrived
+    /// or departed.
     fn rebalance<E>(&mut self, eng: &mut Engine<E>, mk: &impl Fn(FlowId) -> E) {
         self.rebalances += 1;
         let now = eng.now();
-        // 1. advance remaining bytes at the old rates
-        for f in self.active.values_mut() {
+        // 1. advance remaining bytes at the old rates. Every active
+        //    flow, not just the scope: identical floating-point
+        //    chunking to the unscoped computation (see module docs).
+        for &(_, slot) in &self.ordered {
+            let f = self.slots[slot as usize].as_mut().unwrap();
             let dt = (now.saturating_sub(f.last_update)).as_secs();
             if dt > 0.0 && f.rate > 0.0 {
                 f.remaining = (f.remaining - f.rate * dt).max(0.0);
             }
             f.last_update = now;
         }
-        // 2. max-min fair rates
-        let rates = self.maxmin();
-        // 3. apply + reschedule (sorted: deterministic event insertion)
-        let ids = self.ordered.clone();
-        for id in ids {
-            let new_rate = rates.get(&id).copied().unwrap_or(f64::INFINITY);
-            let f = self.active.get_mut(&id).unwrap();
+        // 2. scope: transitive closure of link-sharing from the seed
+        self.build_scope();
+        // 3. max-min fair rates over the scope
+        self.maxmin_scoped();
+        // 4. apply + reschedule in ascending-id order (deterministic
+        //    event insertion). Out-of-scope flows keep their rates —
+        //    the full recompute would reproduce them bit-identically
+        //    and then skip the reschedule as unchanged.
+        for &(id, slot) in &self.scope_flows {
+            let s = slot as usize;
+            let new_rate = self.scratch_rate[s];
+            let f = self.slots[s].as_mut().unwrap();
             // transfer already drained: the flow is in its fixed-delay
             // tail and its completion event is final — rescheduling here
             // would wrongly re-add the tail from `now`
@@ -280,57 +395,95 @@ impl FlowSim {
             if let Some(old) = f.event.take() {
                 eng.queue.cancel(old);
             }
-            let ev = eng.schedule_at(when, mk(id));
+            let ev = eng.schedule_at(when, mk(FlowId(id)));
             f.event = Some(ev);
+        }
+        // 5. reset the scope flags for the next rebalance
+        for &l in &self.scope_links {
+            self.link_in_scope[l as usize] = false;
+        }
+        for &(_, slot) in &self.scope_flows {
+            self.flow_in_scope[slot as usize] = false;
         }
     }
 
-    /// Progressive-filling max-min fair allocation over link capacities.
-    /// All iteration is over sorted structures so float accumulation
-    /// order — and therefore the simulated timeline — is deterministic.
-    /// Uses preallocated per-link scratch arrays (indexed by `LinkId`)
-    /// instead of maps — the §Perf optimization that took the flow
-    /// simulator from ~1.3k to >10k flows/s.
-    fn maxmin(&mut self) -> HashMap<FlowId, f64> {
-        let mut rates: HashMap<FlowId, f64> =
-            HashMap::with_capacity(self.active.len());
-        if self.active.is_empty() {
-            return rates;
-        }
-        // reset only the links touched last round
-        for l in self.scratch_touched.drain(..) {
-            self.scratch_members[l as usize].clear();
-        }
-        let flow_ids = &self.ordered;
-        for id in flow_ids {
-            let f = &self.active[id];
-            for l in &f.route.links {
-                let li = l.0 as usize;
-                if self.scratch_members[li].is_empty() {
-                    self.scratch_residual[li] = self.topo.link(*l).bw.bytes_per_sec();
-                    self.scratch_touched.push(l.0);
-                }
-                self.scratch_members[li].push(*id);
+    /// BFS over the flow–link bipartite graph from the seed links: the
+    /// connected component whose rates can change. Fills `scope_links`
+    /// (sorted ascending for the deterministic bottleneck scan) and
+    /// `scope_flows` (ascending by id).
+    fn build_scope(&mut self) {
+        self.scope_links.clear();
+        self.scope_flows.clear();
+        self.bfs_stack.clear();
+        for &l in &self.seed_links {
+            if !self.link_in_scope[l as usize] {
+                self.link_in_scope[l as usize] = true;
+                self.bfs_stack.push(l);
             }
         }
-        // unfixed tracked per-flow via the rates map (fixed = present)
+        // empty-route flows join every scope (the unscoped algorithm
+        // re-examines them on every rebalance)
+        for &(_, slot) in &self.unrouted {
+            self.flow_in_scope[slot as usize] = true;
+        }
+        while let Some(l) = self.bfs_stack.pop() {
+            self.scope_links.push(l);
+            for &(_, slot) in &self.link_members[l as usize] {
+                if self.flow_in_scope[slot as usize] {
+                    continue;
+                }
+                self.flow_in_scope[slot as usize] = true;
+                let f = self.slots[slot as usize].as_ref().unwrap();
+                for l2 in &f.route.links {
+                    if !self.link_in_scope[l2.0 as usize] {
+                        self.link_in_scope[l2.0 as usize] = true;
+                        self.bfs_stack.push(l2.0);
+                    }
+                }
+            }
+        }
+        for &(id, slot) in &self.ordered {
+            if self.flow_in_scope[slot as usize] {
+                self.scope_flows.push((id, slot));
+            }
+        }
+        self.scope_links.sort_unstable();
+    }
+
+    /// Progressive-filling max-min fair allocation over the scope's
+    /// link capacities, writing per-slot rates into `scratch_rate`.
+    /// All iteration is over sorted structures so float accumulation
+    /// order — and therefore the simulated timeline — is deterministic
+    /// and bit-identical to the unscoped computation (per-component
+    /// decomposition; see module docs). Uses preallocated per-link and
+    /// per-slot scratch arrays — the §Perf optimization that took the
+    /// flow simulator from ~1.3k to >10k flows/s, now allocation-free.
+    fn maxmin_scoped(&mut self) {
         let mut remaining = 0usize;
-        for id in flow_ids {
-            if self.active[id].route.links.is_empty() {
-                rates.insert(*id, f64::INFINITY);
+        for &(_, slot) in &self.scope_flows {
+            let s = slot as usize;
+            let f = self.slots[s].as_ref().unwrap();
+            if f.route.links.is_empty() {
+                self.scratch_rate[s] = f64::INFINITY;
+                self.scratch_fixed[s] = true;
             } else {
+                // INFINITY until fixed: a flow the filling loop never
+                // reaches (impossible while it has links, but kept
+                // equivalent to the historical unscoped behavior)
+                self.scratch_rate[s] = f64::INFINITY;
+                self.scratch_fixed[s] = false;
                 remaining += 1;
             }
         }
-        // touched links sorted for deterministic bottleneck scans
-        self.scratch_touched.sort_unstable();
-        self.scratch_touched.dedup();
+        for &l in &self.scope_links {
+            self.scratch_residual[l as usize] = self.topo.link(LinkId(l)).bw.bytes_per_sec();
+        }
         while remaining > 0 {
             // bottleneck link: min residual / unfixed-members
             let mut best: Option<(u32, f64)> = None;
-            for &l in &self.scratch_touched {
-                let mem = &self.scratch_members[l as usize];
-                let n = mem.iter().filter(|m| !rates.contains_key(m)).count();
+            for &l in &self.scope_links {
+                let mem = &self.link_members[l as usize];
+                let n = mem.iter().filter(|&&(_, s)| !self.scratch_fixed[s as usize]).count();
                 if n == 0 {
                     continue;
                 }
@@ -340,21 +493,22 @@ impl FlowSim {
                 }
             }
             let Some((bottleneck, fair)) = best else { break };
-            // fix every unfixed flow crossing the bottleneck
-            let to_fix: Vec<FlowId> = self.scratch_members[bottleneck as usize]
-                .iter()
-                .filter(|m| !rates.contains_key(m))
-                .copied()
-                .collect();
-            for id in to_fix {
-                rates.insert(id, fair);
+            // fix every unfixed flow crossing the bottleneck (member
+            // lists are ascending by id: deterministic fix order)
+            for &(_, slot) in &self.link_members[bottleneck as usize] {
+                let s = slot as usize;
+                if self.scratch_fixed[s] {
+                    continue;
+                }
+                self.scratch_fixed[s] = true;
+                self.scratch_rate[s] = fair;
                 remaining -= 1;
-                for l in &self.active[&id].route.links {
-                    self.scratch_residual[l.0 as usize] -= fair;
+                let f = self.slots[s].as_ref().unwrap();
+                for l2 in &f.route.links {
+                    self.scratch_residual[l2.0 as usize] -= fair;
                 }
             }
         }
-        rates
     }
 }
 
@@ -379,7 +533,7 @@ mod tests {
         let bytes = 25_000_000_000u64; // exactly 1 s at NIC rate
         fs.start(&mut eng, FlowSpec { src: 7, dst: 15, bytes, tag: 0 }, &Done);
         let mut fcts = Vec::new();
-        let mut fs_ref = &mut fs;
+        let fs_ref = &mut fs;
         eng.run(|e, ev| {
             if let Some(rec) = fs_ref.on_complete(e, ev.payload.0, ev.id, &Done) {
                 fcts.push(rec.fct());
@@ -547,5 +701,64 @@ mod tests {
         .unwrap();
         assert_eq!(fs.records.len(), 8);
         assert_eq!(fs.active_count(), 0);
+    }
+
+    #[test]
+    fn flow_slab_slots_are_reused() {
+        // waves of flows: the slab must stay bounded by the peak
+        // concurrency, not the total flow count
+        let (mut fs, mut eng) = sim(2);
+        for wave in 0..20u64 {
+            let specs: Vec<FlowSpec> = (0..8)
+                .map(|i| FlowSpec { src: i, dst: 8 + i, bytes: 1 << 20, tag: wave * 8 + i as u64 })
+                .collect();
+            fs.start_many(&mut eng, &specs, &Done);
+            let fs_ref = &mut fs;
+            eng.run(|e, ev| {
+                fs_ref.on_complete(e, ev.payload.0, ev.id, &Done);
+            })
+            .unwrap();
+        }
+        assert_eq!(fs.records.len(), 160);
+        assert!(fs.slab_len() <= 8, "slab {} > peak concurrency 8", fs.slab_len());
+        assert_eq!(fs.active_count(), 0);
+    }
+
+    #[test]
+    fn scoped_rebalance_matches_joint_computation() {
+        // two independent rails with staggered arrivals: scoped
+        // rebalances must produce the same FCTs as if each pair ran
+        // alone (per-component max-min decomposition)
+        let run_pair = |stagger: bool| {
+            let (mut fs, mut eng) = sim(2);
+            let bytes = 12_500_000_000u64;
+            let mut specs = vec![
+                FlowSpec { src: 6, dst: 14, bytes, tag: 0 },
+                FlowSpec { src: 6, dst: 14, bytes: 2 * bytes, tag: 1 },
+            ];
+            if stagger {
+                // an unrelated pair on rail 7, started in the same batch
+                specs.push(FlowSpec { src: 7, dst: 15, bytes, tag: 2 });
+                specs.push(FlowSpec { src: 7, dst: 15, bytes: 2 * bytes, tag: 3 });
+            }
+            fs.start_many(&mut eng, &specs, &Done);
+            let fs_ref = &mut fs;
+            let mut by_tag = std::collections::HashMap::new();
+            eng.run(|e, ev| {
+                if let Some(rec) = fs_ref.on_complete(e, ev.payload.0, ev.id, &Done) {
+                    by_tag.insert(rec.tag, rec.fct());
+                }
+            })
+            .unwrap();
+            by_tag
+        };
+        let alone = run_pair(false);
+        let together = run_pair(true);
+        // rail-6 FCTs are bit-identical whether or not rail 7 is busy
+        assert_eq!(alone[&0], together[&0]);
+        assert_eq!(alone[&1], together[&1]);
+        // and the rail-7 pair mirrors the rail-6 pair exactly
+        assert_eq!(together[&0], together[&2]);
+        assert_eq!(together[&1], together[&3]);
     }
 }

@@ -41,6 +41,7 @@ pub use candidates::{
     PrunedCandidate, TpLayout,
 };
 pub use refine::{
-    apply_move, candidate_moves, refine, AppliedMove, Move, RefineOptions, RefinedPlan,
+    apply_move, candidate_moves, refine, refine_with_context, AppliedMove, Move, RefineOptions,
+    RefinedPlan,
 };
 pub use search::{search, EvaluatedPlan, PlanOptions, PlanSearchReport, REFINE_STARTS};

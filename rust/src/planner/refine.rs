@@ -39,7 +39,7 @@
 use crate::config::cluster::ClusterSpec;
 use crate::config::framework::FrameworkSpec;
 use crate::config::model::ModelSpec;
-use crate::simulator::SimulationBuilder;
+use crate::simulator::{EvalContext, SimulationBuilder};
 use crate::system::collective::RingPolicy;
 use crate::util::par::parallel_map;
 use crate::util::units::Time;
@@ -257,15 +257,20 @@ impl RefinedPlan {
 }
 
 /// Simulate one spec under the refiner's evaluation conditions and
-/// return its iteration time.
+/// return its iteration time. Scored through the shared
+/// [`EvalContext`]: the topology and cost entries are reused across
+/// moves, trace recording stays off, and a revisited spec (moves that
+/// keep losing get re-enumerated every round) costs one cache lookup
+/// instead of a rebuild + re-simulation.
 fn simulate(
     model: &ModelSpec,
     cluster: &ClusterSpec,
     spec: &FrameworkSpec,
     ring: RingPolicy,
     opts: &RefineOptions,
+    ctx: &EvalContext,
 ) -> anyhow::Result<Time> {
-    let sim = SimulationBuilder::new(model.clone(), cluster.clone())
+    let score = SimulationBuilder::new(model.clone(), cluster.clone())
         .parallelism(spec.base)
         .framework(spec.clone())
         .ring_policy(ring)
@@ -273,8 +278,8 @@ fn simulate(
             microbatch_limit: opts.microbatch_limit,
             ..Default::default()
         })
-        .build()?;
-    Ok(sim.run_iteration()?.iteration_time)
+        .score_with_context(ctx)?;
+    Ok(score.iteration_time)
 }
 
 /// Coordinate-descent refinement of `start` (see the module docs for
@@ -294,13 +299,31 @@ pub fn refine(
     start_time: Option<Time>,
     opts: &RefineOptions,
 ) -> anyhow::Result<RefinedPlan> {
+    let ctx = EvalContext::new(model, cluster)?;
+    refine_with_context(model, cluster, start, ring, start_time, opts, &ctx)
+}
+
+/// [`refine`] against a caller-provided [`EvalContext`] — the planner's
+/// search shares one context between ranking and every refinement
+/// start, so refinement inherits a warm topology, cost cache and the
+/// ranked candidates' already-scored specs.
+#[allow(clippy::too_many_arguments)]
+pub fn refine_with_context(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    start: &FrameworkSpec,
+    ring: RingPolicy,
+    start_time: Option<Time>,
+    opts: &RefineOptions,
+    ctx: &EvalContext,
+) -> anyhow::Result<RefinedPlan> {
     let mut spec = start.clone();
     let mut evaluations: u64 = 0;
     let mut best_time = match start_time {
         Some(t) => t,
         None => {
             evaluations += 1;
-            simulate(model, cluster, &spec, ring, opts)?
+            simulate(model, cluster, &spec, ring, opts, ctx)?
         }
     };
     let initial_time = best_time;
@@ -315,7 +338,7 @@ pub fn refine(
             break;
         }
         let times: Vec<Option<Time>> = parallel_map(candidates.len(), opts.threads, |i| {
-            simulate(model, cluster, &candidates[i].1, ring, opts).ok()
+            simulate(model, cluster, &candidates[i].1, ring, opts, ctx).ok()
         });
         evaluations += candidates.len() as u64;
         // best strictly-improving move; ties break to the smallest

@@ -18,7 +18,7 @@
 
 use crate::config::cluster::ClusterSpec;
 use crate::config::model::ModelSpec;
-use crate::simulator::{infer_parallelism, SimulationBuilder};
+use crate::simulator::{infer_parallelism, EvalContext, SimulationBuilder};
 use crate::system::collective::RingPolicy;
 use crate::util::par::parallel_map;
 use crate::util::table::Table;
@@ -29,7 +29,7 @@ use crate::workload::schedule::ScheduleKind;
 use super::candidates::{
     enumerate, enumerate_with_memory, Partitioning, PlanCandidate, PrunedCandidate, TpLayout,
 };
-use super::refine::{refine, RefineOptions, RefinedPlan};
+use super::refine::{refine_with_context, RefineOptions, RefinedPlan};
 
 /// How many top-ranked candidates the refinement pass starts from.
 pub const REFINE_STARTS: usize = 3;
@@ -166,32 +166,34 @@ impl PlanSearchReport {
 /// Score one candidate with a full simulated iteration. The candidate
 /// is materialized into its concrete device-group mapping first
 /// ([`PlanCandidate::framework`]) — the same spec the refinement pass
-/// would start from.
+/// would start from. Scoring goes through the shared [`EvalContext`]
+/// (one topology + warm cost cache per search run, trace recording
+/// off), so per-candidate cost is workload emission + compile + the
+/// event loop — nothing candidate-independent is rebuilt.
 fn evaluate(
     model: &ModelSpec,
     cluster: &ClusterSpec,
     cand: &PlanCandidate,
     opts: &PlanOptions,
+    ctx: &EvalContext,
 ) -> anyhow::Result<EvaluatedPlan> {
     let fw = cand.framework(model, cluster)?;
-    let sim = SimulationBuilder::new(model.clone(), cluster.clone())
+    let score = SimulationBuilder::new(model.clone(), cluster.clone())
         .parallelism(cand.par)
         .framework(fw)
         .ring_policy(cand.ring)
-        .record_trace(true)
         .workload_options(WorkloadOptions {
             microbatch_limit: opts.microbatch_limit,
             ..Default::default()
         })
-        .build()?;
-    let rep = sim.run_iteration()?;
+        .score_with_context(ctx)?;
     Ok(EvaluatedPlan {
         candidate: cand.clone(),
-        iteration_time: rep.iteration_time,
-        compute_busy: rep.compute_busy,
-        comm_busy: rep.comm_busy,
-        flows_completed: rep.flows_completed,
-        events_processed: rep.events_processed,
+        iteration_time: score.iteration_time,
+        compute_busy: score.compute_busy,
+        comm_busy: score.comm_busy,
+        flows_completed: score.flows_completed,
+        events_processed: score.events_processed,
     })
 }
 
@@ -222,9 +224,14 @@ pub fn search(
         pruned.len()
     );
 
+    // Everything candidate-independent — topology, evaluated cost
+    // entries, compiled cores and scores of revisited specs — is built
+    // once here and shared by every worker for the rest of the run
+    // (ranking, baseline and refinement).
+    let ctx = EvalContext::new(model, cluster)?;
     let n = candidates.len();
     let results =
-        parallel_map(n, opts.threads, |i| evaluate(model, cluster, &candidates[i], opts));
+        parallel_map(n, opts.threads, |i| evaluate(model, cluster, &candidates[i], opts, &ctx));
 
     let mut ranked = Vec::with_capacity(n);
     let mut failed = Vec::new();
@@ -258,7 +265,7 @@ pub fn search(
     };
     let baseline = match ranked.iter().find(|ev| ev.candidate == default_cand) {
         Some(ev) => ev.clone(),
-        None => evaluate(model, cluster, &default_cand, opts)?,
+        None => evaluate(model, cluster, &default_cand, opts, &ctx)?,
     };
 
     // Optional simulator-in-the-loop polish: refine the top-ranked
@@ -287,13 +294,14 @@ pub fn search(
             let start = ev.candidate.framework(model, cluster)?;
             // the ranked evaluation already measured this spec under
             // the same conditions — seed it instead of re-simulating
-            let r = refine(
+            let r = refine_with_context(
                 model,
                 cluster,
                 &start,
                 ev.candidate.ring,
                 Some(ev.iteration_time),
                 &ropts,
+                &ctx,
             )?;
             let wins = match &best {
                 None => true,

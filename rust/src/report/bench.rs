@@ -1,0 +1,295 @@
+//! `hetsim bench` — the planner-throughput benchmark behind the repo's
+//! perf trajectory (DESIGN.md §23).
+//!
+//! Runs the two ladders the acceptance criteria track — the Fig-3
+//! plan+refine ladder (`--model fig3 --cluster fig3 --refine --mb-limit
+//! 0`) and the `hetero:a,h` ladder — plus a raw engine-throughput case,
+//! and emits machine-readable `BENCH_plan.json` (candidates/sec,
+//! events/sec, wall-clock). CI runs `hetsim bench --quick --baseline
+//! rust/benches/baseline_plan.json`, uploads the JSON as an artifact
+//! and fails when candidates/sec regresses more than the factor (1.5×
+//! by default) against the committed baseline.
+//!
+//! The baseline numbers are deliberately conservative floors (slow CI
+//! runners must pass); the gate exists to catch order-of-magnitude
+//! regressions of the zero-rebuild evaluation path, not ±10% noise.
+
+use std::time::Instant;
+
+use crate::config::framework::ParallelismSpec;
+use crate::config::presets;
+use crate::planner::{search, PlanOptions};
+use crate::simulator::SimulationBuilder;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::workload::aicb::WorkloadOptions;
+use crate::workload::partition::{fig3_cluster, fig3_model};
+
+/// One benchmark case's measurements.
+#[derive(Debug, Clone)]
+pub struct BenchCase {
+    /// Stable case name (the baseline-matching key).
+    pub name: String,
+    /// Wall-clock seconds of the whole case.
+    pub wall_s: f64,
+    /// Candidate evaluations performed (ranked + failed + refinement
+    /// evaluations; 0 for non-planning cases).
+    pub candidates: u64,
+    /// `candidates / wall_s` — the headline planner-throughput metric.
+    pub candidates_per_sec: f64,
+    /// Discrete events processed. For planning cases this counts the
+    /// *ranked* candidates' iterations only (refinement/baseline
+    /// evaluations don't expose their event counts), so it understates
+    /// the true event volume — informational; the gate for planning
+    /// cases is candidates/sec. Non-planning cases count everything.
+    pub events: u64,
+    /// `events / wall_s` — engine throughput under this case (same
+    /// ranked-only caveat for planning cases).
+    pub events_per_sec: f64,
+    /// Human-readable context for the table output.
+    pub detail: String,
+}
+
+fn case(name: &str, wall_s: f64, candidates: u64, events: u64, detail: String) -> BenchCase {
+    let wall = wall_s.max(f64::MIN_POSITIVE);
+    BenchCase {
+        name: name.to_string(),
+        wall_s,
+        candidates,
+        candidates_per_sec: candidates as f64 / wall,
+        events,
+        events_per_sec: events as f64 / wall,
+        detail,
+    }
+}
+
+/// Run one plan/refine ladder and fold it into a [`BenchCase`].
+fn plan_case(
+    name: &str,
+    model: &crate::config::model::ModelSpec,
+    cluster: &crate::config::cluster::ClusterSpec,
+    opts: &PlanOptions,
+) -> anyhow::Result<BenchCase> {
+    let t0 = Instant::now();
+    let rep = search(model, cluster, opts)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let refine_evals = rep.refined.as_ref().map(|r| r.evaluations).unwrap_or(0);
+    let candidates = (rep.ranked.len() + rep.failed.len()) as u64 + refine_evals;
+    let events: u64 = rep.ranked.iter().map(|ev| ev.events_processed).sum();
+    let detail = format!(
+        "{} ranked, {} pruned, {} refine evals, best {}",
+        rep.ranked.len(),
+        rep.pruned.len(),
+        refine_evals,
+        rep.refined
+            .as_ref()
+            .map(|r| r.refined_time.human())
+            .unwrap_or_else(|| rep.best().iteration_time.human()),
+    );
+    Ok(case(name, wall, candidates, events, detail))
+}
+
+/// Run the bench suite. `quick` shrinks refinement budgets for CI
+/// smoke; `threads` = worker threads per ladder (0 = all cores).
+pub fn run(quick: bool, threads: usize) -> anyhow::Result<Vec<BenchCase>> {
+    let mut out = Vec::new();
+
+    // 1. candidate sweep on the hetero:1,1 preset (the `hetsim plan`
+    //    default scenario)
+    let m = presets::model("gpt-6.7b")?;
+    let c = presets::cluster_hetero(1, 1)?;
+    let sweep_opts = PlanOptions {
+        microbatch_limit: Some(if quick { 1 } else { 2 }),
+        threads,
+        refine_steps: 0,
+    };
+    out.push(plan_case("plan_hetero", &m, &c, &sweep_opts)?);
+
+    // 2. hetero:a,h refine ladder (layer-split polish under the
+    //    default microbatch cap)
+    let refine_opts = PlanOptions {
+        microbatch_limit: Some(1),
+        threads,
+        refine_steps: if quick { 2 } else { 8 },
+    };
+    out.push(plan_case("refine_hetero", &m, &c, &refine_opts)?);
+
+    // 3. Fig-3 refine ladder at full batch (the acceptance scenario:
+    //    `plan --model fig3 --cluster fig3 --refine --mb-limit 0`)
+    let fm = fig3_model()?;
+    let fc = fig3_cluster()?;
+    let fig3_opts = PlanOptions {
+        microbatch_limit: None,
+        threads,
+        refine_steps: if quick { 4 } else { 16 },
+    };
+    out.push(plan_case("refine_fig3", &fm, &fc, &fig3_opts)?);
+
+    // 4. raw engine throughput: repeated iterations of one prepared
+    //    simulation (no planning, pure event loop)
+    let sim = SimulationBuilder::new(m.clone(), c.clone())
+        .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+        .workload_options(WorkloadOptions {
+            microbatch_limit: Some(2),
+            ..Default::default()
+        })
+        .build()?;
+    let iters = if quick { 3 } else { 10 };
+    let t0 = Instant::now();
+    let mut events = 0u64;
+    for _ in 0..iters {
+        events += sim.run_iteration()?.events_processed;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    out.push(case(
+        "engine_events",
+        wall,
+        0,
+        events,
+        format!("{iters} prepared iterations"),
+    ));
+    Ok(out)
+}
+
+/// Render the human-readable table.
+pub fn render(cases: &[BenchCase]) -> Table {
+    let mut t = Table::new(
+        "hetsim bench — planner + engine throughput",
+        &["case", "wall", "cand", "cand/s", "events", "events/s", "detail"],
+    );
+    for c in cases {
+        t.row(vec![
+            c.name.clone(),
+            format!("{:.2}s", c.wall_s),
+            c.candidates.to_string(),
+            format!("{:.1}", c.candidates_per_sec),
+            c.events.to_string(),
+            format!("{:.0}", c.events_per_sec),
+            c.detail.clone(),
+        ]);
+    }
+    t
+}
+
+/// Serialize the suite into the `BENCH_plan.json` document.
+pub fn to_json(cases: &[BenchCase], quick: bool) -> Json {
+    let benchmarks: Vec<Json> = cases
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("name", Json::Str(c.name.clone())),
+                ("wall_s", Json::Num(c.wall_s)),
+                ("candidates", Json::Num(c.candidates as f64)),
+                ("candidates_per_sec", Json::Num(c.candidates_per_sec)),
+                ("events", Json::Num(c.events as f64)),
+                ("events_per_sec", Json::Num(c.events_per_sec)),
+                ("detail", Json::Str(c.detail.clone())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::Num(1.0)),
+        ("quick", Json::Bool(quick)),
+        ("benchmarks", Json::Arr(benchmarks)),
+    ])
+}
+
+/// Compare a run against a committed baseline document. Returns one
+/// message per regression: a case whose candidates/sec (or, for
+/// non-planning cases, events/sec) fell more than `factor`× below the
+/// baseline value. Cases present on only one side are skipped (the
+/// suite may grow).
+pub fn check_against_baseline(cases: &[BenchCase], baseline: &Json, factor: f64) -> Vec<String> {
+    let mut regressions = Vec::new();
+    let Some(bench) = baseline.get("benchmarks").and_then(Json::as_arr) else {
+        return vec!["baseline JSON has no 'benchmarks' array".into()];
+    };
+    for b in bench {
+        let Some(name) = b.get("name").and_then(Json::as_str) else { continue };
+        let Some(cur) = cases.iter().find(|c| c.name == name) else { continue };
+        // planning cases gate on candidates/sec only: an intentional
+        // events-per-candidate reduction (goldens re-recorded) must not
+        // trip the gate on a strictly faster build. Non-planning cases
+        // (candidates == 0) gate on raw engine throughput instead.
+        let (key, have) = if cur.candidates > 0 {
+            ("candidates_per_sec", cur.candidates_per_sec)
+        } else {
+            ("events_per_sec", cur.events_per_sec)
+        };
+        let want = b.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+        if want > 0.0 && have * factor < want {
+            regressions.push(format!(
+                "{name}: {key} {have:.2} is more than {factor}x below baseline {want:.2}"
+            ));
+        }
+    }
+    regressions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(name: &str, cps: f64, eps: f64) -> BenchCase {
+        BenchCase {
+            name: name.into(),
+            wall_s: 1.0,
+            candidates: cps as u64,
+            candidates_per_sec: cps,
+            events: eps as u64,
+            events_per_sec: eps,
+            detail: String::new(),
+        }
+    }
+
+    #[test]
+    fn json_document_is_well_formed() {
+        let cases = vec![fake("plan_hetero", 10.0, 1000.0)];
+        let doc = to_json(&cases, true);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_u64().unwrap(), 1);
+        let b = parsed.get("benchmarks").unwrap().as_arr().unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].get("name").unwrap().as_str().unwrap(), "plan_hetero");
+        assert!(b[0].get("candidates_per_sec").unwrap().as_f64().unwrap() > 9.0);
+    }
+
+    #[test]
+    fn baseline_gate_flags_large_regressions_only() {
+        let baseline = to_json(&[fake("plan_hetero", 10.0, 1000.0)], true);
+        // 20% slower: fine under a 1.5x gate
+        let ok = check_against_baseline(&[fake("plan_hetero", 8.0, 800.0)], &baseline, 1.5);
+        assert!(ok.is_empty(), "{ok:?}");
+        // 3x slower: flagged on candidates/sec only (events/sec may
+        // legitimately drop when a candidate gets cheaper to simulate)
+        let bad = check_against_baseline(&[fake("plan_hetero", 3.0, 300.0)], &baseline, 1.5);
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].contains("candidates_per_sec"), "{bad:?}");
+        // unknown baseline cases are skipped
+        let skip = check_against_baseline(&[fake("other", 1.0, 1.0)], &baseline, 1.5);
+        assert!(skip.is_empty());
+    }
+
+    #[test]
+    fn baseline_gate_checks_events_for_engine_cases() {
+        // a non-planning case (candidates == 0) gates on events/sec
+        let mut engine = fake("engine_events", 0.0, 100_000.0);
+        engine.candidates = 0;
+        let baseline = to_json(&[engine.clone()], true);
+        let mut slow = engine.clone();
+        slow.events_per_sec = 10_000.0;
+        let bad = check_against_baseline(&[slow], &baseline, 1.5);
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].contains("events_per_sec"), "{bad:?}");
+        let ok = check_against_baseline(&[engine], &baseline, 1.5);
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn render_lists_every_case() {
+        let t = render(&[fake("a", 1.0, 2.0), fake("b", 3.0, 4.0)]);
+        let md = t.markdown();
+        assert!(md.contains("| a "));
+        assert!(md.contains("| b "));
+    }
+}

@@ -8,7 +8,12 @@
 //! Each module produces a [`crate::util::table::Table`] (markdown to
 //! stdout, CSV into `results/`) so EXPERIMENTS.md entries are
 //! copy-pasteable and diffs are reviewable.
+//!
+//! [`bench`] is the odd one out: it measures the *simulator itself*
+//! (`hetsim bench`, machine-readable `BENCH_plan.json`) and backs the
+//! CI perf-regression gate.
 
+pub mod bench;
 pub mod fig1;
 pub mod fig5;
 pub mod fig6;

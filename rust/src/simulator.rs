@@ -1,9 +1,35 @@
 //! The HetSim facade: ties configuration, workload generation, cost
 //! evaluation, the system scheduler and the network simulator into one
 //! reproducible run (paper Fig 4's full pipeline).
+//!
+//! ## Zero-rebuild candidate evaluation
+//!
+//! The planner scores thousands of candidate deployments, and each
+//! score used to pay for a fresh [`Topology`], a fresh cost table and a
+//! fresh compile. [`EvalContext`] hoists everything that does **not**
+//! depend on the candidate out of that loop:
+//!
+//! * the built `Arc<Topology>` (a pure function of the cluster) is
+//!   constructed once per search/refine run and shared by every build;
+//! * the cost table is shared monotonically: each candidate build
+//!   starts from a snapshot of all previously evaluated (op, GPU)
+//!   entries ([`crate::compute::table::CostTable::share`]) and writes
+//!   any new entries back, so a distinct descriptor row is evaluated
+//!   once per run, not once per candidate;
+//! * generated workloads + compiled cores are cached keyed by the
+//!   [`crate::config::framework::FrameworkSpec::fingerprint`] of the
+//!   resolved mapping, and full iteration scores are cached under the
+//!   same key — re-scoring a revisited refinement state is a hash
+//!   lookup.
+//!
+//! Entries are pure functions of their keys, so context sharing cannot
+//! change any simulated result: `build_with_context` is bit-identical
+//! to `build`, enforced by tests here and by the golden determinism
+//! suite (`rust/tests/golden_plan.rs`).
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::compute::table::CostTable;
 use crate::config::cluster::ClusterSpec;
@@ -39,6 +65,18 @@ pub struct SimulationBuilder {
     ring_policy: RingPolicy,
     hetero_partitioning: bool,
     schedule: Option<ScheduleKind>,
+    record_trace: bool,
+}
+
+/// The builder's inputs after framework resolution — what every build
+/// path (plain, context, score) consumes.
+struct ResolvedBuild {
+    model: ModelSpec,
+    cluster: ClusterSpec,
+    framework: FrameworkSpec,
+    options: WorkloadOptions,
+    cost_backend: CostBackend,
+    ring_policy: RingPolicy,
     record_trace: bool,
 }
 
@@ -108,16 +146,17 @@ impl SimulationBuilder {
         self
     }
 
-    /// Record a per-rank busy-interval trace (needed for the
-    /// compute/comm breakdown in reports).
+    /// Record a per-rank busy-interval trace. Off by default — the
+    /// cheap path — and the compute/comm busy breakdown no longer
+    /// needs it (the scheduler accumulates those sums directly), so
+    /// only timeline exports (Chrome trace, CSV) should turn it on.
     pub fn record_trace(mut self, on: bool) -> Self {
         self.record_trace = on;
         self
     }
 
-    /// Resolve the framework spec, generate the workload, evaluate the
-    /// cost table.
-    pub fn build(self) -> anyhow::Result<Simulation> {
+    /// Resolve the parallelism degrees and device-group mapping.
+    fn resolve(self) -> anyhow::Result<ResolvedBuild> {
         let par = match self.parallelism {
             Some(p) => p,
             None => infer_parallelism(&self.model, &self.cluster)?,
@@ -133,29 +172,263 @@ impl SimulationBuilder {
             s.validate()?;
             fw.schedule = s;
         }
-        let workload = aicb::generate(&self.model, &self.cluster, &fw, &self.options)?;
-        let mut cost = match self.cost_backend {
+        Ok(ResolvedBuild {
+            model: self.model,
+            cluster: self.cluster,
+            framework: fw,
+            options: self.options,
+            cost_backend: self.cost_backend,
+            ring_policy: self.ring_policy,
+            record_trace: self.record_trace,
+        })
+    }
+
+    /// Resolve the framework spec, generate the workload, evaluate the
+    /// cost table, build the topology, compile.
+    pub fn build(self) -> anyhow::Result<Simulation> {
+        let r = self.resolve()?;
+        let workload = aicb::generate(&r.model, &r.cluster, &r.framework, &r.options)?;
+        let mut cost = match r.cost_backend {
             CostBackend::Native => CostTable::native(),
             CostBackend::Pjrt => {
                 CostTable::new(Box::new(crate::runtime::PjrtCostModel::load()?))
             }
         };
-        aicb::register_costs(&workload, &self.cluster, &mut cost)?;
-        let topology = Arc::new(Topology::build(&self.cluster)?);
+        aicb::register_costs(&workload, &r.cluster, &mut cost)?;
+        let topology = Arc::new(Topology::build(&r.cluster)?);
         let compiled =
-            CompiledWorkload::compile(&workload, &self.cluster, &cost, self.ring_policy)?;
+            CompiledWorkload::compile(&workload, &r.cluster, &cost, r.ring_policy)?;
         Ok(Simulation {
-            model: self.model,
-            cluster: self.cluster,
-            framework: fw,
-            workload,
-            cost,
-            compiled,
+            model: r.model,
+            cluster: r.cluster,
+            framework: r.framework,
+            workload: Arc::new(workload),
+            cost: Arc::new(cost),
+            compiled: Arc::new(compiled),
             topology,
-            ring_policy: self.ring_policy,
-            record_trace: self.record_trace,
+            ring_policy: r.ring_policy,
+            record_trace: r.record_trace,
         })
     }
+
+    /// [`SimulationBuilder::build`] against a shared [`EvalContext`]:
+    /// reuses the context's topology, warm cost cache and (on a
+    /// fingerprint hit) the cached workload + compiled core, so the
+    /// per-candidate cost is workload emission + compile only — or
+    /// nothing at all for a revisited mapping. Native cost backend
+    /// only. The returned simulation is bit-identical to a plain
+    /// `build()` of the same inputs.
+    pub fn build_with_context(self, ctx: &EvalContext) -> anyhow::Result<Simulation> {
+        anyhow::ensure!(
+            self.cost_backend == CostBackend::Native,
+            "EvalContext sharing supports the native cost backend only"
+        );
+        let r = self.resolve()?;
+        ctx.check_inputs(&r.model, &r.cluster)?;
+        let key = eval_key(&r.framework, &r.options, r.ring_policy);
+        let prepared = ctx.prepare(&r, &key)?;
+        Ok(Simulation {
+            model: r.model,
+            cluster: r.cluster,
+            framework: r.framework,
+            workload: prepared.workload,
+            cost: prepared.cost,
+            compiled: prepared.compiled,
+            topology: ctx.topology.clone(),
+            ring_policy: r.ring_policy,
+            record_trace: r.record_trace,
+        })
+    }
+
+    /// Score one candidate against a shared [`EvalContext`]: build (or
+    /// reuse) the compiled core and run one trace-free iteration,
+    /// memoizing the [`EvalScore`] under the candidate's fingerprint —
+    /// the planner's hot path. A revisited refinement state costs one
+    /// hash lookup.
+    pub fn score_with_context(self, ctx: &EvalContext) -> anyhow::Result<EvalScore> {
+        // scoring is the cheap path by construction: no trace recording
+        debug_assert!(
+            !self.record_trace,
+            "score_with_context never records a trace; use build_with_context + \
+             run_iteration for timeline exports"
+        );
+        anyhow::ensure!(
+            self.cost_backend == CostBackend::Native,
+            "EvalContext sharing supports the native cost backend only"
+        );
+        let r = self.resolve()?;
+        ctx.check_inputs(&r.model, &r.cluster)?;
+        let key = eval_key(&r.framework, &r.options, r.ring_policy);
+        if let Some(s) = ctx.scores.lock().unwrap().get(&key).copied() {
+            ctx.score_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(s);
+        }
+        let prepared = ctx.prepare(&r, &key)?;
+        let sched = Scheduler::prepared(&prepared.compiled, &r.cluster, ctx.topology.clone());
+        let rep = sched.run()?;
+        let score = EvalScore {
+            iteration_time: rep.iteration_time,
+            compute_busy: rep.compute_busy,
+            comm_busy: rep.comm_busy,
+            flows_completed: rep.flows_completed,
+            events_processed: rep.events_processed,
+        };
+        ctx.scores.lock().unwrap().entry(key).or_insert(score);
+        Ok(score)
+    }
+}
+
+/// Cache key of one candidate evaluation: the resolved mapping's
+/// fingerprint plus every knob that changes the generated workload or
+/// its compilation.
+fn eval_key(fw: &FrameworkSpec, opts: &WorkloadOptions, ring: RingPolicy) -> String {
+    format!(
+        "{}|mb{}|o{}{}{}|{ring:?}",
+        fw.fingerprint(),
+        opts.microbatch_limit.map(|l| l.to_string()).unwrap_or_else(|| "all".into()),
+        opts.include_other as u8,
+        opts.moe_alltoall as u8,
+        opts.dp_sync as u8,
+    )
+}
+
+/// One cached candidate build (all shared, all immutable).
+#[derive(Clone)]
+struct CachedEval {
+    workload: Arc<Workload>,
+    cost: Arc<CostTable>,
+    compiled: Arc<CompiledWorkload>,
+}
+
+/// Compiled-workload cache bound: full builds are large (op streams +
+/// flow-step templates), so the build cache is flushed wholesale when
+/// it fills — a flush only costs recompiles, never changes results.
+/// Scores are a few machine words each and stay cached for the whole
+/// run.
+const BUILD_CACHE_CAP: usize = 64;
+
+/// Everything a candidate evaluation can share: built once per
+/// search/refine run, borrowed immutably by every worker thread (all
+/// interior mutability is behind mutexes; all cached values are pure
+/// functions of their keys, so sharing is invisible in the results).
+/// See the module docs for the full contract.
+pub struct EvalContext {
+    model: ModelSpec,
+    cluster: ClusterSpec,
+    topology: Arc<Topology>,
+    cost: Mutex<CostTable>,
+    builds: Mutex<HashMap<String, CachedEval>>,
+    scores: Mutex<HashMap<String, EvalScore>>,
+    build_hits: AtomicU64,
+    build_misses: AtomicU64,
+    score_hits: AtomicU64,
+}
+
+impl EvalContext {
+    /// Build the shared state for evaluating candidates of `model` on
+    /// `cluster`: constructs the topology once; cost/build/score caches
+    /// start empty and warm up as candidates are evaluated.
+    pub fn new(model: &ModelSpec, cluster: &ClusterSpec) -> anyhow::Result<EvalContext> {
+        Ok(EvalContext {
+            model: model.clone(),
+            cluster: cluster.clone(),
+            topology: Arc::new(Topology::build(cluster)?),
+            cost: Mutex::new(CostTable::native()),
+            builds: Mutex::new(HashMap::new()),
+            scores: Mutex::new(HashMap::new()),
+            build_hits: AtomicU64::new(0),
+            build_misses: AtomicU64::new(0),
+            score_hits: AtomicU64::new(0),
+        })
+    }
+
+    /// The shared built topology.
+    pub fn topology(&self) -> Arc<Topology> {
+        self.topology.clone()
+    }
+
+    /// Build-cache hits so far (workload + compile skipped entirely).
+    pub fn build_cache_hits(&self) -> u64 {
+        self.build_hits.load(Ordering::Relaxed)
+    }
+
+    /// Build-cache misses so far (full workload emission + compile).
+    pub fn build_cache_misses(&self) -> u64 {
+        self.build_misses.load(Ordering::Relaxed)
+    }
+
+    /// Score-cache hits so far (whole simulated iterations skipped).
+    pub fn score_cache_hits(&self) -> u64 {
+        self.score_hits.load(Ordering::Relaxed)
+    }
+
+    /// Distinct (op, GPU) cost entries evaluated so far across all
+    /// candidates.
+    pub fn cost_entries(&self) -> usize {
+        self.cost.lock().unwrap().cached_len()
+    }
+
+    fn check_inputs(&self, model: &ModelSpec, cluster: &ClusterSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            *model == self.model,
+            "EvalContext was built for model '{}' but used with a different model spec",
+            self.model.name
+        );
+        anyhow::ensure!(
+            *cluster == self.cluster,
+            "EvalContext was built for cluster '{}' but used with a different cluster spec",
+            self.cluster.name
+        );
+        Ok(())
+    }
+
+    /// Fetch or build the (workload, cost, compiled) triple for one
+    /// resolved candidate. Misses run outside the cache locks; two
+    /// workers racing on the same key both compute identical values and
+    /// the first insert wins.
+    fn prepare(&self, r: &ResolvedBuild, key: &str) -> anyhow::Result<CachedEval> {
+        if let Some(hit) = self.builds.lock().unwrap().get(key).cloned() {
+            self.build_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(hit);
+        }
+        self.build_misses.fetch_add(1, Ordering::Relaxed);
+        let workload = aicb::generate(&r.model, &r.cluster, &r.framework, &r.options)?;
+        // warm-start from every entry any candidate evaluated so far
+        let mut cost = self.cost.lock().unwrap().share();
+        let before = cost.cached_len();
+        aicb::register_costs(&workload, &r.cluster, &mut cost)?;
+        if cost.cached_len() > before {
+            self.cost.lock().unwrap().absorb(&cost);
+        }
+        let compiled = CompiledWorkload::compile(&workload, &r.cluster, &cost, r.ring_policy)?;
+        let entry = CachedEval {
+            workload: Arc::new(workload),
+            cost: Arc::new(cost),
+            compiled: Arc::new(compiled),
+        };
+        let mut builds = self.builds.lock().unwrap();
+        if builds.len() >= BUILD_CACHE_CAP {
+            builds.clear();
+        }
+        Ok(builds.entry(key.to_string()).or_insert(entry).clone())
+    }
+}
+
+/// The compact result of scoring one candidate with a full simulated
+/// iteration — everything the planner ranks on, cacheable in a few
+/// machine words.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalScore {
+    /// Simulated wall-clock time of the training iteration.
+    pub iteration_time: Time,
+    /// Summed per-rank compute busy time.
+    pub compute_busy: Time,
+    /// Summed collective busy time.
+    pub comm_busy: Time,
+    /// Network flows completed during the iteration.
+    pub flows_completed: usize,
+    /// Discrete events the engine processed.
+    pub events_processed: u64,
 }
 
 /// Pick parallelism degrees for a cluster: the model's paper deployment
@@ -189,6 +462,8 @@ pub fn infer_parallelism(
 /// `Simulation` is `Send + Sync` — every run borrows the prepared state
 /// immutably, so one build can back many concurrent runs (see
 /// [`Simulation::run_iterations_concurrent`] and the planner's sweep).
+/// The prepared pieces sit behind `Arc`s so an [`EvalContext`] can
+/// share them across candidate builds without copying.
 pub struct Simulation {
     /// Model description the workload was generated from.
     pub model: ModelSpec,
@@ -197,11 +472,11 @@ pub struct Simulation {
     /// Resolved device-group mapping, including the pipeline schedule.
     pub framework: FrameworkSpec,
     /// Generated per-rank programs plus collective definitions.
-    pub workload: Workload,
+    pub workload: Arc<Workload>,
     /// Evaluated compute-cost table (one entry per distinct op × GPU).
-    pub cost: CostTable,
+    pub cost: Arc<CostTable>,
     /// Dense simulation core (durations resolved, collectives planned).
-    pub compiled: CompiledWorkload,
+    pub compiled: Arc<CompiledWorkload>,
     /// Built network graph, shared by all runs of this simulation.
     pub topology: Arc<Topology>,
     /// Fixed at build time (baked into `compiled`); private so it can't
@@ -261,9 +536,9 @@ pub struct SimulationReport {
     pub fct_by_kind: HashMap<&'static str, Samples>,
     /// All FCT samples pooled across kinds.
     pub fct_all: Samples,
-    /// Summed per-rank compute busy time (trace-derived).
+    /// Summed per-rank compute busy time.
     pub compute_busy: Time,
-    /// Summed collective busy time (trace-derived).
+    /// Summed collective busy time.
     pub comm_busy: Time,
 }
 
@@ -371,6 +646,7 @@ mod tests {
     fn simulation_is_send_and_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<Simulation>();
+        assert_send_sync::<EvalContext>();
     }
 
     #[test]
@@ -445,5 +721,88 @@ mod tests {
         let c2 = presets::cluster("hopper", 2).unwrap();
         let p2 = infer_parallelism(&m, &c2).unwrap();
         assert_eq!(p2.world_size(), 16);
+    }
+
+    // ---- EvalContext (zero-rebuild candidate evaluation) ----
+
+    fn ctx_inputs() -> (ModelSpec, ClusterSpec) {
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.num_layers = 2;
+        m.global_batch = 16;
+        m.micro_batch = 8;
+        (m, presets::cluster_hetero(1, 1).unwrap())
+    }
+
+    #[test]
+    fn context_build_matches_plain_build() {
+        let (m, c) = ctx_inputs();
+        let ctx = EvalContext::new(&m, &c).unwrap();
+        let mk = || {
+            SimulationBuilder::new(m.clone(), c.clone())
+                .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+        };
+        let plain = mk().build().unwrap().run_iteration().unwrap();
+        let shared = mk().build_with_context(&ctx).unwrap().run_iteration().unwrap();
+        assert_eq!(plain.iteration_time, shared.iteration_time);
+        assert_eq!(plain.flows_completed, shared.flows_completed);
+        assert_eq!(plain.events_processed, shared.events_processed);
+        assert_eq!(plain.compute_busy, shared.compute_busy);
+        assert_eq!(plain.comm_busy, shared.comm_busy);
+    }
+
+    #[test]
+    fn context_caches_repeat_builds_and_scores() {
+        let (m, c) = ctx_inputs();
+        let ctx = EvalContext::new(&m, &c).unwrap();
+        let mk = || {
+            SimulationBuilder::new(m.clone(), c.clone())
+                .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+        };
+        let a = mk().score_with_context(&ctx).unwrap();
+        assert_eq!(ctx.build_cache_misses(), 1);
+        assert_eq!(ctx.score_cache_hits(), 0);
+        let b = mk().score_with_context(&ctx).unwrap();
+        assert_eq!(ctx.score_cache_hits(), 1, "second score must be a cache hit");
+        assert_eq!(a.iteration_time, b.iteration_time);
+        assert_eq!(a.events_processed, b.events_processed);
+        // a different candidate misses (distinct fingerprint)
+        let other = SimulationBuilder::new(m.clone(), c.clone())
+            .parallelism(ParallelismSpec { tp: 4, pp: 2, dp: 2 })
+            .score_with_context(&ctx)
+            .unwrap();
+        assert_eq!(ctx.build_cache_misses(), 2);
+        assert!(other.iteration_time > Time::ZERO);
+        assert!(ctx.cost_entries() > 0);
+    }
+
+    #[test]
+    fn context_score_matches_full_run() {
+        let (m, c) = ctx_inputs();
+        let ctx = EvalContext::new(&m, &c).unwrap();
+        let mk = || {
+            SimulationBuilder::new(m.clone(), c.clone())
+                .parallelism(ParallelismSpec { tp: 4, pp: 2, dp: 2 })
+                .schedule(ScheduleKind::OneFOneB)
+        };
+        let score = mk().score_with_context(&ctx).unwrap();
+        let full = mk().build().unwrap().run_iteration().unwrap();
+        assert_eq!(score.iteration_time, full.iteration_time);
+        assert_eq!(score.compute_busy, full.compute_busy);
+        assert_eq!(score.comm_busy, full.comm_busy);
+        assert_eq!(score.flows_completed, full.flows_completed);
+        assert_eq!(score.events_processed, full.events_processed);
+    }
+
+    #[test]
+    fn context_rejects_mismatched_inputs() {
+        let (m, c) = ctx_inputs();
+        let ctx = EvalContext::new(&m, &c).unwrap();
+        let mut other = m.clone();
+        other.num_layers += 2;
+        let err = SimulationBuilder::new(other, c.clone())
+            .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+            .build_with_context(&ctx)
+            .unwrap_err();
+        assert!(err.to_string().contains("different model"), "{err}");
     }
 }

@@ -209,6 +209,29 @@ impl CompiledWorkload {
     pub fn op_count(&self) -> usize {
         self.ops.iter().map(Vec::len).sum()
     }
+
+    /// Total flows across all pre-planned collective steps.
+    pub fn planned_flow_count(&self) -> usize {
+        self.steps.iter().flatten().map(Vec::len).sum()
+    }
+
+    /// Engine event-queue capacity hint for one run: sized to the
+    /// *peak concurrency*, not the run's total event count — each rank
+    /// has at most one pending compute event and each in-flight flow
+    /// one completion event, and pops/cancels recycle heap and slab
+    /// space. A generous multiple of (world + largest planned step)
+    /// covers overlapping collectives without reserving the
+    /// total-event-count's worth of memory per scored candidate.
+    pub fn event_capacity_hint(&self) -> usize {
+        self.world as usize * 4 + self.max_step_flows() * 4
+    }
+
+    /// Largest single pre-planned flow step (a lower bound on peak
+    /// concurrent flows; the scheduler uses it to pre-size the flow
+    /// slab and the posted-time scratch buffer).
+    pub fn max_step_flows(&self) -> usize {
+        self.steps.iter().flatten().map(Vec::len).max().unwrap_or(0)
+    }
 }
 
 #[cfg(test)]

@@ -95,9 +95,12 @@ pub struct SchedulerReport {
     pub flows_completed: usize,
     /// Discrete events the engine processed.
     pub events_processed: u64,
-    /// Summed per-rank compute busy time (trace-derived).
+    /// Summed per-rank compute busy time. Accumulated directly by the
+    /// run (two integer adds per op) — available even with trace
+    /// recording off, so planner scoring never pays per-move timeline
+    /// allocations for its compute/comm breakdown.
     pub compute_busy: Time,
-    /// Summed collective busy time (trace-derived).
+    /// Summed collective busy time (same always-on accumulator).
     pub comm_busy: Time,
     /// Per-rank busy-interval trace (empty unless `record_trace`).
     pub trace: TraceRecorder,
@@ -208,11 +211,21 @@ struct Exec<'w> {
     arrival: Vec<Time>,
     msgs: Vec<MsgSlot>,
     trace: TraceRecorder,
+    /// Always-on busy accumulators (see [`SchedulerReport`]).
+    compute_busy: Time,
+    comm_busy: Time,
+    /// Reusable posted-time buffer for collective step launches.
+    posted_scratch: Vec<Time>,
 }
 
 impl<'w> Exec<'w> {
-    fn new(cw: &'w CompiledWorkload, flows: FlowSim, record_trace: bool) -> Self {
+    fn new(cw: &'w CompiledWorkload, mut flows: FlowSim, record_trace: bool) -> Self {
         let world = cw.world as usize;
+        // pre-size the flow slab and record store from compiled counts
+        flows.reserve(
+            cw.max_step_flows() + world,
+            cw.planned_flow_count() + cw.num_msgs as usize,
+        );
         Exec {
             cw,
             record_trace,
@@ -224,12 +237,15 @@ impl<'w> Exec<'w> {
             arrival: vec![Time::ZERO; world],
             msgs: vec![MsgSlot::default(); cw.num_msgs as usize],
             trace: TraceRecorder::new(record_trace),
+            compute_busy: Time::ZERO,
+            comm_busy: Time::ZERO,
+            posted_scratch: Vec::with_capacity(cw.max_step_flows()),
         }
     }
 
     fn run(mut self) -> anyhow::Result<SchedulerReport> {
         let cw = self.cw;
-        let mut eng: Engine<SimEvent> = Engine::new();
+        let mut eng: Engine<SimEvent> = Engine::with_capacity(cw.event_capacity_hint());
         eng.max_events = 500_000_000;
 
         for r in 0..cw.world {
@@ -282,14 +298,19 @@ impl<'w> Exec<'w> {
             fct_all.push(secs);
         }
         let flows_completed = self.flows.records.len();
+        debug_assert!(
+            !self.record_trace
+                || self.compute_busy == self.trace.busy_by_category(TraceCategory::Compute),
+            "compute-busy accumulator diverged from the recorded trace"
+        );
         Ok(SchedulerReport {
             iteration_time: eng.now(),
             fct_by_kind,
             fct_all,
             flows_completed,
             events_processed: eng.processed(),
-            compute_busy: self.trace.busy_by_category(TraceCategory::Compute),
-            comm_busy: self.trace.busy_by_category(TraceCategory::Communication),
+            compute_busy: self.compute_busy,
+            comm_busy: self.comm_busy,
             trace: self.trace,
         })
     }
@@ -308,6 +329,7 @@ impl<'w> Exec<'w> {
             match ops[pc] {
                 DenseOp::Compute { dur, label } => {
                     let now = eng.now();
+                    self.compute_busy += dur;
                     self.trace.record(rank, TraceCategory::Compute, label, now, now + dur);
                     eng.schedule_in(dur, SimEvent::ComputeDone { rank });
                     self.state[r] = RankState::Computing;
@@ -376,9 +398,9 @@ impl<'w> Exec<'w> {
         }
         // Flows are posted at each sender's arrival time (SimAI/ns-3
         // semantics): early posters' FCT absorbs the straggler wait.
-        let posted: Vec<Time> =
-            step.iter().map(|f| self.arrival[f.src as usize]).collect();
-        self.flows.start_many_posted(eng, step, Some(&posted), &SimEvent::FlowDone);
+        self.posted_scratch.clear();
+        self.posted_scratch.extend(step.iter().map(|f| self.arrival[f.src as usize]));
+        self.flows.start_many_posted(eng, step, Some(&self.posted_scratch), &SimEvent::FlowDone);
         Ok(())
     }
 
@@ -416,9 +438,9 @@ impl<'w> Exec<'w> {
             // steps' FCTs also measure from arrival — ns-3 semantics.
             let step = &cw.steps[cid][next];
             self.colls[cid].outstanding = step.len() as u32;
-            let posted: Vec<Time> =
-                step.iter().map(|f| self.arrival[f.src as usize]).collect();
-            self.flows.start_many_posted(eng, step, Some(&posted), &SimEvent::FlowDone);
+            self.posted_scratch.clear();
+            self.posted_scratch.extend(step.iter().map(|f| self.arrival[f.src as usize]));
+            self.flows.start_many_posted(eng, step, Some(&self.posted_scratch), &SimEvent::FlowDone);
             Ok(())
         } else {
             let start = self.colls[cid].start;
@@ -429,8 +451,9 @@ impl<'w> Exec<'w> {
     fn finish(&mut self, eng: &mut Engine<SimEvent>, cid: u32, start: Time) -> anyhow::Result<()> {
         let cw = self.cw;
         let def = &cw.defs[cid as usize];
+        let now = eng.now();
+        self.comm_busy += now - start;
         if self.record_trace {
-            let now = eng.now();
             let r0 = def.ranks.first().copied().unwrap_or(0);
             self.trace.record(r0, TraceCategory::Communication, def.label.clone(), start, now);
         }

@@ -73,6 +73,21 @@ impl Args {
         }
     }
 
+    /// `--name[=N]` flag-or-valued option: `Some(flag_default)` when
+    /// given as a bare flag, `Some(N)` when given a value, `None` when
+    /// absent (the `--refine[=STEPS]` pattern).
+    pub fn opt_u64_flag(&self, name: &str, flag_default: u64) -> anyhow::Result<Option<u64>> {
+        if self.flag(name) {
+            return Ok(Some(flag_default));
+        }
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                anyhow::anyhow!("--{name} expects an unsigned integer, got '{v}'")
+            }),
+        }
+    }
+
     /// `--name` parsed as a float, or a default.
     pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.opt(name) {
@@ -161,6 +176,18 @@ mod tests {
         assert_eq!(a.opt_u64("missing", 7).unwrap(), 7);
         let bad = parse(&["x", "--nodes", "lots"]);
         assert!(bad.opt_u64("nodes", 1).is_err());
+    }
+
+    #[test]
+    fn flag_or_valued_option() {
+        let bare = parse(&["x", "--refine"]);
+        assert_eq!(bare.opt_u64_flag("refine", 64).unwrap(), Some(64));
+        let valued = parse(&["x", "--refine=16"]);
+        assert_eq!(valued.opt_u64_flag("refine", 64).unwrap(), Some(16));
+        let absent = parse(&["x"]);
+        assert_eq!(absent.opt_u64_flag("refine", 64).unwrap(), None);
+        let bad = parse(&["x", "--refine", "soon"]);
+        assert!(bad.opt_u64_flag("refine", 64).is_err());
     }
 
     #[test]

@@ -78,7 +78,7 @@ pub fn generate(
 ) -> anyhow::Result<Workload> {
     fw.validate(model, cluster)?;
     let groups = DeviceGroups::derive(fw);
-    let mut ops: HashMap<u32, Vec<Op>> = HashMap::new();
+    let mut ops: HashMap<u32, Vec<Op>> = HashMap::with_capacity(fw.total_ranks());
     for g in &fw.groups {
         for r in g.ranks() {
             ops.insert(r, Vec::new());
@@ -129,11 +129,25 @@ pub fn generate(
             .map(|s| split_evenly(s.num_layers as u64, vpp as u64))
             .collect();
 
+        // pre-size each rank's op stream from the schedule shape: one
+        // cell emits ~6 ops per layer (2 computes + 2 allreduces +
+        // other + MoE slack) plus boundary transfers — growing these
+        // vectors from empty dominated generator time on big configs
+        let max_layers =
+            g.stages.iter().map(|s| s.num_layers).max().unwrap_or(1) as usize;
+        let cells_per_stage = (vpp as usize) * (m as usize) * 2;
+        let est_per_rank = cells_per_stage
+            * (max_layers.div_ceil(vpp as usize) * 6 + 4);
+        for r in g.ranks() {
+            ops.get_mut(&r).unwrap().reserve(est_per_rank);
+        }
+
         // ---- pass 1: allocate every p2p message tag at its receiving
         // cell, walking the emission order (for GPipe this reproduces
         // the seed generator's tag sequence exactly). Keyed by the
         // receiving cell's (microbatch, direction, virtual stage).
-        let mut tags: HashMap<(u64, bool, u32), Vec<u64>> = HashMap::new();
+        let mut tags: HashMap<(u64, bool, u32), Vec<u64>> =
+            HashMap::with_capacity(cells.len());
         for cell in &cells {
             let v = cell.virtual_stage(pp);
             let has_incoming = if cell.bwd {

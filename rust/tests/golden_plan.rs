@@ -1,0 +1,160 @@
+//! Golden determinism suite for the planner hot path.
+//!
+//! Every optimization of the evaluation pipeline (shared `EvalContext`,
+//! slab event queue, scoped flow rebalance) must be provably
+//! behavior-preserving. Two layers of enforcement:
+//!
+//! 1. **Cross-thread identity** (always on): full rendered plan reports
+//!    for the hetero:1,1 and Fig-3 ladders are byte-identical across
+//!    1/4/8 worker threads, and the context-sharing build path produces
+//!    bit-identical reports to the plain per-candidate build path.
+//! 2. **Golden fingerprints** (self-bootstrapping): the first run
+//!    records each rendered report under `tests/golden/`; subsequent
+//!    runs compare byte-for-byte. Commit the recorded files so future
+//!    perf work diffs against them; if a behavior change is
+//!    *intentional*, delete the stale file and rerun to re-record.
+
+use std::fs;
+use std::path::PathBuf;
+
+use hetsim::config::framework::ParallelismSpec;
+use hetsim::config::model::ModelSpec;
+use hetsim::config::presets;
+use hetsim::planner::{enumerate, search, PlanOptions};
+use hetsim::simulator::{EvalContext, SimulationBuilder};
+use hetsim::workload::aicb::WorkloadOptions;
+use hetsim::workload::partition::{fig3_cluster, fig3_model};
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+/// Compare `content` against the committed golden file, or record it on
+/// first run (bootstrap).
+fn check_golden(name: &str, content: &str) {
+    let path = golden_dir().join(name);
+    if path.exists() {
+        let want = fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            want,
+            content,
+            "golden fingerprint {} drifted — perf work must be behavior-preserving. \
+             If this change is intentional, delete the file and rerun to re-record.",
+            path.display()
+        );
+    } else {
+        fs::create_dir_all(golden_dir()).unwrap();
+        fs::write(&path, content).unwrap();
+        eprintln!(
+            "recorded golden fingerprint {} — commit it to pin this behavior",
+            path.display()
+        );
+    }
+}
+
+fn tiny_model() -> ModelSpec {
+    let mut m = presets::model("gpt-6.7b").unwrap();
+    m.num_layers = 4;
+    m.global_batch = 16;
+    m.micro_batch = 8;
+    m
+}
+
+#[test]
+fn hetero_plan_report_golden_and_thread_invariant() {
+    let m = tiny_model();
+    let c = presets::cluster_hetero(1, 1).unwrap();
+    let render = |threads| {
+        let opts = PlanOptions { microbatch_limit: Some(1), threads, refine_steps: 2 };
+        search(&m, &c, &opts).unwrap().render(0)
+    };
+    let one = render(1);
+    for threads in [4, 8] {
+        assert_eq!(one, render(threads), "threads={threads}");
+    }
+    check_golden("plan_hetero_1_1.txt", &one);
+}
+
+#[test]
+fn fig3_plan_report_golden_and_thread_invariant() {
+    // quick Fig-3 ladder (microbatch-capped; the full-batch acceptance
+    // run lives in integration_planner.rs) — exercises the
+    // memory-relaxed fallback and the variable per-group TP layouts
+    let m = fig3_model().unwrap();
+    let c = fig3_cluster().unwrap();
+    let render = |threads| {
+        let opts = PlanOptions { microbatch_limit: Some(1), threads, refine_steps: 2 };
+        search(&m, &c, &opts).unwrap().render(0)
+    };
+    let one = render(1);
+    for threads in [4, 8] {
+        assert_eq!(one, render(threads), "threads={threads}");
+    }
+    assert!(one.contains("memory"), "fig3 must surface the memory relaxation:\n{one}");
+    check_golden("plan_fig3.txt", &one);
+}
+
+#[test]
+fn context_scores_match_plain_builds_for_every_candidate_kind() {
+    // the zero-rebuild path (shared EvalContext) must be bit-identical
+    // to a cold per-candidate build across the whole candidate space
+    let m = tiny_model();
+    let c = presets::cluster_hetero(1, 1).unwrap();
+    let (candidates, _) = enumerate(&m, &c, Some(1));
+    assert!(candidates.len() >= 8);
+    let ctx = EvalContext::new(&m, &c).unwrap();
+    // a representative slice: first few + every variable-TP layout
+    let picks: Vec<_> = candidates
+        .iter()
+        .take(4)
+        .chain(candidates.iter().filter(|cand| {
+            matches!(cand.layout, hetsim::planner::TpLayout::PerNode(_))
+        }))
+        .take(8)
+        .collect();
+    for cand in picks {
+        let fw = cand.framework(&m, &c).unwrap();
+        let mk = || {
+            SimulationBuilder::new(m.clone(), c.clone())
+                .parallelism(cand.par)
+                .framework(fw.clone())
+                .ring_policy(cand.ring)
+                .workload_options(WorkloadOptions {
+                    microbatch_limit: Some(1),
+                    ..Default::default()
+                })
+        };
+        let plain = mk().build().unwrap().run_iteration().unwrap();
+        let score = mk().score_with_context(&ctx).unwrap();
+        assert_eq!(plain.iteration_time, score.iteration_time, "{}", cand.key());
+        assert_eq!(plain.events_processed, score.events_processed, "{}", cand.key());
+        assert_eq!(plain.flows_completed, score.flows_completed, "{}", cand.key());
+        assert_eq!(plain.compute_busy, score.compute_busy, "{}", cand.key());
+        assert_eq!(plain.comm_busy, score.comm_busy, "{}", cand.key());
+        // scoring twice is a cache hit with the same result
+        let again = mk().score_with_context(&ctx).unwrap();
+        assert_eq!(score.iteration_time, again.iteration_time);
+    }
+    assert!(ctx.score_cache_hits() > 0, "revisited specs must hit the score cache");
+}
+
+#[test]
+fn simulate_timeline_golden() {
+    // a plain (non-planner) simulation fingerprint: pins the engine +
+    // flow-simulator timeline through the queue/rebalance rework
+    let rep = SimulationBuilder::new(tiny_model(), presets::cluster_hetero(1, 1).unwrap())
+        .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+        .build()
+        .unwrap()
+        .run_iteration()
+        .unwrap();
+    let fingerprint = format!(
+        "iteration_ps={}\nevents={}\nflows={}\ncompute_busy_ps={}\ncomm_busy_ps={}\n",
+        rep.iteration_time.as_ps(),
+        rep.events_processed,
+        rep.flows_completed,
+        rep.compute_busy.as_ps(),
+        rep.comm_busy.as_ps(),
+    );
+    check_golden("simulate_hetero_1_1.txt", &fingerprint);
+}
