@@ -18,6 +18,7 @@ pub fn homogenize(cluster: &ClusterSpec, reference: usize) -> anyhow::Result<Clu
     Ok(ClusterSpec {
         name: format!("{}-homogenized-{}", cluster.name, proto.gpu.name),
         nodes: vec![proto; cluster.nodes.len()],
+        fabric: cluster.fabric,
         switch_bw: cluster.switch_bw,
         switch_delay: cluster.switch_delay,
     })

@@ -98,7 +98,8 @@ pub struct InterconnectSpec {
 }
 
 /// One physical server: `gpus_per_node` identical GPUs + one NIC per GPU
-/// (rail-optimized, paper Fig 2).
+/// (rail-optimized, paper Fig 2). Node sizes need not match across the
+/// cluster (e.g. 4-GPU Ampere nodes beside 8-GPU Hopper nodes).
 #[derive(Debug, Clone, PartialEq)]
 pub struct NodeSpec {
     /// The GPU model every slot of this node carries.
@@ -109,14 +110,93 @@ pub struct NodeSpec {
     pub gpus_per_node: u32,
 }
 
+/// Inter-node fabric shape: how the per-node NICs reach each other
+/// across nodes. [`crate::network::topology::Topology::build`] lowers
+/// this into the concrete switch/link graph; `RailOnly` reproduces the
+/// paper's Fig-2 rail design byte-identically and is the default.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum FabricSpec {
+    /// One rail switch per local rank (paper Fig 2): NIC `g` of every
+    /// node hangs off rail switch `g`; cross-rail traffic takes an
+    /// NVLink hop first. Full bisection along each rail.
+    #[default]
+    RailOnly,
+    /// One non-blocking switch connecting every NIC: any NIC reaches
+    /// any NIC in one switch traversal, no rail alignment needed.
+    SingleSwitch,
+    /// Two-tier leaf/spine: each node's NICs share a leaf switch whose
+    /// uplinks to the `spines` spine switches carry the node's
+    /// aggregate NIC bandwidth divided by `spines ×
+    /// oversubscription` — `oversubscription > 1` models a
+    /// bandwidth-tapered (blocking) fabric.
+    LeafSpine {
+        /// Spine switch count (≥ 1).
+        spines: u32,
+        /// Uplink taper factor (1.0 = non-blocking, > 1 = blocking).
+        oversubscription: f64,
+    },
+}
+
+impl FabricSpec {
+    /// Parse the CLI / scenario shorthand: `rail`, `switch`, or
+    /// `spine:S[,OS]` (S spines, oversubscription OS, default 1).
+    pub fn parse(s: &str) -> anyhow::Result<FabricSpec> {
+        match s {
+            "rail" => Ok(FabricSpec::RailOnly),
+            "switch" => Ok(FabricSpec::SingleSwitch),
+            other => {
+                let Some(rest) = other.strip_prefix("spine:") else {
+                    anyhow::bail!(
+                        "unknown fabric '{other}' (expected rail | switch | spine:S[,OS])"
+                    );
+                };
+                let (spines, os) = match rest.split_once(',') {
+                    Some((s, o)) => (s.trim().parse()?, o.trim().parse()?),
+                    None => (rest.trim().parse()?, 1.0),
+                };
+                let f = FabricSpec::LeafSpine { spines, oversubscription: os };
+                f.validate()?;
+                Ok(f)
+            }
+        }
+    }
+
+    /// Display name in the same shorthand grammar [`FabricSpec::parse`]
+    /// accepts.
+    pub fn name(&self) -> String {
+        match self {
+            FabricSpec::RailOnly => "rail".into(),
+            FabricSpec::SingleSwitch => "switch".into(),
+            FabricSpec::LeafSpine { spines, oversubscription } => {
+                format!("spine:{spines},{oversubscription}")
+            }
+        }
+    }
+
+    /// Structural invariants (positive spine count, positive taper).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if let FabricSpec::LeafSpine { spines, oversubscription } = self {
+            anyhow::ensure!(*spines >= 1, "leaf/spine fabric needs at least 1 spine");
+            anyhow::ensure!(
+                *oversubscription > 0.0 && oversubscription.is_finite(),
+                "oversubscription must be positive and finite (got {oversubscription})"
+            );
+        }
+        Ok(())
+    }
+}
+
 /// The training cluster: an ordered list of nodes (possibly mixed
-/// architectures) plus the rail switch fabric parameters.
+/// architectures and node sizes) plus the inter-node fabric shape and
+/// switch parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterSpec {
     /// Display name, e.g. `hetero-1a1h`.
     pub name: String,
     /// Nodes in global-rank order (possibly mixed architectures).
     pub nodes: Vec<NodeSpec>,
+    /// Inter-node fabric shape (rail-only, single switch, leaf/spine).
+    pub fabric: FabricSpec,
     /// Rail/aggregation switch port bandwidth.
     pub switch_bw: Bandwidth,
     /// Switch forwarding delay.
@@ -129,9 +209,36 @@ impl ClusterSpec {
         self.nodes.iter().map(|n| n.gpus_per_node).sum()
     }
 
-    /// GPUs per node (uniform by validation; 0 for an empty cluster).
-    pub fn gpus_per_node(&self) -> u32 {
-        self.nodes.first().map(|n| n.gpus_per_node).unwrap_or(0)
+    /// The common GPUs-per-node count when every node has the same
+    /// size, `None` on mixed-node-size clusters. The explicit
+    /// replacement for the old `gpus_per_node()` (which silently
+    /// returned the *first* node's count): callers must now say whether
+    /// they need the uniform count, the [`Self::min_gpus_per_node`]
+    /// floor or the [`Self::gcd_gpus_per_node`] alignment divisor.
+    pub fn uniform_gpus_per_node(&self) -> Option<u32> {
+        let first = self.nodes.first()?.gpus_per_node;
+        self.nodes.iter().all(|n| n.gpus_per_node == first).then_some(first)
+    }
+
+    /// Smallest node size (0 for an empty cluster) — the intra-node TP
+    /// ceiling every node can honour.
+    pub fn min_gpus_per_node(&self) -> u32 {
+        self.nodes.iter().map(|n| n.gpus_per_node).min().unwrap_or(0)
+    }
+
+    /// Greatest common divisor of all node sizes (0 for an empty
+    /// cluster). Any TP degree dividing it keeps contiguous TP blocks
+    /// inside node boundaries even when node sizes differ, and the
+    /// world size is always divisible by it.
+    pub fn gcd_gpus_per_node(&self) -> u32 {
+        fn gcd(a: u32, b: u32) -> u32 {
+            if b == 0 {
+                a
+            } else {
+                gcd(b, a % b)
+            }
+        }
+        self.nodes.iter().map(|n| n.gpus_per_node).fold(0, gcd)
     }
 
     /// Node index and local rank for a global rank (paper §2 rank rules).
@@ -144,6 +251,29 @@ impl ClusterSpec {
             base += n.gpus_per_node;
         }
         None
+    }
+
+    /// The node hosting a global rank — [`ClusterSpec::locate`] without
+    /// the local-rank half. [`crate::network::topology::Topology`]'s
+    /// prefix-sum rank mapping is defined to agree with this for every
+    /// rank (enforced by `rust/tests/integration_fabric.rs`).
+    pub fn node_of_rank(&self, global_rank: u32) -> Option<u32> {
+        self.locate(global_rank).map(|(n, _)| n)
+    }
+
+    /// Exclusive prefix sums of node sizes, length `nodes + 1`:
+    /// `starts[n]..starts[n + 1]` is node `n`'s global rank range. The
+    /// shared basis of rank↔(node, local) mapping for clusters with
+    /// non-uniform node sizes.
+    pub fn node_starts(&self) -> Vec<u32> {
+        let mut v = Vec::with_capacity(self.nodes.len() + 1);
+        let mut base = 0;
+        v.push(0);
+        for n in &self.nodes {
+            base += n.gpus_per_node;
+            v.push(base);
+        }
+        v
     }
 
     /// The node at `idx` (panics when out of range).
@@ -183,18 +313,15 @@ impl ClusterSpec {
         seen
     }
 
-    /// Validate structural invariants (non-empty, uniform
-    /// `gpus_per_node` for the rail-only topology, positive rates).
+    /// Validate structural invariants (non-empty, positive per-node GPU
+    /// counts and rates, well-formed fabric parameters). Mixed node
+    /// sizes are valid on every fabric — the topology builder maps
+    /// ranks through prefix sums, not a uniform divisor.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(!self.nodes.is_empty(), "cluster has no nodes");
-        let gpn = self.nodes[0].gpus_per_node;
-        anyhow::ensure!(gpn > 0, "gpus_per_node must be positive");
+        self.fabric.validate()?;
         for (i, n) in self.nodes.iter().enumerate() {
-            anyhow::ensure!(
-                n.gpus_per_node == gpn,
-                "rail-only topology requires uniform gpus_per_node (node {i} has {}, node 0 has {gpn})",
-                n.gpus_per_node
-            );
+            anyhow::ensure!(n.gpus_per_node > 0, "node {i}: gpus_per_node must be positive");
             anyhow::ensure!(n.gpu.peak_flops > 0.0, "node {i}: peak_flops must be positive");
             anyhow::ensure!(n.gpu.mem_bw > 0.0, "node {i}: mem_bw must be positive");
         }
@@ -248,10 +375,56 @@ mod tests {
     }
 
     #[test]
-    fn validate_rejects_mixed_gpn() {
+    fn mixed_node_sizes_validate_and_locate() {
         let mut c = presets::cluster_hetero(1, 1).unwrap();
         c.nodes[1].gpus_per_node = 4;
+        c.validate().unwrap();
+        assert_eq!(c.total_gpus(), 12);
+        assert_eq!(c.uniform_gpus_per_node(), None);
+        assert_eq!(c.min_gpus_per_node(), 4);
+        assert_eq!(c.gcd_gpus_per_node(), 4);
+        assert_eq!(c.node_starts(), vec![0, 8, 12]);
+        assert_eq!(c.locate(7), Some((0, 7)));
+        assert_eq!(c.locate(8), Some((1, 0)));
+        assert_eq!(c.locate(11), Some((1, 3)));
+        assert_eq!(c.locate(12), None);
+        for r in 0..12 {
+            assert_eq!(c.node_of_rank(r), c.locate(r).map(|(n, _)| n));
+        }
+    }
+
+    #[test]
+    fn zero_sized_node_rejected() {
+        let mut c = presets::cluster_hetero(1, 1).unwrap();
+        c.nodes[1].gpus_per_node = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn uniform_gpus_per_node_on_uniform_clusters() {
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        assert_eq!(c.uniform_gpus_per_node(), Some(8));
+        assert_eq!(c.gcd_gpus_per_node(), 8);
+    }
+
+    #[test]
+    fn fabric_shorthand_parses_and_roundtrips() {
+        assert_eq!(FabricSpec::parse("rail").unwrap(), FabricSpec::RailOnly);
+        assert_eq!(FabricSpec::parse("switch").unwrap(), FabricSpec::SingleSwitch);
+        assert_eq!(
+            FabricSpec::parse("spine:2,4").unwrap(),
+            FabricSpec::LeafSpine { spines: 2, oversubscription: 4.0 }
+        );
+        assert_eq!(
+            FabricSpec::parse("spine:3").unwrap(),
+            FabricSpec::LeafSpine { spines: 3, oversubscription: 1.0 }
+        );
+        for bad in ["fat-tree", "spine:0", "spine:2,-1", "spine:2,0"] {
+            assert!(FabricSpec::parse(bad).is_err(), "{bad} accepted");
+        }
+        for f in ["rail", "switch", "spine:2,4"] {
+            assert_eq!(FabricSpec::parse(f).unwrap().name(), f);
+        }
     }
 
     #[test]

@@ -3,13 +3,15 @@
 //!
 //! # Scenario format
 //!
-//! A scenario file is one JSON object with four sections (plus two
-//! optional scalars). Unknown keys are ignored.
+//! A scenario file is one JSON object with three required sections
+//! (`model`, `cluster`, `parallelism`) plus optional `fabric`,
+//! `schedule` and `seed`. Unknown keys are ignored.
 //!
 //! ```json
 //! {
 //!   "model": "gpt-6.7b",
 //!   "cluster": {"arch": "hetero", "ampere_nodes": 8, "hopper_nodes": 8},
+//!   "fabric": "rail",
 //!   "parallelism": {"tp": 4, "pp": 1, "dp": 32},
 //!   "schedule": "1f1b",
 //!   "seed": 42
@@ -46,12 +48,27 @@
 //! * shorthand string — `"ampere:16"` / `"hopper:4"` / `"volta:2"` /
 //!   `"blackwell:2"` (N nodes of 8 GPUs; bare `"hopper"` means 16
 //!   nodes), `"hetero:A,H"` (A ampere + H hopper nodes), or `"fig3"`
-//!   (the paper's Fig-3 cluster: one 4×H100 node + one 4×A100 node);
+//!   (the paper's Fig-3 cluster: one 4×H100 node + one 4×A100 node).
+//!   Node counts take an optional `@G` suffix overriding the 8-GPU
+//!   node size: `"ampere:2@4"` is two 4-GPU Ampere nodes,
+//!   `"hetero:1@4,1"` is one 4-GPU Ampere node beside one 8-GPU
+//!   Hopper node (mixed node sizes are first-class, DESIGN.md §24);
 //! * `{"arch": "hetero", "ampere_nodes": 8, "hopper_nodes": 8}` —
 //!   both node counts default to 8;
-//! * `{"arch": "custom", "node_archs": ["ampere", "hopper", ...],
-//!   "name": "mymix"}` — one entry per node for arbitrary mixes;
+//! * `{"arch": "custom", "node_archs": ["ampere", "hopper@4", ...],
+//!   "name": "mymix"}` — one entry per node for arbitrary mixes, each
+//!   with an optional `@G` GPU-count suffix;
 //! * `{"arch": "<preset>", "nodes": 16}` — homogeneous preset cluster.
+//!
+//! ## `fabric` — optional, default `"rail"`
+//!
+//! Inter-node fabric shape ([`crate::config::cluster::FabricSpec`],
+//! DESIGN.md §24): `"rail"` (the paper's rail-only design — the
+//! default, byte-identical to the pre-fabric simulator), `"switch"`
+//! (one non-blocking switch), or `"spine:S,OS"` (two-tier leaf/spine
+//! with `S` spines and oversubscription `OS`; `OS` defaults to 1 when
+//! omitted). An object form `{"kind": "leafspine", "spines": 2,
+//! "oversubscription": 4}` is also accepted.
 //!
 //! ## `parallelism` — required
 //!
@@ -84,10 +101,12 @@
 //! deterministic.
 //!
 //! Complete, loadable examples ship at
-//! `rust/examples/scenario_hetero_1f1b.json` (grid parallelism) and
+//! `rust/examples/scenario_hetero_1f1b.json` (grid parallelism),
 //! `rust/examples/scenario_variable_tp.json` (per-group TP, the Fig-3
-//! deployment); the doctests below parse them on every `cargo test`,
-//! so the examples and this documentation cannot rot apart:
+//! deployment) and `rust/examples/scenario_spine_mixed_nodes.json`
+//! (mixed node sizes on an oversubscribed leaf/spine fabric); the
+//! doctests below parse them on every `cargo test`, so the examples
+//! and this documentation cannot rot apart:
 //!
 //! ```
 //! let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_hetero_1f1b.json");
@@ -113,8 +132,22 @@
 //!     &s.model, &s.cluster, s.per_group_tp.as_deref().unwrap(), true).unwrap();
 //! assert_eq!(fw.groups[0].stages[0].ranks, vec![0, 1, 2]);
 //! ```
+//!
+//! ```
+//! use hetsim::config::cluster::FabricSpec;
+//! let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_spine_mixed_nodes.json");
+//! let text = std::fs::read_to_string(path).unwrap();
+//! let s = hetsim::config::loader::load_scenario(&text).unwrap();
+//! // one 4-GPU A100 node beside one 8-GPU H100 node …
+//! assert_eq!(s.cluster.total_gpus(), 12);
+//! assert_eq!(s.cluster.uniform_gpus_per_node(), None);
+//! // … on a 2-spine leaf/spine fabric oversubscribed 4:1
+//! assert_eq!(s.cluster.fabric, FabricSpec::LeafSpine { spines: 2, oversubscription: 4.0 });
+//! // per-node TP splits matching each node's actual GPU count
+//! assert_eq!(s.per_group_tp, Some(vec![vec![4], vec![4, 4]]));
+//! ```
 
-use crate::config::cluster::ClusterSpec;
+use crate::config::cluster::{ClusterSpec, FabricSpec};
 use crate::config::framework::ParallelismSpec;
 use crate::config::model::{ModelSpec, MoeSpec};
 use crate::config::presets;
@@ -153,7 +186,10 @@ pub fn load_scenario_file(path: &std::path::Path) -> anyhow::Result<Scenario> {
 pub fn load_scenario(text: &str) -> anyhow::Result<Scenario> {
     let v = Json::parse(text)?;
     let model = parse_model(v.req("model")?)?;
-    let cluster = parse_cluster(v.req("cluster")?)?;
+    let mut cluster = parse_cluster(v.req("cluster")?)?;
+    if let Some(f) = v.get("fabric") {
+        cluster.fabric = parse_fabric(f)?;
+    }
     let pv = v.req("parallelism")?;
     let per_group_tp = parse_per_group_tp(pv)?;
     let parallelism = match &per_group_tp {
@@ -203,24 +239,57 @@ pub fn parse_model(v: &Json) -> anyhow::Result<ModelSpec> {
     })
 }
 
+/// Split an optional `@G` node-size suffix off a count or architecture
+/// token: `"2@4"` → (`"2"`, `Some(4)`), `"hopper"` → (`"hopper"`, `None`).
+fn split_gpn(token: &str) -> anyhow::Result<(&str, Option<u32>)> {
+    match token.split_once('@') {
+        None => Ok((token.trim(), None)),
+        Some((head, g)) => {
+            let g: u32 = g.trim().parse().map_err(|_| {
+                anyhow::anyhow!("bad node-size suffix '@{g}' in '{token}' (expected @<gpus>)")
+            })?;
+            anyhow::ensure!(g >= 1, "node size in '{token}' must be >= 1");
+            Ok((head.trim(), Some(g)))
+        }
+    }
+}
+
 /// Parse the `cluster` section: a shorthand string or an inline object
-/// (see the module docs for the accepted shapes).
+/// (see the module docs for the accepted shapes). Node counts accept an
+/// `@G` suffix overriding the default 8-GPU node size.
 pub fn parse_cluster(v: &Json) -> anyhow::Result<ClusterSpec> {
     if let Some(name) = v.as_str() {
         // the paper's Fig-3 cluster: one 4×H100 node + one 4×A100 node
         if name == "fig3" {
             return crate::workload::partition::fig3_cluster();
         }
-        // "hetero:A,H" shorthand: A ampere nodes + H hopper nodes
+        // "hetero:A[@G],H[@G]" shorthand: A ampere nodes + H hopper nodes
         if let Some(rest) = name.strip_prefix("hetero:") {
             let (a, h) = rest.split_once(',').ok_or_else(|| {
                 anyhow::anyhow!("hetero shorthand is 'hetero:<ampere>,<hopper>', got '{name}'")
             })?;
-            return presets::cluster_hetero(a.trim().parse()?, h.trim().parse()?);
+            let (a, ga) = split_gpn(a)?;
+            let (h, gh) = split_gpn(h)?;
+            let (a, h): (u32, u32) = (a.parse()?, h.parse()?);
+            let mut c = presets::cluster_hetero(a, h)?;
+            for (i, n) in c.nodes.iter_mut().enumerate() {
+                let g = if (i as u32) < a { ga } else { gh };
+                if let Some(g) = g {
+                    n.gpus_per_node = g;
+                }
+            }
+            return Ok(c);
         }
-        // "ampere:16" shorthand
+        // "ampere:16" / "ampere:2@4" shorthand
         let (arch, n) = name.split_once(':').unwrap_or((name, "16"));
-        return presets::cluster(arch, n.parse()?);
+        let (n, gpn) = split_gpn(n)?;
+        let mut c = presets::cluster(arch, n.parse()?)?;
+        if let Some(g) = gpn {
+            for node in &mut c.nodes {
+                node.gpus_per_node = g;
+            }
+        }
+        return Ok(c);
     }
     let arch = v.req_str("arch")?;
     match arch {
@@ -229,17 +298,22 @@ pub fn parse_cluster(v: &Json) -> anyhow::Result<ClusterSpec> {
             v.opt_u64("hopper_nodes", 8) as u32,
         ),
         "custom" => {
-            // explicit per-node architecture list
+            // explicit per-node architecture list, optional @G sizes
             let list = v
                 .req("node_archs")?
                 .as_arr()
                 .ok_or_else(|| anyhow::anyhow!("node_archs must be an array"))?;
             let mut nodes = Vec::new();
             for a in list {
-                let arch =
+                let entry =
                     a.as_str().ok_or_else(|| anyhow::anyhow!("node_archs entries are strings"))?;
+                let (arch, gpn) = split_gpn(entry)?;
                 let c = presets::cluster(arch, 1)?;
-                nodes.push(c.nodes[0].clone());
+                let mut node = c.nodes[0].clone();
+                if let Some(g) = gpn {
+                    node.gpus_per_node = g;
+                }
+                nodes.push(node);
             }
             let mut c = presets::cluster("ampere", 1)?;
             c.name = v.opt_str("name", "custom").to_string();
@@ -248,6 +322,41 @@ pub fn parse_cluster(v: &Json) -> anyhow::Result<ClusterSpec> {
         }
         _ => presets::cluster(arch, v.opt_u64("nodes", 16) as u32),
     }
+}
+
+/// Parse the optional `fabric` section: a shorthand string
+/// (`"rail" | "switch" | "spine:S,OS"`, [`FabricSpec::parse`]) or an
+/// object `{"kind": "rail" | "switch" | "leafspine", "spines": S,
+/// "oversubscription": OS}`.
+pub fn parse_fabric(v: &Json) -> anyhow::Result<FabricSpec> {
+    if let Some(s) = v.as_str() {
+        return FabricSpec::parse(s);
+    }
+    let kind = v.req_str("kind")?;
+    let f = match kind {
+        "rail" => FabricSpec::RailOnly,
+        "switch" => FabricSpec::SingleSwitch,
+        "leafspine" | "spine" => {
+            // present-but-malformed values must error, not silently
+            // fall back to defaults (a wrong fabric would be simulated)
+            let spines = match v.get("spines") {
+                None => 1,
+                Some(s) => s.as_u64().ok_or_else(|| {
+                    anyhow::anyhow!("fabric.spines must be an unsigned integer")
+                })? as u32,
+            };
+            let oversubscription = match v.get("oversubscription") {
+                None => 1.0,
+                Some(o) => o.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("fabric.oversubscription must be a number")
+                })?,
+            };
+            FabricSpec::LeafSpine { spines, oversubscription }
+        }
+        other => anyhow::bail!("unknown fabric kind '{other}' (rail | switch | leafspine)"),
+    };
+    f.validate()?;
+    Ok(f)
 }
 
 /// Parse the `parallelism` section (`tp`, `pp`, `dp`, all required).
@@ -443,7 +552,64 @@ mod tests {
         let c = parse_cluster(&Json::Str("fig3".into())).unwrap();
         assert_eq!(c.total_gpus(), 8);
         assert!(!c.is_homogeneous());
-        assert_eq!(c.gpus_per_node(), 4);
+        assert_eq!(c.uniform_gpus_per_node(), Some(4));
+    }
+
+    #[test]
+    fn node_size_suffix_on_shorthands() {
+        let c = parse_cluster(&Json::Str("ampere:2@4".into())).unwrap();
+        assert_eq!(c.nodes.len(), 2);
+        assert_eq!(c.uniform_gpus_per_node(), Some(4));
+        let c = parse_cluster(&Json::Str("hetero:1@4,1".into())).unwrap();
+        assert_eq!(c.total_gpus(), 12);
+        assert_eq!(c.nodes[0].gpus_per_node, 4);
+        assert_eq!(c.nodes[1].gpus_per_node, 8);
+        c.validate().unwrap();
+        let c = parse_cluster(
+            &Json::parse(r#"{"arch": "custom", "node_archs": ["ampere@4", "hopper"]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.nodes[0].gpus_per_node, 4);
+        assert_eq!(c.nodes[1].gpus_per_node, 8);
+        for bad in ["ampere:2@0", "ampere:2@x", "hetero:1@,1"] {
+            assert!(parse_cluster(&Json::Str(bad.into())).is_err(), "{bad} accepted");
+        }
+    }
+
+    #[test]
+    fn fabric_key_parses_both_forms() {
+        let base = r#"{"model": "gpt-6.7b", "cluster": "hetero:1,1",
+            "parallelism": {"tp": 4, "pp": 2, "dp": 2}%FAB%}"#;
+        let s = load_scenario(&base.replace("%FAB%", "")).unwrap();
+        assert_eq!(s.cluster.fabric, FabricSpec::RailOnly);
+        let s = load_scenario(&base.replace("%FAB%", r#", "fabric": "switch""#)).unwrap();
+        assert_eq!(s.cluster.fabric, FabricSpec::SingleSwitch);
+        let s = load_scenario(&base.replace("%FAB%", r#", "fabric": "spine:2,4""#)).unwrap();
+        assert_eq!(
+            s.cluster.fabric,
+            FabricSpec::LeafSpine { spines: 2, oversubscription: 4.0 }
+        );
+        let s = load_scenario(&base.replace(
+            "%FAB%",
+            r#", "fabric": {"kind": "leafspine", "spines": 3, "oversubscription": 2}"#,
+        ))
+        .unwrap();
+        assert_eq!(
+            s.cluster.fabric,
+            FabricSpec::LeafSpine { spines: 3, oversubscription: 2.0 }
+        );
+        assert!(load_scenario(&base.replace("%FAB%", r#", "fabric": "mesh""#)).is_err());
+        assert!(load_scenario(&base.replace("%FAB%", r#", "fabric": "spine:0""#)).is_err());
+        // present-but-malformed object values error instead of
+        // silently simulating a default fabric
+        for bad in [
+            r#", "fabric": {"kind": "leafspine", "spines": "4"}"#,
+            r#", "fabric": {"kind": "leafspine", "spines": 2.5}"#,
+            r#", "fabric": {"kind": "leafspine", "spines": 2, "oversubscription": "2"}"#,
+            r#", "fabric": {"kind": "leafspine", "spines": 0}"#,
+        ] {
+            assert!(load_scenario(&base.replace("%FAB%", bad)).is_err(), "{bad} accepted");
+        }
     }
 
     #[test]

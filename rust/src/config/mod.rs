@@ -16,6 +16,6 @@ pub mod loader;
 pub mod model;
 pub mod presets;
 
-pub use cluster::{ClusterSpec, GpuSpec, InterconnectSpec, NodeSpec};
+pub use cluster::{ClusterSpec, FabricSpec, GpuSpec, InterconnectSpec, NodeSpec};
 pub use framework::{DeviceGroupSpec, FrameworkSpec, ParallelismSpec};
 pub use model::{LayerKind, ModelSpec};

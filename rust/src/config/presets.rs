@@ -5,7 +5,7 @@
 //! `python/compile/model.py` — `rust/tests/integration_runtime.rs`
 //! cross-checks the AOT artifact against these values.
 
-use crate::config::cluster::{ClusterSpec, GpuSpec, InterconnectSpec, NodeSpec};
+use crate::config::cluster::{ClusterSpec, FabricSpec, GpuSpec, InterconnectSpec, NodeSpec};
 use crate::config::model::{ModelSpec, MoeSpec};
 use crate::util::units::{Bandwidth, Time};
 
@@ -126,6 +126,7 @@ pub fn cluster(arch: &str, num_nodes: u32) -> anyhow::Result<ClusterSpec> {
     Ok(ClusterSpec {
         name: format!("{arch}-{num_nodes}n"),
         nodes: vec![n; num_nodes as usize],
+        fabric: FabricSpec::RailOnly,
         switch_bw: Bandwidth::from_gbps(400.0),
         switch_delay: Time::from_ns(300.0),
     })
@@ -140,6 +141,7 @@ pub fn cluster_hetero(ampere_nodes: u32, hopper_nodes: u32) -> anyhow::Result<Cl
     Ok(ClusterSpec {
         name: format!("hetero-{ampere_nodes}a{hopper_nodes}h"),
         nodes,
+        fabric: FabricSpec::RailOnly,
         switch_bw: Bandwidth::from_gbps(400.0),
         switch_delay: Time::from_ns(300.0),
     })
@@ -169,6 +171,7 @@ pub fn cluster_hetero_interconnect(
     Ok(ClusterSpec {
         name: format!("ic-hetero-{first_arch}{first_nodes}-{second_arch}{second_nodes}"),
         nodes,
+        fabric: FabricSpec::RailOnly,
         switch_bw: Bandwidth::from_gbps(400.0),
         switch_delay: Time::from_ns(300.0),
     })

@@ -28,7 +28,8 @@
 //!    simulation core (durations pre-resolved, collectives pre-planned,
 //!    p2p tags validated unique).
 //! 4. **Simulate** — [`engine`] (deterministic discrete-event core),
-//!    [`network`] (rail-only topology, fluid flow simulation with
+//!    [`network`] (configurable fabric topology — rail-only, single
+//!    switch or leaf/spine — and fluid flow simulation with
 //!    per-interconnect delays, C4) and [`compute`] (roofline cost
 //!    model; [`runtime`] swaps in the PJRT-executed AOT artifact).
 //! 5. **Consume** — [`simulator`] ties it into one reusable

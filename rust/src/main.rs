@@ -20,8 +20,8 @@ fn usage() -> Usage {
         program: "hetsim",
         about: "heterogeneity-aware LLM training simulator (CS.DC 2025 reproduction)",
         commands: vec![
-            ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N] [--schedule gpipe|1f1b|interleaved:V] [--iterations N --threads N]"),
-            ("plan", "rank TPxPPxDPxschedule plans (+ variable per-group TP layouts on hetero clusters) [--model NAME --cluster SPEC --threads N --mb-limit N (0=all) --top K --refine[=STEPS]]"),
+            ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N] [--fabric rail|switch|spine:S,OS] [--schedule gpipe|1f1b|interleaved:V] [--iterations N --threads N]"),
+            ("plan", "rank TPxPPxDPxschedule plans (+ variable per-group TP layouts on hetero clusters) [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --threads N --mb-limit N (0=all) --top K --refine[=STEPS]]"),
             ("bench", "planner/engine throughput ladders -> BENCH_plan.json [--quick --threads N --out FILE --baseline FILE --factor F]"),
             ("fig1", "hardware-evolution trend across generation presets"),
             ("fig5", "per-layer compute time across GPU generations [--backend native|pjrt]"),
@@ -76,10 +76,10 @@ fn cost_backend(args: &Args) -> Result<CostBackend> {
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     args.check_known(&[
-        "config", "model", "cluster", "tp", "pp", "dp", "schedule", "backend", "mb-limit",
-        "hetero-partition", "naive-ring", "iterations", "threads",
+        "config", "model", "cluster", "fabric", "tp", "pp", "dp", "schedule", "backend",
+        "mb-limit", "hetero-partition", "naive-ring", "iterations", "threads",
     ])?;
-    let (model, cluster, par, schedule, per_group_tp) =
+    let (model, mut cluster, par, schedule, per_group_tp) =
         if let Some(path) = args.opt("config") {
             let s = loader::load_scenario_file(std::path::Path::new(path))?;
             (s.model, s.cluster, Some(s.parallelism), Some(s.schedule), s.per_group_tp)
@@ -98,6 +98,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             };
             (model, cluster, par, None, None)
         };
+    // --fabric overrides the cluster's (or the config file's) fabric
+    if let Some(f) = args.opt("fabric") {
+        cluster.fabric = hetsim::config::cluster::FabricSpec::parse(f)?;
+    }
     // per-group TP scenarios carry their own device-group mapping,
     // built by the heterogeneity-aware partitioner (layers/batch
     // proportional to compute power)
@@ -176,11 +180,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
-    args.check_known(&["model", "cluster", "threads", "mb-limit", "top", "refine"])?;
+    args.check_known(&["model", "cluster", "fabric", "threads", "mb-limit", "top", "refine"])?;
     let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
-    let cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
+    let mut cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
         args.opt_or("cluster", "hetero:1,1").to_string(),
     ))?;
+    if let Some(f) = args.opt("fabric") {
+        cluster.fabric = hetsim::config::cluster::FabricSpec::parse(f)?;
+    }
     let mb_limit = args.opt_u64("mb-limit", 2)?;
     // --refine (bare flag: default budget) or --refine=STEPS / --refine STEPS
     let refine_steps = args.opt_u64_flag("refine", 64)?.unwrap_or(0);
@@ -192,10 +199,11 @@ fn cmd_plan(args: &Args) -> Result<()> {
     };
     let top = args.opt_u64("top", 10)? as usize;
     println!(
-        "# plan search: {} on {} ({} GPUs)\n",
+        "# plan search: {} on {} ({} GPUs, fabric {})\n",
         model.name,
         cluster.name,
-        cluster.total_gpus()
+        cluster.total_gpus(),
+        cluster.fabric.name()
     );
     let report = hetsim::planner::search(&model, &cluster, &opts)?;
     print!("{}", report.render(top));

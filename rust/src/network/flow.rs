@@ -1,6 +1,6 @@
 //! Max-min fair fluid-flow simulation (system S9).
 //!
-//! Each flow traverses a fixed rail-only route; its instantaneous rate
+//! Each flow traverses a fixed fabric route; its instantaneous rate
 //! is the max-min fair share across the links of that route (progressive
 //! filling). Rates are recomputed whenever a flow arrives or departs —
 //! the classic fluid approximation of per-packet network simulation,

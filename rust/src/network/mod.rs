@@ -1,20 +1,26 @@
-//! Heterogeneity-aware network layer (system S9, paper component
+//! Heterogeneity-aware network layer (system S9/S24, paper component
 //! **C4**).
 //!
 //! Replaces SimAI's ns-3 backend with a flow-level (fluid) network
-//! simulator over an explicit rail-only topology:
+//! simulator over an explicit, configurable fabric:
 //!
 //! * [`topology`] — builds the device/link graph from a
 //!   [`crate::config::ClusterSpec`]: GPUs, NVSwitch, PCIe channels,
-//!   NICs and rail switches, each link carrying the Table-5 bandwidth
-//!   and fixed per-hop delay (the paper's modified `QbbChannel`).
-//! * [`routing`] — rail-only path computation (paper Fig 2 cases a-c).
+//!   NICs, and the inter-node fabric selected by
+//!   [`crate::config::cluster::FabricSpec`] (rail-only switches, one
+//!   non-blocking switch, or a two-tier leaf/spine with configurable
+//!   oversubscription). Each link carries the Table-5 bandwidth and
+//!   fixed per-hop delay; the jumbo-frame serialization-delay formula
+//!   from §5 (the modified `QbbChannel`, formerly the separate `qbb`
+//!   module) lives alongside the link builder as
+//!   [`topology::frame_delay`].
+//! * [`routing`] — fabric-dispatched path assembly (paper Fig 2 cases
+//!   a–c on the rail fabric, switch/leaf-spine traversals otherwise),
+//!   correct for clusters whose nodes carry different GPU counts.
 //! * [`flow`] — max-min fair fluid flow simulation producing per-flow
 //!   completion times (FCTs, the paper's Fig-6 metric).
-//! * [`qbb`] — the jumbo-frame serialization-delay formula from §5.
 
 pub mod flow;
-pub mod qbb;
 pub mod routing;
 pub mod topology;
 

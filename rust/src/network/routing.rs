@@ -1,13 +1,26 @@
-//! Rail-only route computation (paper Fig 2).
+//! Fabric-dispatched route assembly (paper Fig 2, generalized per
+//! DESIGN.md §24).
 //!
-//! Three cases:
-//! * (a) intra-node: GPU → NVSwitch → GPU.
-//! * (b) inter-node, same local rank `r`: GPU → NIC (PCIe, 2 trips) →
-//!   rail switch `r` → NIC → GPU.
-//! * (c) inter-node, different local rank: first an NVLink hop to the
-//!   source-node GPU that sits on the destination's rail, then case (b)
-//!   along that rail. (Rail-only design: no traffic crosses aggregation
-//!   switches, paper §2.)
+//! Intra-node traffic rides the NVSwitch on every fabric:
+//! GPU → NVSwitch → GPU. Inter-node assembly depends on the built
+//! fabric ([`Topology::fabric`]):
+//!
+//! * **RailOnly** (paper Fig 2 cases a–c): flows ride the destination's
+//!   rail; a source-side NVLink hop reaches the GPU sitting on that
+//!   rail when the source local rank differs. On mixed-node-size
+//!   clusters the rail index is `dst_local mod src_node_gpus` (every
+//!   node owns rails `0..gpus_per_node`, so both endpoints must share
+//!   one), and a destination-side NVLink hop finishes the path when the
+//!   shared rail is not the destination's own. On uniform clusters the
+//!   shared rail *is* `dst_local` — routes are byte-identical to the
+//!   pre-fabric implementation.
+//! * **SingleSwitch**: GPU → NIC → switch → NIC → GPU; each endpoint
+//!   uses its own NIC (no rail alignment, no NVLink detours).
+//! * **LeafSpine**: GPU → NIC → leaf → spine → leaf → NIC → GPU, with
+//!   the spine chosen by the deterministic index rule
+//!   [`Topology::spine_for`].
+
+use crate::config::cluster::FabricSpec;
 
 use super::topology::{LinkId, Topology};
 
@@ -25,8 +38,8 @@ impl Route {
     }
 }
 
-/// Compute the rail-only route between two global ranks.
-/// Returns an empty route for self-communication (zero-copy).
+/// Compute the route between two global ranks under the topology's
+/// fabric. Returns an empty route for self-communication (zero-copy).
 pub fn route(topo: &Topology, src_rank: u32, dst_rank: u32) -> Route {
     if src_rank == dst_rank {
         return Route { links: vec![] };
@@ -35,24 +48,51 @@ pub fn route(topo: &Topology, src_rank: u32, dst_rank: u32) -> Route {
     let (dn, dl) = topo.locate(dst_rank);
 
     if sn == dn {
-        // (a) intra-node via NVSwitch
+        // intra-node via NVSwitch (every fabric)
         return Route {
             links: vec![topo.l_gpu_to_nvsw(sn, sl), topo.l_nvsw_to_gpu(sn, dl)],
         };
     }
 
-    let mut links = Vec::with_capacity(6);
-    let rail = dl; // flows ride the destination's rail
-    if sl != dl {
-        // (c) NVLink hop to the GPU on the destination rail first
-        links.push(topo.l_gpu_to_nvsw(sn, sl));
-        links.push(topo.l_nvsw_to_gpu(sn, rail));
+    let mut links = Vec::with_capacity(8);
+    match topo.fabric {
+        FabricSpec::RailOnly => {
+            // flows ride the destination's rail; on mixed node sizes the
+            // rail must exist on the source node too, so fold it into
+            // the source's rail range (identity on uniform clusters)
+            let rail = dl % topo.node_gpus(sn);
+            if sl != rail {
+                // NVLink hop to the source GPU on the shared rail first
+                links.push(topo.l_gpu_to_nvsw(sn, sl));
+                links.push(topo.l_nvsw_to_gpu(sn, rail));
+            }
+            links.push(topo.l_gpu_to_nic(sn, rail));
+            links.push(topo.l_nic_up(sn, rail));
+            links.push(topo.l_nic_down(dn, rail));
+            links.push(topo.l_nic_to_gpu(dn, rail));
+            if rail != dl {
+                // destination sits off the shared rail (only possible
+                // with non-uniform node sizes): final NVLink hop
+                links.push(topo.l_gpu_to_nvsw(dn, rail));
+                links.push(topo.l_nvsw_to_gpu(dn, dl));
+            }
+        }
+        FabricSpec::SingleSwitch => {
+            links.push(topo.l_gpu_to_nic(sn, sl));
+            links.push(topo.l_nic_up(sn, sl));
+            links.push(topo.l_nic_down(dn, dl));
+            links.push(topo.l_nic_to_gpu(dn, dl));
+        }
+        FabricSpec::LeafSpine { .. } => {
+            let s = topo.spine_for(src_rank, dst_rank);
+            links.push(topo.l_gpu_to_nic(sn, sl));
+            links.push(topo.l_nic_up(sn, sl));
+            links.push(topo.l_leaf_up(sn, s));
+            links.push(topo.l_leaf_down(dn, s));
+            links.push(topo.l_nic_down(dn, dl));
+            links.push(topo.l_nic_to_gpu(dn, dl));
+        }
     }
-    // (b) up the rail
-    links.push(topo.l_gpu_to_nic(sn, rail));
-    links.push(topo.l_nic_up(sn, rail));
-    links.push(topo.l_nic_down(dn, rail));
-    links.push(topo.l_nic_to_gpu(dn, dl));
     Route { links }
 }
 
@@ -147,5 +187,81 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn rail_routes_on_mixed_node_sizes_fold_to_shared_rails() {
+        // 4-GPU node 0 beside 8-GPU node 1: a flow from node 0 to local
+        // rank 6 of node 1 must ride a rail < 4 and finish with an
+        // NVLink hop on the destination node
+        let mut c = presets::cluster("ampere", 2).unwrap();
+        c.nodes[0].gpus_per_node = 4;
+        let t = Topology::build(&c).unwrap();
+        let r = route(&t, 0, t.rank_of(1, 6)); // rail = 6 % 4 = 2
+        let kinds: Vec<LinkKind> = r.links.iter().map(|l| t.link(*l).kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                LinkKind::NvLink, // 0 -> rail-2 GPU on node 0
+                LinkKind::NvLink,
+                LinkKind::Pcie,
+                LinkKind::NicUp,
+                LinkKind::NicDown,
+                LinkKind::Pcie,
+                LinkKind::NvLink, // rail-2 GPU on node 1 -> local 6
+                LinkKind::NvLink,
+            ]
+        );
+        // link-contiguity across the whole path
+        for w in r.links.windows(2) {
+            assert_eq!(t.link(w[0]).to, t.link(w[1]).from);
+        }
+        // and the reverse direction works too
+        let back = route(&t, t.rank_of(1, 6), 0);
+        assert!(back.hops() >= 4);
+    }
+
+    #[test]
+    fn single_switch_routes_use_own_nics() {
+        let mut c = presets::cluster("ampere", 2).unwrap();
+        c.fabric = crate::config::cluster::FabricSpec::SingleSwitch;
+        let t = Topology::build(&c).unwrap();
+        // cross-rail inter-node: no NVLink detour on the one-switch fabric
+        let r = route(&t, 7, 8);
+        let kinds: Vec<LinkKind> = r.links.iter().map(|l| t.link(*l).kind).collect();
+        assert_eq!(kinds, vec![LinkKind::Pcie, LinkKind::NicUp, LinkKind::NicDown, LinkKind::Pcie]);
+        match t.link(r.links[1]).from {
+            NodeRef::Nic { node, local } => assert_eq!((node, local), (0, 7)),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn leaf_spine_routes_traverse_both_tiers() {
+        let mut c = presets::cluster("ampere", 2).unwrap();
+        c.fabric = crate::config::cluster::FabricSpec::LeafSpine {
+            spines: 2,
+            oversubscription: 2.0,
+        };
+        let t = Topology::build(&c).unwrap();
+        let r = route(&t, 3, 12);
+        let kinds: Vec<LinkKind> = r.links.iter().map(|l| t.link(*l).kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                LinkKind::Pcie,
+                LinkKind::NicUp,
+                LinkKind::LeafUp,
+                LinkKind::LeafDown,
+                LinkKind::NicDown,
+                LinkKind::Pcie
+            ]
+        );
+        for w in r.links.windows(2) {
+            assert_eq!(t.link(w[0]).to, t.link(w[1]).from);
+        }
+        // both directions of one pair may use different spines — but
+        // each is deterministic
+        assert_eq!(route(&t, 3, 12), route(&t, 3, 12));
     }
 }

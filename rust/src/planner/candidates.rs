@@ -169,6 +169,18 @@ pub enum PruneReason {
         /// GPUs per node of the smallest node.
         gpn: u32,
     },
+    /// On mixed-node-size clusters, contiguous TP blocks stay inside
+    /// node boundaries only when the TP degree divides every node's
+    /// GPU count (equivalently, the node-size GCD) — a degree that
+    /// fits the smallest node can still straddle a boundary.
+    #[error(
+        "TP degree {tp} does not divide every node size on a \
+         mixed-node-size cluster (TP blocks would straddle node boundaries)"
+    )]
+    MisalignedTp {
+        /// Rejected TP degree.
+        tp: u32,
+    },
     /// The uniform mapping needs `layers % pp == 0`.
     #[error("PP degree {pp} does not divide the {layers} model layers")]
     IndivisibleLayers {
@@ -320,11 +332,18 @@ pub fn enumerate_with_memory(
     check_memory: bool,
 ) -> (Vec<PlanCandidate>, Vec<PrunedCandidate>) {
     let world = cluster.total_gpus();
-    // smallest node bounds intra-node TP (defensive: validated clusters
-    // have uniform gpus_per_node, but don't trust only the first node)
-    let gpn = cluster.nodes.iter().map(|n| n.gpus_per_node).min().unwrap_or(0);
+    // the smallest node bounds intra-node TP — every node must be able
+    // to host a full TP group
+    let gpn = cluster.min_gpus_per_node();
+    // on mixed node sizes a tp <= gpn block can still straddle a node
+    // boundary; blocks align iff tp divides every node size (the GCD)
+    let uniform_sizes = cluster.uniform_gpus_per_node().is_some();
+    let size_gcd = cluster.gcd_gpus_per_node().max(1);
     let min_mem = cluster.nodes.iter().map(|n| n.gpu.mem_capacity).min().unwrap_or(0);
-    let hetero = !cluster.is_homogeneous();
+    // mixed node *sizes* open the variable-layout space too: per-node
+    // TP splits are the only layouts whose TP groups are guaranteed to
+    // align with node boundaries on such clusters
+    let hetero = !cluster.is_homogeneous() || !uniform_sizes;
     let mut keep = Vec::new();
     let mut pruned = Vec::new();
     for tp in 1..=world {
@@ -340,6 +359,8 @@ pub fn enumerate_with_memory(
             let weights = memory_bytes_per_gpu(model, tp, pp);
             let reason = if tp > gpn {
                 Some(PruneReason::CrossNodeTp { tp, gpn })
+            } else if !uniform_sizes && size_gcd % tp != 0 {
+                Some(PruneReason::MisalignedTp { tp })
             } else if model.num_layers % pp != 0 {
                 Some(PruneReason::IndivisibleLayers { pp, layers: model.num_layers })
             } else if u64::from(dp) > model.global_batch {
@@ -406,8 +427,10 @@ pub fn enumerate_with_memory(
 }
 
 /// The variable-layout arm of [`enumerate`]: one device group per node,
-/// per-architecture intra-node TP splits, feasibility-checked with the
-/// same typed prunes as the grid arm.
+/// per-**node-class** intra-node TP splits (a class is one `(GPU
+/// architecture, node size)` pair, so 4-GPU Ampere nodes and 8-GPU
+/// Hopper nodes each pick from their own [`node_splits`] menu),
+/// feasibility-checked with the same typed prunes as the grid arm.
 fn enumerate_variable(
     model: &ModelSpec,
     cluster: &ClusterSpec,
@@ -416,20 +439,38 @@ fn enumerate_variable(
     keep: &mut Vec<PlanCandidate>,
     pruned: &mut Vec<PrunedCandidate>,
 ) {
-    let gpn = cluster.gpus_per_node();
-    if gpn == 0 {
+    if cluster.min_gpus_per_node() == 0 {
         return;
     }
-    let archs = cluster.gpu_types();
-    let options = node_splits(gpn);
-    // cartesian product: one split choice per architecture, in stable
-    // (first-appearance arch, split-index) order
+    // node classes in first-appearance order: all nodes of one class
+    // share a split (on uniform-size clusters classes == architectures,
+    // reproducing the pre-fabric enumeration exactly)
+    let mut classes: Vec<(&str, u32)> = Vec::new();
+    for n in &cluster.nodes {
+        let key = (n.gpu.name.as_str(), n.gpus_per_node);
+        if !classes.contains(&key) {
+            classes.push(key);
+        }
+    }
+    let options: Vec<Vec<Vec<u32>>> =
+        classes.iter().map(|(_, g)| node_splits(*g)).collect();
+    // combo-invariant node → class index map, resolved once
+    let node_class: Vec<usize> = cluster
+        .nodes
+        .iter()
+        .map(|n| {
+            let key = (n.gpu.name.as_str(), n.gpus_per_node);
+            classes.iter().position(|c| *c == key).unwrap_or(0)
+        })
+        .collect();
+    // cartesian product: one split choice per class, in stable
+    // (first-appearance class, split-index) order
     let mut combos: Vec<Vec<usize>> = vec![Vec::new()];
-    for _ in 0..archs.len() {
+    for opts in &options {
         combos = combos
             .into_iter()
             .flat_map(|c| {
-                (0..options.len()).map(move |i| {
+                (0..opts.len()).map(move |i| {
                     let mut next = c.clone();
                     next.push(i);
                     next
@@ -438,19 +479,16 @@ fn enumerate_variable(
             .collect();
     }
     let per_param = model.dtype_bytes + model.grad_dtype_bytes + 8;
+    // every class on one whole-node TP group duplicates the uniform
+    // `tp = gpn, pp = 1` grid — but only when one grid can express it
+    // (uniform node sizes); on mixed sizes it is a genuinely new layout
+    let skip_whole_node = cluster.uniform_gpus_per_node().is_some();
     for combo in combos {
-        // every arch on one TP group == the uniform tp=gpn, pp=1 grid
-        if combo.iter().all(|i| *i == 0) {
+        if skip_whole_node && combo.iter().all(|i| *i == 0) {
             continue;
         }
-        let splits: Vec<Vec<u32>> = cluster
-            .nodes
-            .iter()
-            .map(|n| {
-                let a = archs.iter().position(|t| *t == n.gpu.name).unwrap_or(0);
-                options[combo[a]].clone()
-            })
-            .collect();
+        let splits: Vec<Vec<u32>> =
+            node_class.iter().map(|&a| options[a][combo[a]].clone()).collect();
         let layout = TpLayout::PerNode(splits.clone());
         let max_tp = splits.iter().flatten().copied().max().unwrap_or(1);
         let max_pp = splits.iter().map(Vec::len).max().unwrap_or(1) as u32;
@@ -637,6 +675,61 @@ mod tests {
             "fig3 layout missing from {} candidates",
             keep.len()
         );
+    }
+
+    #[test]
+    fn mixed_node_sizes_enumerate_per_class_variable_layouts() {
+        // 4-GPU ampere node beside an 8-GPU hopper node: classes are
+        // (A100, 4) and (H100, 8), each with its own split menu; the
+        // whole-node assignment [4],[8] is kept (no grid expresses it)
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.global_batch = 16;
+        m.micro_batch = 8;
+        let mut c = presets::cluster_hetero(1, 1).unwrap();
+        c.nodes[0].gpus_per_node = 4;
+        let (keep, _) = enumerate(&m, &c, Some(1));
+        let var: Vec<_> = keep
+            .iter()
+            .filter_map(|cand| match &cand.layout {
+                TpLayout::PerNode(s) => Some(s),
+                TpLayout::Uniform => None,
+            })
+            .collect();
+        assert!(!var.is_empty(), "no variable layouts on a mixed-size cluster");
+        // every layout matches each node's actual GPU count
+        for splits in &var {
+            assert_eq!(splits.len(), 2);
+            assert_eq!(splits[0].iter().sum::<u32>(), 4);
+            assert_eq!(splits[1].iter().sum::<u32>(), 8);
+        }
+        // the whole-node [4],[8] layout is in the space
+        assert!(var.iter().any(|s| **s == vec![vec![4], vec![8]]));
+        // grid candidates are bounded by the smallest node AND keep TP
+        // blocks aligned with node boundaries (tp divides every size)
+        for cand in keep.iter().filter(|cand| cand.layout == TpLayout::Uniform) {
+            assert!(cand.par.tp <= 4);
+            assert_eq!(c.gcd_gpus_per_node() % cand.par.tp, 0, "tp {}", cand.par.tp);
+        }
+    }
+
+    #[test]
+    fn straddling_tp_blocks_pruned_as_misaligned_on_mixed_sizes() {
+        // nodes of 3 and 5 GPUs: world = 8, min gpn = 3 — tp = 2 fits
+        // the smallest node but its contiguous blocks straddle the
+        // node boundary at rank 3, so it must fall with a typed reason
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.global_batch = 16;
+        m.micro_batch = 8;
+        let mut c = presets::cluster_hetero(1, 1).unwrap();
+        c.nodes[0].gpus_per_node = 3;
+        c.nodes[1].gpus_per_node = 5;
+        let (keep, pruned) = enumerate(&m, &c, Some(1));
+        assert!(keep
+            .iter()
+            .all(|cand| cand.layout != TpLayout::Uniform || cand.par.tp == 1));
+        assert!(pruned
+            .iter()
+            .any(|p| matches!(p.reason, PruneReason::MisalignedTp { tp: 2 })));
     }
 
     #[test]

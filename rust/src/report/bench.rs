@@ -3,8 +3,10 @@
 //!
 //! Runs the two ladders the acceptance criteria track — the Fig-3
 //! plan+refine ladder (`--model fig3 --cluster fig3 --refine --mb-limit
-//! 0`) and the `hetero:a,h` ladder — plus a raw engine-throughput case,
-//! and emits machine-readable `BENCH_plan.json` (candidates/sec,
+//! 0`) and the `hetero:a,h` ladder — plus a raw engine-throughput case
+//! and a fabric-build + routing-throughput case (leaf/spine over mixed
+//! node sizes, DESIGN.md §24), and emits machine-readable
+//! `BENCH_plan.json` (candidates/sec,
 //! events/sec, wall-clock). CI runs `hetsim bench --quick --baseline
 //! rust/benches/baseline_plan.json`, uploads the JSON as an artifact
 //! and fails when candidates/sec regresses more than the factor (1.5×
@@ -147,6 +149,43 @@ pub fn run(quick: bool, threads: usize) -> anyhow::Result<Vec<BenchCase>> {
         0,
         events,
         format!("{iters} prepared iterations"),
+    ));
+
+    // 5. fabric build + routing throughput: repeatedly build the
+    //    leaf/spine topology of a mixed-node-size cluster and assemble
+    //    every src→dst route (the per-flow hot path of the fluid
+    //    simulator). Gated on events/sec (= routes/sec) like the
+    //    engine case.
+    let mut fc2 = presets::cluster_hetero(2, 2)?;
+    fc2.nodes[0].gpus_per_node = 4;
+    fc2.nodes[1].gpus_per_node = 4;
+    fc2.fabric =
+        crate::config::cluster::FabricSpec::LeafSpine { spines: 4, oversubscription: 2.0 };
+    let reps = if quick { 20 } else { 100 };
+    let t0 = Instant::now();
+    let mut routes = 0u64;
+    let mut hops = 0u64;
+    for _ in 0..reps {
+        let topo = crate::network::topology::Topology::build(&fc2)?;
+        let world = topo.total_gpus();
+        for s in 0..world {
+            for d in 0..world {
+                hops += crate::network::routing::route(&topo, s, d).hops() as u64;
+                routes += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    out.push(case(
+        "fabric_routing",
+        wall,
+        0,
+        routes,
+        format!(
+            "{reps} leaf/spine builds of {} ({} GPUs), all-pairs routes, {hops} hops",
+            fc2.name,
+            fc2.total_gpus()
+        ),
     ));
     Ok(out)
 }

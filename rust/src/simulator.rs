@@ -432,7 +432,9 @@ pub struct EvalScore {
 }
 
 /// Pick parallelism degrees for a cluster: the model's paper deployment
-/// if world sizes match, else TP=gpus_per_node, PP=1, DP=rest.
+/// if world sizes match, else TP = the GCD of all node sizes (so TP
+/// blocks align with node boundaries even on mixed-node-size clusters;
+/// equal to gpus-per-node on uniform clusters), PP=1, DP=rest.
 pub fn infer_parallelism(
     model: &ModelSpec,
     cluster: &ClusterSpec,
@@ -450,7 +452,10 @@ pub fn infer_parallelism(
             return Ok(p);
         }
     }
-    let tp = cluster.gpus_per_node().clamp(1, 8);
+    // any divisor of the node-size GCD also divides the world size
+    // (a sum of multiples); clamp to the paper's TP ceiling of 8
+    let gcd = cluster.gcd_gpus_per_node().max(1);
+    let tp = if gcd > 8 { (1..=8).rev().find(|t| gcd % t == 0).unwrap_or(1) } else { gcd };
     anyhow::ensure!(world % tp == 0, "cluster size {world} not divisible by tp {tp}");
     Ok(ParallelismSpec { tp, pp: 1, dp: world / tp })
 }

@@ -118,6 +118,53 @@ pub enum RingPolicy {
     HeteroAware,
 }
 
+/// Topology-aware allreduce algorithm selection: choose between the
+/// flat ring and the hierarchical (intra-node → inter-node → intra-node)
+/// plan from the *fabric shape* and the group's node footprint.
+///
+/// * Single-node groups, and groups contributing at most one rank per
+///   node, always use the flat ring — the hierarchy has nothing to
+///   collapse.
+/// * Irregular multi-node groups (per-node populations that differ)
+///   also use the flat ring: the hierarchical plan's per-slot
+///   inter-node rings would leave single-owner slots without
+///   cross-node flows, under-counting traffic — the flat ring models
+///   every byte.
+/// * On the rail-only fabric the flat ring stays the default even for
+///   regular groups: rail paths are non-blocking along each rail, and
+///   keeping the seed choice preserves the byte-identical RailOnly
+///   golden timelines.
+/// * On switch and leaf/spine fabrics, regular multi-node groups with
+///   ≥ 2 ranks per node select the hierarchical plan: it shrinks the
+///   bytes crossing the (potentially oversubscribed) inter-node tier
+///   by the intra-node group size, exactly where those fabrics
+///   bottleneck.
+///
+/// Ring ordering inside either algorithm is node-major via
+/// [`ClusterSpec::locate`], which is prefix-sum based and therefore
+/// correct on clusters with non-uniform per-node GPU counts.
+pub fn select_allreduce_algo(cluster: &ClusterSpec, ranks: &[u32]) -> CollectiveAlgo {
+    use crate::config::cluster::FabricSpec;
+    let mut per_node: std::collections::BTreeMap<u32, u32> = std::collections::BTreeMap::new();
+    for r in ranks {
+        let n = cluster.node_of_rank(*r).unwrap_or(u32::MAX);
+        *per_node.entry(n).or_insert(0) += 1;
+    }
+    let multi_node = per_node.len() > 1;
+    let mut counts = per_node.values();
+    let first = counts.next().copied().unwrap_or(0);
+    let regular = first >= 2 && counts.all(|c| *c == first);
+    if !multi_node || !regular {
+        return CollectiveAlgo::AllReduceRing;
+    }
+    match cluster.fabric {
+        FabricSpec::RailOnly => CollectiveAlgo::AllReduceRing,
+        FabricSpec::SingleSwitch | FabricSpec::LeafSpine { .. } => {
+            CollectiveAlgo::AllReduceHierarchical
+        }
+    }
+}
+
 /// Order ranks for a logical ring.
 pub fn ring_order(cluster: &ClusterSpec, ranks: &[u32], policy: RingPolicy) -> Vec<u32> {
     match policy {
@@ -304,25 +351,45 @@ fn plan_hierarchical(
         }
     }
 
-    // Phase 2: per-rail inter-node allreduce rings (slot i of each node).
+    // Phase 2: per-slot inter-node allreduce rings. Each slot rings
+    // over exactly the nodes that own it, so node populations may
+    // differ without breaking ring connectivity (a slot shared by a
+    // subset of nodes used to drop the hop to a node lacking it,
+    // silently skipping part of the reduction). Slots owned by a
+    // single node generate no inter-node flows — their chunks are
+    // approximated as reduced by the owning node's intra-node phases;
+    // on ragged groups this under-counts cross-node bytes, which is
+    // why [`select_allreduce_algo`] only routes *regular* groups
+    // (equal per-node populations) here automatically.
     let nn = nodes.len();
     if nn > 1 {
         let chunk2 = (bytes / (local.max(1) as u64 * nn as u64)).max(1);
-        for _ in 0..2 * (nn - 1) {
+        let slot_nodes: Vec<Vec<usize>> = (0..local)
+            .map(|slot| (0..nn).filter(|ni| slot < nodes[*ni].len()).collect())
+            .collect();
+        fn ring_len(owners: &[usize]) -> usize {
+            if owners.len() > 1 {
+                2 * (owners.len() - 1)
+            } else {
+                0
+            }
+        }
+        let max_ring_steps =
+            slot_nodes.iter().map(|o| ring_len(o)).max().unwrap_or(0);
+        for s in 0..max_ring_steps {
             let mut batch = Vec::new();
-            for slot in 0..local {
-                for (ni, node_ranks) in nodes.iter().enumerate() {
-                    if slot < node_ranks.len() {
-                        let next = nodes[(ni + 1) % nn];
-                        if slot < next.len() {
-                            batch.push(FlowSpec {
-                                src: node_ranks[slot],
-                                dst: next[slot],
-                                bytes: chunk2,
-                                tag,
-                            });
-                        }
-                    }
+            for (slot, owners) in slot_nodes.iter().enumerate() {
+                if s >= ring_len(owners) {
+                    continue;
+                }
+                for (pos, ni) in owners.iter().enumerate() {
+                    let next = owners[(pos + 1) % owners.len()];
+                    batch.push(FlowSpec {
+                        src: nodes[*ni][slot],
+                        dst: nodes[next][slot],
+                        bytes: chunk2,
+                        tag,
+                    });
                 }
             }
             if !batch.is_empty() {
@@ -461,6 +528,84 @@ mod tests {
         let inter = &e.steps[7];
         for f in inter {
             assert_ne!(f.src / 8, f.dst / 8);
+        }
+    }
+
+    #[test]
+    fn algo_selection_follows_fabric_shape() {
+        use crate::config::cluster::FabricSpec;
+        let mut c = presets::cluster("ampere", 2).unwrap();
+        let spanning: Vec<u32> = (0..16).collect(); // ≥2 ranks on both nodes
+        let one_per_node = vec![0u32, 8];
+        let intra: Vec<u32> = (0..8).collect();
+        // rail-only keeps the seed's flat-ring default everywhere
+        assert_eq!(select_allreduce_algo(&c, &spanning), CollectiveAlgo::AllReduceRing);
+        // switch / leaf-spine fabrics go hierarchical on regular
+        // multi-node groups
+        for fabric in [
+            FabricSpec::SingleSwitch,
+            FabricSpec::LeafSpine { spines: 2, oversubscription: 2.0 },
+        ] {
+            c.fabric = fabric;
+            assert_eq!(
+                select_allreduce_algo(&c, &spanning),
+                CollectiveAlgo::AllReduceHierarchical
+            );
+            // nothing to collapse: single node or one rank per node
+            assert_eq!(select_allreduce_algo(&c, &intra), CollectiveAlgo::AllReduceRing);
+            assert_eq!(
+                select_allreduce_algo(&c, &one_per_node),
+                CollectiveAlgo::AllReduceRing
+            );
+        }
+        // irregular groups (unequal per-node populations) stay on the
+        // flat ring even on switch fabrics: the hierarchical plan
+        // would under-count their cross-node traffic
+        let mut mixed = presets::cluster("ampere", 2).unwrap();
+        mixed.nodes[0].gpus_per_node = 4;
+        mixed.fabric = FabricSpec::SingleSwitch;
+        let ragged: Vec<u32> = (0..12).collect(); // 4 on node 0, 8 on node 1
+        assert_eq!(select_allreduce_algo(&mixed, &ragged), CollectiveAlgo::AllReduceRing);
+        // a regular group on the same mixed-size cluster still
+        // upgrades (2 ranks from each node)
+        let regular = vec![0u32, 1, 4, 5];
+        assert_eq!(
+            select_allreduce_algo(&mixed, &regular),
+            CollectiveAlgo::AllReduceHierarchical
+        );
+    }
+
+    #[test]
+    fn hierarchical_plan_handles_non_uniform_node_sizes() {
+        // 4-GPU node beside 8-GPU node: every slot shared by both
+        // nodes must ring over both (a subset-owned slot used to drop
+        // its hops silently); single-owner slots emit no inter-node
+        // flows by design (documented approximation — the automatic
+        // selection never routes such ragged groups here)
+        let mut c = presets::cluster("ampere", 2).unwrap();
+        c.nodes[0].gpus_per_node = 4;
+        let ranks: Vec<u32> = (0..12).collect();
+        let e = CollectiveExec::plan(
+            &c,
+            &def(CollectiveAlgo::AllReduceHierarchical, ranks, 24_000),
+            RingPolicy::HeteroAware,
+        );
+        assert!(!e.steps.is_empty());
+        // phase 2 starts after the max(4,8)-1 = 7 intra steps and
+        // contains only cross-node flows
+        let inter = &e.steps[7];
+        for f in inter {
+            assert_ne!(c.node_of_rank(f.src), c.node_of_rank(f.dst), "{f:?}");
+        }
+        // each shared slot (0..4) rings both directions: node0 slot s
+        // is rank s, node1 slot s is rank 4 + s
+        for s in 0..4u32 {
+            assert!(inter.iter().any(|f| f.src == s && f.dst == 4 + s), "slot {s} fwd");
+            assert!(inter.iter().any(|f| f.src == 4 + s && f.dst == s), "slot {s} rev");
+        }
+        // every flow stays inside the group
+        for f in e.steps.iter().flatten() {
+            assert!(f.src < 12 && f.dst < 12);
         }
     }
 

@@ -38,7 +38,7 @@ use crate::compute::table::CostTable;
 use crate::config::cluster::ClusterSpec;
 use crate::config::framework::{split_evenly, FrameworkSpec};
 use crate::config::model::{LayerKind, ModelSpec};
-use crate::system::collective::{CollectiveAlgo, CollectiveDef, CommKind};
+use crate::system::collective::{select_allreduce_algo, CollectiveAlgo, CollectiveDef, CommKind};
 use crate::system::device_group::DeviceGroups;
 use crate::system::resharding;
 
@@ -172,12 +172,22 @@ pub fn generate(
             tags.insert((cell.mb, cell.bwd, v), t);
         }
 
+        // fabric-aware algorithm choice per stage's TP allreduces:
+        // flat ring on rail-only (the seed default, byte-identical),
+        // hierarchical on switch/leaf-spine fabrics when the TP group
+        // spans nodes regularly. Hoisted out of the cell loop — it
+        // depends only on the stage's rank list, and cells revisit
+        // each stage once per (chunk, microbatch, direction).
+        let stage_tp_algo: Vec<CollectiveAlgo> =
+            g.stages.iter().map(|s| select_allreduce_algo(cluster, &s.ranks)).collect();
+
         // ---- pass 2: emit ops, appending each cell's work to its
         // stage's rank streams in the schedule's execution order
         for cell in &cells {
             let stage = &g.stages[cell.stage as usize];
             let tp = stage.tp();
             let ranks = &stage.ranks;
+            let tp_algo = stage_tp_algo[cell.stage as usize];
             let v = cell.virtual_stage(pp);
             let nlayers = chunk_layers[cell.stage as usize][cell.chunk as usize];
             let is_embed_cell = stage.has_embedding && cell.chunk == 0;
@@ -215,7 +225,7 @@ pub fn generate(
                             &mut ops,
                             &mut colls,
                             &mut next_coll,
-                            CollectiveAlgo::AllReduceRing,
+                            tp_algo,
                             ranks.clone(),
                             act_bytes,
                             CommKind::Tp,
@@ -259,7 +269,7 @@ pub fn generate(
                             &mut ops,
                             &mut colls,
                             &mut next_coll,
-                            CollectiveAlgo::AllReduceRing,
+                            tp_algo,
                             ranks.clone(),
                             act_bytes,
                             CommKind::Tp,
@@ -297,7 +307,7 @@ pub fn generate(
                             &mut ops,
                             &mut colls,
                             &mut next_coll,
-                            CollectiveAlgo::AllReduceRing,
+                            tp_algo,
                             ranks.clone(),
                             act_bytes,
                             CommKind::Tp,
@@ -315,7 +325,7 @@ pub fn generate(
                             &mut ops,
                             &mut colls,
                             &mut next_coll,
-                            CollectiveAlgo::AllReduceRing,
+                            tp_algo,
                             ranks.clone(),
                             act_bytes,
                             CommKind::Tp,

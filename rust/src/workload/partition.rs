@@ -267,6 +267,7 @@ pub fn fig3_cluster() -> anyhow::Result<ClusterSpec> {
     Ok(ClusterSpec {
         name: "fig3-4h100-4a100".into(),
         nodes: vec![hopper.nodes.remove(0), ampere.nodes.remove(0)],
+        fabric: hopper.fabric,
         switch_bw: hopper.switch_bw,
         switch_delay: hopper.switch_delay,
     })

@@ -1,0 +1,210 @@
+//! Fabric-layer integration (DESIGN.md §24): mixed per-node GPU counts
+//! simulate end-to-end, rank mapping agrees with
+//! `ClusterSpec::node_of_rank`, oversubscribed leaf/spine fabrics slow
+//! DP traffic, and the rail-only default stays route-compatible.
+
+use hetsim::config::cluster::{ClusterSpec, FabricSpec};
+use hetsim::config::framework::ParallelismSpec;
+use hetsim::config::presets;
+use hetsim::network::routing;
+use hetsim::network::topology::Topology;
+use hetsim::planner::{search, PlanOptions};
+use hetsim::simulator::SimulationBuilder;
+use hetsim::workload::aicb::WorkloadOptions;
+use hetsim::workload::partition::plan_variable_tp;
+
+fn mixed_cluster() -> ClusterSpec {
+    // one 4-GPU A100 node beside one 8-GPU H100 node
+    let mut c = presets::cluster_hetero(1, 1).unwrap();
+    c.nodes[0].gpus_per_node = 4;
+    c
+}
+
+fn tiny_model() -> hetsim::config::model::ModelSpec {
+    let mut m = presets::model("gpt-6.7b").unwrap();
+    m.num_layers = 4;
+    m.global_batch = 16;
+    m.micro_batch = 8;
+    m
+}
+
+#[test]
+fn topology_rank_mapping_agrees_with_cluster_on_every_fabric() {
+    for fabric in [
+        FabricSpec::RailOnly,
+        FabricSpec::SingleSwitch,
+        FabricSpec::LeafSpine { spines: 3, oversubscription: 2.0 },
+    ] {
+        let mut c = mixed_cluster();
+        c.fabric = fabric;
+        let t = Topology::build(&c).unwrap();
+        assert_eq!(t.total_gpus(), c.total_gpus());
+        for rank in 0..t.total_gpus() {
+            let (node, local) = t.locate(rank);
+            assert_eq!(Some(node), c.node_of_rank(rank), "{fabric:?} rank {rank}");
+            assert_eq!(Some((node, local)), c.locate(rank));
+            assert_eq!(t.rank_of(node, local), rank);
+        }
+    }
+}
+
+#[test]
+fn mixed_node_sizes_simulate_end_to_end() {
+    // explicit per-node TP splits matching each node's GPU count
+    let m = tiny_model();
+    let c = mixed_cluster();
+    let fw = plan_variable_tp(&m, &c, &[vec![4], vec![4, 4]], true).unwrap();
+    let rep = SimulationBuilder::new(m, c)
+        .framework(fw)
+        .workload_options(WorkloadOptions { microbatch_limit: Some(1), ..Default::default() })
+        .build()
+        .unwrap()
+        .run_iteration()
+        .unwrap();
+    assert!(rep.iteration_time > hetsim::util::units::Time::ZERO);
+    assert!(rep.flows_completed > 0);
+    assert!(rep.fct_summary.contains_key("DP"));
+}
+
+#[test]
+fn mixed_node_sizes_default_parallelism_simulates() {
+    // no explicit plan: infer_parallelism picks the node-size GCD
+    let m = tiny_model();
+    let c = mixed_cluster();
+    let par = hetsim::simulator::infer_parallelism(&m, &c).unwrap();
+    assert_eq!(par.tp, 4, "GCD of 4 and 8");
+    assert_eq!(par.world_size(), 12);
+    let rep = SimulationBuilder::new(m, c)
+        .workload_options(WorkloadOptions { microbatch_limit: Some(1), ..Default::default() })
+        .build()
+        .unwrap()
+        .run_iteration()
+        .unwrap();
+    assert!(rep.iteration_time > hetsim::util::units::Time::ZERO);
+}
+
+#[test]
+fn oversubscribed_leaf_spine_slows_dp_allreduce() {
+    // acceptance: DP gradient sync on a 4:1-oversubscribed leaf/spine
+    // fabric takes strictly longer than on the non-oversubscribed one
+    let run = |oversubscription: f64| {
+        let mut c = presets::cluster("hopper", 2).unwrap();
+        c.fabric = FabricSpec::LeafSpine { spines: 2, oversubscription };
+        let rep = SimulationBuilder::new(tiny_model(), c)
+            .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+            .workload_options(WorkloadOptions {
+                microbatch_limit: Some(1),
+                ..Default::default()
+            })
+            .build()
+            .unwrap()
+            .run_iteration()
+            .unwrap();
+        let dp: f64 = rep.fct_by_kind["DP"].sum();
+        (rep.iteration_time, dp)
+    };
+    let (t1, dp1) = run(1.0);
+    let (t4, dp4) = run(4.0);
+    assert!(dp4 > dp1, "DP FCT sum did not grow: {dp4} <= {dp1}");
+    assert!(t4 > t1, "iteration did not slow down: {t4} <= {t1}");
+}
+
+#[test]
+fn single_switch_matches_rail_on_same_rail_traffic_and_beats_it_cross_rail() {
+    // same-rail inter-node routes are 4 hops on both fabrics; the
+    // cross-rail case drops the 2 NVLink detour hops on the switch
+    let mk = |fabric| {
+        let mut c = presets::cluster("hopper", 2).unwrap();
+        c.fabric = fabric;
+        Topology::build(&c).unwrap()
+    };
+    let rail = mk(FabricSpec::RailOnly);
+    let switch = mk(FabricSpec::SingleSwitch);
+    assert_eq!(routing::route(&rail, 7, 15).hops(), 4);
+    assert_eq!(routing::route(&switch, 7, 15).hops(), 4);
+    assert_eq!(routing::route(&rail, 7, 8).hops(), 6);
+    assert_eq!(routing::route(&switch, 7, 8).hops(), 4);
+}
+
+#[test]
+fn fabrics_simulate_end_to_end_and_stay_deterministic() {
+    for fabric in [
+        FabricSpec::SingleSwitch,
+        FabricSpec::LeafSpine { spines: 2, oversubscription: 2.0 },
+    ] {
+        let run = || {
+            let mut c = presets::cluster_hetero(1, 1).unwrap();
+            c.fabric = fabric;
+            SimulationBuilder::new(tiny_model(), c)
+                .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+                .workload_options(WorkloadOptions {
+                    microbatch_limit: Some(1),
+                    ..Default::default()
+                })
+                .build()
+                .unwrap()
+                .run_iteration()
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert!(a.iteration_time > hetsim::util::units::Time::ZERO, "{fabric:?}");
+        assert_eq!(a.iteration_time, b.iteration_time, "{fabric:?}");
+        assert_eq!(a.events_processed, b.events_processed, "{fabric:?}");
+    }
+}
+
+#[test]
+fn tp_allreduce_algo_follows_fabric_in_generated_workloads() {
+    // a regular cross-node TP group (16 ranks, 8 per node): flat ring
+    // on rail-only (the seed default), hierarchical on the switch
+    use hetsim::config::framework::FrameworkSpec;
+    use hetsim::system::collective::{CollectiveAlgo, CommKind};
+    let m = tiny_model();
+    let mk = |fabric| {
+        let mut c = presets::cluster("hopper", 2).unwrap();
+        c.fabric = fabric;
+        let fw =
+            FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 16, pp: 1, dp: 1 }).unwrap();
+        hetsim::workload::aicb::generate(
+            &m,
+            &c,
+            &fw,
+            &WorkloadOptions { microbatch_limit: Some(1), ..Default::default() },
+        )
+        .unwrap()
+    };
+    let rail = mk(FabricSpec::RailOnly);
+    let switch = mk(FabricSpec::SingleSwitch);
+    let tp_algos = |w: &hetsim::workload::op::Workload| -> Vec<CollectiveAlgo> {
+        w.collectives.iter().filter(|c| c.kind == CommKind::Tp).map(|c| c.algo).collect()
+    };
+    let rail_tp = tp_algos(&rail);
+    let switch_tp = tp_algos(&switch);
+    assert!(!rail_tp.is_empty());
+    assert!(rail_tp.iter().all(|a| *a == CollectiveAlgo::AllReduceRing));
+    assert_eq!(switch_tp.len(), rail_tp.len());
+    assert!(switch_tp.iter().all(|a| *a == CollectiveAlgo::AllReduceHierarchical));
+}
+
+#[test]
+fn plan_search_covers_mixed_sizes_on_leaf_spine() {
+    // the CI smoke scenario as a test: candidate enumeration, scoring
+    // and ranking all work on a mixed-node-size leaf/spine cluster
+    let m = tiny_model();
+    let mut c = mixed_cluster();
+    c.fabric = FabricSpec::LeafSpine { spines: 2, oversubscription: 4.0 };
+    let opts = PlanOptions { microbatch_limit: Some(1), threads: 2, refine_steps: 0 };
+    let rep = search(&m, &c, &opts).unwrap();
+    assert!(!rep.ranked.is_empty());
+    assert!(rep.failed.is_empty(), "{:?}", rep.failed);
+    // variable per-node layouts (the only node-aligned shapes for
+    // mixed sizes) are part of the ranked space
+    assert!(rep
+        .ranked
+        .iter()
+        .any(|ev| matches!(ev.candidate.layout, hetsim::planner::TpLayout::PerNode(_))));
+    // ranking is deterministic across worker counts here too
+    let again = search(&m, &c, &PlanOptions { threads: 4, ..opts.clone() }).unwrap();
+    assert_eq!(rep.render(0), again.render(0));
+}

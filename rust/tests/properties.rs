@@ -203,6 +203,80 @@ fn prop_routes_valid_and_connected() {
 }
 
 #[test]
+fn prop_routes_valid_on_random_fabrics_and_node_size_mixes() {
+    use hetsim::config::cluster::FabricSpec;
+    use hetsim::network::topology::NodeRef;
+    check(&cfg(64), |g| {
+        // random cluster: 1-4 nodes, each 1-8 GPUs, random architecture
+        let nodes = g.rng.range_u64(1, 5) as usize;
+        let proto = presets::cluster_hetero(1, 1).unwrap(); // [ampere, hopper]
+        let mut cluster = proto.clone();
+        cluster.nodes = (0..nodes)
+            .map(|_| {
+                let mut n = proto.nodes[g.rng.range_u64(0, 2) as usize].clone();
+                n.gpus_per_node = g.rng.range_u64(1, 9) as u32;
+                n
+            })
+            .collect();
+        // random fabric
+        cluster.fabric = match g.rng.range_u64(0, 3) {
+            0 => FabricSpec::RailOnly,
+            1 => FabricSpec::SingleSwitch,
+            _ => FabricSpec::LeafSpine {
+                spines: g.rng.range_u64(1, 5) as u32,
+                oversubscription: g.rng.range_f64(0.5, 8.0),
+            },
+        };
+        let topo = Topology::build(&cluster)
+            .map_err(|e| format!("build failed for {:?}: {e}", cluster.fabric))?;
+        let total = topo.total_gpus();
+        if total != cluster.total_gpus() {
+            return Err(format!("world mismatch {total} != {}", cluster.total_gpus()));
+        }
+        for _ in 0..24 {
+            let src = g.rng.range_u64(0, total as u64) as u32;
+            let dst = g.rng.range_u64(0, total as u64) as u32;
+            let r = routing::route(&topo, src, dst);
+            if src == dst {
+                if !r.links.is_empty() {
+                    return Err(format!("self-route {src} not empty"));
+                }
+                continue;
+            }
+            if r.links.is_empty() {
+                return Err(format!("empty route {src}->{dst}"));
+            }
+            // link-contiguous: hop i's head is hop i+1's tail
+            for w in r.links.windows(2) {
+                let a = topo.link(w[0]).to;
+                let b = topo.link(w[1]).from;
+                if a != b {
+                    return Err(format!(
+                        "disconnected route {src}->{dst} on {:?}: {a:?} != {b:?}",
+                        cluster.fabric
+                    ));
+                }
+            }
+            // starts at the source GPU, ends at the destination GPU —
+            // with the (node, local) decomposition agreeing with the
+            // cluster's own prefix-sum mapping
+            let (sn, sl) = topo.locate(src);
+            let (dn, dl) = topo.locate(dst);
+            if cluster.locate(src) != Some((sn, sl)) || cluster.node_of_rank(dst) != Some(dn) {
+                return Err(format!("rank mapping disagrees for {src}/{dst}"));
+            }
+            if topo.link(r.links[0]).from != (NodeRef::Gpu { node: sn, local: sl }) {
+                return Err(format!("route {src}->{dst} does not start at src"));
+            }
+            if topo.link(*r.links.last().unwrap()).to != (NodeRef::Gpu { node: dn, local: dl }) {
+                return Err(format!("route {src}->{dst} does not end at dst"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_maxmin_never_oversubscribes_links() {
     use hetsim::engine::Engine;
     use hetsim::network::flow::{FlowId, FlowSim, FlowSpec};
