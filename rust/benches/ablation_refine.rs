@@ -51,7 +51,7 @@ fn ablate(
     mb_limit: Option<u64>,
     reference: Option<Time>,
 ) -> anyhow::Result<()> {
-    let opts = PlanOptions { microbatch_limit: mb_limit, threads: 0, refine_steps: 64 };
+    let opts = PlanOptions { microbatch_limit: mb_limit, threads: 0, refine_steps: 64, ..Default::default() };
     let report = search(model, cluster, &opts)?;
     let refined = report.refined.as_ref().expect("refine_steps > 0");
     let base = report.baseline.iteration_time.as_secs();

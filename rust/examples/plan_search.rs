@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
         cluster.total_gpus()
     );
 
-    let opts = PlanOptions { microbatch_limit: Some(2), threads: 0, refine_steps: 0 };
+    let opts = PlanOptions { microbatch_limit: Some(2), threads: 0, refine_steps: 0, ..Default::default() };
     let report = planner::search(&model, &cluster, &opts)?;
     print!("{}", report.render(10));
 

@@ -95,6 +95,13 @@
 //! `"interleaved:V"` (V ≥ 2 virtual-pipeline chunks per stage). See
 //! [`crate::workload::schedule`].
 //!
+//! ## `fold` — optional, default `"off"`
+//!
+//! Symmetry folding ([`crate::system::fold`], DESIGN.md §25):
+//! `"auto"` simulates one representative device group per equivalence
+//! class (bit-identical results, large speedups at high DP), `"off"`
+//! is byte-identical to the pre-folding simulator.
+//!
 //! ## `seed` — optional, default `42`
 //!
 //! Reserved for stochastic extensions; the simulator itself is
@@ -151,6 +158,7 @@ use crate::config::cluster::{ClusterSpec, FabricSpec};
 use crate::config::framework::ParallelismSpec;
 use crate::config::model::{ModelSpec, MoeSpec};
 use crate::config::presets;
+use crate::system::fold::FoldMode;
 use crate::util::json::Json;
 use crate::workload::schedule::ScheduleKind;
 
@@ -170,6 +178,8 @@ pub struct Scenario {
     pub per_group_tp: Option<Vec<Vec<u32>>>,
     /// Pipeline schedule for every device group.
     pub schedule: ScheduleKind,
+    /// Symmetry-folding mode ([`crate::system::fold`]).
+    pub fold: FoldMode,
     /// Reserved for stochastic extensions (the simulator itself is
     /// deterministic).
     pub seed: u64,
@@ -201,10 +211,11 @@ pub fn load_scenario(text: &str) -> anyhow::Result<Scenario> {
         None => parse_parallelism(pv)?,
     };
     let schedule: ScheduleKind = v.opt_str("schedule", "gpipe").parse()?;
+    let fold = FoldMode::parse(v.opt_str("fold", "off"))?;
     let seed = v.opt_u64("seed", 42);
     model.validate()?;
     cluster.validate()?;
-    Ok(Scenario { model, cluster, parallelism, per_group_tp, schedule, seed })
+    Ok(Scenario { model, cluster, parallelism, per_group_tp, schedule, fold, seed })
 }
 
 /// Parse the `model` section: a preset name or an inline Table-6
@@ -481,6 +492,17 @@ mod tests {
         .unwrap();
         assert_eq!(c.nodes.len(), 3);
         assert_eq!(c.gpu_types(), vec!["A100", "H100"]);
+    }
+
+    #[test]
+    fn fold_key_parsed_with_off_default() {
+        let base = r#"{"model": "gpt-6.7b", "cluster": "hopper:4",
+            "parallelism": {"tp": 8, "pp": 1, "dp": 4}%FOLD%}"#;
+        let s = load_scenario(&base.replace("%FOLD%", "")).unwrap();
+        assert_eq!(s.fold, FoldMode::Off);
+        let s = load_scenario(&base.replace("%FOLD%", r#", "fold": "auto""#)).unwrap();
+        assert_eq!(s.fold, FoldMode::Auto);
+        assert!(load_scenario(&base.replace("%FOLD%", r#", "fold": "always""#)).is_err());
     }
 
     #[test]

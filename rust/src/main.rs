@@ -11,6 +11,7 @@ use hetsim::config::{loader, presets};
 use hetsim::report::{fig1, fig5, fig6, table1};
 use hetsim::simulator::{CostBackend, SimulationBuilder};
 use hetsim::system::collective::RingPolicy;
+use hetsim::system::fold::FoldMode;
 use hetsim::util::cli::{Args, Usage};
 use hetsim::util::table::fmt_sig;
 use hetsim::workload::aicb::WorkloadOptions;
@@ -20,8 +21,8 @@ fn usage() -> Usage {
         program: "hetsim",
         about: "heterogeneity-aware LLM training simulator (CS.DC 2025 reproduction)",
         commands: vec![
-            ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N] [--fabric rail|switch|spine:S,OS] [--schedule gpipe|1f1b|interleaved:V] [--iterations N --threads N]"),
-            ("plan", "rank TPxPPxDPxschedule plans (+ variable per-group TP layouts on hetero clusters) [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --threads N --mb-limit N (0=all) --top K --refine[=STEPS]]"),
+            ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N] [--fabric rail|switch|spine:S,OS] [--schedule gpipe|1f1b|interleaved:V] [--fold auto|off] [--iterations N --threads N]"),
+            ("plan", "rank TPxPPxDPxschedule plans (+ variable per-group TP layouts on hetero clusters) [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --threads N --mb-limit N (0=all) --top K --refine[=STEPS] --fold auto|off]"),
             ("bench", "planner/engine throughput ladders -> BENCH_plan.json [--quick --threads N --out FILE --baseline FILE --factor F]"),
             ("fig1", "hardware-evolution trend across generation presets"),
             ("fig5", "per-layer compute time across GPU generations [--backend native|pjrt]"),
@@ -77,12 +78,12 @@ fn cost_backend(args: &Args) -> Result<CostBackend> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "model", "cluster", "fabric", "tp", "pp", "dp", "schedule", "backend",
-        "mb-limit", "hetero-partition", "naive-ring", "iterations", "threads",
+        "mb-limit", "hetero-partition", "naive-ring", "iterations", "threads", "fold",
     ])?;
-    let (model, mut cluster, par, schedule, per_group_tp) =
+    let (model, mut cluster, par, schedule, per_group_tp, fold) =
         if let Some(path) = args.opt("config") {
             let s = loader::load_scenario_file(std::path::Path::new(path))?;
-            (s.model, s.cluster, Some(s.parallelism), Some(s.schedule), s.per_group_tp)
+            (s.model, s.cluster, Some(s.parallelism), Some(s.schedule), s.per_group_tp, s.fold)
         } else {
             let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
             let cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
@@ -96,7 +97,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                     dp: args.opt_u64("dp", 1)? as u32,
                 }),
             };
-            (model, cluster, par, None, None)
+            (model, cluster, par, None, None, FoldMode::Off)
         };
     // --fabric overrides the cluster's (or the config file's) fabric
     if let Some(f) = args.opt("fabric") {
@@ -111,9 +112,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    // --fold overrides a config file's "fold" key
+    let fold = match args.opt("fold") {
+        Some(v) => FoldMode::parse(v)?,
+        None => fold,
+    };
     let mut b = SimulationBuilder::new(model, cluster)
         .cost_backend(cost_backend(args)?)
         .hetero_partitioning(args.flag("hetero-partition"))
+        .fold(fold)
         .workload_options(WorkloadOptions {
             microbatch_limit: args.opt("mb-limit").map(|v| v.parse()).transpose()?,
             ..Default::default()
@@ -180,7 +187,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
-    args.check_known(&["model", "cluster", "fabric", "threads", "mb-limit", "top", "refine"])?;
+    args.check_known(&[
+        "model", "cluster", "fabric", "threads", "mb-limit", "top", "refine", "fold",
+    ])?;
     let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
     let mut cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
         args.opt_or("cluster", "hetero:1,1").to_string(),
@@ -196,6 +205,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
         microbatch_limit: if mb_limit == 0 { None } else { Some(mb_limit) },
         threads: args.opt_u64("threads", 0)? as usize,
         refine_steps,
+        fold: FoldMode::parse(args.opt_or("fold", "off"))?,
     };
     let top = args.opt_u64("top", 10)? as usize;
     println!(

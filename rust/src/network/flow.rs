@@ -39,7 +39,7 @@
 
 use std::sync::Arc;
 
-use super::routing::{self, Route};
+use super::routing::{Route, RouteCache};
 use super::topology::{LinkId, Topology};
 use crate::engine::{Engine, EventId};
 use crate::util::units::Time;
@@ -90,7 +90,7 @@ impl FlowRecord {
 #[derive(Debug)]
 struct ActiveFlow {
     spec: FlowSpec,
-    route: Route,
+    route: Arc<Route>,
     remaining: f64, // bytes
     rate: f64,      // bytes/s, set by rebalance
     last_update: Time,
@@ -129,6 +129,10 @@ pub struct FlowSim {
     /// Active flows with empty routes (self-communication): part of
     /// every rebalance scope (see module docs).
     unrouted: Vec<(u64, u32)>,
+    /// Lazily-materialized per-pair routes ([`RouteCache`]): each
+    /// distinct (src, dst) is assembled once per simulation run and
+    /// shared by every later flow between the endpoints.
+    routes: RouteCache,
     // --- reusable scratch (no per-rebalance allocation) ---
     scratch_residual: Vec<f64>, // per link
     link_in_scope: Vec<bool>,   // per link
@@ -157,6 +161,7 @@ impl FlowSim {
             ordered: Vec::new(),
             link_members: vec![Vec::new(); nlinks],
             unrouted: Vec::new(),
+            routes: RouteCache::new(),
             scratch_residual: vec![0.0; nlinks],
             link_in_scope: vec![false; nlinks],
             scope_links: Vec::new(),
@@ -259,8 +264,7 @@ impl FlowSim {
             let start = posted.map(|p| p[i].min(now)).unwrap_or(now);
             let id = self.next_id;
             self.next_id += 1;
-            let route = routing::route(&self.topo, spec.src, spec.dst);
-            let fixed = routing::fixed_delay(&self.topo, &route);
+            let (route, fixed) = self.routes.get(&self.topo, spec.src, spec.dst);
             let slot = self.alloc_slot();
             for l in &route.links {
                 // monotone ids keep the member list ascending

@@ -20,7 +20,11 @@
 //!   the spine chosen by the deterministic index rule
 //!   [`Topology::spine_for`].
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use crate::config::cluster::FabricSpec;
+use crate::util::units::Time;
 
 use super::topology::{LinkId, Topology};
 
@@ -100,6 +104,53 @@ pub fn route(topo: &Topology, src_rank: u32, dst_rank: u32) -> Route {
 /// flow's completion time).
 pub fn fixed_delay(topo: &Topology, r: &Route) -> crate::util::units::Time {
     crate::util::units::Time(r.links.iter().map(|l| topo.link(*l).delay.as_ps()).sum())
+}
+
+/// Lazily-materialized route store. A route is a pure function of
+/// (topology, src, dst), so each endpoint pair is assembled — and its
+/// fixed-delay sum computed — exactly once, then shared behind an
+/// `Arc` (a clone is a pointer bump). Collectives re-post the same
+/// pairs every ring step and every iteration, so a simulation's cache
+/// converges to the set of *distinct* pairs while the per-flow cost
+/// drops to one hash lookup; at 100k ranks this also avoids holding a
+/// dense all-pairs route table that would dwarf the topology itself.
+#[derive(Debug, Default)]
+pub struct RouteCache {
+    entries: HashMap<(u32, u32), (Arc<Route>, Time)>,
+}
+
+impl RouteCache {
+    /// An empty cache; routes materialize on first use.
+    pub fn new() -> Self {
+        RouteCache::default()
+    }
+
+    /// The route and fixed-delay sum between two ranks, materializing
+    /// them on the first request for this pair.
+    pub fn get(&mut self, topo: &Topology, src: u32, dst: u32) -> (Arc<Route>, Time) {
+        match self.entries.entry((src, dst)) {
+            std::collections::hash_map::Entry::Occupied(e) => {
+                let (r, d) = e.get();
+                (r.clone(), *d)
+            }
+            std::collections::hash_map::Entry::Vacant(v) => {
+                let r = Arc::new(route(topo, src, dst));
+                let d = fixed_delay(topo, &r);
+                let (r, d) = v.insert((r, d));
+                (r.clone(), *d)
+            }
+        }
+    }
+
+    /// Distinct (src, dst) pairs materialized so far.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no route has been materialized yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
 }
 
 #[cfg(test)]
@@ -263,5 +314,24 @@ mod tests {
         // both directions of one pair may use different spines — but
         // each is deterministic
         assert_eq!(route(&t, 3, 12), route(&t, 3, 12));
+    }
+
+    #[test]
+    fn route_cache_materializes_each_pair_once() {
+        let t = topo(2);
+        let mut cache = RouteCache::new();
+        assert!(cache.is_empty());
+        let (r1, d1) = cache.get(&t, 7, 8);
+        assert_eq!(*r1, route(&t, 7, 8));
+        assert_eq!(d1, fixed_delay(&t, &r1));
+        let (r2, d2) = cache.get(&t, 7, 8);
+        // second request shares the same materialized route
+        assert!(Arc::ptr_eq(&r1, &r2));
+        assert_eq!(d1, d2);
+        assert_eq!(cache.len(), 1);
+        // a different pair is a new entry, not a collision
+        let (r3, _) = cache.get(&t, 8, 7);
+        assert_ne!(*r3, *r1);
+        assert_eq!(cache.len(), 2);
     }
 }

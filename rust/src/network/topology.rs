@@ -26,6 +26,13 @@
 //! Rank ↔ (node, local) mapping is prefix-sum based and agrees with
 //! [`ClusterSpec::node_of_rank`] for every rank, so clusters with mixed
 //! node sizes are first-class.
+//!
+//! The topology stores only the device/link graph — **routes are never
+//! precomputed here**. Building all-pairs paths is O(ranks²) memory and
+//! would dominate the footprint of 100k-rank clusters; instead the flow
+//! simulator materializes each (src, dst) path lazily through
+//! [`crate::network::routing::RouteCache`] the first time a flow uses
+//! it, which keeps topology construction O(devices + links).
 
 use crate::config::cluster::{ClusterSpec, FabricSpec};
 use crate::util::units::{Bandwidth, Time};

@@ -41,6 +41,7 @@ use crate::config::framework::FrameworkSpec;
 use crate::config::model::ModelSpec;
 use crate::simulator::{EvalContext, SimulationBuilder};
 use crate::system::collective::RingPolicy;
+use crate::system::fold::FoldMode;
 use crate::util::par::parallel_map;
 use crate::util::units::Time;
 use crate::workload::aicb::WorkloadOptions;
@@ -188,11 +189,21 @@ pub struct RefineOptions {
     /// layer-split-only polish, `--mb-limit 0` for the full Fig-3
     /// rediscovery.
     pub microbatch_limit: Option<u64>,
+    /// Symmetry folding during move evaluation
+    /// ([`crate::system::fold`]) — a pure throughput knob, mirroring
+    /// [`crate::planner::PlanOptions::fold`]; scores are bit-identical
+    /// either way. `Off` by default.
+    pub fold: FoldMode,
 }
 
 impl Default for RefineOptions {
     fn default() -> Self {
-        RefineOptions { max_steps: 64, threads: 0, microbatch_limit: Some(2) }
+        RefineOptions {
+            max_steps: 64,
+            threads: 0,
+            microbatch_limit: Some(2),
+            fold: FoldMode::Off,
+        }
     }
 }
 
@@ -278,6 +289,7 @@ fn simulate(
             microbatch_limit: opts.microbatch_limit,
             ..Default::default()
         })
+        .fold(opts.fold)
         .score_with_context(ctx)?;
     Ok(score.iteration_time)
 }
@@ -430,7 +442,7 @@ mod tests {
     fn refine_never_regresses_and_is_deterministic() {
         let (m, c, f) = fig3_start();
         let opts =
-            RefineOptions { max_steps: 4, threads: 2, microbatch_limit: Some(1) };
+            RefineOptions { max_steps: 4, threads: 2, microbatch_limit: Some(1), ..Default::default() };
         let a = refine(&m, &c, &f, RingPolicy::HeteroAware, None, &opts).unwrap();
         assert!(a.refined_time <= a.initial_time);
         // every accepted move strictly improves on the previous time
@@ -455,7 +467,7 @@ mod tests {
         let f =
             FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 4, pp: 1, dp: 2 }).unwrap();
         let opts =
-            RefineOptions { max_steps: 8, threads: 2, microbatch_limit: Some(1) };
+            RefineOptions { max_steps: 8, threads: 2, microbatch_limit: Some(1), ..Default::default() };
         let r = refine(&m, &c, &f, RingPolicy::HeteroAware, None, &opts).unwrap();
         assert!(r.refined_time <= r.initial_time);
     }

@@ -20,6 +20,7 @@ use crate::config::cluster::ClusterSpec;
 use crate::config::model::ModelSpec;
 use crate::simulator::{infer_parallelism, EvalContext, SimulationBuilder};
 use crate::system::collective::RingPolicy;
+use crate::system::fold::FoldMode;
 use crate::util::par::parallel_map;
 use crate::util::table::Table;
 use crate::util::units::Time;
@@ -47,11 +48,22 @@ pub struct PlanOptions {
     /// pass over the top-ranked candidates (0 = no refinement, the
     /// pre-refinement behavior).
     pub refine_steps: u64,
+    /// Symmetry folding during candidate evaluation
+    /// ([`crate::system::fold`]): `Auto` folds interchangeable DP
+    /// replicas so large-DP candidates score in near-constant work;
+    /// results are bit-identical either way, so this is purely a
+    /// throughput knob. `Off` by default.
+    pub fold: FoldMode,
 }
 
 impl Default for PlanOptions {
     fn default() -> Self {
-        PlanOptions { microbatch_limit: Some(2), threads: 0, refine_steps: 0 }
+        PlanOptions {
+            microbatch_limit: Some(2),
+            threads: 0,
+            refine_steps: 0,
+            fold: FoldMode::Off,
+        }
     }
 }
 
@@ -186,6 +198,7 @@ fn evaluate(
             microbatch_limit: opts.microbatch_limit,
             ..Default::default()
         })
+        .fold(opts.fold)
         .score_with_context(ctx)?;
     Ok(EvaluatedPlan {
         candidate: cand.clone(),
@@ -277,6 +290,7 @@ pub fn search(
             max_steps: opts.refine_steps,
             threads: opts.threads,
             microbatch_limit: opts.microbatch_limit,
+            fold: opts.fold,
         };
         // Starts: the top ranked candidates, plus the best variable-TP
         // layout if none made the cut — non-uniform layouts are exactly
@@ -335,7 +349,7 @@ mod tests {
     fn search_ranks_and_beats_default_on_hetero() {
         let m = tiny_model();
         let c = presets::cluster_hetero(1, 1).unwrap();
-        let opts = PlanOptions { microbatch_limit: Some(1), threads: 2, refine_steps: 0 };
+        let opts = PlanOptions { microbatch_limit: Some(1), threads: 2, ..Default::default() };
         let rep = search(&m, &c, &opts).unwrap();
         assert!(!rep.ranked.is_empty());
         // ranked ascending by predicted time
@@ -352,7 +366,8 @@ mod tests {
     fn refine_pass_never_regresses_on_the_best_ranked_plan() {
         let m = tiny_model();
         let c = presets::cluster_hetero(1, 1).unwrap();
-        let opts = PlanOptions { microbatch_limit: Some(1), threads: 2, refine_steps: 2 };
+        let opts =
+            PlanOptions { microbatch_limit: Some(1), threads: 2, refine_steps: 2, ..Default::default() };
         let rep = search(&m, &c, &opts).unwrap();
         let r = rep.refined.as_ref().expect("refine_steps > 0 produces a refined plan");
         // starts include the best ranked candidate, so the winner can
@@ -368,7 +383,7 @@ mod tests {
     fn render_lists_top_plans() {
         let m = tiny_model();
         let c = presets::cluster_hetero(1, 1).unwrap();
-        let opts = PlanOptions { microbatch_limit: Some(1), threads: 2, refine_steps: 0 };
+        let opts = PlanOptions { microbatch_limit: Some(1), threads: 2, ..Default::default() };
         let rep = search(&m, &c, &opts).unwrap();
         let text = rep.render(5);
         assert!(text.contains("Ranked parallelism plans"));

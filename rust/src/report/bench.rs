@@ -15,13 +15,30 @@
 //! The baseline numbers are deliberately conservative floors (slow CI
 //! runners must pass); the gate exists to catch order-of-magnitude
 //! regressions of the zero-rebuild evaluation path, not ±10% noise.
+//!
+//! Two symmetry-folding suites ride on top (DESIGN.md §25):
+//!
+//! * `fold_speedup` — the same DP-heavy scenario evaluated with
+//!   `fold=off` and `fold=auto`; its gated metric is the folded /
+//!   unfolded candidate-throughput **ratio** (machine-independent), so
+//!   the committed floor directly encodes the ≥10x acceptance bar.
+//! * `fold_ladder_{4k,32k,100k}` — a rank-scaling ladder of leaf/spine
+//!   clusters up to 100k ranks, runnable only because folding collapses
+//!   the op streams and DP flow sets. Gated on events/sec **and** a
+//!   peak-RSS ceiling (`peak_rss_max_bytes` in the baseline): scale
+//!   regressions show up as memory blowups long before they time out.
+//!   Peak RSS is the process high-water mark (`VmHWM`), which only
+//!   grows — the ladder runs last and ascending so each rung's reading
+//!   is attributable to it.
 
 use std::time::Instant;
 
+use crate::config::cluster::FabricSpec;
 use crate::config::framework::ParallelismSpec;
 use crate::config::presets;
 use crate::planner::{search, PlanOptions};
 use crate::simulator::SimulationBuilder;
+use crate::system::fold::FoldMode;
 use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::workload::aicb::WorkloadOptions;
@@ -48,6 +65,14 @@ pub struct BenchCase {
     /// `events / wall_s` — engine throughput under this case (same
     /// ranked-only caveat for planning cases).
     pub events_per_sec: f64,
+    /// Peak RSS (`VmHWM`, bytes) sampled after the case finished; 0
+    /// when not sampled or unavailable (non-Linux). The kernel counter
+    /// is a process-lifetime high-water mark, so readings are
+    /// monotonically non-decreasing across cases.
+    pub peak_rss_bytes: u64,
+    /// `peak_rss_bytes / simulated ranks` for scale-ladder cases (0
+    /// otherwise) — the per-rank memory footprint the ladder gates.
+    pub bytes_per_rank: f64,
     /// Human-readable context for the table output.
     pub detail: String,
 }
@@ -61,8 +86,26 @@ fn case(name: &str, wall_s: f64, candidates: u64, events: u64, detail: String) -
         candidates_per_sec: candidates as f64 / wall,
         events,
         events_per_sec: events as f64 / wall,
+        peak_rss_bytes: 0,
+        bytes_per_rank: 0.0,
         detail,
     }
+}
+
+/// Peak RSS of this process in bytes (`VmHWM` from
+/// `/proc/self/status`). Returns 0 where procfs is unavailable.
+fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 =
+                rest.trim().trim_end_matches("kB").trim().parse().unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
 }
 
 /// Run one plan/refine ladder and fold it into a [`BenchCase`].
@@ -104,6 +147,7 @@ pub fn run(quick: bool, threads: usize) -> anyhow::Result<Vec<BenchCase>> {
         microbatch_limit: Some(if quick { 1 } else { 2 }),
         threads,
         refine_steps: 0,
+        fold: FoldMode::Off,
     };
     out.push(plan_case("plan_hetero", &m, &c, &sweep_opts)?);
 
@@ -113,6 +157,7 @@ pub fn run(quick: bool, threads: usize) -> anyhow::Result<Vec<BenchCase>> {
         microbatch_limit: Some(1),
         threads,
         refine_steps: if quick { 2 } else { 8 },
+        fold: FoldMode::Off,
     };
     out.push(plan_case("refine_hetero", &m, &c, &refine_opts)?);
 
@@ -124,6 +169,7 @@ pub fn run(quick: bool, threads: usize) -> anyhow::Result<Vec<BenchCase>> {
         microbatch_limit: None,
         threads,
         refine_steps: if quick { 4 } else { 16 },
+        fold: FoldMode::Off,
     };
     out.push(plan_case("refine_fig3", &fm, &fc, &fig3_opts)?);
 
@@ -187,6 +233,108 @@ pub fn run(quick: bool, threads: usize) -> anyhow::Result<Vec<BenchCase>> {
             fc2.total_gpus()
         ),
     ));
+
+    // 6. symmetry-folding head-to-head (DESIGN.md §25): the same
+    //    DP-heavy candidate evaluated repeatedly with fold=off and
+    //    fold=auto. The gated metric is the throughput *ratio*, so the
+    //    baseline floor encodes the ≥10x acceptance bar directly.
+    out.push(fold_speedup_case(quick)?);
+
+    // 7. rank-scaling ladder: leaf/spine clusters up to 100k ranks,
+    //    fold=auto (unfolded, the 100k DP ring alone is ~2e10 flows —
+    //    these rungs exist *because* of folding). Runs last and
+    //    ascending so the monotone VmHWM reading is attributable.
+    for (name, ranks) in
+        [("fold_ladder_4k", 4096u32), ("fold_ladder_32k", 32_768), ("fold_ladder_100k", 100_000)]
+    {
+        out.push(fold_ladder_case(name, ranks)?);
+    }
+    Ok(out)
+}
+
+/// A DP-only scale scenario: a 4-layer GPT-shaped model data-parallel
+/// across every rank (`tp = pp = 1`, one microbatch per group), the
+/// worst case for per-rank op-stream and DP-flow volume and the best
+/// case for symmetry folding (every group is a singleton of one class).
+fn scale_scenario(
+    arch: &str,
+    ranks: u32,
+) -> anyhow::Result<(crate::config::model::ModelSpec, crate::config::cluster::ClusterSpec)> {
+    anyhow::ensure!(ranks % 8 == 0, "scale scenario needs 8-GPU nodes");
+    let mut m = presets::model("gpt-6.7b")?;
+    m.num_layers = 4;
+    m.global_batch = ranks as u64;
+    m.micro_batch = 1;
+    let c = presets::cluster(arch, ranks / 8)?;
+    Ok((m, c))
+}
+
+/// The fold=auto vs fold=off head-to-head behind the `fold_speedup`
+/// gate. `candidates_per_sec` of the returned case is the folded /
+/// unfolded evaluation-throughput ratio, not a raw rate.
+fn fold_speedup_case(quick: bool) -> anyhow::Result<BenchCase> {
+    let dp: u32 = if quick { 256 } else { 512 };
+    let (m, c) = scale_scenario("hopper", dp)?;
+    let (off_evals, auto_evals): (u32, u32) = if quick { (1, 4) } else { (2, 8) };
+    let eval = |mode: FoldMode, evals: u32| -> anyhow::Result<(f64, u64)> {
+        let t0 = Instant::now();
+        let mut events = 0u64;
+        for _ in 0..evals {
+            let sim = SimulationBuilder::new(m.clone(), c.clone())
+                .parallelism(ParallelismSpec { tp: 1, pp: 1, dp })
+                .fold(mode)
+                .build()?;
+            events += sim.run_iteration()?.events_processed;
+        }
+        Ok((t0.elapsed().as_secs_f64().max(f64::MIN_POSITIVE), events))
+    };
+    let (off_wall, off_events) = eval(FoldMode::Off, off_evals)?;
+    let (auto_wall, auto_events) = eval(FoldMode::Auto, auto_evals)?;
+    let off_cps = off_evals as f64 / off_wall;
+    let auto_cps = auto_evals as f64 / auto_wall;
+    let ratio = auto_cps / off_cps;
+    let wall = off_wall + auto_wall;
+    let events = off_events + auto_events;
+    Ok(BenchCase {
+        name: "fold_speedup".into(),
+        wall_s: wall,
+        candidates: (off_evals + auto_evals) as u64,
+        candidates_per_sec: ratio,
+        events,
+        events_per_sec: events as f64 / wall,
+        peak_rss_bytes: 0,
+        bytes_per_rank: 0.0,
+        detail: format!(
+            "dp={dp}: fold=auto {auto_cps:.2} evals/s vs fold=off {off_cps:.3} \
+             evals/s = {ratio:.0}x"
+        ),
+    })
+}
+
+/// One rung of the rank-scaling ladder: build + one iteration of a
+/// `ranks`-wide leaf/spine cluster with `fold=auto`, gated on
+/// events/sec and the peak-RSS ceiling.
+fn fold_ladder_case(name: &str, ranks: u32) -> anyhow::Result<BenchCase> {
+    let (m, mut c) = scale_scenario("ampere", ranks)?;
+    c.fabric = FabricSpec::LeafSpine { spines: 4, oversubscription: 2.0 };
+    let t0 = Instant::now();
+    let sim = SimulationBuilder::new(m, c)
+        .parallelism(ParallelismSpec { tp: 1, pp: 1, dp: ranks })
+        .fold(FoldMode::Auto)
+        .build()?;
+    anyhow::ensure!(sim.folded(), "{name}: fold=auto did not fold the cluster");
+    let rep = sim.run_iteration()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let rss = peak_rss_bytes();
+    let mut out = case(
+        name,
+        wall,
+        0,
+        rep.events_processed,
+        format!("{ranks} ranks leaf/spine, folded iter {}", rep.iteration_time.human()),
+    );
+    out.peak_rss_bytes = rss;
+    out.bytes_per_rank = rss as f64 / ranks as f64;
     Ok(out)
 }
 
@@ -194,7 +342,7 @@ pub fn run(quick: bool, threads: usize) -> anyhow::Result<Vec<BenchCase>> {
 pub fn render(cases: &[BenchCase]) -> Table {
     let mut t = Table::new(
         "hetsim bench — planner + engine throughput",
-        &["case", "wall", "cand", "cand/s", "events", "events/s", "detail"],
+        &["case", "wall", "cand", "cand/s", "events", "events/s", "peak rss", "detail"],
     );
     for c in cases {
         t.row(vec![
@@ -204,6 +352,11 @@ pub fn render(cases: &[BenchCase]) -> Table {
             format!("{:.1}", c.candidates_per_sec),
             c.events.to_string(),
             format!("{:.0}", c.events_per_sec),
+            if c.peak_rss_bytes == 0 {
+                "-".into()
+            } else {
+                format!("{:.0} MiB", c.peak_rss_bytes as f64 / (1024.0 * 1024.0))
+            },
             c.detail.clone(),
         ]);
     }
@@ -222,6 +375,8 @@ pub fn to_json(cases: &[BenchCase], quick: bool) -> Json {
                 ("candidates_per_sec", Json::Num(c.candidates_per_sec)),
                 ("events", Json::Num(c.events as f64)),
                 ("events_per_sec", Json::Num(c.events_per_sec)),
+                ("peak_rss_bytes", Json::Num(c.peak_rss_bytes as f64)),
+                ("bytes_per_rank", Json::Num(c.bytes_per_rank)),
                 ("detail", Json::Str(c.detail.clone())),
             ])
         })
@@ -261,6 +416,16 @@ pub fn check_against_baseline(cases: &[BenchCase], baseline: &Json, factor: f64)
                 "{name}: {key} {have:.2} is more than {factor}x below baseline {want:.2}"
             ));
         }
+        // hard memory ceiling (scale-ladder cases): a peak-RSS breach
+        // is an absolute failure, not factor-scaled — per-rank memory
+        // blowups surface here long before wall-clock times out
+        let ceiling = b.get("peak_rss_max_bytes").and_then(Json::as_f64).unwrap_or(0.0);
+        if ceiling > 0.0 && cur.peak_rss_bytes > 0 && cur.peak_rss_bytes as f64 > ceiling {
+            regressions.push(format!(
+                "{name}: peak RSS {} bytes exceeds the {} byte ceiling",
+                cur.peak_rss_bytes, ceiling as u64
+            ));
+        }
     }
     regressions
 }
@@ -277,6 +442,8 @@ mod tests {
             candidates_per_sec: cps,
             events: eps as u64,
             events_per_sec: eps,
+            peak_rss_bytes: 0,
+            bytes_per_rank: 0.0,
             detail: String::new(),
         }
     }
@@ -322,6 +489,31 @@ mod tests {
         assert!(bad[0].contains("events_per_sec"), "{bad:?}");
         let ok = check_against_baseline(&[engine], &baseline, 1.5);
         assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn baseline_gate_enforces_memory_ceiling() {
+        // hand-build a baseline with a peak_rss_max_bytes ceiling
+        let baseline = Json::parse(
+            r#"{"benchmarks": [
+                {"name": "fold_ladder_100k", "events_per_sec": 10,
+                 "peak_rss_max_bytes": 1000000}
+            ]}"#,
+        )
+        .unwrap();
+        let mut lad = fake("fold_ladder_100k", 0.0, 100.0);
+        lad.candidates = 0;
+        lad.peak_rss_bytes = 500_000;
+        let ok = check_against_baseline(&[lad.clone()], &baseline, 1.5);
+        assert!(ok.is_empty(), "{ok:?}");
+        lad.peak_rss_bytes = 2_000_000;
+        let bad = check_against_baseline(&[lad.clone()], &baseline, 1.5);
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].contains("peak RSS"), "{bad:?}");
+        // unsampled RSS (0, e.g. non-Linux) never trips the ceiling
+        lad.peak_rss_bytes = 0;
+        let skip = check_against_baseline(&[lad], &baseline, 1.5);
+        assert!(skip.is_empty(), "{skip:?}");
     }
 
     #[test]

@@ -38,6 +38,7 @@ use crate::config::model::ModelSpec;
 use crate::network::topology::Topology;
 use crate::system::collective::RingPolicy;
 use crate::system::compiled::CompiledWorkload;
+use crate::system::fold::{self, FoldMode, FoldPlan};
 use crate::system::scheduler::{Scheduler, SchedulerReport};
 use crate::util::stats::{Samples, Summary};
 use crate::util::units::Time;
@@ -66,6 +67,7 @@ pub struct SimulationBuilder {
     hetero_partitioning: bool,
     schedule: Option<ScheduleKind>,
     record_trace: bool,
+    fold: FoldMode,
 }
 
 /// The builder's inputs after framework resolution — what every build
@@ -78,6 +80,7 @@ struct ResolvedBuild {
     cost_backend: CostBackend,
     ring_policy: RingPolicy,
     record_trace: bool,
+    fold: FoldMode,
 }
 
 impl SimulationBuilder {
@@ -96,6 +99,7 @@ impl SimulationBuilder {
             hetero_partitioning: false,
             schedule: None,
             record_trace: false,
+            fold: FoldMode::Off,
         }
     }
 
@@ -155,6 +159,18 @@ impl SimulationBuilder {
         self
     }
 
+    /// Symmetry folding ([`crate::system::fold`], DESIGN.md §25):
+    /// `Auto` simulates one representative device group per
+    /// equivalence class and weights the report to the unfolded
+    /// totals; `Off` (the default) is byte-identical to the classic
+    /// path. `Auto` falls back to unfolded simulation whenever the
+    /// deployment breaks the folding preconditions (pipeline stages,
+    /// resharding, asymmetric fabric slices).
+    pub fn fold(mut self, mode: FoldMode) -> Self {
+        self.fold = mode;
+        self
+    }
+
     /// Resolve the parallelism degrees and device-group mapping.
     fn resolve(self) -> anyhow::Result<ResolvedBuild> {
         let par = match self.parallelism {
@@ -180,6 +196,7 @@ impl SimulationBuilder {
             cost_backend: self.cost_backend,
             ring_policy: self.ring_policy,
             record_trace: self.record_trace,
+            fold: self.fold,
         })
     }
 
@@ -187,7 +204,8 @@ impl SimulationBuilder {
     /// cost table, build the topology, compile.
     pub fn build(self) -> anyhow::Result<Simulation> {
         let r = self.resolve()?;
-        let workload = aicb::generate(&r.model, &r.cluster, &r.framework, &r.options)?;
+        let plan = fold::classify(&r.cluster, &r.framework, r.fold);
+        let workload = generate_workload(&r, plan.as_ref())?;
         let mut cost = match r.cost_backend {
             CostBackend::Native => CostTable::native(),
             CostBackend::Pjrt => {
@@ -196,8 +214,7 @@ impl SimulationBuilder {
         };
         aicb::register_costs(&workload, &r.cluster, &mut cost)?;
         let topology = Arc::new(Topology::build(&r.cluster)?);
-        let compiled =
-            CompiledWorkload::compile(&workload, &r.cluster, &cost, r.ring_policy)?;
+        let compiled = compile_workload(&workload, &r, &cost, &topology, plan.as_ref())?;
         Ok(Simulation {
             model: r.model,
             cluster: r.cluster,
@@ -225,7 +242,7 @@ impl SimulationBuilder {
         );
         let r = self.resolve()?;
         ctx.check_inputs(&r.model, &r.cluster)?;
-        let key = eval_key(&r.framework, &r.options, r.ring_policy);
+        let key = eval_key(&r.framework, &r.options, r.ring_policy, r.fold);
         let prepared = ctx.prepare(&r, &key)?;
         Ok(Simulation {
             model: r.model,
@@ -258,7 +275,7 @@ impl SimulationBuilder {
         );
         let r = self.resolve()?;
         ctx.check_inputs(&r.model, &r.cluster)?;
-        let key = eval_key(&r.framework, &r.options, r.ring_policy);
+        let key = eval_key(&r.framework, &r.options, r.ring_policy, r.fold);
         if let Some(s) = ctx.scores.lock().unwrap().get(&key).copied() {
             ctx.score_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(s);
@@ -280,16 +297,52 @@ impl SimulationBuilder {
 
 /// Cache key of one candidate evaluation: the resolved mapping's
 /// fingerprint plus every knob that changes the generated workload or
-/// its compilation.
-fn eval_key(fw: &FrameworkSpec, opts: &WorkloadOptions, ring: RingPolicy) -> String {
+/// its compilation. `Off` keys are unchanged from the pre-folding
+/// layout so folded and unfolded cores never alias.
+fn eval_key(fw: &FrameworkSpec, opts: &WorkloadOptions, ring: RingPolicy, fold: FoldMode) -> String {
     format!(
-        "{}|mb{}|o{}{}{}|{ring:?}",
+        "{}|mb{}|o{}{}{}|{ring:?}{}",
         fw.fingerprint(),
         opts.microbatch_limit.map(|l| l.to_string()).unwrap_or_else(|| "all".into()),
         opts.include_other as u8,
         opts.moe_alltoall as u8,
         opts.dp_sync as u8,
+        match fold {
+            FoldMode::Off => "",
+            FoldMode::Auto => "|fold",
+        },
     )
+}
+
+/// Emit the per-rank op streams for one resolved candidate: folded when
+/// a [`FoldPlan`] was classified, classic otherwise.
+fn generate_workload(r: &ResolvedBuild, plan: Option<&FoldPlan>) -> anyhow::Result<Workload> {
+    match plan {
+        Some(p) => aicb::generate_folded(&r.model, &r.cluster, &r.framework, &r.options, p),
+        None => aicb::generate(&r.model, &r.cluster, &r.framework, &r.options),
+    }
+}
+
+/// Lower one resolved candidate to the dense core: class-folded DP flow
+/// templates when a [`FoldPlan`] was classified, classic otherwise.
+fn compile_workload(
+    workload: &Workload,
+    r: &ResolvedBuild,
+    cost: &CostTable,
+    topology: &Topology,
+    plan: Option<&FoldPlan>,
+) -> anyhow::Result<CompiledWorkload> {
+    match plan {
+        Some(p) => CompiledWorkload::compile_folded(
+            workload,
+            &r.cluster,
+            cost,
+            r.ring_policy,
+            topology,
+            p,
+        ),
+        None => CompiledWorkload::compile(workload, &r.cluster, cost, r.ring_policy),
+    }
 }
 
 /// One cached candidate build (all shared, all immutable).
@@ -392,7 +445,8 @@ impl EvalContext {
             return Ok(hit);
         }
         self.build_misses.fetch_add(1, Ordering::Relaxed);
-        let workload = aicb::generate(&r.model, &r.cluster, &r.framework, &r.options)?;
+        let plan = fold::classify(&r.cluster, &r.framework, r.fold);
+        let workload = generate_workload(r, plan.as_ref())?;
         // warm-start from every entry any candidate evaluated so far
         let mut cost = self.cost.lock().unwrap().share();
         let before = cost.cached_len();
@@ -400,7 +454,7 @@ impl EvalContext {
         if cost.cached_len() > before {
             self.cost.lock().unwrap().absorb(&cost);
         }
-        let compiled = CompiledWorkload::compile(&workload, &r.cluster, &cost, r.ring_policy)?;
+        let compiled = compile_workload(&workload, r, &cost, &self.topology, plan.as_ref())?;
         let entry = CachedEval {
             workload: Arc::new(workload),
             cost: Arc::new(cost),
@@ -519,6 +573,13 @@ impl Simulation {
     /// build time — use [`SimulationBuilder::ring_policy`] to change it.
     pub fn ring_policy(&self) -> RingPolicy {
         self.ring_policy
+    }
+
+    /// Whether symmetry folding actually engaged for this build
+    /// (requested via [`SimulationBuilder::fold`] *and* the deployment
+    /// satisfied the folding preconditions).
+    pub fn folded(&self) -> bool {
+        self.compiled.fold.is_some()
     }
 }
 
@@ -645,6 +706,55 @@ mod tests {
         assert_eq!(a.iteration_time, b.iteration_time);
         assert_eq!(a.flows_completed, b.flows_completed);
         assert_eq!(a.events_processed, b.events_processed);
+    }
+
+    #[test]
+    fn fold_auto_matches_off_exactly() {
+        // 4 identical single-node TP groups under DP: Auto folds three
+        // of them away yet must report the identical timeline and the
+        // identical (unfolded) busy totals — the tentpole invariant.
+        let run = |mode| {
+            let sim = tiny(presets::cluster("hopper", 4).unwrap())
+                .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 4 })
+                .fold(mode)
+                .build()
+                .unwrap();
+            (sim.folded(), sim.run_iteration().unwrap())
+        };
+        let (off_folded, off) = run(FoldMode::Off);
+        let (auto_folded, auto_) = run(FoldMode::Auto);
+        assert!(!off_folded, "Off must never fold");
+        assert!(auto_folded, "Auto must fold 4 identical replicas");
+        assert_eq!(off.iteration_time, auto_.iteration_time);
+        assert_eq!(off.compute_busy, auto_.compute_busy);
+        assert_eq!(off.comm_busy, auto_.comm_busy);
+        // the whole point: folded runs process strictly fewer events
+        assert!(
+            auto_.events_processed < off.events_processed,
+            "folded {} >= unfolded {}",
+            auto_.events_processed,
+            off.events_processed
+        );
+    }
+
+    #[test]
+    fn fold_auto_falls_back_on_pipeline_stages() {
+        // pp=2 breaks the folding preconditions; Auto must quietly run
+        // the classic path and still agree with Off on everything.
+        let run = |mode| {
+            let sim = tiny(presets::cluster("hopper", 4).unwrap())
+                .parallelism(ParallelismSpec { tp: 4, pp: 2, dp: 4 })
+                .fold(mode)
+                .build()
+                .unwrap();
+            (sim.folded(), sim.run_iteration().unwrap())
+        };
+        let (off_folded, off) = run(FoldMode::Off);
+        let (auto_folded, auto_) = run(FoldMode::Auto);
+        assert!(!off_folded && !auto_folded);
+        assert_eq!(off.iteration_time, auto_.iteration_time);
+        assert_eq!(off.events_processed, auto_.events_processed);
+        assert_eq!(off.flows_completed, auto_.flows_completed);
     }
 
     #[test]

@@ -170,19 +170,30 @@ pub fn ring_order(cluster: &ClusterSpec, ranks: &[u32], policy: RingPolicy) -> V
     match policy {
         RingPolicy::Naive => ranks.to_vec(),
         RingPolicy::HeteroAware => {
-            let mut v: Vec<u32> = ranks.to_vec();
             // architecture-major, then node, then local rank: rings walk
             // all nodes of one architecture before crossing to the next,
             // minimizing slow<->fast boundary edges (2 per ring).
-            v.sort_by_key(|r| {
-                let (node, local) = cluster.locate(*r).unwrap_or((u32::MAX, u32::MAX));
-                let arch = cluster
-                    .gpu_of_rank(*r)
-                    .map(|g| g.name.clone())
-                    .unwrap_or_default();
-                (arch, node, local)
-            });
-            v
+            // Decorate-sort-undecorate with one prefix-sum location per
+            // rank — re-running `ClusterSpec::locate` (an O(nodes)
+            // scan) plus an arch-name clone per sort-key evaluation is
+            // quadratic on the 100k-rank DP rings of the fold ladder.
+            let starts = cluster.node_starts();
+            let world = *starts.last().unwrap_or(&0);
+            let mut v: Vec<(&str, u32, u32, u32)> = ranks
+                .iter()
+                .map(|&r| {
+                    if r >= world {
+                        return ("", u32::MAX, u32::MAX, r);
+                    }
+                    let node = starts.partition_point(|&s| s <= r) - 1;
+                    let local = r - starts[node];
+                    (cluster.nodes[node].gpu.name.as_str(), node as u32, local, r)
+                })
+                .collect();
+            // stable sort on the (arch, node, local) key alone — the
+            // same ordering the previous per-key sort produced
+            v.sort_by(|a, b| (a.0, a.1, a.2).cmp(&(b.0, b.1, b.2)));
+            v.into_iter().map(|(_, _, _, r)| r).collect()
         }
     }
 }

@@ -29,7 +29,12 @@ use std::collections::{HashMap, HashSet};
 use crate::compute::table::CostTable;
 use crate::config::cluster::{ClusterSpec, RankIdx};
 use crate::network::flow::FlowSpec;
-use crate::system::collective::{CollectiveDef, CollectiveExec, CommKind, RingPolicy};
+use crate::network::routing;
+use crate::network::topology::Topology;
+use crate::system::collective::{
+    ring_order, CollectiveAlgo, CollectiveDef, CollectiveExec, CommKind, RingPolicy,
+};
+use crate::system::fold::FoldPlan;
 use crate::util::units::Time;
 use crate::workload::op::{Op, Workload};
 
@@ -74,6 +79,30 @@ pub struct CompiledWorkload {
     pub msg_tags: Vec<u64>,
     /// The ring policy the step templates were planned with.
     pub ring_policy: RingPolicy,
+    /// Symmetry-fold metadata when this core was compiled folded
+    /// ([`CompiledWorkload::compile_folded`]); `None` for the classic
+    /// path — the scheduler's accounting is byte-identical to the
+    /// pre-folding code when this is `None`.
+    pub fold: Option<FoldedMeta>,
+}
+
+/// Per-run weights the scheduler needs to make a folded timeline report
+/// the *unfolded* totals (see [`crate::system::fold`]).
+#[derive(Debug)]
+pub struct FoldedMeta {
+    /// Per rank: the class-representative counterpart whose DP arrival
+    /// time stands in for this rank's (identity when unfolded).
+    pub twin: Vec<u32>,
+    /// Per rank: class multiplicity weighting its compute-busy time.
+    pub rank_mult: Vec<u64>,
+    /// Per dense collective: how many unfolded collectives it stands
+    /// for (class multiplicity for group-local collectives of a
+    /// representative group, 1 for DP-sync collectives, which are
+    /// shared across the whole class and already unique).
+    pub coll_mult: Vec<u64>,
+    /// Flows removed from DP step templates by component folding
+    /// (diagnostics).
+    pub folded_flows: u64,
 }
 
 impl CompiledWorkload {
@@ -89,6 +118,38 @@ impl CompiledWorkload {
         cluster: &ClusterSpec,
         cost: &CostTable,
         ring_policy: RingPolicy,
+    ) -> anyhow::Result<CompiledWorkload> {
+        Self::compile_inner(workload, cluster, cost, ring_policy, None)
+    }
+
+    /// [`CompiledWorkload::compile`] under a symmetry-fold plan
+    /// ([`crate::system::fold`]): the workload must come from
+    /// [`crate::workload::aicb::generate_folded`] with the same plan.
+    /// Group-local collectives are planned as usual (only
+    /// representatives have them); DP-sync collectives get *folded*
+    /// step templates — one flow per symmetry orbit of the unfolded
+    /// flow set, chosen so every kept flow's max-min rate and every
+    /// def's per-step completion time are bit-identical to the
+    /// unfolded plan (the dropped flows form connected components that
+    /// share no link with any kept flow and duplicate a kept
+    /// component's canonical profile).
+    pub fn compile_folded(
+        workload: &Workload,
+        cluster: &ClusterSpec,
+        cost: &CostTable,
+        ring_policy: RingPolicy,
+        topo: &Topology,
+        fold: &FoldPlan,
+    ) -> anyhow::Result<CompiledWorkload> {
+        Self::compile_inner(workload, cluster, cost, ring_policy, Some((topo, fold)))
+    }
+
+    fn compile_inner(
+        workload: &Workload,
+        cluster: &ClusterSpec,
+        cost: &CostTable,
+        ring_policy: RingPolicy,
+        folded: Option<(&Topology, &FoldPlan)>,
     ) -> anyhow::Result<CompiledWorkload> {
         let world = cluster.total_gpus();
 
@@ -181,10 +242,47 @@ impl CompiledWorkload {
         // out of the event loop entirely)
         let mut steps = Vec::with_capacity(defs.len());
         let mut expected = Vec::with_capacity(defs.len());
-        for d in &defs {
-            expected.push(d.ranks.len() as u32);
-            steps.push(CollectiveExec::plan(cluster, d, ring_policy).steps);
-        }
+        let fold_meta = match folded {
+            None => {
+                for d in &defs {
+                    expected.push(d.ranks.len() as u32);
+                    steps.push(CollectiveExec::plan(cluster, d, ring_policy).steps);
+                }
+                None
+            }
+            Some((topo, fold)) => {
+                // a collective launches when every *program-bearing*
+                // participant arrives; folded ranks never will
+                for d in &defs {
+                    let n = d.ranks.iter().filter(|&&r| has_program[r as usize]).count();
+                    anyhow::ensure!(
+                        n > 0,
+                        "folded collective {} has no represented participant",
+                        d.label
+                    );
+                    expected.push(n as u32);
+                }
+                let (folded_steps, folded_flows) =
+                    plan_folded_steps(cluster, topo, &defs, ring_policy, fold);
+                steps = folded_steps;
+                let coll_mult: Vec<u64> = defs
+                    .iter()
+                    .map(|d| match d.kind {
+                        // DP-sync defs span the whole class already
+                        CommKind::Dp => 1,
+                        // group-local defs: all ranks are in one
+                        // (representative) group → its class multiplicity
+                        _ => d.ranks.first().map_or(1, |&r| fold.rank_mult[r as usize]),
+                    })
+                    .collect();
+                Some(FoldedMeta {
+                    twin: fold.twin.clone(),
+                    rank_mult: fold.rank_mult.clone(),
+                    coll_mult,
+                    folded_flows,
+                })
+            }
+        };
 
         let mut msg_tags = vec![0u64; msg_of.len()];
         for (tag, idx) in &msg_of {
@@ -202,6 +300,7 @@ impl CompiledWorkload {
             num_msgs: msg_of.len() as u32,
             msg_tags,
             ring_policy,
+            fold: fold_meta,
         })
     }
 
@@ -232,6 +331,235 @@ impl CompiledWorkload {
     pub fn max_step_flows(&self) -> usize {
         self.steps.iter().flatten().map(Vec::len).max().unwrap_or(0)
     }
+}
+
+/// One candidate DP flow in the folded planner: a ring edge (every step
+/// of a ring collective repeats the same batch, so one edge stands for
+/// the flow at that ring position in *every* step) or, for non-ring DP
+/// algorithms, one distinct (src, dst) pair whose component must be
+/// force-kept.
+struct DpEdge {
+    /// Dense collective index.
+    def: usize,
+    src: u32,
+    dst: u32,
+    /// Links the flow traverses (routing is deterministic per pair).
+    route: Vec<crate::network::topology::LinkId>,
+    /// Component containing this edge may never be dropped.
+    forced: bool,
+}
+
+/// Fold the DP-sync flow sets: simulate one connected component per
+/// symmetry orbit instead of all of them.
+///
+/// Exactness argument (DESIGN.md §25): flows are grouped into
+/// connected components by shared links across **all** DP collectives.
+/// Max-min fair sharing decomposes over components (a flow's rate
+/// depends only on flows it transitively shares links with), so
+/// dropping a whole component never changes a kept flow's rate. A
+/// component may be dropped only when another kept component has the
+/// same canonical profile — same per-edge (collective shape, endpoint
+/// equivalence classes, chunk bytes) and an isomorphic link pattern
+/// with identical (kind, bandwidth, delay) — *and* touches the same
+/// set of collectives, so each collective's per-step completion time
+/// (the max over its components) is preserved exactly. Every
+/// collective keeps at least one component.
+///
+/// Returns per-def step templates plus the number of flows folded away
+/// (summed over steps).
+fn plan_folded_steps(
+    cluster: &ClusterSpec,
+    topo: &Topology,
+    defs: &[CollectiveDef],
+    ring_policy: RingPolicy,
+    fold: &FoldPlan,
+) -> (Vec<Vec<Vec<FlowSpec>>>, u64) {
+    let mut steps: Vec<Vec<Vec<FlowSpec>>> = Vec::with_capacity(defs.len());
+    // per-def ring template: Some((order, nsteps, chunk)) for ring
+    // algorithms, None for everything else (planned normally below)
+    let mut rings: Vec<Option<(usize, u64)>> = Vec::with_capacity(defs.len());
+    let mut edges: Vec<DpEdge> = Vec::new();
+    for (di, d) in defs.iter().enumerate() {
+        if d.kind != CommKind::Dp {
+            // group-local collective of a representative group: planned
+            // in full; pp == 1 means it never overlaps DP traffic, so
+            // it stays out of the component analysis
+            steps.push(CollectiveExec::plan(cluster, d, ring_policy).steps);
+            rings.push(None);
+            continue;
+        }
+        let n = d.ranks.len();
+        if n <= 1 || d.bytes_per_rank == 0 {
+            steps.push(Vec::new());
+            rings.push(None);
+            continue;
+        }
+        let ring = match d.algo {
+            CollectiveAlgo::AllReduceRing => Some(2 * (n - 1)),
+            CollectiveAlgo::AllGather | CollectiveAlgo::ReduceScatter => Some(n - 1),
+            _ => None,
+        };
+        match ring {
+            Some(nsteps) => {
+                let order = ring_order(cluster, &d.ranks, ring_policy);
+                let chunk = (d.bytes_per_rank / n as u64).max(1);
+                for i in 0..n {
+                    let (src, dst) = (order[i], order[(i + 1) % n]);
+                    edges.push(DpEdge {
+                        def: di,
+                        src,
+                        dst,
+                        route: routing::route(topo, src, dst).links,
+                        forced: false,
+                    });
+                }
+                steps.push(Vec::new()); // assembled after the keep pass
+                rings.push(Some((nsteps, chunk)));
+            }
+            None => {
+                // non-ring DP algorithm (not emitted by the generator
+                // today): keep it fully expanded, and force-keep any
+                // component its flows touch so their contention stays
+                // simulated
+                let plan = CollectiveExec::plan(cluster, d, ring_policy).steps;
+                let mut seen: HashSet<(u32, u32)> = HashSet::new();
+                for f in plan.iter().flatten() {
+                    if f.src != f.dst && seen.insert((f.src, f.dst)) {
+                        edges.push(DpEdge {
+                            def: di,
+                            src: f.src,
+                            dst: f.dst,
+                            route: routing::route(topo, f.src, f.dst).links,
+                            forced: true,
+                        });
+                    }
+                }
+                steps.push(plan);
+                rings.push(None);
+            }
+        }
+    }
+
+    // union-find over edges sharing any link
+    let mut parent: Vec<usize> = (0..edges.len()).collect();
+    fn find(parent: &mut [usize], mut x: usize) -> usize {
+        while parent[x] != x {
+            parent[x] = parent[parent[x]];
+            x = parent[x];
+        }
+        x
+    }
+    let mut link_owner: Vec<usize> = vec![usize::MAX; topo.num_links()];
+    for ei in 0..edges.len() {
+        for l in &edges[ei].route {
+            let slot = l.0 as usize;
+            if link_owner[slot] == usize::MAX {
+                link_owner[slot] = ei;
+            } else {
+                let (a, b) = (find(&mut parent, ei), find(&mut parent, link_owner[slot]));
+                if a != b {
+                    parent[a.max(b)] = a.min(b);
+                }
+            }
+        }
+    }
+
+    // canonical profile per component, iterating edges in emission
+    // order so component discovery and link canonicalization are
+    // deterministic
+    let mut comp_edges: HashMap<usize, Vec<usize>> = HashMap::new();
+    let mut comp_order: Vec<usize> = Vec::new(); // roots, by first edge
+    for ei in 0..edges.len() {
+        let root = find(&mut parent, ei);
+        let slot = comp_edges.entry(root).or_default();
+        if slot.is_empty() {
+            comp_order.push(root);
+        }
+        slot.push(ei);
+    }
+    let mut kept: HashSet<usize> = HashSet::new();
+    let mut by_profile: HashMap<String, usize> = HashMap::new();
+    for &root in &comp_order {
+        let members = &comp_edges[&root];
+        if members.iter().any(|&ei| edges[ei].forced) {
+            kept.insert(root);
+            continue;
+        }
+        let mut profile = String::new();
+        let mut local: HashMap<u32, usize> = HashMap::new();
+        for &ei in members {
+            let e = &edges[ei];
+            let (nsteps, chunk) = rings[e.def].as_ref().expect("ring edge");
+            profile.push_str(&format!(
+                "d{:?}.{}.{}.{}|c{}>{}|",
+                defs[e.def].algo,
+                nsteps,
+                chunk,
+                e.def, // exact def identity: per-def step maxima must survive
+                fold.rank_class[e.src as usize],
+                fold.rank_class[e.dst as usize],
+            ));
+            for l in &e.route {
+                let next = local.len();
+                let li = *local.entry(l.0).or_insert(next);
+                let link = topo.link(*l);
+                profile.push_str(&format!(
+                    "{li}:{:?}:{}:{};",
+                    link.kind,
+                    link.bw.0,
+                    link.delay.0
+                ));
+            }
+            profile.push('|');
+        }
+        if let std::collections::hash_map::Entry::Vacant(v) = by_profile.entry(profile) {
+            v.insert(root);
+            kept.insert(root);
+        }
+    }
+    // every ring def keeps at least one component (a collective with an
+    // all-dropped step could never finish)
+    let mut def_covered: Vec<bool> = vec![false; defs.len()];
+    for &root in &kept {
+        for &ei in &comp_edges[&root] {
+            def_covered[edges[ei].def] = true;
+        }
+    }
+    for ei in 0..edges.len() {
+        let di = edges[ei].def;
+        if rings[di].is_some() && !def_covered[di] {
+            let root = find(&mut parent, ei);
+            kept.insert(root);
+            for &mi in &comp_edges[&root] {
+                def_covered[edges[mi].def] = true;
+            }
+        }
+    }
+
+    // assemble ring-def step templates from the kept edges
+    let mut kept_flows: Vec<Vec<FlowSpec>> = vec![Vec::new(); defs.len()];
+    let mut folded_flows: u64 = 0;
+    for ei in 0..edges.len() {
+        let root = find(&mut parent, ei);
+        let e = &edges[ei];
+        let Some((nsteps, chunk)) = rings[e.def].as_ref() else { continue };
+        if kept.contains(&root) {
+            kept_flows[e.def].push(FlowSpec {
+                src: e.src,
+                dst: e.dst,
+                bytes: *chunk,
+                tag: e.def as u64,
+            });
+        } else {
+            folded_flows += *nsteps as u64;
+        }
+    }
+    for (di, flows) in kept_flows.into_iter().enumerate() {
+        if let Some((nsteps, _)) = &rings[di] {
+            steps[di] = vec![flows; *nsteps];
+        }
+    }
+    (steps, folded_flows)
 }
 
 #[cfg(test)]

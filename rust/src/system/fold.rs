@@ -1,0 +1,402 @@
+//! Symmetry folding: equivalence classes of device groups (DESIGN.md
+//! §25).
+//!
+//! DP replicas in large training jobs execute identical op streams
+//! against identical subtopologies. When two device groups are provably
+//! interchangeable — same batch/microbatch split, same stage shape,
+//! same relative rank layout over the same node classes, and a fabric
+//! view where every link their group-local collectives touch is owned
+//! exclusively by the group — simulating both is redundant: one
+//! representative timeline, multiplied, reproduces the pair exactly.
+//!
+//! [`classify`] computes those classes. The result feeds three folding
+//! consumers:
+//!
+//! * workload generation ([`crate::workload::aicb::generate_folded`])
+//!   emits programs only for class representatives;
+//! * compilation ([`crate::system::compiled::CompiledWorkload::compile_folded`])
+//!   folds the DP-sync flow sets down to one connected component per
+//!   symmetry orbit (the max-min fixpoint on the kept components is
+//!   identical to the unfolded one — dropped components share no link
+//!   with kept ones, so removing them perturbs no rate);
+//! * the scheduler weighs busy accumulators by class multiplicity so
+//!   reported utilization matches the unfolded run bit-for-bit.
+//!
+//! # When folding is refused (expansion is forced)
+//!
+//! `classify` returns `None` — the caller falls back to the unfolded
+//! path — whenever any of the global gates fail:
+//!
+//! * `mode` is [`FoldMode::Off`];
+//! * any device group has more than one pipeline stage (`pp > 1`
+//!   interleaves p2p traffic with group-local collectives in time, so
+//!   group timelines are no longer independent);
+//! * any DP sync group needs gradient resharding (reshard traffic
+//!   crosses group boundaries outside the folded DP planner);
+//! * no equivalence class ends up with multiplicity ≥ 2 (nothing to
+//!   fold).
+//!
+//! Individual groups that fail the *per-group* symmetry conditions
+//! (mixed node classes where the layout differs, partial node
+//! occupancy on a shared-leaf fabric, multi-spine hash asymmetry) are
+//! placed in singleton classes: they are simulated unfolded while the
+//! symmetric remainder still folds.
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+use crate::config::cluster::{ClusterSpec, FabricSpec};
+use crate::config::framework::FrameworkSpec;
+use crate::system::device_group::DeviceGroups;
+use crate::system::resharding;
+
+/// Whether the build pipeline may fold symmetric device groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FoldMode {
+    /// Never fold; byte-identical to the pre-folding simulator.
+    #[default]
+    Off,
+    /// Fold whenever [`classify`] proves it exact; silently fall back
+    /// to the unfolded path otherwise.
+    Auto,
+}
+
+impl FoldMode {
+    /// Parse a CLI/scenario value: `"off"` or `"auto"`.
+    pub fn parse(s: &str) -> anyhow::Result<FoldMode> {
+        match s {
+            "off" => Ok(FoldMode::Off),
+            "auto" => Ok(FoldMode::Auto),
+            other => anyhow::bail!("unknown fold mode '{other}' (auto | off)"),
+        }
+    }
+
+    /// Canonical name (`"off"` / `"auto"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            FoldMode::Off => "off",
+            FoldMode::Auto => "auto",
+        }
+    }
+}
+
+/// The proven equivalence-class structure for one (cluster, framework)
+/// pair. Indices into `represented`/`group_class` follow
+/// `fw.groups` order; per-rank tables are dense over the cluster's
+/// global rank space.
+#[derive(Debug, Clone)]
+pub struct FoldPlan {
+    /// Global rank count of the cluster.
+    pub world: u32,
+    /// Per device group (by position in `fw.groups`): is this group its
+    /// class representative (and therefore simulated)?
+    pub represented: Vec<bool>,
+    /// Per device group: its equivalence-class id.
+    pub group_class: Vec<u32>,
+    /// Per class: number of member groups (≥ 1).
+    pub class_mult: Vec<u64>,
+    /// Per rank: the corresponding rank of the class representative
+    /// (identity for representative and singleton ranks). Maps a folded
+    /// rank's DP-arrival lookup onto the representative's timeline.
+    pub twin: Vec<u32>,
+    /// Per rank: its group's class multiplicity (1 for vacant ranks).
+    pub rank_mult: Vec<u64>,
+    /// Per rank: its group's class id (`u32::MAX` for ranks outside
+    /// every group). Used by the folded DP planner to match flow
+    /// endpoints across symmetric components.
+    pub rank_class: Vec<u32>,
+    /// Ranks whose programs are folded away (diagnostics).
+    pub folded_ranks: u64,
+}
+
+impl FoldPlan {
+    /// Number of equivalence classes.
+    pub fn num_classes(&self) -> usize {
+        self.class_mult.len()
+    }
+}
+
+/// Compute device-group equivalence classes, or `None` when folding is
+/// off, unsound for this deployment, or pointless (see module docs for
+/// the exact gates).
+pub fn classify(cluster: &ClusterSpec, fw: &FrameworkSpec, mode: FoldMode) -> Option<FoldPlan> {
+    if mode == FoldMode::Off {
+        return None;
+    }
+    // pp must be 1 everywhere: with a single stage, every group-local
+    // collective completes before the group's DP arrival, so group
+    // timelines are mutually independent and DP-sync traffic never
+    // overlaps group-local traffic in time.
+    if fw.groups.iter().any(|g| g.stages.len() != 1) {
+        return None;
+    }
+    let groups = DeviceGroups::derive(fw);
+    if groups.dp_sync.iter().any(|s| resharding::group_needs_resharding(&s.participants)) {
+        return None;
+    }
+    // Node classes: full NodeSpec equality (GPU name alone is not
+    // enough — same-GPU nodes can differ in interconnect).
+    let mut node_class: Vec<u32> = Vec::with_capacity(cluster.nodes.len());
+    let mut distinct: Vec<usize> = Vec::new();
+    for spec in &cluster.nodes {
+        let id = match distinct.iter().position(|&d| cluster.nodes[d] == *spec) {
+            Some(i) => i as u32,
+            None => {
+                distinct.push(node_class.len());
+                (distinct.len() - 1) as u32
+            }
+        };
+        node_class.push(id);
+    }
+    let world = cluster.total_gpus();
+    // Dense rank → (node, local) table: `group_key` needs a location
+    // per rank and `ClusterSpec::locate` is an O(nodes) scan — one
+    // O(world) prefix-sum pass here keeps classification linear on
+    // 100k-rank clusters.
+    let starts = cluster.node_starts();
+    let mut locs: Vec<(u32, u32)> = Vec::with_capacity(world as usize);
+    for n in 0..cluster.nodes.len() {
+        for l in 0..(starts[n + 1] - starts[n]) {
+            locs.push((n as u32, l));
+        }
+    }
+    // Per-group class key (None → singleton class).
+    let keys: Vec<Option<String>> =
+        fw.groups.iter().map(|g| group_key(cluster, &node_class, &locs, g)).collect();
+    let mut class_of: Vec<u32> = Vec::with_capacity(fw.groups.len());
+    let mut rep_of: Vec<usize> = Vec::new();
+    let mut mult: Vec<u64> = Vec::new();
+    let mut by_key: HashMap<&str, u32> = HashMap::new();
+    for (gi, key) in keys.iter().enumerate() {
+        let cls = match key {
+            Some(k) => match by_key.get(k.as_str()) {
+                Some(&c) => {
+                    mult[c as usize] += 1;
+                    c
+                }
+                None => {
+                    let c = rep_of.len() as u32;
+                    by_key.insert(k.as_str(), c);
+                    rep_of.push(gi);
+                    mult.push(1);
+                    c
+                }
+            },
+            None => {
+                let c = rep_of.len() as u32;
+                rep_of.push(gi);
+                mult.push(1);
+                c
+            }
+        };
+        class_of.push(cls);
+    }
+    if !mult.iter().any(|&m| m >= 2) {
+        return None;
+    }
+    let mut twin: Vec<u32> = (0..world).collect();
+    let mut rank_mult: Vec<u64> = vec![1; world as usize];
+    let mut rank_class: Vec<u32> = vec![u32::MAX; world as usize];
+    let mut represented = vec![false; fw.groups.len()];
+    let mut folded_ranks = 0u64;
+    for (gi, g) in fw.groups.iter().enumerate() {
+        let cls = class_of[gi] as usize;
+        let rep = rep_of[cls];
+        represented[gi] = gi == rep;
+        let rep_ranks = fw.groups[rep].stages[0].ranks.clone();
+        for (pos, &r) in g.stages[0].ranks.iter().enumerate() {
+            rank_class[r as usize] = cls as u32;
+            rank_mult[r as usize] = mult[cls];
+            // positional twin: the class key pins the stage-order rank
+            // layout, so position i of any member corresponds to
+            // position i of the representative
+            twin[r as usize] = rep_ranks[pos];
+            if gi != rep {
+                folded_ranks += 1;
+            }
+        }
+    }
+    Some(FoldPlan {
+        world,
+        represented,
+        group_class: class_of,
+        class_mult: mult,
+        twin,
+        rank_mult,
+        rank_class,
+        folded_ranks,
+    })
+}
+
+/// The canonical symmetry key of one (single-stage) device group, or
+/// `None` when the group cannot be folded on this cluster/fabric.
+///
+/// Two groups with equal keys have isomorphic op streams AND
+/// link-disjoint, characteristic-identical intra-group fabric views, so
+/// their timelines are bit-identical — the folding precondition.
+fn group_key(
+    cluster: &ClusterSpec,
+    node_class: &[u32],
+    locs: &[(u32, u32)],
+    g: &crate::config::framework::DeviceGroupPlan,
+) -> Option<String> {
+    let stage = &g.stages[0];
+    // node → locals, in ascending node order (BTreeMap keeps it sorted)
+    let mut by_node: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+    for &r in &stage.ranks {
+        let (n, l) = *locs.get(r as usize)?;
+        by_node.entry(n).or_default().push(l);
+    }
+    let nodes: Vec<u32> = by_node.keys().copied().collect();
+    if nodes.len() > 1 {
+        // Multi-node groups: inter-node routes must stay inside links
+        // owned by the group's own (node, local) slots.
+        let mut sets: Vec<Vec<u32>> = by_node.values().cloned().collect();
+        for s in &mut sets {
+            s.sort_unstable();
+        }
+        // identical local occupancy and node size everywhere (rail
+        // selection is `dst_local % node_gpus`, so equal sizes keep the
+        // rail inside the occupied set)
+        let first = &sets[0];
+        if sets.iter().any(|s| s != first) {
+            return None;
+        }
+        let size = cluster.node(nodes[0]).gpus_per_node;
+        if nodes.iter().any(|&n| cluster.node(n).gpus_per_node != size) {
+            return None;
+        }
+        match cluster.fabric {
+            FabricSpec::RailOnly | FabricSpec::SingleSwitch => {}
+            FabricSpec::LeafSpine { spines, .. } => {
+                // leaf uplinks are shared per (node, spine) across all
+                // of a node's locals: the group must own its nodes
+                // outright, and multi-spine hashing of absolute ranks
+                // breaks cross-group route isomorphism
+                if spines != 1 || first.len() != size as usize {
+                    return None;
+                }
+            }
+        }
+    }
+    // Canonical layout: rank positions as (node index in ascending
+    // order, local's position in that node's sorted local set) — the
+    // heterogeneity-aware ring order sorts by (arch, node, local), and
+    // both coordinates are order-isomorphic to it within a class.
+    let mut sorted_locals: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+    for (&n, ls) in &by_node {
+        let mut s = ls.clone();
+        s.sort_unstable();
+        sorted_locals.insert(n, s);
+    }
+    let mut key = format!(
+        "b{} m{} L{} e{} |",
+        g.batch_share, g.micro_batch, stage.num_layers, stage.has_embedding
+    );
+    for &n in &nodes {
+        key.push_str(&format!(" n{}", node_class[n as usize]));
+    }
+    key.push('|');
+    for &r in &stage.ranks {
+        let (n, l) = *locs.get(r as usize)?;
+        let npos = nodes.iter().position(|&x| x == n)?;
+        let lpos = sorted_locals[&n].iter().position(|&x| x == l)?;
+        key.push_str(&format!(" {npos}.{lpos}"));
+    }
+    Some(key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::framework::ParallelismSpec;
+    use crate::config::presets;
+
+    fn uniform(
+        cluster: &ClusterSpec,
+        tp: u32,
+        pp: u32,
+        dp: u32,
+    ) -> FrameworkSpec {
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.num_layers = 4;
+        m.global_batch = dp as u64 * 2;
+        m.micro_batch = 1;
+        FrameworkSpec::uniform(&m, cluster, ParallelismSpec { tp, pp, dp }).unwrap()
+    }
+
+    #[test]
+    fn off_mode_never_folds() {
+        let c = presets::cluster("hopper", 2).unwrap();
+        let fw = uniform(&c, 8, 1, 2);
+        assert!(classify(&c, &fw, FoldMode::Off).is_none());
+    }
+
+    #[test]
+    fn homogeneous_single_node_groups_fold() {
+        let c = presets::cluster("hopper", 2).unwrap();
+        let fw = uniform(&c, 8, 1, 2);
+        let plan = classify(&c, &fw, FoldMode::Auto).expect("symmetric dp=2 must fold");
+        assert_eq!(plan.num_classes(), 1);
+        assert_eq!(plan.class_mult, vec![2]);
+        assert_eq!(plan.represented, vec![true, false]);
+        assert_eq!(plan.folded_ranks, 8);
+        // twin maps group 1's ranks onto group 0's, position-wise
+        assert_eq!(plan.twin[8], 0);
+        assert_eq!(plan.twin[15], 7);
+        assert_eq!(plan.rank_mult[0], 2);
+    }
+
+    #[test]
+    fn pipeline_parallelism_forces_expansion() {
+        let c = presets::cluster("hopper", 2).unwrap();
+        let fw = uniform(&c, 4, 2, 2);
+        assert!(classify(&c, &fw, FoldMode::Auto).is_none());
+    }
+
+    #[test]
+    fn hetero_pairs_fold_within_arch() {
+        // 2 ampere + 2 hopper nodes, tp=8 → 4 single-node groups in 2
+        // classes of multiplicity 2
+        let c = presets::cluster_hetero(2, 2).unwrap();
+        let fw = uniform(&c, 8, 1, 4);
+        let plan = classify(&c, &fw, FoldMode::Auto).unwrap();
+        assert_eq!(plan.num_classes(), 2);
+        assert_eq!(plan.class_mult, vec![2, 2]);
+        assert_eq!(plan.folded_ranks, 16);
+    }
+
+    #[test]
+    fn singleton_classes_disable_folding() {
+        // 1 ampere + 1 hopper node: the two groups are in different
+        // classes, nothing to fold
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let fw = uniform(&c, 8, 1, 2);
+        assert!(classify(&c, &fw, FoldMode::Auto).is_none());
+    }
+
+    #[test]
+    fn multi_spine_multi_node_groups_stay_unfolded() {
+        let mut c = presets::cluster("hopper", 4).unwrap();
+        c.fabric = FabricSpec::LeafSpine { spines: 2, oversubscription: 1.0 };
+        // each group spans 2 nodes → spine-hash asymmetry forces
+        // singleton classes → no folding
+        let fw = uniform(&c, 16, 1, 2);
+        assert!(classify(&c, &fw, FoldMode::Auto).is_none());
+        // single-spine spanning groups fold
+        c.fabric = FabricSpec::LeafSpine { spines: 1, oversubscription: 1.0 };
+        let plan = classify(&c, &fw, FoldMode::Auto).unwrap();
+        assert_eq!(plan.class_mult, vec![2]);
+    }
+
+    #[test]
+    fn rank_scale_100k_classification_is_linear() {
+        // the ladder shape: 12.5k nodes, dp == world, single-rank groups
+        let c = presets::cluster("ampere", 12_500).unwrap();
+        let fw = uniform(&c, 1, 1, 100_000);
+        let plan = classify(&c, &fw, FoldMode::Auto).unwrap();
+        assert_eq!(plan.num_classes(), 1);
+        assert_eq!(plan.class_mult, vec![100_000]);
+        assert_eq!(plan.folded_ranks, 99_999);
+    }
+}

@@ -10,6 +10,9 @@
 //!   that expands a collective into batches of network flows.
 //! * [`resharding`] — shape-mismatch detection between communicating
 //!   device groups and the extra traffic a reshard injects.
+//! * [`fold`] — symmetry folding: equivalence classes of
+//!   interchangeable device groups, so the engine simulates one
+//!   representative per class and multiplies (DESIGN.md §25).
 //! * [`compiled`] — the dense, immutable simulation core: a workload
 //!   lowered once (durations resolved, collectives pre-planned, ids
 //!   remapped to `Vec` indices) so runs share it without re-deriving.
@@ -20,11 +23,13 @@
 pub mod collective;
 pub mod compiled;
 pub mod device_group;
+pub mod fold;
 pub mod resharding;
 pub mod scheduler;
 
 pub use collective::{CollectiveAlgo, CollectiveDef, CollectiveExec, CommKind};
 pub use compiled::{CompiledWorkload, DenseOp};
 pub use device_group::DeviceGroups;
+pub use fold::{FoldMode, FoldPlan};
 pub use resharding::{needs_resharding, ReshardPlan};
 pub use scheduler::{Scheduler, SchedulerReport};

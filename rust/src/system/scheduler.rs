@@ -32,7 +32,7 @@ use crate::util::units::Time;
 use crate::workload::op::Workload;
 
 use super::collective::RingPolicy;
-use super::compiled::{CompiledWorkload, DenseOp};
+use super::compiled::{CompiledWorkload, DenseOp, FoldedMeta};
 
 /// Tag space split: collective flows use their dense id; p2p messages
 /// are offset so the two never collide.
@@ -218,6 +218,18 @@ struct Exec<'w> {
     posted_scratch: Vec<Time>,
 }
 
+/// Post time for a flow from `r`: the sender's own collective arrival,
+/// or — when `r` is a folded rank with no program — the arrival of its
+/// class twin, which by symmetry equals the time the folded rank would
+/// have arrived. Free function (not a method) so the closure capturing
+/// it stays disjoint from the `posted_scratch` borrow.
+fn posted_of(arrival: &[Time], fold: Option<&FoldedMeta>, r: u32) -> Time {
+    match fold {
+        Some(f) => arrival[f.twin[r as usize] as usize],
+        None => arrival[r as usize],
+    }
+}
+
 impl<'w> Exec<'w> {
     fn new(cw: &'w CompiledWorkload, mut flows: FlowSim, record_trace: bool) -> Self {
         let world = cw.world as usize;
@@ -329,7 +341,13 @@ impl<'w> Exec<'w> {
             match ops[pc] {
                 DenseOp::Compute { dur, label } => {
                     let now = eng.now();
-                    self.compute_busy += dur;
+                    // Under symmetry folding a representative rank's
+                    // compute stands for its whole class; weight the
+                    // accumulator so the report shows unfolded totals.
+                    self.compute_busy += match &cw.fold {
+                        Some(f) => dur * f.rank_mult[r],
+                        None => dur,
+                    };
                     self.trace.record(rank, TraceCategory::Compute, label, now, now + dur);
                     eng.schedule_in(dur, SimEvent::ComputeDone { rank });
                     self.state[r] = RankState::Computing;
@@ -399,7 +417,9 @@ impl<'w> Exec<'w> {
         // Flows are posted at each sender's arrival time (SimAI/ns-3
         // semantics): early posters' FCT absorbs the straggler wait.
         self.posted_scratch.clear();
-        self.posted_scratch.extend(step.iter().map(|f| self.arrival[f.src as usize]));
+        let fold = cw.fold.as_ref();
+        self.posted_scratch
+            .extend(step.iter().map(|f| posted_of(&self.arrival, fold, f.src)));
         self.flows.start_many_posted(eng, step, Some(&self.posted_scratch), &SimEvent::FlowDone);
         Ok(())
     }
@@ -439,7 +459,9 @@ impl<'w> Exec<'w> {
             let step = &cw.steps[cid][next];
             self.colls[cid].outstanding = step.len() as u32;
             self.posted_scratch.clear();
-            self.posted_scratch.extend(step.iter().map(|f| self.arrival[f.src as usize]));
+            let fold = cw.fold.as_ref();
+            self.posted_scratch
+                .extend(step.iter().map(|f| posted_of(&self.arrival, fold, f.src)));
             self.flows.start_many_posted(eng, step, Some(&self.posted_scratch), &SimEvent::FlowDone);
             Ok(())
         } else {
@@ -452,7 +474,12 @@ impl<'w> Exec<'w> {
         let cw = self.cw;
         let def = &cw.defs[cid as usize];
         let now = eng.now();
-        self.comm_busy += now - start;
+        // Weighted like compute: a representative group's collective
+        // stands for every replica in its class (DP-syncs weigh 1).
+        self.comm_busy += match &cw.fold {
+            Some(f) => (now - start) * f.coll_mult[cid as usize],
+            None => now - start,
+        };
         if self.record_trace {
             let r0 = def.ranks.first().copied().unwrap_or(0);
             self.trace.record(r0, TraceCategory::Communication, def.label.clone(), start, now);

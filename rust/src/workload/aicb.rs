@@ -40,6 +40,7 @@ use crate::config::framework::{split_evenly, FrameworkSpec};
 use crate::config::model::{LayerKind, ModelSpec};
 use crate::system::collective::{select_allreduce_algo, CollectiveAlgo, CollectiveDef, CommKind};
 use crate::system::device_group::DeviceGroups;
+use crate::system::fold::FoldPlan;
 use crate::system::resharding;
 
 use super::op::{Op, RankProgram, Workload};
@@ -76,10 +77,39 @@ pub fn generate(
     fw: &FrameworkSpec,
     opts: &WorkloadOptions,
 ) -> anyhow::Result<Workload> {
+    generate_inner(model, cluster, fw, opts, None)
+}
+
+/// [`generate`] under a symmetry-fold plan ([`crate::system::fold`]):
+/// programs are emitted only for class-representative device groups;
+/// DP-sync collective defs keep their full rank lists (the folded
+/// planner in [`crate::system::compiled`] needs them) but only
+/// represented ranks carry the matching `Op::Collective`.
+pub fn generate_folded(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    fw: &FrameworkSpec,
+    opts: &WorkloadOptions,
+    fold: &FoldPlan,
+) -> anyhow::Result<Workload> {
+    generate_inner(model, cluster, fw, opts, Some(fold))
+}
+
+fn generate_inner(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    fw: &FrameworkSpec,
+    opts: &WorkloadOptions,
+    fold: Option<&FoldPlan>,
+) -> anyhow::Result<Workload> {
     fw.validate(model, cluster)?;
     let groups = DeviceGroups::derive(fw);
+    let emitted = |gi: usize| fold.map_or(true, |f| f.represented[gi]);
     let mut ops: HashMap<u32, Vec<Op>> = HashMap::with_capacity(fw.total_ranks());
-    for g in &fw.groups {
+    for (gi, g) in fw.groups.iter().enumerate() {
+        if !emitted(gi) {
+            continue;
+        }
         for r in g.ranks() {
             ops.insert(r, Vec::new());
         }
@@ -111,7 +141,10 @@ pub fn generate(
     let sched = fw.schedule.schedule();
     let vpp = sched.vpp();
 
-    for g in &fw.groups {
+    for (gi, g) in fw.groups.iter().enumerate() {
+        if !emitted(gi) {
+            continue;
+        }
         let mbs = g.micro_batch.min(g.batch_share);
         let mut m = g.num_microbatches();
         if let Some(limit) = opts.microbatch_limit {
@@ -364,7 +397,11 @@ pub fn generate(
                 for def in plan.all_defs() {
                     colls.push(def.clone());
                     for r in &def.ranks {
-                        ops.get_mut(r).unwrap().push(Op::Collective { def_id: def.id });
+                        // folded ranks (no entry) sit the op out; their
+                        // representatives carry it
+                        if let Some(stream) = ops.get_mut(r) {
+                            stream.push(Op::Collective { def_id: def.id });
+                        }
                     }
                 }
             } else {
@@ -391,7 +428,10 @@ pub fn generate(
                         };
                         colls.push(def);
                         for r in &ranks {
-                            ops.get_mut(r).unwrap().push(Op::Collective { def_id: id });
+                            // folded ranks (no entry) sit the op out
+                            if let Some(stream) = ops.get_mut(r) {
+                                stream.push(Op::Collective { def_id: id });
+                            }
                         }
                     }
                 }
@@ -405,7 +445,11 @@ pub fn generate(
         .collect();
     programs.sort_by_key(|p| p.rank);
     let w = Workload { programs, collectives: colls };
-    w.validate()?;
+    if fold.is_some() {
+        w.validate_folded()?;
+    } else {
+        w.validate()?;
+    }
     Ok(w)
 }
 

@@ -62,6 +62,19 @@ impl Workload {
     /// rank in a collective's group has exactly one matching op per
     /// occurrence; sends and recvs pair up by message id.
     pub fn validate(&self) -> anyhow::Result<()> {
+        self.validate_inner(false)
+    }
+
+    /// [`Workload::validate`] for symmetry-folded workloads
+    /// ([`crate::system::fold`]): folded ranks have no program, so
+    /// collective participation is only required of program-bearing
+    /// ranks — but every collective still needs at least one, or it
+    /// could never launch.
+    pub fn validate_folded(&self) -> anyhow::Result<()> {
+        self.validate_inner(true)
+    }
+
+    fn validate_inner(&self, folded: bool) -> anyhow::Result<()> {
         use std::collections::HashMap;
         let defs: HashMap<u64, &CollectiveDef> =
             self.collectives.iter().map(|c| (c.id, c)).collect();
@@ -96,15 +109,33 @@ impl Workload {
                 }
             }
         }
+        let has_program: std::collections::HashSet<u32> =
+            self.programs.iter().map(|p| p.rank).collect();
         for (id, def) in &defs {
             let counts: Vec<usize> =
                 def.ranks.iter().map(|r| part.get(&(*id, *r)).copied().unwrap_or(0)).collect();
-            anyhow::ensure!(
-                counts.iter().all(|c| *c == 1),
-                "collective {id} ({}) participation mismatch: {counts:?} over ranks {:?}",
-                def.label,
-                def.ranks
-            );
+            if folded {
+                // folded ranks legitimately sit out; every
+                // program-bearing participant still shows up exactly once
+                let ok = def
+                    .ranks
+                    .iter()
+                    .zip(&counts)
+                    .all(|(r, c)| if has_program.contains(r) { *c == 1 } else { *c == 0 });
+                anyhow::ensure!(
+                    ok && counts.iter().any(|c| *c == 1),
+                    "folded collective {id} ({}) participation mismatch: {counts:?} over ranks {:?}",
+                    def.label,
+                    def.ranks
+                );
+            } else {
+                anyhow::ensure!(
+                    counts.iter().all(|c| *c == 1),
+                    "collective {id} ({}) participation mismatch: {counts:?} over ranks {:?}",
+                    def.label,
+                    def.ranks
+                );
+            }
         }
         for (msg, (src, dst)) in &sends {
             match recvs.get(msg) {

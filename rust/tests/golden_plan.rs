@@ -65,7 +65,8 @@ fn hetero_plan_report_golden_and_thread_invariant() {
     let m = tiny_model();
     let c = presets::cluster_hetero(1, 1).unwrap();
     let render = |threads| {
-        let opts = PlanOptions { microbatch_limit: Some(1), threads, refine_steps: 2 };
+        let opts =
+            PlanOptions { microbatch_limit: Some(1), threads, refine_steps: 2, ..Default::default() };
         search(&m, &c, &opts).unwrap().render(0)
     };
     let one = render(1);
@@ -83,7 +84,8 @@ fn fig3_plan_report_golden_and_thread_invariant() {
     let m = fig3_model().unwrap();
     let c = fig3_cluster().unwrap();
     let render = |threads| {
-        let opts = PlanOptions { microbatch_limit: Some(1), threads, refine_steps: 2 };
+        let opts =
+            PlanOptions { microbatch_limit: Some(1), threads, refine_steps: 2, ..Default::default() };
         search(&m, &c, &opts).unwrap().render(0)
     };
     let one = render(1);
@@ -157,4 +159,33 @@ fn simulate_timeline_golden() {
         rep.comm_busy.as_ps(),
     );
     check_golden("simulate_hetero_1_1.txt", &fingerprint);
+}
+
+#[test]
+fn simulate_fold_off_matches_seed_golden() {
+    // fold=off must be byte-identical to the pre-folding engine: an
+    // explicit `.fold(FoldMode::Off)` build reproduces the SAME
+    // fingerprint as the default build (every count, not just the
+    // times), and both pin the golden `simulate_timeline_golden` uses
+    use hetsim::system::fold::FoldMode;
+    let fingerprint = |explicit_off: bool| {
+        let mut b = SimulationBuilder::new(tiny_model(), presets::cluster_hetero(1, 1).unwrap())
+            .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 });
+        if explicit_off {
+            b = b.fold(FoldMode::Off);
+        }
+        let rep = b.build().unwrap().run_iteration().unwrap();
+        format!(
+            "iteration_ps={}\nevents={}\nflows={}\ncompute_busy_ps={}\ncomm_busy_ps={}\n",
+            rep.iteration_time.as_ps(),
+            rep.events_processed,
+            rep.flows_completed,
+            rep.compute_busy.as_ps(),
+            rep.comm_busy.as_ps(),
+        )
+    };
+    let default_build = fingerprint(false);
+    let fold_off = fingerprint(true);
+    assert_eq!(default_build, fold_off, "fold=off diverged from the default build");
+    check_golden("simulate_hetero_1_1.txt", &fold_off);
 }

@@ -194,7 +194,7 @@ fn plan_search_covers_mixed_sizes_on_leaf_spine() {
     let m = tiny_model();
     let mut c = mixed_cluster();
     c.fabric = FabricSpec::LeafSpine { spines: 2, oversubscription: 4.0 };
-    let opts = PlanOptions { microbatch_limit: Some(1), threads: 2, refine_steps: 0 };
+    let opts = PlanOptions { microbatch_limit: Some(1), threads: 2, refine_steps: 0, ..Default::default() };
     let rep = search(&m, &c, &opts).unwrap();
     assert!(!rep.ranked.is_empty());
     assert!(rep.failed.is_empty(), "{:?}", rep.failed);

@@ -24,7 +24,7 @@ fn tiny_model() -> hetsim::config::model::ModelSpec {
 fn ranking_fingerprint(threads: usize) -> String {
     let m = tiny_model();
     let c = presets::cluster_hetero(1, 1).unwrap();
-    let opts = PlanOptions { microbatch_limit: Some(1), threads, refine_steps: 2 };
+    let opts = PlanOptions { microbatch_limit: Some(1), threads, refine_steps: 2, ..Default::default() };
     let rep = search(&m, &c, &opts).unwrap();
     // full rendered output: keys, times, breakdowns, prune notes
     rep.render(0)
@@ -73,7 +73,7 @@ fn ranked_output_contains_every_schedule_kind() {
     // silently land in `failed`)
     let m = tiny_model();
     let c = presets::cluster_hetero(1, 1).unwrap();
-    let opts = PlanOptions { microbatch_limit: Some(1), threads: 2, refine_steps: 0 };
+    let opts = PlanOptions { microbatch_limit: Some(1), threads: 2, refine_steps: 0, ..Default::default() };
     let rep = search(&m, &c, &opts).unwrap();
     assert!(rep.failed.is_empty(), "{:?}", rep.failed);
     for want in [
@@ -92,7 +92,7 @@ fn ranked_output_contains_every_schedule_kind() {
 fn winner_beats_or_ties_uniform_default_on_hetero_cluster() {
     let m = tiny_model();
     let c = presets::cluster_hetero(1, 1).unwrap();
-    let opts = PlanOptions { microbatch_limit: Some(1), threads: 4, refine_steps: 0 };
+    let opts = PlanOptions { microbatch_limit: Some(1), threads: 4, refine_steps: 0, ..Default::default() };
     let rep = search(&m, &c, &opts).unwrap();
     assert!(rep.ranked.len() >= 8, "only {} plans ranked", rep.ranked.len());
     assert!(
@@ -110,7 +110,7 @@ fn winner_beats_or_ties_uniform_default_on_hetero_cluster() {
 fn refined_never_loses_to_the_hetero_heuristic_on_the_hetero_preset() {
     let m = tiny_model();
     let c = presets::cluster_hetero(1, 1).unwrap();
-    let opts = PlanOptions { microbatch_limit: Some(1), threads: 4, refine_steps: 8 };
+    let opts = PlanOptions { microbatch_limit: Some(1), threads: 4, refine_steps: 8, ..Default::default() };
     let rep = search(&m, &c, &opts).unwrap();
     let refined = rep.refined.as_ref().expect("refinement requested");
     // the plan_hetero heuristic (grid layout, hetero-aware
@@ -160,7 +160,7 @@ fn fig3_refined_matches_or_beats_the_handwritten_plan() {
         .unwrap()
         .iteration_time;
 
-    let opts = PlanOptions { microbatch_limit: None, threads: 4, refine_steps: 20 };
+    let opts = PlanOptions { microbatch_limit: None, threads: 4, refine_steps: 20, ..Default::default() };
     let rep = search(&m, &c, &opts).unwrap();
     assert!(rep.memory_relaxed, "fig3 planning requires the memory-relaxed fallback");
     let refined = rep.refined.as_ref().unwrap();

@@ -8,7 +8,9 @@
 //! * max-min fairness feasibility (no link over-subscription),
 //! * workload validation under random generator configs,
 //! * resharding trigger conditions,
-//! * layer/batch conservation under random refinement-move sequences.
+//! * layer/batch conservation under random refinement-move sequences,
+//! * symmetry folding (`fold=auto`) reproduces the unfolded run's
+//!   timing exactly on random clusters / fabrics / schedules.
 
 use hetsim::config::framework::{FrameworkSpec, ParallelismSpec};
 use hetsim::config::presets;
@@ -423,6 +425,108 @@ fn prop_refinement_moves_conserve_layers_and_batch() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_folded_simulation_matches_unfolded_exactly() {
+    use hetsim::config::cluster::FabricSpec;
+    use hetsim::simulator::SimulationBuilder;
+    use hetsim::system::fold::FoldMode;
+    use hetsim::workload::schedule::ScheduleKind;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    // folding is exact, not approximate: iteration time and the busy
+    // accumulators must match the unfolded run bit-for-bit whenever
+    // fold=auto engages (DESIGN.md §25)
+    let folded_cases = AtomicUsize::new(0);
+    check(&cfg(40), |g| {
+        let nodes = g.rng.range_u64(1, 4) as u32;
+        let mut cluster = match g.rng.range_u64(0, 3) {
+            0 => presets::cluster("ampere", nodes * 2).unwrap(),
+            1 => presets::cluster("hopper", nodes * 2).unwrap(),
+            _ => presets::cluster_hetero(nodes, nodes).unwrap(),
+        };
+        cluster.fabric = match g.rng.range_u64(0, 3) {
+            0 => FabricSpec::RailOnly,
+            1 => FabricSpec::SingleSwitch,
+            _ => FabricSpec::LeafSpine {
+                spines: g.rng.range_u64(1, 4) as u32,
+                oversubscription: g.rng.range_f64(1.0, 4.0),
+            },
+        };
+        let world = cluster.total_gpus();
+        let tp = *g.rng.choose(&[1u32, 2, 4, 8, 16]);
+        if world % tp != 0 {
+            return Ok(());
+        }
+        let dp = world / tp;
+        if dp < 2 {
+            return Ok(()); // folding needs a data-parallel dimension
+        }
+        let mut model = presets::model("gpt-6.7b").unwrap();
+        model.num_layers = g.rng.range_u64(1, 5) as u32;
+        model.micro_batch = g.rng.range_u64(1, 3);
+        model.global_batch = model.micro_batch * dp as u64 * g.rng.range_u64(1, 3);
+        let schedule = *g.rng.choose(&[
+            ScheduleKind::GPipe,
+            ScheduleKind::OneFOneB,
+            ScheduleKind::Interleaved1F1B { vpp: 2 },
+        ]);
+        let par = ParallelismSpec { tp, pp: 1, dp };
+        let run = |mode: FoldMode| {
+            let sim = SimulationBuilder::new(model.clone(), cluster.clone())
+                .parallelism(par)
+                .schedule(schedule)
+                .fold(mode)
+                .build()
+                .map_err(|e| format!("build({mode:?}) failed: {e}"))?;
+            let was_folded = sim.folded();
+            let rep = sim
+                .run_iteration()
+                .map_err(|e| format!("run({mode:?}) failed: {e}"))?;
+            Ok::<_, String>((was_folded, rep))
+        };
+        let (off_folded, off) = run(FoldMode::Off)?;
+        let (auto_folded, auto_) = run(FoldMode::Auto)?;
+        if off_folded {
+            return Err("fold=off produced a folded simulation".into());
+        }
+        if auto_folded {
+            folded_cases.fetch_add(1, Ordering::Relaxed);
+        }
+        let ctx = format!(
+            "{} fabric={:?} tp={tp} dp={dp} layers={} mb={} gb={} sched={:?} folded={auto_folded}",
+            cluster.name,
+            cluster.fabric,
+            model.num_layers,
+            model.micro_batch,
+            model.global_batch,
+            schedule,
+        );
+        if auto_.iteration_time != off.iteration_time {
+            return Err(format!(
+                "iteration time diverged ({} != {}): {ctx}",
+                auto_.iteration_time, off.iteration_time
+            ));
+        }
+        if auto_.compute_busy != off.compute_busy {
+            return Err(format!(
+                "compute busy diverged ({} != {}): {ctx}",
+                auto_.compute_busy, off.compute_busy
+            ));
+        }
+        if auto_.comm_busy != off.comm_busy {
+            return Err(format!(
+                "comm busy diverged ({} != {}): {ctx}",
+                auto_.comm_busy, off.comm_busy
+            ));
+        }
+        Ok(())
+    });
+    assert!(
+        folded_cases.load(Ordering::Relaxed) > 0,
+        "no random case ever folded — the property is vacuous"
+    );
 }
 
 #[test]
