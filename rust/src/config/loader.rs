@@ -5,7 +5,7 @@
 //!
 //! A scenario file is one JSON object with three required sections
 //! (`model`, `cluster`, `parallelism`) plus optional `fabric`,
-//! `schedule` and `seed`. Unknown keys are ignored.
+//! `schedule`, `fold`, `faults` and `seed`. Unknown keys are ignored.
 //!
 //! ```json
 //! {
@@ -102,18 +102,40 @@
 //! class (bit-identical results, large speedups at high DP), `"off"`
 //! is byte-identical to the pre-folding simulator.
 //!
+//! ## `faults` — optional
+//!
+//! Deterministic fault injection ([`crate::system::failure`],
+//! DESIGN.md §26). An object with any of:
+//!
+//! * `"events"` — array of `{"at_s": seconds, "kind": "node_fail" |
+//!   "nic_fail" | "link_fail" | "straggler", "node": index,
+//!   "mult": factor}` (`mult` only for stragglers, ≥ 1). Fail-stop
+//!   kinds abort the iteration at `at_s`; stragglers multiply the
+//!   node's compute times.
+//! * `"checkpoint"` — `{"interval_iters", "write_gbps",
+//!   "restart_warmup_s"}` overriding the checkpoint/restore cost model
+//!   used for goodput accounting.
+//! * `"mtbf"` — `{"horizon_s", "scale"}`: materialize a per-arch
+//!   MTBF-driven schedule over the cluster, seeded by the scenario's
+//!   `seed` (or the fault object's own `"seed"` key).
+//!
+//! A spec with no events is normalized away — the simulation is
+//! byte-identical to one without the key.
+//!
 //! ## `seed` — optional, default `42`
 //!
-//! Reserved for stochastic extensions; the simulator itself is
-//! deterministic.
+//! Seeds stochastic extensions — today that is the MTBF fault-schedule
+//! draw; everything else in the simulator is deterministic.
 //!
 //! Complete, loadable examples ship at
 //! `rust/examples/scenario_hetero_1f1b.json` (grid parallelism),
 //! `rust/examples/scenario_variable_tp.json` (per-group TP, the Fig-3
-//! deployment) and `rust/examples/scenario_spine_mixed_nodes.json`
-//! (mixed node sizes on an oversubscribed leaf/spine fabric); the
-//! doctests below parse them on every `cargo test`, so the examples
-//! and this documentation cannot rot apart:
+//! deployment), `rust/examples/scenario_spine_mixed_nodes.json`
+//! (mixed node sizes on an oversubscribed leaf/spine fabric) and
+//! `rust/examples/scenario_faults.json` (the canonical fault-injection
+//! scenario behind the resilience golden test); the doctests below
+//! parse them on every `cargo test`, so the examples and this
+//! documentation cannot rot apart:
 //!
 //! ```
 //! let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_hetero_1f1b.json");
@@ -153,11 +175,24 @@
 //! // per-node TP splits matching each node's actual GPU count
 //! assert_eq!(s.per_group_tp, Some(vec![vec![4], vec![4, 4]]));
 //! ```
+//!
+//! ```
+//! let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_faults.json");
+//! let text = std::fs::read_to_string(path).unwrap();
+//! let s = hetsim::config::loader::load_scenario(&text).unwrap();
+//! let faults = s.faults.expect("the canonical fault scenario injects faults");
+//! // a straggler from iteration start plus a mid-iteration fail-stop
+//! assert_eq!(faults.events.len(), 2);
+//! assert!(faults.events.iter().any(|e| e.kind.name() == "straggler"));
+//! assert!(faults.events.iter().any(|e| e.kind.is_fail_stop()));
+//! assert_eq!(faults.checkpoint.interval_iters, 16);
+//! ```
 
 use crate::config::cluster::{ClusterSpec, FabricSpec};
 use crate::config::framework::ParallelismSpec;
 use crate::config::model::{ModelSpec, MoeSpec};
 use crate::config::presets;
+use crate::system::failure::FaultSpec;
 use crate::system::fold::FoldMode;
 use crate::util::json::Json;
 use crate::workload::schedule::ScheduleKind;
@@ -180,8 +215,11 @@ pub struct Scenario {
     pub schedule: ScheduleKind,
     /// Symmetry-folding mode ([`crate::system::fold`]).
     pub fold: FoldMode,
-    /// Reserved for stochastic extensions (the simulator itself is
-    /// deterministic).
+    /// Injected fault schedule ([`crate::system::failure`]), when the
+    /// scenario carries a `"faults"` key with at least one event.
+    pub faults: Option<FaultSpec>,
+    /// Seeds stochastic extensions (today: the MTBF fault-schedule
+    /// draw); everything else in the simulator is deterministic.
     pub seed: u64,
 }
 
@@ -215,7 +253,13 @@ pub fn load_scenario(text: &str) -> anyhow::Result<Scenario> {
     let seed = v.opt_u64("seed", 42);
     model.validate()?;
     cluster.validate()?;
-    Ok(Scenario { model, cluster, parallelism, per_group_tp, schedule, fold, seed })
+    // parsed after cluster validation: event node indices are checked
+    // against the resolved cluster; an eventless spec normalizes away
+    let faults = match v.get("faults") {
+        Some(f) => Some(FaultSpec::from_json(f, &cluster, seed)?).filter(|s| !s.is_empty()),
+        None => None,
+    };
+    Ok(Scenario { model, cluster, parallelism, per_group_tp, schedule, fold, faults, seed })
 }
 
 /// Parse the `model` section: a preset name or an inline Table-6
@@ -632,6 +676,34 @@ mod tests {
         ] {
             assert!(load_scenario(&base.replace("%FAB%", bad)).is_err(), "{bad} accepted");
         }
+    }
+
+    #[test]
+    fn faults_key_parsed_and_eventless_spec_normalized_away() {
+        let base = r#"{"model": "gpt-6.7b", "cluster": "hopper:2",
+            "parallelism": {"tp": 8, "pp": 1, "dp": 2}%F%}"#;
+        let s = load_scenario(&base.replace("%F%", "")).unwrap();
+        assert!(s.faults.is_none());
+        let s = load_scenario(&base.replace(
+            "%F%",
+            r#", "faults": {"events": [{"at_s": 1.5, "kind": "node_fail", "node": 1}]}"#,
+        ))
+        .unwrap();
+        let f = s.faults.unwrap();
+        assert_eq!(f.events.len(), 1);
+        assert_eq!(f.seed, 42, "fault seed defaults to the scenario seed");
+        // a checkpoint-only spec injects nothing → normalized to None
+        let s = load_scenario(
+            &base.replace("%F%", r#", "faults": {"checkpoint": {"interval_iters": 8}}"#),
+        )
+        .unwrap();
+        assert!(s.faults.is_none());
+        // event node indices are validated against the resolved cluster
+        assert!(load_scenario(&base.replace(
+            "%F%",
+            r#", "faults": {"events": [{"at_s": 1.0, "kind": "node_fail", "node": 9}]}"#,
+        ))
+        .is_err());
     }
 
     #[test]

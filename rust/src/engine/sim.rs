@@ -57,6 +57,15 @@ impl<T> Engine<T> {
         self.queue.push(time, payload)
     }
 
+    /// The timestamp of the next pending event without popping it
+    /// (`None` when the queue is drained). Lets manual-loop callers
+    /// decide *before* dispatch whether an external cutoff — e.g. an
+    /// injected fault ([`crate::system::failure`]) — fires first,
+    /// without perturbing the clock or the processed-event count.
+    pub fn peek_time(&mut self) -> Option<Time> {
+        self.queue.peek_time()
+    }
+
     /// Pop the next event and advance the clock — the manual-loop
     /// alternative to [`Engine::run`] for callers whose handler needs
     /// `&mut` access to state that also owns the engine reference.

@@ -21,8 +21,9 @@ fn usage() -> Usage {
         program: "hetsim",
         about: "heterogeneity-aware LLM training simulator (CS.DC 2025 reproduction)",
         commands: vec![
-            ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N] [--fabric rail|switch|spine:S,OS] [--schedule gpipe|1f1b|interleaved:V] [--fold auto|off] [--iterations N --threads N]"),
-            ("plan", "rank TPxPPxDPxschedule plans (+ variable per-group TP layouts on hetero clusters) [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --threads N --mb-limit N (0=all) --top K --refine[=STEPS] --fold auto|off]"),
+            ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N] [--fabric rail|switch|spine:S,OS] [--schedule gpipe|1f1b|interleaved:V] [--fold auto|off] [--faults FILE] [--iterations N --threads N]"),
+            ("plan", "rank TPxPPxDPxschedule plans (+ variable per-group TP layouts on hetero clusters) [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --threads N --mb-limit N (0=all) --top K --refine[=STEPS] --fold auto|off --goodput [--horizon-s S --mtbf-scale X --seed N]]"),
+            ("goodput", "rank plans by effective goodput under an MTBF fault schedule [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --threads N --mb-limit N --top K --fold auto|off --horizon-s S --mtbf-scale X --seed N]"),
             ("bench", "planner/engine throughput ladders -> BENCH_plan.json [--quick --threads N --out FILE --baseline FILE --factor F]"),
             ("fig1", "hardware-evolution trend across generation presets"),
             ("fig5", "per-layer compute time across GPU generations [--backend native|pjrt]"),
@@ -50,6 +51,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("simulate") => cmd_simulate(args),
         Some("plan") => cmd_plan(args),
+        Some("goodput") => cmd_goodput(args),
         Some("bench") => cmd_bench(args),
         Some("fig1") => cmd_fig1(args),
         Some("fig5") => cmd_fig5(args),
@@ -78,12 +80,21 @@ fn cost_backend(args: &Args) -> Result<CostBackend> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "model", "cluster", "fabric", "tp", "pp", "dp", "schedule", "backend",
-        "mb-limit", "hetero-partition", "naive-ring", "iterations", "threads", "fold",
+        "mb-limit", "hetero-partition", "naive-ring", "iterations", "threads", "fold", "faults",
     ])?;
-    let (model, mut cluster, par, schedule, per_group_tp, fold) =
+    let (model, mut cluster, par, schedule, per_group_tp, fold, faults, seed) =
         if let Some(path) = args.opt("config") {
             let s = loader::load_scenario_file(std::path::Path::new(path))?;
-            (s.model, s.cluster, Some(s.parallelism), Some(s.schedule), s.per_group_tp, s.fold)
+            (
+                s.model,
+                s.cluster,
+                Some(s.parallelism),
+                Some(s.schedule),
+                s.per_group_tp,
+                s.fold,
+                s.faults,
+                s.seed,
+            )
         } else {
             let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
             let cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
@@ -97,7 +108,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                     dp: args.opt_u64("dp", 1)? as u32,
                 }),
             };
-            (model, cluster, par, None, None, FoldMode::Off)
+            (model, cluster, par, None, None, FoldMode::Off, None, 42)
         };
     // --fabric overrides the cluster's (or the config file's) fabric
     if let Some(f) = args.opt("fabric") {
@@ -117,10 +128,22 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         Some(v) => FoldMode::parse(v)?,
         None => fold,
     };
+    // --faults FILE overrides a config file's "faults" key; the file
+    // holds one faults object (the same shape as the scenario key)
+    let faults = match args.opt("faults") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+            let v = hetsim::util::json::Json::parse(&text)?;
+            Some(hetsim::system::failure::FaultSpec::from_json(&v, &cluster, seed)?)
+        }
+        None => faults,
+    };
     let mut b = SimulationBuilder::new(model, cluster)
         .cost_backend(cost_backend(args)?)
         .hetero_partitioning(args.flag("hetero-partition"))
         .fold(fold)
+        .faults(faults)
         .workload_options(WorkloadOptions {
             microbatch_limit: args.opt("mb-limit").map(|v| v.parse()).transpose()?,
             ..Default::default()
@@ -155,6 +178,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             r.iteration_time == first.iteration_time
                 && r.events_processed == first.events_processed
                 && r.flows_completed == first.flows_completed
+                && r.fault == first.fault
         });
         println!(
             "({iterations} concurrent iterations in {wall:.2}s wall-clock; \
@@ -172,6 +196,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("iteration time:   {}", report.iteration_time);
     println!("flows completed:  {}", report.flows_completed);
     println!("events processed: {}", report.events_processed);
+    if let Some(f) = &report.fault {
+        println!(
+            "fault:            node {} failed at {} — iteration aborted, {} of work lost",
+            f.node, f.at, f.lost_work
+        );
+    }
     let mut kinds: Vec<_> = report.fct_summary.iter().collect();
     kinds.sort_by_key(|(k, _)| **k);
     for (kind, s) in kinds {
@@ -188,7 +218,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 fn cmd_plan(args: &Args) -> Result<()> {
     args.check_known(&[
-        "model", "cluster", "fabric", "threads", "mb-limit", "top", "refine", "fold",
+        "model", "cluster", "fabric", "threads", "mb-limit", "top", "refine", "fold", "goodput",
+        "horizon-s", "mtbf-scale", "seed",
     ])?;
     let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
     let mut cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
@@ -215,7 +246,23 @@ fn cmd_plan(args: &Args) -> Result<()> {
         cluster.total_gpus(),
         cluster.fabric.name()
     );
-    let report = hetsim::planner::search(&model, &cluster, &opts)?;
+    let mut report = hetsim::planner::search(&model, &cluster, &opts)?;
+    // --goodput re-ranks by effective goodput under an MTBF schedule
+    // (DESIGN.md §26); the fault-free scores stay in the table
+    if args.flag("goodput") {
+        let gopts = hetsim::report::goodput::SweepOptions {
+            plan: opts.clone(),
+            horizon_s: args.opt_f64("horizon-s", 86_400.0)?,
+            mtbf_scale: args.opt_f64("mtbf-scale", 1.0)?,
+            seed: args.opt_u64("seed", 42)?,
+            ..Default::default()
+        };
+        hetsim::report::goodput::annotate(&mut report, &model, &cluster, &gopts);
+        println!(
+            "(re-ranked by effective goodput: horizon {:.0}s, MTBF scale {}x, seed {})\n",
+            gopts.horizon_s, gopts.mtbf_scale, gopts.seed
+        );
+    }
     print!("{}", report.render(top));
     let best = report.best();
     let speedup =
@@ -233,6 +280,49 @@ fn cmd_plan(args: &Args) -> Result<()> {
             r.refined_time
         );
     }
+    Ok(())
+}
+
+fn cmd_goodput(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "model", "cluster", "fabric", "threads", "mb-limit", "top", "fold", "horizon-s",
+        "mtbf-scale", "seed",
+    ])?;
+    let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
+    let mut cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
+        args.opt_or("cluster", "hetero:1,1").to_string(),
+    ))?;
+    if let Some(f) = args.opt("fabric") {
+        cluster.fabric = hetsim::config::cluster::FabricSpec::parse(f)?;
+    }
+    let mb_limit = args.opt_u64("mb-limit", 2)?;
+    let opts = hetsim::report::goodput::SweepOptions {
+        plan: hetsim::planner::PlanOptions {
+            microbatch_limit: if mb_limit == 0 { None } else { Some(mb_limit) },
+            threads: args.opt_u64("threads", 0)? as usize,
+            refine_steps: 0,
+            fold: FoldMode::parse(args.opt_or("fold", "off"))?,
+        },
+        top: args.opt_u64("top", 5)? as usize,
+        horizon_s: args.opt_f64("horizon-s", 86_400.0)?,
+        mtbf_scale: args.opt_f64("mtbf-scale", 1.0)?,
+        seed: args.opt_u64("seed", 42)?,
+        ..Default::default()
+    };
+    println!(
+        "# goodput sweep: {} on {} ({} GPUs, fabric {})\n",
+        model.name,
+        cluster.name,
+        cluster.total_gpus(),
+        cluster.fabric.name()
+    );
+    let rep = hetsim::report::goodput::sweep(&model, &cluster, &opts)?;
+    print!("{}", rep.render());
+    let best = rep.best();
+    println!(
+        "\nbest by goodput: {} — {:.1} useful tokens/s (availability {:.4})",
+        best.plan, best.goodput.goodput_tokens_per_s, best.goodput.availability
+    );
     Ok(())
 }
 

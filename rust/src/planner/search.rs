@@ -83,6 +83,11 @@ pub struct EvaluatedPlan {
     pub flows_completed: usize,
     /// Discrete events the simulation processed.
     pub events_processed: u64,
+    /// Effective goodput (useful tokens per wall-clock second) under an
+    /// MTBF-driven fault schedule. `None` until filled in by
+    /// [`crate::report::goodput::annotate`] — the search itself ranks
+    /// on fault-free iteration time.
+    pub goodput: Option<f64>,
 }
 
 /// The full search result.
@@ -122,16 +127,22 @@ impl PlanSearchReport {
     /// Render the ranked table (top `limit` rows, 0 = all) plus a
     /// summary line.
     pub fn render(&self, limit: usize) -> String {
-        let mut t = Table::new(
-            "Ranked parallelism plans (one simulated iteration)",
-            &["rank", "plan", "iteration", "compute-busy", "comm-busy", "flows", "vs default"],
-        );
+        // the goodput column only appears when an annotation pass ran,
+        // so fault-free renders stay byte-identical to the pre-failure
+        // layout (golden fingerprints depend on this)
+        let with_goodput = self.ranked.iter().any(|ev| ev.goodput.is_some());
+        let mut cols: Vec<&str> =
+            vec!["rank", "plan", "iteration", "compute-busy", "comm-busy", "flows", "vs default"];
+        if with_goodput {
+            cols.push("goodput tok/s");
+        }
+        let mut t = Table::new("Ranked parallelism plans (one simulated iteration)", &cols);
         let base = self.baseline.iteration_time.as_secs();
         let shown =
             if limit == 0 { self.ranked.len() } else { limit.min(self.ranked.len()) };
         for (i, ev) in self.ranked[..shown].iter().enumerate() {
             let speedup = base / ev.iteration_time.as_secs();
-            t.row(vec![
+            let mut row = vec![
                 (i + 1).to_string(),
                 ev.candidate.key(),
                 ev.iteration_time.human(),
@@ -139,7 +150,14 @@ impl PlanSearchReport {
                 ev.comm_busy.human(),
                 ev.flows_completed.to_string(),
                 format!("{speedup:.2}x"),
-            ]);
+            ];
+            if with_goodput {
+                row.push(match ev.goodput {
+                    Some(g) => format!("{g:.0}"),
+                    None => "-".to_string(),
+                });
+            }
+            t.row(row);
         }
         let mut s = t.markdown();
         if self.memory_relaxed {
@@ -207,6 +225,7 @@ fn evaluate(
         comm_busy: score.comm_busy,
         flows_completed: score.flows_completed,
         events_processed: score.events_processed,
+        goodput: None,
     })
 }
 

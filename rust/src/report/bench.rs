@@ -16,6 +16,12 @@
 //! runners must pass); the gate exists to catch order-of-magnitude
 //! regressions of the zero-rebuild evaluation path, not ±10% noise.
 //!
+//! A resilience case rides along (DESIGN.md §26): `goodput_sweep` runs
+//! the `hetsim plan --goodput` pipeline — candidate search, then an
+//! effective-goodput walk over an MTBF fault schedule with survivor
+//! re-plans — on the fig3 and `hetero:1,1` scenarios, gated on
+//! plans/sec.
+//!
 //! Two symmetry-folding suites ride on top (DESIGN.md §25):
 //!
 //! * `fold_speedup` — the same DP-heavy scenario evaluated with
@@ -37,6 +43,7 @@ use crate::config::cluster::FabricSpec;
 use crate::config::framework::ParallelismSpec;
 use crate::config::presets;
 use crate::planner::{search, PlanOptions};
+use crate::report::goodput::{annotate, SweepOptions};
 use crate::simulator::SimulationBuilder;
 use crate::system::fold::FoldMode;
 use crate::util::json::Json;
@@ -234,13 +241,19 @@ pub fn run(quick: bool, threads: usize) -> anyhow::Result<Vec<BenchCase>> {
         ),
     ));
 
-    // 6. symmetry-folding head-to-head (DESIGN.md §25): the same
+    // 6. goodput sweep (DESIGN.md §26): plan search + MTBF-schedule
+    //    goodput annotation (with survivor re-plans) on fig3 and
+    //    hetero:1,1 — the `hetsim plan --goodput` hot path. Gated on
+    //    plans/sec; events counts the ranked candidates' iterations.
+    out.push(goodput_sweep_case(threads)?);
+
+    // 7. symmetry-folding head-to-head (DESIGN.md §25): the same
     //    DP-heavy candidate evaluated repeatedly with fold=off and
     //    fold=auto. The gated metric is the throughput *ratio*, so the
     //    baseline floor encodes the ≥10x acceptance bar directly.
     out.push(fold_speedup_case(quick)?);
 
-    // 7. rank-scaling ladder: leaf/spine clusters up to 100k ranks,
+    // 8. rank-scaling ladder: leaf/spine clusters up to 100k ranks,
     //    fold=auto (unfolded, the 100k DP ring alone is ~2e10 flows —
     //    these rungs exist *because* of folding). Runs last and
     //    ascending so the monotone VmHWM reading is attributable.
@@ -250,6 +263,49 @@ pub fn run(quick: bool, threads: usize) -> anyhow::Result<Vec<BenchCase>> {
         out.push(fold_ladder_case(name, ranks)?);
     }
     Ok(out)
+}
+
+/// The `goodput_sweep` case: plan search + goodput annotation under an
+/// MTBF fault schedule, on the paper's two reference clusters. The
+/// annotation walks every ranked plan and re-runs the planner on each
+/// distinct surviving cluster a node loss produces (memoized), so the
+/// case measures the full `hetsim plan --goodput` pipeline.
+fn goodput_sweep_case(threads: usize) -> anyhow::Result<BenchCase> {
+    let scenarios = [
+        ("fig3", fig3_model()?, fig3_cluster()?),
+        ("hetero:1,1", presets::model("gpt-6.7b")?, presets::cluster_hetero(1, 1)?),
+    ];
+    let t0 = Instant::now();
+    let mut plans = 0u64;
+    let mut events = 0u64;
+    let mut details = Vec::new();
+    for (label, m, c) in &scenarios {
+        let popts = PlanOptions {
+            microbatch_limit: Some(1),
+            threads,
+            refine_steps: 0,
+            fold: FoldMode::Off,
+        };
+        let mut rep = search(m, c, &popts)?;
+        plans += (rep.ranked.len() + rep.failed.len()) as u64;
+        events += rep.ranked.iter().map(|ev| ev.events_processed).sum::<u64>();
+        let gopts = SweepOptions {
+            plan: popts,
+            horizon_s: 86_400.0,
+            mtbf_scale: 8.0,
+            seed: 42,
+            ..Default::default()
+        };
+        annotate(&mut rep, m, c, &gopts);
+        let best = rep.best();
+        details.push(format!(
+            "{label}: best {} at {:.0} tok/s",
+            best.candidate.key(),
+            best.goodput.unwrap_or(0.0)
+        ));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(case("goodput_sweep", wall, plans, events, details.join("; ")))
 }
 
 /// A DP-only scale scenario: a 4-layer GPT-shaped model data-parallel

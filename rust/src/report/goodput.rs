@@ -1,0 +1,535 @@
+//! Effective-goodput reporting under failures (DESIGN.md §26).
+//!
+//! Iteration time alone mispredicts what a plan delivers at scale:
+//! MTBF makes failures routine, and a plan that is 5% faster but loses
+//! more work per fail-stop (or re-plans onto a worse surviving
+//! cluster) can deliver fewer useful tokens per wall-clock second.
+//! This module turns a fault schedule ([`crate::system::failure`])
+//! plus a plan's simulated iteration time into **effective goodput**:
+//!
+//! ```text
+//! goodput = useful_tokens / horizon_s
+//! useful_tokens = Σ productive_span / τ · tokens_per_iter
+//! τ = iteration_s · straggler_mult + checkpoint_write_s / interval
+//! ```
+//!
+//! Each fail-stop charges the *expected* lost work — half a checkpoint
+//! interval of iterations at the current effective rate — plus the
+//! checkpoint restore time and the fixed restart warmup. A permanent
+//! node loss additionally re-runs the planner on the surviving cluster
+//! (each [`crate::planner::search`] run shares its
+//! [`crate::simulator::EvalContext`] across candidates) and splices
+//! the new plan's per-iteration cost, floored at the pre-loss cost so
+//! goodput is monotone under event-set inclusion (the same property
+//! [`crate::system::failure::mtbf_schedule`] guarantees on the event
+//! side). The walk itself is sequential and allocation-light, so a
+//! goodput figure is deterministic for a given spec regardless of how
+//! many worker threads scored the plans.
+
+use std::collections::HashMap;
+
+use crate::config::cluster::ClusterSpec;
+use crate::config::model::ModelSpec;
+use crate::planner::{search, PlanOptions, PlanSearchReport};
+use crate::system::failure::{mtbf_schedule, CheckpointSpec, FaultEvent, FaultKind};
+use crate::util::table::Table;
+use crate::util::units::Time;
+
+/// Everything the goodput walk needs to know about one plan.
+#[derive(Debug, Clone, Copy)]
+pub struct GoodputInput<'a> {
+    /// The trained model (tokens per iteration, checkpoint bytes).
+    pub model: &'a ModelSpec,
+    /// The full (pre-failure) cluster the plan was laid out on.
+    pub cluster: &'a ClusterSpec,
+    /// The plan's simulated per-iteration time on the full cluster.
+    pub iteration: Time,
+    /// The plan's data-parallel degree: checkpoint writers shard the
+    /// state `dp` ways, so larger DP writes checkpoints faster — but
+    /// also restarts more state on every fail-stop.
+    pub dp: u32,
+    /// Checkpoint/restore cost model.
+    pub checkpoint: CheckpointSpec,
+    /// Wall-clock horizon to integrate over, in seconds.
+    pub horizon_s: f64,
+}
+
+/// Effective-goodput accounting for one plan over one fault schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GoodputReport {
+    /// Useful tokens per wall-clock second over the horizon — the
+    /// headline number plans are ranked by.
+    pub goodput_tokens_per_s: f64,
+    /// Total useful (non-lost) tokens produced within the horizon.
+    pub useful_tokens: f64,
+    /// The integration horizon, echoed for rate/total conversions.
+    pub horizon_s: f64,
+    /// Wall-clock seconds spent on recovery (lost work, restore,
+    /// warmup) or halted outright.
+    pub lost_s: f64,
+    /// `1 - lost_s / horizon_s`, clamped to `[0, 1]`.
+    pub availability: f64,
+    /// Fail-stop events that actually struck a live node.
+    pub fail_stops: usize,
+    /// Straggler events that slowed a live node.
+    pub stragglers: usize,
+    /// Node losses that triggered a planner re-run on the survivors.
+    pub replans: usize,
+    /// True when training halted before the horizon (no surviving
+    /// nodes, or no feasible plan on the survivors).
+    pub halted: bool,
+    /// The per-iteration cost in effect at the end of the walk
+    /// (≥ the initial cost: re-plans are floored at the pre-loss cost).
+    pub final_iteration_s: f64,
+}
+
+/// Remove dead nodes, keeping everything else about the cluster.
+fn surviving(cluster: &ClusterSpec, alive: &[bool]) -> ClusterSpec {
+    let mut c = cluster.clone();
+    c.nodes = cluster
+        .nodes
+        .iter()
+        .zip(alive)
+        .filter(|(_, a)| **a)
+        .map(|(n, _)| n.clone())
+        .collect();
+    let dead = alive.iter().filter(|a| !**a).count();
+    c.name = format!("{}-minus{}", cluster.name, dead);
+    c
+}
+
+/// Walk a sorted fault schedule over `[0, horizon_s]` and integrate
+/// useful tokens. `replan` maps a surviving cluster to its best
+/// per-iteration time (`None` = no feasible plan, training halts);
+/// callers pass the real planner ([`sweep`] does, memoized per
+/// surviving cluster) or a synthetic model (the property tests do).
+///
+/// Monotonicity: adding events to the schedule never increases the
+/// returned goodput — every event only ever adds recovery time,
+/// raises the straggler multiplier (max-persistent), or raises the
+/// floored iteration cost. Combined with the nested-thinning schedule
+/// construction, goodput is monotone non-increasing in the MTBF scale.
+pub fn walk(
+    input: &GoodputInput<'_>,
+    events: &[FaultEvent],
+    replan: &mut dyn FnMut(&ClusterSpec) -> Option<Time>,
+) -> GoodputReport {
+    let ckpt = &input.checkpoint;
+    let tokens_per_iter = (input.model.global_batch * input.model.seq_len) as f64;
+    // weights + fp32 Adam moments and master copy, sharded dp ways
+    let ckpt_bytes = input.model.param_count() as f64 * (input.model.dtype_bytes + 12) as f64;
+    let write_s = ckpt_bytes / (ckpt.write_gbps * 1e9 * input.dp.max(1) as f64);
+    let ckpt_overhead = write_s / ckpt.interval_iters as f64;
+    let tau = |iter_s: f64, mult: f64| (iter_s * mult + ckpt_overhead).max(f64::MIN_POSITIVE);
+
+    let mut iter_s = input.iteration.as_secs();
+    let mut mult = 1.0f64;
+    let mut alive = vec![true; input.cluster.nodes.len()];
+    let (mut t, mut useful, mut lost) = (0.0f64, 0.0f64, 0.0f64);
+    let (mut fail_stops, mut stragglers, mut replans) = (0usize, 0usize, 0usize);
+    let mut halted = false;
+
+    for ev in events {
+        if ev.at_s > input.horizon_s {
+            break;
+        }
+        // if recovery from a previous fault is still in progress, the
+        // new fault takes effect once the job is back up
+        let fire = ev.at_s.max(t);
+        if fire >= input.horizon_s {
+            break;
+        }
+        useful += (fire - t) / tau(iter_s, mult) * tokens_per_iter;
+        t = fire;
+        let node = ev.kind.node() as usize;
+        if !alive[node] {
+            continue; // faults on an already-dead node are moot
+        }
+        match ev.kind {
+            FaultKind::Straggler { mult: m, .. } => {
+                stragglers += 1;
+                mult = mult.max(m);
+            }
+            kind => {
+                fail_stops += 1;
+                // expected lost work: half a checkpoint interval at the
+                // current effective rate, plus restore + warmup
+                let penalty = 0.5 * ckpt.interval_iters as f64 * tau(iter_s, mult)
+                    + write_s
+                    + ckpt.restart_warmup_s;
+                lost += penalty;
+                t += penalty;
+                if matches!(kind, FaultKind::NodeFail { .. }) {
+                    alive[node] = false;
+                    let rest = surviving(input.cluster, &alive);
+                    if rest.nodes.is_empty() {
+                        halted = true;
+                        break;
+                    }
+                    replans += 1;
+                    match replan(&rest) {
+                        // floor at the pre-loss cost (monotonicity)
+                        Some(new_iter) => iter_s = iter_s.max(new_iter.as_secs()),
+                        None => {
+                            halted = true;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if halted {
+        lost += (input.horizon_s - t).max(0.0);
+    } else if t < input.horizon_s {
+        useful += (input.horizon_s - t) / tau(iter_s, mult) * tokens_per_iter;
+    }
+    GoodputReport {
+        goodput_tokens_per_s: useful / input.horizon_s.max(f64::MIN_POSITIVE),
+        useful_tokens: useful,
+        horizon_s: input.horizon_s,
+        lost_s: lost,
+        availability: (1.0 - lost / input.horizon_s.max(f64::MIN_POSITIVE)).clamp(0.0, 1.0),
+        fail_stops,
+        stragglers,
+        replans,
+        halted,
+        final_iteration_s: iter_s,
+    }
+}
+
+/// Knobs for [`sweep`] / [`annotate`].
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// Planner options for the underlying candidate search (and for
+    /// the re-plan runs on surviving clusters).
+    pub plan: PlanOptions,
+    /// How many top-ranked plans to score for goodput (0 = all).
+    pub top: usize,
+    /// Wall-clock horizon in seconds (default: one day).
+    pub horizon_s: f64,
+    /// MTBF failure-rate scale (1.0 = the per-arch table as-is;
+    /// clamped at [`crate::system::failure::SCALE_CAP`]).
+    pub mtbf_scale: f64,
+    /// Seed for the MTBF schedule.
+    pub seed: u64,
+    /// Checkpoint/restore cost model.
+    pub checkpoint: CheckpointSpec,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            plan: PlanOptions::default(),
+            top: 5,
+            horizon_s: 86_400.0,
+            mtbf_scale: 1.0,
+            seed: 42,
+            checkpoint: CheckpointSpec::default(),
+        }
+    }
+}
+
+/// One plan's goodput score in a sweep.
+#[derive(Debug, Clone)]
+pub struct SweepEntry {
+    /// The candidate key (`tp…-pp…-dp…-…`).
+    pub plan: String,
+    /// Fault-free simulated iteration time.
+    pub iteration: Time,
+    /// The plan's DP degree (checkpoint sharding width).
+    pub dp: u32,
+    /// The goodput walk's result for this plan.
+    pub goodput: GoodputReport,
+}
+
+/// The `hetsim goodput` result: top plans re-ranked by effective
+/// goodput under an MTBF schedule.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    /// Entries sorted by goodput, best first (key tie-break).
+    pub entries: Vec<SweepEntry>,
+    /// Number of fault events in the materialized schedule.
+    pub events: usize,
+    /// The integration horizon in seconds.
+    pub horizon_s: f64,
+    /// The MTBF scale the schedule was drawn at.
+    pub mtbf_scale: f64,
+}
+
+impl SweepReport {
+    /// The goodput-optimal entry.
+    pub fn best(&self) -> &SweepEntry {
+        &self.entries[0]
+    }
+
+    /// Render the ranked goodput table plus a summary line.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "Effective goodput under MTBF faults",
+            &["rank", "plan", "goodput tok/s", "iteration", "avail", "fail-stops", "replans"],
+        );
+        for (i, e) in self.entries.iter().enumerate() {
+            t.row(vec![
+                (i + 1).to_string(),
+                e.plan.clone(),
+                format!("{:.1}", e.goodput.goodput_tokens_per_s),
+                e.iteration.human(),
+                format!("{:.4}", e.goodput.availability),
+                e.goodput.fail_stops.to_string(),
+                e.goodput.replans.to_string(),
+            ]);
+        }
+        let mut s = t.markdown();
+        s.push_str(&format!(
+            "\n{} fault events over {:.0}s at {}x MTBF rate | best by goodput: {}\n",
+            self.events,
+            self.horizon_s,
+            self.mtbf_scale,
+            self.entries.first().map(|e| e.plan.as_str()).unwrap_or("-"),
+        ));
+        s
+    }
+}
+
+/// The planner re-run used when a node loss shrinks the cluster:
+/// memoized per surviving-cluster shape so a sweep over many plans
+/// pays for each survivor search once.
+fn replan_cached<'a>(
+    model: &'a ModelSpec,
+    opts: &'a PlanOptions,
+    cache: &'a mut HashMap<String, Option<Time>>,
+) -> impl FnMut(&ClusterSpec) -> Option<Time> + 'a {
+    move |rest: &ClusterSpec| {
+        let key: String = rest
+            .nodes
+            .iter()
+            .map(|n| format!("{}x{};", n.gpu.name, n.gpus_per_node))
+            .collect();
+        *cache
+            .entry(key)
+            .or_insert_with(|| search(model, rest, opts).ok().map(|r| r.best().iteration_time))
+    }
+}
+
+/// Rank plans by effective goodput: run the plan search, materialize
+/// an MTBF schedule, walk it for each of the top plans, and sort by
+/// goodput. Deterministic across worker-thread counts (the search is;
+/// the walk is sequential).
+pub fn sweep(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    opts: &SweepOptions,
+) -> anyhow::Result<SweepReport> {
+    let rep = search(model, cluster, &opts.plan)?;
+    let events = mtbf_schedule(cluster, opts.horizon_s, opts.mtbf_scale, opts.seed);
+    let top = if opts.top == 0 { rep.ranked.len() } else { opts.top.min(rep.ranked.len()) };
+    let mut cache = HashMap::new();
+    let mut entries = Vec::with_capacity(top);
+    for ev in rep.ranked.iter().take(top) {
+        let input = GoodputInput {
+            model,
+            cluster,
+            iteration: ev.iteration_time,
+            dp: ev.candidate.par.dp,
+            checkpoint: opts.checkpoint,
+            horizon_s: opts.horizon_s,
+        };
+        let mut replan = replan_cached(model, &opts.plan, &mut cache);
+        let goodput = walk(&input, &events, &mut replan);
+        entries.push(SweepEntry {
+            plan: ev.candidate.key(),
+            iteration: ev.iteration_time,
+            dp: ev.candidate.par.dp,
+            goodput,
+        });
+    }
+    entries.sort_by(|a, b| {
+        b.goodput
+            .goodput_tokens_per_s
+            .total_cmp(&a.goodput.goodput_tokens_per_s)
+            .then_with(|| a.plan.cmp(&b.plan))
+    });
+    Ok(SweepReport {
+        entries,
+        events: events.len(),
+        horizon_s: opts.horizon_s,
+        mtbf_scale: opts.mtbf_scale,
+    })
+}
+
+/// Annotate an existing plan-search report with per-plan goodput and
+/// re-rank it by goodput (the `hetsim plan --goodput` objective flag).
+/// The fault-free ranking fields are untouched; only the `goodput`
+/// annotation and the order change.
+pub fn annotate(
+    rep: &mut PlanSearchReport,
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    opts: &SweepOptions,
+) {
+    let events = mtbf_schedule(cluster, opts.horizon_s, opts.mtbf_scale, opts.seed);
+    let mut cache = HashMap::new();
+    for ev in rep.ranked.iter_mut() {
+        let input = GoodputInput {
+            model,
+            cluster,
+            iteration: ev.iteration_time,
+            dp: ev.candidate.par.dp,
+            checkpoint: opts.checkpoint,
+            horizon_s: opts.horizon_s,
+        };
+        let mut replan = replan_cached(model, &opts.plan, &mut cache);
+        ev.goodput = Some(walk(&input, &events, &mut replan).goodput_tokens_per_s);
+    }
+    rep.ranked.sort_by(|a, b| {
+        b.goodput
+            .unwrap_or(0.0)
+            .total_cmp(&a.goodput.unwrap_or(0.0))
+            .then_with(|| a.candidate.key().cmp(&b.candidate.key()))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::system::failure::FaultEvent;
+
+    fn input<'a>(m: &'a ModelSpec, c: &'a ClusterSpec) -> GoodputInput<'a> {
+        GoodputInput {
+            model: m,
+            cluster: c,
+            iteration: Time::from_secs(2.0),
+            dp: 4,
+            checkpoint: CheckpointSpec::default(),
+            horizon_s: 10_000.0,
+        }
+    }
+
+    #[test]
+    fn fault_free_walk_matches_closed_form() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster("hopper", 1).unwrap();
+        let inp = input(&m, &c);
+        let g = walk(&inp, &[], &mut |_| None);
+        assert_eq!(g.fail_stops + g.stragglers + g.replans, 0);
+        assert!(!g.halted);
+        assert_eq!(g.availability, 1.0);
+        let tokens_per_iter = (m.global_batch * m.seq_len) as f64;
+        let write_s =
+            m.param_count() as f64 * (m.dtype_bytes + 12) as f64 / (10.0 * 1e9 * 4.0);
+        let tau = 2.0 + write_s / 32.0;
+        let expect = 10_000.0 / tau * tokens_per_iter / 10_000.0;
+        assert!((g.goodput_tokens_per_s - expect).abs() < 1e-6 * expect);
+    }
+
+    #[test]
+    fn every_fault_kind_reduces_goodput() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let inp = input(&m, &c);
+        let base = walk(&inp, &[], &mut |_| None).goodput_tokens_per_s;
+        for kind in [
+            FaultKind::NodeFail { node: 0 },
+            FaultKind::NicFail { node: 0 },
+            FaultKind::LinkFail { node: 1 },
+            FaultKind::Straggler { node: 1, mult: 1.5 },
+        ] {
+            let g = walk(
+                &inp,
+                &[FaultEvent { at_s: 100.0, kind }],
+                &mut |_| Some(Time::from_secs(3.0)),
+            );
+            assert!(
+                g.goodput_tokens_per_s < base,
+                "{kind:?}: {} !< {base}",
+                g.goodput_tokens_per_s
+            );
+            assert!(!g.halted);
+        }
+    }
+
+    #[test]
+    fn node_loss_replans_and_infeasible_replan_halts() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let inp = input(&m, &c);
+        let ev = [FaultEvent { at_s: 100.0, kind: FaultKind::NodeFail { node: 0 } }];
+        let mut seen = Vec::new();
+        let g = walk(&inp, &ev, &mut |rest| {
+            seen.push(rest.total_gpus());
+            Some(Time::from_secs(5.0))
+        });
+        assert_eq!(seen, vec![8]); // one 8-GPU node survives
+        assert_eq!(g.replans, 1);
+        assert_eq!(g.final_iteration_s, 5.0); // above the floor, spliced
+        let halted = walk(&inp, &ev, &mut |_| None);
+        assert!(halted.halted);
+        assert!(halted.goodput_tokens_per_s < g.goodput_tokens_per_s);
+        assert!(halted.availability < 1.0);
+    }
+
+    #[test]
+    fn replan_splice_floors_at_the_preloss_cost() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let inp = input(&m, &c);
+        let ev = [FaultEvent { at_s: 100.0, kind: FaultKind::NodeFail { node: 0 } }];
+        // a replan claiming to be *faster* on fewer nodes is floored
+        let g = walk(&inp, &ev, &mut |_| Some(Time::from_secs(0.5)));
+        assert_eq!(g.final_iteration_s, 2.0);
+    }
+
+    #[test]
+    fn faults_on_dead_nodes_are_moot() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let inp = input(&m, &c);
+        let evs = [
+            FaultEvent { at_s: 100.0, kind: FaultKind::NodeFail { node: 0 } },
+            FaultEvent { at_s: 200.0, kind: FaultKind::NicFail { node: 0 } },
+            FaultEvent { at_s: 300.0, kind: FaultKind::Straggler { node: 0, mult: 9.0 } },
+        ];
+        let g = walk(&inp, &evs, &mut |_| Some(Time::from_secs(3.0)));
+        assert_eq!(g.fail_stops, 1);
+        assert_eq!(g.stragglers, 0);
+    }
+
+    #[test]
+    fn sweep_ranks_by_goodput_on_a_hetero_cluster() {
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.num_layers = 4;
+        m.global_batch = 16;
+        m.micro_batch = 8;
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let opts = SweepOptions {
+            plan: PlanOptions { microbatch_limit: Some(1), threads: 2, ..Default::default() },
+            top: 3,
+            horizon_s: 200_000.0,
+            mtbf_scale: 8.0,
+            ..Default::default()
+        };
+        let rep = sweep(&m, &c, &opts).unwrap();
+        assert!(rep.entries.len() >= 2, "need >=2 plans, got {}", rep.entries.len());
+        for w in rep.entries.windows(2) {
+            assert!(
+                w[0].goodput.goodput_tokens_per_s >= w[1].goodput.goodput_tokens_per_s
+            );
+        }
+        let text = rep.render();
+        assert!(text.contains("goodput"), "{text}");
+        // deterministic across thread counts
+        let mut opts4 = opts.clone();
+        opts4.plan.threads = 4;
+        let rep4 = sweep(&m, &c, &opts4).unwrap();
+        let fp = |r: &SweepReport| {
+            r.entries
+                .iter()
+                .map(|e| format!("{}={}", e.plan, e.goodput.goodput_tokens_per_s))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        assert_eq!(fp(&rep), fp(&rep4));
+    }
+}

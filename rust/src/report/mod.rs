@@ -11,12 +11,15 @@
 //!
 //! [`bench`] is the odd one out: it measures the *simulator itself*
 //! (`hetsim bench`, machine-readable `BENCH_plan.json`) and backs the
-//! CI perf-regression gate.
+//! CI perf-regression gate. [`goodput`] turns fault schedules
+//! ([`crate::system::failure`]) into effective-goodput rankings
+//! (`hetsim goodput`, DESIGN.md §26).
 
 pub mod bench;
 pub mod fig1;
 pub mod fig5;
 pub mod fig6;
+pub mod goodput;
 pub mod table1;
 
 use std::path::PathBuf;

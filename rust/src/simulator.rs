@@ -38,6 +38,7 @@ use crate::config::model::ModelSpec;
 use crate::network::topology::Topology;
 use crate::system::collective::RingPolicy;
 use crate::system::compiled::CompiledWorkload;
+use crate::system::failure::{FaultReport, FaultSpec};
 use crate::system::fold::{self, FoldMode, FoldPlan};
 use crate::system::scheduler::{Scheduler, SchedulerReport};
 use crate::util::stats::{Samples, Summary};
@@ -68,6 +69,7 @@ pub struct SimulationBuilder {
     schedule: Option<ScheduleKind>,
     record_trace: bool,
     fold: FoldMode,
+    faults: Option<FaultSpec>,
 }
 
 /// The builder's inputs after framework resolution — what every build
@@ -81,6 +83,7 @@ struct ResolvedBuild {
     ring_policy: RingPolicy,
     record_trace: bool,
     fold: FoldMode,
+    faults: Option<FaultSpec>,
 }
 
 impl SimulationBuilder {
@@ -100,6 +103,7 @@ impl SimulationBuilder {
             schedule: None,
             record_trace: false,
             fold: FoldMode::Off,
+            faults: None,
         }
     }
 
@@ -171,6 +175,19 @@ impl SimulationBuilder {
         self
     }
 
+    /// Inject a deterministic fault schedule ([`crate::system::failure`],
+    /// DESIGN.md §26): the earliest scheduled fail-stop aborts the
+    /// iteration at its fault time and straggler events stretch the
+    /// slowed node's compute. An empty spec normalizes to no spec, so
+    /// the fault layer is strictly zero-cost when unused —
+    /// byte-identical reports, unchanged evaluation cache keys. A
+    /// non-empty spec also refuses symmetry folding
+    /// ([`crate::system::fold::classify_with_faults`]).
+    pub fn faults(mut self, spec: Option<FaultSpec>) -> Self {
+        self.faults = spec.filter(|s| !s.is_empty());
+        self
+    }
+
     /// Resolve the parallelism degrees and device-group mapping.
     fn resolve(self) -> anyhow::Result<ResolvedBuild> {
         let par = match self.parallelism {
@@ -197,6 +214,7 @@ impl SimulationBuilder {
             ring_policy: self.ring_policy,
             record_trace: self.record_trace,
             fold: self.fold,
+            faults: self.faults,
         })
     }
 
@@ -204,7 +222,11 @@ impl SimulationBuilder {
     /// cost table, build the topology, compile.
     pub fn build(self) -> anyhow::Result<Simulation> {
         let r = self.resolve()?;
-        let plan = fold::classify(&r.cluster, &r.framework, r.fold);
+        if let Some(spec) = &r.faults {
+            spec.validate(&r.cluster)?;
+        }
+        let plan =
+            fold::classify_with_faults(&r.cluster, &r.framework, r.fold, r.faults.as_ref());
         let workload = generate_workload(&r, plan.as_ref())?;
         let mut cost = match r.cost_backend {
             CostBackend::Native => CostTable::native(),
@@ -225,6 +247,7 @@ impl SimulationBuilder {
             topology,
             ring_policy: r.ring_policy,
             record_trace: r.record_trace,
+            faults: r.faults,
         })
     }
 
@@ -242,7 +265,10 @@ impl SimulationBuilder {
         );
         let r = self.resolve()?;
         ctx.check_inputs(&r.model, &r.cluster)?;
-        let key = eval_key(&r.framework, &r.options, r.ring_policy, r.fold);
+        if let Some(spec) = &r.faults {
+            spec.validate(&r.cluster)?;
+        }
+        let key = eval_key(&r.framework, &r.options, r.ring_policy, r.fold, r.faults.as_ref());
         let prepared = ctx.prepare(&r, &key)?;
         Ok(Simulation {
             model: r.model,
@@ -254,6 +280,7 @@ impl SimulationBuilder {
             topology: ctx.topology.clone(),
             ring_policy: r.ring_policy,
             record_trace: r.record_trace,
+            faults: r.faults,
         })
     }
 
@@ -275,13 +302,17 @@ impl SimulationBuilder {
         );
         let r = self.resolve()?;
         ctx.check_inputs(&r.model, &r.cluster)?;
-        let key = eval_key(&r.framework, &r.options, r.ring_policy, r.fold);
+        if let Some(spec) = &r.faults {
+            spec.validate(&r.cluster)?;
+        }
+        let key = eval_key(&r.framework, &r.options, r.ring_policy, r.fold, r.faults.as_ref());
         if let Some(s) = ctx.scores.lock().unwrap().get(&key).copied() {
             ctx.score_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(s);
         }
         let prepared = ctx.prepare(&r, &key)?;
-        let sched = Scheduler::prepared(&prepared.compiled, &r.cluster, ctx.topology.clone());
+        let mut sched = Scheduler::prepared(&prepared.compiled, &r.cluster, ctx.topology.clone());
+        arm_faults(&mut sched, r.faults.as_ref(), &r.cluster);
         let rep = sched.run()?;
         let score = EvalScore {
             iteration_time: rep.iteration_time,
@@ -296,12 +327,20 @@ impl SimulationBuilder {
 }
 
 /// Cache key of one candidate evaluation: the resolved mapping's
-/// fingerprint plus every knob that changes the generated workload or
-/// its compilation. `Off` keys are unchanged from the pre-folding
-/// layout so folded and unfolded cores never alias.
-fn eval_key(fw: &FrameworkSpec, opts: &WorkloadOptions, ring: RingPolicy, fold: FoldMode) -> String {
+/// fingerprint plus every knob that changes the generated workload, its
+/// compilation, or its simulated timeline. `Off` keys are unchanged
+/// from the pre-folding layout so folded and unfolded cores never
+/// alias, and the fault fingerprint is empty for empty specs so
+/// fault-free keys are unchanged from the pre-failure layout.
+fn eval_key(
+    fw: &FrameworkSpec,
+    opts: &WorkloadOptions,
+    ring: RingPolicy,
+    fold: FoldMode,
+    faults: Option<&FaultSpec>,
+) -> String {
     format!(
-        "{}|mb{}|o{}{}{}|{ring:?}{}",
+        "{}|mb{}|o{}{}{}|{ring:?}{}{}",
         fw.fingerprint(),
         opts.microbatch_limit.map(|l| l.to_string()).unwrap_or_else(|| "all".into()),
         opts.include_other as u8,
@@ -311,7 +350,21 @@ fn eval_key(fw: &FrameworkSpec, opts: &WorkloadOptions, ring: RingPolicy, fold: 
             FoldMode::Off => "",
             FoldMode::Auto => "|fold",
         },
+        faults.map(|f| f.fingerprint()).unwrap_or_default(),
     )
+}
+
+/// Resolve the per-iteration fault view (window anchored at simulated
+/// time zero) and arm the scheduler when anything is active. A spec
+/// whose events all land outside the window leaves the scheduler
+/// untouched — the run stays on the fault-free fast path.
+fn arm_faults(sched: &mut Scheduler<'_>, spec: Option<&FaultSpec>, cluster: &ClusterSpec) {
+    if let Some(spec) = spec {
+        let f = spec.resolve_iteration(cluster, 0.0);
+        if !f.is_noop() {
+            sched.faults = Some(f);
+        }
+    }
 }
 
 /// Emit the per-rank op streams for one resolved candidate: folded when
@@ -445,7 +498,8 @@ impl EvalContext {
             return Ok(hit);
         }
         self.build_misses.fetch_add(1, Ordering::Relaxed);
-        let plan = fold::classify(&r.cluster, &r.framework, r.fold);
+        let plan =
+            fold::classify_with_faults(&r.cluster, &r.framework, r.fold, r.faults.as_ref());
         let workload = generate_workload(r, plan.as_ref())?;
         // warm-start from every entry any candidate evaluated so far
         let mut cost = self.cost.lock().unwrap().share();
@@ -543,6 +597,10 @@ pub struct Simulation {
     ring_policy: RingPolicy,
     /// Whether runs record the per-rank busy-interval trace.
     pub record_trace: bool,
+    /// Injected fault schedule; private because a non-empty spec also
+    /// vetoed folding at build time, so mutating it after the fact
+    /// could silently disagree with the compiled plan.
+    faults: Option<FaultSpec>,
 }
 
 impl Simulation {
@@ -551,6 +609,7 @@ impl Simulation {
     pub fn run_iteration(&self) -> anyhow::Result<SimulationReport> {
         let mut sched = Scheduler::prepared(&self.compiled, &self.cluster, self.topology.clone());
         sched.record_trace = self.record_trace;
+        arm_faults(&mut sched, self.faults.as_ref(), &self.cluster);
         let rep = sched.run()?;
         Ok(SimulationReport::from_scheduler(self, rep))
     }
@@ -581,6 +640,12 @@ impl Simulation {
     pub fn folded(&self) -> bool {
         self.compiled.fold.is_some()
     }
+
+    /// The injected fault schedule this simulation was built with
+    /// (`None` when the fault layer is off).
+    pub fn fault_spec(&self) -> Option<&FaultSpec> {
+        self.faults.as_ref()
+    }
 }
 
 /// The run summary consumed by reports and benches.
@@ -606,6 +671,10 @@ pub struct SimulationReport {
     pub compute_busy: Time,
     /// Summed collective busy time.
     pub comm_busy: Time,
+    /// The injected fail-stop that aborted this iteration, if any
+    /// (`None` for clean completions — the iteration ran to the end or
+    /// finished before any scheduled fault).
+    pub fault: Option<FaultReport>,
 }
 
 impl SimulationReport {
@@ -624,6 +693,7 @@ impl SimulationReport {
             fct_all: rep.fct_all,
             compute_busy: rep.compute_busy,
             comm_busy: rep.comm_busy,
+            fault: rep.fault,
         }
     }
 }
@@ -755,6 +825,29 @@ mod tests {
         assert_eq!(off.iteration_time, auto_.iteration_time);
         assert_eq!(off.events_processed, auto_.events_processed);
         assert_eq!(off.flows_completed, auto_.flows_completed);
+    }
+
+    #[test]
+    fn injected_fail_stop_surfaces_in_the_report() {
+        use crate::system::failure::{FaultEvent, FaultKind, FaultSpec};
+        let mk = || {
+            tiny(presets::cluster("hopper", 1).unwrap())
+                .parallelism(ParallelismSpec { tp: 4, pp: 1, dp: 2 })
+        };
+        let clean = mk().build().unwrap().run_iteration().unwrap();
+        assert!(clean.fault.is_none(), "no spec, no fault");
+        let mut spec = FaultSpec::default();
+        spec.events.push(FaultEvent {
+            at_s: clean.iteration_time.as_secs() * 0.5,
+            kind: FaultKind::NodeFail { node: 0 },
+        });
+        let rep = mk().faults(Some(spec)).build().unwrap().run_iteration().unwrap();
+        let fault = rep.fault.expect("mid-iteration fail-stop must abort");
+        assert_eq!(fault.node, 0);
+        assert_eq!(rep.iteration_time, fault.at);
+        assert_eq!(fault.lost_work, fault.at, "the whole partial iteration is lost");
+        assert!(rep.iteration_time < clean.iteration_time);
+        assert!(rep.events_processed < clean.events_processed);
     }
 
     #[test]

@@ -1,0 +1,621 @@
+//! Deterministic fault injection (DESIGN.md §26): scheduled node / NIC /
+//! link failures, straggler slow-downs, and MTBF-driven schedules.
+//!
+//! A [`FaultSpec`] is a *plan input*, not a random process at run time:
+//! every fault is an explicit `(time, kind)` pair, either written out in
+//! scenario JSON (`"faults"` key) or materialized up front from a
+//! per-architecture MTBF table by [`mtbf_schedule`] using the in-tree
+//! seeded PRNG. Once the spec exists, the simulation is exactly as
+//! deterministic as the fault-free path: the scheduler only ever reads
+//! the resolved [`IterationFaults`], which is a pure function of the
+//! spec and the cluster.
+//!
+//! Fail-stop kinds ([`FaultKind::NodeFail`], [`FaultKind::NicFail`],
+//! [`FaultKind::LinkFail`]) abort the in-flight iteration at the fault
+//! time and charge the whole partial iteration as lost work (gradient
+//! state is gone — the job restarts from the last checkpoint).
+//! [`FaultKind::Straggler`] keeps the node running but multiplies its
+//! compute durations. The checkpoint/restore cost model and the
+//! goodput walk that consumes these events live in
+//! [`crate::report::goodput`].
+
+use crate::config::cluster::ClusterSpec;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::units::Time;
+
+/// What fails (or slows down). All kinds name a *node*: the paper's
+/// failure domains are node-granular (a GPU, its NIC, and its NVLink
+/// island share fate for scheduling purposes — any of them going away
+/// stalls every rank on the node).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The node is lost permanently (kernel panic, hardware retirement).
+    /// Fail-stop for the in-flight iteration; on top of the restart
+    /// cost, the surviving cluster is re-planned
+    /// ([`crate::report::goodput`] splices the new plan's per-iteration
+    /// cost).
+    NodeFail {
+        /// Cluster node index of the failed node.
+        node: u32,
+    },
+    /// The node's NIC dies. Fail-stop (collectives through the node
+    /// wedge), but the node rejoins after repair — same plan resumes.
+    NicFail {
+        /// Cluster node index owning the failed NIC.
+        node: u32,
+    },
+    /// An inter-node link attached to the node flaps hard enough to
+    /// kill in-flight collectives. Fail-stop; same plan resumes.
+    LinkFail {
+        /// Cluster node index at the failing link's endpoint.
+        node: u32,
+    },
+    /// The node keeps running, `mult`× slower (thermal throttling, a
+    /// sick HBM stack). Applies to every compute op on the node's ranks
+    /// from the fault time onward.
+    Straggler {
+        /// Cluster node index of the slow node.
+        node: u32,
+        /// Compute-duration multiplier, ≥ 1.0.
+        mult: f64,
+    },
+}
+
+impl FaultKind {
+    /// The node index this fault applies to.
+    pub fn node(&self) -> u32 {
+        match *self {
+            FaultKind::NodeFail { node }
+            | FaultKind::NicFail { node }
+            | FaultKind::LinkFail { node }
+            | FaultKind::Straggler { node, .. } => node,
+        }
+    }
+
+    /// Short stable name (JSON `kind` value / report label).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::NodeFail { .. } => "node_fail",
+            FaultKind::NicFail { .. } => "nic_fail",
+            FaultKind::LinkFail { .. } => "link_fail",
+            FaultKind::Straggler { .. } => "straggler",
+        }
+    }
+
+    /// True for the kinds that abort the in-flight iteration.
+    pub fn is_fail_stop(&self) -> bool {
+        !matches!(self, FaultKind::Straggler { .. })
+    }
+
+    fn canon(&self) -> String {
+        match *self {
+            FaultKind::Straggler { node, mult } => format!("straggler:{node}:{mult}"),
+            k => format!("{}:{}", k.name(), k.node()),
+        }
+    }
+}
+
+/// One scheduled fault: `kind` strikes `at_s` seconds into training.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Wall-clock offset from training start, in seconds.
+    pub at_s: f64,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// Checkpoint/restore cost model. Checkpoint bytes are
+/// `param_count × (dtype_bytes + 12)` — weights plus fp32 Adam moments
+/// and master copy — sharded across the plan's DP writers, so write
+/// time is `bytes / (write_gbps · 1e9 · dp)`. Restore reads the same
+/// bytes at the same bandwidth; `restart_warmup_s` adds the fixed
+/// rendezvous / JIT / pipeline-refill cost after every restart.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CheckpointSpec {
+    /// Iterations between checkpoints (amortized write cost, and the
+    /// expected half-interval of work lost per fail-stop).
+    pub interval_iters: u64,
+    /// Per-DP-writer storage bandwidth in GB/s (decimal).
+    pub write_gbps: f64,
+    /// Fixed restart overhead in seconds (rendezvous, load, warmup).
+    pub restart_warmup_s: f64,
+}
+
+impl Default for CheckpointSpec {
+    fn default() -> Self {
+        CheckpointSpec { interval_iters: 32, write_gbps: 10.0, restart_warmup_s: 60.0 }
+    }
+}
+
+/// A complete, deterministic fault plan: explicit events plus the
+/// checkpoint cost model and the seed any MTBF materialization used.
+/// An empty spec (no events) is defined to be byte-identical to not
+/// configuring faults at all — the builder normalizes it away.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Scheduled faults, sorted by `at_s` ([`FaultSpec::normalize`]).
+    pub events: Vec<FaultEvent>,
+    /// Checkpoint/restore cost model for goodput accounting.
+    pub checkpoint: CheckpointSpec,
+    /// Seed recorded for provenance (MTBF schedules derive from it).
+    pub seed: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec { events: Vec::new(), checkpoint: CheckpointSpec::default(), seed: 42 }
+    }
+}
+
+fn strict_f64(v: &Json, key: &str, default: f64) -> anyhow::Result<f64> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x.as_f64().ok_or_else(|| anyhow::anyhow!("faults: `{key}` must be a number")),
+    }
+}
+
+fn strict_u64(v: &Json, key: &str, default: u64) -> anyhow::Result<u64> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => {
+            x.as_u64().ok_or_else(|| anyhow::anyhow!("faults: `{key}` must be an unsigned int"))
+        }
+    }
+}
+
+impl FaultSpec {
+    /// True when the spec injects nothing (and is therefore
+    /// indistinguishable from no spec at all).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Sort events by time (stable — equal-time events keep their
+    /// declaration order).
+    pub fn normalize(&mut self) {
+        self.events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+    }
+
+    /// Check the spec against a cluster: node indices in range, finite
+    /// non-negative times, straggler multipliers ≥ 1.
+    pub fn validate(&self, cluster: &ClusterSpec) -> anyhow::Result<()> {
+        let nodes = cluster.nodes.len() as u32;
+        for ev in &self.events {
+            anyhow::ensure!(
+                ev.at_s.is_finite() && ev.at_s >= 0.0,
+                "fault time {} is not a finite non-negative number of seconds",
+                ev.at_s
+            );
+            anyhow::ensure!(
+                ev.kind.node() < nodes,
+                "fault names node {} but cluster {} has {} nodes",
+                ev.kind.node(),
+                cluster.name,
+                nodes
+            );
+            if let FaultKind::Straggler { mult, .. } = ev.kind {
+                anyhow::ensure!(
+                    mult.is_finite() && mult >= 1.0,
+                    "straggler multiplier {mult} must be a finite number >= 1"
+                );
+            }
+        }
+        anyhow::ensure!(
+            self.checkpoint.interval_iters > 0,
+            "checkpoint interval_iters must be >= 1"
+        );
+        anyhow::ensure!(
+            self.checkpoint.write_gbps.is_finite() && self.checkpoint.write_gbps > 0.0,
+            "checkpoint write_gbps must be a positive number"
+        );
+        anyhow::ensure!(
+            self.checkpoint.restart_warmup_s.is_finite() && self.checkpoint.restart_warmup_s >= 0.0,
+            "checkpoint restart_warmup_s must be a non-negative number"
+        );
+        Ok(())
+    }
+
+    /// Stable cache-key marker for this spec: the empty string when the
+    /// spec is empty (the fault layer is invisible when off), otherwise
+    /// a `|faults:<hash>` suffix appended to the simulator's eval keys
+    /// so faulted and fault-free scores never alias.
+    pub fn fingerprint(&self) -> String {
+        if self.is_empty() {
+            return String::new();
+        }
+        let mut s = format!(
+            "s{};i{};w{};r{}",
+            self.seed,
+            self.checkpoint.interval_iters,
+            self.checkpoint.write_gbps,
+            self.checkpoint.restart_warmup_s
+        );
+        for ev in &self.events {
+            s.push(';');
+            s.push_str(&ev.kind.canon());
+            s.push('@');
+            s.push_str(&ev.at_s.to_string());
+        }
+        // FNV-1a over the canonical serialization
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in s.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        format!("|faults:{h:016x}")
+    }
+
+    /// Parse a `"faults"` JSON object (scenario key or `--faults` file).
+    ///
+    /// Recognized keys — all optional, but present-and-malformed is an
+    /// error, never a silent default:
+    ///
+    /// * `"events"`: array of `{"at_s": …, "kind": "node_fail" |
+    ///   "nic_fail" | "link_fail" | "straggler", "node": …,
+    ///   "mult": …}` (`mult` required for stragglers only),
+    /// * `"checkpoint"`: `{"interval_iters", "write_gbps",
+    ///   "restart_warmup_s"}` overriding [`CheckpointSpec::default`],
+    /// * `"mtbf"`: `{"horizon_s", "scale"}` — materialize an MTBF
+    ///   schedule over the cluster via [`mtbf_schedule`] and append it
+    ///   to the explicit events,
+    /// * `"seed"`: PRNG seed for the MTBF draw (defaults to
+    ///   `default_seed`, which scenario files wire to their own
+    ///   `"seed"` key).
+    pub fn from_json(
+        v: &Json,
+        cluster: &ClusterSpec,
+        default_seed: u64,
+    ) -> anyhow::Result<FaultSpec> {
+        anyhow::ensure!(
+            v.get("events").is_some() || v.get("mtbf").is_some() || v.get("checkpoint").is_some(),
+            "faults: expected at least one of `events`, `mtbf`, `checkpoint`"
+        );
+        let seed = strict_u64(v, "seed", default_seed)?;
+        let mut checkpoint = CheckpointSpec::default();
+        if let Some(c) = v.get("checkpoint") {
+            checkpoint.interval_iters = strict_u64(c, "interval_iters", checkpoint.interval_iters)?;
+            checkpoint.write_gbps = strict_f64(c, "write_gbps", checkpoint.write_gbps)?;
+            checkpoint.restart_warmup_s =
+                strict_f64(c, "restart_warmup_s", checkpoint.restart_warmup_s)?;
+        }
+        let mut events = Vec::new();
+        if let Some(arr) = v.get("events") {
+            let arr = arr
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("faults: `events` must be an array"))?;
+            for (i, e) in arr.iter().enumerate() {
+                let at_s = e
+                    .req_f64("at_s")
+                    .map_err(|err| anyhow::anyhow!("faults: events[{i}]: {err}"))?;
+                let kind_name = e
+                    .req_str("kind")
+                    .map_err(|err| anyhow::anyhow!("faults: events[{i}]: {err}"))?;
+                let node = e
+                    .req_u64("node")
+                    .map_err(|err| anyhow::anyhow!("faults: events[{i}]: {err}"))?
+                    as u32;
+                let kind = match kind_name {
+                    "node_fail" => FaultKind::NodeFail { node },
+                    "nic_fail" => FaultKind::NicFail { node },
+                    "link_fail" => FaultKind::LinkFail { node },
+                    "straggler" => {
+                        let mult = e.req_f64("mult").map_err(|err| {
+                            anyhow::anyhow!("faults: events[{i}] (straggler): {err}")
+                        })?;
+                        FaultKind::Straggler { node, mult }
+                    }
+                    other => anyhow::bail!(
+                        "faults: events[{i}]: unknown kind {other:?} (want node_fail, \
+                         nic_fail, link_fail or straggler)"
+                    ),
+                };
+                events.push(FaultEvent { at_s, kind });
+            }
+        }
+        if let Some(m) = v.get("mtbf") {
+            let horizon_s = m
+                .req_f64("horizon_s")
+                .map_err(|err| anyhow::anyhow!("faults: mtbf: {err}"))?;
+            anyhow::ensure!(
+                horizon_s.is_finite() && horizon_s > 0.0,
+                "faults: mtbf horizon_s must be a positive number of seconds"
+            );
+            let scale = strict_f64(m, "scale", 1.0)?;
+            anyhow::ensure!(
+                scale.is_finite() && scale >= 0.0,
+                "faults: mtbf scale must be a finite non-negative number"
+            );
+            events.extend(mtbf_schedule(cluster, horizon_s, scale, seed));
+        }
+        let mut spec = FaultSpec { events, checkpoint, seed };
+        spec.normalize();
+        spec.validate(cluster)?;
+        Ok(spec)
+    }
+
+    /// Resolve the spec against one iteration window starting
+    /// `window_start_s` seconds into training (the scheduler simulates
+    /// a single iteration; 0.0 for stand-alone runs).
+    ///
+    /// * Stragglers that struck **at or before** the window start slow
+    ///   their node's ranks for the whole iteration.
+    /// * The earliest fail-stop **at or after** the window start aborts
+    ///   the iteration at its offset into the window — unless the
+    ///   iteration finishes first, in which case nothing happens.
+    pub fn resolve_iteration(
+        &self,
+        cluster: &ClusterSpec,
+        window_start_s: f64,
+    ) -> IterationFaults {
+        let mut slow = vec![1.0f64; cluster.total_gpus() as usize];
+        let starts = cluster.node_starts();
+        let mut abort: Option<(Time, u32)> = None;
+        for ev in &self.events {
+            match ev.kind {
+                FaultKind::Straggler { node, mult } => {
+                    if ev.at_s <= window_start_s {
+                        let lo = starts[node as usize] as usize;
+                        let hi = lo + cluster.node(node).gpus_per_node as usize;
+                        for m in &mut slow[lo..hi] {
+                            *m = m.max(mult);
+                        }
+                    }
+                }
+                kind => {
+                    if ev.at_s >= window_start_s {
+                        let off = Time::from_secs(ev.at_s - window_start_s);
+                        let earlier = match abort {
+                            None => true,
+                            Some((t, _)) => off < t,
+                        };
+                        if earlier {
+                            abort = Some((off, kind.node()));
+                        }
+                    }
+                }
+            }
+        }
+        IterationFaults { abort, slow }
+    }
+}
+
+/// A [`FaultSpec`] resolved against one iteration window: what the
+/// scheduler actually consumes.
+#[derive(Debug, Clone)]
+pub struct IterationFaults {
+    /// Earliest fail-stop in the window: abort the iteration at this
+    /// offset (simulated time), attributing the fault to this node.
+    pub abort: Option<(Time, u32)>,
+    /// Per-rank compute-duration multiplier (1.0 = healthy).
+    pub slow: Vec<f64>,
+}
+
+impl IterationFaults {
+    /// True when this resolution changes nothing (no abort, all
+    /// multipliers 1.0) — callers may skip the fault path entirely.
+    pub fn is_noop(&self) -> bool {
+        self.abort.is_none() && self.slow.iter().all(|m| *m == 1.0)
+    }
+}
+
+/// What a fault did to one simulated iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultReport {
+    /// Simulated time at which the iteration aborted.
+    pub at: Time,
+    /// The node the fault was attributed to.
+    pub node: u32,
+    /// Work charged as lost: the whole partial iteration (gradient
+    /// state does not survive a fail-stop; recovery resumes from the
+    /// last checkpoint, which the goodput walk accounts separately).
+    pub lost_work: Time,
+}
+
+/// Synthetic per-node MTBF in hours by GPU architecture. The source
+/// paper does not publish MTBF numbers; these are order-of-magnitude
+/// values consistent with published large-cluster studies (per-node
+/// interruption every few weeks at the ~1000-node scale), trending
+/// better for newer platforms. They parameterize *relative* resilience
+/// comparisons — absolute goodput should be read with the table's
+/// synthetic nature in mind.
+pub fn mtbf_hours(arch: &str) -> f64 {
+    match arch {
+        "V100" => 600.0,
+        "A100" => 800.0,
+        "H100" => 1000.0,
+        "B200" => 1200.0,
+        _ => 800.0,
+    }
+}
+
+/// Failure-rate scales above this are clamped: the thinning construction
+/// draws candidate events at `SCALE_CAP / MTBF` and keeps each with
+/// probability `scale / SCALE_CAP`, which makes any lower-scale schedule
+/// an exact subset of any higher-scale one (same seed) — the property
+/// that makes goodput provably monotone in the failure rate.
+pub const SCALE_CAP: f64 = 16.0;
+
+/// Materialize a deterministic fault schedule from the per-arch MTBF
+/// table: for each node, a Poisson process at `scale / MTBF(arch)`
+/// events per second over `[0, horizon_s]`, with kind mix 25%
+/// straggler (×1.2–2.0), 25% node loss, 25% NIC, 25% link.
+///
+/// Determinism and monotonicity: each node forks its own PRNG stream
+/// from `seed`, candidate events are drawn at the [`SCALE_CAP`] rate
+/// with *all* attributes (time, kind, multiplier, keep-coin) drawn
+/// before thinning, and an event survives iff
+/// `keep · SCALE_CAP < scale`. Raising `scale` therefore only ever
+/// *adds* events; it never moves or removes one.
+pub fn mtbf_schedule(
+    cluster: &ClusterSpec,
+    horizon_s: f64,
+    scale: f64,
+    seed: u64,
+) -> Vec<FaultEvent> {
+    let mut root = Rng::new(seed);
+    let scale = scale.clamp(0.0, SCALE_CAP);
+    let mut events = Vec::new();
+    for (i, node) in cluster.nodes.iter().enumerate() {
+        let mut rng = root.fork(i as u64);
+        let cap_rate = SCALE_CAP / (mtbf_hours(&node.gpu.name) * 3600.0);
+        let mut t = 0.0f64;
+        loop {
+            let u = 1.0 - rng.f64(); // (0, 1]: ln is finite
+            t += -u.ln() / cap_rate;
+            if t > horizon_s {
+                break;
+            }
+            // draw every attribute before thinning (see monotonicity note)
+            let u_kind = rng.f64();
+            let u_mult = rng.f64();
+            let keep = rng.f64() * SCALE_CAP < scale;
+            if !keep {
+                continue;
+            }
+            let node = i as u32;
+            let kind = if u_kind < 0.25 {
+                FaultKind::Straggler { node, mult: 1.2 + 0.8 * u_mult }
+            } else if u_kind < 0.50 {
+                FaultKind::NodeFail { node }
+            } else if u_kind < 0.75 {
+                FaultKind::NicFail { node }
+            } else {
+                FaultKind::LinkFail { node }
+            };
+            events.push(FaultEvent { at_s: t, kind });
+        }
+    }
+    events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn mtbf_schedule_is_deterministic() {
+        let c = presets::cluster_hetero(2, 2).unwrap();
+        let a = mtbf_schedule(&c, 1e6, 4.0, 7);
+        let b = mtbf_schedule(&c, 1e6, 4.0, 7);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "1e6s over 4 nodes at 4x should produce events");
+        // sorted by time
+        for w in a.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s);
+        }
+        // a different seed moves the schedule
+        assert_ne!(a, mtbf_schedule(&c, 1e6, 4.0, 8));
+    }
+
+    #[test]
+    fn mtbf_schedules_nest_across_scales() {
+        let c = presets::cluster_hetero(2, 2).unwrap();
+        let lo = mtbf_schedule(&c, 2e6, 1.0, 11);
+        let hi = mtbf_schedule(&c, 2e6, 8.0, 11);
+        assert!(hi.len() >= lo.len());
+        for ev in &lo {
+            assert!(hi.contains(ev), "low-scale event {ev:?} missing at high scale");
+        }
+        // zero scale keeps nothing
+        assert!(mtbf_schedule(&c, 2e6, 0.0, 11).is_empty());
+    }
+
+    #[test]
+    fn resolve_iteration_picks_earliest_fail_stop_and_active_stragglers() {
+        let c = presets::cluster_hetero(1, 1).unwrap(); // 2 nodes x 8
+        let spec = FaultSpec {
+            events: vec![
+                FaultEvent { at_s: 0.0, kind: FaultKind::Straggler { node: 1, mult: 1.5 } },
+                FaultEvent { at_s: 9.0, kind: FaultKind::NicFail { node: 0 } },
+                FaultEvent { at_s: 3.0, kind: FaultKind::NodeFail { node: 1 } },
+                // already in the past relative to any window >= 0
+                FaultEvent { at_s: 5.0, kind: FaultKind::Straggler { node: 0, mult: 2.0 } },
+            ],
+            ..Default::default()
+        };
+        spec.validate(&c).unwrap();
+        let r = spec.resolve_iteration(&c, 0.0);
+        let (at, node) = r.abort.unwrap();
+        assert_eq!((at, node), (Time::from_secs(3.0), 1));
+        assert!(r.slow[..8].iter().all(|m| *m == 1.0)); // node-0 straggler is in the future
+        assert!(r.slow[8..].iter().all(|m| *m == 1.5));
+        assert!(!r.is_noop());
+        // later window: node-0 straggler now active, NIC fault is next
+        let r = spec.resolve_iteration(&c, 6.0);
+        assert_eq!(r.abort.unwrap(), (Time::from_secs(3.0), 0));
+        assert!(r.slow[..8].iter().all(|m| *m == 2.0));
+        // empty spec is a no-op
+        assert!(FaultSpec::default().resolve_iteration(&c, 0.0).is_noop());
+    }
+
+    #[test]
+    fn validate_rejects_hostile_specs() {
+        let c = presets::cluster("hopper", 1).unwrap();
+        let bad_node = FaultSpec {
+            events: vec![FaultEvent { at_s: 0.0, kind: FaultKind::NodeFail { node: 5 } }],
+            ..Default::default()
+        };
+        assert!(bad_node.validate(&c).unwrap_err().to_string().contains("node 5"));
+        let bad_mult = FaultSpec {
+            events: vec![FaultEvent {
+                at_s: 0.0,
+                kind: FaultKind::Straggler { node: 0, mult: 0.5 },
+            }],
+            ..Default::default()
+        };
+        assert!(bad_mult.validate(&c).unwrap_err().to_string().contains("multiplier"));
+        let bad_time = FaultSpec {
+            events: vec![FaultEvent { at_s: f64::NAN, kind: FaultKind::NicFail { node: 0 } }],
+            ..Default::default()
+        };
+        assert!(bad_time.validate(&c).is_err());
+    }
+
+    #[test]
+    fn from_json_parses_and_rejects() {
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let v = Json::parse(
+            r#"{"events": [{"at_s": 2.5, "kind": "straggler", "node": 1, "mult": 1.4},
+                           {"at_s": 1.0, "kind": "node_fail", "node": 0}],
+                "checkpoint": {"interval_iters": 8, "write_gbps": 4.0}}"#,
+        )
+        .unwrap();
+        let spec = FaultSpec::from_json(&v, &c, 42).unwrap();
+        assert_eq!(spec.events.len(), 2);
+        assert_eq!(spec.events[0].at_s, 1.0); // normalized order
+        assert_eq!(spec.checkpoint.interval_iters, 8);
+        assert_eq!(spec.checkpoint.restart_warmup_s, 60.0); // default kept
+        assert_eq!(spec.seed, 42);
+        assert!(!spec.fingerprint().is_empty());
+
+        for (text, needle) in [
+            (r#"{}"#, "at least one"),
+            (r#"{"events": 3}"#, "array"),
+            (r#"{"events": [{"at_s": 1.0, "kind": "fire", "node": 0}]}"#, "unknown kind"),
+            (r#"{"events": [{"kind": "node_fail", "node": 0}]}"#, "at_s"),
+            (r#"{"events": [{"at_s": 1.0, "kind": "straggler", "node": 0}]}"#, "mult"),
+            (r#"{"events": [], "mtbf": {"scale": 2.0}}"#, "horizon_s"),
+            (r#"{"events": [], "checkpoint": {"interval_iters": "x"}}"#, "unsigned int"),
+        ] {
+            let v = Json::parse(text).unwrap();
+            let err = FaultSpec::from_json(&v, &c, 42).unwrap_err().to_string();
+            assert!(err.contains(needle), "{text} -> {err}");
+        }
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_specs_and_vanishes_when_empty() {
+        assert_eq!(FaultSpec::default().fingerprint(), "");
+        let a = FaultSpec {
+            events: vec![FaultEvent { at_s: 1.0, kind: FaultKind::NodeFail { node: 0 } }],
+            ..Default::default()
+        };
+        let mut b = a.clone();
+        b.events[0].at_s = 2.0;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert!(a.fingerprint().starts_with("|faults:"));
+    }
+}

@@ -34,7 +34,11 @@
 //! * any DP sync group needs gradient resharding (reshard traffic
 //!   crosses group boundaries outside the folded DP planner);
 //! * no equivalence class ends up with multiplicity ≥ 2 (nothing to
-//!   fold).
+//!   fold);
+//! * a non-empty fault spec is injected ([`classify_with_faults`]): a
+//!   straggler slows exactly one member of a class, and a fail-stop
+//!   abort must observe every rank's partial progress — both break the
+//!   interchangeability proof, so faults force the expanded path.
 //!
 //! Individual groups that fail the *per-group* symmetry conditions
 //! (mixed node classes where the layout differs, partial node
@@ -228,6 +232,23 @@ pub fn classify(cluster: &ClusterSpec, fw: &FrameworkSpec, mode: FoldMode) -> Op
     })
 }
 
+/// [`classify`] guarded by the fault-injection gate (DESIGN.md §26):
+/// any non-empty [`crate::system::failure::FaultSpec`] refuses folding
+/// outright, so fault trajectories are always simulated against the
+/// full expanded rank space. With no spec (or an empty one) this is
+/// exactly `classify`.
+pub fn classify_with_faults(
+    cluster: &ClusterSpec,
+    fw: &FrameworkSpec,
+    mode: FoldMode,
+    faults: Option<&crate::system::failure::FaultSpec>,
+) -> Option<FoldPlan> {
+    match faults {
+        Some(spec) if !spec.is_empty() => None,
+        _ => classify(cluster, fw, mode),
+    }
+}
+
 /// The canonical symmetry key of one (single-stage) device group, or
 /// `None` when the group cannot be folded on this cluster/fabric.
 ///
@@ -387,6 +408,21 @@ mod tests {
         c.fabric = FabricSpec::LeafSpine { spines: 1, oversubscription: 1.0 };
         let plan = classify(&c, &fw, FoldMode::Auto).unwrap();
         assert_eq!(plan.class_mult, vec![2]);
+    }
+
+    #[test]
+    fn non_empty_fault_spec_forces_expansion() {
+        use crate::system::failure::{FaultEvent, FaultKind, FaultSpec};
+        let c = presets::cluster("hopper", 2).unwrap();
+        let fw = uniform(&c, 8, 1, 2);
+        // this deployment folds without faults...
+        assert!(classify_with_faults(&c, &fw, FoldMode::Auto, None).is_some());
+        let empty = FaultSpec::default();
+        assert!(classify_with_faults(&c, &fw, FoldMode::Auto, Some(&empty)).is_some());
+        // ...but any scheduled fault refuses folding
+        let mut spec = FaultSpec::default();
+        spec.events.push(FaultEvent { at_s: 1.0, kind: FaultKind::NodeFail { node: 0 } });
+        assert!(classify_with_faults(&c, &fw, FoldMode::Auto, Some(&spec)).is_none());
     }
 
     #[test]

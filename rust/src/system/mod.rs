@@ -13,6 +13,9 @@
 //! * [`fold`] — symmetry folding: equivalence classes of
 //!   interchangeable device groups, so the engine simulates one
 //!   representative per class and multiplies (DESIGN.md §25).
+//! * [`failure`] — deterministic fault injection: scheduled node / NIC
+//!   / link failures and stragglers, MTBF-driven schedules, and the
+//!   checkpoint cost model behind goodput reporting (DESIGN.md §26).
 //! * [`compiled`] — the dense, immutable simulation core: a workload
 //!   lowered once (durations resolved, collectives pre-planned, ids
 //!   remapped to `Vec` indices) so runs share it without re-deriving.
@@ -23,6 +26,7 @@
 pub mod collective;
 pub mod compiled;
 pub mod device_group;
+pub mod failure;
 pub mod fold;
 pub mod resharding;
 pub mod scheduler;
@@ -30,6 +34,7 @@ pub mod scheduler;
 pub use collective::{CollectiveAlgo, CollectiveDef, CollectiveExec, CommKind};
 pub use compiled::{CompiledWorkload, DenseOp};
 pub use device_group::DeviceGroups;
+pub use failure::{FaultKind, FaultReport, FaultSpec};
 pub use fold::{FoldMode, FoldPlan};
 pub use resharding::{needs_resharding, ReshardPlan};
 pub use scheduler::{Scheduler, SchedulerReport};

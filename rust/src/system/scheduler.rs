@@ -33,6 +33,7 @@ use crate::workload::op::Workload;
 
 use super::collective::RingPolicy;
 use super::compiled::{CompiledWorkload, DenseOp, FoldedMeta};
+use super::failure::{FaultReport, IterationFaults};
 
 /// Tag space split: collective flows use their dense id; p2p messages
 /// are offset so the two never collide.
@@ -104,6 +105,10 @@ pub struct SchedulerReport {
     pub comm_busy: Time,
     /// Per-rank busy-interval trace (empty unless `record_trace`).
     pub trace: TraceRecorder,
+    /// What an injected fail-stop did to the run (`None` for clean
+    /// completions — including runs that finished *before* a scheduled
+    /// fault would have struck).
+    pub fault: Option<FaultReport>,
 }
 
 enum Source<'a> {
@@ -125,6 +130,10 @@ pub struct Scheduler<'a> {
     ring_policy: RingPolicy,
     /// Record the per-rank busy-interval trace during the run.
     pub record_trace: bool,
+    /// Injected faults resolved against this iteration's window
+    /// ([`crate::system::failure::FaultSpec::resolve_iteration`]);
+    /// `None` runs the pristine fault-free path.
+    pub faults: Option<IterationFaults>,
 }
 
 impl<'a> Scheduler<'a> {
@@ -142,6 +151,7 @@ impl<'a> Scheduler<'a> {
             topology,
             ring_policy: RingPolicy::HeteroAware,
             record_trace: false,
+            faults: None,
         })
     }
 
@@ -168,6 +178,7 @@ impl<'a> Scheduler<'a> {
             topology,
             ring_policy,
             record_trace: false,
+            faults: None,
         }
     }
 
@@ -191,7 +202,7 @@ impl<'a> Scheduler<'a> {
             }
         };
         let flows = FlowSim::new(self.topology.clone());
-        Exec::new(cw, flows, self.record_trace).run()
+        Exec::new(cw, flows, self.record_trace, self.faults).run()
     }
 }
 
@@ -216,6 +227,9 @@ struct Exec<'w> {
     comm_busy: Time,
     /// Reusable posted-time buffer for collective step launches.
     posted_scratch: Vec<Time>,
+    /// Resolved fault injection for this window (`None` = pristine
+    /// fault-free path: no per-event checks beyond one `Option` read).
+    faults: Option<IterationFaults>,
 }
 
 /// Post time for a flow from `r`: the sender's own collective arrival,
@@ -231,7 +245,12 @@ fn posted_of(arrival: &[Time], fold: Option<&FoldedMeta>, r: u32) -> Time {
 }
 
 impl<'w> Exec<'w> {
-    fn new(cw: &'w CompiledWorkload, mut flows: FlowSim, record_trace: bool) -> Self {
+    fn new(
+        cw: &'w CompiledWorkload,
+        mut flows: FlowSim,
+        record_trace: bool,
+        faults: Option<IterationFaults>,
+    ) -> Self {
         let world = cw.world as usize;
         // pre-size the flow slab and record store from compiled counts
         flows.reserve(
@@ -252,6 +271,7 @@ impl<'w> Exec<'w> {
             compute_busy: Time::ZERO,
             comm_busy: Time::ZERO,
             posted_scratch: Vec::with_capacity(cw.max_step_flows()),
+            faults,
         }
     }
 
@@ -266,7 +286,28 @@ impl<'w> Exec<'w> {
                 self.advance(&mut eng, r)?;
             }
         }
-        while let Some(ev) = eng.step() {
+        // A scheduled fail-stop aborts the run the moment the *next*
+        // event would land at or past the fault time — checked by
+        // peeking before each dispatch, so a run that drains first is
+        // byte-identical to the fault-free path (same clock, same
+        // event count), and an aborted run never pops the event it
+        // would have processed.
+        let abort = self.faults.as_ref().and_then(|f| f.abort);
+        let mut fault: Option<FaultReport> = None;
+        loop {
+            if let Some((at, node)) = abort {
+                match eng.peek_time() {
+                    None => break, // iteration completed before the fault
+                    Some(t) if t >= at => {
+                        // the whole partial iteration is lost work:
+                        // gradient state dies with the fail-stop
+                        fault = Some(FaultReport { at, node, lost_work: at });
+                        break;
+                    }
+                    Some(_) => {}
+                }
+            }
+            let Some(ev) = eng.step() else { break };
             match ev.payload {
                 SimEvent::ComputeDone { rank } => {
                     self.pc[rank as usize] += 1;
@@ -282,19 +323,22 @@ impl<'w> Exec<'w> {
             }
         }
 
-        // deadlock / starvation check
-        let stuck: Vec<(u32, RankState)> = (0..cw.world)
-            .filter(|&r| {
-                cw.has_program[r as usize] && self.state[r as usize] != RankState::Finished
-            })
-            .map(|r| (r, self.state[r as usize]))
-            .collect();
-        anyhow::ensure!(
-            stuck.is_empty(),
-            "iteration deadlocked: {} ranks unfinished, e.g. {:?}",
-            stuck.len(),
-            &stuck[..stuck.len().min(4)]
-        );
+        // deadlock / starvation check — not meaningful after an abort
+        // (blocked ranks are exactly what a fail-stop leaves behind)
+        if fault.is_none() {
+            let stuck: Vec<(u32, RankState)> = (0..cw.world)
+                .filter(|&r| {
+                    cw.has_program[r as usize] && self.state[r as usize] != RankState::Finished
+                })
+                .map(|r| (r, self.state[r as usize]))
+                .collect();
+            anyhow::ensure!(
+                stuck.is_empty(),
+                "iteration deadlocked: {} ranks unfinished, e.g. {:?}",
+                stuck.len(),
+                &stuck[..stuck.len().min(4)]
+            );
+        }
 
         // assemble report
         let mut fct_by_kind: HashMap<&'static str, Samples> = HashMap::new();
@@ -316,7 +360,9 @@ impl<'w> Exec<'w> {
             "compute-busy accumulator diverged from the recorded trace"
         );
         Ok(SchedulerReport {
-            iteration_time: eng.now(),
+            // an aborted iteration ends at the fault, not at the last
+            // event that happened to complete before it
+            iteration_time: fault.map(|f| f.at).unwrap_or_else(|| eng.now()),
             fct_by_kind,
             fct_all,
             flows_completed,
@@ -324,6 +370,7 @@ impl<'w> Exec<'w> {
             compute_busy: self.compute_busy,
             comm_busy: self.comm_busy,
             trace: self.trace,
+            fault,
         })
     }
 
@@ -341,6 +388,15 @@ impl<'w> Exec<'w> {
             match ops[pc] {
                 DenseOp::Compute { dur, label } => {
                     let now = eng.now();
+                    // Straggler injection: scale this rank's compute.
+                    // Guarded on != 1.0 so the healthy path never
+                    // round-trips a picosecond count through f64.
+                    let dur = match &self.faults {
+                        Some(f) if f.slow[r] != 1.0 => {
+                            Time((dur.as_ps() as f64 * f.slow[r]).round() as u64)
+                        }
+                        _ => dur,
+                    };
                     // Under symmetry folding a representative rank's
                     // compute stands for its whole class; weight the
                     // accumulator so the report shows unfolded totals.

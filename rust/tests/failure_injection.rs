@@ -130,6 +130,134 @@ fn zero_byte_and_single_rank_collectives_complete() {
     assert_eq!(rep.flows_completed, 0); // both degenerate
 }
 
+// ---------------------------------------------------------------------------
+// Injected hardware faults (DESIGN.md §26): fail-stops abort cleanly,
+// stragglers slow things down, and faults that touch nothing change
+// nothing.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn node_loss_mid_iteration_yields_clean_fault_report() {
+    use hetsim::system::failure::{FaultReport, IterationFaults};
+    use hetsim::util::units::Time;
+    let (c, w, t) = small_setup();
+    let clean = Scheduler::new(&w, &c, &t).unwrap().run().unwrap();
+    assert!(clean.fault.is_none());
+
+    // kill node 0 halfway through the clean iteration: the run must
+    // terminate (not hang), report the fault, and stop the clock at it
+    let half = Time(clean.iteration_time.as_ps() / 2);
+    let mut sched = Scheduler::new(&w, &c, &t).unwrap();
+    sched.faults = Some(IterationFaults { abort: Some((half, 0)), slow: vec![1.0; 8] });
+    let rep = sched.run().unwrap();
+    assert_eq!(rep.fault, Some(FaultReport { at: half, node: 0, lost_work: half }));
+    assert_eq!(rep.iteration_time, half);
+    assert!(
+        rep.events_processed < clean.events_processed,
+        "aborted run processed {} events, clean run {}",
+        rep.events_processed,
+        clean.events_processed
+    );
+}
+
+#[test]
+fn straggler_strictly_increases_iteration_time() {
+    use hetsim::system::failure::IterationFaults;
+    let (c, w, t) = small_setup();
+    let clean = Scheduler::new(&w, &c, &t).unwrap().run().unwrap();
+
+    let mut slow = vec![1.0; 8];
+    slow[0] = 2.0; // one straggling rank drags its TP group
+    let mut sched = Scheduler::new(&w, &c, &t).unwrap();
+    sched.faults = Some(IterationFaults { abort: None, slow });
+    let rep = sched.run().unwrap();
+    assert!(rep.fault.is_none());
+    assert!(
+        rep.iteration_time > clean.iteration_time,
+        "straggler did not slow the iteration: {} vs clean {}",
+        rep.iteration_time,
+        clean.iteration_time
+    );
+}
+
+#[test]
+fn fault_on_vacant_node_is_byte_identical() {
+    use hetsim::system::failure::{FaultEvent, FaultKind, FaultSpec};
+    // the 8-rank workload from small_setup occupies only node 0 of a
+    // two-node cluster; a straggler on node 1 touches no scheduled rank
+    let (_, w, t) = small_setup();
+    let c2 = presets::cluster("hopper", 2).unwrap();
+    let clean = Scheduler::new(&w, &c2, &t).unwrap().run().unwrap();
+
+    let spec = FaultSpec {
+        events: vec![FaultEvent {
+            at_s: 0.0,
+            kind: FaultKind::Straggler { node: 1, mult: 3.0 },
+        }],
+        ..Default::default()
+    };
+    let faults = spec.resolve_iteration(&c2, 0.0);
+    assert!(!faults.is_noop(), "straggler on node 1 should resolve to multipliers");
+    let mut sched = Scheduler::new(&w, &c2, &t).unwrap();
+    sched.faults = Some(faults);
+    let rep = sched.run().unwrap();
+    assert_eq!(rep.iteration_time, clean.iteration_time);
+    assert_eq!(rep.events_processed, clean.events_processed);
+    assert_eq!(rep.flows_completed, clean.flows_completed);
+    assert_eq!(rep.compute_busy, clean.compute_busy);
+    assert_eq!(rep.comm_busy, clean.comm_busy);
+    assert!(rep.fault.is_none());
+}
+
+#[test]
+fn fold_auto_under_faults_matches_fold_off_bit_for_bit() {
+    use hetsim::simulator::SimulationBuilder;
+    use hetsim::system::failure::{FaultEvent, FaultKind, FaultSpec};
+    use hetsim::system::fold::FoldMode;
+    let mut m = presets::model("gpt-6.7b").unwrap();
+    m.num_layers = 2;
+    m.global_batch = 8;
+    m.micro_batch = 4;
+    let c = presets::cluster("hopper", 2).unwrap();
+    let par = ParallelismSpec { tp: 8, pp: 1, dp: 2 };
+
+    // without faults this scenario folds (DP replicas are symmetric)
+    let folded = SimulationBuilder::new(m.clone(), c.clone())
+        .parallelism(par)
+        .fold(FoldMode::Auto)
+        .build()
+        .unwrap();
+    assert!(folded.folded(), "fault-free DP-symmetric scenario should fold");
+
+    // a non-empty fault spec must force expansion, and the expanded
+    // fold=auto run must match fold=off exactly, field for field
+    let spec = FaultSpec {
+        events: vec![FaultEvent {
+            at_s: 0.0,
+            kind: FaultKind::Straggler { node: 0, mult: 1.3 },
+        }],
+        ..Default::default()
+    };
+    let run = |mode: FoldMode| {
+        let sim = SimulationBuilder::new(m.clone(), c.clone())
+            .parallelism(par)
+            .fold(mode)
+            .faults(Some(spec.clone()))
+            .build()
+            .unwrap();
+        assert!(!sim.folded(), "non-empty fault spec must veto folding ({mode:?})");
+        sim.run_iteration().unwrap()
+    };
+    let auto = run(FoldMode::Auto);
+    let off = run(FoldMode::Off);
+    assert_eq!(auto.iteration_time, off.iteration_time);
+    assert_eq!(auto.events_processed, off.events_processed);
+    assert_eq!(auto.flows_completed, off.flows_completed);
+    assert_eq!(auto.compute_busy, off.compute_busy);
+    assert_eq!(auto.comm_busy, off.comm_busy);
+    assert_eq!(auto.fault, off.fault);
+}
+
 #[test]
 fn event_budget_stops_runaway_configs() {
     // a pathological but valid workload must hit the engine's event

@@ -162,6 +162,43 @@ fn simulate_timeline_golden() {
 }
 
 #[test]
+fn scenario_faults_timeline_golden() {
+    // the committed fault scenario (straggler from t=0 plus a node loss
+    // 0.5s into the iteration) pins the fault-injection timeline: the
+    // abort point, the event count at the abort, and the lost-work
+    // accounting must all survive perf work (DESIGN.md §26)
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("examples").join("scenario_faults.json");
+    let text = fs::read_to_string(&path).unwrap();
+    let s = hetsim::config::loader::load_scenario(&text).unwrap();
+    assert!(s.faults.is_some(), "scenario_faults.json must carry a fault spec");
+    let rep = SimulationBuilder::new(s.model, s.cluster)
+        .parallelism(s.parallelism)
+        .schedule(s.schedule)
+        .fold(s.fold)
+        .faults(s.faults)
+        .build()
+        .unwrap()
+        .run_iteration()
+        .unwrap();
+    let fault = rep.fault.expect("the 0.5s node_fail must abort the iteration");
+    assert_eq!(rep.iteration_time, fault.at, "the clock must stop at the fault");
+    let fingerprint = format!(
+        "iteration_ps={}\nevents={}\nflows={}\ncompute_busy_ps={}\ncomm_busy_ps={}\n\
+         fault_node={}\nfault_at_ps={}\nlost_work_ps={}\n",
+        rep.iteration_time.as_ps(),
+        rep.events_processed,
+        rep.flows_completed,
+        rep.compute_busy.as_ps(),
+        rep.comm_busy.as_ps(),
+        fault.node,
+        fault.at.as_ps(),
+        fault.lost_work.as_ps(),
+    );
+    check_golden("simulate_scenario_faults.txt", &fingerprint);
+}
+
+#[test]
 fn simulate_fold_off_matches_seed_golden() {
     // fold=off must be byte-identical to the pre-folding engine: an
     // explicit `.fold(FoldMode::Off)` build reproduces the SAME

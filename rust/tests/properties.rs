@@ -10,7 +10,12 @@
 //! * resharding trigger conditions,
 //! * layer/batch conservation under random refinement-move sequences,
 //! * symmetry folding (`fold=auto`) reproduces the unfolded run's
-//!   timing exactly on random clusters / fabrics / schedules.
+//!   timing exactly on random clusters / fabrics / schedules,
+//! * an empty fault spec is bit-identical to configuring no faults,
+//! * effective goodput is monotone non-increasing in the MTBF
+//!   failure-rate scale (nested-thinning schedules + monotone walk),
+//! * fault-aware plan sweeps are deterministic across worker-thread
+//!   counts.
 
 use hetsim::config::framework::{FrameworkSpec, ParallelismSpec};
 use hetsim::config::presets;
@@ -527,6 +532,241 @@ fn prop_folded_simulation_matches_unfolded_exactly() {
         folded_cases.load(Ordering::Relaxed) > 0,
         "no random case ever folded — the property is vacuous"
     );
+}
+
+#[test]
+fn prop_empty_fault_spec_is_bit_identical_to_no_faults() {
+    use hetsim::config::cluster::FabricSpec;
+    use hetsim::simulator::SimulationBuilder;
+    use hetsim::system::failure::FaultSpec;
+    use hetsim::system::fold::FoldMode;
+    use hetsim::workload::schedule::ScheduleKind;
+
+    // the fault layer must be zero-cost when off: configuring an empty
+    // FaultSpec must reproduce the unconfigured run bit-for-bit — same
+    // timing, same event counts, same folding decision (DESIGN.md §26)
+    check(&cfg(40), |g| {
+        let nodes = g.rng.range_u64(1, 4) as u32;
+        let mut cluster = match g.rng.range_u64(0, 3) {
+            0 => presets::cluster("ampere", nodes * 2).unwrap(),
+            1 => presets::cluster("hopper", nodes * 2).unwrap(),
+            _ => presets::cluster_hetero(nodes, nodes).unwrap(),
+        };
+        cluster.fabric = match g.rng.range_u64(0, 3) {
+            0 => FabricSpec::RailOnly,
+            1 => FabricSpec::SingleSwitch,
+            _ => FabricSpec::LeafSpine {
+                spines: g.rng.range_u64(1, 4) as u32,
+                oversubscription: g.rng.range_f64(1.0, 4.0),
+            },
+        };
+        let world = cluster.total_gpus();
+        let tp = *g.rng.choose(&[1u32, 2, 4, 8, 16]);
+        if world % tp != 0 {
+            return Ok(());
+        }
+        let dp = world / tp;
+        let mut model = presets::model("gpt-6.7b").unwrap();
+        model.num_layers = g.rng.range_u64(1, 5) as u32;
+        model.micro_batch = g.rng.range_u64(1, 3);
+        model.global_batch = model.micro_batch * dp as u64 * g.rng.range_u64(1, 3);
+        let schedule = *g.rng.choose(&[
+            ScheduleKind::GPipe,
+            ScheduleKind::OneFOneB,
+            ScheduleKind::Interleaved1F1B { vpp: 2 },
+        ]);
+        let par = ParallelismSpec { tp, pp: 1, dp };
+        let run = |spec: Option<FaultSpec>| {
+            let sim = SimulationBuilder::new(model.clone(), cluster.clone())
+                .parallelism(par)
+                .schedule(schedule)
+                .fold(FoldMode::Auto)
+                .faults(spec)
+                .build()
+                .map_err(|e| format!("build failed: {e}"))?;
+            let folded = sim.folded();
+            let rep = sim.run_iteration().map_err(|e| format!("run failed: {e}"))?;
+            Ok::<_, String>((folded, rep))
+        };
+        let (fold_none, none) = run(None)?;
+        let (fold_empty, empty) = run(Some(FaultSpec::default()))?;
+        let ctx = format!("{} tp={tp} dp={dp} sched={schedule:?}", cluster.name);
+        if fold_none != fold_empty {
+            return Err(format!(
+                "empty spec changed the folding decision ({fold_none} vs {fold_empty}): {ctx}"
+            ));
+        }
+        if none.iteration_time != empty.iteration_time {
+            return Err(format!(
+                "iteration time diverged ({} != {}): {ctx}",
+                none.iteration_time, empty.iteration_time
+            ));
+        }
+        if none.events_processed != empty.events_processed {
+            return Err(format!(
+                "event count diverged ({} != {}): {ctx}",
+                none.events_processed, empty.events_processed
+            ));
+        }
+        if none.flows_completed != empty.flows_completed
+            || none.compute_busy != empty.compute_busy
+            || none.comm_busy != empty.comm_busy
+            || none.fault != empty.fault
+        {
+            return Err(format!("report diverged under empty fault spec: {ctx}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_goodput_monotone_non_increasing_in_failure_rate() {
+    use hetsim::config::cluster::ClusterSpec;
+    use hetsim::report::goodput::{walk, GoodputInput};
+    use hetsim::system::failure::{mtbf_schedule, CheckpointSpec, SCALE_CAP};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    // mtbf_schedule thins one master draw, so a lower scale yields a
+    // subset of a higher scale's events, and the goodput walk only ever
+    // loses from extra events — together: goodput is monotone
+    // non-increasing in the failure-rate scale (DESIGN.md §26)
+    let distinct = AtomicUsize::new(0);
+    check(&cfg(100), |g| {
+        let nodes = g.rng.range_u64(1, 5) as u32;
+        let cluster = match g.rng.range_u64(0, 3) {
+            0 => presets::cluster("ampere", nodes).unwrap(),
+            1 => presets::cluster("hopper", nodes).unwrap(),
+            _ => presets::cluster_hetero(nodes, nodes).unwrap(),
+        };
+        let model = presets::model("gpt-6.7b").unwrap();
+        let iter_s = g.rng.range_f64(0.1, 30.0);
+        let input = GoodputInput {
+            model: &model,
+            cluster: &cluster,
+            iteration: Time::from_secs(iter_s),
+            dp: g.rng.range_u64(1, 9) as u32,
+            checkpoint: CheckpointSpec {
+                interval_iters: g.rng.range_u64(1, 200),
+                write_gbps: g.rng.range_f64(1.0, 100.0),
+                restart_warmup_s: g.rng.range_f64(0.0, 600.0),
+            },
+            horizon_s: g.rng.range_f64(3_600.0, 14.0 * 86_400.0),
+        };
+        let seed = g.rng.range_u64(0, 1 << 48);
+        let mut lo_scale = g.rng.range_f64(0.0, SCALE_CAP);
+        let mut hi_scale = g.rng.range_f64(0.0, SCALE_CAP);
+        if lo_scale > hi_scale {
+            std::mem::swap(&mut lo_scale, &mut hi_scale);
+        }
+        // synthetic but consistent re-plan model: losing nodes slows
+        // the per-iteration time proportionally
+        let full = cluster.nodes.len() as f64;
+        let mut replan = |c: &ClusterSpec| {
+            Some(Time::from_secs(iter_s * full / c.nodes.len().max(1) as f64))
+        };
+        let lo_events = mtbf_schedule(&cluster, input.horizon_s, lo_scale, seed);
+        let hi_events = mtbf_schedule(&cluster, input.horizon_s, hi_scale, seed);
+        if lo_events.len() > hi_events.len() {
+            return Err(format!(
+                "schedule not nested: scale {lo_scale:.3} drew {} events, {hi_scale:.3} drew {}",
+                lo_events.len(),
+                hi_events.len()
+            ));
+        }
+        if hi_events.len() > lo_events.len() {
+            distinct.fetch_add(1, Ordering::Relaxed);
+        }
+        let lo = walk(&input, &lo_events, &mut replan);
+        let hi = walk(&input, &hi_events, &mut replan);
+        let tol = lo.goodput_tokens_per_s.abs() * 1e-9 + 1e-9;
+        if hi.goodput_tokens_per_s > lo.goodput_tokens_per_s + tol {
+            return Err(format!(
+                "goodput increased with failure rate: {:.3} tok/s at scale {lo_scale:.3} but \
+                 {:.3} tok/s at scale {hi_scale:.3} ({} vs {} events, {} nodes)",
+                lo.goodput_tokens_per_s,
+                hi.goodput_tokens_per_s,
+                lo_events.len(),
+                hi_events.len(),
+                cluster.nodes.len()
+            ));
+        }
+        Ok(())
+    });
+    assert!(
+        distinct.load(Ordering::Relaxed) > 0,
+        "no random case ever drew different schedules — the property is vacuous"
+    );
+}
+
+#[test]
+fn prop_fault_sweep_deterministic_across_thread_counts() {
+    use hetsim::planner::PlanOptions;
+    use hetsim::report::goodput::{sweep, SweepOptions};
+    use hetsim::system::fold::FoldMode;
+
+    // the goodput walk is sequential over a pre-drawn schedule, so the
+    // whole sweep — plan search, fault trajectory, ranking — must not
+    // depend on how many worker threads scored the candidates
+    check(&cfg(3), |g| {
+        let cluster = if g.rng.f64() < 0.5 {
+            presets::cluster("hopper", 2).unwrap()
+        } else {
+            presets::cluster_hetero(1, 1).unwrap()
+        };
+        let mut model = presets::model("gpt-6.7b").unwrap();
+        model.num_layers = 2;
+        model.global_batch = 8;
+        model.micro_batch = 1;
+        let seed = g.rng.range_u64(0, 1 << 32);
+        let scale = g.rng.range_f64(4.0, 16.0);
+        let mut reports = Vec::new();
+        for threads in [1usize, 4, 8] {
+            let opts = SweepOptions {
+                plan: PlanOptions {
+                    microbatch_limit: Some(1),
+                    threads,
+                    refine_steps: 0,
+                    fold: FoldMode::Off,
+                },
+                top: 3,
+                horizon_s: 4.0 * 86_400.0,
+                mtbf_scale: scale,
+                seed,
+                ..Default::default()
+            };
+            let rep = sweep(&model, &cluster, &opts)
+                .map_err(|e| format!("sweep(threads={threads}) failed: {e}"))?;
+            reports.push((threads, rep));
+        }
+        let (_, base) = &reports[0];
+        if base.entries.is_empty() {
+            return Err("sweep ranked no plans".into());
+        }
+        for (threads, rep) in &reports[1..] {
+            if rep.entries.len() != base.entries.len() {
+                return Err(format!(
+                    "{} entries with {threads} threads, {} with 1",
+                    rep.entries.len(),
+                    base.entries.len()
+                ));
+            }
+            for (a, b) in rep.entries.iter().zip(&base.entries) {
+                if a.plan != b.plan || a.iteration != b.iteration || a.dp != b.dp {
+                    return Err(format!(
+                        "ranking diverged at {threads} threads: {} vs {}",
+                        a.plan, b.plan
+                    ));
+                }
+                if a.goodput != b.goodput {
+                    return Err(format!(
+                        "fault trajectory diverged at {threads} threads on {}: {:?} vs {:?}",
+                        a.plan, a.goodput, b.goodput
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]
