@@ -5,7 +5,8 @@
 //!
 //! A scenario file is one JSON object with three required sections
 //! (`model`, `cluster`, `parallelism`) plus optional `fabric`,
-//! `schedule`, `fold`, `faults` and `seed`. Unknown keys are ignored.
+//! `schedule`, `fold`, `faults`, `serving` and `seed`. Unknown keys
+//! are ignored.
 //!
 //! ```json
 //! {
@@ -122,20 +123,45 @@
 //! A spec with no events is normalized away — the simulation is
 //! byte-identical to one without the key.
 //!
+//! ## `serving` — optional
+//!
+//! Inference serving workload ([`crate::workload::serve`],
+//! DESIGN.md §27), run via `hetsim serve-sim --config` or
+//! [`crate::Simulation::run_serve`]. An object with at least one of:
+//!
+//! * `"requests"` — explicit trace: array of `{"arrival_s": seconds,
+//!   "prompt_tokens": count, "output_tokens": count, "weight": w}`
+//!   (`weight` optional, default 1; feeds the `wsrpt` policy).
+//! * `"poisson"` — seeded open-loop arrivals: `{"rate_per_s",
+//!   "horizon_s", "scale", "prompt_tokens", "output_tokens"}`
+//!   (`rate_per_s` required; `scale` multiplies the rate in
+//!   `[0, 16]` with nested-thinning subset semantics across scales;
+//!   token counts are per-request means, drawn in `[0.5, 1.5)×mean`).
+//!
+//! Plus optional scheduler knobs: `"policy"` (`"fifo" | "srpt" |
+//! "wsrpt"`, default fifo), `"max_batch"` (default 32), `"kv_frac"`
+//! (fraction of post-weights GPU memory usable for KV cache, default
+//! 0.8) and `"seed"` (defaults to the scenario's `seed`). A spec that
+//! generates no requests is normalized away — the simulation is
+//! byte-identical to one without the key.
+//!
 //! ## `seed` — optional, default `42`
 //!
-//! Seeds stochastic extensions — today that is the MTBF fault-schedule
-//! draw; everything else in the simulator is deterministic.
+//! Seeds stochastic extensions — the MTBF fault-schedule draw and the
+//! serving Poisson arrival draw; everything else in the simulator is
+//! deterministic.
 //!
 //! Complete, loadable examples ship at
 //! `rust/examples/scenario_hetero_1f1b.json` (grid parallelism),
 //! `rust/examples/scenario_variable_tp.json` (per-group TP, the Fig-3
 //! deployment), `rust/examples/scenario_spine_mixed_nodes.json`
-//! (mixed node sizes on an oversubscribed leaf/spine fabric) and
+//! (mixed node sizes on an oversubscribed leaf/spine fabric),
 //! `rust/examples/scenario_faults.json` (the canonical fault-injection
-//! scenario behind the resilience golden test); the doctests below
-//! parse them on every `cargo test`, so the examples and this
-//! documentation cannot rot apart:
+//! scenario behind the resilience golden test) and
+//! `rust/examples/scenario_serving.json` (the canonical serving
+//! scenario: Poisson arrivals plus pinned requests on a mixed
+//! cluster); the doctests below parse them on every `cargo test`, so
+//! the examples and this documentation cannot rot apart:
 //!
 //! ```
 //! let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_hetero_1f1b.json");
@@ -187,6 +213,20 @@
 //! assert!(faults.events.iter().any(|e| e.kind.is_fail_stop()));
 //! assert_eq!(faults.checkpoint.interval_iters, 16);
 //! ```
+//!
+//! ```
+//! use hetsim::workload::serve::ServePolicy;
+//! let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_serving.json");
+//! let text = std::fs::read_to_string(path).unwrap();
+//! let s = hetsim::config::loader::load_scenario(&text).unwrap();
+//! let serving = s.serving.expect("the canonical serving scenario carries traffic");
+//! assert_eq!(serving.policy, ServePolicy::Srpt);
+//! // two pinned requests on top of the Poisson arrivals
+//! assert_eq!(serving.requests.len(), 2);
+//! assert_eq!(serving.poisson.as_ref().unwrap().rate_per_s, 4.0);
+//! assert_eq!(serving.seed, 7, "serving seed defaults to the scenario seed");
+//! assert!(!serving.materialize().is_empty());
+//! ```
 
 use crate::config::cluster::{ClusterSpec, FabricSpec};
 use crate::config::framework::ParallelismSpec;
@@ -196,6 +236,7 @@ use crate::system::failure::FaultSpec;
 use crate::system::fold::FoldMode;
 use crate::util::json::Json;
 use crate::workload::schedule::ScheduleKind;
+use crate::workload::serve::ServeSpec;
 
 /// A fully-described simulation scenario.
 #[derive(Debug, Clone)]
@@ -218,8 +259,13 @@ pub struct Scenario {
     /// Injected fault schedule ([`crate::system::failure`]), when the
     /// scenario carries a `"faults"` key with at least one event.
     pub faults: Option<FaultSpec>,
-    /// Seeds stochastic extensions (today: the MTBF fault-schedule
-    /// draw); everything else in the simulator is deterministic.
+    /// Serving workload ([`crate::workload::serve`]), when the scenario
+    /// carries a `"serving"` key that generates at least one request
+    /// source.
+    pub serving: Option<ServeSpec>,
+    /// Seeds stochastic extensions (the MTBF fault-schedule draw and
+    /// the serving Poisson draw); everything else in the simulator is
+    /// deterministic.
     pub seed: u64,
 }
 
@@ -259,7 +305,11 @@ pub fn load_scenario(text: &str) -> anyhow::Result<Scenario> {
         Some(f) => Some(FaultSpec::from_json(f, &cluster, seed)?).filter(|s| !s.is_empty()),
         None => None,
     };
-    Ok(Scenario { model, cluster, parallelism, per_group_tp, schedule, fold, faults, seed })
+    let serving = match v.get("serving") {
+        Some(s) => Some(ServeSpec::from_json(s, seed)?).filter(|s| !s.is_empty()),
+        None => None,
+    };
+    Ok(Scenario { model, cluster, parallelism, per_group_tp, schedule, fold, faults, serving, seed })
 }
 
 /// Parse the `model` section: a preset name or an inline Table-6
@@ -704,6 +754,32 @@ mod tests {
             r#", "faults": {"events": [{"at_s": 1.0, "kind": "node_fail", "node": 9}]}"#,
         ))
         .is_err());
+    }
+
+    #[test]
+    fn serving_key_parsed_and_empty_spec_normalized_away() {
+        let base = r#"{"model": "gpt-6.7b", "cluster": "hetero:1,1",
+            "parallelism": {"tp": 8, "pp": 1, "dp": 2}, "seed": 11%S%}"#;
+        let s = load_scenario(&base.replace("%S%", "")).unwrap();
+        assert!(s.serving.is_none());
+        let s = load_scenario(&base.replace(
+            "%S%",
+            r#", "serving": {"policy": "wsrpt",
+                "poisson": {"rate_per_s": 2.5, "horizon_s": 3.0},
+                "requests": [{"arrival_s": 0.5, "prompt_tokens": 64, "output_tokens": 8}]}"#,
+        ))
+        .unwrap();
+        let spec = s.serving.unwrap();
+        assert_eq!(spec.policy, crate::workload::serve::ServePolicy::Wsrpt);
+        assert_eq!(spec.requests.len(), 1);
+        assert_eq!(spec.seed, 11, "serving seed defaults to the scenario seed");
+        // a zero-rate scale still counts as a Poisson source; a
+        // malformed spec is an error, not a silent default
+        assert!(load_scenario(
+            &base.replace("%S%", r#", "serving": {"poisson": {"rate_per_s": "fast"}}"#)
+        )
+        .is_err());
+        assert!(load_scenario(&base.replace("%S%", r#", "serving": {}"#)).is_err());
     }
 
     #[test]

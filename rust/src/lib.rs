@@ -21,7 +21,10 @@
 //!    descriptions into per-rank op programs under a pipeline schedule
 //!    ([`workload::schedule`]: GPipe / 1F1B / interleaved 1F1B), with
 //!    non-uniform partitioning ([`workload::partition`], component C1)
-//!    for heterogeneous clusters.
+//!    for heterogeneous clusters. [`workload::serve`] generates
+//!    *inference* traffic instead: request traces (explicit or seeded
+//!    Poisson) lowered to prefill/decode op streams under a KV-cache
+//!    memory model.
 //! 3. **Lower** — [`system`]: device groups, resharding (C2), the
 //!    heterogeneity-aware collective library (C3) and
 //!    [`system::compiled::CompiledWorkload`] — the dense, immutable
@@ -74,6 +77,14 @@
 //! hetsim simulate --model gpt-6.7b --cluster hetero:1,1 \
 //!     --tp 4 --pp 2 --dp 2 --schedule 1f1b
 //! hetsim plan --model gpt-6.7b --cluster hetero:1,1   # rank all plans
+//! ```
+//!
+//! Inference serving on the same cluster (DESIGN.md §27): Poisson
+//! request arrivals, continuous batching with KV-budget admission,
+//! goodput/TTFT/latency percentiles per device group:
+//!
+//! ```text
+//! hetsim serve-sim --model fig3 --cluster fig3 --policy srpt
 //! ```
 //!
 //! ## Documentation coverage

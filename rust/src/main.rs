@@ -24,6 +24,7 @@ fn usage() -> Usage {
             ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N] [--fabric rail|switch|spine:S,OS] [--schedule gpipe|1f1b|interleaved:V] [--fold auto|off] [--faults FILE] [--iterations N --threads N]"),
             ("plan", "rank TPxPPxDPxschedule plans (+ variable per-group TP layouts on hetero clusters) [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --threads N --mb-limit N (0=all) --top K --refine[=STEPS] --fold auto|off --goodput [--horizon-s S --mtbf-scale X --seed N]]"),
             ("goodput", "rank plans by effective goodput under an MTBF fault schedule [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --threads N --mb-limit N --top K --fold auto|off --horizon-s S --mtbf-scale X --seed N]"),
+            ("serve-sim", "simulate inference serving: goodput, TTFT/TBT, latency percentiles per device group: --config FILE | --model NAME --cluster SPEC [--fabric SPEC --policy fifo|srpt|wsrpt --rate R --horizon-s S --scale X --prompt-tokens N --output-tokens N --max-batch N --kv-frac F --seed N --threads N]"),
             ("bench", "planner/engine throughput ladders -> BENCH_plan.json [--quick --threads N --out FILE --baseline FILE --factor F]"),
             ("fig1", "hardware-evolution trend across generation presets"),
             ("fig5", "per-layer compute time across GPU generations [--backend native|pjrt]"),
@@ -52,6 +53,7 @@ fn run(args: &Args) -> Result<()> {
         Some("simulate") => cmd_simulate(args),
         Some("plan") => cmd_plan(args),
         Some("goodput") => cmd_goodput(args),
+        Some("serve-sim") => cmd_serve_sim(args),
         Some("bench") => cmd_bench(args),
         Some("fig1") => cmd_fig1(args),
         Some("fig5") => cmd_fig5(args),
@@ -322,6 +324,72 @@ fn cmd_goodput(args: &Args) -> Result<()> {
     println!(
         "\nbest by goodput: {} — {:.1} useful tokens/s (availability {:.4})",
         best.plan, best.goodput.goodput_tokens_per_s, best.goodput.availability
+    );
+    Ok(())
+}
+
+fn cmd_serve_sim(args: &Args) -> Result<()> {
+    use hetsim::workload::serve::{PoissonSpec, ServePolicy, ServeSpec};
+    args.check_known(&[
+        "config", "model", "cluster", "fabric", "policy", "rate", "horizon-s", "scale",
+        "prompt-tokens", "output-tokens", "max-batch", "kv-frac", "seed", "threads",
+    ])?;
+    let (model, mut cluster, mut serving) = if let Some(path) = args.opt("config") {
+        let s = loader::load_scenario_file(std::path::Path::new(path))?;
+        let serving = s.serving.ok_or_else(|| {
+            anyhow::anyhow!(
+                "scenario {path} has no \"serving\" key (or it generates no requests)"
+            )
+        })?;
+        (s.model, s.cluster, serving)
+    } else {
+        let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
+        let cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
+            args.opt_or("cluster", "hetero:1,1").to_string(),
+        ))?;
+        let serving = ServeSpec {
+            poisson: Some(PoissonSpec {
+                rate_per_s: args.opt_f64("rate", 2.0)?,
+                horizon_s: args.opt_f64("horizon-s", 20.0)?,
+                scale: args.opt_f64("scale", 1.0)?,
+                prompt_tokens: args.opt_u64("prompt-tokens", 512)?,
+                output_tokens: args.opt_u64("output-tokens", 64)?,
+            }),
+            seed: args.opt_u64("seed", 42)?,
+            ..Default::default()
+        };
+        (model, cluster, serving)
+    };
+    // flags override the cluster's (or the config file's) settings
+    if let Some(f) = args.opt("fabric") {
+        cluster.fabric = hetsim::config::cluster::FabricSpec::parse(f)?;
+    }
+    if let Some(p) = args.opt("policy") {
+        serving.policy = ServePolicy::parse(p)?;
+    }
+    serving.max_batch = args.opt_u64("max-batch", serving.max_batch as u64)? as u32;
+    serving.kv_frac = args.opt_f64("kv-frac", serving.kv_frac)?;
+    serving.validate()?;
+    let threads = args.opt_u64("threads", 0)? as usize;
+
+    let sim = hetsim::system::serve_scheduler::ServeSim::new(model, cluster, serving)?;
+    println!(
+        "# serve-sim: {} on {} ({} GPUs, fabric {}) — {} requests, policy {}\n",
+        sim.model().name,
+        sim.cluster().name,
+        sim.cluster().total_gpus(),
+        sim.cluster().fabric.name(),
+        sim.requests().len(),
+        sim.policy().name(),
+    );
+    let rep = sim.run(threads)?;
+    print!("{}", rep.render());
+    println!(
+        "\ngoodput: {} tok/s across {} requests (makespan {} s, {} engine steps)",
+        fmt_sig(rep.goodput_tok_s),
+        rep.requests_total,
+        fmt_sig(rep.makespan_s),
+        rep.events,
     );
     Ok(())
 }

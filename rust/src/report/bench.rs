@@ -22,6 +22,12 @@
 //! re-plans — on the fig3 and `hetero:1,1` scenarios, gated on
 //! plans/sec.
 //!
+//! A serving case rides along too (DESIGN.md §27): `serve_throughput`
+//! runs the `hetsim serve-sim` pipeline — seeded Poisson trace,
+//! continuous-batching event loop with KV admission — on `hetero:1,1`,
+//! gated on completed requests/sec (events/sec counts engine steps,
+//! informational).
+//!
 //! Two symmetry-folding suites ride on top (DESIGN.md §25):
 //!
 //! * `fold_speedup` — the same DP-heavy scenario evaluated with
@@ -247,13 +253,18 @@ pub fn run(quick: bool, threads: usize) -> anyhow::Result<Vec<BenchCase>> {
     //    plans/sec; events counts the ranked candidates' iterations.
     out.push(goodput_sweep_case(threads)?);
 
-    // 7. symmetry-folding head-to-head (DESIGN.md §25): the same
+    // 7. serving throughput (DESIGN.md §27): the `hetsim serve-sim`
+    //    pipeline — Poisson trace, continuous-batching loop with KV
+    //    admission — gated on completed requests/sec
+    out.push(serve_throughput_case(quick, threads)?);
+
+    // 8. symmetry-folding head-to-head (DESIGN.md §25): the same
     //    DP-heavy candidate evaluated repeatedly with fold=off and
     //    fold=auto. The gated metric is the throughput *ratio*, so the
     //    baseline floor encodes the ≥10x acceptance bar directly.
     out.push(fold_speedup_case(quick)?);
 
-    // 8. rank-scaling ladder: leaf/spine clusters up to 100k ranks,
+    // 9. rank-scaling ladder: leaf/spine clusters up to 100k ranks,
     //    fold=auto (unfolded, the 100k DP ring alone is ~2e10 flows —
     //    these rungs exist *because* of folding). Runs last and
     //    ascending so the monotone VmHWM reading is attributable.
@@ -306,6 +317,46 @@ fn goodput_sweep_case(threads: usize) -> anyhow::Result<BenchCase> {
     }
     let wall = t0.elapsed().as_secs_f64();
     Ok(case("goodput_sweep", wall, plans, events, details.join("; ")))
+}
+
+/// The `serve_throughput` case: one `hetsim serve-sim` run — seeded
+/// Poisson trace lowered through the roofline cost tables, then the
+/// sequential continuous-batching event loop with KV-budget admission.
+/// `candidates` counts completed requests (the gated rate), `events`
+/// counts engine decision steps (prefill/decode rounds, informational).
+fn serve_throughput_case(quick: bool, threads: usize) -> anyhow::Result<BenchCase> {
+    use crate::system::serve_scheduler::ServeSim;
+    use crate::workload::serve::{PoissonSpec, ServePolicy, ServeSpec};
+    let m = presets::model("gpt-6.7b")?;
+    let c = presets::cluster_hetero(1, 1)?;
+    let spec = ServeSpec {
+        poisson: Some(PoissonSpec {
+            rate_per_s: 50.0,
+            horizon_s: if quick { 10.0 } else { 40.0 },
+            scale: 1.0,
+            prompt_tokens: 256,
+            output_tokens: 32,
+        }),
+        policy: ServePolicy::Srpt,
+        seed: 42,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let sim = ServeSim::new(m, c, spec)?;
+    let rep = sim.run(threads.max(1))?;
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(case(
+        "serve_throughput",
+        wall,
+        rep.requests_total,
+        rep.events,
+        format!(
+            "{} requests srpt, {:.0} simulated tok/s, ttft p99 {:.1}ms",
+            rep.requests_total,
+            rep.goodput_tok_s,
+            rep.ttft.p99_s * 1e3
+        ),
+    ))
 }
 
 /// A DP-only scale scenario: a 4-layer GPT-shaped model data-parallel

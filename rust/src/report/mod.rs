@@ -13,13 +13,16 @@
 //! (`hetsim bench`, machine-readable `BENCH_plan.json`) and backs the
 //! CI perf-regression gate. [`goodput`] turns fault schedules
 //! ([`crate::system::failure`]) into effective-goodput rankings
-//! (`hetsim goodput`, DESIGN.md §26).
+//! (`hetsim goodput`, DESIGN.md §26). [`serve`] reports serving
+//! simulations: goodput, TTFT/TBT, and latency percentiles per device
+//! group (`hetsim serve-sim`, DESIGN.md §27).
 
 pub mod bench;
 pub mod fig1;
 pub mod fig5;
 pub mod fig6;
 pub mod goodput;
+pub mod serve;
 pub mod table1;
 
 use std::path::PathBuf;

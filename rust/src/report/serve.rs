@@ -1,0 +1,209 @@
+//! Serving report: goodput, TTFT/TBT, and request-latency percentiles
+//! per device group (DESIGN.md §27).
+//!
+//! Produced by [`crate::system::serve_scheduler::ServeSim`]; rendered
+//! by `hetsim serve-sim`. All rendering goes through
+//! [`crate::util::table`] formatting so reports are byte-identical
+//! across runs and worker-thread counts — `tests/integration_serve.rs`
+//! and the `tests/golden/serve_sim_fig3.txt` golden enforce it.
+
+use crate::util::stats::Samples;
+use crate::util::table::{fmt_sig, Table};
+use crate::workload::serve::ServePolicy;
+
+/// Latency distribution summary (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyStats {
+    /// Number of samples.
+    pub count: usize,
+    /// Arithmetic mean, seconds.
+    pub mean_s: f64,
+    /// Median, seconds.
+    pub p50_s: f64,
+    /// 95th percentile, seconds.
+    pub p95_s: f64,
+    /// 99th percentile, seconds.
+    pub p99_s: f64,
+}
+
+impl LatencyStats {
+    /// Summarize a sample set (all zeros when empty — an empty trace
+    /// renders, it does not panic).
+    pub fn of(samples: &mut Samples) -> LatencyStats {
+        LatencyStats {
+            count: samples.len(),
+            mean_s: samples.mean(),
+            p50_s: samples.percentile(50.0),
+            p95_s: samples.percentile(95.0),
+            p99_s: samples.percentile(99.0),
+        }
+    }
+
+    fn percentiles_ms(&self) -> String {
+        format!(
+            "{} / {} / {}",
+            fmt_sig(self.p50_s * 1e3),
+            fmt_sig(self.p95_s * 1e3),
+            fmt_sig(self.p99_s * 1e3)
+        )
+    }
+}
+
+/// Per-device-group serving outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeGroupReport {
+    /// Node index backing the group.
+    pub node: u32,
+    /// GPU model of the group's ranks.
+    pub gpu: String,
+    /// TP degree (= GPUs on the node).
+    pub tp: u32,
+    /// Requests completed on this group.
+    pub requests: u64,
+    /// Output tokens generated on this group.
+    pub tokens_out: u64,
+    /// Wall-clock the group's engine spent stepping, seconds.
+    pub busy_s: f64,
+    /// Peak concurrent KV residency, tokens.
+    pub kv_peak_tokens: u64,
+    /// KV admission budget, tokens.
+    pub kv_budget_tokens: u64,
+    /// Output tokens per second over the group's active window.
+    pub goodput_tok_s: f64,
+    /// Time-to-first-token distribution.
+    pub ttft: LatencyStats,
+    /// Time-between-tokens (decode cadence) distribution.
+    pub tbt: LatencyStats,
+    /// End-to-end request latency distribution.
+    pub latency: LatencyStats,
+}
+
+/// The full serving simulation report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    /// Model served.
+    pub model: String,
+    /// Cluster name.
+    pub cluster: String,
+    /// Scheduling policy used.
+    pub policy: ServePolicy,
+    /// Per-device-group breakdown, in node order.
+    pub groups: Vec<ServeGroupReport>,
+    /// Requests completed (== requests admitted; conservation is a
+    /// tested invariant).
+    pub requests_total: u64,
+    /// Total output tokens generated.
+    pub tokens_out_total: u64,
+    /// Time of the last completion, seconds from trace start.
+    pub makespan_s: f64,
+    /// Cluster-wide output tokens per second over the makespan.
+    pub goodput_tok_s: f64,
+    /// Cluster-wide time-to-first-token distribution.
+    pub ttft: LatencyStats,
+    /// Cluster-wide time-between-tokens distribution.
+    pub tbt: LatencyStats,
+    /// Cluster-wide end-to-end latency distribution.
+    pub latency: LatencyStats,
+    /// Engine steps executed across all groups.
+    pub events: u64,
+    /// Cost-model backend that priced the op streams.
+    pub evaluator: &'static str,
+}
+
+impl ServeReport {
+    /// Render the deterministic human-readable report.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!("serving: {} on {} — policy {}", self.model, self.cluster, self.policy.name()),
+            &[
+                "group",
+                "gpu",
+                "tp",
+                "requests",
+                "tokens out",
+                "busy (s)",
+                "kv peak/budget (tok)",
+                "goodput (tok/s)",
+                "ttft p50/p95/p99 (ms)",
+                "tbt p50/p95/p99 (ms)",
+                "latency p50/p95/p99 (ms)",
+            ],
+        );
+        for g in &self.groups {
+            t.row(vec![
+                format!("node{}", g.node),
+                g.gpu.clone(),
+                g.tp.to_string(),
+                g.requests.to_string(),
+                g.tokens_out.to_string(),
+                fmt_sig(g.busy_s),
+                format!("{}/{}", g.kv_peak_tokens, g.kv_budget_tokens),
+                fmt_sig(g.goodput_tok_s),
+                g.ttft.percentiles_ms(),
+                g.tbt.percentiles_ms(),
+                g.latency.percentiles_ms(),
+            ]);
+        }
+        let mut out = t.markdown();
+        out.push('\n');
+        out.push_str(&format!(
+            "requests {} | tokens out {} | makespan {} s | goodput {} tok/s | events {} | evaluator {}\n",
+            self.requests_total,
+            self.tokens_out_total,
+            fmt_sig(self.makespan_s),
+            fmt_sig(self.goodput_tok_s),
+            self.events,
+            self.evaluator,
+        ));
+        out.push_str(&format!(
+            "ttft p50/p95/p99 = {} ms | tbt p50/p95/p99 = {} ms | latency p99 = {} ms\n",
+            self.ttft.percentiles_ms(),
+            self.tbt.percentiles_ms(),
+            fmt_sig(self.latency.p99_s * 1e3),
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_stats_are_zero_and_render() {
+        let mut s = Samples::new();
+        let stats = LatencyStats::of(&mut s);
+        assert_eq!(stats.count, 0);
+        assert_eq!(stats.p99_s, 0.0);
+        let rep = ServeReport {
+            model: "gpt-6.7b".into(),
+            cluster: "hetero-1a1h".into(),
+            policy: ServePolicy::Fifo,
+            groups: vec![],
+            requests_total: 0,
+            tokens_out_total: 0,
+            makespan_s: 0.0,
+            goodput_tok_s: 0.0,
+            ttft: stats.clone(),
+            tbt: stats.clone(),
+            latency: stats,
+            events: 0,
+            evaluator: "native",
+        };
+        let text = rep.render();
+        assert!(text.contains("requests 0"));
+        assert!(text.contains("policy fifo"));
+    }
+
+    #[test]
+    fn stats_of_samples() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        let stats = LatencyStats::of(&mut s);
+        assert_eq!(stats.count, 100);
+        assert!(stats.p50_s <= stats.p95_s && stats.p95_s <= stats.p99_s);
+        assert!((stats.mean_s - 50.5).abs() < 1e-9);
+    }
+}

@@ -46,6 +46,7 @@ use crate::util::units::Time;
 use crate::workload::aicb::{self, WorkloadOptions};
 use crate::workload::op::Workload;
 use crate::workload::schedule::ScheduleKind;
+use crate::workload::serve::ServeSpec;
 
 /// How per-layer compute times are evaluated.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -70,6 +71,7 @@ pub struct SimulationBuilder {
     record_trace: bool,
     fold: FoldMode,
     faults: Option<FaultSpec>,
+    serving: Option<ServeSpec>,
 }
 
 /// The builder's inputs after framework resolution — what every build
@@ -84,6 +86,7 @@ struct ResolvedBuild {
     record_trace: bool,
     fold: FoldMode,
     faults: Option<FaultSpec>,
+    serving: Option<ServeSpec>,
 }
 
 impl SimulationBuilder {
@@ -104,6 +107,7 @@ impl SimulationBuilder {
             record_trace: false,
             fold: FoldMode::Off,
             faults: None,
+            serving: None,
         }
     }
 
@@ -188,6 +192,19 @@ impl SimulationBuilder {
         self
     }
 
+    /// Attach a serving workload ([`crate::workload::serve`],
+    /// DESIGN.md §27), runnable via [`Simulation::run_serve`]. An empty
+    /// spec normalizes to no spec, so the serving layer is strictly
+    /// zero-cost when unused: byte-identical training reports and
+    /// unchanged evaluation cache keys. A non-empty spec fingerprints
+    /// into the eval key (cached [`EvalScore`]s never alias a training
+    /// run with a serving run on the same cluster shape) and refuses
+    /// symmetry folding, mirroring the fault layer.
+    pub fn serving(mut self, spec: Option<ServeSpec>) -> Self {
+        self.serving = spec.filter(|s| !s.is_empty());
+        self
+    }
+
     /// Resolve the parallelism degrees and device-group mapping.
     fn resolve(self) -> anyhow::Result<ResolvedBuild> {
         let par = match self.parallelism {
@@ -205,6 +222,13 @@ impl SimulationBuilder {
             s.validate()?;
             fw.schedule = s;
         }
+        // A serving workload refuses symmetry folding the same way
+        // faults do: its per-node device groups are stateful and
+        // independently paced, so no two are provably interchangeable.
+        // Forcing `Off` here makes fold=auto bit-identical to fold=off
+        // under serving for every build path (the fold-interaction
+        // guard in tests/integration_serve.rs).
+        let fold = if self.serving.is_some() { FoldMode::Off } else { self.fold };
         Ok(ResolvedBuild {
             model: self.model,
             cluster: self.cluster,
@@ -213,8 +237,9 @@ impl SimulationBuilder {
             cost_backend: self.cost_backend,
             ring_policy: self.ring_policy,
             record_trace: self.record_trace,
-            fold: self.fold,
+            fold,
             faults: self.faults,
+            serving: self.serving,
         })
     }
 
@@ -224,6 +249,9 @@ impl SimulationBuilder {
         let r = self.resolve()?;
         if let Some(spec) = &r.faults {
             spec.validate(&r.cluster)?;
+        }
+        if let Some(spec) = &r.serving {
+            spec.validate()?;
         }
         let plan =
             fold::classify_with_faults(&r.cluster, &r.framework, r.fold, r.faults.as_ref());
@@ -248,6 +276,7 @@ impl SimulationBuilder {
             ring_policy: r.ring_policy,
             record_trace: r.record_trace,
             faults: r.faults,
+            serving: r.serving,
         })
     }
 
@@ -268,7 +297,17 @@ impl SimulationBuilder {
         if let Some(spec) = &r.faults {
             spec.validate(&r.cluster)?;
         }
-        let key = eval_key(&r.framework, &r.options, r.ring_policy, r.fold, r.faults.as_ref());
+        if let Some(spec) = &r.serving {
+            spec.validate()?;
+        }
+        let key = eval_key(
+            &r.framework,
+            &r.options,
+            r.ring_policy,
+            r.fold,
+            r.faults.as_ref(),
+            r.serving.as_ref(),
+        );
         let prepared = ctx.prepare(&r, &key)?;
         Ok(Simulation {
             model: r.model,
@@ -281,6 +320,7 @@ impl SimulationBuilder {
             ring_policy: r.ring_policy,
             record_trace: r.record_trace,
             faults: r.faults,
+            serving: r.serving,
         })
     }
 
@@ -305,7 +345,17 @@ impl SimulationBuilder {
         if let Some(spec) = &r.faults {
             spec.validate(&r.cluster)?;
         }
-        let key = eval_key(&r.framework, &r.options, r.ring_policy, r.fold, r.faults.as_ref());
+        if let Some(spec) = &r.serving {
+            spec.validate()?;
+        }
+        let key = eval_key(
+            &r.framework,
+            &r.options,
+            r.ring_policy,
+            r.fold,
+            r.faults.as_ref(),
+            r.serving.as_ref(),
+        );
         if let Some(s) = ctx.scores.lock().unwrap().get(&key).copied() {
             ctx.score_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(s);
@@ -330,17 +380,22 @@ impl SimulationBuilder {
 /// fingerprint plus every knob that changes the generated workload, its
 /// compilation, or its simulated timeline. `Off` keys are unchanged
 /// from the pre-folding layout so folded and unfolded cores never
-/// alias, and the fault fingerprint is empty for empty specs so
-/// fault-free keys are unchanged from the pre-failure layout.
+/// alias, and the fault and serving fingerprints are empty for empty
+/// specs so fault-free, serving-free keys are unchanged from the
+/// earlier layouts. The serving suffix exists so a cached [`EvalScore`]
+/// of a training candidate can never alias a serving-annotated
+/// candidate sharing the same cluster shape (regression-tested by
+/// `serving_spec_changes_eval_key` below).
 fn eval_key(
     fw: &FrameworkSpec,
     opts: &WorkloadOptions,
     ring: RingPolicy,
     fold: FoldMode,
     faults: Option<&FaultSpec>,
+    serving: Option<&ServeSpec>,
 ) -> String {
     format!(
-        "{}|mb{}|o{}{}{}|{ring:?}{}{}",
+        "{}|mb{}|o{}{}{}|{ring:?}{}{}{}",
         fw.fingerprint(),
         opts.microbatch_limit.map(|l| l.to_string()).unwrap_or_else(|| "all".into()),
         opts.include_other as u8,
@@ -351,6 +406,7 @@ fn eval_key(
             FoldMode::Auto => "|fold",
         },
         faults.map(|f| f.fingerprint()).unwrap_or_default(),
+        serving.map(|s| s.fingerprint()).unwrap_or_default(),
     )
 }
 
@@ -601,6 +657,9 @@ pub struct Simulation {
     /// vetoed folding at build time, so mutating it after the fact
     /// could silently disagree with the compiled plan.
     faults: Option<FaultSpec>,
+    /// Attached serving workload; private for the same reason as
+    /// `faults` — a non-empty spec vetoed folding at build time.
+    serving: Option<ServeSpec>,
 }
 
 impl Simulation {
@@ -645,6 +704,29 @@ impl Simulation {
     /// (`None` when the fault layer is off).
     pub fn fault_spec(&self) -> Option<&FaultSpec> {
         self.faults.as_ref()
+    }
+
+    /// The serving workload this simulation was built with (`None` when
+    /// the serving layer is off).
+    pub fn serving_spec(&self) -> Option<&ServeSpec> {
+        self.serving.as_ref()
+    }
+
+    /// Run the attached serving trace to completion
+    /// ([`crate::system::serve_scheduler::ServeSim`], DESIGN.md §27).
+    /// `threads` parallelizes the per-group cost-table build only — the
+    /// report is byte-identical for any value. Errors when no serving
+    /// spec was attached ([`SimulationBuilder::serving`]).
+    pub fn run_serve(&self, threads: usize) -> anyhow::Result<crate::report::serve::ServeReport> {
+        let spec = self.serving.clone().ok_or_else(|| {
+            anyhow::anyhow!("no serving workload attached; use SimulationBuilder::serving")
+        })?;
+        crate::system::serve_scheduler::ServeSim::new(
+            self.model.clone(),
+            self.cluster.clone(),
+            spec,
+        )?
+        .run(threads)
     }
 }
 
@@ -981,6 +1063,76 @@ mod tests {
         assert_eq!(ctx.build_cache_misses(), 2);
         assert!(other.iteration_time > Time::ZERO);
         assert!(ctx.cost_entries() > 0);
+    }
+
+    #[test]
+    fn serving_spec_changes_eval_key() {
+        // Regression: eval keys once fingerprinted only
+        // schedule/faults/fold, so a serving-annotated candidate aliased
+        // the training candidate of the same shape and returned its
+        // cached EvalScore. The serving fingerprint suffix must split
+        // them — and an empty spec must not.
+        use crate::workload::serve::PoissonSpec;
+        let (m, c) = ctx_inputs();
+        let ctx = EvalContext::new(&m, &c).unwrap();
+        let mk = || {
+            SimulationBuilder::new(m.clone(), c.clone())
+                .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+        };
+        let serving = ServeSpec {
+            poisson: Some(PoissonSpec { rate_per_s: 1.0, horizon_s: 1.0, ..Default::default() }),
+            ..Default::default()
+        };
+        mk().score_with_context(&ctx).unwrap();
+        mk().score_with_context(&ctx).unwrap();
+        assert_eq!(ctx.score_cache_hits(), 1);
+        // an explicitly-empty spec normalizes away: still the same key
+        mk().serving(Some(ServeSpec::default())).score_with_context(&ctx).unwrap();
+        assert_eq!(ctx.score_cache_hits(), 2, "empty serving spec must not change the key");
+        // a non-empty spec must miss (no aliasing with the training score)
+        mk().serving(Some(serving.clone())).score_with_context(&ctx).unwrap();
+        assert_eq!(ctx.score_cache_hits(), 2, "serving candidate aliased the training score");
+        // ...and be cached under its own key
+        mk().serving(Some(serving.clone())).score_with_context(&ctx).unwrap();
+        assert_eq!(ctx.score_cache_hits(), 3);
+        // distinct serving specs get distinct keys
+        let mut other = serving;
+        other.seed += 1;
+        mk().serving(Some(other)).score_with_context(&ctx).unwrap();
+        assert_eq!(ctx.score_cache_hits(), 3);
+    }
+
+    #[test]
+    fn serving_refuses_fold_and_run_serve_works() {
+        use crate::workload::serve::{PoissonSpec, Request};
+        let serving = ServeSpec {
+            requests: vec![Request {
+                arrival_s: 0.0,
+                prompt_tokens: 64,
+                output_tokens: 8,
+                weight: 1.0,
+            }],
+            poisson: Some(PoissonSpec { rate_per_s: 2.0, horizon_s: 1.0, ..Default::default() }),
+            ..Default::default()
+        };
+        let sim = tiny(presets::cluster("ampere", 2).unwrap())
+            .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+            .fold(FoldMode::Auto)
+            .serving(Some(serving))
+            .build()
+            .unwrap();
+        assert!(!sim.folded(), "serving must veto symmetry folding");
+        assert!(sim.serving_spec().is_some());
+        let rep = sim.run_serve(1).unwrap();
+        assert!(rep.requests_total >= 1);
+        // and a fold-less training iteration still runs on the side
+        assert!(sim.run_iteration().unwrap().iteration_time > Time::ZERO);
+        // no spec attached -> run_serve is an error, not a panic
+        let plain = tiny(presets::cluster("ampere", 2).unwrap())
+            .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+            .build()
+            .unwrap();
+        assert!(plain.run_serve(1).is_err());
     }
 
     #[test]

@@ -22,6 +22,10 @@
 //! * [`scheduler`] — the per-rank program executor: runs compute ops,
 //!   blocks on collectives/receives, coordinates the compute and
 //!   network simulators over one training iteration.
+//! * [`serve_scheduler`] — the request-level serving scheduler:
+//!   continuous batching with KV-budget admission control and
+//!   pluggable policies (fifo/srpt/wsrpt) over per-node device groups
+//!   (DESIGN.md §27).
 
 pub mod collective;
 pub mod compiled;
@@ -30,6 +34,7 @@ pub mod failure;
 pub mod fold;
 pub mod resharding;
 pub mod scheduler;
+pub mod serve_scheduler;
 
 pub use collective::{CollectiveAlgo, CollectiveDef, CollectiveExec, CommKind};
 pub use compiled::{CompiledWorkload, DenseOp};
@@ -38,3 +43,4 @@ pub use failure::{FaultKind, FaultReport, FaultSpec};
 pub use fold::{FoldMode, FoldPlan};
 pub use resharding::{needs_resharding, ReshardPlan};
 pub use scheduler::{Scheduler, SchedulerReport};
+pub use serve_scheduler::ServeSim;

@@ -1,0 +1,550 @@
+//! Request-level serving scheduler (DESIGN.md §27): continuous
+//! batching with KV-budget admission control over the per-node device
+//! groups of a (possibly heterogeneous) cluster.
+//!
+//! # Request lifecycle
+//!
+//! Requests arrive on a shared queue ([`ServeSpec::materialize`] fixes
+//! their **arrival index**, the global tie-breaker). Each per-node
+//! group runs its own engine clock. When a group acts it first admits:
+//! arrived, unadmitted requests are ordered by the policy key (`fifo`:
+//! arrival index; `srpt`: total tokens then index; `wsrpt`:
+//! tokens/weight then index) and admitted while the batch has a slot
+//! and the request's full KV footprint (prompt + all output tokens,
+//! [`Request::kv_tokens`]) fits the group's remaining budget. Reserving
+//! the footprint up front means an admitted request can never be
+//! evicted mid-flight — admission is the only control point, which
+//! keeps the conservation invariant (`tests/properties.rs`) trivial to
+//! state: every admitted request completes exactly once.
+//!
+//! The engine step is the vLLM-style continuous-batching cycle: if any
+//! resident request still needs prefill, the step runs those prefills
+//! back-to-back (each emits its first token at step end — prefill
+//! stalls decode, the classic TTFT/TBT trade this simulator makes
+//! visible); otherwise the step decodes one token for the entire
+//! resident batch at the batched-roofline cost
+//! ([`crate::workload::serve::decode_works`]).
+//!
+//! # Determinism argument
+//!
+//! The only parallelism is the per-group cost-table build through
+//! [`parallel_map`], which is pure per index; the event loop itself is
+//! sequential with a total order on (act time, group index) and
+//! (policy key, arrival index). Reports are therefore byte-identical
+//! across `--threads` values — enforced by
+//! `tests/integration_serve.rs` and the serve-sim golden.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::compute::table::CostTable;
+use crate::config::cluster::ClusterSpec;
+use crate::config::model::ModelSpec;
+use crate::report::serve::{LatencyStats, ServeGroupReport, ServeReport};
+use crate::util::par::parallel_map;
+use crate::util::stats::Samples;
+use crate::workload::serve::{
+    decode_works, prefill_works, serve_groups, Request, ServeGroup, ServePolicy, ServeSpec,
+};
+
+/// A serving simulation: a materialized request trace bound to the
+/// per-node device groups of a cluster.
+#[derive(Debug, Clone)]
+pub struct ServeSim {
+    model: ModelSpec,
+    cluster: ClusterSpec,
+    spec: ServeSpec,
+    requests: Vec<Request>,
+    groups: Vec<ServeGroup>,
+}
+
+/// Per-group pricing: step costs in seconds, precomputed from the cost
+/// tables so the event loop is pure arithmetic.
+struct GroupCost {
+    /// prompt length (tokens) → full prefill pass, seconds.
+    prefill_s: HashMap<u64, f64>,
+    /// batch size → one decode step, seconds (index 0 unused).
+    decode_s: Vec<f64>,
+    evaluator: &'static str,
+}
+
+struct InFlight {
+    id: usize,
+    prefilled: bool,
+    generated: u64,
+    first_token_s: f64,
+}
+
+#[derive(Clone, Copy)]
+struct Completion {
+    group: usize,
+    first_token_s: f64,
+    completed_s: f64,
+}
+
+impl ServeSim {
+    /// Bind a serving spec to a model and cluster: validates both,
+    /// materializes the request trace, derives the per-node device
+    /// groups and KV budgets, and rejects traces containing a request
+    /// whose KV footprint fits no group (it could never be admitted).
+    pub fn new(model: ModelSpec, cluster: ClusterSpec, spec: ServeSpec) -> anyhow::Result<ServeSim> {
+        model.validate()?;
+        cluster.validate()?;
+        spec.validate()?;
+        let groups = serve_groups(&model, &cluster, spec.kv_frac)?;
+        let requests = spec.materialize();
+        let max_budget = groups.iter().map(|g| g.kv_budget_tokens).max().unwrap_or(0);
+        for (i, r) in requests.iter().enumerate() {
+            anyhow::ensure!(
+                r.kv_tokens() <= max_budget,
+                "serving: request {i} needs {} KV tokens but the largest group budget is {}",
+                r.kv_tokens(),
+                max_budget
+            );
+        }
+        Ok(ServeSim { model, cluster, spec, requests, groups })
+    }
+
+    /// The materialized trace, in arrival-index order.
+    pub fn requests(&self) -> &[Request] {
+        &self.requests
+    }
+
+    /// The device groups (and their KV budgets) the trace runs on.
+    pub fn groups(&self) -> &[ServeGroup] {
+        &self.groups
+    }
+
+    /// The model being served.
+    pub fn model(&self) -> &ModelSpec {
+        &self.model
+    }
+
+    /// The cluster the trace runs on.
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.cluster
+    }
+
+    /// The request-level scheduling policy in effect.
+    pub fn policy(&self) -> ServePolicy {
+        self.spec.policy
+    }
+
+    /// Price every (group × prompt length × batch size) the loop can
+    /// touch. Pure per group index, so `parallel_map` keeps the result
+    /// byte-identical for any thread count.
+    fn price(&self, threads: usize) -> anyhow::Result<Vec<GroupCost>> {
+        let prompts: BTreeSet<u64> = self.requests.iter().map(|r| r.prompt_tokens).collect();
+        let max_batch = self.spec.max_batch.min(self.requests.len().max(1) as u32);
+        let costs = parallel_map(self.groups.len(), threads, |gi| {
+            let g = &self.groups[gi];
+            let gpu = &self.cluster.nodes[g.node as usize].gpu;
+            let mut table = CostTable::native();
+            for &p in &prompts {
+                for (w, _) in prefill_works(&self.model, p, g.tp) {
+                    table.register(&w, gpu);
+                }
+            }
+            for b in 1..=max_batch {
+                for (w, _) in decode_works(&self.model, b, g.tp) {
+                    table.register(&w, gpu);
+                }
+            }
+            table.evaluate()?;
+            let mut prefill_s = HashMap::new();
+            for &p in &prompts {
+                let mut t = 0.0;
+                for (w, n) in prefill_works(&self.model, p, g.tp) {
+                    t += table.time(&w, gpu)?.as_secs() * n as f64;
+                }
+                prefill_s.insert(p, t);
+            }
+            let mut decode_s = vec![0.0];
+            for b in 1..=max_batch {
+                let mut t = 0.0;
+                for (w, n) in decode_works(&self.model, b, g.tp) {
+                    t += table.time(&w, gpu)?.as_secs() * n as f64;
+                }
+                decode_s.push(t);
+            }
+            Ok(GroupCost { prefill_s, decode_s, evaluator: table.evaluator_name() })
+        });
+        costs.into_iter().collect()
+    }
+
+    /// Run the trace to completion and report. `threads` parallelizes
+    /// the cost-table build only; the result is byte-identical for any
+    /// value (0 = all cores).
+    pub fn run(&self, threads: usize) -> anyhow::Result<ServeReport> {
+        let n = self.requests.len();
+        let costs = self.price(threads)?;
+        let evaluator = costs.first().map(|c| c.evaluator).unwrap_or("native");
+
+        struct GroupState {
+            t: f64,
+            running: Vec<InFlight>,
+            kv_used: u64,
+            kv_peak: u64,
+            busy_s: f64,
+            steps: u64,
+        }
+        let mut gs: Vec<GroupState> = self
+            .groups
+            .iter()
+            .map(|_| GroupState {
+                t: 0.0,
+                running: Vec::new(),
+                kv_used: 0,
+                kv_peak: 0,
+                busy_s: 0.0,
+                steps: 0,
+            })
+            .collect();
+        let mut admitted = vec![false; n];
+        let mut done: Vec<Option<Completion>> = vec![None; n];
+        let mut completed = 0usize;
+
+        while completed < n {
+            // Acting group: the smallest (act time, group index). A busy
+            // group acts at its clock; an idle group acts when the
+            // earliest unadmitted request that fits its budget arrives.
+            let mut acting: Option<(f64, usize)> = None;
+            for (gi, st) in gs.iter().enumerate() {
+                let act = if st.running.is_empty() {
+                    let next = self
+                        .requests
+                        .iter()
+                        .enumerate()
+                        .filter(|(id, r)| {
+                            !admitted[*id] && r.kv_tokens() <= self.groups[gi].kv_budget_tokens
+                        })
+                        .map(|(_, r)| r.arrival_s)
+                        .fold(f64::INFINITY, f64::min);
+                    if next.is_infinite() {
+                        continue; // nothing this group could ever serve
+                    }
+                    st.t.max(next)
+                } else {
+                    st.t
+                };
+                let better = match acting {
+                    None => true,
+                    Some((best, _)) => act < best,
+                };
+                if better {
+                    acting = Some((act, gi));
+                }
+            }
+            let (now, gi) = acting.expect("requests pending but no group can act");
+            let budget = self.groups[gi].kv_budget_tokens;
+            let st = &mut gs[gi];
+            st.t = now;
+
+            // Admission: policy-ordered over arrived, unadmitted requests.
+            let mut candidates: Vec<usize> = (0..n)
+                .filter(|&id| !admitted[id] && self.requests[id].arrival_s <= st.t)
+                .collect();
+            match self.spec.policy {
+                ServePolicy::Fifo => {} // already in arrival-index order
+                ServePolicy::Srpt => candidates.sort_by_key(|&id| (self.requests[id].kv_tokens(), id)),
+                ServePolicy::Wsrpt => candidates.sort_by(|&a, &b| {
+                    let ka = self.requests[a].kv_tokens() as f64 / self.requests[a].weight;
+                    let kb = self.requests[b].kv_tokens() as f64 / self.requests[b].weight;
+                    ka.total_cmp(&kb).then(a.cmp(&b))
+                }),
+            }
+            for id in candidates {
+                if st.running.len() >= self.spec.max_batch as usize {
+                    break;
+                }
+                let need = self.requests[id].kv_tokens();
+                if st.kv_used + need > budget {
+                    continue; // reserve-in-full admission control
+                }
+                admitted[id] = true;
+                st.kv_used += need;
+                st.kv_peak = st.kv_peak.max(st.kv_used);
+                st.running.push(InFlight { id, prefilled: false, generated: 0, first_token_s: 0.0 });
+            }
+            if st.running.is_empty() {
+                // Arrived candidates exist but none fit this group right
+                // now; jump past this instant so another group (or a
+                // later arrival) gets picked next turn.
+                let next = self
+                    .requests
+                    .iter()
+                    .enumerate()
+                    .filter(|(id, r)| !admitted[*id] && r.arrival_s > st.t)
+                    .map(|(_, r)| r.arrival_s)
+                    .fold(f64::INFINITY, f64::min);
+                anyhow::ensure!(
+                    next.is_finite(),
+                    "serving: deadlock — pending requests fit no group's free KV budget"
+                );
+                st.t = next;
+                continue;
+            }
+
+            // Engine step: pending prefills first, else one batched
+            // decode token for every resident request.
+            let cost = &costs[gi];
+            let step_s = if st.running.iter().any(|f| !f.prefilled) {
+                st.running
+                    .iter()
+                    .filter(|f| !f.prefilled)
+                    .map(|f| cost.prefill_s[&self.requests[f.id].prompt_tokens])
+                    .sum()
+            } else {
+                cost.decode_s[st.running.len()]
+            };
+            let end = st.t + step_s;
+            let mut retired = Vec::new();
+            for (slot, f) in st.running.iter_mut().enumerate() {
+                if !f.prefilled {
+                    f.prefilled = true;
+                    f.generated = 1;
+                    f.first_token_s = end;
+                } else {
+                    f.generated += 1;
+                }
+                if f.generated >= self.requests[f.id].output_tokens {
+                    retired.push(slot);
+                }
+            }
+            for &slot in retired.iter().rev() {
+                let f = st.running.remove(slot);
+                st.kv_used -= self.requests[f.id].kv_tokens();
+                done[f.id] =
+                    Some(Completion { group: gi, first_token_s: f.first_token_s, completed_s: end });
+                completed += 1;
+            }
+            st.t = end;
+            st.busy_s += step_s;
+            st.steps += 1;
+        }
+
+        // Assemble the report (all-zero when the trace is empty).
+        let mut ttft_all = Samples::new();
+        let mut tbt_all = Samples::new();
+        let mut lat_all = Samples::new();
+        let mut groups_out = Vec::with_capacity(self.groups.len());
+        let mut tokens_total = 0u64;
+        let mut makespan = 0.0f64;
+        for (gi, g) in self.groups.iter().enumerate() {
+            let mut ttft = Samples::new();
+            let mut tbt = Samples::new();
+            let mut lat = Samples::new();
+            let mut requests = 0u64;
+            let mut tokens = 0u64;
+            let mut last = 0.0f64;
+            for (id, c) in done.iter().enumerate() {
+                let c = match c {
+                    Some(c) if c.group == gi => c,
+                    _ => continue,
+                };
+                let r = &self.requests[id];
+                requests += 1;
+                tokens += r.output_tokens;
+                last = last.max(c.completed_s);
+                ttft.push(c.first_token_s - r.arrival_s);
+                lat.push(c.completed_s - r.arrival_s);
+                if r.output_tokens > 1 {
+                    tbt.push((c.completed_s - c.first_token_s) / (r.output_tokens - 1) as f64);
+                }
+            }
+            ttft_all.extend(ttft.values().iter().copied());
+            tbt_all.extend(tbt.values().iter().copied());
+            lat_all.extend(lat.values().iter().copied());
+            tokens_total += tokens;
+            makespan = makespan.max(last);
+            groups_out.push(ServeGroupReport {
+                node: g.node,
+                gpu: g.gpu.clone(),
+                tp: g.tp,
+                requests,
+                tokens_out: tokens,
+                busy_s: gs[gi].busy_s,
+                kv_peak_tokens: gs[gi].kv_peak,
+                kv_budget_tokens: g.kv_budget_tokens,
+                goodput_tok_s: if last > 0.0 { tokens as f64 / last } else { 0.0 },
+                ttft: LatencyStats::of(&mut ttft),
+                tbt: LatencyStats::of(&mut tbt),
+                latency: LatencyStats::of(&mut lat),
+            });
+        }
+        Ok(ServeReport {
+            model: self.model.name.clone(),
+            cluster: self.cluster.name.clone(),
+            policy: self.spec.policy,
+            groups: groups_out,
+            requests_total: completed as u64,
+            tokens_out_total: tokens_total,
+            makespan_s: makespan,
+            goodput_tok_s: if makespan > 0.0 { tokens_total as f64 / makespan } else { 0.0 },
+            ttft: LatencyStats::of(&mut ttft_all),
+            tbt: LatencyStats::of(&mut tbt_all),
+            latency: LatencyStats::of(&mut lat_all),
+            events: gs.iter().map(|s| s.steps).sum(),
+            evaluator,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::workload::serve::PoissonSpec;
+
+    fn sim(spec: ServeSpec) -> ServeSim {
+        ServeSim::new(
+            presets::model("gpt-6.7b").unwrap(),
+            presets::cluster_hetero(1, 1).unwrap(),
+            spec,
+        )
+        .unwrap()
+    }
+
+    fn req(arrival_s: f64, prompt: u64, output: u64, weight: f64) -> Request {
+        Request { arrival_s, prompt_tokens: prompt, output_tokens: output, weight }
+    }
+
+    #[test]
+    fn conservation_and_thread_invariance() {
+        let spec = ServeSpec {
+            poisson: Some(PoissonSpec {
+                rate_per_s: 8.0,
+                horizon_s: 4.0,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let s = sim(spec);
+        let rep = s.run(1).unwrap();
+        assert_eq!(rep.requests_total as usize, s.requests().len());
+        assert_eq!(
+            rep.groups.iter().map(|g| g.requests).sum::<u64>(),
+            rep.requests_total
+        );
+        assert!(rep.goodput_tok_s > 0.0);
+        assert!(rep.ttft.p50_s > 0.0);
+        for g in &rep.groups {
+            assert!(g.kv_peak_tokens <= g.kv_budget_tokens);
+        }
+        let one = rep.render();
+        for threads in [4, 8] {
+            assert_eq!(one, s.run(threads).unwrap().render(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_trace_reports_empty() {
+        let s = sim(ServeSpec {
+            poisson: Some(PoissonSpec { rate_per_s: 1.0, horizon_s: 2.0, scale: 0.0, ..Default::default() }),
+            ..Default::default()
+        });
+        assert!(s.requests().is_empty());
+        let rep = s.run(1).unwrap();
+        assert_eq!(rep.requests_total, 0);
+        assert_eq!(rep.events, 0);
+        assert_eq!(rep.goodput_tok_s, 0.0);
+        rep.render(); // must not panic
+    }
+
+    #[test]
+    fn srpt_overtakes_fifo() {
+        // One long request ahead of several short ones, all at t=0 so
+        // both policies see the same candidate set at first admission;
+        // max_batch=1 serializes each engine so ordering is visible.
+        let mut requests = vec![req(0.0, 512, 64, 1.0)];
+        for _ in 0..4 {
+            requests.push(req(0.0, 32, 4, 1.0));
+        }
+        let run = |policy| {
+            let s = sim(ServeSpec { requests: requests.clone(), policy, max_batch: 1, ..Default::default() });
+            s.run(1).unwrap()
+        };
+        let fifo = run(ServePolicy::Fifo);
+        let srpt = run(ServePolicy::Srpt);
+        assert_eq!(fifo.requests_total, srpt.requests_total);
+        // SRPT lets the short requests jump the long one => lower p50
+        // latency; FIFO keeps arrival order.
+        assert!(
+            srpt.latency.p50_s < fifo.latency.p50_s,
+            "srpt p50 {} !< fifo p50 {}",
+            srpt.latency.p50_s,
+            fifo.latency.p50_s
+        );
+        assert_ne!(fifo.render(), srpt.render());
+    }
+
+    #[test]
+    fn wsrpt_respects_weight() {
+        // Two identical-size requests at t=0, one heavily weighted; a
+        // third long request occupies slot 1 first.
+        let requests = vec![
+            req(0.0, 256, 32, 1.0),
+            req(0.001, 64, 8, 1.0),
+            req(0.002, 64, 8, 100.0), // urgent: tokens/weight tiny
+        ];
+        let s = sim(ServeSpec {
+            requests,
+            policy: ServePolicy::Wsrpt,
+            max_batch: 1,
+            ..Default::default()
+        });
+        let rep = s.run(1).unwrap();
+        assert_eq!(rep.requests_total, 3);
+        // Both nodes are idle at t=0, so requests spread across groups;
+        // the invariant we can assert without pinning the layout is
+        // completion conservation + a rendered report.
+        assert!(rep.render().contains("policy wsrpt"));
+    }
+
+    #[test]
+    fn admission_respects_kv_budget_and_batch_cap() {
+        let requests: Vec<Request> = (0..6).map(|i| req(i as f64 * 1e-4, 128, 8, 1.0)).collect();
+        let s = sim(ServeSpec { requests, max_batch: 2, ..Default::default() });
+        let rep = s.run(1).unwrap();
+        assert_eq!(rep.requests_total, 6);
+        for g in &rep.groups {
+            // max_batch=2 with 136-token footprints: peak residency can
+            // never exceed 2 footprints.
+            assert!(g.kv_peak_tokens <= 2 * 136, "{}", g.kv_peak_tokens);
+        }
+    }
+
+    #[test]
+    fn oversized_request_is_rejected_up_front() {
+        let err = ServeSim::new(
+            presets::model("gpt-6.7b").unwrap(),
+            presets::cluster_hetero(1, 1).unwrap(),
+            ServeSpec {
+                requests: vec![req(0.0, 10_000_000, 10_000_000, 1.0)],
+                ..Default::default()
+            },
+        );
+        assert!(err.is_err());
+        let msg = err.err().unwrap().to_string();
+        assert!(msg.contains("largest group budget"), "{msg}");
+    }
+
+    #[test]
+    fn heterogeneous_groups_pace_independently() {
+        // Saturating load: the H100 group should finish more tokens
+        // than the A100 group over the same horizon.
+        let spec = ServeSpec {
+            poisson: Some(PoissonSpec { rate_per_s: 100.0, horizon_s: 2.0, ..Default::default() }),
+            ..Default::default()
+        };
+        let s = sim(spec);
+        let rep = s.run(0).unwrap();
+        let a100 = rep.groups.iter().find(|g| g.gpu == "A100").unwrap();
+        let h100 = rep.groups.iter().find(|g| g.gpu == "H100").unwrap();
+        assert!(
+            h100.tokens_out > a100.tokens_out,
+            "H100 {} !> A100 {}",
+            h100.tokens_out,
+            a100.tokens_out
+        );
+    }
+}

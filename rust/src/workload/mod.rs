@@ -16,14 +16,20 @@
 //! * [`parser`] — workload-trace file format (write + parse; the
 //!   "custom parser that registers the compute and communication
 //!   events based on the device group's workload file").
+//! * [`serve`] — the inference serving workload generator: request
+//!   traces (explicit or seeded open-loop Poisson), prefill/decode op
+//!   lowering, and the KV-cache memory model bounding concurrent
+//!   residency per device group (DESIGN.md §27).
 
 pub mod aicb;
 pub mod op;
 pub mod parser;
 pub mod partition;
 pub mod schedule;
+pub mod serve;
 
 pub use aicb::{generate, WorkloadOptions};
 pub use op::{Op, RankProgram, Workload};
 pub use partition::plan_hetero;
 pub use schedule::{PipelineSchedule, ScheduleKind};
+pub use serve::{Request, ServePolicy, ServeSpec};

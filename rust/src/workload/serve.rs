@@ -1,0 +1,663 @@
+//! Inference serving workload generator (DESIGN.md §27, ROADMAP
+//! item 2): request traces for the serving scheduler.
+//!
+//! A [`ServeSpec`] describes serving traffic the same way
+//! [`crate::system::failure::FaultSpec`] describes faults — as plain
+//! data riding the scenario JSON (`"serving"` key) or built in code:
+//!
+//! * **explicit requests** — a trace of [`Request`]s with arrival time,
+//!   prompt/output token counts, and a weight for weighted policies;
+//! * **Poisson arrivals** — a seeded open-loop generator
+//!   ([`poisson_trace`]) drawing exponential inter-arrival gaps. Like
+//!   the PR-7 MTBF schedules, the draw uses **nested thinning**: every
+//!   candidate arrival is drawn at the capped maximum rate
+//!   ([`RATE_SCALE_CAP`] × the base rate) with *all* of its attributes,
+//!   then kept with probability `scale / RATE_SCALE_CAP` from a
+//!   per-candidate coin — so a lower-scale trace is an exact subset of
+//!   a higher-scale one for the same seed
+//!   (`tests/properties.rs::prop_serve_poisson_subset_across_rate_scales`).
+//!
+//! Each request lowers into a **prefill** op stream (one compute-bound
+//! full-prompt forward pass, [`prefill_works`]) plus an iterative
+//! **decode** stream (one memory-bandwidth-bound token step per output
+//! token, [`decode_works`]), both priced through the existing per-arch
+//! cost tables. Concurrent residency is bounded by the KV-cache memory
+//! model: [`kv_bytes_per_token`] per resident token, against the
+//! per-device-group budget [`serve_groups`] derives from GPU memory
+//! capacity minus the model weights.
+
+use crate::compute::cost::LayerWork;
+use crate::config::cluster::ClusterSpec;
+use crate::config::model::{LayerKind, ModelSpec};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Cap on the Poisson rate-scale factor. Candidate arrivals are drawn
+/// at `RATE_SCALE_CAP × rate_per_s` and thinned down, mirroring
+/// `system::failure::SCALE_CAP`, so traces at different scales nest.
+pub const RATE_SCALE_CAP: f64 = 16.0;
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Arrival time, seconds from the start of the trace.
+    pub arrival_s: f64,
+    /// Prompt length in tokens (prefill work).
+    pub prompt_tokens: u64,
+    /// Tokens to generate (decode steps).
+    pub output_tokens: u64,
+    /// Priority weight for weighted policies (`wsrpt` divides the
+    /// remaining-work key by it; higher = more urgent).
+    pub weight: f64,
+}
+
+impl Request {
+    /// Peak KV-cache residency of this request in tokens: the full
+    /// prompt plus every generated token stays resident until the
+    /// request retires (reserved in full at admission so a running
+    /// request can never be evicted mid-flight).
+    pub fn kv_tokens(&self) -> u64 {
+        self.prompt_tokens + self.output_tokens
+    }
+}
+
+/// Request-level scheduling policy of the serving scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServePolicy {
+    /// First-in-first-out by arrival index.
+    #[default]
+    Fifo,
+    /// Shortest remaining processing time (total tokens), arrival-index
+    /// tie-break.
+    Srpt,
+    /// Weighted SRPT: remaining tokens divided by the request weight.
+    Wsrpt,
+}
+
+impl ServePolicy {
+    /// Parse the CLI / scenario shorthand: `fifo | srpt | wsrpt`.
+    pub fn parse(s: &str) -> anyhow::Result<ServePolicy> {
+        match s {
+            "fifo" => Ok(ServePolicy::Fifo),
+            "srpt" => Ok(ServePolicy::Srpt),
+            "wsrpt" => Ok(ServePolicy::Wsrpt),
+            other => anyhow::bail!("unknown serving policy '{other}' (want fifo | srpt | wsrpt)"),
+        }
+    }
+
+    /// Display name in the grammar [`ServePolicy::parse`] accepts.
+    pub fn name(self) -> &'static str {
+        match self {
+            ServePolicy::Fifo => "fifo",
+            ServePolicy::Srpt => "srpt",
+            ServePolicy::Wsrpt => "wsrpt",
+        }
+    }
+}
+
+/// Seeded open-loop Poisson arrival process.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoissonSpec {
+    /// Base arrival rate, requests per second (at `scale = 1`).
+    pub rate_per_s: f64,
+    /// Trace horizon in seconds — arrivals past it are dropped.
+    pub horizon_s: f64,
+    /// Rate multiplier in `[0, RATE_SCALE_CAP]`; the effective rate is
+    /// `scale × rate_per_s` and lower-scale traces are exact subsets of
+    /// higher-scale ones for the same seed.
+    pub scale: f64,
+    /// Mean prompt length; per-request lengths are drawn uniformly in
+    /// `[0.5, 1.5) ×` the mean.
+    pub prompt_tokens: u64,
+    /// Mean output length (same `[0.5, 1.5)` spread).
+    pub output_tokens: u64,
+}
+
+impl Default for PoissonSpec {
+    fn default() -> Self {
+        PoissonSpec {
+            rate_per_s: 2.0,
+            horizon_s: 20.0,
+            scale: 1.0,
+            prompt_tokens: 512,
+            output_tokens: 64,
+        }
+    }
+}
+
+/// The serving workload spec: trace sources plus scheduler knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSpec {
+    /// Explicit request trace (merged with any Poisson draw).
+    pub requests: Vec<Request>,
+    /// Optional Poisson arrival generator.
+    pub poisson: Option<PoissonSpec>,
+    /// Request-level scheduling policy.
+    pub policy: ServePolicy,
+    /// Continuous-batching cap: concurrent requests per device group.
+    pub max_batch: u32,
+    /// Fraction of the post-weights GPU memory usable for KV cache.
+    pub kv_frac: f64,
+    /// PRNG seed for the Poisson draw.
+    pub seed: u64,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            requests: Vec::new(),
+            poisson: None,
+            policy: ServePolicy::Fifo,
+            max_batch: 32,
+            kv_frac: 0.8,
+            seed: 42,
+        }
+    }
+}
+
+fn strict_f64(v: &Json, key: &str, default: f64) -> anyhow::Result<f64> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x.as_f64().ok_or_else(|| anyhow::anyhow!("serving: `{key}` must be a number")),
+    }
+}
+
+fn strict_u64(v: &Json, key: &str, default: u64) -> anyhow::Result<u64> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => {
+            x.as_u64().ok_or_else(|| anyhow::anyhow!("serving: `{key}` must be an unsigned int"))
+        }
+    }
+}
+
+impl ServeSpec {
+    /// True when the spec generates no traffic at all (and is therefore
+    /// indistinguishable from no spec).
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty() && self.poisson.is_none()
+    }
+
+    /// Sort explicit requests by arrival time (stable — equal-time
+    /// requests keep their declaration order).
+    pub fn normalize(&mut self) {
+        self.requests.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    }
+
+    /// Check the spec's own invariants (the cluster-dependent fit check
+    /// — does every request's KV footprint fit some device group —
+    /// happens in the scheduler, which knows the budgets).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, r) in self.requests.iter().enumerate() {
+            anyhow::ensure!(
+                r.arrival_s.is_finite() && r.arrival_s >= 0.0,
+                "serving: requests[{i}]: arrival_s {} is not a finite non-negative number",
+                r.arrival_s
+            );
+            anyhow::ensure!(
+                r.prompt_tokens >= 1 && r.output_tokens >= 1,
+                "serving: requests[{i}]: prompt_tokens and output_tokens must be >= 1"
+            );
+            anyhow::ensure!(
+                r.weight.is_finite() && r.weight > 0.0,
+                "serving: requests[{i}]: weight {} must be a positive finite number",
+                r.weight
+            );
+        }
+        if let Some(p) = &self.poisson {
+            anyhow::ensure!(
+                p.rate_per_s.is_finite() && p.rate_per_s > 0.0,
+                "serving: poisson rate_per_s must be a positive number"
+            );
+            anyhow::ensure!(
+                p.horizon_s.is_finite() && p.horizon_s > 0.0,
+                "serving: poisson horizon_s must be a positive number of seconds"
+            );
+            anyhow::ensure!(
+                p.scale.is_finite() && p.scale >= 0.0,
+                "serving: poisson scale must be a finite non-negative number"
+            );
+            anyhow::ensure!(
+                p.prompt_tokens >= 1 && p.output_tokens >= 1,
+                "serving: poisson prompt_tokens and output_tokens must be >= 1"
+            );
+        }
+        anyhow::ensure!(self.max_batch >= 1, "serving: max_batch must be >= 1");
+        anyhow::ensure!(
+            self.kv_frac.is_finite() && self.kv_frac > 0.0 && self.kv_frac <= 1.0,
+            "serving: kv_frac must be in (0, 1]"
+        );
+        Ok(())
+    }
+
+    /// Stable cache-key marker: the empty string when the spec is empty
+    /// (the serving layer is invisible when off), otherwise a
+    /// `|serve:<hash>` suffix appended to the simulator's eval keys so
+    /// serving-annotated scores never alias training scores on the same
+    /// cluster shape.
+    pub fn fingerprint(&self) -> String {
+        if self.is_empty() {
+            return String::new();
+        }
+        let mut s = format!(
+            "p{};b{};k{};s{}",
+            self.policy.name(),
+            self.max_batch,
+            self.kv_frac,
+            self.seed
+        );
+        if let Some(p) = &self.poisson {
+            s.push_str(&format!(
+                ";poisson:{},{},{},{},{}",
+                p.rate_per_s, p.horizon_s, p.scale, p.prompt_tokens, p.output_tokens
+            ));
+        }
+        for r in &self.requests {
+            s.push_str(&format!(
+                ";{}@{}+{}x{}",
+                r.arrival_s, r.prompt_tokens, r.output_tokens, r.weight
+            ));
+        }
+        // FNV-1a over the canonical serialization
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in s.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        format!("|serve:{h:016x}")
+    }
+
+    /// Parse a `"serving"` JSON object (scenario key).
+    ///
+    /// Recognized keys — all optional, but present-and-malformed is an
+    /// error, never a silent default:
+    ///
+    /// * `"requests"`: array of `{"arrival_s", "prompt_tokens",
+    ///   "output_tokens", "weight"}` (`weight` optional, default 1),
+    /// * `"poisson"`: `{"rate_per_s", "horizon_s", "scale",
+    ///   "prompt_tokens", "output_tokens"}` overriding
+    ///   [`PoissonSpec::default`] (`rate_per_s` required),
+    /// * `"policy"`: `"fifo" | "srpt" | "wsrpt"` (default fifo),
+    /// * `"max_batch"`, `"kv_frac"`: scheduler knobs,
+    /// * `"seed"`: PRNG seed for the Poisson draw (defaults to
+    ///   `default_seed`, which scenario files wire to their own
+    ///   `"seed"` key).
+    pub fn from_json(v: &Json, default_seed: u64) -> anyhow::Result<ServeSpec> {
+        anyhow::ensure!(
+            v.get("requests").is_some() || v.get("poisson").is_some(),
+            "serving: expected at least one of `requests`, `poisson`"
+        );
+        let mut spec = ServeSpec { seed: strict_u64(v, "seed", default_seed)?, ..Default::default() };
+        if let Some(p) = v.get("policy") {
+            let name = p
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("serving: `policy` must be a string"))?;
+            spec.policy = ServePolicy::parse(name)?;
+        }
+        spec.max_batch = strict_u64(v, "max_batch", spec.max_batch as u64)? as u32;
+        spec.kv_frac = strict_f64(v, "kv_frac", spec.kv_frac)?;
+        if let Some(arr) = v.get("requests") {
+            let arr = arr
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("serving: `requests` must be an array"))?;
+            for (i, r) in arr.iter().enumerate() {
+                let ctx = |err| anyhow::anyhow!("serving: requests[{i}]: {err}");
+                spec.requests.push(Request {
+                    arrival_s: r.req_f64("arrival_s").map_err(ctx)?,
+                    prompt_tokens: r.req_u64("prompt_tokens").map_err(ctx)?,
+                    output_tokens: r.req_u64("output_tokens").map_err(ctx)?,
+                    weight: strict_f64(r, "weight", 1.0)
+                        .map_err(|err| anyhow::anyhow!("serving: requests[{i}]: {err}"))?,
+                });
+            }
+        }
+        if let Some(p) = v.get("poisson") {
+            let d = PoissonSpec::default();
+            spec.poisson = Some(PoissonSpec {
+                rate_per_s: p
+                    .req_f64("rate_per_s")
+                    .map_err(|err| anyhow::anyhow!("serving: poisson: {err}"))?,
+                horizon_s: strict_f64(p, "horizon_s", d.horizon_s)?,
+                scale: strict_f64(p, "scale", d.scale)?,
+                prompt_tokens: strict_u64(p, "prompt_tokens", d.prompt_tokens)?,
+                output_tokens: strict_u64(p, "output_tokens", d.output_tokens)?,
+            });
+        }
+        spec.normalize();
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Materialize the full request trace: the Poisson draw (if any)
+    /// merged with the explicit requests, sorted by arrival time with a
+    /// stable tie-break. The position in the returned `Vec` is the
+    /// request's **arrival index** — the deterministic tie-breaker every
+    /// scheduler policy falls back to.
+    pub fn materialize(&self) -> Vec<Request> {
+        let mut all = self.requests.clone();
+        if let Some(p) = &self.poisson {
+            all.extend(poisson_trace(p, self.seed));
+        }
+        all.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        all
+    }
+}
+
+/// Draw a Poisson request trace by nested thinning (see the module
+/// docs): candidates arrive at `RATE_SCALE_CAP × rate_per_s`; every
+/// candidate draws its prompt/output/weight attributes **and** its
+/// keep-coin unconditionally, then survives iff
+/// `coin × RATE_SCALE_CAP < scale`. Same seed + lower scale ⇒ an exact
+/// subset of the higher-scale trace.
+pub fn poisson_trace(spec: &PoissonSpec, seed: u64) -> Vec<Request> {
+    let mut out = Vec::new();
+    if spec.rate_per_s <= 0.0 || spec.horizon_s <= 0.0 {
+        return out;
+    }
+    let scale = spec.scale.clamp(0.0, RATE_SCALE_CAP);
+    let cap_rate = spec.rate_per_s * RATE_SCALE_CAP;
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    loop {
+        let u = 1.0 - rng.f64(); // (0, 1] so ln is finite
+        t += -u.ln() / cap_rate;
+        if t > spec.horizon_s {
+            break;
+        }
+        let u_prompt = rng.f64();
+        let u_output = rng.f64();
+        let u_weight = rng.f64();
+        let keep = rng.f64() * RATE_SCALE_CAP < scale;
+        if !keep {
+            continue;
+        }
+        out.push(Request {
+            arrival_s: t,
+            prompt_tokens: ((spec.prompt_tokens as f64) * (0.5 + u_prompt)).round().max(1.0) as u64,
+            output_tokens: ((spec.output_tokens as f64) * (0.5 + u_output)).round().max(1.0) as u64,
+            weight: 0.5 + 1.5 * u_weight,
+        });
+    }
+    out
+}
+
+/// KV-cache bytes per resident token across the whole model (all
+/// layers, K + V): `2 × num_layers × hidden_size × dtype_bytes`. Under
+/// TP the cache is sharded, so this is also the per-token total across
+/// a TP group regardless of its degree.
+pub fn kv_bytes_per_token(model: &ModelSpec) -> u64 {
+    2 * model.num_layers as u64 * model.hidden_size * model.dtype_bytes
+}
+
+/// One serving device group: a whole node running the full model with
+/// TP = the node's GPU count (PP = 1 — the latency-optimal serving
+/// layout), plus its KV-cache admission budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeGroup {
+    /// Node index in the cluster.
+    pub node: u32,
+    /// GPU model name of every rank in the group.
+    pub gpu: String,
+    /// TP degree = GPUs on the node.
+    pub tp: u32,
+    /// KV-cache admission budget in resident tokens.
+    pub kv_budget_tokens: u64,
+}
+
+/// Derive the serving device groups for a cluster: one group per node
+/// (heterogeneous nodes become independently-paced serving replicas).
+/// The KV budget is the node's aggregate GPU memory minus the model
+/// weights, scaled by `kv_frac`, divided by [`kv_bytes_per_token`].
+/// Errors when the weights do not fit a node or the budget rounds to
+/// zero tokens — a group that can never admit anything is a
+/// configuration error, not a silent starvation.
+pub fn serve_groups(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    kv_frac: f64,
+) -> anyhow::Result<Vec<ServeGroup>> {
+    let weight_bytes = model.param_count() * model.dtype_bytes;
+    let per_token = kv_bytes_per_token(model);
+    let mut groups = Vec::with_capacity(cluster.nodes.len());
+    for (i, n) in cluster.nodes.iter().enumerate() {
+        let mem = n.gpu.mem_capacity * n.gpus_per_node as u64;
+        anyhow::ensure!(
+            mem > weight_bytes,
+            "serving: {} weights ({:.1} GB) do not fit node {i} ({} x {}, {:.1} GB)",
+            model.name,
+            weight_bytes as f64 / 1e9,
+            n.gpus_per_node,
+            n.gpu.name,
+            mem as f64 / 1e9
+        );
+        let budget = ((mem - weight_bytes) as f64 * kv_frac) as u64 / per_token;
+        anyhow::ensure!(
+            budget >= 1,
+            "serving: node {i} ({} x {}) has no KV budget left after {} weights",
+            n.gpus_per_node,
+            n.gpu.name,
+            model.name
+        );
+        groups.push(ServeGroup {
+            node: i as u32,
+            gpu: n.gpu.name.clone(),
+            tp: n.gpus_per_node,
+            kv_budget_tokens: budget,
+        });
+    }
+    Ok(groups)
+}
+
+/// The prefill op stream for one request: a full-prompt forward pass —
+/// compute-bound GEMMs over `seq = prompt_tokens` — as (work,
+/// multiplicity) pairs: the embedding once, then each per-block kind
+/// `num_layers` times, all sharded across the group's TP degree.
+pub fn prefill_works(model: &ModelSpec, prompt_tokens: u64, tp: u32) -> Vec<(LayerWork, u64)> {
+    works(model, prompt_tokens as f64, 1.0, tp)
+}
+
+/// One decode step for a continuous batch of `batch` in-flight
+/// requests: a single-token (`seq = 1`) forward pass whose roofline is
+/// memory-bandwidth-bound (dominated by streaming the weights), so
+/// batching amortizes it — the reason continuous batching wins.
+pub fn decode_works(model: &ModelSpec, batch: u32, tp: u32) -> Vec<(LayerWork, u64)> {
+    works(model, 1.0, batch as f64, tp)
+}
+
+fn works(model: &ModelSpec, seq: f64, mbs: f64, tp: u32) -> Vec<(LayerWork, u64)> {
+    let (n_experts, top_k) = match model.moe {
+        Some(m) => (m.num_experts as f64, m.top_k as f64),
+        None => (0.0, 0.0),
+    };
+    let work = |kind: LayerKind| LayerWork {
+        kind,
+        hidden: model.hidden_size as f64,
+        ffn: model.ffn_hidden as f64,
+        heads: model.num_heads as f64,
+        seq,
+        mbs,
+        n_experts,
+        top_k,
+        tp: tp as f64,
+        is_bwd: false,
+    };
+    let mut out = vec![(work(LayerKind::Embedding), 1)];
+    for kind in model.block_kinds() {
+        out.push((work(kind), model.num_layers as u64));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn poisson(scale: f64) -> PoissonSpec {
+        PoissonSpec { rate_per_s: 4.0, horizon_s: 10.0, scale, ..Default::default() }
+    }
+
+    #[test]
+    fn poisson_trace_reproducible_and_sorted() {
+        let a = poisson_trace(&poisson(1.0), 7);
+        let b = poisson_trace(&poisson(1.0), 7);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert!(!a.is_empty(), "4 req/s over 10s should draw something");
+        for r in &a {
+            assert!(r.arrival_s > 0.0 && r.arrival_s <= 10.0);
+            assert!(r.prompt_tokens >= 1 && r.output_tokens >= 1);
+            assert!(r.weight > 0.0);
+        }
+    }
+
+    #[test]
+    fn poisson_lower_scale_is_subset() {
+        let hi = poisson_trace(&poisson(4.0), 11);
+        let lo = poisson_trace(&poisson(1.0), 11);
+        assert!(lo.len() < hi.len(), "{} vs {}", lo.len(), hi.len());
+        for r in &lo {
+            assert!(hi.contains(r), "low-scale request missing at high scale: {r:?}");
+        }
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let t = poisson_trace(&poisson(1.0), 3);
+        // 4 req/s x 10 s = 40 expected; allow a wide deterministic band
+        assert!((20..=60).contains(&t.len()), "{}", t.len());
+    }
+
+    #[test]
+    fn spec_empty_and_fingerprint() {
+        let spec = ServeSpec::default();
+        assert!(spec.is_empty());
+        assert_eq!(spec.fingerprint(), "");
+        let mut a = spec.clone();
+        a.poisson = Some(PoissonSpec::default());
+        assert!(!a.is_empty());
+        let fa = a.fingerprint();
+        assert!(fa.starts_with("|serve:"));
+        let mut b = a.clone();
+        b.policy = ServePolicy::Srpt;
+        assert_ne!(fa, b.fingerprint(), "policy must change the fingerprint");
+        let mut c = a.clone();
+        c.seed += 1;
+        assert_ne!(fa, c.fingerprint(), "seed must change the fingerprint");
+    }
+
+    #[test]
+    fn from_json_parses_and_rejects() {
+        let v = Json::parse(
+            r#"{"policy": "wsrpt", "max_batch": 4,
+                "requests": [{"arrival_s": 0.5, "prompt_tokens": 128,
+                              "output_tokens": 16, "weight": 2.0}],
+                "poisson": {"rate_per_s": 3.0, "horizon_s": 5.0}}"#,
+        )
+        .unwrap();
+        let spec = ServeSpec::from_json(&v, 9).unwrap();
+        assert_eq!(spec.policy, ServePolicy::Wsrpt);
+        assert_eq!(spec.max_batch, 4);
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.requests.len(), 1);
+        assert_eq!(spec.poisson.as_ref().unwrap().rate_per_s, 3.0);
+
+        for bad in [
+            r#"{}"#,
+            r#"{"requests": 3}"#,
+            r#"{"requests": [{"arrival_s": -1, "prompt_tokens": 1, "output_tokens": 1}]}"#,
+            r#"{"requests": [{"arrival_s": 0, "prompt_tokens": 0, "output_tokens": 1}]}"#,
+            r#"{"poisson": {"rate_per_s": -2}}"#,
+            r#"{"poisson": {"rate_per_s": 1}, "policy": "lifo"}"#,
+            r#"{"poisson": {"rate_per_s": 1}, "max_batch": 0}"#,
+            r#"{"poisson": {"rate_per_s": 1}, "kv_frac": 1.5}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(ServeSpec::from_json(&v, 0).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn materialize_merges_and_orders_by_arrival() {
+        let spec = ServeSpec {
+            requests: vec![
+                Request { arrival_s: 5.0, prompt_tokens: 8, output_tokens: 2, weight: 1.0 },
+                Request { arrival_s: 0.25, prompt_tokens: 4, output_tokens: 2, weight: 1.0 },
+            ],
+            poisson: Some(poisson(1.0)),
+            ..Default::default()
+        };
+        let all = spec.materialize();
+        assert!(all.len() > 2);
+        assert!(all.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert!(all.iter().any(|r| r.prompt_tokens == 4));
+    }
+
+    #[test]
+    fn kv_model_and_groups() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        // 2 x layers x hidden x dtype
+        assert_eq!(
+            kv_bytes_per_token(&m),
+            2 * m.num_layers as u64 * m.hidden_size * m.dtype_bytes
+        );
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let groups = serve_groups(&m, &c, 0.8).unwrap();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].tp, 8);
+        // the H100 node has more memory headroom than the A100 node
+        let a100 = groups.iter().find(|g| g.gpu == "A100").unwrap();
+        let h100 = groups.iter().find(|g| g.gpu == "H100").unwrap();
+        assert!(h100.kv_budget_tokens > a100.kv_budget_tokens);
+        assert!(a100.kv_budget_tokens >= 1);
+    }
+
+    #[test]
+    fn groups_reject_oversized_model() {
+        let m = presets::model("llama2-70b").unwrap();
+        let mut c = presets::cluster_hetero(1, 0).unwrap();
+        c.nodes[0].gpus_per_node = 2; // 2 x A100 = 80 GB < 70B weights
+        let err = serve_groups(&m, &c, 0.8).unwrap_err();
+        assert!(err.to_string().contains("do not fit"), "{err}");
+    }
+
+    #[test]
+    fn prefill_is_compute_bound_decode_is_memory_bound() {
+        use crate::compute::cost::NativeCostModel;
+        let m = presets::model("llama2-70b").unwrap();
+        let gpu = presets::gpu("H100").unwrap();
+        // prefill: long-sequence GEMMs — compute-limited (t_compute wins)
+        let (w, _) = prefill_works(&m, 512, 4)[2]; // an MLP block
+        let (flops, bytes) = w.flops_bytes();
+        assert!(
+            flops / (gpu.peak_flops * gpu.eff_mlp) > bytes / (gpu.mem_bw * gpu.eff_mem),
+            "prefill MLP should be compute-bound"
+        );
+        // decode: one token — memory-limited (weight streaming wins)
+        let (w, _) = decode_works(&m, 1, 4)[2];
+        let (flops, bytes) = w.flops_bytes();
+        assert!(
+            flops / (gpu.peak_flops * gpu.eff_mlp) < bytes / (gpu.mem_bw * gpu.eff_mem),
+            "decode MLP should be memory-bound"
+        );
+        // batching amortizes the decode step: 8x batch costs far less
+        // than 8x the single-request step
+        let t1: f64 = decode_works(&m, 1, 4)
+            .iter()
+            .map(|(w, n)| NativeCostModel.time_seconds(w, &gpu) * *n as f64)
+            .sum();
+        let t8: f64 = decode_works(&m, 8, 4)
+            .iter()
+            .map(|(w, n)| NativeCostModel.time_seconds(w, &gpu) * *n as f64)
+            .sum();
+        assert!(t8 < 4.0 * t1, "batched decode step not amortized: {t8} vs {t1}");
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [ServePolicy::Fifo, ServePolicy::Srpt, ServePolicy::Wsrpt] {
+            assert_eq!(ServePolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(ServePolicy::parse("edf").is_err());
+    }
+}

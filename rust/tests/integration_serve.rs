@@ -1,0 +1,230 @@
+//! End-to-end serving simulation suite (DESIGN.md §27).
+//!
+//! Three layers of enforcement, mirroring `golden_plan.rs`:
+//!
+//! 1. **Cross-thread identity** (always on): rendered serve-sim
+//!    reports are byte-identical across 1/4/8 worker threads for every
+//!    scheduling policy.
+//! 2. **Behavioral contrasts** (always on): FIFO and SRPT order the
+//!    same trace differently where queueing theory says they must, an
+//!    empty trace renders an empty report without panicking, and
+//!    `fold=auto` under a serving workload is bit-identical to
+//!    `fold=off`.
+//! 3. **Golden fingerprint** (self-bootstrapping, see
+//!    `tests/golden/README.md`): the Fig-3 serve-sim report is
+//!    recorded on first run and compared byte-for-byte afterwards.
+
+use std::fs;
+use std::path::PathBuf;
+
+use hetsim::config::framework::ParallelismSpec;
+use hetsim::config::presets;
+use hetsim::system::fold::FoldMode;
+use hetsim::system::serve_scheduler::ServeSim;
+use hetsim::workload::partition::{fig3_cluster, fig3_model};
+use hetsim::workload::serve::{PoissonSpec, Request, ServePolicy, ServeSpec};
+use hetsim::SimulationBuilder;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+/// Compare `content` against the committed golden file, or record it on
+/// first run (bootstrap).
+fn check_golden(name: &str, content: &str) {
+    let path = golden_dir().join(name);
+    if path.exists() {
+        let want = fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            want,
+            content,
+            "golden fingerprint {} drifted — serving changes must be deliberate. \
+             If this change is intentional, delete the file and rerun to re-record.",
+            path.display()
+        );
+    } else {
+        fs::create_dir_all(golden_dir()).unwrap();
+        fs::write(&path, content).unwrap();
+        eprintln!(
+            "recorded golden fingerprint {} — commit it to pin this behavior",
+            path.display()
+        );
+    }
+}
+
+fn req(arrival_s: f64, prompt: u64, output: u64) -> Request {
+    Request { arrival_s, prompt_tokens: prompt, output_tokens: output, weight: 1.0 }
+}
+
+fn poisson_spec(policy: ServePolicy) -> ServeSpec {
+    ServeSpec {
+        poisson: Some(PoissonSpec {
+            rate_per_s: 4.0,
+            horizon_s: 10.0,
+            scale: 1.0,
+            prompt_tokens: 512,
+            output_tokens: 64,
+        }),
+        policy,
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn serve_reports_thread_invariant_per_policy_on_fig3() {
+    for policy in [ServePolicy::Fifo, ServePolicy::Srpt, ServePolicy::Wsrpt] {
+        let sim = ServeSim::new(fig3_model().unwrap(), fig3_cluster().unwrap(), poisson_spec(policy))
+            .unwrap();
+        let one = sim.run(1).unwrap().render();
+        for threads in [4, 8] {
+            assert_eq!(
+                one,
+                sim.run(threads).unwrap().render(),
+                "policy {} diverged at threads={threads}",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn serve_fifo_vs_srpt_order_differs_on_hetero() {
+    // A long request ahead of four short ones, all at t=0 with
+    // max_batch=1: FIFO must serve in arrival order, SRPT must let the
+    // shorts overtake — lowering median latency and changing the
+    // rendered report.
+    let mut requests = vec![req(0.0, 1024, 64)];
+    for _ in 0..4 {
+        requests.push(req(0.0, 32, 4));
+    }
+    let run = |policy| {
+        let spec = ServeSpec { requests: requests.clone(), policy, max_batch: 1, ..Default::default() };
+        ServeSim::new(
+            presets::model("gpt-6.7b").unwrap(),
+            presets::cluster_hetero(1, 1).unwrap(),
+            spec,
+        )
+        .unwrap()
+        .run(1)
+        .unwrap()
+    };
+    let fifo = run(ServePolicy::Fifo);
+    let srpt = run(ServePolicy::Srpt);
+    // conservation holds under both policies
+    assert_eq!(fifo.requests_total, 5);
+    assert_eq!(srpt.requests_total, 5);
+    assert_eq!(fifo.tokens_out_total, srpt.tokens_out_total);
+    // ...but the ordering (and therefore the latency profile) differs
+    assert!(
+        srpt.latency.p50_s < fifo.latency.p50_s,
+        "SRPT p50 {} must beat FIFO p50 {}",
+        srpt.latency.p50_s,
+        fifo.latency.p50_s
+    );
+    assert_ne!(fifo.render(), srpt.render());
+}
+
+#[test]
+fn serve_zero_request_trace_reports_empty() {
+    // scale=0 thins every Poisson candidate away: a structurally valid
+    // spec that generates nothing.
+    let spec = ServeSpec {
+        poisson: Some(PoissonSpec {
+            rate_per_s: 4.0,
+            horizon_s: 5.0,
+            scale: 0.0,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let sim = ServeSim::new(
+        presets::model("gpt-6.7b").unwrap(),
+        presets::cluster_hetero(1, 1).unwrap(),
+        spec,
+    )
+    .unwrap();
+    assert!(sim.requests().is_empty());
+    let rep = sim.run(1).unwrap();
+    assert_eq!(rep.requests_total, 0);
+    assert_eq!(rep.tokens_out_total, 0);
+    assert_eq!(rep.events, 0);
+    assert_eq!(rep.goodput_tok_s, 0.0);
+    assert_eq!(rep.latency.count, 0);
+    let text = rep.render();
+    assert!(text.contains("requests 0"), "{text}");
+}
+
+#[test]
+fn serve_sim_fig3_golden() {
+    // The canonical serving scenario: the paper's Fig-3 cluster (one
+    // 4xH100 node + one 4xA100 node) serving a seeded Poisson trace
+    // under SRPT. Renders only simulated quantities, so the fingerprint
+    // is machine-independent.
+    let sim = ServeSim::new(
+        fig3_model().unwrap(),
+        fig3_cluster().unwrap(),
+        poisson_spec(ServePolicy::Srpt),
+    )
+    .unwrap();
+    let rep = sim.run(1).unwrap();
+    assert!(rep.requests_total > 0);
+    assert!(rep.goodput_tok_s > 0.0);
+    assert!(rep.ttft.p99_s > 0.0);
+    check_golden("serve_sim_fig3.txt", &rep.render());
+}
+
+#[test]
+fn serve_example_scenario_runs_end_to_end() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("examples/scenario_serving.json");
+    let s = hetsim::config::loader::load_scenario_file(&path).unwrap();
+    let serving = s.serving.expect("example scenario carries serving traffic");
+    assert_eq!(serving.policy, ServePolicy::Srpt);
+    let sim = ServeSim::new(s.model, s.cluster, serving).unwrap();
+    let rep = sim.run(2).unwrap();
+    assert_eq!(rep.requests_total as usize, sim.requests().len());
+    assert!(rep.requests_total >= 2, "pinned requests must be served");
+}
+
+#[test]
+fn serve_fold_auto_stays_bit_identical_to_fold_off() {
+    // The fold-interaction guard: a serving workload must veto symmetry
+    // folding, leaving fold=auto builds bit-identical to fold=off for
+    // both the training iteration and the serving run.
+    let mut model = presets::model("gpt-6.7b").unwrap();
+    model.num_layers = 4;
+    model.global_batch = 16;
+    model.micro_batch = 8;
+    let cluster = presets::cluster("ampere", 2).unwrap();
+    let serving = ServeSpec {
+        requests: vec![req(0.0, 128, 8), req(0.1, 64, 4)],
+        ..Default::default()
+    };
+    let build = |fold| {
+        SimulationBuilder::new(model.clone(), cluster.clone())
+            .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+            .fold(fold)
+            .serving(Some(serving.clone()))
+            .build()
+            .unwrap()
+    };
+    let auto = build(FoldMode::Auto);
+    let off = build(FoldMode::Off);
+    assert!(!auto.folded(), "serving must refuse symmetry folding");
+    assert!(!off.folded());
+    let (ra, ro) = (auto.run_iteration().unwrap(), off.run_iteration().unwrap());
+    assert_eq!(ra.iteration_time, ro.iteration_time);
+    assert_eq!(ra.events_processed, ro.events_processed);
+    assert_eq!(ra.flows_completed, ro.flows_completed);
+    assert_eq!(
+        auto.run_serve(1).unwrap().render(),
+        off.run_serve(1).unwrap().render()
+    );
+    // sanity: the same deployment without serving does fold
+    let folded = SimulationBuilder::new(model.clone(), cluster.clone())
+        .parallelism(ParallelismSpec { tp: 8, pp: 1, dp: 2 })
+        .fold(FoldMode::Auto)
+        .build()
+        .unwrap();
+    assert!(folded.folded(), "baseline deployment should be foldable");
+}

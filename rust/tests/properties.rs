@@ -15,7 +15,12 @@
 //! * effective goodput is monotone non-increasing in the MTBF
 //!   failure-rate scale (nested-thinning schedules + monotone walk),
 //! * fault-aware plan sweeps are deterministic across worker-thread
-//!   counts.
+//!   counts,
+//! * seeded Poisson request traces are reproducible and nested across
+//!   rate scales (same thinning construction as the MTBF schedules),
+//! * serving simulation conserves requests (every admitted request
+//!   completes exactly once), never exceeds any group's KV budget, and
+//!   renders byte-identically across worker-thread counts.
 
 use hetsim::config::framework::{FrameworkSpec, ParallelismSpec};
 use hetsim::config::presets;
@@ -767,6 +772,193 @@ fn prop_fault_sweep_deterministic_across_thread_counts() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_poisson_trace_reproducible_and_nested_in_rate_scale() {
+    use hetsim::workload::serve::{poisson_trace, PoissonSpec, RATE_SCALE_CAP};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    // the serving trace uses the same thinning construction as the MTBF
+    // fault schedules (DESIGN.md §26/§27): candidates are drawn at the
+    // cap rate and kept with probability scale/cap, so the same seed
+    // always reproduces the same trace and a lower scale draws an exact
+    // subset of a higher scale's requests
+    let distinct = AtomicUsize::new(0);
+    check(&cfg(150), |g| {
+        let mut spec = PoissonSpec {
+            rate_per_s: g.rng.range_f64(0.1, 20.0),
+            horizon_s: g.rng.range_f64(0.5, 30.0),
+            scale: 1.0,
+            prompt_tokens: g.rng.range_u64(1, 2048),
+            output_tokens: g.rng.range_u64(1, 256),
+        };
+        let seed = g.rng.range_u64(0, 1 << 48);
+        let mut lo_scale = g.rng.range_f64(0.0, RATE_SCALE_CAP);
+        let mut hi_scale = g.rng.range_f64(0.0, RATE_SCALE_CAP);
+        if lo_scale > hi_scale {
+            std::mem::swap(&mut lo_scale, &mut hi_scale);
+        }
+        spec.scale = lo_scale;
+        let lo_a = poisson_trace(&spec, seed);
+        let lo_b = poisson_trace(&spec, seed);
+        if lo_a != lo_b {
+            return Err(format!("same seed {seed} produced different traces"));
+        }
+        spec.scale = hi_scale;
+        let hi = poisson_trace(&spec, seed);
+        // nested: every low-scale request appears verbatim in the
+        // high-scale trace, in the same relative order
+        let mut it = hi.iter();
+        for r in &lo_a {
+            if !it.any(|h| h == r) {
+                return Err(format!(
+                    "scale {lo_scale:.3} request at t={} missing from scale {hi_scale:.3} \
+                     trace ({} vs {} requests)",
+                    r.arrival_s,
+                    lo_a.len(),
+                    hi.len()
+                ));
+            }
+        }
+        // arrivals are sorted and inside the horizon
+        for w in hi.windows(2) {
+            if w[1].arrival_s < w[0].arrival_s {
+                return Err("trace not sorted by arrival".into());
+            }
+        }
+        if hi.iter().any(|r| r.arrival_s < 0.0 || r.arrival_s >= spec.horizon_s) {
+            return Err("arrival outside horizon".into());
+        }
+        if hi.len() > lo_a.len() {
+            distinct.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    });
+    assert!(
+        distinct.load(Ordering::Relaxed) > 0,
+        "no random case ever drew different traces — the property is vacuous"
+    );
+}
+
+#[test]
+fn prop_serving_conserves_requests_and_respects_kv_budget() {
+    use hetsim::config::cluster::FabricSpec;
+    use hetsim::system::serve_scheduler::ServeSim;
+    use hetsim::workload::serve::{PoissonSpec, Request, ServePolicy, ServeSpec};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    // the scheduler reserves each request's full prompt+output KV
+    // footprint at admission, so (a) every materialized request
+    // completes exactly once, (b) no group's peak KV residency ever
+    // exceeds its budget, and (c) the report is byte-identical no
+    // matter how many threads priced the cost tables (DESIGN.md §27)
+    let nonempty = AtomicUsize::new(0);
+    check(&cfg(40), |g| {
+        // random cluster: 1-3 nodes, each 1-8 GPUs, random architecture
+        let nodes = g.rng.range_u64(1, 4) as usize;
+        let proto = presets::cluster_hetero(1, 1).unwrap(); // [ampere, hopper]
+        let mut cluster = proto.clone();
+        cluster.nodes = (0..nodes)
+            .map(|_| {
+                let mut n = proto.nodes[g.rng.range_u64(0, 2) as usize].clone();
+                n.gpus_per_node = g.rng.range_u64(1, 9) as u32;
+                n
+            })
+            .collect();
+        cluster.fabric = match g.rng.range_u64(0, 3) {
+            0 => FabricSpec::RailOnly,
+            1 => FabricSpec::SingleSwitch,
+            _ => FabricSpec::LeafSpine {
+                spines: g.rng.range_u64(1, 4) as u32,
+                oversubscription: g.rng.range_f64(1.0, 4.0),
+            },
+        };
+        // a shrunk model so the weights fit even a single-GPU node
+        let mut model = presets::model("gpt-6.7b").unwrap();
+        model.num_layers = g.rng.range_u64(2, 9) as u32;
+        // random trace: a few explicit requests plus an optional
+        // Poisson burst, random policy and batch cap
+        let mut requests = Vec::new();
+        for _ in 0..g.rng.range_usize(0, 6) {
+            requests.push(Request {
+                arrival_s: g.rng.range_f64(0.0, 2.0),
+                prompt_tokens: g.rng.range_u64(1, 513),
+                output_tokens: g.rng.range_u64(1, 65),
+                weight: g.rng.range_f64(0.1, 4.0),
+            });
+        }
+        let poisson = if g.rng.f64() < 0.7 {
+            Some(PoissonSpec {
+                rate_per_s: g.rng.range_f64(0.5, 10.0),
+                horizon_s: g.rng.range_f64(0.5, 4.0),
+                scale: 1.0,
+                prompt_tokens: g.rng.range_u64(1, 513),
+                output_tokens: g.rng.range_u64(1, 65),
+            })
+        } else {
+            None
+        };
+        if requests.is_empty() && poisson.is_none() {
+            return Ok(()); // empty spec is covered by the unit tests
+        }
+        let spec = ServeSpec {
+            requests,
+            poisson,
+            policy: *g.rng.choose(&[ServePolicy::Fifo, ServePolicy::Srpt, ServePolicy::Wsrpt]),
+            max_batch: g.rng.range_u64(1, 9) as u32,
+            kv_frac: g.rng.range_f64(0.1, 1.0),
+            seed: g.rng.range_u64(0, 1 << 48),
+        };
+        let sim = match ServeSim::new(model, cluster, spec) {
+            Ok(s) => s,
+            // a tiny random node may not fit even the shrunk model, or
+            // a small kv_frac may not fit the largest random request —
+            // both are legitimate typed rejections, not failures
+            Err(_) => return Ok(()),
+        };
+        let total = sim.requests().len();
+        let rep = sim.run(1).map_err(|e| format!("run failed: {e}"))?;
+        if total > 0 {
+            nonempty.fetch_add(1, Ordering::Relaxed);
+        }
+        // conservation: every request completes exactly once
+        let served: u64 = rep.groups.iter().map(|gr| gr.requests).sum();
+        if served != total as u64 || rep.requests_total != total as u64 {
+            return Err(format!("served {served} of {total} requests"));
+        }
+        let want_tokens: u64 = sim.requests().iter().map(|r| r.output_tokens).sum();
+        if rep.tokens_out_total != want_tokens {
+            return Err(format!("tokens out {} != {want_tokens}", rep.tokens_out_total));
+        }
+        if rep.latency.count != total || rep.ttft.count != total {
+            return Err(format!(
+                "latency samples {} / ttft samples {} != {total}",
+                rep.latency.count, rep.ttft.count
+            ));
+        }
+        // KV residency never exceeds any group's budget
+        for gr in &rep.groups {
+            if gr.kv_peak_tokens > gr.kv_budget_tokens {
+                return Err(format!(
+                    "group {} peak {} tokens over budget {}",
+                    gr.node, gr.kv_peak_tokens, gr.kv_budget_tokens
+                ));
+            }
+        }
+        // thread invariance: pricing parallelism must not leak into
+        // the report
+        let threads = g.rng.range_usize(2, 9);
+        let again = sim.run(threads).map_err(|e| format!("run({threads}) failed: {e}"))?;
+        if again.render() != rep.render() {
+            return Err(format!("report diverged at {threads} threads"));
+        }
+        Ok(())
+    });
+    assert!(
+        nonempty.load(Ordering::Relaxed) > 0,
+        "no random case ever served a request — the property is vacuous"
+    );
 }
 
 #[test]
