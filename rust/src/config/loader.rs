@@ -119,9 +119,30 @@
 //! * `"mtbf"` — `{"horizon_s", "scale"}`: materialize a per-arch
 //!   MTBF-driven schedule over the cluster, seeded by the scenario's
 //!   `seed` (or the fault object's own `"seed"` key).
+//! * `"repair"` — `{"nic_s", "link_s"}` mean repair windows in seconds
+//!   for the repairable fault classes (defaults 600 / 300,
+//!   [`crate::system::failure::RepairSpec`]). A NIC or link fault
+//!   inside its repair window no longer fail-stops outright: the flow
+//!   model kills the faulted links and reroutes around them, running
+//!   degraded until repair
+//!   ([`crate::system::failure::DegradedModel`]); the iteration
+//!   aborts only when no route survives.
+//! * `"domains"` — `{"rack_size", "mtbf_hours", "horizon_s",
+//!   "scale"}`: correlated failure domains (DESIGN.md §28).
+//!   Consecutive `rack_size`-node racks share a blast domain (PDU /
+//!   top-of-rack class hardware), and one domain event fails the
+//!   whole rack at the same instant
+//!   ([`crate::system::failure::domain_schedule`]). `rack_size` and
+//!   `horizon_s` are required; `mtbf_hours` defaults to 4380 (half a
+//!   year) and `scale` to 1, with the same nested-thinning subset
+//!   guarantee across scales as `"mtbf"`.
+//! * `"monte_carlo"` — `{"trajectories"}` (1–4096): how many seeded
+//!   fault trajectories goodput analysis averages over
+//!   ([`crate::report::goodput::monte_carlo`]); trajectory sets nest
+//!   as the count grows.
 //!
-//! A spec with no events is normalized away — the simulation is
-//! byte-identical to one without the key.
+//! A spec with no events and all-default knobs is normalized away —
+//! the simulation is byte-identical to one without the key.
 //!
 //! ## `serving` — optional
 //!
@@ -157,8 +178,10 @@
 //! deployment), `rust/examples/scenario_spine_mixed_nodes.json`
 //! (mixed node sizes on an oversubscribed leaf/spine fabric),
 //! `rust/examples/scenario_faults.json` (the canonical fault-injection
-//! scenario behind the resilience golden test) and
-//! `rust/examples/scenario_serving.json` (the canonical serving
+//! scenario behind the resilience golden test),
+//! `rust/examples/scenario_correlated_faults.json` (repairable NIC and
+//! link outages, rack-level failure domains and Monte-Carlo goodput)
+//! and `rust/examples/scenario_serving.json` (the canonical serving
 //! scenario: Poisson arrivals plus pinned requests on a mixed
 //! cluster); the doctests below parse them on every `cargo test`, so
 //! the examples and this documentation cannot rot apart:
@@ -212,6 +235,19 @@
 //! assert!(faults.events.iter().any(|e| e.kind.name() == "straggler"));
 //! assert!(faults.events.iter().any(|e| e.kind.is_fail_stop()));
 //! assert_eq!(faults.checkpoint.interval_iters, 16);
+//! ```
+//!
+//! ```
+//! let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_correlated_faults.json");
+//! let text = std::fs::read_to_string(path).unwrap();
+//! let s = hetsim::config::loader::load_scenario(&text).unwrap();
+//! let faults = s.faults.expect("the correlated-fault scenario injects faults");
+//! // two explicit repairable outages, plus any drawn rack-level events
+//! assert!(faults.events.iter().any(|e| e.kind.name() == "nic_fail"));
+//! assert!(faults.events.iter().any(|e| e.kind.name() == "link_fail"));
+//! assert_eq!(faults.repair.nic_s, 120.0);
+//! assert_eq!(faults.domains.unwrap().rack_size, 2);
+//! assert_eq!(faults.monte_carlo, 8);
 //! ```
 //!
 //! ```

@@ -22,8 +22,8 @@ fn usage() -> Usage {
         about: "heterogeneity-aware LLM training simulator (CS.DC 2025 reproduction)",
         commands: vec![
             ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N] [--fabric rail|switch|spine:S,OS] [--schedule gpipe|1f1b|interleaved:V] [--fold auto|off] [--faults FILE] [--iterations N --threads N]"),
-            ("plan", "rank TPxPPxDPxschedule plans (+ variable per-group TP layouts on hetero clusters) [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --threads N --mb-limit N (0=all) --top K --refine[=STEPS] --fold auto|off --goodput [--horizon-s S --mtbf-scale X --seed N]]"),
-            ("goodput", "rank plans by effective goodput under an MTBF fault schedule [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --threads N --mb-limit N --top K --fold auto|off --horizon-s S --mtbf-scale X --seed N]"),
+            ("plan", "rank TPxPPxDPxschedule plans (+ variable per-group TP layouts on hetero clusters) [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --threads N --mb-limit N (0=all) --top K --refine[=STEPS] --fold auto|off --objective time|goodput|goodput-ci --mc N [--horizon-s S --mtbf-scale X --seed N]]"),
+            ("goodput", "rank plans by effective goodput under an MTBF fault schedule [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --threads N --mb-limit N --top K --fold auto|off --horizon-s S --mtbf-scale X --seed N --mc N --rack-size N --domain-mtbf-h H]"),
             ("serve-sim", "simulate inference serving: goodput, TTFT/TBT, latency percentiles per device group: --config FILE | --model NAME --cluster SPEC [--fabric SPEC --policy fifo|srpt|wsrpt --rate R --horizon-s S --scale X --prompt-tokens N --output-tokens N --max-batch N --kv-frac F --seed N --threads N]"),
             ("bench", "planner/engine throughput ladders -> BENCH_plan.json [--quick --threads N --out FILE --baseline FILE --factor F]"),
             ("fig1", "hardware-evolution trend across generation presets"),
@@ -200,8 +200,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("events processed: {}", report.events_processed);
     if let Some(f) = &report.fault {
         println!(
-            "fault:            node {} failed at {} — iteration aborted, {} of work lost",
-            f.node, f.at, f.lost_work
+            "fault:            {} on node {} at {} — iteration aborted, {} of work lost",
+            f.kind.name(),
+            f.node,
+            f.at,
+            f.lost_work
         );
     }
     let mut kinds: Vec<_> = report.fct_summary.iter().collect();
@@ -221,7 +224,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 fn cmd_plan(args: &Args) -> Result<()> {
     args.check_known(&[
         "model", "cluster", "fabric", "threads", "mb-limit", "top", "refine", "fold", "goodput",
-        "horizon-s", "mtbf-scale", "seed",
+        "objective", "mc", "horizon-s", "mtbf-scale", "seed",
     ])?;
     let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
     let mut cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
@@ -248,22 +251,51 @@ fn cmd_plan(args: &Args) -> Result<()> {
         cluster.total_gpus(),
         cluster.fabric.name()
     );
+    // --objective time|goodput|goodput-ci picks the ranking criterion;
+    // --goodput is the pre-existing alias for --objective goodput
+    let objective = match (args.opt("objective"), args.flag("goodput")) {
+        (None, false) | (Some("time"), _) => "time",
+        (None, true) | (Some("goodput"), _) => "goodput",
+        (Some("goodput-ci"), _) => "goodput-ci",
+        (Some(other), _) => {
+            anyhow::bail!("--objective must be time|goodput|goodput-ci, got '{other}'")
+        }
+    };
     let mut report = hetsim::planner::search(&model, &cluster, &opts)?;
-    // --goodput re-ranks by effective goodput under an MTBF schedule
-    // (DESIGN.md §26); the fault-free scores stay in the table
-    if args.flag("goodput") {
+    // goodput objectives re-rank by effective goodput under an MTBF
+    // schedule (DESIGN.md §26, §28); fault-free scores stay in the
+    // table. goodput-ci scores each plan by the lower 95% confidence
+    // bound over --mc Monte-Carlo trajectories (blast-radius-aware).
+    if objective != "time" {
+        let mc = match objective {
+            "goodput-ci" => {
+                let m = args.opt_u64("mc", 8)? as u32;
+                anyhow::ensure!(m >= 1, "--objective goodput-ci needs --mc >= 1");
+                m
+            }
+            _ => args.opt_u64("mc", 0)? as u32,
+        };
         let gopts = hetsim::report::goodput::SweepOptions {
             plan: opts.clone(),
             horizon_s: args.opt_f64("horizon-s", 86_400.0)?,
             mtbf_scale: args.opt_f64("mtbf-scale", 1.0)?,
             seed: args.opt_u64("seed", 42)?,
+            mc,
             ..Default::default()
         };
         hetsim::report::goodput::annotate(&mut report, &model, &cluster, &gopts);
-        println!(
-            "(re-ranked by effective goodput: horizon {:.0}s, MTBF scale {}x, seed {})\n",
-            gopts.horizon_s, gopts.mtbf_scale, gopts.seed
-        );
+        if mc > 0 {
+            println!(
+                "(re-ranked by lower 95% CI bound on goodput: {} trajectories, \
+                 horizon {:.0}s, MTBF scale {}x, seed {})\n",
+                mc, gopts.horizon_s, gopts.mtbf_scale, gopts.seed
+            );
+        } else {
+            println!(
+                "(re-ranked by effective goodput: horizon {:.0}s, MTBF scale {}x, seed {})\n",
+                gopts.horizon_s, gopts.mtbf_scale, gopts.seed
+            );
+        }
     }
     print!("{}", report.render(top));
     let best = report.best();
@@ -288,7 +320,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
 fn cmd_goodput(args: &Args) -> Result<()> {
     args.check_known(&[
         "model", "cluster", "fabric", "threads", "mb-limit", "top", "fold", "horizon-s",
-        "mtbf-scale", "seed",
+        "mtbf-scale", "seed", "mc", "rack-size", "domain-mtbf-h",
     ])?;
     let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
     let mut cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
@@ -298,6 +330,21 @@ fn cmd_goodput(args: &Args) -> Result<()> {
         cluster.fabric = hetsim::config::cluster::FabricSpec::parse(f)?;
     }
     let mb_limit = args.opt_u64("mb-limit", 2)?;
+    let horizon_s = args.opt_f64("horizon-s", 86_400.0)?;
+    let mtbf_scale = args.opt_f64("mtbf-scale", 1.0)?;
+    // --rack-size enables the correlated failure-domain process on top
+    // of the per-node MTBF schedule (DESIGN.md §28); --domain-mtbf-h
+    // sets the per-rack MTBF (default: half a year)
+    let domains = if args.opt("rack-size").is_some() {
+        Some(hetsim::system::failure::DomainSpec {
+            rack_size: args.opt_u64("rack-size", 4)? as u32,
+            mtbf_hours: args.opt_f64("domain-mtbf-h", 4380.0)?,
+            horizon_s,
+            scale: mtbf_scale,
+        })
+    } else {
+        None
+    };
     let opts = hetsim::report::goodput::SweepOptions {
         plan: hetsim::planner::PlanOptions {
             microbatch_limit: if mb_limit == 0 { None } else { Some(mb_limit) },
@@ -306,9 +353,11 @@ fn cmd_goodput(args: &Args) -> Result<()> {
             fold: FoldMode::parse(args.opt_or("fold", "off"))?,
         },
         top: args.opt_u64("top", 5)? as usize,
-        horizon_s: args.opt_f64("horizon-s", 86_400.0)?,
-        mtbf_scale: args.opt_f64("mtbf-scale", 1.0)?,
+        horizon_s,
+        mtbf_scale,
         seed: args.opt_u64("seed", 42)?,
+        domains,
+        mc: args.opt_u64("mc", 0)? as u32,
         ..Default::default()
     };
     println!(
@@ -321,10 +370,17 @@ fn cmd_goodput(args: &Args) -> Result<()> {
     let rep = hetsim::report::goodput::sweep(&model, &cluster, &opts)?;
     print!("{}", rep.render());
     let best = rep.best();
-    println!(
-        "\nbest by goodput: {} — {:.1} useful tokens/s (availability {:.4})",
-        best.plan, best.goodput.goodput_tokens_per_s, best.goodput.availability
-    );
+    match &best.mc {
+        Some(m) => println!(
+            "\nbest by ci95-lo: {} — mean {:.1} tok/s, 95% CI [{:.1}, {:.1}] \
+             over {} trajectories ({} halted)",
+            best.plan, m.mean, m.ci95_lo, m.ci95_hi, m.trajectories, m.halted
+        ),
+        None => println!(
+            "\nbest by goodput: {} — {:.1} useful tokens/s (availability {:.4})",
+            best.plan, best.goodput.goodput_tokens_per_s, best.goodput.availability
+        ),
+    }
     Ok(())
 }
 

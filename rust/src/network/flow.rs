@@ -133,6 +133,11 @@ pub struct FlowSim {
     /// distinct (src, dst) is assembled once per simulation run and
     /// shared by every later flow between the endpoints.
     routes: RouteCache,
+    /// Links disabled by an in-progress NIC/link repair (DESIGN.md
+    /// §28). Empty in healthy runs — the start path then takes the
+    /// exact pre-degraded-mode route lookup, so the feature is
+    /// zero-cost when off.
+    dead_links: Vec<LinkId>,
     // --- reusable scratch (no per-rebalance allocation) ---
     scratch_residual: Vec<f64>, // per link
     link_in_scope: Vec<bool>,   // per link
@@ -162,6 +167,7 @@ impl FlowSim {
             link_members: vec![Vec::new(); nlinks],
             unrouted: Vec::new(),
             routes: RouteCache::new(),
+            dead_links: Vec::new(),
             scratch_residual: vec![0.0; nlinks],
             link_in_scope: vec![false; nlinks],
             scope_links: Vec::new(),
@@ -187,6 +193,18 @@ impl FlowSim {
         if self.keep_records {
             self.records.reserve(total);
         }
+    }
+
+    /// Enter degraded mode: every future route avoids `dead` via
+    /// [`RouteCache::get_avoiding`] detours. The route cache resets so
+    /// previously-materialized healthy routes cannot leak into the
+    /// degraded run. Callers must pre-check survivability
+    /// ([`crate::network::routing::route_avoiding`]) for the endpoint
+    /// pairs they will drive — starting a flow with no surviving route
+    /// panics. Passing an empty set restores healthy routing.
+    pub fn set_dead_links(&mut self, dead: Vec<LinkId>) {
+        self.dead_links = dead;
+        self.routes = RouteCache::new();
     }
 
     /// Flows currently in flight.
@@ -264,7 +282,13 @@ impl FlowSim {
             let start = posted.map(|p| p[i].min(now)).unwrap_or(now);
             let id = self.next_id;
             self.next_id += 1;
-            let (route, fixed) = self.routes.get(&self.topo, spec.src, spec.dst);
+            let (route, fixed) = if self.dead_links.is_empty() {
+                self.routes.get(&self.topo, spec.src, spec.dst)
+            } else {
+                self.routes
+                    .get_avoiding(&self.topo, spec.src, spec.dst, &self.dead_links)
+                    .expect("degraded flow with no surviving route (survivability is pre-checked)")
+            };
             let slot = self.alloc_slot();
             for l in &route.links {
                 // monotone ids keep the member list ascending

@@ -100,6 +100,126 @@ pub fn route(topo: &Topology, src_rank: u32, dst_rank: u32) -> Route {
     Route { links }
 }
 
+/// Compute a route that avoids every link in `dead`, or `None` when no
+/// such route exists — the degraded-mode companion of [`route`]
+/// (DESIGN.md §28).
+///
+/// The primary route is returned untouched when it already avoids the
+/// dead set (so degraded simulations perturb only the flows that
+/// actually crossed the failed hardware). Otherwise detour candidates
+/// are enumerated in deterministic ascending index order, mirroring the
+/// primary assembly per fabric:
+///
+/// * **RailOnly** — alternate shared rails, reached by NVLink hops on
+///   both endpoints when the rail is not the endpoint's own.
+/// * **SingleSwitch** — alternate (src NIC, dst NIC) pairs, NVLink
+///   detours to the GPUs owning them.
+/// * **LeafSpine** — alternate (src NIC, spine, dst NIC) triples.
+///
+/// Intra-node NVLink paths are never detoured: NVLink islands are not
+/// fault candidates ([`crate::system::failure::faulted_links`] only
+/// names NIC/fabric links), so a dead intra-node route means the caller
+/// passed a dead set this module does not model — `None` says so.
+pub fn route_avoiding(
+    topo: &Topology,
+    src_rank: u32,
+    dst_rank: u32,
+    dead: &[LinkId],
+) -> Option<Route> {
+    let primary = route(topo, src_rank, dst_rank);
+    if dead.is_empty() || primary.links.iter().all(|l| !dead.contains(l)) {
+        return Some(primary);
+    }
+    let (sn, sl) = topo.locate(src_rank);
+    let (dn, dl) = topo.locate(dst_rank);
+    if sn == dn {
+        return None;
+    }
+    let ok = |links: &[LinkId]| links.iter().all(|l| !dead.contains(l));
+    match topo.fabric {
+        FabricSpec::RailOnly => {
+            // alternate rails exist on both endpoints below the smaller
+            // node's rail count (the primary rail always qualifies too)
+            let rails = topo.node_gpus(sn).min(topo.node_gpus(dn));
+            for rail in 0..rails {
+                let mut links = Vec::with_capacity(8);
+                if sl != rail {
+                    links.push(topo.l_gpu_to_nvsw(sn, sl));
+                    links.push(topo.l_nvsw_to_gpu(sn, rail));
+                }
+                links.extend([
+                    topo.l_gpu_to_nic(sn, rail),
+                    topo.l_nic_up(sn, rail),
+                    topo.l_nic_down(dn, rail),
+                    topo.l_nic_to_gpu(dn, rail),
+                ]);
+                if rail != dl {
+                    links.push(topo.l_gpu_to_nvsw(dn, rail));
+                    links.push(topo.l_nvsw_to_gpu(dn, dl));
+                }
+                if ok(&links) {
+                    return Some(Route { links });
+                }
+            }
+            None
+        }
+        FabricSpec::SingleSwitch => {
+            for s_nic in 0..topo.node_gpus(sn) {
+                for d_nic in 0..topo.node_gpus(dn) {
+                    let mut links = Vec::with_capacity(8);
+                    if s_nic != sl {
+                        links.push(topo.l_gpu_to_nvsw(sn, sl));
+                        links.push(topo.l_nvsw_to_gpu(sn, s_nic));
+                    }
+                    links.extend([
+                        topo.l_gpu_to_nic(sn, s_nic),
+                        topo.l_nic_up(sn, s_nic),
+                        topo.l_nic_down(dn, d_nic),
+                        topo.l_nic_to_gpu(dn, d_nic),
+                    ]);
+                    if d_nic != dl {
+                        links.push(topo.l_gpu_to_nvsw(dn, d_nic));
+                        links.push(topo.l_nvsw_to_gpu(dn, dl));
+                    }
+                    if ok(&links) {
+                        return Some(Route { links });
+                    }
+                }
+            }
+            None
+        }
+        FabricSpec::LeafSpine { spines, .. } => {
+            for s_nic in 0..topo.node_gpus(sn) {
+                for spine in 0..spines {
+                    for d_nic in 0..topo.node_gpus(dn) {
+                        let mut links = Vec::with_capacity(10);
+                        if s_nic != sl {
+                            links.push(topo.l_gpu_to_nvsw(sn, sl));
+                            links.push(topo.l_nvsw_to_gpu(sn, s_nic));
+                        }
+                        links.extend([
+                            topo.l_gpu_to_nic(sn, s_nic),
+                            topo.l_nic_up(sn, s_nic),
+                            topo.l_leaf_up(sn, spine),
+                            topo.l_leaf_down(dn, spine),
+                            topo.l_nic_down(dn, d_nic),
+                            topo.l_nic_to_gpu(dn, d_nic),
+                        ]);
+                        if d_nic != dl {
+                            links.push(topo.l_gpu_to_nvsw(dn, d_nic));
+                            links.push(topo.l_nvsw_to_gpu(dn, dl));
+                        }
+                        if ok(&links) {
+                            return Some(Route { links });
+                        }
+                    }
+                }
+            }
+            None
+        }
+    }
+}
+
 /// Sum of fixed per-hop delays along a route (the QbbChannel part of a
 /// flow's completion time).
 pub fn fixed_delay(topo: &Topology, r: &Route) -> crate::util::units::Time {
@@ -140,6 +260,31 @@ impl RouteCache {
                 (r.clone(), *d)
             }
         }
+    }
+
+    /// Degraded-mode variant of [`RouteCache::get`]: routes are
+    /// materialized through [`route_avoiding`] against `dead`, so pairs
+    /// untouched by the dead set keep their primary route and affected
+    /// pairs cache their detour. Returns `None` when no route survives.
+    ///
+    /// A cache instance must be used with one consistent dead set —
+    /// entries do not record which set they were computed under
+    /// ([`crate::network::flow::FlowSim::set_dead_links`] resets the
+    /// cache when the set changes).
+    pub fn get_avoiding(
+        &mut self,
+        topo: &Topology,
+        src: u32,
+        dst: u32,
+        dead: &[LinkId],
+    ) -> Option<(Arc<Route>, Time)> {
+        if let Some((r, d)) = self.entries.get(&(src, dst)) {
+            return Some((r.clone(), *d));
+        }
+        let r = Arc::new(route_avoiding(topo, src, dst, dead)?);
+        let d = fixed_delay(topo, &r);
+        self.entries.insert((src, dst), (r.clone(), d));
+        Some((r, d))
     }
 
     /// Distinct (src, dst) pairs materialized so far.
@@ -314,6 +459,82 @@ mod tests {
         // both directions of one pair may use different spines — but
         // each is deterministic
         assert_eq!(route(&t, 3, 12), route(&t, 3, 12));
+    }
+
+    #[test]
+    fn route_avoiding_detours_around_dead_rails() {
+        let t = topo(2);
+        let primary = route(&t, 7, 15); // rail 7 both sides
+        // no dead set: the primary route comes back untouched
+        assert_eq!(route_avoiding(&t, 7, 15, &[]), Some(primary.clone()));
+        // kill rail 7's uplink pair on node 0: the detour must use
+        // another rail via NVLink hops on both endpoints
+        let dead = vec![t.l_nic_up(0, 7), t.l_nic_down(0, 7)];
+        let r = route_avoiding(&t, 7, 15, &dead).unwrap();
+        assert_ne!(r, primary);
+        assert!(r.links.iter().all(|l| !dead.contains(l)));
+        // the detour is a contiguous path ending at the destination GPU
+        for w in r.links.windows(2) {
+            assert_eq!(t.link(w[0]).to, t.link(w[1]).from);
+        }
+        assert_eq!(t.link(*r.links.last().unwrap()).to, NodeRef::Gpu { node: 1, local: 7 });
+        // unaffected pairs keep their primary routes exactly
+        assert_eq!(route_avoiding(&t, 3, 11, &dead), Some(route(&t, 3, 11)));
+        // intra-node traffic never detours (NVLink is not a fault
+        // candidate) and survives any NIC-side dead set
+        assert_eq!(route_avoiding(&t, 0, 7, &dead), Some(route(&t, 0, 7)));
+
+        // a single-rail pair has no detour: killing the only rail
+        // severs the route entirely
+        let mut c = presets::cluster("ampere", 2).unwrap();
+        c.nodes[0].gpus_per_node = 1;
+        c.nodes[1].gpus_per_node = 1;
+        let t1 = Topology::build(&c).unwrap();
+        let dead = vec![t1.l_nic_up(0, 0), t1.l_nic_down(0, 0)];
+        assert_eq!(route_avoiding(&t1, 0, 1, &dead), None);
+    }
+
+    #[test]
+    fn route_avoiding_uses_alternate_spines() {
+        let mut c = presets::cluster("ampere", 2).unwrap();
+        c.fabric = crate::config::cluster::FabricSpec::LeafSpine {
+            spines: 2,
+            oversubscription: 2.0,
+        };
+        let t = Topology::build(&c).unwrap();
+        let primary = route(&t, 3, 12);
+        let spine = t.spine_for(3, 12);
+        // kill the primary spine's uplinks on the source node
+        let dead = vec![t.l_leaf_up(0, spine), t.l_leaf_down(0, spine)];
+        let r = route_avoiding(&t, 3, 12, &dead).unwrap();
+        assert_ne!(r, primary);
+        assert!(r.links.iter().all(|l| !dead.contains(l)));
+        assert!(r.links.contains(&t.l_leaf_up(0, 1 - spine)));
+        for w in r.links.windows(2) {
+            assert_eq!(t.link(w[0]).to, t.link(w[1]).from);
+        }
+        // a single-spine fabric has no alternate: the route is severed
+        let mut c1 = presets::cluster("ampere", 2).unwrap();
+        c1.fabric = crate::config::cluster::FabricSpec::LeafSpine {
+            spines: 1,
+            oversubscription: 2.0,
+        };
+        let t1 = Topology::build(&c1).unwrap();
+        let dead = vec![t1.l_leaf_up(0, 0), t1.l_leaf_down(0, 0)];
+        assert_eq!(route_avoiding(&t1, 3, 12, &dead), None);
+    }
+
+    #[test]
+    fn route_cache_get_avoiding_caches_detours() {
+        let t = topo(2);
+        let dead = vec![t.l_nic_up(0, 7), t.l_nic_down(0, 7)];
+        let mut cache = RouteCache::new();
+        let (r1, d1) = cache.get_avoiding(&t, 7, 15, &dead).unwrap();
+        assert_eq!(*r1, route_avoiding(&t, 7, 15, &dead).unwrap());
+        assert_eq!(d1, fixed_delay(&t, &r1));
+        let (r2, _) = cache.get_avoiding(&t, 7, 15, &dead).unwrap();
+        assert!(Arc::ptr_eq(&r1, &r2));
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

@@ -338,6 +338,24 @@ impl Topology {
     pub fn l_leaf_down(&self, node: u32, spine: u32) -> LinkId {
         self.leaf_down[(node * self.spines + spine) as usize]
     }
+
+    /// Every link tied to one NIC slot, in `[host→NIC, NIC→host,
+    /// NIC→fabric, fabric→NIC]` order — the shared-fate set a NIC fault
+    /// disables (DESIGN.md §28).
+    pub fn nic_links(&self, node: u32, local: u32) -> [LinkId; 4] {
+        [
+            self.l_gpu_to_nic(node, local),
+            self.l_nic_to_gpu(node, local),
+            self.l_nic_up(node, local),
+            self.l_nic_down(node, local),
+        ]
+    }
+
+    /// Both directions of one leaf↔spine uplink of a node (leaf/spine
+    /// fabric only) — the shared-fate set a cable fault disables there.
+    pub fn leaf_uplinks(&self, node: u32, spine: u32) -> [LinkId; 2] {
+        [self.l_leaf_up(node, spine), self.l_leaf_down(node, spine)]
+    }
 }
 
 // ---------------------------------------------------------------------

@@ -86,8 +86,13 @@ pub struct EvaluatedPlan {
     /// Effective goodput (useful tokens per wall-clock second) under an
     /// MTBF-driven fault schedule. `None` until filled in by
     /// [`crate::report::goodput::annotate`] — the search itself ranks
-    /// on fault-free iteration time.
+    /// on fault-free iteration time. Under Monte-Carlo annotation this
+    /// is the lower 95% confidence bound on mean goodput.
     pub goodput: Option<f64>,
+    /// 95% confidence interval `(lo, hi)` on mean Monte-Carlo goodput.
+    /// `None` unless [`crate::report::goodput::annotate`] ran with
+    /// trajectories (the `--objective goodput-ci` path).
+    pub goodput_ci: Option<(f64, f64)>,
 }
 
 /// The full search result.
@@ -131,10 +136,14 @@ impl PlanSearchReport {
         // so fault-free renders stay byte-identical to the pre-failure
         // layout (golden fingerprints depend on this)
         let with_goodput = self.ranked.iter().any(|ev| ev.goodput.is_some());
+        let with_ci = self.ranked.iter().any(|ev| ev.goodput_ci.is_some());
         let mut cols: Vec<&str> =
             vec!["rank", "plan", "iteration", "compute-busy", "comm-busy", "flows", "vs default"];
         if with_goodput {
             cols.push("goodput tok/s");
+        }
+        if with_ci {
+            cols.push("goodput ci95");
         }
         let mut t = Table::new("Ranked parallelism plans (one simulated iteration)", &cols);
         let base = self.baseline.iteration_time.as_secs();
@@ -154,6 +163,12 @@ impl PlanSearchReport {
             if with_goodput {
                 row.push(match ev.goodput {
                     Some(g) => format!("{g:.0}"),
+                    None => "-".to_string(),
+                });
+            }
+            if with_ci {
+                row.push(match ev.goodput_ci {
+                    Some((lo, hi)) => format!("[{lo:.0}, {hi:.0}]"),
                     None => "-".to_string(),
                 });
             }
@@ -226,6 +241,7 @@ fn evaluate(
         flows_completed: score.flows_completed,
         events_processed: score.events_processed,
         goodput: None,
+        goodput_ci: None,
     })
 }
 

@@ -20,7 +20,10 @@
 //! the `hetsim plan --goodput` pipeline — candidate search, then an
 //! effective-goodput walk over an MTBF fault schedule with survivor
 //! re-plans — on the fig3 and `hetero:1,1` scenarios, gated on
-//! plans/sec.
+//! plans/sec. Its Monte-Carlo sibling `goodput_mc` (DESIGN.md §28)
+//! scores every ranked fig3 plan over 16 correlated-fault trajectories
+//! — the `hetsim plan --objective goodput-ci` hot path — gated on
+//! trajectories/sec.
 //!
 //! A serving case rides along too (DESIGN.md §27): `serve_throughput`
 //! runs the `hetsim serve-sim` pipeline — seeded Poisson trace,
@@ -253,18 +256,24 @@ pub fn run(quick: bool, threads: usize) -> anyhow::Result<Vec<BenchCase>> {
     //    plans/sec; events counts the ranked candidates' iterations.
     out.push(goodput_sweep_case(threads)?);
 
-    // 7. serving throughput (DESIGN.md §27): the `hetsim serve-sim`
+    // 7. Monte-Carlo goodput (DESIGN.md §28): plan search + 16
+    //    correlated-fault trajectories per ranked plan, scored by the
+    //    ci95 lower bound — the `hetsim plan --objective goodput-ci`
+    //    hot path. Gated on trajectories/sec.
+    out.push(goodput_mc_case(threads)?);
+
+    // 8. serving throughput (DESIGN.md §27): the `hetsim serve-sim`
     //    pipeline — Poisson trace, continuous-batching loop with KV
     //    admission — gated on completed requests/sec
     out.push(serve_throughput_case(quick, threads)?);
 
-    // 8. symmetry-folding head-to-head (DESIGN.md §25): the same
+    // 9. symmetry-folding head-to-head (DESIGN.md §25): the same
     //    DP-heavy candidate evaluated repeatedly with fold=off and
     //    fold=auto. The gated metric is the throughput *ratio*, so the
     //    baseline floor encodes the ≥10x acceptance bar directly.
     out.push(fold_speedup_case(quick)?);
 
-    // 9. rank-scaling ladder: leaf/spine clusters up to 100k ranks,
+    // 10. rank-scaling ladder: leaf/spine clusters up to 100k ranks,
     //    fold=auto (unfolded, the 100k DP ring alone is ~2e10 flows —
     //    these rungs exist *because* of folding). Runs last and
     //    ascending so the monotone VmHWM reading is attributable.
@@ -317,6 +326,60 @@ fn goodput_sweep_case(threads: usize) -> anyhow::Result<BenchCase> {
     }
     let wall = t0.elapsed().as_secs_f64();
     Ok(case("goodput_sweep", wall, plans, events, details.join("; ")))
+}
+
+/// The `goodput_mc` case: plan search + Monte-Carlo goodput annotation
+/// — 16 correlated-fault trajectories per ranked fig3 plan (domain
+/// blasts on 2-node racks riding on the per-node MTBF schedule),
+/// scored by the ci95 lower bound with memoized survivor re-plans.
+/// `candidates` counts trajectories walked (the gated rate); `events`
+/// counts the ranked candidates' iterations, as in `goodput_sweep`.
+fn goodput_mc_case(threads: usize) -> anyhow::Result<BenchCase> {
+    use crate::system::failure::DomainSpec;
+    const TRAJECTORIES: u32 = 16;
+    let m = fig3_model()?;
+    let c = fig3_cluster()?;
+    let popts = PlanOptions {
+        microbatch_limit: Some(1),
+        threads,
+        refine_steps: 0,
+        fold: FoldMode::Off,
+    };
+    let t0 = Instant::now();
+    let mut rep = search(&m, &c, &popts)?;
+    let events = rep.ranked.iter().map(|ev| ev.events_processed).sum::<u64>();
+    let gopts = SweepOptions {
+        plan: popts,
+        horizon_s: 86_400.0,
+        mtbf_scale: 8.0,
+        seed: 42,
+        mc: TRAJECTORIES,
+        domains: Some(DomainSpec {
+            rack_size: 2,
+            mtbf_hours: 800.0,
+            horizon_s: 86_400.0,
+            scale: 8.0,
+        }),
+        ..Default::default()
+    };
+    annotate(&mut rep, &m, &c, &gopts);
+    let wall = t0.elapsed().as_secs_f64();
+    let trajectories = rep.ranked.len() as u64 * u64::from(TRAJECTORIES);
+    let best = rep.best();
+    let ci = best.goodput_ci.unwrap_or((0.0, 0.0));
+    Ok(case(
+        "goodput_mc",
+        wall,
+        trajectories,
+        events,
+        format!(
+            "fig3: {} plans x {TRAJECTORIES} trajectories, best {} ci95 [{:.0}, {:.0}] tok/s",
+            rep.ranked.len(),
+            best.candidate.key(),
+            ci.0,
+            ci.1
+        ),
+    ))
 }
 
 /// The `serve_throughput` case: one `hetsim serve-sim` run — seeded

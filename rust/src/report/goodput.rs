@@ -1,4 +1,4 @@
-//! Effective-goodput reporting under failures (DESIGN.md §26).
+//! Effective-goodput reporting under failures (DESIGN.md §26, §28).
 //!
 //! Iteration time alone mispredicts what a plan delivers at scale:
 //! MTBF makes failures routine, and a plan that is 5% faster but loses
@@ -13,25 +13,44 @@
 //! τ = iteration_s · straggler_mult + checkpoint_write_s / interval
 //! ```
 //!
-//! Each fail-stop charges the *expected* lost work — half a checkpoint
-//! interval of iterations at the current effective rate — plus the
-//! checkpoint restore time and the fixed restart warmup. A permanent
-//! node loss additionally re-runs the planner on the surviving cluster
-//! (each [`crate::planner::search`] run shares its
+//! Fault classes are charged differently. A **node loss** charges the
+//! *expected* lost work — half a checkpoint interval of iterations at
+//! the current effective rate — plus the checkpoint restore time and
+//! the fixed restart warmup, then re-runs the planner on the surviving
+//! cluster (each [`crate::planner::search`] run shares its
 //! [`crate::simulator::EvalContext`] across candidates) and splices
 //! the new plan's per-iteration cost, floored at the pre-loss cost so
-//! goodput is monotone under event-set inclusion (the same property
-//! [`crate::system::failure::mtbf_schedule`] guarantees on the event
-//! side). The walk itself is sequential and allocation-light, so a
-//! goodput figure is deterministic for a given spec regardless of how
-//! many worker threads scored the plans.
+//! goodput is monotone under event-set inclusion. Same-instant node
+//! losses (a correlated [`domain_schedule`] blast) coalesce into
+//! **one** incident: one recovery penalty, one replan on the final
+//! survivor set. A **NIC or link outage** is repairable: it charges
+//! only half an iteration plus the warmup (no checkpoint restore —
+//! state survives in device memory), then either runs *degraded*
+//! until the [`RepairSpec`] window closes (when the [`DegradedModel`]
+//! finds a surviving detour route) or hard-stops until repair (when
+//! no route survives, or no model was supplied).
+//!
+//! The walk itself is sequential and allocation-light, so a goodput
+//! figure is deterministic for a given spec regardless of how many
+//! worker threads scored the plans. [`monte_carlo`] lifts the walk to
+//! N seeded trajectories ([`trajectory_seed`] is index-keyed, so the
+//! trajectory set nests as N grows and the result is independent of
+//! the thread count), and [`mc_stats`] condenses them into
+//! mean / p5 / p95 / 95% confidence bounds for blast-radius-aware
+//! ranking (`--objective goodput-ci` scores by [`McGoodput::ci95_lo`]).
 
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 use crate::config::cluster::ClusterSpec;
 use crate::config::model::ModelSpec;
 use crate::planner::{search, PlanOptions, PlanSearchReport};
-use crate::system::failure::{mtbf_schedule, CheckpointSpec, FaultEvent, FaultKind};
+use crate::system::failure::{
+    domain_schedule, mtbf_schedule, CheckpointSpec, DegradedModel, DomainSpec, FailureDomains,
+    FaultClass, FaultEvent, FaultKind, RepairSpec,
+};
+use crate::util::par::parallel_map;
+use crate::util::stats::Samples;
 use crate::util::table::Table;
 use crate::util::units::Time;
 
@@ -50,6 +69,16 @@ pub struct GoodputInput<'a> {
     pub dp: u32,
     /// Checkpoint/restore cost model.
     pub checkpoint: CheckpointSpec,
+    /// Repair windows for NIC / link outages.
+    pub repair: RepairSpec,
+    /// Degraded-mode routing model for the cluster's fabric; `None`
+    /// treats unrepaired NIC/link outages as hard stops (no reroute
+    /// analysis available).
+    pub degraded: Option<&'a DegradedModel>,
+    /// Fraction of an iteration spent on exposed communication, in
+    /// `[0, 1]` — scales how much a degraded fabric slows the plan
+    /// ([`DegradedModel::slowdown`]).
+    pub comm_fraction: f64,
     /// Wall-clock horizon to integrate over, in seconds.
     pub horizon_s: f64,
 }
@@ -65,15 +94,19 @@ pub struct GoodputReport {
     /// The integration horizon, echoed for rate/total conversions.
     pub horizon_s: f64,
     /// Wall-clock seconds spent on recovery (lost work, restore,
-    /// warmup) or halted outright.
+    /// warmup), degraded-mode shortfall, or halted outright.
     pub lost_s: f64,
     /// `1 - lost_s / horizon_s`, clamped to `[0, 1]`.
     pub availability: f64,
-    /// Fail-stop events that actually struck a live node.
+    /// Permanent node losses that struck a live node (a correlated
+    /// blast counts each member, but charges one incident).
     pub fail_stops: usize,
+    /// Repairable NIC/link outages that struck a live node.
+    pub link_outages: usize,
     /// Straggler events that slowed a live node.
     pub stragglers: usize,
-    /// Node losses that triggered a planner re-run on the survivors.
+    /// Loss incidents that triggered a planner re-run on the survivors
+    /// (one per coalesced blast, not one per node).
     pub replans: usize,
     /// True when training halted before the horizon (no surviving
     /// nodes, or no feasible plan on the survivors).
@@ -98,6 +131,53 @@ fn surviving(cluster: &ClusterSpec, alive: &[bool]) -> ClusterSpec {
     c
 }
 
+/// Wall-clock / token accrual state for one goodput walk, including
+/// the degraded-mode window: `[t, deg_until)` runs at `deg_slow`
+/// times the healthy iteration cost, with the shortfall charged to
+/// `lost`.
+struct WalkAcct {
+    tokens_per_iter: f64,
+    ckpt_overhead: f64,
+    horizon: f64,
+    t: f64,
+    useful: f64,
+    lost: f64,
+    deg_until: f64,
+    deg_slow: f64,
+}
+
+impl WalkAcct {
+    fn tau(&self, iter_s: f64, mult: f64) -> f64 {
+        (iter_s * mult + self.ckpt_overhead).max(f64::MIN_POSITIVE)
+    }
+
+    /// Advance wall-clock to `target` (clamped to the horizon),
+    /// accruing useful tokens at the degraded rate while inside the
+    /// degraded window and at the healthy rate after it. The degraded
+    /// shortfall — time not converted to tokens relative to the
+    /// healthy rate — is charged to `lost`, so degraded running never
+    /// scores better than healthy running (monotonicity).
+    fn advance(&mut self, target: f64, iter_s: f64, mult: f64) {
+        let target = target.min(self.horizon);
+        if target <= self.t {
+            return;
+        }
+        let healthy = self.tau(iter_s, mult);
+        if self.t < self.deg_until {
+            let span = target.min(self.deg_until) - self.t;
+            let slowed = self.tau(iter_s, mult * self.deg_slow);
+            self.useful += span / slowed * self.tokens_per_iter;
+            self.lost += span * (1.0 - healthy / slowed);
+            self.t += span;
+        }
+        if target > self.t {
+            let span = target - self.t;
+            self.useful += span / healthy * self.tokens_per_iter;
+            self.t = target;
+        }
+    }
+}
+
 /// Walk a sorted fault schedule over `[0, horizon_s]` and integrate
 /// useful tokens. `replan` maps a surviving cluster to its best
 /// per-iteration time (`None` = no feasible plan, training halts);
@@ -106,9 +186,13 @@ fn surviving(cluster: &ClusterSpec, alive: &[bool]) -> ClusterSpec {
 ///
 /// Monotonicity: adding events to the schedule never increases the
 /// returned goodput — every event only ever adds recovery time,
-/// raises the straggler multiplier (max-persistent), or raises the
+/// raises the straggler multiplier (max-persistent), widens the
+/// degraded window (max-coalesced end and slowdown), or raises the
 /// floored iteration cost. Combined with the nested-thinning schedule
-/// construction, goodput is monotone non-increasing in the MTBF scale.
+/// construction, goodput is monotone non-increasing in the MTBF scale
+/// when repair windows are zero; with nonzero repair a node loss can
+/// moot a later repairable outage's charge, so the strict guarantee
+/// is stated for the zero-repair regime.
 pub fn walk(
     input: &GoodputInput<'_>,
     events: &[FaultEvent],
@@ -119,60 +203,127 @@ pub fn walk(
     // weights + fp32 Adam moments and master copy, sharded dp ways
     let ckpt_bytes = input.model.param_count() as f64 * (input.model.dtype_bytes + 12) as f64;
     let write_s = ckpt_bytes / (ckpt.write_gbps * 1e9 * input.dp.max(1) as f64);
-    let ckpt_overhead = write_s / ckpt.interval_iters as f64;
-    let tau = |iter_s: f64, mult: f64| (iter_s * mult + ckpt_overhead).max(f64::MIN_POSITIVE);
+    let mut acct = WalkAcct {
+        tokens_per_iter,
+        ckpt_overhead: write_s / ckpt.interval_iters as f64,
+        horizon: input.horizon_s,
+        t: 0.0,
+        useful: 0.0,
+        lost: 0.0,
+        deg_until: 0.0,
+        deg_slow: 1.0,
+    };
 
     let mut iter_s = input.iteration.as_secs();
     let mut mult = 1.0f64;
     let mut alive = vec![true; input.cluster.nodes.len()];
-    let (mut t, mut useful, mut lost) = (0.0f64, 0.0f64, 0.0f64);
-    let (mut fail_stops, mut stragglers, mut replans) = (0usize, 0usize, 0usize);
+    let (mut fail_stops, mut link_outages) = (0usize, 0usize);
+    let (mut stragglers, mut replans) = (0usize, 0usize);
     let mut halted = false;
 
-    for ev in events {
+    let mut i = 0usize;
+    'events: while i < events.len() {
+        let ev = events[i];
         if ev.at_s > input.horizon_s {
             break;
         }
         // if recovery from a previous fault is still in progress, the
         // new fault takes effect once the job is back up
-        let fire = ev.at_s.max(t);
+        let fire = ev.at_s.max(acct.t);
         if fire >= input.horizon_s {
             break;
         }
-        useful += (fire - t) / tau(iter_s, mult) * tokens_per_iter;
-        t = fire;
-        let node = ev.kind.node() as usize;
-        if !alive[node] {
-            continue; // faults on an already-dead node are moot
-        }
+        acct.advance(fire, iter_s, mult);
         match ev.kind {
-            FaultKind::Straggler { mult: m, .. } => {
+            FaultKind::Straggler { node, mult: m } => {
+                i += 1;
+                if !alive[node as usize] {
+                    continue; // faults on an already-dead node are moot
+                }
                 stragglers += 1;
                 mult = mult.max(m);
             }
-            kind => {
-                fail_stops += 1;
+            FaultKind::NodeFail { .. } => {
+                // Coalesce a same-instant blast (a correlated failure
+                // domain emits one NodeFail per member at a bit-equal
+                // timestamp, adjacent after the (at_s, node) sort) into
+                // ONE incident: one recovery penalty, one replan on the
+                // final survivor set.
+                let mut struck = Vec::new();
+                while i < events.len() {
+                    match events[i].kind {
+                        FaultKind::NodeFail { node }
+                            if events[i].at_s.to_bits() == ev.at_s.to_bits() =>
+                        {
+                            if alive[node as usize] {
+                                struck.push(node as usize);
+                            }
+                            i += 1;
+                        }
+                        _ => break,
+                    }
+                }
+                if struck.is_empty() {
+                    continue;
+                }
+                fail_stops += struck.len();
                 // expected lost work: half a checkpoint interval at the
                 // current effective rate, plus restore + warmup
-                let penalty = 0.5 * ckpt.interval_iters as f64 * tau(iter_s, mult)
+                let penalty = 0.5 * ckpt.interval_iters as f64 * acct.tau(iter_s, mult)
                     + write_s
                     + ckpt.restart_warmup_s;
-                lost += penalty;
-                t += penalty;
-                if matches!(kind, FaultKind::NodeFail { .. }) {
-                    alive[node] = false;
-                    let rest = surviving(input.cluster, &alive);
-                    if rest.nodes.is_empty() {
+                acct.lost += penalty;
+                acct.t += penalty;
+                for n in struck {
+                    alive[n] = false;
+                }
+                let rest = surviving(input.cluster, &alive);
+                if rest.nodes.is_empty() {
+                    halted = true;
+                    break 'events;
+                }
+                replans += 1;
+                match replan(&rest) {
+                    // floor at the pre-loss cost (monotonicity)
+                    Some(new_iter) => iter_s = iter_s.max(new_iter.as_secs()),
+                    None => {
                         halted = true;
-                        break;
+                        break 'events;
                     }
-                    replans += 1;
-                    match replan(&rest) {
-                        // floor at the pre-loss cost (monotonicity)
-                        Some(new_iter) => iter_s = iter_s.max(new_iter.as_secs()),
-                        None => {
-                            halted = true;
-                            break;
+                }
+            }
+            FaultKind::NicFail { node } | FaultKind::LinkFail { node } => {
+                i += 1;
+                if !alive[node as usize] {
+                    continue;
+                }
+                let class = if matches!(ev.kind, FaultKind::NicFail { .. }) {
+                    FaultClass::Nic
+                } else {
+                    FaultClass::Link
+                };
+                link_outages += 1;
+                // the job reconnects from device memory: half an
+                // in-flight iteration plus warmup, no checkpoint restore
+                let penalty = 0.5 * acct.tau(iter_s, mult) + ckpt.restart_warmup_s;
+                acct.lost += penalty;
+                acct.t += penalty;
+                let repair_end = ev.at_s + input.repair.for_class(class);
+                match input.degraded.and_then(|d| d.slowdown(node, class, input.comm_fraction))
+                {
+                    // a detour route survives: run degraded until repair
+                    Some(s) if repair_end > acct.t => {
+                        acct.deg_until = acct.deg_until.max(repair_end);
+                        acct.deg_slow = acct.deg_slow.max(s);
+                    }
+                    Some(_) => {} // repaired within the restart penalty
+                    // no surviving route (or no reroute model): hard
+                    // outage until the repair lands
+                    None => {
+                        let end = repair_end.min(input.horizon_s);
+                        if end > acct.t {
+                            acct.lost += end - acct.t;
+                            acct.t = end;
                         }
                     }
                 }
@@ -180,21 +331,100 @@ pub fn walk(
         }
     }
     if halted {
-        lost += (input.horizon_s - t).max(0.0);
-    } else if t < input.horizon_s {
-        useful += (input.horizon_s - t) / tau(iter_s, mult) * tokens_per_iter;
+        acct.lost += (input.horizon_s - acct.t).max(0.0);
+        acct.t = input.horizon_s;
+    } else {
+        acct.advance(input.horizon_s, iter_s, mult);
     }
     GoodputReport {
-        goodput_tokens_per_s: useful / input.horizon_s.max(f64::MIN_POSITIVE),
-        useful_tokens: useful,
+        goodput_tokens_per_s: acct.useful / input.horizon_s.max(f64::MIN_POSITIVE),
+        useful_tokens: acct.useful,
         horizon_s: input.horizon_s,
-        lost_s: lost,
-        availability: (1.0 - lost / input.horizon_s.max(f64::MIN_POSITIVE)).clamp(0.0, 1.0),
+        lost_s: acct.lost,
+        availability: (1.0 - acct.lost / input.horizon_s.max(f64::MIN_POSITIVE)).clamp(0.0, 1.0),
         fail_stops,
+        link_outages,
         stragglers,
         replans,
         halted,
         final_iteration_s: iter_s,
+    }
+}
+
+/// The seed for Monte-Carlo trajectory `index`. Index 0 maps to the
+/// base seed itself — a 1-trajectory Monte-Carlo run is bit-identical
+/// to the single deterministic walk — and each index's seed is
+/// independent of the trajectory count, so the trajectory set for
+/// `N = 4` is an exact prefix of the set for `N = 16`.
+pub fn trajectory_seed(seed: u64, index: u32) -> u64 {
+    seed ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Run [`walk`] over `trajectories` independently drawn fault
+/// schedules. `draw(i)` materializes the schedule for trajectory `i`
+/// (callers seed it with [`trajectory_seed`]); `replan` must be
+/// `Sync` — trajectories run on `threads` workers via
+/// [`parallel_map`], and the result vector is index-ordered, so the
+/// output is byte-identical for any thread count.
+pub fn monte_carlo<D, R>(
+    input: &GoodputInput<'_>,
+    draw: D,
+    trajectories: u32,
+    threads: usize,
+    replan: R,
+) -> Vec<GoodputReport>
+where
+    D: Fn(u32) -> Vec<FaultEvent> + Sync,
+    R: Fn(&ClusterSpec) -> Option<Time> + Sync,
+{
+    parallel_map(trajectories as usize, threads, |i| {
+        let events = draw(i as u32);
+        let mut wrap = |rest: &ClusterSpec| replan(rest);
+        walk(input, &events, &mut wrap)
+    })
+}
+
+/// Distribution summary over one plan's Monte-Carlo trajectories.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct McGoodput {
+    /// Number of trajectories summarized.
+    pub trajectories: usize,
+    /// Mean goodput (tokens/s) across trajectories.
+    pub mean: f64,
+    /// 5th-percentile goodput — the near-worst-case trajectory.
+    pub p5: f64,
+    /// 95th-percentile goodput — the near-best-case trajectory.
+    pub p95: f64,
+    /// Lower 95% confidence bound on the mean
+    /// (`mean − 1.96·sd/√n`) — the `--objective goodput-ci` score.
+    pub ci95_lo: f64,
+    /// Upper 95% confidence bound on the mean.
+    pub ci95_hi: f64,
+    /// Sample standard deviation of per-trajectory goodput.
+    pub stddev: f64,
+    /// Trajectories that halted before the horizon.
+    pub halted: usize,
+}
+
+/// Condense Monte-Carlo walk results into mean / p5 / p95 and a 95%
+/// confidence interval on the mean.
+pub fn mc_stats(reports: &[GoodputReport]) -> McGoodput {
+    let mut s = Samples::with_capacity(reports.len());
+    for r in reports {
+        s.push(r.goodput_tokens_per_s);
+    }
+    let mean = s.mean();
+    let sd = s.stddev();
+    let half = if reports.is_empty() { 0.0 } else { 1.96 * sd / (reports.len() as f64).sqrt() };
+    McGoodput {
+        trajectories: reports.len(),
+        mean,
+        p5: s.percentile(5.0),
+        p95: s.percentile(95.0),
+        ci95_lo: mean - half,
+        ci95_hi: mean + half,
+        stddev: sd,
+        halted: reports.iter().filter(|r| r.halted).count(),
     }
 }
 
@@ -211,10 +441,19 @@ pub struct SweepOptions {
     /// MTBF failure-rate scale (1.0 = the per-arch table as-is;
     /// clamped at [`crate::system::failure::SCALE_CAP`]).
     pub mtbf_scale: f64,
-    /// Seed for the MTBF schedule.
+    /// Seed for the MTBF schedule (and, via [`trajectory_seed`], for
+    /// every Monte-Carlo trajectory).
     pub seed: u64,
     /// Checkpoint/restore cost model.
     pub checkpoint: CheckpointSpec,
+    /// Repair windows for NIC / link outages.
+    pub repair: RepairSpec,
+    /// Correlated failure-domain process layered on top of the
+    /// per-node MTBF schedule (`None` = independent node faults only).
+    pub domains: Option<DomainSpec>,
+    /// Monte-Carlo trajectories per plan (0 = one deterministic walk;
+    /// ≥ 1 ranks by the lower 95% confidence bound on mean goodput).
+    pub mc: u32,
 }
 
 impl Default for SweepOptions {
@@ -226,6 +465,9 @@ impl Default for SweepOptions {
             mtbf_scale: 1.0,
             seed: 42,
             checkpoint: CheckpointSpec::default(),
+            repair: RepairSpec::default(),
+            domains: None,
+            mc: 0,
         }
     }
 }
@@ -239,17 +481,22 @@ pub struct SweepEntry {
     pub iteration: Time,
     /// The plan's DP degree (checkpoint sharding width).
     pub dp: u32,
-    /// The goodput walk's result for this plan.
+    /// The goodput walk's result for this plan (trajectory 0 when
+    /// Monte-Carlo is on — the deterministic base schedule).
     pub goodput: GoodputReport,
+    /// Monte-Carlo distribution summary, when `mc ≥ 1`.
+    pub mc: Option<McGoodput>,
 }
 
 /// The `hetsim goodput` result: top plans re-ranked by effective
 /// goodput under an MTBF schedule.
 #[derive(Debug, Clone)]
 pub struct SweepReport {
-    /// Entries sorted by goodput, best first (key tie-break).
+    /// Entries sorted by goodput (lower CI bound under Monte-Carlo),
+    /// best first (key tie-break).
     pub entries: Vec<SweepEntry>,
-    /// Number of fault events in the materialized schedule.
+    /// Number of fault events in the materialized base schedule
+    /// (trajectory 0 when Monte-Carlo is on).
     pub events: usize,
     /// The integration horizon in seconds.
     pub horizon_s: f64,
@@ -263,8 +510,14 @@ impl SweepReport {
         &self.entries[0]
     }
 
-    /// Render the ranked goodput table plus a summary line.
+    /// Render the ranked goodput table plus a summary line. With
+    /// Monte-Carlo entries the table switches to distribution columns
+    /// (CI bounds, p5/p95); without them it is byte-identical to the
+    /// single-walk rendering.
     pub fn render(&self) -> String {
+        if self.entries.iter().any(|e| e.mc.is_some()) {
+            return self.render_mc();
+        }
         let mut t = Table::new(
             "Effective goodput under MTBF faults",
             &["rank", "plan", "goodput tok/s", "iteration", "avail", "fail-stops", "replans"],
@@ -290,97 +543,213 @@ impl SweepReport {
         ));
         s
     }
+
+    fn render_mc(&self) -> String {
+        let mut t = Table::new(
+            "Monte-Carlo effective goodput under MTBF + domain faults",
+            &["rank", "plan", "ci95-lo tok/s", "mean tok/s", "p5", "p95", "iteration", "halted"],
+        );
+        for (i, e) in self.entries.iter().enumerate() {
+            let m = e.mc.as_ref().expect("render_mc requires mc entries");
+            t.row(vec![
+                (i + 1).to_string(),
+                e.plan.clone(),
+                format!("{:.1}", m.ci95_lo),
+                format!("{:.1}", m.mean),
+                format!("{:.1}", m.p5),
+                format!("{:.1}", m.p95),
+                e.iteration.human(),
+                format!("{}/{}", m.halted, m.trajectories),
+            ]);
+        }
+        let trajectories =
+            self.entries.first().and_then(|e| e.mc.as_ref()).map(|m| m.trajectories).unwrap_or(0);
+        let mut s = t.markdown();
+        s.push_str(&format!(
+            "\n{} trajectories x {} base events over {:.0}s at {}x MTBF rate | best by ci95-lo: {}\n",
+            trajectories,
+            self.events,
+            self.horizon_s,
+            self.mtbf_scale,
+            self.entries.first().map(|e| e.plan.as_str()).unwrap_or("-"),
+        ));
+        s
+    }
 }
 
 /// The planner re-run used when a node loss shrinks the cluster:
-/// memoized per surviving-cluster shape so a sweep over many plans
-/// pays for each survivor search once.
-fn replan_cached<'a>(
+/// memoized per surviving-cluster shape so a sweep over many plans —
+/// and every Monte-Carlo trajectory — pays for each survivor search
+/// once. The cache is compute-outside-lock: concurrent trajectories
+/// may race to fill one key, but the search is deterministic, so the
+/// raced inserts carry identical values and the result is independent
+/// of the thread count.
+fn replan_shared<'a>(
     model: &'a ModelSpec,
     opts: &'a PlanOptions,
-    cache: &'a mut HashMap<String, Option<Time>>,
-) -> impl FnMut(&ClusterSpec) -> Option<Time> + 'a {
+    cache: &'a Mutex<HashMap<String, Option<Time>>>,
+) -> impl Fn(&ClusterSpec) -> Option<Time> + Sync + 'a {
     move |rest: &ClusterSpec| {
         let key: String = rest
             .nodes
             .iter()
             .map(|n| format!("{}x{};", n.gpu.name, n.gpus_per_node))
             .collect();
-        *cache
-            .entry(key)
-            .or_insert_with(|| search(model, rest, opts).ok().map(|r| r.best().iteration_time))
+        if let Some(hit) = cache.lock().unwrap().get(&key) {
+            return *hit;
+        }
+        let val = search(model, rest, opts).ok().map(|r| r.best().iteration_time);
+        cache.lock().unwrap().insert(key, val);
+        val
     }
 }
 
+/// The fault schedule for one trajectory: the per-node MTBF draw,
+/// plus the correlated failure-domain draw when domains are
+/// configured, merged in `(at_s, node)` order so a domain blast stays
+/// adjacent for the walk's same-instant coalescing.
+fn draw_trajectory(
+    cluster: &ClusterSpec,
+    opts: &SweepOptions,
+    domains: Option<&FailureDomains>,
+    index: u32,
+) -> Vec<FaultEvent> {
+    let seed = trajectory_seed(opts.seed, index);
+    let mut events = mtbf_schedule(cluster, opts.horizon_s, opts.mtbf_scale, seed);
+    if let (Some(members), Some(d)) = (domains, opts.domains.as_ref()) {
+        events.extend(domain_schedule(cluster, members, d.horizon_s, d.mtbf_hours, d.scale, seed));
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s).then(a.kind.node().cmp(&b.kind.node())));
+    }
+    events
+}
+
+/// The exposed-communication fraction of an iteration, from the plan
+/// evaluation's busy-time accounting: per-rank mean comm-busy time
+/// over the iteration time, clamped to `[0, 1]`.
+fn comm_fraction(comm_busy: Time, world: u32, iteration: Time) -> f64 {
+    let per_rank = comm_busy.as_secs() / world.max(1) as f64;
+    (per_rank / iteration.as_secs().max(f64::MIN_POSITIVE)).clamp(0.0, 1.0)
+}
+
+/// Score one plan under `opts`: a single deterministic walk when
+/// `mc == 0`, otherwise `mc` Monte-Carlo trajectories condensed into
+/// [`McGoodput`]. Returns the trajectory-0 report plus the summary.
+fn score_plan(
+    input: &GoodputInput<'_>,
+    cluster: &ClusterSpec,
+    opts: &SweepOptions,
+    domains: Option<&FailureDomains>,
+    replan: &(impl Fn(&ClusterSpec) -> Option<Time> + Sync),
+) -> (GoodputReport, Option<McGoodput>) {
+    if opts.mc == 0 {
+        let events = draw_trajectory(cluster, opts, domains, 0);
+        let mut wrap = |rest: &ClusterSpec| replan(rest);
+        return (walk(input, &events, &mut wrap), None);
+    }
+    let reports = monte_carlo(
+        input,
+        |i| draw_trajectory(cluster, opts, domains, i),
+        opts.mc,
+        opts.plan.threads,
+        replan,
+    );
+    let stats = mc_stats(&reports);
+    (reports[0], Some(stats))
+}
+
+/// The ranking score for one scored plan: the lower 95% CI bound when
+/// Monte-Carlo is on, the single walk's goodput otherwise.
+fn score_of(goodput: &GoodputReport, mc: &Option<McGoodput>) -> f64 {
+    mc.as_ref().map(|m| m.ci95_lo).unwrap_or(goodput.goodput_tokens_per_s)
+}
+
 /// Rank plans by effective goodput: run the plan search, materialize
-/// an MTBF schedule, walk it for each of the top plans, and sort by
-/// goodput. Deterministic across worker-thread counts (the search is;
-/// the walk is sequential).
+/// the fault schedule(s), walk them for each of the top plans, and
+/// sort by goodput — the lower 95% confidence bound on mean goodput
+/// when `opts.mc ≥ 1` (blast-radius-aware ranking), the single
+/// deterministic walk otherwise. Deterministic across worker-thread
+/// counts (the search is; the walks are per-trajectory-sequential and
+/// reduced in index order).
 pub fn sweep(
     model: &ModelSpec,
     cluster: &ClusterSpec,
     opts: &SweepOptions,
 ) -> anyhow::Result<SweepReport> {
     let rep = search(model, cluster, &opts.plan)?;
-    let events = mtbf_schedule(cluster, opts.horizon_s, opts.mtbf_scale, opts.seed);
+    let degraded = DegradedModel::derive(cluster).ok();
+    let domains = opts.domains.as_ref().map(|d| FailureDomains::derive(cluster, d.rack_size));
+    let base_events = draw_trajectory(cluster, opts, domains.as_ref(), 0).len();
     let top = if opts.top == 0 { rep.ranked.len() } else { opts.top.min(rep.ranked.len()) };
-    let mut cache = HashMap::new();
+    let cache = Mutex::new(HashMap::new());
+    let replan = replan_shared(model, &opts.plan, &cache);
     let mut entries = Vec::with_capacity(top);
     for ev in rep.ranked.iter().take(top) {
+        let world = ev.candidate.par.world_size();
         let input = GoodputInput {
             model,
             cluster,
             iteration: ev.iteration_time,
             dp: ev.candidate.par.dp,
             checkpoint: opts.checkpoint,
+            repair: opts.repair,
+            degraded: degraded.as_ref(),
+            comm_fraction: comm_fraction(ev.comm_busy, world, ev.iteration_time),
             horizon_s: opts.horizon_s,
         };
-        let mut replan = replan_cached(model, &opts.plan, &mut cache);
-        let goodput = walk(&input, &events, &mut replan);
+        let (goodput, mc) = score_plan(&input, cluster, opts, domains.as_ref(), &replan);
         entries.push(SweepEntry {
             plan: ev.candidate.key(),
             iteration: ev.iteration_time,
             dp: ev.candidate.par.dp,
             goodput,
+            mc,
         });
     }
     entries.sort_by(|a, b| {
-        b.goodput
-            .goodput_tokens_per_s
-            .total_cmp(&a.goodput.goodput_tokens_per_s)
+        score_of(&b.goodput, &b.mc)
+            .total_cmp(&score_of(&a.goodput, &a.mc))
             .then_with(|| a.plan.cmp(&b.plan))
     });
     Ok(SweepReport {
         entries,
-        events: events.len(),
+        events: base_events,
         horizon_s: opts.horizon_s,
         mtbf_scale: opts.mtbf_scale,
     })
 }
 
 /// Annotate an existing plan-search report with per-plan goodput and
-/// re-rank it by goodput (the `hetsim plan --goodput` objective flag).
-/// The fault-free ranking fields are untouched; only the `goodput`
-/// annotation and the order change.
+/// re-rank it (the `hetsim plan --objective goodput|goodput-ci`
+/// path). The fault-free ranking fields are untouched; only the
+/// `goodput` / `goodput_ci` annotations and the order change. With
+/// `opts.mc ≥ 1` the ranking score is the lower 95% confidence bound
+/// on mean goodput and `goodput_ci` carries both bounds.
 pub fn annotate(
     rep: &mut PlanSearchReport,
     model: &ModelSpec,
     cluster: &ClusterSpec,
     opts: &SweepOptions,
 ) {
-    let events = mtbf_schedule(cluster, opts.horizon_s, opts.mtbf_scale, opts.seed);
-    let mut cache = HashMap::new();
+    let degraded = DegradedModel::derive(cluster).ok();
+    let domains = opts.domains.as_ref().map(|d| FailureDomains::derive(cluster, d.rack_size));
+    let cache = Mutex::new(HashMap::new());
+    let replan = replan_shared(model, &opts.plan, &cache);
     for ev in rep.ranked.iter_mut() {
+        let world = ev.candidate.par.world_size();
         let input = GoodputInput {
             model,
             cluster,
             iteration: ev.iteration_time,
             dp: ev.candidate.par.dp,
             checkpoint: opts.checkpoint,
+            repair: opts.repair,
+            degraded: degraded.as_ref(),
+            comm_fraction: comm_fraction(ev.comm_busy, world, ev.iteration_time),
             horizon_s: opts.horizon_s,
         };
-        let mut replan = replan_cached(model, &opts.plan, &mut cache);
-        ev.goodput = Some(walk(&input, &events, &mut replan).goodput_tokens_per_s);
+        let (goodput, mc) = score_plan(&input, cluster, opts, domains.as_ref(), &replan);
+        ev.goodput = Some(score_of(&goodput, &mc));
+        ev.goodput_ci = mc.map(|m| (m.ci95_lo, m.ci95_hi));
     }
     rep.ranked.sort_by(|a, b| {
         b.goodput
@@ -403,6 +772,9 @@ mod tests {
             iteration: Time::from_secs(2.0),
             dp: 4,
             checkpoint: CheckpointSpec::default(),
+            repair: RepairSpec::default(),
+            degraded: None,
+            comm_fraction: 0.25,
             horizon_s: 10_000.0,
         }
     }
@@ -413,7 +785,7 @@ mod tests {
         let c = presets::cluster("hopper", 1).unwrap();
         let inp = input(&m, &c);
         let g = walk(&inp, &[], &mut |_| None);
-        assert_eq!(g.fail_stops + g.stragglers + g.replans, 0);
+        assert_eq!(g.fail_stops + g.link_outages + g.stragglers + g.replans, 0);
         assert!(!g.halted);
         assert_eq!(g.availability, 1.0);
         let tokens_per_iter = (m.global_batch * m.seq_len) as f64;
@@ -493,7 +865,102 @@ mod tests {
         ];
         let g = walk(&inp, &evs, &mut |_| Some(Time::from_secs(3.0)));
         assert_eq!(g.fail_stops, 1);
+        assert_eq!(g.link_outages, 0);
         assert_eq!(g.stragglers, 0);
+    }
+
+    #[test]
+    fn link_outage_charges_less_than_node_loss() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let mut inp = input(&m, &c);
+        inp.repair = RepairSpec { nic_s: 0.0, link_s: 0.0 };
+        let node = walk(
+            &inp,
+            &[FaultEvent { at_s: 100.0, kind: FaultKind::NodeFail { node: 0 } }],
+            &mut |_| Some(Time::from_secs(2.0)),
+        );
+        let nic = walk(
+            &inp,
+            &[FaultEvent { at_s: 100.0, kind: FaultKind::NicFail { node: 0 } }],
+            &mut |_| Some(Time::from_secs(2.0)),
+        );
+        // a repaired NIC keeps device state: no checkpoint restore, no
+        // half-interval of replayed work — strictly cheaper
+        assert_eq!(nic.link_outages, 1);
+        assert_eq!(nic.fail_stops, 0);
+        assert_eq!(nic.replans, 0);
+        assert!(nic.lost_s < node.lost_s, "{} !< {}", nic.lost_s, node.lost_s);
+        assert!(nic.goodput_tokens_per_s > node.goodput_tokens_per_s);
+    }
+
+    #[test]
+    fn repairable_link_degrades_instead_of_stopping() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let dm = DegradedModel::derive(&c).unwrap();
+        let mut inp = input(&m, &c);
+        inp.repair = RepairSpec { nic_s: 3000.0, link_s: 3000.0 };
+        inp.comm_fraction = 0.5;
+        let ev = [FaultEvent { at_s: 100.0, kind: FaultKind::NicFail { node: 0 } }];
+        let mut inp_deg = inp;
+        inp_deg.degraded = Some(&dm);
+        let degraded = walk(&inp_deg, &ev, &mut |_| None);
+        let hard = walk(&inp, &ev, &mut |_| None); // no reroute model
+        let mut inp_zero = inp;
+        inp_zero.repair = RepairSpec { nic_s: 0.0, link_s: 0.0 };
+        let instant = walk(&inp_zero, &ev, &mut |_| None);
+        // degraded running beats a hard outage, loses to instant repair
+        assert_eq!(degraded.link_outages, 1);
+        assert!(!degraded.halted);
+        assert!(degraded.goodput_tokens_per_s > hard.goodput_tokens_per_s);
+        assert!(degraded.goodput_tokens_per_s < instant.goodput_tokens_per_s);
+        assert!(degraded.lost_s > instant.lost_s);
+        assert!(degraded.lost_s < hard.lost_s);
+    }
+
+    #[test]
+    fn same_instant_blast_coalesces_into_one_incident() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster_hetero(2, 2).unwrap(); // 4 nodes
+        let inp = input(&m, &c);
+        let blast = [
+            FaultEvent { at_s: 100.0, kind: FaultKind::NodeFail { node: 0 } },
+            FaultEvent { at_s: 100.0, kind: FaultKind::NodeFail { node: 1 } },
+        ];
+        let spread = [
+            FaultEvent { at_s: 100.0, kind: FaultKind::NodeFail { node: 0 } },
+            FaultEvent { at_s: 200.0, kind: FaultKind::NodeFail { node: 1 } },
+        ];
+        let g_blast = walk(&inp, &blast, &mut |_| Some(Time::from_secs(2.0)));
+        let g_spread = walk(&inp, &spread, &mut |_| Some(Time::from_secs(2.0)));
+        assert_eq!(g_blast.fail_stops, 2);
+        assert_eq!(g_blast.replans, 1); // one incident, one replan
+        assert_eq!(g_spread.fail_stops, 2);
+        assert_eq!(g_spread.replans, 2);
+        assert!(g_blast.lost_s < g_spread.lost_s); // one recovery penalty
+    }
+
+    #[test]
+    fn monte_carlo_nests_and_matches_single_walk_at_index_zero() {
+        let m = presets::model("gpt-6.7b").unwrap();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let inp = input(&m, &c);
+        assert_eq!(trajectory_seed(42, 0), 42);
+        let draw = |i: u32| {
+            let s = trajectory_seed(42, i);
+            mtbf_schedule(&c, inp.horizon_s, 8.0, s)
+        };
+        let one = monte_carlo(&inp, draw, 1, 1, |_| Some(Time::from_secs(3.0)));
+        let four = monte_carlo(&inp, draw, 4, 2, |_| Some(Time::from_secs(3.0)));
+        let single = walk(&inp, &draw(0), &mut |_| Some(Time::from_secs(3.0)));
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0], single); // N=1 ≡ the deterministic walk
+        assert_eq!(four[0], single); // nested: index 0 is shared
+        let stats = mc_stats(&four);
+        assert_eq!(stats.trajectories, 4);
+        assert!(stats.p5 <= stats.mean + 1e-12 && stats.mean <= stats.p95 + 1e-12);
+        assert!(stats.ci95_lo <= stats.mean && stats.mean <= stats.ci95_hi);
     }
 
     #[test]
@@ -531,5 +998,52 @@ mod tests {
                 .join("|")
         };
         assert_eq!(fp(&rep), fp(&rep4));
+    }
+
+    #[test]
+    fn monte_carlo_sweep_ranks_by_ci_lower_bound() {
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.num_layers = 4;
+        m.global_batch = 16;
+        m.micro_batch = 8;
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let opts = SweepOptions {
+            plan: PlanOptions { microbatch_limit: Some(1), threads: 2, ..Default::default() },
+            top: 2,
+            horizon_s: 200_000.0,
+            mtbf_scale: 8.0,
+            domains: Some(DomainSpec {
+                rack_size: 1,
+                mtbf_hours: 100.0,
+                horizon_s: 200_000.0,
+                scale: 4.0,
+            }),
+            mc: 4,
+            ..Default::default()
+        };
+        let rep = sweep(&m, &c, &opts).unwrap();
+        assert!(rep.entries.iter().all(|e| e.mc.is_some()));
+        for w in rep.entries.windows(2) {
+            let (a, b) = (w[0].mc.as_ref().unwrap(), w[1].mc.as_ref().unwrap());
+            assert!(a.ci95_lo >= b.ci95_lo);
+        }
+        let text = rep.render();
+        assert!(text.contains("ci95-lo"), "{text}");
+        assert!(text.contains("trajectories"), "{text}");
+        // byte-identical across thread counts
+        let mut opts8 = opts.clone();
+        opts8.plan.threads = 8;
+        let rep8 = sweep(&m, &c, &opts8).unwrap();
+        let fp = |r: &SweepReport| {
+            r.entries
+                .iter()
+                .map(|e| {
+                    let mc = e.mc.as_ref().unwrap();
+                    format!("{}={}:{}:{}", e.plan, mc.mean, mc.ci95_lo, mc.ci95_hi)
+                })
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        assert_eq!(fp(&rep), fp(&rep8));
     }
 }

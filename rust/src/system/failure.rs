@@ -1,33 +1,47 @@
-//! Deterministic fault injection (DESIGN.md §26): scheduled node / NIC /
-//! link failures, straggler slow-downs, and MTBF-driven schedules.
+//! Deterministic fault injection (DESIGN.md §26, §28): scheduled node /
+//! NIC / link failures, straggler slow-downs, MTBF-driven schedules,
+//! correlated failure domains, and the degraded-bandwidth model behind
+//! link rerouting.
 //!
 //! A [`FaultSpec`] is a *plan input*, not a random process at run time:
 //! every fault is an explicit `(time, kind)` pair, either written out in
 //! scenario JSON (`"faults"` key) or materialized up front from a
-//! per-architecture MTBF table by [`mtbf_schedule`] using the in-tree
-//! seeded PRNG. Once the spec exists, the simulation is exactly as
-//! deterministic as the fault-free path: the scheduler only ever reads
-//! the resolved [`IterationFaults`], which is a pure function of the
-//! spec and the cluster.
+//! per-architecture MTBF table by [`mtbf_schedule`] — or from a
+//! correlated per-rack domain process by [`domain_schedule`] — using the
+//! in-tree seeded PRNG. Once the spec exists, the simulation is exactly
+//! as deterministic as the fault-free path: the scheduler only ever
+//! reads the resolved [`IterationFaults`], which is a pure function of
+//! the spec and the cluster.
 //!
-//! Fail-stop kinds ([`FaultKind::NodeFail`], [`FaultKind::NicFail`],
-//! [`FaultKind::LinkFail`]) abort the in-flight iteration at the fault
-//! time and charge the whole partial iteration as lost work (gradient
-//! state is gone — the job restarts from the last checkpoint).
-//! [`FaultKind::Straggler`] keeps the node running but multiplies its
-//! compute durations. The checkpoint/restore cost model and the
-//! goodput walk that consumes these events live in
-//! [`crate::report::goodput`].
+//! Fault severity is graded (§28):
+//!
+//! * [`FaultKind::NodeFail`] is permanent — fail-stop for the in-flight
+//!   iteration, then the surviving cluster is re-planned.
+//! * [`FaultKind::NicFail`] / [`FaultKind::LinkFail`] are *repairable*:
+//!   the strike still wedges the in-flight iteration (in-flight
+//!   collectives die), but the job resumes from device memory — no
+//!   checkpoint restore — and runs **degraded** until the repair
+//!   completes, rerouting flows around the dead links
+//!   ([`crate::network::routing::route_avoiding`]). Only when no route
+//!   survives (single-rail nodes, single-spine fabrics) does the fault
+//!   escalate to a fail-stop.
+//! * [`FaultKind::Straggler`] keeps the node running but multiplies its
+//!   compute durations.
+//!
+//! The checkpoint/restore cost model and the goodput walk that consumes
+//! these events live in [`crate::report::goodput`].
 
-use crate::config::cluster::ClusterSpec;
+use crate::config::cluster::{ClusterSpec, FabricSpec};
+use crate::network::routing::route_avoiding;
+use crate::network::topology::{LinkId, Topology};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::units::Time;
 
 /// What fails (or slows down). All kinds name a *node*: the paper's
 /// failure domains are node-granular (a GPU, its NIC, and its NVLink
-/// island share fate for scheduling purposes — any of them going away
-/// stalls every rank on the node).
+/// island share fate for scheduling purposes), and correlated rack /
+/// leaf domains expand to per-node events ([`domain_schedule`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum FaultKind {
     /// The node is lost permanently (kernel panic, hardware retirement).
@@ -39,14 +53,18 @@ pub enum FaultKind {
         /// Cluster node index of the failed node.
         node: u32,
     },
-    /// The node's NIC dies. Fail-stop (collectives through the node
-    /// wedge), but the node rejoins after repair — same plan resumes.
+    /// The node's NIC dies. The in-flight iteration wedges, then the
+    /// node runs degraded through its surviving NICs (NVLink detours to
+    /// sibling rails) until the NIC is swapped
+    /// ([`RepairSpec::nic_s`]).
     NicFail {
         /// Cluster node index owning the failed NIC.
         node: u32,
     },
-    /// An inter-node link attached to the node flaps hard enough to
-    /// kill in-flight collectives. Fail-stop; same plan resumes.
+    /// An inter-node cable attached to the node dies (rail uplink, or
+    /// one leaf→spine uplink on leaf/spine fabrics). The in-flight
+    /// iteration wedges, then traffic reroutes around the cable until
+    /// it is re-seated ([`RepairSpec::link_s`]).
     LinkFail {
         /// Cluster node index at the failing link's endpoint.
         node: u32,
@@ -60,6 +78,29 @@ pub enum FaultKind {
         /// Compute-duration multiplier, ≥ 1.0.
         mult: f64,
     },
+}
+
+/// Severity class of a fail-stop-capable fault: what hardware is gone
+/// and therefore which recovery path applies (replan vs. reroute).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    /// Permanent node loss — checkpoint restore plus survivor replan.
+    Node,
+    /// Repairable NIC loss — degraded rerouting through sibling NICs.
+    Nic,
+    /// Repairable cable loss — degraded rerouting around the cable.
+    Link,
+}
+
+impl FaultClass {
+    /// Short stable label (report output, JSON-adjacent surfaces).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultClass::Node => "node_fail",
+            FaultClass::Nic => "nic_fail",
+            FaultClass::Link => "link_fail",
+        }
+    }
 }
 
 impl FaultKind {
@@ -83,9 +124,20 @@ impl FaultKind {
         }
     }
 
-    /// True for the kinds that abort the in-flight iteration.
+    /// True for the kinds that can abort the in-flight iteration.
     pub fn is_fail_stop(&self) -> bool {
         !matches!(self, FaultKind::Straggler { .. })
+    }
+
+    /// The severity class, `None` for stragglers (which never stop
+    /// anything).
+    pub fn class(&self) -> Option<FaultClass> {
+        match self {
+            FaultKind::NodeFail { .. } => Some(FaultClass::Node),
+            FaultKind::NicFail { .. } => Some(FaultClass::Nic),
+            FaultKind::LinkFail { .. } => Some(FaultClass::Link),
+            FaultKind::Straggler { .. } => None,
+        }
     }
 
     fn canon(&self) -> String {
@@ -128,23 +180,112 @@ impl Default for CheckpointSpec {
     }
 }
 
+/// Mean repair times for the repairable fault classes. A NIC swap is a
+/// technician visit; a cable re-seat is faster. [`FaultClass::Node`]
+/// has no repair window — node losses are permanent within a run's
+/// horizon (the survivor replan owns that path).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RepairSpec {
+    /// Seconds to replace a failed NIC.
+    pub nic_s: f64,
+    /// Seconds to re-seat / replace a failed cable.
+    pub link_s: f64,
+}
+
+impl Default for RepairSpec {
+    fn default() -> Self {
+        RepairSpec { nic_s: 600.0, link_s: 300.0 }
+    }
+}
+
+impl RepairSpec {
+    /// Repair window in seconds for a fault class (infinite for
+    /// permanent node losses).
+    pub fn for_class(&self, class: FaultClass) -> f64 {
+        match class {
+            FaultClass::Node => f64::INFINITY,
+            FaultClass::Nic => self.nic_s,
+            FaultClass::Link => self.link_s,
+        }
+    }
+}
+
+/// A correlated failure-domain process: racks of `rack_size` consecutive
+/// nodes share a blast domain (PDU, top-of-rack/leaf switch), and one
+/// domain event takes the whole rack down at once
+/// ([`domain_schedule`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DomainSpec {
+    /// Consecutive nodes per failure domain (≥ 1; the last rack may be
+    /// smaller when the node count is not a multiple).
+    pub rack_size: u32,
+    /// Per-domain MTBF in hours (PDU / top-of-rack switch class
+    /// hardware, not the per-node GPU table).
+    pub mtbf_hours: f64,
+    /// Seconds of training over which domain events are drawn.
+    pub horizon_s: f64,
+    /// Failure-rate multiplier with the same [`SCALE_CAP`]-thinning
+    /// nesting guarantee as [`mtbf_schedule`].
+    pub scale: f64,
+}
+
+/// Node → failure-domain membership, derived from the cluster layout:
+/// consecutive `rack_size`-node chunks in deployment order. On
+/// leaf/spine fabrics each node owns its leaf, so a rack is the natural
+/// shared-PDU / shared-pod blast domain above it; the degraded-routing
+/// side of correlated analysis (which fabric paths survive) lives in
+/// [`DegradedModel`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FailureDomains {
+    /// Member node indices per domain, ascending within each domain.
+    pub members: Vec<Vec<u32>>,
+}
+
+impl FailureDomains {
+    /// Chunk the cluster's nodes into consecutive `rack_size` domains
+    /// (`rack_size` is clamped to ≥ 1).
+    pub fn derive(cluster: &ClusterSpec, rack_size: u32) -> FailureDomains {
+        let rack = rack_size.max(1) as usize;
+        let nodes: Vec<u32> = (0..cluster.nodes.len() as u32).collect();
+        FailureDomains { members: nodes.chunks(rack).map(|c| c.to_vec()).collect() }
+    }
+}
+
 /// A complete, deterministic fault plan: explicit events plus the
-/// checkpoint cost model and the seed any MTBF materialization used.
-/// An empty spec (no events) is defined to be byte-identical to not
-/// configuring faults at all — the builder normalizes it away.
+/// checkpoint and repair cost models, the correlated-domain process (if
+/// any, already materialized into `events`), the Monte-Carlo trajectory
+/// count, and the seed any schedule materialization used. An empty spec
+/// (no events) is defined to be byte-identical to not configuring
+/// faults at all — the builder normalizes it away.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FaultSpec {
     /// Scheduled faults, sorted by `at_s` ([`FaultSpec::normalize`]).
     pub events: Vec<FaultEvent>,
     /// Checkpoint/restore cost model for goodput accounting.
     pub checkpoint: CheckpointSpec,
-    /// Seed recorded for provenance (MTBF schedules derive from it).
+    /// Repair-time model for the repairable fault classes.
+    pub repair: RepairSpec,
+    /// The correlated-domain process these events were drawn from
+    /// (provenance; `from_json` materializes it into `events`).
+    pub domains: Option<DomainSpec>,
+    /// Monte-Carlo goodput trajectories requested by the scenario
+    /// (`faults.monte_carlo`); 0 or 1 = single-trajectory analysis.
+    pub monte_carlo: u32,
+    /// Seed recorded for provenance (MTBF/domain schedules derive from
+    /// it, and Monte-Carlo trajectory seeds fan out from it).
     pub seed: u64,
 }
 
 impl Default for FaultSpec {
     fn default() -> Self {
-        FaultSpec { events: Vec::new(), checkpoint: CheckpointSpec::default(), seed: 42 }
+        FaultSpec {
+            events: Vec::new(),
+            checkpoint: CheckpointSpec::default(),
+            repair: RepairSpec::default(),
+            domains: None,
+            monte_carlo: 0,
+            seed: 42,
+        }
     }
 }
 
@@ -178,7 +319,9 @@ impl FaultSpec {
     }
 
     /// Check the spec against a cluster: node indices in range, finite
-    /// non-negative times, straggler multipliers ≥ 1.
+    /// non-negative times, straggler multipliers ≥ 1, no duplicate
+    /// `(at_s, node)` events, and no overlapping repair windows on one
+    /// node (either would silently double-charge lost work).
     pub fn validate(&self, cluster: &ClusterSpec) -> anyhow::Result<()> {
         let nodes = cluster.nodes.len() as u32;
         for ev in &self.events {
@@ -201,6 +344,40 @@ impl FaultSpec {
                 );
             }
         }
+        // duplicate (at_s, node) pairs double-charge lost work
+        let mut seen: Vec<(u64, u32)> =
+            self.events.iter().map(|ev| (ev.at_s.to_bits(), ev.kind.node())).collect();
+        seen.sort_unstable();
+        for w in seen.windows(2) {
+            anyhow::ensure!(
+                w[0] != w[1],
+                "duplicate fault events on node {} at t={}s",
+                w[0].1,
+                f64::from_bits(w[0].0)
+            );
+        }
+        // overlapping repair windows on one node double-charge degraded
+        // time (a rack-correlated schedule never trips this: its
+        // simultaneous events hit *distinct* nodes)
+        let mut windows: Vec<(u32, f64, f64)> = self
+            .events
+            .iter()
+            .filter_map(|ev| match ev.kind.class() {
+                Some(c @ (FaultClass::Nic | FaultClass::Link)) => {
+                    Some((ev.kind.node(), ev.at_s, ev.at_s + self.repair.for_class(c)))
+                }
+                _ => None,
+            })
+            .collect();
+        windows.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        for w in windows.windows(2) {
+            let ((n0, _, end0), (n1, start1, _)) = (w[0], w[1]);
+            anyhow::ensure!(
+                n0 != n1 || *start1 >= *end0,
+                "overlapping repair windows on node {n0}: a fault at t={start1}s strikes \
+                 before the previous repair finishes at t={end0}s"
+            );
+        }
         anyhow::ensure!(
             self.checkpoint.interval_iters > 0,
             "checkpoint interval_iters must be >= 1"
@@ -212,6 +389,31 @@ impl FaultSpec {
         anyhow::ensure!(
             self.checkpoint.restart_warmup_s.is_finite() && self.checkpoint.restart_warmup_s >= 0.0,
             "checkpoint restart_warmup_s must be a non-negative number"
+        );
+        for (label, v) in [("nic_s", self.repair.nic_s), ("link_s", self.repair.link_s)] {
+            anyhow::ensure!(
+                v.is_finite() && v >= 0.0,
+                "repair {label} must be a finite non-negative number of seconds"
+            );
+        }
+        if let Some(d) = &self.domains {
+            anyhow::ensure!(d.rack_size >= 1, "faults: domains rack_size must be >= 1");
+            anyhow::ensure!(
+                d.mtbf_hours.is_finite() && d.mtbf_hours > 0.0,
+                "faults: domains mtbf_hours must be a positive number"
+            );
+            anyhow::ensure!(
+                d.horizon_s.is_finite() && d.horizon_s > 0.0,
+                "faults: domains horizon_s must be a positive number of seconds"
+            );
+            anyhow::ensure!(
+                d.scale.is_finite() && d.scale >= 0.0,
+                "faults: domains scale must be a finite non-negative number"
+            );
+        }
+        anyhow::ensure!(
+            self.monte_carlo <= 4096,
+            "faults: monte_carlo trajectories must be <= 4096"
         );
         Ok(())
     }
@@ -225,12 +427,21 @@ impl FaultSpec {
             return String::new();
         }
         let mut s = format!(
-            "s{};i{};w{};r{}",
+            "s{};i{};w{};r{};rn{};rl{};mc{}",
             self.seed,
             self.checkpoint.interval_iters,
             self.checkpoint.write_gbps,
-            self.checkpoint.restart_warmup_s
+            self.checkpoint.restart_warmup_s,
+            self.repair.nic_s,
+            self.repair.link_s,
+            self.monte_carlo
         );
+        if let Some(d) = &self.domains {
+            s.push_str(&format!(
+                ";dom{}:{}:{}:{}",
+                d.rack_size, d.mtbf_hours, d.horizon_s, d.scale
+            ));
+        }
         for ev in &self.events {
             s.push(';');
             s.push_str(&ev.kind.canon());
@@ -256,10 +467,20 @@ impl FaultSpec {
     ///   "mult": …}` (`mult` required for stragglers only),
     /// * `"checkpoint"`: `{"interval_iters", "write_gbps",
     ///   "restart_warmup_s"}` overriding [`CheckpointSpec::default`],
-    /// * `"mtbf"`: `{"horizon_s", "scale"}` — materialize an MTBF
-    ///   schedule over the cluster via [`mtbf_schedule`] and append it
-    ///   to the explicit events,
-    /// * `"seed"`: PRNG seed for the MTBF draw (defaults to
+    /// * `"repair"`: `{"nic_s", "link_s"}` overriding
+    ///   [`RepairSpec::default`] — the degraded windows NIC/link faults
+    ///   run under before full bandwidth returns,
+    /// * `"mtbf"`: `{"horizon_s", "scale"}` — materialize a per-node
+    ///   MTBF schedule over the cluster via [`mtbf_schedule`] and
+    ///   append it to the explicit events,
+    /// * `"domains"`: `{"rack_size", "horizon_s", "mtbf_hours",
+    ///   "scale"}` — materialize a *correlated* rack-level schedule via
+    ///   [`domain_schedule`]: one domain event fails every node of the
+    ///   rack at the same instant,
+    /// * `"monte_carlo"`: `{"trajectories"}` — how many seeded fault
+    ///   trajectories goodput analysis should average over
+    ///   ([`crate::report::goodput::monte_carlo`]),
+    /// * `"seed"`: PRNG seed for the schedule draws (defaults to
     ///   `default_seed`, which scenario files wire to their own
     ///   `"seed"` key).
     pub fn from_json(
@@ -268,8 +489,11 @@ impl FaultSpec {
         default_seed: u64,
     ) -> anyhow::Result<FaultSpec> {
         anyhow::ensure!(
-            v.get("events").is_some() || v.get("mtbf").is_some() || v.get("checkpoint").is_some(),
-            "faults: expected at least one of `events`, `mtbf`, `checkpoint`"
+            ["events", "mtbf", "checkpoint", "repair", "domains", "monte_carlo"]
+                .iter()
+                .any(|k| v.get(k).is_some()),
+            "faults: expected at least one of `events`, `mtbf`, `checkpoint`, `repair`, \
+             `domains`, `monte_carlo`"
         );
         let seed = strict_u64(v, "seed", default_seed)?;
         let mut checkpoint = CheckpointSpec::default();
@@ -279,6 +503,18 @@ impl FaultSpec {
             checkpoint.restart_warmup_s =
                 strict_f64(c, "restart_warmup_s", checkpoint.restart_warmup_s)?;
         }
+        let mut repair = RepairSpec::default();
+        if let Some(r) = v.get("repair") {
+            repair.nic_s = strict_f64(r, "nic_s", repair.nic_s)?;
+            repair.link_s = strict_f64(r, "link_s", repair.link_s)?;
+        }
+        let monte_carlo = match v.get("monte_carlo") {
+            None => 0,
+            Some(m) => m
+                .req_u64("trajectories")
+                .map_err(|err| anyhow::anyhow!("faults: monte_carlo: {err}"))?
+                as u32,
+        };
         let mut events = Vec::new();
         if let Some(arr) = v.get("events") {
             let arr = arr
@@ -328,7 +564,31 @@ impl FaultSpec {
             );
             events.extend(mtbf_schedule(cluster, horizon_s, scale, seed));
         }
-        let mut spec = FaultSpec { events, checkpoint, seed };
+        let mut domains = None;
+        if let Some(d) = v.get("domains") {
+            let spec = DomainSpec {
+                rack_size: d
+                    .req_u64("rack_size")
+                    .map_err(|err| anyhow::anyhow!("faults: domains: {err}"))?
+                    as u32,
+                mtbf_hours: strict_f64(d, "mtbf_hours", 4380.0)?,
+                horizon_s: d
+                    .req_f64("horizon_s")
+                    .map_err(|err| anyhow::anyhow!("faults: domains: {err}"))?,
+                scale: strict_f64(d, "scale", 1.0)?,
+            };
+            let racks = FailureDomains::derive(cluster, spec.rack_size);
+            events.extend(domain_schedule(
+                cluster,
+                &racks,
+                spec.horizon_s,
+                spec.mtbf_hours,
+                spec.scale,
+                seed,
+            ));
+            domains = Some(spec);
+        }
+        let mut spec = FaultSpec { events, checkpoint, repair, domains, monte_carlo, seed };
         spec.normalize();
         spec.validate(cluster)?;
         Ok(spec)
@@ -340,8 +600,13 @@ impl FaultSpec {
     ///
     /// * Stragglers that struck **at or before** the window start slow
     ///   their node's ranks for the whole iteration.
-    /// * The earliest fail-stop **at or after** the window start aborts
-    ///   the iteration at its offset into the window — unless the
+    /// * NIC/link faults whose repair window covers the window start
+    ///   mark their node *degraded*: the scheduler kills the faulted
+    ///   links and reroutes around them ([`faulted_links`]).
+    /// * The earliest fail-stop striking **inside** the window (node
+    ///   losses at or after the start; NIC/link strikes strictly after
+    ///   — at exactly the boundary they are already-down, i.e.
+    ///   degraded) aborts the iteration at its offset — unless the
     ///   iteration finishes first, in which case nothing happens.
     pub fn resolve_iteration(
         &self,
@@ -350,8 +615,19 @@ impl FaultSpec {
     ) -> IterationFaults {
         let mut slow = vec![1.0f64; cluster.total_gpus() as usize];
         let starts = cluster.node_starts();
-        let mut abort: Option<(Time, u32)> = None;
+        let mut abort: Option<(Time, u32, FaultClass)> = None;
+        let mut degraded: Vec<(u32, FaultClass)> = Vec::new();
+        let mut propose = |abort: &mut Option<(Time, u32, FaultClass)>,
+                           at_s: f64,
+                           node: u32,
+                           class: FaultClass| {
+            let off = Time::from_secs(at_s - window_start_s);
+            if abort.map(|(t, _, _)| off < t).unwrap_or(true) {
+                *abort = Some((off, node, class));
+            }
+        };
         for ev in &self.events {
+            let node = ev.kind.node();
             match ev.kind {
                 FaultKind::Straggler { node, mult } => {
                     if ev.at_s <= window_start_s {
@@ -362,21 +638,24 @@ impl FaultSpec {
                         }
                     }
                 }
-                kind => {
+                FaultKind::NodeFail { .. } => {
                     if ev.at_s >= window_start_s {
-                        let off = Time::from_secs(ev.at_s - window_start_s);
-                        let earlier = match abort {
-                            None => true,
-                            Some((t, _)) => off < t,
-                        };
-                        if earlier {
-                            abort = Some((off, kind.node()));
-                        }
+                        propose(&mut abort, ev.at_s, node, FaultClass::Node);
+                    }
+                }
+                FaultKind::NicFail { .. } | FaultKind::LinkFail { .. } => {
+                    let class = ev.kind.class().expect("nic/link faults have a class");
+                    if ev.at_s > window_start_s {
+                        propose(&mut abort, ev.at_s, node, class);
+                    } else if ev.at_s + self.repair.for_class(class) > window_start_s
+                        && !degraded.contains(&(node, class))
+                    {
+                        degraded.push((node, class));
                     }
                 }
             }
         }
-        IterationFaults { abort, slow }
+        IterationFaults { abort, slow, degraded }
     }
 }
 
@@ -385,17 +664,25 @@ impl FaultSpec {
 #[derive(Debug, Clone)]
 pub struct IterationFaults {
     /// Earliest fail-stop in the window: abort the iteration at this
-    /// offset (simulated time), attributing the fault to this node.
-    pub abort: Option<(Time, u32)>,
+    /// offset (simulated time), attributing the fault to this node and
+    /// class.
+    pub abort: Option<(Time, u32, FaultClass)>,
     /// Per-rank compute-duration multiplier (1.0 = healthy).
     pub slow: Vec<f64>,
+    /// Nodes inside an unexpired NIC/link repair window at the window
+    /// start: the scheduler removes their faulted links
+    /// ([`faulted_links`]) and runs the iteration over rerouted,
+    /// degraded paths — or escalates to an immediate abort when no
+    /// route survives.
+    pub degraded: Vec<(u32, FaultClass)>,
 }
 
 impl IterationFaults {
     /// True when this resolution changes nothing (no abort, all
-    /// multipliers 1.0) — callers may skip the fault path entirely.
+    /// multipliers 1.0, nothing degraded) — callers may skip the fault
+    /// path entirely.
     pub fn is_noop(&self) -> bool {
-        self.abort.is_none() && self.slow.iter().all(|m| *m == 1.0)
+        self.abort.is_none() && self.degraded.is_empty() && self.slow.iter().all(|m| *m == 1.0)
     }
 }
 
@@ -406,10 +693,121 @@ pub struct FaultReport {
     pub at: Time,
     /// The node the fault was attributed to.
     pub node: u32,
+    /// Severity class of the triggering fault (node losses restore from
+    /// checkpoint; NIC/link wedges resume from device memory).
+    pub kind: FaultClass,
     /// Work charged as lost: the whole partial iteration (gradient
-    /// state does not survive a fail-stop; recovery resumes from the
-    /// last checkpoint, which the goodput walk accounts separately).
+    /// state is gone whichever class struck; what recovery costs *next*
+    /// differs by class and is the goodput walk's concern).
     pub lost_work: Time,
+}
+
+/// The directed topology links a node-scoped fault of `class` disables,
+/// fabric-dispatched (DESIGN.md §28):
+///
+/// * `Nic` — the node's NIC 0 in its entirety: host link both ways plus
+///   its fabric uplink/downlink. Survivors are the sibling NICs
+///   (NVLink-detour rails).
+/// * `Link` — the cable only: NIC 0's fabric uplink/downlink on
+///   rail-only and single-switch fabrics; the node's leaf↔spine-0
+///   uplink pair on leaf/spine (the NIC itself survives, the alternate
+///   spines carry the detour).
+/// * `Node` — nothing: a lost node is removed by replan, not rerouted
+///   around.
+pub fn faulted_links(topo: &Topology, node: u32, class: FaultClass) -> Vec<LinkId> {
+    match class {
+        FaultClass::Node => Vec::new(),
+        FaultClass::Nic => topo.nic_links(node, 0).to_vec(),
+        FaultClass::Link => match topo.fabric {
+            FabricSpec::LeafSpine { .. } => topo.leaf_uplinks(node, 0).to_vec(),
+            FabricSpec::RailOnly | FabricSpec::SingleSwitch => {
+                let l = topo.nic_links(node, 0);
+                vec![l[2], l[3]]
+            }
+        },
+    }
+}
+
+/// Per-node degraded-bandwidth model: for each node and repairable
+/// fault class, the fraction of the node's fabric bandwidth that
+/// survives rerouting around the dead links — or `None` when no route
+/// survives at all (single-rail nodes, single-spine fabrics) and the
+/// fault escalates to a fail-stop.
+///
+/// Derived once per cluster from the built topology: the survivability
+/// oracle is [`route_avoiding`] over [`faulted_links`], the surviving
+/// fraction is `(G−1)/G` of the node's `G` NICs (NIC and cable faults
+/// on NIC-per-rail fabrics) or `(S−1)/S` of the `S` spines (cable
+/// faults on leaf/spine).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradedModel {
+    nic: Vec<Option<f64>>,
+    link: Vec<Option<f64>>,
+}
+
+impl DegradedModel {
+    /// Build the model for a cluster by probing degraded routes on its
+    /// fabric.
+    pub fn derive(cluster: &ClusterSpec) -> anyhow::Result<DegradedModel> {
+        let topo = Topology::build(cluster)?;
+        let nodes = cluster.nodes.len() as u32;
+        let mut nic = Vec::with_capacity(nodes as usize);
+        let mut link = Vec::with_capacity(nodes as usize);
+        for node in 0..nodes {
+            for class in [FaultClass::Nic, FaultClass::Link] {
+                let frac = match (0..nodes).find(|&m| m != node) {
+                    // single-node clusters have no inter-node traffic
+                    None => Some(1.0),
+                    Some(other) => {
+                        let dead = faulted_links(&topo, node, class);
+                        let a = topo.rank_of(node, 0);
+                        let b = topo.rank_of(other, 0);
+                        let survives = route_avoiding(&topo, a, b, &dead).is_some()
+                            && route_avoiding(&topo, b, a, &dead).is_some();
+                        survives.then(|| surviving_fraction(cluster, node, class))
+                    }
+                };
+                match class {
+                    FaultClass::Nic => nic.push(frac),
+                    _ => link.push(frac),
+                }
+            }
+        }
+        Ok(DegradedModel { nic, link })
+    }
+
+    /// Surviving fabric-bandwidth fraction for a node under a fault
+    /// class; `None` when no route survives (or for `Node`, which is
+    /// never rerouted).
+    pub fn bw_fraction(&self, node: u32, class: FaultClass) -> Option<f64> {
+        match class {
+            FaultClass::Node => None,
+            FaultClass::Nic => self.nic.get(node as usize).copied().flatten(),
+            FaultClass::Link => self.link.get(node as usize).copied().flatten(),
+        }
+    }
+
+    /// Iteration-time multiplier while degraded: the communication
+    /// share of the iteration (`comm_fraction`, 0..1) stretches by the
+    /// inverse surviving-bandwidth fraction, the compute share is
+    /// untouched. `None` when no route survives.
+    pub fn slowdown(&self, node: u32, class: FaultClass, comm_fraction: f64) -> Option<f64> {
+        let phi = self.bw_fraction(node, class)?;
+        let c = comm_fraction.clamp(0.0, 1.0);
+        Some(1.0 - c + c / phi.max(f64::MIN_POSITIVE))
+    }
+}
+
+fn surviving_fraction(cluster: &ClusterSpec, node: u32, class: FaultClass) -> f64 {
+    match (class, &cluster.fabric) {
+        (FaultClass::Link, FabricSpec::LeafSpine { spines, .. }) => {
+            (*spines as f64 - 1.0) / *spines as f64
+        }
+        _ => {
+            let g = cluster.node(node).gpus_per_node as f64;
+            (g - 1.0) / g
+        }
+    }
 }
 
 /// Synthetic per-node MTBF in hours by GPU architecture. The source
@@ -439,7 +837,8 @@ pub const SCALE_CAP: f64 = 16.0;
 /// Materialize a deterministic fault schedule from the per-arch MTBF
 /// table: for each node, a Poisson process at `scale / MTBF(arch)`
 /// events per second over `[0, horizon_s]`, with kind mix 25%
-/// straggler (×1.2–2.0), 25% node loss, 25% NIC, 25% link.
+/// straggler (×1.2–2.0), 25% node loss, 25% NIC, 25% link (the NIC and
+/// link quarter being repairable, degraded-mode faults).
 ///
 /// Determinism and monotonicity: each node forks its own PRNG stream
 /// from `seed`, candidate events are drawn at the [`SCALE_CAP`] rate
@@ -490,6 +889,61 @@ pub fn mtbf_schedule(
     events
 }
 
+/// Stream salt separating the correlated-domain PRNG from the per-node
+/// MTBF streams drawn from the same scenario seed.
+const DOMAIN_STREAM: u64 = 0x646f_6d61_696e_7321; // "domains!"
+
+/// Materialize a deterministic *correlated* fault schedule: each
+/// failure domain (rack) runs its own Poisson process at
+/// `scale / mtbf_hours`, and every kept domain event expands to a
+/// [`FaultKind::NodeFail`] for **every member node at the same
+/// instant** — the blast radius the goodput walk coalesces into one
+/// incident.
+///
+/// The same [`SCALE_CAP`]-thinning construction as [`mtbf_schedule`]
+/// applies per domain, and expansion is all-or-nothing, so a scale-`k`
+/// schedule is an exact subset of a scale-`2k` schedule at the
+/// expanded-event level.
+pub fn domain_schedule(
+    cluster: &ClusterSpec,
+    domains: &FailureDomains,
+    horizon_s: f64,
+    mtbf_hours: f64,
+    scale: f64,
+    seed: u64,
+) -> Vec<FaultEvent> {
+    debug_assert!(
+        domains.members.iter().flatten().all(|n| (*n as usize) < cluster.nodes.len()),
+        "domain membership out of cluster range"
+    );
+    let mut root = Rng::new(seed ^ DOMAIN_STREAM);
+    let scale = scale.clamp(0.0, SCALE_CAP);
+    let cap_rate = SCALE_CAP / (mtbf_hours.max(f64::MIN_POSITIVE) * 3600.0);
+    let mut events = Vec::new();
+    for (d, members) in domains.members.iter().enumerate() {
+        let mut rng = root.fork(d as u64);
+        let mut t = 0.0f64;
+        loop {
+            let u = 1.0 - rng.f64();
+            t += -u.ln() / cap_rate;
+            if t > horizon_s {
+                break;
+            }
+            let keep = rng.f64() * SCALE_CAP < scale;
+            if !keep {
+                continue;
+            }
+            for &node in members {
+                events.push(FaultEvent { at_s: t, kind: FaultKind::NodeFail { node } });
+            }
+        }
+    }
+    // sort by time, members of one domain event staying adjacent in
+    // ascending node order (ties across domains are measure-zero)
+    events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s).then(a.kind.node().cmp(&b.kind.node())));
+    events
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -524,6 +978,41 @@ mod tests {
     }
 
     #[test]
+    fn domain_schedule_is_correlated_and_nests() {
+        let c = presets::cluster_hetero(2, 2).unwrap(); // 4 nodes
+        let racks = FailureDomains::derive(&c, 2);
+        assert_eq!(racks.members, vec![vec![0, 1], vec![2, 3]]);
+        let lo = domain_schedule(&c, &racks, 5e7, 400.0, 2.0, 13);
+        let hi = domain_schedule(&c, &racks, 5e7, 400.0, 8.0, 13);
+        assert_eq!(lo, domain_schedule(&c, &racks, 5e7, 400.0, 2.0, 13));
+        assert!(!lo.is_empty(), "5e7s at 400h MTBF x2 should produce events");
+        assert!(hi.len() > lo.len(), "want the nesting check to be non-vacuous");
+        for ev in &lo {
+            assert!(hi.contains(ev), "low-scale event {ev:?} missing at high scale");
+        }
+        // every domain event expands to the whole rack at one instant
+        for sched in [&lo, &hi] {
+            let mut i = 0;
+            while i < sched.len() {
+                let rack = racks
+                    .members
+                    .iter()
+                    .find(|m| m.contains(&sched[i].kind.node()))
+                    .expect("event node belongs to a rack");
+                for (k, &member) in rack.iter().enumerate() {
+                    let ev = sched[i + k];
+                    assert_eq!(ev.at_s, sched[i].at_s, "blast members share the instant");
+                    assert_eq!(ev.kind, FaultKind::NodeFail { node: member });
+                }
+                i += rack.len();
+            }
+        }
+        // the last rack absorbs the remainder on non-multiple clusters
+        let odd = FailureDomains::derive(&c, 3);
+        assert_eq!(odd.members, vec![vec![0, 1, 2], vec![3]]);
+    }
+
+    #[test]
     fn resolve_iteration_picks_earliest_fail_stop_and_active_stragglers() {
         let c = presets::cluster_hetero(1, 1).unwrap(); // 2 nodes x 8
         let spec = FaultSpec {
@@ -538,15 +1027,24 @@ mod tests {
         };
         spec.validate(&c).unwrap();
         let r = spec.resolve_iteration(&c, 0.0);
-        let (at, node) = r.abort.unwrap();
-        assert_eq!((at, node), (Time::from_secs(3.0), 1));
+        let (at, node, class) = r.abort.unwrap();
+        assert_eq!((at, node, class), (Time::from_secs(3.0), 1, FaultClass::Node));
         assert!(r.slow[..8].iter().all(|m| *m == 1.0)); // node-0 straggler is in the future
         assert!(r.slow[8..].iter().all(|m| *m == 1.5));
+        assert!(r.degraded.is_empty());
         assert!(!r.is_noop());
         // later window: node-0 straggler now active, NIC fault is next
         let r = spec.resolve_iteration(&c, 6.0);
-        assert_eq!(r.abort.unwrap(), (Time::from_secs(3.0), 0));
+        assert_eq!(r.abort.unwrap(), (Time::from_secs(3.0), 0, FaultClass::Nic));
         assert!(r.slow[..8].iter().all(|m| *m == 2.0));
+        // window after the NIC strike but inside its repair: degraded
+        let r = spec.resolve_iteration(&c, 10.0);
+        assert!(r.abort.is_none());
+        assert_eq!(r.degraded, vec![(0, FaultClass::Nic)]);
+        assert!(!r.is_noop());
+        // window past the repair: healthy again
+        let r = spec.resolve_iteration(&c, 9.0 + spec.repair.nic_s + 1.0);
+        assert!(r.abort.is_none() && r.degraded.is_empty());
         // empty spec is a no-op
         assert!(FaultSpec::default().resolve_iteration(&c, 0.0).is_noop());
     }
@@ -575,12 +1073,57 @@ mod tests {
     }
 
     #[test]
+    fn validate_rejects_duplicates_and_overlapping_repairs() {
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let dup = FaultSpec {
+            events: vec![
+                FaultEvent { at_s: 4.0, kind: FaultKind::NodeFail { node: 1 } },
+                FaultEvent { at_s: 4.0, kind: FaultKind::NicFail { node: 1 } },
+            ],
+            ..Default::default()
+        };
+        assert!(dup.validate(&c).unwrap_err().to_string().contains("duplicate"));
+        // two NIC faults on one node inside one repair window
+        let overlap = FaultSpec {
+            events: vec![
+                FaultEvent { at_s: 0.0, kind: FaultKind::NicFail { node: 0 } },
+                FaultEvent { at_s: 100.0, kind: FaultKind::LinkFail { node: 0 } },
+            ],
+            ..Default::default() // nic repair 600s covers t=100
+        };
+        assert!(overlap.validate(&c).unwrap_err().to_string().contains("overlapping"));
+        // same times on distinct nodes (a rack blast) are fine
+        let blast = FaultSpec {
+            events: vec![
+                FaultEvent { at_s: 4.0, kind: FaultKind::NodeFail { node: 0 } },
+                FaultEvent { at_s: 4.0, kind: FaultKind::NodeFail { node: 1 } },
+            ],
+            ..Default::default()
+        };
+        blast.validate(&c).unwrap();
+        // and sequential repairs on one node are fine
+        let sequential = FaultSpec {
+            events: vec![
+                FaultEvent { at_s: 0.0, kind: FaultKind::LinkFail { node: 0 } },
+                FaultEvent { at_s: 400.0, kind: FaultKind::LinkFail { node: 0 } },
+            ],
+            ..Default::default() // link repair 300s ends before t=400
+        };
+        sequential.validate(&c).unwrap();
+        let bad_mc = FaultSpec { monte_carlo: 100_000, ..Default::default() };
+        // monte_carlo bound applies even to otherwise-empty specs
+        assert!(bad_mc.validate(&c).unwrap_err().to_string().contains("monte_carlo"));
+    }
+
+    #[test]
     fn from_json_parses_and_rejects() {
         let c = presets::cluster_hetero(1, 1).unwrap();
         let v = Json::parse(
             r#"{"events": [{"at_s": 2.5, "kind": "straggler", "node": 1, "mult": 1.4},
                            {"at_s": 1.0, "kind": "node_fail", "node": 0}],
-                "checkpoint": {"interval_iters": 8, "write_gbps": 4.0}}"#,
+                "checkpoint": {"interval_iters": 8, "write_gbps": 4.0},
+                "repair": {"nic_s": 120.0},
+                "monte_carlo": {"trajectories": 8}}"#,
         )
         .unwrap();
         let spec = FaultSpec::from_json(&v, &c, 42).unwrap();
@@ -588,8 +1131,22 @@ mod tests {
         assert_eq!(spec.events[0].at_s, 1.0); // normalized order
         assert_eq!(spec.checkpoint.interval_iters, 8);
         assert_eq!(spec.checkpoint.restart_warmup_s, 60.0); // default kept
+        assert_eq!(spec.repair.nic_s, 120.0);
+        assert_eq!(spec.repair.link_s, 300.0); // default kept
+        assert_eq!(spec.monte_carlo, 8);
         assert_eq!(spec.seed, 42);
         assert!(!spec.fingerprint().is_empty());
+
+        // a correlated-domain draw materializes whole-rack events
+        let v = Json::parse(
+            r#"{"domains": {"rack_size": 1, "horizon_s": 5e7, "mtbf_hours": 400.0,
+                            "scale": 2.0}}"#,
+        )
+        .unwrap();
+        let spec = FaultSpec::from_json(&v, &c, 13).unwrap();
+        assert!(!spec.events.is_empty());
+        assert!(spec.events.iter().all(|ev| matches!(ev.kind, FaultKind::NodeFail { .. })));
+        assert_eq!(spec.domains.unwrap().rack_size, 1);
 
         for (text, needle) in [
             (r#"{}"#, "at least one"),
@@ -599,6 +1156,9 @@ mod tests {
             (r#"{"events": [{"at_s": 1.0, "kind": "straggler", "node": 0}]}"#, "mult"),
             (r#"{"events": [], "mtbf": {"scale": 2.0}}"#, "horizon_s"),
             (r#"{"events": [], "checkpoint": {"interval_iters": "x"}}"#, "unsigned int"),
+            (r#"{"repair": {"nic_s": -1.0}}"#, "nic_s"),
+            (r#"{"domains": {"horizon_s": 1e6}}"#, "rack_size"),
+            (r#"{"monte_carlo": {"trajectories": 100000}}"#, "monte_carlo"),
         ] {
             let v = Json::parse(text).unwrap();
             let err = FaultSpec::from_json(&v, &c, 42).unwrap_err().to_string();
@@ -617,5 +1177,67 @@ mod tests {
         b.events[0].at_s = 2.0;
         assert_ne!(a.fingerprint(), b.fingerprint());
         assert!(a.fingerprint().starts_with("|faults:"));
+        // the repair and MC knobs are part of the key
+        let mut c = a.clone();
+        c.repair.link_s = 7.0;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let mut d = a.clone();
+        d.monte_carlo = 4;
+        assert_ne!(a.fingerprint(), d.fingerprint());
+    }
+
+    #[test]
+    fn degraded_model_reflects_fabric_redundancy() {
+        // 8 NICs per node on the rail fabric: NIC loss keeps 7/8 of the
+        // fabric bandwidth, cable loss likewise detours over 7 rails
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let m = DegradedModel::derive(&c).unwrap();
+        assert_eq!(m.bw_fraction(0, FaultClass::Nic), Some(7.0 / 8.0));
+        assert_eq!(m.bw_fraction(1, FaultClass::Link), Some(7.0 / 8.0));
+        assert_eq!(m.bw_fraction(0, FaultClass::Node), None);
+        // comm-bound iterations stretch by 1/phi on the comm share
+        let s = m.slowdown(0, FaultClass::Nic, 0.5).unwrap();
+        assert!((s - (0.5 + 0.5 * 8.0 / 7.0)).abs() < 1e-12);
+        assert_eq!(m.slowdown(0, FaultClass::Nic, 0.0), Some(1.0));
+
+        // single-rail nodes have no detour: NIC loss is fatal
+        let mut c1 = presets::cluster("ampere", 2).unwrap();
+        c1.nodes[0].gpus_per_node = 1;
+        c1.nodes[1].gpus_per_node = 1;
+        let m1 = DegradedModel::derive(&c1).unwrap();
+        assert_eq!(m1.bw_fraction(0, FaultClass::Nic), None);
+        assert_eq!(m1.slowdown(0, FaultClass::Nic, 0.5), None);
+
+        // leaf/spine: a cable fault detours via the alternate spine
+        let mut c2 = presets::cluster("ampere", 2).unwrap();
+        c2.fabric = FabricSpec::LeafSpine { spines: 2, oversubscription: 2.0 };
+        let m2 = DegradedModel::derive(&c2).unwrap();
+        assert_eq!(m2.bw_fraction(0, FaultClass::Link), Some(0.5));
+        // ... but a single-spine fabric has nowhere to detour to
+        let mut c3 = presets::cluster("ampere", 2).unwrap();
+        c3.fabric = FabricSpec::LeafSpine { spines: 1, oversubscription: 2.0 };
+        let m3 = DegradedModel::derive(&c3).unwrap();
+        assert_eq!(m3.bw_fraction(0, FaultClass::Link), None);
+        // the NIC itself is redundant either way
+        assert_eq!(m3.bw_fraction(0, FaultClass::Nic), Some(7.0 / 8.0));
+
+        // single-node clusters have no inter-node traffic to degrade
+        let c4 = presets::cluster("ampere", 1).unwrap();
+        let m4 = DegradedModel::derive(&c4).unwrap();
+        assert_eq!(m4.bw_fraction(0, FaultClass::Nic), Some(1.0));
+    }
+
+    #[test]
+    fn faulted_links_dispatch_on_fabric() {
+        let c = presets::cluster("ampere", 2).unwrap();
+        let topo = Topology::build(&c).unwrap();
+        assert!(faulted_links(&topo, 0, FaultClass::Node).is_empty());
+        assert_eq!(faulted_links(&topo, 0, FaultClass::Nic).len(), 4);
+        assert_eq!(faulted_links(&topo, 0, FaultClass::Link).len(), 2);
+        let mut c2 = presets::cluster("ampere", 2).unwrap();
+        c2.fabric = FabricSpec::LeafSpine { spines: 2, oversubscription: 2.0 };
+        let t2 = Topology::build(&c2).unwrap();
+        // leaf/spine cable faults name the spine-0 uplink pair
+        assert_eq!(faulted_links(&t2, 1, FaultClass::Link), t2.leaf_uplinks(1, 0).to_vec());
     }
 }

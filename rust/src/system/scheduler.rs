@@ -33,7 +33,7 @@ use crate::workload::op::Workload;
 
 use super::collective::RingPolicy;
 use super::compiled::{CompiledWorkload, DenseOp, FoldedMeta};
-use super::failure::{FaultReport, IterationFaults};
+use super::failure::{faulted_links, FaultReport, IterationFaults};
 
 /// Tag space split: collective flows use their dense id; p2p messages
 /// are offset so the two never collide.
@@ -201,8 +201,40 @@ impl<'a> Scheduler<'a> {
                 c
             }
         };
-        let flows = FlowSim::new(self.topology.clone());
-        Exec::new(cw, flows, self.record_trace, self.faults).run()
+        let mut flows = FlowSim::new(self.topology.clone());
+        let mut faults = self.faults;
+        // Degraded mode (DESIGN.md §28): nodes inside an unexpired
+        // NIC/link repair window lose their faulted links; the flow
+        // model reroutes every affected pair around them for the whole
+        // iteration. When some degraded node has *no* surviving route
+        // the fault escalates to an immediate fail-stop instead.
+        if let Some(f) = faults.as_mut() {
+            if !f.degraded.is_empty() {
+                let topo = &self.topology;
+                let mut dead = Vec::new();
+                for &(node, class) in &f.degraded {
+                    dead.extend(faulted_links(topo, node, class));
+                }
+                let nodes = self.cluster.nodes.len() as u32;
+                let severed = f.degraded.iter().copied().find(|&(node, _)| {
+                    // one representative peer suffices: the per-node
+                    // dead set affects every inter-node pair of the
+                    // degraded node identically
+                    (0..nodes).find(|&m| m != node).is_some_and(|other| {
+                        let a = topo.rank_of(node, 0);
+                        let b = topo.rank_of(other, 0);
+                        crate::network::routing::route_avoiding(topo, a, b, &dead).is_none()
+                            || crate::network::routing::route_avoiding(topo, b, a, &dead)
+                                .is_none()
+                    })
+                });
+                match severed {
+                    Some((node, class)) => f.abort = Some((Time::ZERO, node, class)),
+                    None => flows.set_dead_links(dead),
+                }
+            }
+        }
+        Exec::new(cw, flows, self.record_trace, faults).run()
     }
 }
 
@@ -295,13 +327,13 @@ impl<'w> Exec<'w> {
         let abort = self.faults.as_ref().and_then(|f| f.abort);
         let mut fault: Option<FaultReport> = None;
         loop {
-            if let Some((at, node)) = abort {
+            if let Some((at, node, kind)) = abort {
                 match eng.peek_time() {
                     None => break, // iteration completed before the fault
                     Some(t) if t >= at => {
                         // the whole partial iteration is lost work:
                         // gradient state dies with the fail-stop
-                        fault = Some(FaultReport { at, node, lost_work: at });
+                        fault = Some(FaultReport { at, node, kind, lost_work: at });
                         break;
                     }
                     Some(_) => {}

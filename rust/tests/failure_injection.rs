@@ -138,7 +138,7 @@ fn zero_byte_and_single_rank_collectives_complete() {
 
 #[test]
 fn node_loss_mid_iteration_yields_clean_fault_report() {
-    use hetsim::system::failure::{FaultReport, IterationFaults};
+    use hetsim::system::failure::{FaultClass, FaultReport, IterationFaults};
     use hetsim::util::units::Time;
     let (c, w, t) = small_setup();
     let clean = Scheduler::new(&w, &c, &t).unwrap().run().unwrap();
@@ -148,9 +148,16 @@ fn node_loss_mid_iteration_yields_clean_fault_report() {
     // terminate (not hang), report the fault, and stop the clock at it
     let half = Time(clean.iteration_time.as_ps() / 2);
     let mut sched = Scheduler::new(&w, &c, &t).unwrap();
-    sched.faults = Some(IterationFaults { abort: Some((half, 0)), slow: vec![1.0; 8] });
+    sched.faults = Some(IterationFaults {
+        abort: Some((half, 0, FaultClass::Node)),
+        slow: vec![1.0; 8],
+        degraded: vec![],
+    });
     let rep = sched.run().unwrap();
-    assert_eq!(rep.fault, Some(FaultReport { at: half, node: 0, lost_work: half }));
+    assert_eq!(
+        rep.fault,
+        Some(FaultReport { at: half, node: 0, kind: FaultClass::Node, lost_work: half })
+    );
     assert_eq!(rep.iteration_time, half);
     assert!(
         rep.events_processed < clean.events_processed,
@@ -169,7 +176,7 @@ fn straggler_strictly_increases_iteration_time() {
     let mut slow = vec![1.0; 8];
     slow[0] = 2.0; // one straggling rank drags its TP group
     let mut sched = Scheduler::new(&w, &c, &t).unwrap();
-    sched.faults = Some(IterationFaults { abort: None, slow });
+    sched.faults = Some(IterationFaults { abort: None, slow, degraded: vec![] });
     let rep = sched.run().unwrap();
     assert!(rep.fault.is_none());
     assert!(
@@ -178,6 +185,61 @@ fn straggler_strictly_increases_iteration_time() {
         rep.iteration_time,
         clean.iteration_time
     );
+}
+
+#[test]
+fn degraded_nic_reroutes_and_severed_link_escalates() {
+    use hetsim::config::cluster::FabricSpec;
+    use hetsim::system::failure::{FaultClass, IterationFaults};
+    use hetsim::util::units::Time;
+    // 16 ranks over two hopper nodes so inter-node routes exist
+    let mut m = presets::model("gpt-6.7b").unwrap();
+    m.num_layers = 2;
+    m.global_batch = 8;
+    m.micro_batch = 4;
+    let c = presets::cluster("hopper", 2).unwrap();
+    let f = FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 8, pp: 1, dp: 2 }).unwrap();
+    let w = generate(&m, &c, &f, &WorkloadOptions::default()).unwrap();
+    let mut t = CostTable::native();
+    register_costs(&w, &c, &mut t).unwrap();
+    let clean = Scheduler::new(&w, &c, &t).unwrap().run().unwrap();
+
+    // a NIC repair window on node 0: the iteration reroutes over the
+    // sibling rails and completes — degraded, never aborted
+    let mut sched = Scheduler::new(&w, &c, &t).unwrap();
+    sched.faults = Some(IterationFaults {
+        abort: None,
+        slow: vec![1.0; 16],
+        degraded: vec![(0, FaultClass::Nic)],
+    });
+    let rep = sched.run().unwrap();
+    assert!(rep.fault.is_none(), "degraded run must complete, got {:?}", rep.fault);
+    assert!(
+        rep.iteration_time >= clean.iteration_time,
+        "rerouted iteration beat the clean one: {} vs {}",
+        rep.iteration_time,
+        clean.iteration_time
+    );
+
+    // the same cable fault on a single-spine leaf/spine fabric leaves
+    // no surviving inter-node route: the fault escalates to an
+    // immediate fail-stop at the window start
+    let mut c1 = c.clone();
+    c1.fabric = FabricSpec::LeafSpine { spines: 1, oversubscription: 1.0 };
+    let mut t1 = CostTable::native();
+    register_costs(&w, &c1, &mut t1).unwrap();
+    let mut sched = Scheduler::new(&w, &c1, &t1).unwrap();
+    sched.faults = Some(IterationFaults {
+        abort: None,
+        slow: vec![1.0; 16],
+        degraded: vec![(0, FaultClass::Link)],
+    });
+    let rep = sched.run().unwrap();
+    let fault = rep.fault.expect("severed route must escalate to a fail-stop");
+    assert_eq!(fault.at, Time::ZERO);
+    assert_eq!(fault.node, 0);
+    assert_eq!(fault.kind, FaultClass::Link);
+    assert_eq!(rep.iteration_time, Time::ZERO);
 }
 
 #[test]

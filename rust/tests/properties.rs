@@ -16,6 +16,13 @@
 //!   failure-rate scale (nested-thinning schedules + monotone walk),
 //! * fault-aware plan sweeps are deterministic across worker-thread
 //!   counts,
+//! * zero-length repair windows make the degraded-mode walk
+//!   bit-identical to the fail-stop baseline,
+//! * a 1-trajectory Monte-Carlo run reproduces the deterministic walk,
+//!   and trajectory sets are byte-identical across thread counts and
+//!   nested in the trajectory count,
+//! * correlated domain schedules are nested across rate scales and
+//!   strike complete failure domains,
 //! * seeded Poisson request traces are reproducible and nested across
 //!   rate scales (same thinning construction as the MTBF schedules),
 //! * serving simulation conserves requests (every admitted request
@@ -628,13 +635,16 @@ fn prop_empty_fault_spec_is_bit_identical_to_no_faults() {
 fn prop_goodput_monotone_non_increasing_in_failure_rate() {
     use hetsim::config::cluster::ClusterSpec;
     use hetsim::report::goodput::{walk, GoodputInput};
-    use hetsim::system::failure::{mtbf_schedule, CheckpointSpec, SCALE_CAP};
+    use hetsim::system::failure::{mtbf_schedule, CheckpointSpec, RepairSpec, SCALE_CAP};
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     // mtbf_schedule thins one master draw, so a lower scale yields a
     // subset of a higher scale's events, and the goodput walk only ever
     // loses from extra events — together: goodput is monotone
-    // non-increasing in the failure-rate scale (DESIGN.md §26)
+    // non-increasing in the failure-rate scale (DESIGN.md §26).
+    // Pinned to the zero-repair regime: with a repair window a node
+    // loss can moot a later repairable outage's charge, so strict
+    // monotonicity only holds when NIC/link faults carry no window.
     let distinct = AtomicUsize::new(0);
     check(&cfg(100), |g| {
         let nodes = g.rng.range_u64(1, 5) as u32;
@@ -656,6 +666,9 @@ fn prop_goodput_monotone_non_increasing_in_failure_rate() {
                 restart_warmup_s: g.rng.range_f64(0.0, 600.0),
             },
             horizon_s: g.rng.range_f64(3_600.0, 14.0 * 86_400.0),
+            repair: RepairSpec { nic_s: 0.0, link_s: 0.0 },
+            degraded: None,
+            comm_fraction: 0.0,
         };
         let seed = g.rng.range_u64(0, 1 << 48);
         let mut lo_scale = g.rng.range_f64(0.0, SCALE_CAP);
@@ -772,6 +785,293 @@ fn prop_fault_sweep_deterministic_across_thread_counts() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_degraded_zero_repair_matches_fail_stop_baseline() {
+    use hetsim::config::cluster::ClusterSpec;
+    use hetsim::report::goodput::{walk, GoodputInput};
+    use hetsim::system::failure::{
+        mtbf_schedule, CheckpointSpec, DegradedModel, FaultKind, RepairSpec, SCALE_CAP,
+    };
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    // with zero-length repair windows a repairable outage ends the
+    // instant it begins: the degraded-window machinery must charge
+    // exactly what the plain fail-stop baseline charges, bit for bit
+    // (DESIGN.md §28)
+    let repairable = AtomicUsize::new(0);
+    check(&cfg(60), |g| {
+        let nodes = g.rng.range_u64(1, 4) as u32;
+        let cluster = if g.rng.f64() < 0.5 {
+            presets::cluster("hopper", nodes).unwrap()
+        } else {
+            presets::cluster_hetero(nodes, nodes).unwrap()
+        };
+        let degraded = DegradedModel::derive(&cluster).map_err(|e| e.to_string())?;
+        let model = presets::model("gpt-6.7b").unwrap();
+        let iter_s = g.rng.range_f64(0.1, 30.0);
+        let horizon_s = g.rng.range_f64(3_600.0, 7.0 * 86_400.0);
+        let base = GoodputInput {
+            model: &model,
+            cluster: &cluster,
+            iteration: Time::from_secs(iter_s),
+            dp: g.rng.range_u64(1, 9) as u32,
+            checkpoint: CheckpointSpec {
+                interval_iters: g.rng.range_u64(1, 200),
+                write_gbps: g.rng.range_f64(1.0, 100.0),
+                restart_warmup_s: g.rng.range_f64(0.0, 600.0),
+            },
+            horizon_s,
+            repair: RepairSpec { nic_s: 0.0, link_s: 0.0 },
+            degraded: None,
+            comm_fraction: g.rng.f64(),
+        };
+        let scale = g.rng.range_f64(0.0, SCALE_CAP);
+        let seed = g.rng.range_u64(0, 1 << 48);
+        let events = mtbf_schedule(&cluster, horizon_s, scale, seed);
+        repairable.fetch_add(
+            events
+                .iter()
+                .filter(|e| {
+                    matches!(e.kind, FaultKind::NicFail { .. } | FaultKind::LinkFail { .. })
+                })
+                .count(),
+            Ordering::Relaxed,
+        );
+        let full = cluster.nodes.len() as f64;
+        let mut replan = |c: &ClusterSpec| {
+            Some(Time::from_secs(iter_s * full / c.nodes.len().max(1) as f64))
+        };
+        let fail_stop = walk(&base, &events, &mut replan);
+        let with_model =
+            walk(&GoodputInput { degraded: Some(&degraded), ..base }, &events, &mut replan);
+        if with_model != fail_stop {
+            return Err(format!(
+                "zero-repair degraded walk diverged from the fail-stop baseline: \
+                 {:.6} vs {:.6} tok/s over {} events",
+                with_model.goodput_tokens_per_s,
+                fail_stop.goodput_tokens_per_s,
+                events.len()
+            ));
+        }
+        Ok(())
+    });
+    assert!(
+        repairable.load(Ordering::Relaxed) > 0,
+        "no schedule ever drew a repairable fault — the property is vacuous"
+    );
+}
+
+#[test]
+fn prop_mc_n1_matches_single_walk() {
+    use hetsim::config::cluster::ClusterSpec;
+    use hetsim::report::goodput::{monte_carlo, trajectory_seed, walk, GoodputInput};
+    use hetsim::system::failure::{mtbf_schedule, CheckpointSpec, RepairSpec, SCALE_CAP};
+
+    // trajectory 0 reuses the base seed verbatim, so a 1-trajectory
+    // Monte-Carlo run is the deterministic walk, bit for bit — the MC
+    // layer adds spread, never a different model (DESIGN.md §28)
+    check(&cfg(40), |g| {
+        let nodes = g.rng.range_u64(1, 4) as u32;
+        let cluster = presets::cluster("hopper", nodes).unwrap();
+        let model = presets::model("gpt-6.7b").unwrap();
+        let iter_s = g.rng.range_f64(0.1, 30.0);
+        let horizon_s = g.rng.range_f64(3_600.0, 7.0 * 86_400.0);
+        let input = GoodputInput {
+            model: &model,
+            cluster: &cluster,
+            iteration: Time::from_secs(iter_s),
+            dp: g.rng.range_u64(1, 9) as u32,
+            checkpoint: CheckpointSpec {
+                interval_iters: g.rng.range_u64(1, 200),
+                write_gbps: g.rng.range_f64(1.0, 100.0),
+                restart_warmup_s: g.rng.range_f64(0.0, 600.0),
+            },
+            horizon_s,
+            repair: RepairSpec::default(),
+            degraded: None,
+            comm_fraction: 0.25,
+        };
+        let seed = g.rng.range_u64(0, 1 << 48);
+        let scale = g.rng.range_f64(0.0, SCALE_CAP);
+        if trajectory_seed(seed, 0) != seed {
+            return Err(format!("trajectory 0 must reuse the base seed {seed} verbatim"));
+        }
+        let full = cluster.nodes.len() as f64;
+        let replan = |c: &ClusterSpec| {
+            Some(Time::from_secs(iter_s * full / c.nodes.len().max(1) as f64))
+        };
+        let draw = |i: u32| mtbf_schedule(&cluster, horizon_s, scale, trajectory_seed(seed, i));
+        let threads = 1 + g.rng.range_u64(0, 4) as usize;
+        let reports = monte_carlo(&input, draw, 1, threads, replan);
+        let mut rm = replan;
+        let single = walk(&input, &draw(0), &mut rm);
+        if reports.len() != 1 || reports[0] != single {
+            return Err(format!(
+                "1-trajectory Monte-Carlo diverged from the single walk: {:?} vs {:?}",
+                reports.first(),
+                single
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mc_deterministic_across_threads_and_nested_in_trajectory_count() {
+    use hetsim::config::cluster::ClusterSpec;
+    use hetsim::report::goodput::{monte_carlo, trajectory_seed, GoodputInput};
+    use hetsim::system::failure::{mtbf_schedule, CheckpointSpec, RepairSpec};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    // per-trajectory seeds depend only on the trajectory index, and the
+    // reduction is index-ordered: the report vector must be
+    // byte-identical for any worker count, and the first N trajectories
+    // of a 2N-run must equal the N-run exactly (DESIGN.md §28)
+    let eventful = AtomicUsize::new(0);
+    check(&cfg(15), |g| {
+        let cluster = presets::cluster("hopper", 1 + g.rng.range_u64(0, 3) as u32).unwrap();
+        let model = presets::model("gpt-6.7b").unwrap();
+        let iter_s = g.rng.range_f64(0.1, 30.0);
+        let horizon_s = g.rng.range_f64(7.0 * 86_400.0, 21.0 * 86_400.0);
+        let input = GoodputInput {
+            model: &model,
+            cluster: &cluster,
+            iteration: Time::from_secs(iter_s),
+            dp: g.rng.range_u64(1, 9) as u32,
+            checkpoint: CheckpointSpec {
+                interval_iters: g.rng.range_u64(1, 200),
+                write_gbps: g.rng.range_f64(1.0, 100.0),
+                restart_warmup_s: g.rng.range_f64(0.0, 600.0),
+            },
+            horizon_s,
+            repair: RepairSpec::default(),
+            degraded: None,
+            comm_fraction: 0.25,
+        };
+        let seed = g.rng.range_u64(0, 1 << 48);
+        let scale = g.rng.range_f64(4.0, 12.0);
+        let full = cluster.nodes.len() as f64;
+        let replan = |c: &ClusterSpec| {
+            Some(Time::from_secs(iter_s * full / c.nodes.len().max(1) as f64))
+        };
+        let draw = |i: u32| mtbf_schedule(&cluster, horizon_s, scale, trajectory_seed(seed, i));
+        let n = 2 + g.rng.range_u64(0, 5) as u32;
+        let base = monte_carlo(&input, draw, n, 1, replan);
+        eventful.fetch_add(
+            base.iter().filter(|r| r.fail_stops + r.link_outages + r.stragglers > 0).count(),
+            Ordering::Relaxed,
+        );
+        for threads in [4usize, 8] {
+            let rep = monte_carlo(&input, draw, n, threads, replan);
+            if rep != base {
+                return Err(format!(
+                    "Monte-Carlo reports diverged between 1 and {threads} threads \
+                     over {n} trajectories"
+                ));
+            }
+        }
+        let doubled = monte_carlo(&input, draw, 2 * n, 3, replan);
+        if doubled[..n as usize] != base[..] {
+            return Err(format!(
+                "trajectory sets not nested: first {n} of {} diverged from the {n}-run",
+                2 * n
+            ));
+        }
+        Ok(())
+    });
+    assert!(
+        eventful.load(Ordering::Relaxed) > 0,
+        "no trajectory ever drew a fault — the property is vacuous"
+    );
+}
+
+#[test]
+fn prop_domain_schedule_nested_and_correlated() {
+    use hetsim::system::failure::{domain_schedule, FailureDomains, FaultKind, SCALE_CAP};
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    // domain blasts use the same thinning construction as the per-node
+    // MTBF schedules, so a lower rate scale draws an exact subset of a
+    // higher scale's blasts; and every blast must strike complete
+    // failure domains, never partial ones (DESIGN.md §28)
+    let distinct = AtomicUsize::new(0);
+    let multi = AtomicUsize::new(0);
+    check(&cfg(100), |g| {
+        let nodes = g.rng.range_u64(2, 9) as u32;
+        let cluster = presets::cluster("ampere", nodes).unwrap();
+        let rack = g.rng.range_u64(1, 5) as u32;
+        let domains = FailureDomains::derive(&cluster, rack);
+        let horizon_s = g.rng.range_f64(10.0 * 86_400.0, 30.0 * 86_400.0);
+        let mtbf_hours = g.rng.range_f64(100.0, 2_000.0);
+        let seed = g.rng.range_u64(0, 1 << 48);
+        let mut lo = g.rng.range_f64(0.0, SCALE_CAP);
+        let mut hi = g.rng.range_f64(1.0, SCALE_CAP);
+        if lo > hi {
+            std::mem::swap(&mut lo, &mut hi);
+        }
+        let lo_ev = domain_schedule(&cluster, &domains, horizon_s, mtbf_hours, lo, seed);
+        let hi_ev = domain_schedule(&cluster, &domains, horizon_s, mtbf_hours, hi, seed);
+        // nested: every low-scale blast appears verbatim in the
+        // high-scale schedule, in the same relative order
+        let mut it = hi_ev.iter();
+        for e in &lo_ev {
+            if !it.any(|h| h == e) {
+                return Err(format!(
+                    "scale {lo:.3} event at t={} missing from scale {hi:.3} schedule \
+                     ({} vs {} events)",
+                    e.at_s,
+                    lo_ev.len(),
+                    hi_ev.len()
+                ));
+            }
+        }
+        if hi_ev.len() > lo_ev.len() {
+            distinct.fetch_add(1, Ordering::Relaxed);
+        }
+        // correlated: group by bit-exact blast instant; every group
+        // must decompose into complete domains
+        let mut by_t: HashMap<u64, Vec<u32>> = HashMap::new();
+        for e in &hi_ev {
+            if !matches!(e.kind, FaultKind::NodeFail { .. }) {
+                return Err(format!("domain schedule drew a non-node fault: {:?}", e.kind));
+            }
+            by_t.entry(e.at_s.to_bits()).or_default().push(e.kind.node());
+        }
+        for (t, mut struck) in by_t {
+            struck.sort_unstable();
+            if struck.len() > 1 {
+                multi.fetch_add(1, Ordering::Relaxed);
+            }
+            let mut rest: &[u32] = &struck;
+            while !rest.is_empty() {
+                let dom = domains.members.iter().find(|m| m.first() == rest.first());
+                match dom {
+                    Some(m) if rest.len() >= m.len() && &rest[..m.len()] == m.as_slice() => {
+                        rest = &rest[m.len()..];
+                    }
+                    _ => {
+                        return Err(format!(
+                            "blast at t(bits)={t} struck {struck:?}, not a union of \
+                             complete domains {:?}",
+                            domains.members
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+    assert!(
+        distinct.load(Ordering::Relaxed) > 0,
+        "no random case ever drew different schedules — nesting is vacuous"
+    );
+    assert!(
+        multi.load(Ordering::Relaxed) > 0,
+        "no blast ever struck a multi-node domain — correlation is vacuous"
+    );
 }
 
 #[test]
