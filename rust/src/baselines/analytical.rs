@@ -15,19 +15,27 @@ use crate::util::units::Time;
 use crate::workload::op::{Op, Workload};
 
 /// Collective descriptor row for the `coll_model` artifact
-/// (`[algo, nranks, size, bw, latency, extra_hops, 0, 0]`).
-pub fn coll_descriptor(cluster: &ClusterSpec, def: &CollectiveDef) -> anyhow::Result<[f32; 8]> {
-    let topo = Topology::build(cluster)?;
+/// (`[algo, nranks, size, bw, latency, extra_hops, 0, 0]`), against a
+/// prebuilt topology.
+///
+/// The bottleneck bandwidth is derived from the **actual fabric
+/// graph**: the ring-neighbour routes traverse whatever links the
+/// configured [`crate::config::cluster::FabricSpec`] materialized —
+/// rail switches, the single cluster switch, or leaf/spine uplinks
+/// whose capacity is tapered by `spines × oversubscription` — so an
+/// oversubscribed spine fabric lowers the estimate exactly as it
+/// lowers the simulated flow rates.
+pub fn coll_descriptor_with_topology(topo: &Topology, def: &CollectiveDef) -> [f32; 8] {
     // bottleneck bandwidth + worst fixed delay over ring-neighbour routes
     let n = def.ranks.len();
     let mut min_bw = f64::INFINITY;
     let mut max_delay = Time::ZERO;
     for i in 0..n {
-        let r = routing::route(&topo, def.ranks[i], def.ranks[(i + 1) % n]);
+        let r = routing::route(topo, def.ranks[i], def.ranks[(i + 1) % n]);
         for l in &r.links {
             min_bw = min_bw.min(topo.link(*l).bw.bytes_per_sec());
         }
-        let d = routing::fixed_delay(&topo, &r);
+        let d = routing::fixed_delay(topo, &r);
         if d > max_delay {
             max_delay = d;
         }
@@ -35,7 +43,7 @@ pub fn coll_descriptor(cluster: &ClusterSpec, def: &CollectiveDef) -> anyhow::Re
     if !min_bw.is_finite() {
         min_bw = 0.0;
     }
-    Ok([
+    [
         def.algo.code(),
         n as f32,
         def.bytes_per_rank as f32,
@@ -44,7 +52,16 @@ pub fn coll_descriptor(cluster: &ClusterSpec, def: &CollectiveDef) -> anyhow::Re
         0.0,
         0.0,
         0.0,
-    ])
+    ]
+}
+
+/// [`coll_descriptor_with_topology`] with the topology built on the
+/// spot. Prefer the `_with_topology` form in any loop — building the
+/// fabric graph per collective dominated estimate time on large
+/// clusters.
+pub fn coll_descriptor(cluster: &ClusterSpec, def: &CollectiveDef) -> anyhow::Result<[f32; 8]> {
+    let topo = Topology::build(cluster)?;
+    Ok(coll_descriptor_with_topology(&topo, def))
 }
 
 /// Native mirror of the coll_model formulas (kept in lockstep with
@@ -89,10 +106,20 @@ pub fn collective_seconds(
     defs: &[&CollectiveDef],
     pjrt: Option<&crate::runtime::PjrtCollModel>,
 ) -> anyhow::Result<Vec<f64>> {
-    let rows: Vec<[f32; 8]> = defs
-        .iter()
-        .map(|d| coll_descriptor(cluster, d))
-        .collect::<anyhow::Result<Vec<_>>>()?;
+    // one fabric graph for the whole batch, not one per collective
+    let topo = Topology::build(cluster)?;
+    collective_seconds_with_topology(&topo, defs, pjrt)
+}
+
+/// [`collective_seconds`] against a prebuilt topology (the form the
+/// planner's bound layer and any estimator loop should use).
+pub fn collective_seconds_with_topology(
+    topo: &Topology,
+    defs: &[&CollectiveDef],
+    pjrt: Option<&crate::runtime::PjrtCollModel>,
+) -> anyhow::Result<Vec<f64>> {
+    let rows: Vec<[f32; 8]> =
+        defs.iter().map(|d| coll_descriptor_with_topology(topo, d)).collect();
     match pjrt {
         Some(model) => {
             let mut out = Vec::with_capacity(rows.len());
@@ -205,6 +232,52 @@ mod tests {
         let row = coll_descriptor(&c, &def).unwrap();
         assert!((row[3] - 25e9).abs() / 25e9 < 1e-6, "{}", row[3]);
         // intra-node: NVLink 300 GB/s
+        let def2 = CollectiveDef { ranks: vec![0, 1], ..def };
+        let row2 = coll_descriptor(&c, &def2).unwrap();
+        assert!((row2[3] - 300e9).abs() / 300e9 < 1e-6, "{}", row2[3]);
+    }
+
+    #[test]
+    fn coll_descriptor_is_fabric_aware_single_switch() {
+        use crate::config::cluster::FabricSpec;
+        let mut c = presets::cluster("ampere", 2).unwrap();
+        c.fabric = FabricSpec::SingleSwitch;
+        let def = CollectiveDef {
+            id: 0,
+            algo: CollectiveAlgo::AllReduceRing,
+            ranks: vec![0, 8],
+            bytes_per_rank: 1 << 30,
+            kind: CommKind::Dp,
+            label: "x".into(),
+        };
+        // non-blocking switch: the 25 GB/s NIC stays the bottleneck
+        let row = coll_descriptor(&c, &def).unwrap();
+        assert!((row[3] - 25e9).abs() / 25e9 < 1e-6, "{}", row[3]);
+    }
+
+    #[test]
+    fn coll_descriptor_is_fabric_aware_leaf_spine() {
+        use crate::config::cluster::FabricSpec;
+        let def = CollectiveDef {
+            id: 0,
+            algo: CollectiveAlgo::AllReduceRing,
+            ranks: vec![0, 8],
+            bytes_per_rank: 1 << 30,
+            kind: CommKind::Dp,
+            label: "x".into(),
+        };
+        // non-blocking spine: uplinks carry the node NIC aggregate
+        // (8 × 25 GB/s), so the NIC stays the bottleneck
+        let mut c = presets::cluster("ampere", 2).unwrap();
+        c.fabric = FabricSpec::LeafSpine { spines: 1, oversubscription: 1.0 };
+        let row = coll_descriptor(&c, &def).unwrap();
+        assert!((row[3] - 25e9).abs() / 25e9 < 1e-6, "{}", row[3]);
+        // 16× oversubscribed: uplink = 25e9 × 8 / (1 × 16) = 12.5 GB/s
+        // — the tapered uplink, not the NIC, now caps the estimate
+        c.fabric = FabricSpec::LeafSpine { spines: 1, oversubscription: 16.0 };
+        let row = coll_descriptor(&c, &def).unwrap();
+        assert!((row[3] - 12.5e9).abs() / 12.5e9 < 1e-6, "{}", row[3]);
+        // intra-node traffic never touches the taper
         let def2 = CollectiveDef { ranks: vec![0, 1], ..def };
         let row2 = coll_descriptor(&c, &def2).unwrap();
         assert!((row2[3] - 300e9).abs() / 300e9 < 1e-6, "{}", row2[3]);

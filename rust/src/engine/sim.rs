@@ -59,9 +59,14 @@ impl<T> Engine<T> {
 
     /// The timestamp of the next pending event without popping it
     /// (`None` when the queue is drained). Lets manual-loop callers
-    /// decide *before* dispatch whether an external cutoff — e.g. an
-    /// injected fault ([`crate::system::failure`]) — fires first,
-    /// without perturbing the clock or the processed-event count.
+    /// decide *before* dispatch whether an external cutoff — an
+    /// injected fault ([`crate::system::failure`]) or the
+    /// branch-and-bound incumbent cutoff
+    /// ([`crate::system::scheduler::Scheduler::cutoff`], DESIGN.md
+    /// §29) — fires first, without perturbing the clock or the
+    /// processed-event count. Peek-before-dispatch is what makes a
+    /// run that *completes* under a finite cutoff bit-identical to
+    /// the cutoff-free run.
     pub fn peek_time(&mut self) -> Option<Time> {
         self.queue.peek_time()
     }

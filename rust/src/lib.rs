@@ -118,4 +118,4 @@ pub mod util;
 #[warn(missing_docs)]
 pub mod workload;
 
-pub use simulator::{EvalContext, EvalScore, SimulationBuilder, SimulationReport};
+pub use simulator::{EvalContext, EvalScore, ScoreOutcome, SimulationBuilder, SimulationReport};

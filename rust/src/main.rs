@@ -22,7 +22,7 @@ fn usage() -> Usage {
         about: "heterogeneity-aware LLM training simulator (CS.DC 2025 reproduction)",
         commands: vec![
             ("simulate", "run a scenario: --config FILE | --model NAME --cluster SPEC [--tp N --pp N --dp N] [--fabric rail|switch|spine:S,OS] [--schedule gpipe|1f1b|interleaved:V] [--fold auto|off] [--faults FILE] [--iterations N --threads N]"),
-            ("plan", "rank TPxPPxDPxschedule plans (+ variable per-group TP layouts on hetero clusters) [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --threads N --mb-limit N (0=all) --top K --refine[=STEPS] --fold auto|off --objective time|goodput|goodput-ci --mc N [--horizon-s S --mtbf-scale X --seed N]]"),
+            ("plan", "rank TPxPPxDPxschedule plans (+ variable per-group TP layouts on hetero clusters) [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --search grid|bnb --threads N --mb-limit N (0=all) --top K --refine[=STEPS] --fold auto|off --objective time|goodput|goodput-ci --mc N [--horizon-s S --mtbf-scale X --seed N]]"),
             ("goodput", "rank plans by effective goodput under an MTBF fault schedule [--model NAME --cluster SPEC --fabric rail|switch|spine:S,OS --threads N --mb-limit N --top K --fold auto|off --horizon-s S --mtbf-scale X --seed N --mc N --rack-size N --domain-mtbf-h H]"),
             ("serve-sim", "simulate inference serving: goodput, TTFT/TBT, latency percentiles per device group: --config FILE | --model NAME --cluster SPEC [--fabric SPEC --policy fifo|srpt|wsrpt --rate R --horizon-s S --scale X --prompt-tokens N --output-tokens N --max-batch N --kv-frac F --seed N --threads N]"),
             ("bench", "planner/engine throughput ladders -> BENCH_plan.json [--quick --threads N --out FILE --baseline FILE --factor F]"),
@@ -224,7 +224,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 fn cmd_plan(args: &Args) -> Result<()> {
     args.check_known(&[
         "model", "cluster", "fabric", "threads", "mb-limit", "top", "refine", "fold", "goodput",
-        "objective", "mc", "horizon-s", "mtbf-scale", "seed",
+        "objective", "mc", "horizon-s", "mtbf-scale", "seed", "search",
     ])?;
     let model = presets::model(args.opt_or("model", "gpt-6.7b"))?;
     let mut cluster = loader::parse_cluster(&hetsim::util::json::Json::Str(
@@ -261,7 +261,15 @@ fn cmd_plan(args: &Args) -> Result<()> {
             anyhow::bail!("--objective must be time|goodput|goodput-ci, got '{other}'")
         }
     };
-    let mut report = hetsim::planner::search(&model, &cluster, &opts)?;
+    // --search grid (default, exhaustive) | bnb (bound-guided
+    // branch-and-bound with incumbent-cutoff simulation, DESIGN.md §29
+    // — same best plan, strictly fewer full simulations)
+    let search_kind = args.opt_or("search", "grid");
+    let mut report = match search_kind {
+        "grid" => hetsim::planner::search(&model, &cluster, &opts)?,
+        "bnb" => hetsim::planner::search_bnb(&model, &cluster, &opts)?,
+        other => anyhow::bail!("--search must be grid|bnb, got '{other}'"),
+    };
     // goodput objectives re-rank by effective goodput under an MTBF
     // schedule (DESIGN.md §26, §28); fault-free scores stay in the
     // table. goodput-ci scores each plan by the lower 95% confidence
@@ -281,6 +289,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
             mtbf_scale: args.opt_f64("mtbf-scale", 1.0)?,
             seed: args.opt_u64("seed", 42)?,
             mc,
+            // bnb extends incumbent pruning into the Monte-Carlo
+            // ranking: dominated trajectory sets stop early
+            mc_early_stop: search_kind == "bnb",
             ..Default::default()
         };
         hetsim::report::goodput::annotate(&mut report, &model, &cluster, &gopts);

@@ -1,0 +1,221 @@
+//! Bound-guided branch-and-bound plan search (DESIGN.md §29,
+//! `hetsim plan --search bnb`).
+//!
+//! The exhaustive grid ([`super::search::search`]) pays one full
+//! simulated iteration per enumerated candidate. This driver spends an
+//! analytical lower bound ([`super::bound`]) per candidate first —
+//! microseconds instead of milliseconds — and then visits candidates
+//! **best-bound-first** while maintaining an *incumbent* (the best
+//! fully simulated time so far):
+//!
+//! * a candidate whose bound exceeds the incumbent is **pruned** — by
+//!   admissibility its simulated time could only be worse;
+//! * a candidate that is simulated runs under an **incumbent cutoff**
+//!   ([`crate::simulator::SimulationBuilder::score_with_cutoff`]): the
+//!   event loop aborts the moment its clock passes the incumbent, so a
+//!   loser stops paying for events it can never convert into a win.
+//!
+//! Because the bound never exceeds the simulated time, the true best
+//! candidate can neither be pruned (its bound ≤ its time ≤ any
+//! incumbent) nor aborted (strict `>` cutoff: a run *equal* to the
+//! incumbent completes), so the reported best plan equals the
+//! exhaustive grid best — `tests/properties.rs` and the `bnb_speedup`
+//! bench both gate on this.
+//!
+//! ## Determinism across thread counts
+//!
+//! Candidates are ordered once by `(bound, enumeration index)` and then
+//! consumed in fixed-size batches: each batch is filled by scanning
+//! that order and discarding bound-pruned entries, the whole batch is
+//! simulated concurrently against the *pre-batch* incumbent, and
+//! results are folded back **sequentially in batch order**. No
+//! decision ever depends on worker scheduling, so the ranked report is
+//! byte-identical across 1/4/8 threads (same argument as the grid, plus
+//! the batch discipline for the incumbent).
+//!
+//! Candidates the incumbent cutoff aborted are *not* ranked (their
+//! timing is partial); the ranked table is therefore the
+//! time-competitive subset of the grid's. Prune/abort counts are
+//! reported in [`SearchStats`].
+
+use crate::config::cluster::ClusterSpec;
+use crate::config::model::ModelSpec;
+use crate::simulator::EvalContext;
+use crate::util::par::parallel_map;
+use crate::util::units::Time;
+
+use super::bound::Bounder;
+use super::search::{
+    baseline_and_refine, enumerate_relaxed, evaluate_with_cutoff, rank, EvaluatedPlan,
+    PlanOptions, PlanSearchReport, SearchStats,
+};
+
+/// Candidates simulated per deterministic batch. Small enough that the
+/// incumbent tightens frequently (pruning power), large enough to keep
+/// a typical worker pool busy.
+pub const BATCH: usize = 8;
+
+/// Bound-guided search: same inputs and report shape as
+/// [`super::search::search`], strictly fewer full simulations, and the
+/// identical best plan.
+pub fn search_bnb(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    opts: &PlanOptions,
+) -> anyhow::Result<PlanSearchReport> {
+    let (candidates, pruned, memory_relaxed) = enumerate_relaxed(model, cluster, opts)?;
+    let ctx = EvalContext::new(model, cluster)?;
+    let n = candidates.len();
+
+    // Lower bounds, sequentially (cheap: closed-form over the cost
+    // table — no event loop). A candidate whose spec fails to
+    // materialize gets a zero bound so it is evaluated — and fails —
+    // exactly like it would under the grid, keeping the `failed` list
+    // honest.
+    let mut bounder = Bounder::new(&ctx.topology());
+    let mut bounds: Vec<Time> = Vec::with_capacity(n);
+    for cand in &candidates {
+        let b = cand
+            .framework(model, cluster)
+            .and_then(|fw| bounder.bound(model, cluster, &fw, opts.microbatch_limit))
+            .unwrap_or(Time::ZERO);
+        bounds.push(b);
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| (bounds[i], i));
+
+    let mut ranked: Vec<EvaluatedPlan> = Vec::new();
+    let mut failed = Vec::new();
+    let mut incumbent: Option<Time> = None;
+    let mut bound_pruned = 0usize;
+    let mut cutoff_aborted = 0usize;
+    let mut full_sims = 0usize;
+
+    let mut pos = 0;
+    while pos < order.len() {
+        // fill one batch, discarding candidates the incumbent already
+        // dominates (strict >: a bound equal to the incumbent could
+        // still tie on time and win the key tie-break)
+        let mut batch: Vec<usize> = Vec::with_capacity(BATCH);
+        while pos < order.len() && batch.len() < BATCH {
+            let i = order[pos];
+            pos += 1;
+            match incumbent {
+                Some(inc) if bounds[i] > inc => bound_pruned += 1,
+                _ => batch.push(i),
+            }
+        }
+        if batch.is_empty() {
+            continue;
+        }
+        // simulate the whole batch against the pre-batch incumbent —
+        // identical work regardless of worker count
+        let cutoff = incumbent;
+        let results = parallel_map(batch.len(), opts.threads, |j| {
+            evaluate_with_cutoff(model, cluster, &candidates[batch[j]], opts, &ctx, cutoff)
+        });
+        // fold back sequentially in batch order
+        for (&i, res) in batch.iter().zip(results) {
+            match res {
+                Ok(Some(ev)) => {
+                    full_sims += 1;
+                    if incumbent.map_or(true, |inc| ev.iteration_time < inc) {
+                        incumbent = Some(ev.iteration_time);
+                    }
+                    ranked.push(ev);
+                }
+                Ok(None) => cutoff_aborted += 1,
+                Err(e) => {
+                    full_sims += 1;
+                    failed.push((candidates[i].clone(), format!("{e:#}")));
+                }
+            }
+        }
+    }
+
+    if ranked.is_empty() {
+        let detail =
+            failed.first().map(|(c, e)| format!("{}: {e}", c.key())).unwrap_or_default();
+        anyhow::bail!("all {n} candidates failed to evaluate — {detail}");
+    }
+    rank(&mut ranked);
+
+    let (baseline, refined) = baseline_and_refine(model, cluster, opts, &ctx, &ranked)?;
+    Ok(PlanSearchReport {
+        ranked,
+        pruned,
+        failed,
+        baseline,
+        refined,
+        memory_relaxed,
+        stats: Some(SearchStats {
+            candidates: n,
+            bound_pruned,
+            cutoff_aborted,
+            full_sims,
+        }),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::planner::search::search;
+
+    fn tiny_model() -> ModelSpec {
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.num_layers = 4;
+        m.global_batch = 16;
+        m.micro_batch = 8;
+        m
+    }
+
+    #[test]
+    fn bnb_matches_grid_best_with_fewer_full_sims() {
+        let m = tiny_model();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let opts = PlanOptions { microbatch_limit: Some(1), threads: 2, ..Default::default() };
+        let grid = search(&m, &c, &opts).unwrap();
+        let bnb = search_bnb(&m, &c, &opts).unwrap();
+        assert_eq!(bnb.best().candidate, grid.best().candidate);
+        assert_eq!(bnb.best().iteration_time, grid.best().iteration_time);
+        let st = bnb.stats.unwrap();
+        assert_eq!(st.candidates, grid.ranked.len() + grid.failed.len());
+        assert!(
+            st.full_sims < st.candidates,
+            "bnb ran {} full sims of {} candidates — nothing saved",
+            st.full_sims,
+            st.candidates
+        );
+        assert_eq!(st.full_sims + st.cutoff_aborted + st.bound_pruned, st.candidates);
+    }
+
+    #[test]
+    fn bnb_report_is_thread_invariant() {
+        let m = tiny_model();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let renders: Vec<String> = [1usize, 4, 8]
+            .iter()
+            .map(|&t| {
+                let opts =
+                    PlanOptions { microbatch_limit: Some(1), threads: t, ..Default::default() };
+                search_bnb(&m, &c, &opts).unwrap().render(0)
+            })
+            .collect();
+        assert_eq!(renders[0], renders[1]);
+        assert_eq!(renders[0], renders[2]);
+        assert!(renders[0].contains("bound-guided:"), "{}", renders[0]);
+    }
+
+    #[test]
+    fn bnb_stats_render_mentions_counters() {
+        let m = tiny_model();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let opts = PlanOptions { microbatch_limit: Some(1), threads: 2, ..Default::default() };
+        let rep = search_bnb(&m, &c, &opts).unwrap();
+        let text = rep.render(3);
+        assert!(text.contains("bound-pruned"), "{text}");
+        assert!(text.contains("cutoff-aborted"), "{text}");
+    }
+}

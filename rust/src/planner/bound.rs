@@ -1,0 +1,321 @@
+//! Admissible analytical lower bound on a plan candidate's simulated
+//! iteration time (DESIGN.md §29).
+//!
+//! The branch-and-bound driver ([`super::bnb`]) orders candidates by
+//! this bound and prunes every candidate whose bound already exceeds
+//! the incumbent — so the bound must **never** exceed the full
+//! simulated iteration time, on any cluster, fabric or schedule
+//! (admissibility). The derivation is a per-rank sequential-timeline
+//! argument over the exact op streams `workload/aicb.rs` emits:
+//!
+//! * **Compute floor.** Every rank of a pipeline stage executes, per
+//!   microbatch, `num_layers` attention + MLP/MoE blocks forward and
+//!   backward, sequentially, with durations drawn from the same
+//!   [`CostTable`] the simulator uses — per-op times here are
+//!   bit-identical to the simulated durations. Embedding, the "other"
+//!   fraction, p2p transfers and every launch gap are *omitted*, which
+//!   only lowers the bound. Two consequences, both true under GPipe,
+//!   1F1B and interleaved 1F1B:
+//!   - *bottleneck*: the iteration is at least any single rank's summed
+//!     op time — `m × stage_work` for the slowest rank of any stage;
+//!   - *chain*: microbatch 0 traverses every (virtual) stage forward
+//!     and backward through blocking stage-boundary receives, so the
+//!     iteration is at least the sum over stages of one microbatch's
+//!     stage work (taking each stage's *fastest* rank keeps the chain
+//!     inside a real dependency path for every TP slot).
+//!
+//! * **Communication floor.** Collectives are blocking: a member rank
+//!   cannot pass the op before the collective's sequential flow steps
+//!   all complete, and each step moves its chunk at no more than the
+//!   single best link bandwidth in the topology (a flow's max-min rate
+//!   is bottlenecked by *some* route link, and every link's capacity is
+//!   ≤ the fabric-wide maximum — this is what makes the floor valid on
+//!   rail, switch and oversubscribed leaf/spine fabrics alike). The
+//!   per-collective floor replays the exact step/chunk structure of
+//!   [`crate::system::collective`]'s expansion (ring: `2(n−1)` steps of
+//!   `bytes/n`; RS/AG: `n−1` steps; hierarchical: the two intra-node
+//!   phases, with the inter-node phase conservatively dropped) at that
+//!   best-case bandwidth, with all fixed per-hop delays dropped. EP
+//!   all-to-alls and resharding traffic are omitted entirely.
+//!
+//! A relative haircut of [`COMM_SLACK`] absorbs picosecond-level
+//! rounding between the floor's closed-form f64 arithmetic and the
+//! engine's integer-picosecond event times; compute terms need no
+//! haircut because they are summed as the very same integer-picosecond
+//! [`Time`] values the event loop schedules.
+//! `tests/properties.rs::prop_bnb_bound_is_admissible` enforces
+//! admissibility over random clusters × fabrics × schedules.
+
+use crate::compute::cost::LayerWork;
+use crate::compute::table::CostTable;
+use crate::config::cluster::{ClusterSpec, GpuSpec};
+use crate::config::framework::FrameworkSpec;
+use crate::config::model::{LayerKind, ModelSpec};
+use crate::network::topology::Topology;
+use crate::system::collective::{select_allreduce_algo, CollectiveAlgo};
+use crate::system::resharding::group_needs_resharding;
+use crate::system::DeviceGroups;
+use crate::util::units::{Time, PS_PER_S};
+use crate::workload::aicb::stage_grad_bytes;
+
+/// Relative haircut on the communication floor: the closed-form floor
+/// is computed in f64 seconds while the engine schedules integer
+/// picoseconds, so shave one part in 10⁶ to keep the floor strictly on
+/// the admissible side of any rounding. (At the millisecond scales of
+/// one iteration this is nanoseconds — irrelevant to pruning power.)
+pub const COMM_SLACK: f64 = 1.0 - 1e-6;
+
+/// Convert a communication floor in seconds to [`Time`], rounding
+/// *down* — `Time::from_secs` rounds to nearest, which could lift a
+/// floor half a picosecond above the true value.
+fn comm_time(secs: f64) -> Time {
+    Time::from_ps((secs * PS_PER_S as f64).floor() as u64)
+}
+
+/// Reusable lower-bound evaluator: one warm [`CostTable`] (per-op
+/// times bit-identical to the simulator's) plus the fabric-wide
+/// best-case link bandwidth, shared across every candidate of a
+/// branch-and-bound run.
+pub struct Bounder {
+    table: CostTable,
+    /// Max over all topology links of bytes/sec — an upper bound on any
+    /// flow's max-min rate on this fabric.
+    bw_best: f64,
+}
+
+impl Bounder {
+    /// Build a bounder for one cluster/topology (the same [`Topology`]
+    /// the evaluation context simulates on, so the link set — and
+    /// therefore the best-case bandwidth — matches exactly).
+    pub fn new(topology: &Topology) -> Bounder {
+        let bw_best = topology
+            .links
+            .iter()
+            .map(|l| l.bw.bytes_per_sec())
+            .fold(0.0_f64, f64::max)
+            .max(1.0);
+        Bounder { table: CostTable::native(), bw_best }
+    }
+
+    /// The admissible lower bound (in exact simulated time units) for
+    /// one materialized candidate under the given microbatch cap — the
+    /// same cap the evaluation will simulate with.
+    pub fn bound(
+        &mut self,
+        model: &ModelSpec,
+        cluster: &ClusterSpec,
+        fw: &FrameworkSpec,
+        microbatch_limit: Option<u64>,
+    ) -> anyhow::Result<Time> {
+        let mlp_kind = if model.moe.is_some() { LayerKind::Moe } else { LayerKind::Mlp };
+        let (n_experts, top_k) = match model.moe {
+            Some(m) => (m.num_experts as f64, m.top_k as f64),
+            None => (0.0, 0.0),
+        };
+        let work = |kind: LayerKind, mbs: u64, tp: u32, bwd: bool| LayerWork {
+            kind,
+            hidden: model.hidden_size as f64,
+            ffn: model.ffn_hidden as f64,
+            heads: model.num_heads as f64,
+            seq: model.seq_len as f64,
+            mbs: mbs as f64,
+            n_experts,
+            top_k,
+            tp: tp as f64,
+            is_bwd: bwd,
+        };
+
+        // register every (work, gpu) pair the floor needs, then batch-
+        // evaluate once — the table dedupes against prior candidates
+        for g in &fw.groups {
+            let mbs = g.micro_batch.min(g.batch_share);
+            for s in &g.stages {
+                let tp = s.tp();
+                for &r in &s.ranks {
+                    let gpu = gpu_of(cluster, r)?;
+                    for bwd in [false, true] {
+                        self.table.register(&work(LayerKind::Attention, mbs, tp, bwd), gpu);
+                        self.table.register(&work(mlp_kind, mbs, tp, bwd), gpu);
+                    }
+                }
+            }
+        }
+        self.table.evaluate()?;
+
+        // DP gradient-sync floor per stage index: 2 ring collectives
+        // (RS + AG) of grad_bytes/tp over the dp participants — exactly
+        // the slot-wise rings the generator emits; groups that need
+        // resharding first get no floor (conservative).
+        let groups = DeviceGroups::derive(fw);
+        let mut dp_floor: Vec<f64> = Vec::new();
+        for sync in &groups.dp_sync {
+            let si = sync.stage as usize;
+            if dp_floor.len() <= si {
+                dp_floor.resize(si + 1, 0.0);
+            }
+            if group_needs_resharding(&sync.participants) {
+                continue;
+            }
+            let n = sync.participants.len() as u64;
+            let tp = sync.participants[0].tp;
+            let sample =
+                &fw.groups.iter().find(|g| g.stages.len() > si).unwrap().stages[si];
+            let bytes =
+                stage_grad_bytes(model, sample.num_layers, sample.has_embedding) / tp as u64;
+            let chunk = (bytes / n).max(1) as f64;
+            dp_floor[si] = 2.0 * (n - 1) as f64 * chunk / self.bw_best;
+        }
+
+        let mut bound = Time::ZERO;
+        for g in &fw.groups {
+            let mbs = g.micro_batch.min(g.batch_share);
+            let mut m = g.num_microbatches();
+            if let Some(limit) = microbatch_limit {
+                m = m.min(limit.max(1));
+            }
+            let act_bytes = mbs * model.seq_len * model.hidden_size * model.dtype_bytes;
+            // single-microbatch chain through every stage of the group
+            let mut chain = Time::ZERO;
+            for (si, s) in g.stages.iter().enumerate() {
+                let tp = s.tp();
+                let nl = s.num_layers as u64;
+                // per-microbatch compute per rank (fwd + bwd attention
+                // and MLP blocks), on the rank's own GPU
+                let mut fastest = Time::MAX;
+                let mut slowest = Time::ZERO;
+                for &r in &s.ranks {
+                    let gpu = gpu_of(cluster, r)?;
+                    let mut t = Time::ZERO;
+                    for bwd in [false, true] {
+                        t = t + self.table.time(&work(LayerKind::Attention, mbs, tp, bwd), gpu)?;
+                        t = t + self.table.time(&work(mlp_kind, mbs, tp, bwd), gpu)?;
+                    }
+                    // exact: the simulated stream contains nl ops of
+                    // each of these durations, summed in integer ps
+                    let t = Time::from_ps(t.as_ps() * nl);
+                    fastest = fastest.min(t);
+                    slowest = slowest.max(t);
+                }
+                if s.ranks.is_empty() {
+                    fastest = Time::ZERO;
+                }
+                // per-microbatch TP allreduce floor: 2 per layer per
+                // direction, with the algorithm the compiler would pick
+                let comm_mb = if tp > 1 {
+                    let per_ar = allreduce_floor(cluster, &s.ranks, act_bytes, self.bw_best);
+                    4.0 * nl as f64 * per_ar
+                } else {
+                    0.0
+                };
+                let dp = dp_floor.get(si).copied().unwrap_or(0.0);
+                // bottleneck: the slowest rank of this stage pays its
+                // full m microbatches plus the gradient sync
+                let rank_floor = Time::from_ps(slowest.as_ps() * m)
+                    + comm_time(COMM_SLACK * (m as f64 * comm_mb + dp));
+                bound = bound.max(rank_floor);
+                chain = chain + fastest + comm_time(COMM_SLACK * comm_mb);
+            }
+            bound = bound.max(chain);
+        }
+        Ok(bound)
+    }
+}
+
+fn gpu_of(cluster: &ClusterSpec, rank: u32) -> anyhow::Result<&GpuSpec> {
+    cluster
+        .gpu_of_rank(rank)
+        .ok_or_else(|| anyhow::anyhow!("rank {rank} outside cluster {}", cluster.name))
+}
+
+/// Floor (seconds) on one TP allreduce over `ranks`: the sequential
+/// step/chunk structure of the algorithm
+/// [`select_allreduce_algo`] would choose, at best-case bandwidth.
+fn allreduce_floor(cluster: &ClusterSpec, ranks: &[u32], bytes: u64, bw_best: f64) -> f64 {
+    let n = ranks.len() as u64;
+    if n < 2 {
+        return 0.0;
+    }
+    match select_allreduce_algo(cluster, ranks) {
+        CollectiveAlgo::AllReduceHierarchical => {
+            // regular multi-node group (guaranteed by selection): the
+            // two intra-node phases move `local−1` chunks of
+            // `bytes/local` each; the inter-node phase is dropped
+            // (conservative — it only adds time)
+            let mut per_node: std::collections::BTreeMap<u32, u64> =
+                std::collections::BTreeMap::new();
+            for r in ranks {
+                *per_node.entry(cluster.node_of_rank(*r).unwrap_or(u32::MAX)).or_insert(0) += 1;
+            }
+            let local = per_node.values().next().copied().unwrap_or(1).max(1);
+            let chunk = (bytes / local).max(1) as f64;
+            2.0 * (local - 1) as f64 * chunk / bw_best
+        }
+        // flat ring: 2(n−1) sequential steps of bytes/n
+        _ => {
+            let chunk = (bytes / n).max(1) as f64;
+            2.0 * (n - 1) as f64 * chunk / bw_best
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::framework::ParallelismSpec;
+    use crate::config::presets;
+    use crate::planner::candidates::enumerate;
+    use crate::simulator::{EvalContext, SimulationBuilder};
+    use crate::workload::aicb::WorkloadOptions;
+
+    fn tiny_model() -> crate::config::model::ModelSpec {
+        let mut m = presets::model("gpt-6.7b").unwrap();
+        m.num_layers = 4;
+        m.global_batch = 16;
+        m.micro_batch = 8;
+        m
+    }
+
+    #[test]
+    fn bound_is_positive_and_below_simulated_time_on_hetero() {
+        let m = tiny_model();
+        let c = presets::cluster_hetero(1, 1).unwrap();
+        let ctx = EvalContext::new(&m, &c).unwrap();
+        let mut b = Bounder::new(&ctx.topology());
+        let (cands, _) = enumerate(&m, &c, Some(1));
+        assert!(!cands.is_empty());
+        for cand in &cands {
+            let fw = cand.framework(&m, &c).unwrap();
+            let lb = b.bound(&m, &c, &fw, Some(1)).unwrap();
+            assert!(lb > Time::ZERO, "{}", cand.key());
+            let score = SimulationBuilder::new(m.clone(), c.clone())
+                .parallelism(cand.par)
+                .framework(fw)
+                .ring_policy(cand.ring)
+                .workload_options(WorkloadOptions {
+                    microbatch_limit: Some(1),
+                    ..Default::default()
+                })
+                .score_with_context(&ctx)
+                .unwrap();
+            assert!(
+                lb <= score.iteration_time,
+                "{}: bound {} > simulated {}",
+                cand.key(),
+                lb.human(),
+                score.iteration_time.human()
+            );
+        }
+    }
+
+    #[test]
+    fn bound_scales_with_microbatches() {
+        let m = tiny_model();
+        let c = presets::cluster("hopper", 1).unwrap();
+        let fw = FrameworkSpec::uniform(&m, &c, ParallelismSpec { tp: 4, pp: 1, dp: 2 }).unwrap();
+        let ctx = EvalContext::new(&m, &c).unwrap();
+        let mut b = Bounder::new(&ctx.topology());
+        let one = b.bound(&m, &c, &fw, Some(1)).unwrap();
+        let two = b.bound(&m, &c, &fw, Some(2)).unwrap();
+        assert!(two > one, "more microbatches must raise the floor");
+    }
+}

@@ -228,6 +228,23 @@ pub enum PruneReason {
     Unsplittable(#[from] SplitError),
 }
 
+impl PruneReason {
+    /// Stable kebab-case tag of the variant (parameters dropped), for
+    /// the per-reason prune counts in
+    /// [`super::search::PlanSearchReport`].
+    pub fn label(&self) -> &'static str {
+        match self {
+            PruneReason::CrossNodeTp { .. } => "cross-node-tp",
+            PruneReason::MisalignedTp { .. } => "misaligned-tp",
+            PruneReason::IndivisibleLayers { .. } => "indivisible-layers",
+            PruneReason::BatchTooSmall { .. } => "batch-too-small",
+            PruneReason::MemoryExceeded { .. } => "memory-exceeded",
+            PruneReason::ActivationMemoryExceeded { .. } => "activation-memory",
+            PruneReason::Unsplittable(_) => "unsplittable",
+        }
+    }
+}
+
 /// A factorization/layout (or one of its schedules) that was excluded,
 /// and why.
 #[derive(Debug, Clone)]

@@ -31,11 +31,22 @@
 //! pipelines whose TP degrees need not match (the paper's Fig-3
 //! TP=3/TP=1 vs TP=4 shape), validated against resharding feasibility
 //! and memory, and refined like any other start.
+//!
+//! Large spaces don't need the exhaustive grid: [`bound`] computes an
+//! admissible analytical lower bound per candidate and [`bnb`] turns it
+//! into a deterministic branch-and-bound (`hetsim plan --search bnb`)
+//! that prunes dominated candidates outright and aborts dominated
+//! simulations at the incumbent cutoff, while provably reporting the
+//! same best plan as the grid (DESIGN.md §29).
 
+pub mod bnb;
+pub mod bound;
 pub mod candidates;
 pub mod refine;
 pub mod search;
 
+pub use bnb::search_bnb;
+pub use bound::Bounder;
 pub use candidates::{
     enumerate, node_splits, schedules_for, Partitioning, PlanCandidate, PruneReason,
     PrunedCandidate, TpLayout,
@@ -44,4 +55,6 @@ pub use refine::{
     apply_move, candidate_moves, refine, refine_with_context, AppliedMove, Move, RefineOptions,
     RefinedPlan,
 };
-pub use search::{search, EvaluatedPlan, PlanOptions, PlanSearchReport, REFINE_STARTS};
+pub use search::{
+    search, EvaluatedPlan, PlanOptions, PlanSearchReport, SearchStats, REFINE_STARTS,
+};

@@ -18,7 +18,7 @@
 
 use crate::config::cluster::ClusterSpec;
 use crate::config::model::ModelSpec;
-use crate::simulator::{infer_parallelism, EvalContext, SimulationBuilder};
+use crate::simulator::{infer_parallelism, EvalContext, ScoreOutcome, SimulationBuilder};
 use crate::system::collective::RingPolicy;
 use crate::system::fold::FoldMode;
 use crate::util::par::parallel_map;
@@ -95,6 +95,27 @@ pub struct EvaluatedPlan {
     pub goodput_ci: Option<(f64, f64)>,
 }
 
+/// Work accounting for a bound-guided search run ([`super::bnb`]):
+/// how many candidates the admissible lower bound pruned outright, how
+/// many simulations the incumbent cutoff aborted early, and how many
+/// paid for a full simulated iteration. `None` on the exhaustive grid
+/// path, whose rendered report must stay byte-identical to earlier
+/// releases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Candidates that survived enumeration (the grid would simulate
+    /// every one of them).
+    pub candidates: usize,
+    /// Candidates never simulated because their analytical lower bound
+    /// already exceeded the incumbent.
+    pub bound_pruned: usize,
+    /// Simulations aborted mid-run when their clock passed the
+    /// incumbent (partial work, excluded from the ranking).
+    pub cutoff_aborted: usize,
+    /// Simulations that ran to completion (ranked or failed).
+    pub full_sims: usize,
+}
+
 /// The full search result.
 #[derive(Debug)]
 pub struct PlanSearchReport {
@@ -121,12 +142,25 @@ pub struct PlanSearchReport {
     /// (the paper's Fig-3 illustration is such a scenario). Surfaced
     /// in the rendered report so the relaxation is never silent.
     pub memory_relaxed: bool,
+    /// Bound/cutoff accounting (`Some` only for `--search bnb`).
+    pub stats: Option<SearchStats>,
 }
 
 impl PlanSearchReport {
     /// The top-ranked plan.
     pub fn best(&self) -> &EvaluatedPlan {
         &self.ranked[0]
+    }
+
+    /// Enumeration-prune counts grouped by
+    /// [`super::candidates::PruneReason::label`], sorted by label
+    /// (deterministic render order).
+    pub fn prune_counts(&self) -> Vec<(&'static str, usize)> {
+        let mut counts = std::collections::BTreeMap::new();
+        for p in &self.pruned {
+            *counts.entry(p.reason.label()).or_insert(0usize) += 1;
+        }
+        counts.into_iter().collect()
     }
 
     /// Render the ranked table (top `limit` rows, 0 = all) plus a
@@ -190,6 +224,21 @@ impl PlanSearchReport {
             self.pruned.len(),
             self.failed.len(),
         ));
+        // the accounting block exists only on the bound-guided path, so
+        // grid renders stay byte-identical to the pre-bnb goldens
+        if let Some(st) = &self.stats {
+            s.push_str(&format!(
+                "bound-guided: {} full sims of {} candidates | \
+                 {} bound-pruned, {} cutoff-aborted\n",
+                st.full_sims, st.candidates, st.bound_pruned, st.cutoff_aborted,
+            ));
+            let counts = self.prune_counts();
+            if !counts.is_empty() {
+                let parts: Vec<String> =
+                    counts.iter().map(|(l, n)| format!("{l}={n}")).collect();
+                s.push_str(&format!("pre-prunes: {}\n", parts.join(", ")));
+            }
+        }
         for p in &self.pruned {
             let sched = p.schedule.map(|k| format!("-{}", k.name())).unwrap_or_default();
             s.push_str(&format!("  pruned {}{sched}: {}\n", p.key_head(), p.reason));
@@ -215,15 +264,34 @@ impl PlanSearchReport {
 /// (one topology + warm cost cache per search run, trace recording
 /// off), so per-candidate cost is workload emission + compile + the
 /// event loop — nothing candidate-independent is rebuilt.
-fn evaluate(
+pub(crate) fn evaluate(
     model: &ModelSpec,
     cluster: &ClusterSpec,
     cand: &PlanCandidate,
     opts: &PlanOptions,
     ctx: &EvalContext,
 ) -> anyhow::Result<EvaluatedPlan> {
+    match evaluate_with_cutoff(model, cluster, cand, opts, ctx, None)? {
+        Some(ev) => Ok(ev),
+        None => anyhow::bail!("cutoff abort with no cutoff set"),
+    }
+}
+
+/// [`evaluate`] under an incumbent cutoff ([`super::bnb`]): `Ok(None)`
+/// means the simulated clock passed `cutoff` and the run was abandoned
+/// — the candidate is provably worse than the incumbent and must not
+/// be ranked. `cutoff = None` (and any run that *completes* under a
+/// finite cutoff) is bit-identical to plain evaluation.
+pub(crate) fn evaluate_with_cutoff(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    cand: &PlanCandidate,
+    opts: &PlanOptions,
+    ctx: &EvalContext,
+    cutoff: Option<Time>,
+) -> anyhow::Result<Option<EvaluatedPlan>> {
     let fw = cand.framework(model, cluster)?;
-    let score = SimulationBuilder::new(model.clone(), cluster.clone())
+    let outcome = SimulationBuilder::new(model.clone(), cluster.clone())
         .parallelism(cand.par)
         .framework(fw)
         .ring_policy(cand.ring)
@@ -232,8 +300,12 @@ fn evaluate(
             ..Default::default()
         })
         .fold(opts.fold)
-        .score_with_context(ctx)?;
-    Ok(EvaluatedPlan {
+        .score_with_cutoff(ctx, cutoff)?;
+    let score = match outcome {
+        ScoreOutcome::Complete(s) => s,
+        ScoreOutcome::Cutoff => return Ok(None),
+    };
+    Ok(Some(EvaluatedPlan {
         candidate: cand.clone(),
         iteration_time: score.iteration_time,
         compute_busy: score.compute_busy,
@@ -242,18 +314,19 @@ fn evaluate(
         events_processed: score.events_processed,
         goodput: None,
         goodput_ci: None,
-    })
+    }))
 }
 
-/// Enumerate, evaluate concurrently, rank deterministically.
-pub fn search(
+/// Enumerate with the Fig-3-style memory fallback: when *everything*
+/// fell to the memory model, rank anyway with memory pruning disabled
+/// (flagged in the report). Shared by the grid and [`super::bnb`]
+/// drivers so both search the exact same candidate space.
+pub(crate) fn enumerate_relaxed(
     model: &ModelSpec,
     cluster: &ClusterSpec,
     opts: &PlanOptions,
-) -> anyhow::Result<PlanSearchReport> {
+) -> anyhow::Result<(Vec<PlanCandidate>, Vec<PrunedCandidate>, bool)> {
     let (mut candidates, mut pruned) = enumerate(model, cluster, opts.microbatch_limit);
-    // Fig-3-style fallback: when *everything* fell to the memory model,
-    // rank anyway with memory pruning disabled (flagged in the report).
     let mut memory_relaxed = false;
     if candidates.is_empty() {
         let (relaxed, relaxed_pruned) =
@@ -271,39 +344,32 @@ pub fn search(
         cluster.name,
         pruned.len()
     );
+    Ok((candidates, pruned, memory_relaxed))
+}
 
-    // Everything candidate-independent — topology, evaluated cost
-    // entries, compiled cores and scores of revisited specs — is built
-    // once here and shared by every worker for the rest of the run
-    // (ranking, baseline and refinement).
-    let ctx = EvalContext::new(model, cluster)?;
-    let n = candidates.len();
-    let results =
-        parallel_map(n, opts.threads, |i| evaluate(model, cluster, &candidates[i], opts, &ctx));
-
-    let mut ranked = Vec::with_capacity(n);
-    let mut failed = Vec::new();
-    for (cand, res) in candidates.iter().zip(results) {
-        match res {
-            Ok(ev) => ranked.push(ev),
-            Err(e) => failed.push((cand.clone(), format!("{e:#}"))),
-        }
-    }
-    if ranked.is_empty() {
-        let detail = failed
-            .first()
-            .map(|(c, e)| format!("{}: {e}", c.key()))
-            .unwrap_or_default();
-        anyhow::bail!("all {n} candidates failed to evaluate — {detail}");
-    }
+/// Sort `ranked` by (iteration time, candidate key) — the deterministic
+/// ranking order every driver reports in.
+pub(crate) fn rank(ranked: &mut [EvaluatedPlan]) {
     ranked.sort_by(|a, b| {
         a.iteration_time
             .cmp(&b.iteration_time)
             .then_with(|| a.candidate.key().cmp(&b.candidate.key()))
     });
+}
 
+/// Score the uniform default plan and optionally run the
+/// simulator-in-the-loop refinement pass over the top-ranked
+/// candidates — the shared tail of both search drivers.
+pub(crate) fn baseline_and_refine(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    opts: &PlanOptions,
+    ctx: &EvalContext,
+    ranked: &[EvaluatedPlan],
+) -> anyhow::Result<(EvaluatedPlan, Option<RefinedPlan>)> {
     // The uniform default plan is normally in the candidate set — reuse
-    // its evaluation; only run it separately if it was pruned away.
+    // its evaluation; only run it separately if it was pruned away (or,
+    // under bnb, bound-pruned / cutoff-aborted).
     let default_cand = PlanCandidate {
         par: infer_parallelism(model, cluster)?,
         layout: TpLayout::Uniform,
@@ -313,7 +379,7 @@ pub fn search(
     };
     let baseline = match ranked.iter().find(|ev| ev.candidate == default_cand) {
         Some(ev) => ev.clone(),
-        None => evaluate(model, cluster, &default_cand, opts, &ctx)?,
+        None => evaluate(model, cluster, &default_cand, opts, ctx)?,
     };
 
     // Optional simulator-in-the-loop polish: refine the top-ranked
@@ -350,7 +416,7 @@ pub fn search(
                 ev.candidate.ring,
                 Some(ev.iteration_time),
                 &ropts,
-                &ctx,
+                ctx,
             )?;
             let wins = match &best {
                 None => true,
@@ -364,7 +430,53 @@ pub fn search(
     } else {
         None
     };
-    Ok(PlanSearchReport { ranked, pruned, failed, baseline, refined, memory_relaxed })
+    Ok((baseline, refined))
+}
+
+/// Enumerate, evaluate concurrently, rank deterministically.
+pub fn search(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    opts: &PlanOptions,
+) -> anyhow::Result<PlanSearchReport> {
+    let (candidates, pruned, memory_relaxed) = enumerate_relaxed(model, cluster, opts)?;
+
+    // Everything candidate-independent — topology, evaluated cost
+    // entries, compiled cores and scores of revisited specs — is built
+    // once here and shared by every worker for the rest of the run
+    // (ranking, baseline and refinement).
+    let ctx = EvalContext::new(model, cluster)?;
+    let n = candidates.len();
+    let results =
+        parallel_map(n, opts.threads, |i| evaluate(model, cluster, &candidates[i], opts, &ctx));
+
+    let mut ranked = Vec::with_capacity(n);
+    let mut failed = Vec::new();
+    for (cand, res) in candidates.iter().zip(results) {
+        match res {
+            Ok(ev) => ranked.push(ev),
+            Err(e) => failed.push((cand.clone(), format!("{e:#}"))),
+        }
+    }
+    if ranked.is_empty() {
+        let detail = failed
+            .first()
+            .map(|(c, e)| format!("{}: {e}", c.key()))
+            .unwrap_or_default();
+        anyhow::bail!("all {n} candidates failed to evaluate — {detail}");
+    }
+    rank(&mut ranked);
+
+    let (baseline, refined) = baseline_and_refine(model, cluster, opts, &ctx, &ranked)?;
+    Ok(PlanSearchReport {
+        ranked,
+        pruned,
+        failed,
+        baseline,
+        refined,
+        memory_relaxed,
+        stats: None,
+    })
 }
 
 #[cfg(test)]

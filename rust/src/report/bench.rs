@@ -51,7 +51,7 @@ use std::time::Instant;
 use crate::config::cluster::FabricSpec;
 use crate::config::framework::ParallelismSpec;
 use crate::config::presets;
-use crate::planner::{search, PlanOptions};
+use crate::planner::{search, search_bnb, PlanOptions};
 use crate::report::goodput::{annotate, SweepOptions};
 use crate::simulator::SimulationBuilder;
 use crate::system::fold::FoldMode;
@@ -267,7 +267,15 @@ pub fn run(quick: bool, threads: usize) -> anyhow::Result<Vec<BenchCase>> {
     //    admission — gated on completed requests/sec
     out.push(serve_throughput_case(quick, threads)?);
 
-    // 9. symmetry-folding head-to-head (DESIGN.md §25): the same
+    // 9. bound-guided search head-to-head (DESIGN.md §29): exhaustive
+    //    grid vs `--search bnb` on fig3 and hetero:1,1. The case hard-
+    //    asserts best-plan identity and strictly-fewer full sims; the
+    //    gated metric is the grid/bnb full-simulation *ratio* — a
+    //    deterministic, machine-independent count, so the committed
+    //    floor encodes the pruning power itself.
+    out.push(bnb_speedup_case(threads)?);
+
+    // 10. symmetry-folding head-to-head (DESIGN.md §25): the same
     //    DP-heavy candidate evaluated repeatedly with fold=off and
     //    fold=auto. The gated metric is the throughput *ratio*, so the
     //    baseline floor encodes the ≥10x acceptance bar directly.
@@ -437,6 +445,71 @@ fn scale_scenario(
     m.micro_batch = 1;
     let c = presets::cluster(arch, ranks / 8)?;
     Ok((m, c))
+}
+
+/// The exhaustive-grid vs `--search bnb` head-to-head behind the
+/// `bnb_speedup` gate (DESIGN.md §29). Runs both searches on the fig3
+/// and hetero:1,1 acceptance scenarios, hard-asserts that bnb returns
+/// the same best plan as the grid while running strictly fewer full
+/// simulations, and stores the summed grid/bnb full-simulation ratio
+/// in `candidates_per_sec`. That ratio is a deterministic quotient of
+/// simulation counts — machine-independent — so the committed baseline
+/// floor gates pruning power, not wall-clock noise.
+fn bnb_speedup_case(threads: usize) -> anyhow::Result<BenchCase> {
+    let scenarios = vec![
+        ("fig3", fig3_model()?, fig3_cluster()?),
+        ("hetero", presets::model("gpt-6.7b")?, presets::cluster_hetero(1, 1)?),
+    ];
+    let opts = PlanOptions {
+        microbatch_limit: Some(1),
+        threads,
+        refine_steps: 0,
+        fold: FoldMode::Off,
+    };
+    let t0 = Instant::now();
+    let (mut grid_sims, mut bnb_sims, mut events) = (0u64, 0u64, 0u64);
+    let mut parts = Vec::new();
+    for (name, m, c) in &scenarios {
+        let grid = search(m, c, &opts)?;
+        let bnb = search_bnb(m, c, &opts)?;
+        anyhow::ensure!(
+            grid.best().candidate == bnb.best().candidate
+                && grid.best().iteration_time == bnb.best().iteration_time,
+            "{name}: bnb best {} differs from grid best {}",
+            bnb.best().candidate.key(),
+            grid.best().candidate.key(),
+        );
+        let Some(st) = bnb.stats else {
+            anyhow::bail!("{name}: bnb report is missing search stats");
+        };
+        let g = (grid.ranked.len() + grid.failed.len()) as u64;
+        anyhow::ensure!(
+            (st.full_sims as u64) < g,
+            "{name}: bnb ran {} full sims vs grid's {g} — pruned nothing",
+            st.full_sims,
+        );
+        grid_sims += g;
+        bnb_sims += st.full_sims as u64;
+        events += grid.ranked.iter().map(|ev| ev.events_processed).sum::<u64>();
+        events += bnb.ranked.iter().map(|ev| ev.events_processed).sum::<u64>();
+        parts.push(format!(
+            "{name} {}/{g} sims ({} bound-pruned, {} cutoff-aborted)",
+            st.full_sims, st.bound_pruned, st.cutoff_aborted,
+        ));
+    }
+    let wall = t0.elapsed().as_secs_f64().max(f64::MIN_POSITIVE);
+    let ratio = grid_sims as f64 / bnb_sims.max(1) as f64;
+    Ok(BenchCase {
+        name: "bnb_speedup".into(),
+        wall_s: wall,
+        candidates: grid_sims + bnb_sims,
+        candidates_per_sec: ratio,
+        events,
+        events_per_sec: events as f64 / wall,
+        peak_rss_bytes: 0,
+        bytes_per_rank: 0.0,
+        detail: format!("{} = {ratio:.2}x fewer sims", parts.join("; ")),
+    })
 }
 
 /// The fold=auto vs fold=off head-to-head behind the `fold_speedup`

@@ -454,6 +454,15 @@ pub struct SweepOptions {
     /// Monte-Carlo trajectories per plan (0 = one deterministic walk;
     /// ≥ 1 ranks by the lower 95% confidence bound on mean goodput).
     pub mc: u32,
+    /// Incumbent-style early stop for Monte-Carlo ranking (DESIGN.md
+    /// §29, the `--search bnb` goodput path): stop drawing a plan's
+    /// trajectories once even its *best-achievable* mean goodput —
+    /// every remaining trajectory scoring the fault-free ceiling —
+    /// falls below the best score already ranked. The truncated plan's
+    /// partial score is provably below the incumbent, so the winner is
+    /// unaffected. Off by default: the exhaustive path stays
+    /// byte-identical.
+    pub mc_early_stop: bool,
 }
 
 impl Default for SweepOptions {
@@ -468,6 +477,7 @@ impl Default for SweepOptions {
             repair: RepairSpec::default(),
             domains: None,
             mc: 0,
+            mc_early_stop: false,
         }
     }
 }
@@ -631,28 +641,73 @@ fn comm_fraction(comm_busy: Time, world: u32, iteration: Time) -> f64 {
     (per_rank / iteration.as_secs().max(f64::MIN_POSITIVE)).clamp(0.0, 1.0)
 }
 
+/// Trajectories per deterministic early-stop batch: the stop test runs
+/// only at batch boundaries, so results are byte-identical for any
+/// worker-thread count (the batch composition never depends on
+/// scheduling).
+const MC_BATCH: u32 = 4;
+
 /// Score one plan under `opts`: a single deterministic walk when
 /// `mc == 0`, otherwise `mc` Monte-Carlo trajectories condensed into
 /// [`McGoodput`]. Returns the trajectory-0 report plus the summary.
+///
+/// `incumbent` is the best ranking score seen so far by the caller
+/// (only consulted when [`SweepOptions::mc_early_stop`] is on): after
+/// each [`MC_BATCH`]-trajectory batch, if the plan's best-achievable
+/// final mean — completed sum plus the fault-free ceiling for every
+/// remaining trajectory — is already below the incumbent, the
+/// remaining trajectories are skipped. The partial mean is ≤ that
+/// best-achievable value and the partial `ci95_lo` is ≤ the partial
+/// mean, so the truncated score stays below the incumbent and the
+/// ranking winner is unchanged; [`McGoodput::trajectories`] records
+/// the truncation.
 fn score_plan(
     input: &GoodputInput<'_>,
     cluster: &ClusterSpec,
     opts: &SweepOptions,
     domains: Option<&FailureDomains>,
     replan: &(impl Fn(&ClusterSpec) -> Option<Time> + Sync),
+    incumbent: Option<f64>,
 ) -> (GoodputReport, Option<McGoodput>) {
     if opts.mc == 0 {
         let events = draw_trajectory(cluster, opts, domains, 0);
         let mut wrap = |rest: &ClusterSpec| replan(rest);
         return (walk(input, &events, &mut wrap), None);
     }
-    let reports = monte_carlo(
-        input,
-        |i| draw_trajectory(cluster, opts, domains, i),
-        opts.mc,
-        opts.plan.threads,
-        replan,
-    );
+    if !opts.mc_early_stop || incumbent.is_none() {
+        // the exhaustive path, byte-identical to pre-early-stop runs
+        let reports = monte_carlo(
+            input,
+            |i| draw_trajectory(cluster, opts, domains, i),
+            opts.mc,
+            opts.plan.threads,
+            replan,
+        );
+        let stats = mc_stats(&reports);
+        return (reports[0], Some(stats));
+    }
+    let inc = incumbent.unwrap();
+    // per-trajectory goodput can never beat the fault-free walk
+    let g_max = walk(input, &[], &mut |_| None).goodput_tokens_per_s;
+    let mut reports: Vec<GoodputReport> = Vec::with_capacity(opts.mc as usize);
+    let mut done = 0u32;
+    while done < opts.mc {
+        let count = MC_BATCH.min(opts.mc - done);
+        let batch = parallel_map(count as usize, opts.plan.threads, |j| {
+            let events = draw_trajectory(cluster, opts, domains, done + j as u32);
+            let mut wrap = |rest: &ClusterSpec| replan(rest);
+            walk(input, &events, &mut wrap)
+        });
+        reports.extend(batch);
+        done += count;
+        if done < opts.mc {
+            let sum: f64 = reports.iter().map(|r| r.goodput_tokens_per_s).sum();
+            let best_achievable = (sum + (opts.mc - done) as f64 * g_max) / opts.mc as f64;
+            if best_achievable < inc {
+                break; // provably dominated — stop paying for walks
+            }
+        }
+    }
     let stats = mc_stats(&reports);
     (reports[0], Some(stats))
 }
@@ -683,6 +738,7 @@ pub fn sweep(
     let cache = Mutex::new(HashMap::new());
     let replan = replan_shared(model, &opts.plan, &cache);
     let mut entries = Vec::with_capacity(top);
+    let mut incumbent: Option<f64> = None;
     for ev in rep.ranked.iter().take(top) {
         let world = ev.candidate.par.world_size();
         let input = GoodputInput {
@@ -696,7 +752,12 @@ pub fn sweep(
             comm_fraction: comm_fraction(ev.comm_busy, world, ev.iteration_time),
             horizon_s: opts.horizon_s,
         };
-        let (goodput, mc) = score_plan(&input, cluster, opts, domains.as_ref(), &replan);
+        let (goodput, mc) =
+            score_plan(&input, cluster, opts, domains.as_ref(), &replan, incumbent);
+        let score = score_of(&goodput, &mc);
+        if incumbent.map_or(true, |i| score > i) {
+            incumbent = Some(score);
+        }
         entries.push(SweepEntry {
             plan: ev.candidate.key(),
             iteration: ev.iteration_time,
@@ -734,6 +795,7 @@ pub fn annotate(
     let domains = opts.domains.as_ref().map(|d| FailureDomains::derive(cluster, d.rack_size));
     let cache = Mutex::new(HashMap::new());
     let replan = replan_shared(model, &opts.plan, &cache);
+    let mut incumbent: Option<f64> = None;
     for ev in rep.ranked.iter_mut() {
         let world = ev.candidate.par.world_size();
         let input = GoodputInput {
@@ -747,8 +809,13 @@ pub fn annotate(
             comm_fraction: comm_fraction(ev.comm_busy, world, ev.iteration_time),
             horizon_s: opts.horizon_s,
         };
-        let (goodput, mc) = score_plan(&input, cluster, opts, domains.as_ref(), &replan);
-        ev.goodput = Some(score_of(&goodput, &mc));
+        let (goodput, mc) =
+            score_plan(&input, cluster, opts, domains.as_ref(), &replan, incumbent);
+        let score = score_of(&goodput, &mc);
+        if incumbent.map_or(true, |i| score > i) {
+            incumbent = Some(score);
+        }
+        ev.goodput = Some(score);
         ev.goodput_ci = mc.map(|m| (m.ci95_lo, m.ci95_hi));
     }
     rep.ranked.sort_by(|a, b| {

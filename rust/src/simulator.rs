@@ -330,6 +330,36 @@ impl SimulationBuilder {
     /// the planner's hot path. A revisited refinement state costs one
     /// hash lookup.
     pub fn score_with_context(self, ctx: &EvalContext) -> anyhow::Result<EvalScore> {
+        match self.score_with_cutoff(ctx, None)? {
+            ScoreOutcome::Complete(s) => Ok(s),
+            // unreachable: with no cutoff the scheduler can never
+            // report a cutoff hit
+            ScoreOutcome::Cutoff => anyhow::bail!("cutoff hit with no cutoff set"),
+        }
+    }
+
+    /// [`SimulationBuilder::score_with_context`] with an incumbent
+    /// cutoff (the branch-and-bound hot path, DESIGN.md §29): the event
+    /// loop abandons the run the moment its clock would pass `cutoff`
+    /// *strictly*, returning [`ScoreOutcome::Cutoff`] — the candidate
+    /// cannot beat the incumbent, so it stops paying for events.
+    ///
+    /// Correctness properties the planner relies on:
+    /// - `cutoff = None` is bit-identical to plain scoring.
+    /// - A run that completes under a finite cutoff is bit-identical to
+    ///   the cutoff-free run (the peek never fired), so its score is
+    ///   cutoff-independent and safe to memoize under the same key —
+    ///   and a memoized score from an earlier cutoff-free run is safe
+    ///   to return here.
+    /// - Equality at the cutoff completes (strict `>` in the
+    ///   scheduler), so a candidate tied with the incumbent stays
+    ///   rankable.
+    /// - An aborted run is **never** cached: its timing is partial.
+    pub fn score_with_cutoff(
+        self,
+        ctx: &EvalContext,
+        cutoff: Option<Time>,
+    ) -> anyhow::Result<ScoreOutcome> {
         // scoring is the cheap path by construction: no trace recording
         debug_assert!(
             !self.record_trace,
@@ -358,12 +388,16 @@ impl SimulationBuilder {
         );
         if let Some(s) = ctx.scores.lock().unwrap().get(&key).copied() {
             ctx.score_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(s);
+            return Ok(ScoreOutcome::Complete(s));
         }
         let prepared = ctx.prepare(&r, &key)?;
         let mut sched = Scheduler::prepared(&prepared.compiled, &r.cluster, ctx.topology.clone());
         arm_faults(&mut sched, r.faults.as_ref(), &r.cluster);
+        sched.cutoff = cutoff;
         let rep = sched.run()?;
+        if rep.cutoff_hit {
+            return Ok(ScoreOutcome::Cutoff);
+        }
         let score = EvalScore {
             iteration_time: rep.iteration_time,
             compute_busy: rep.compute_busy,
@@ -372,8 +406,22 @@ impl SimulationBuilder {
             events_processed: rep.events_processed,
         };
         ctx.scores.lock().unwrap().entry(key).or_insert(score);
-        Ok(score)
+        Ok(ScoreOutcome::Complete(score))
     }
+}
+
+/// Outcome of a cutoff-aware scoring run
+/// ([`SimulationBuilder::score_with_cutoff`]).
+#[derive(Debug, Clone, Copy)]
+pub enum ScoreOutcome {
+    /// The simulation ran to completion at or under the cutoff; the
+    /// score is exact — bit-identical to what cutoff-free scoring
+    /// reports.
+    Complete(EvalScore),
+    /// The simulated clock passed the cutoff strictly and the run was
+    /// abandoned: the candidate's iteration time provably exceeds the
+    /// incumbent's, so nothing about it is cached or rankable.
+    Cutoff,
 }
 
 /// Cache key of one candidate evaluation: the resolved mapping's

@@ -109,6 +109,12 @@ pub struct SchedulerReport {
     /// completions — including runs that finished *before* a scheduled
     /// fault would have struck).
     pub fault: Option<FaultReport>,
+    /// True when the run was abandoned because the clock passed
+    /// [`Scheduler::cutoff`] — the branch-and-bound incumbent-cutoff
+    /// path (DESIGN.md §29). A cutoff-hit report's timing fields are
+    /// partial and must not be ranked; a run that *completes* under a
+    /// finite cutoff is bit-identical to the cutoff-free run.
+    pub cutoff_hit: bool,
 }
 
 enum Source<'a> {
@@ -134,6 +140,15 @@ pub struct Scheduler<'a> {
     /// ([`crate::system::failure::FaultSpec::resolve_iteration`]);
     /// `None` runs the pristine fault-free path.
     pub faults: Option<IterationFaults>,
+    /// Incumbent cutoff: abandon the run the moment the *next* event
+    /// would land strictly past this time (the candidate can no longer
+    /// beat the incumbent, so stop paying for its events). Checked with
+    /// the same peek-before-dispatch pattern as fault aborts, so
+    /// `None` — and any run that finishes at or under the cutoff — is
+    /// bit-identical to the plain path. Strict `>` means a run whose
+    /// final event lands exactly at the cutoff still completes, which
+    /// is what keeps branch-and-bound exact under ties (DESIGN.md §29).
+    pub cutoff: Option<Time>,
 }
 
 impl<'a> Scheduler<'a> {
@@ -152,6 +167,7 @@ impl<'a> Scheduler<'a> {
             ring_policy: RingPolicy::HeteroAware,
             record_trace: false,
             faults: None,
+            cutoff: None,
         })
     }
 
@@ -179,6 +195,7 @@ impl<'a> Scheduler<'a> {
             ring_policy,
             record_trace: false,
             faults: None,
+            cutoff: None,
         }
     }
 
@@ -234,7 +251,7 @@ impl<'a> Scheduler<'a> {
                 }
             }
         }
-        Exec::new(cw, flows, self.record_trace, faults).run()
+        Exec::new(cw, flows, self.record_trace, faults, self.cutoff).run()
     }
 }
 
@@ -262,6 +279,9 @@ struct Exec<'w> {
     /// Resolved fault injection for this window (`None` = pristine
     /// fault-free path: no per-event checks beyond one `Option` read).
     faults: Option<IterationFaults>,
+    /// Incumbent cutoff (see [`Scheduler::cutoff`]); `None` costs one
+    /// `Option` read per dispatched event, like `faults`.
+    cutoff: Option<Time>,
 }
 
 /// Post time for a flow from `r`: the sender's own collective arrival,
@@ -282,6 +302,7 @@ impl<'w> Exec<'w> {
         mut flows: FlowSim,
         record_trace: bool,
         faults: Option<IterationFaults>,
+        cutoff: Option<Time>,
     ) -> Self {
         let world = cw.world as usize;
         // pre-size the flow slab and record store from compiled counts
@@ -304,6 +325,7 @@ impl<'w> Exec<'w> {
             comm_busy: Time::ZERO,
             posted_scratch: Vec::with_capacity(cw.max_step_flows()),
             faults,
+            cutoff,
         }
     }
 
@@ -326,6 +348,12 @@ impl<'w> Exec<'w> {
         // would have processed.
         let abort = self.faults.as_ref().and_then(|f| f.abort);
         let mut fault: Option<FaultReport> = None;
+        // The incumbent cutoff reuses the same peek pattern, but with a
+        // *strict* comparison: an event landing exactly at the cutoff
+        // still runs, so a candidate tied with the incumbent completes
+        // and stays rankable (the bnb grid-identity argument, §29).
+        let cutoff = self.cutoff;
+        let mut cutoff_hit = false;
         loop {
             if let Some((at, node, kind)) = abort {
                 match eng.peek_time() {
@@ -334,6 +362,16 @@ impl<'w> Exec<'w> {
                         // the whole partial iteration is lost work:
                         // gradient state dies with the fail-stop
                         fault = Some(FaultReport { at, node, kind, lost_work: at });
+                        break;
+                    }
+                    Some(_) => {}
+                }
+            }
+            if let Some(limit) = cutoff {
+                match eng.peek_time() {
+                    None => break, // completed at or under the cutoff
+                    Some(t) if t > limit => {
+                        cutoff_hit = true;
                         break;
                     }
                     Some(_) => {}
@@ -356,8 +394,9 @@ impl<'w> Exec<'w> {
         }
 
         // deadlock / starvation check — not meaningful after an abort
-        // (blocked ranks are exactly what a fail-stop leaves behind)
-        if fault.is_none() {
+        // (blocked ranks are exactly what a fail-stop or cutoff leaves
+        // behind)
+        if fault.is_none() && !cutoff_hit {
             let stuck: Vec<(u32, RankState)> = (0..cw.world)
                 .filter(|&r| {
                     cw.has_program[r as usize] && self.state[r as usize] != RankState::Finished
@@ -403,6 +442,7 @@ impl<'w> Exec<'w> {
             comm_busy: self.comm_busy,
             trace: self.trace,
             fault,
+            cutoff_hit,
         })
     }
 

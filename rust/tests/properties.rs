@@ -27,7 +27,17 @@
 //!   rate scales (same thinning construction as the MTBF schedules),
 //! * serving simulation conserves requests (every admitted request
 //!   completes exactly once), never exceeds any group's KV budget, and
-//!   renders byte-identically across worker-thread counts.
+//!   renders byte-identically across worker-thread counts,
+//! * the branch-and-bound lower bound is admissible: it never exceeds
+//!   the fully simulated iteration time on random clusters / fabrics /
+//!   schedules (with a non-vacuity counter of strictly positive
+//!   bounds),
+//! * incumbent-cutoff simulation is bit-identical to plain scoring
+//!   when the cutoff is absent, unreachable, or exactly equal to the
+//!   final iteration time (the strict-inequality abort rule), and a
+//!   cutoff strictly below the final time always aborts,
+//! * `--search bnb` returns the exact grid-best plan and renders
+//!   byte-identically across 1/4/8 worker threads.
 
 use hetsim::config::framework::{FrameworkSpec, ParallelismSpec};
 use hetsim::config::presets;
@@ -1259,6 +1269,246 @@ fn prop_serving_conserves_requests_and_respects_kv_budget() {
         nonempty.load(Ordering::Relaxed) > 0,
         "no random case ever served a request — the property is vacuous"
     );
+}
+
+#[test]
+fn prop_bnb_bound_is_admissible() {
+    use hetsim::config::cluster::FabricSpec;
+    use hetsim::planner::Bounder;
+    use hetsim::simulator::SimulationBuilder;
+    use hetsim::system::fold::FoldMode;
+    use hetsim::workload::aicb::WorkloadOptions;
+    use hetsim::workload::schedule::ScheduleKind;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    // the branch-and-bound prune rule is only sound if the analytical
+    // lower bound never exceeds the simulated iteration time — on any
+    // cluster, fabric, schedule, or microbatch budget (DESIGN.md §29)
+    let nontrivial = AtomicUsize::new(0);
+    check(&cfg(40), |g| {
+        let nodes = g.rng.range_u64(1, 4) as u32;
+        let mut cluster = match g.rng.range_u64(0, 3) {
+            0 => presets::cluster("ampere", nodes).unwrap(),
+            1 => presets::cluster("hopper", nodes).unwrap(),
+            _ => presets::cluster_hetero(nodes, nodes).unwrap(),
+        };
+        cluster.fabric = match g.rng.range_u64(0, 3) {
+            0 => FabricSpec::RailOnly,
+            1 => FabricSpec::SingleSwitch,
+            _ => FabricSpec::LeafSpine {
+                spines: g.rng.range_u64(1, 4) as u32,
+                oversubscription: g.rng.range_f64(1.0, 4.0),
+            },
+        };
+        let world = cluster.total_gpus();
+        let tp = *g.rng.choose(&[1u32, 2, 4, 8]);
+        if world % tp != 0 {
+            return Ok(());
+        }
+        let rest = world / tp;
+        let mut model = presets::model("gpt-6.7b").unwrap();
+        model.num_layers = g.rng.range_u64(1, 5) as u32 * 2;
+        model.micro_batch = g.rng.range_u64(1, 3);
+        let pp = if rest % 2 == 0 && g.rng.f64() < 0.4 { 2 } else { 1 };
+        let dp = rest / pp;
+        if dp == 0 {
+            return Ok(());
+        }
+        model.global_batch = model.micro_batch * dp as u64 * g.rng.range_u64(1, 4);
+        let schedule = *g.rng.choose(&[
+            ScheduleKind::GPipe,
+            ScheduleKind::OneFOneB,
+            ScheduleKind::Interleaved1F1B { vpp: 2 },
+        ]);
+        let par = ParallelismSpec { tp, pp, dp };
+        let fw = match FrameworkSpec::uniform(&model, &cluster, par) {
+            Ok(f) => f.with_schedule(schedule),
+            Err(_) => return Ok(()), // infeasible random draw
+        };
+        let limit = match g.rng.range_u64(0, 3) {
+            0 => None,
+            n => Some(n),
+        };
+        let topo = Topology::build(&cluster).map_err(|e| format!("topology: {e}"))?;
+        let mut bounder = Bounder::new(&topo);
+        let lb = bounder
+            .bound(&model, &cluster, &fw, limit)
+            .map_err(|e| format!("bound failed: {e}"))?;
+        let sim = SimulationBuilder::new(model.clone(), cluster.clone())
+            .parallelism(par)
+            .framework(fw)
+            .workload_options(WorkloadOptions { microbatch_limit: limit, ..Default::default() })
+            .fold(FoldMode::Off)
+            .build()
+            .map_err(|e| format!("build failed: {e}"))?;
+        let rep = sim.run_iteration().map_err(|e| format!("run failed: {e}"))?;
+        if lb > rep.iteration_time {
+            return Err(format!(
+                "bound {lb} exceeds simulated {} ({} fabric={:?} tp={tp} pp={pp} dp={dp} \
+                 layers={} mb={} limit={limit:?} sched={schedule:?})",
+                rep.iteration_time,
+                cluster.name,
+                cluster.fabric,
+                model.num_layers,
+                model.micro_batch,
+            ));
+        }
+        if lb > Time::ZERO {
+            nontrivial.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    });
+    assert!(
+        nontrivial.load(Ordering::Relaxed) > 0,
+        "every bound was zero — admissibility is vacuous"
+    );
+}
+
+#[test]
+fn prop_cutoff_simulation_bit_identical_and_strict() {
+    use hetsim::simulator::{EvalContext, ScoreOutcome, SimulationBuilder};
+    use hetsim::system::fold::FoldMode;
+    use hetsim::workload::schedule::ScheduleKind;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    // the incumbent cutoff must be a pure abort knob: scoring with no
+    // cutoff, an unreachable cutoff, or a cutoff exactly equal to the
+    // final clock reproduces plain scoring bit for bit (the abort rule
+    // is strictly `clock > limit`), while any cutoff strictly below
+    // the final clock aborts (DESIGN.md §29). Each variant gets a
+    // fresh EvalContext so the score cache cannot mask a divergence.
+    let aborted = AtomicUsize::new(0);
+    check(&cfg(24), |g| {
+        let nodes = g.rng.range_u64(1, 3) as u32;
+        let cluster = match g.rng.range_u64(0, 3) {
+            0 => presets::cluster("ampere", nodes).unwrap(),
+            1 => presets::cluster("hopper", nodes).unwrap(),
+            _ => presets::cluster_hetero(nodes, nodes).unwrap(),
+        };
+        let world = cluster.total_gpus();
+        let tp = *g.rng.choose(&[1u32, 2, 4, 8]);
+        if world % tp != 0 {
+            return Ok(());
+        }
+        let dp = world / tp;
+        let mut model = presets::model("gpt-6.7b").unwrap();
+        model.num_layers = g.rng.range_u64(1, 4) as u32;
+        model.micro_batch = g.rng.range_u64(1, 3);
+        model.global_batch = model.micro_batch * dp as u64 * g.rng.range_u64(1, 3);
+        let schedule = *g.rng.choose(&[ScheduleKind::GPipe, ScheduleKind::OneFOneB]);
+        let par = ParallelismSpec { tp, pp: 1, dp };
+        let score = |cutoff: Option<Time>| {
+            let ctx = EvalContext::new(&model, &cluster).map_err(|e| format!("ctx: {e}"))?;
+            SimulationBuilder::new(model.clone(), cluster.clone())
+                .parallelism(par)
+                .schedule(schedule)
+                .fold(FoldMode::Off)
+                .score_with_cutoff(&ctx, cutoff)
+                .map_err(|e| format!("score({cutoff:?}) failed: {e}"))
+        };
+        let base = match score(None)? {
+            ScoreOutcome::Complete(s) => s,
+            ScoreOutcome::Cutoff => return Err("no-cutoff run reported a cutoff".into()),
+        };
+        let ctx = format!("{} tp={tp} dp={dp} sched={schedule:?}", cluster.name);
+        for cutoff in [Some(Time::MAX), Some(base.iteration_time)] {
+            let s = match score(cutoff)? {
+                ScoreOutcome::Complete(s) => s,
+                ScoreOutcome::Cutoff => {
+                    return Err(format!("reachable run aborted at cutoff {cutoff:?}: {ctx}"))
+                }
+            };
+            if s.iteration_time != base.iteration_time
+                || s.compute_busy != base.compute_busy
+                || s.comm_busy != base.comm_busy
+                || s.flows_completed != base.flows_completed
+                || s.events_processed != base.events_processed
+            {
+                return Err(format!("score diverged under cutoff {cutoff:?}: {ctx}"));
+            }
+        }
+        if base.iteration_time > Time::ZERO {
+            let below = Time::from_ps(base.iteration_time.as_ps() - 1);
+            match score(Some(below))? {
+                ScoreOutcome::Cutoff => {
+                    aborted.fetch_add(1, Ordering::Relaxed);
+                }
+                ScoreOutcome::Complete(s) => {
+                    return Err(format!(
+                        "cutoff {below} below final clock {} did not abort: {ctx}",
+                        s.iteration_time
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+    assert!(
+        aborted.load(Ordering::Relaxed) > 0,
+        "no run ever aborted on a below-final cutoff — the property is vacuous"
+    );
+}
+
+#[test]
+fn prop_bnb_matches_grid_best_across_thread_counts() {
+    use hetsim::planner::{search, search_bnb, PlanOptions};
+    use hetsim::system::fold::FoldMode;
+
+    // bound-guided search is an optimization, not an approximation:
+    // its best plan must equal the exhaustive grid's exactly, and its
+    // ranked report must be byte-identical no matter how many worker
+    // threads evaluated the batches (DESIGN.md §29)
+    check(&cfg(3), |g| {
+        let cluster = if g.rng.f64() < 0.5 {
+            presets::cluster("hopper", 2).unwrap()
+        } else {
+            presets::cluster_hetero(1, 1).unwrap()
+        };
+        let mut model = presets::model("gpt-6.7b").unwrap();
+        model.num_layers = g.rng.range_u64(1, 3) as u32 * 2;
+        model.micro_batch = 1;
+        model.global_batch = 8 * g.rng.range_u64(1, 3);
+        let opts_for = |threads: usize| PlanOptions {
+            microbatch_limit: Some(1),
+            threads,
+            refine_steps: 0,
+            fold: FoldMode::Off,
+        };
+        let grid = search(&model, &cluster, &opts_for(1))
+            .map_err(|e| format!("grid search failed: {e}"))?;
+        let mut renders = Vec::new();
+        for threads in [1usize, 4, 8] {
+            let bnb = search_bnb(&model, &cluster, &opts_for(threads))
+                .map_err(|e| format!("bnb(threads={threads}) failed: {e}"))?;
+            if bnb.best().candidate != grid.best().candidate
+                || bnb.best().iteration_time != grid.best().iteration_time
+            {
+                return Err(format!(
+                    "bnb best {} @ {} != grid best {} @ {} (threads={threads})",
+                    bnb.best().candidate.key(),
+                    bnb.best().iteration_time,
+                    grid.best().candidate.key(),
+                    grid.best().iteration_time
+                ));
+            }
+            let st = bnb.stats.ok_or("bnb report is missing search stats")?;
+            if st.full_sims + st.bound_pruned + st.cutoff_aborted != st.candidates {
+                return Err(format!(
+                    "stats do not partition the space: {} + {} + {} != {}",
+                    st.full_sims, st.bound_pruned, st.cutoff_aborted, st.candidates
+                ));
+            }
+            renders.push((threads, bnb.render(0)));
+        }
+        for (threads, r) in &renders[1..] {
+            if r != &renders[0].1 {
+                return Err(format!(
+                    "bnb report diverged between 1 and {threads} worker threads"
+                ));
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]
